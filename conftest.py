@@ -1,0 +1,7 @@
+"""Pytest bootstrap: make `compile.*` importable when pytest is invoked
+from the repo root (`pytest python/tests/`)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

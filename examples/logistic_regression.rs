@@ -1,0 +1,75 @@
+//! Backend comparison on the logistic-regression workload: the same model,
+//! the same sampler, four gradient engines — the paper's Table-1 story on
+//! one model, from the public API.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example logistic_regression
+//! ```
+
+use dynamicppl::gradient::{Backend, LogDensity, NativeDensity, UntypedDensity};
+use dynamicppl::inference::Hmc;
+use dynamicppl::model::{init_trace, init_typed};
+use dynamicppl::models::logreg::logreg_n;
+use dynamicppl::prelude::*;
+use dynamicppl::runtime::{artifact_exists, artifacts_dir, XlaDensity};
+use dynamicppl::stanlike::stanlike_density;
+use dynamicppl::util::timing::bench;
+
+fn main() {
+    // A reduced workload so the slow (deliberately dynamic) paths finish
+    // quickly; relative ordering matches the full Table-1 run.
+    let bm = logreg_n(7, 2000, 50);
+    let mut rng = Xoshiro256pp::seed_from_u64(7);
+    let vi = init_trace(bm.model.as_ref(), &mut rng);
+    let mut rng = Xoshiro256pp::seed_from_u64(7);
+    let tvi = init_typed(bm.model.as_ref(), &mut rng);
+    let theta0: Vec<f64> = tvi.unconstrained.iter().map(|x| x * 0.1).collect();
+
+    let iters = 50;
+    let hmc = Hmc::paper(bm.step_size);
+    let mut results: Vec<(String, f64)> = Vec::new();
+
+    let mut time_backend = |label: &str, ld: &dyn LogDensity| {
+        let m = bench(label, 1, 3, || {
+            let mut rng = Xoshiro256pp::seed_from_u64(99);
+            let out = hmc.sample(ld, &theta0, 0, iters, &mut rng);
+            std::hint::black_box(out.logps.last().copied());
+        });
+        println!("{:<14} {}", label, m.display());
+        results.push((label.to_string(), m.mean()));
+    };
+
+    println!("static HMC({} leapfrog) × {iters} iters, logreg 2000×50:\n", 4);
+    let untyped = UntypedDensity::new(bm.model.as_ref(), &vi, Backend::Reverse);
+    time_backend("untyped", &untyped);
+    let tape = NativeDensity::new(bm.model.as_ref(), &tvi, Backend::Reverse);
+    time_backend("typed+tape", &tape);
+    let stan = stanlike_density(&bm);
+    time_backend("stanlike", stan.as_ref());
+    // The AOT artifact is compiled for the full 10,000×100 workload; load
+    // it only to show the call path (numbers reported separately).
+    if artifact_exists("logreg") {
+        let full = dynamicppl::models::build("logreg", 42);
+        let xla = XlaDensity::load(&artifacts_dir(), "logreg", full.theta_dim, &full.data)
+            .expect("artifact");
+        let mut rng = Xoshiro256pp::seed_from_u64(42);
+        let ftvi = init_typed(full.model.as_ref(), &mut rng);
+        let ftheta: Vec<f64> = ftvi.unconstrained.iter().map(|x| x * 0.1).collect();
+        let m = bench("typed+xla*", 1, 3, || {
+            let mut rng = Xoshiro256pp::seed_from_u64(99);
+            let out = hmc.sample(&xla, &ftheta, 0, iters, &mut rng);
+            std::hint::black_box(out.logps.last().copied());
+        });
+        println!("{:<14} {}   (*full 10,000×100 workload — 5× the data)", "typed+xla*", m.display());
+    } else {
+        println!("typed+xla      skipped (run `make artifacts`)");
+    }
+
+    // the ordering claim of the paper
+    let get = |l: &str| results.iter().find(|(n, _)| n == l).map(|(_, v)| *v).unwrap();
+    assert!(
+        get("stanlike") < get("typed+tape") && get("typed+tape") <= get("untyped") * 1.5,
+        "expected stanlike < typed+tape ≲ untyped"
+    );
+    println!("\nordering holds: stanlike < typed+tape ≤ untyped (dynamic-dispatch tax)");
+}

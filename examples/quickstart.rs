@@ -1,0 +1,71 @@
+//! Quickstart: define a model with the tilde DSL, run NUTS, inspect the
+//! chain — the 60-second tour of the library.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use dynamicppl::gradient::{Backend, NativeDensity};
+use dynamicppl::inference::{sample_chain, Nuts, SamplerKind};
+use dynamicppl::model::init_typed;
+use dynamicppl::prelude::*;
+
+model! {
+    /// Eight-schools-style partial pooling:
+    /// mu ~ Normal(0,5); tau ~ HalfCauchy(5);
+    /// theta[j] ~ Normal(mu, tau); y[j] ~ Normal(theta[j], sigma[j]).
+    pub EightSchools {
+        y: Vec<f64>,
+        sigma: Vec<f64>,
+    }
+    fn body<T>(this, api) {
+        let mu = tilde!(api, mu ~ Normal(c(0.0), c(5.0)));
+        let tau = tilde!(api, tau ~ HalfCauchy(c(5.0)));
+        check_reject!(api);
+        for j in 0..this.y.len() {
+            let theta_j = tilde!(api, theta[j] ~ Normal(mu, tau));
+            obs!(api, this.y[j] => Normal(theta_j, c(this.sigma[j])));
+        }
+    }
+}
+
+fn main() {
+    // The classic eight-schools data (Rubin 1981).
+    let model = EightSchools {
+        y: vec![28.0, 8.0, -3.0, 7.0, -1.0, 1.0, 18.0, 12.0],
+        sigma: vec![15.0, 10.0, 16.0, 11.0, 9.0, 11.0, 10.0, 18.0],
+    };
+
+    // 1. First contact: run the model once with the dynamic (untyped)
+    //    trace, discovering every random variable, then specialize.
+    let mut rng = Xoshiro256pp::seed_from_u64(2026);
+    let tvi = init_typed(&model, &mut rng);
+    println!(
+        "trace specialized: {} variables, {} unconstrained dims",
+        tvi.slots().len(),
+        tvi.dim()
+    );
+
+    // 2. Sample with NUTS over the typed trace (reverse-tape gradients).
+    let ld = NativeDensity::new(&model, &tvi, Backend::Reverse);
+    let chain = sample_chain(
+        &ld,
+        &tvi,
+        &SamplerKind::Nuts(Nuts::default()),
+        1000,
+        2000,
+        7,
+    );
+
+    // 3. Inspect.
+    println!("\n{}", chain.summary());
+    println!(
+        "acceptance = {:.2}, divergences = {}",
+        chain.stats.accept_rate, chain.stats.divergences
+    );
+    let mu = chain.mean("mu").unwrap();
+    let tau = chain.mean("tau").unwrap();
+    println!("\nposterior: mu ≈ {mu:.2}, tau ≈ {tau:.2} (pooling strength)");
+    assert!(mu > 0.0 && mu < 20.0, "mu should be mildly positive");
+    assert!(tau > 0.0);
+}

@@ -1,0 +1,142 @@
+"""AOT lowering: each benchmark model's ``value_and_grad(logp)`` → HLO text.
+
+This is the build-time half of the architecture: Python/JAX runs ONCE here
+(`make artifacts`), emitting one ``<model>.vg.hlo.txt`` per benchmark model
+plus a plain-text manifest. The Rust runtime loads the HLO text through the
+PJRT CPU client and executes it on the sampling hot path — Python never
+runs at inference time.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import config  # noqa: E402
+from .models import MODELS  # noqa: E402
+
+# models whose log-joint calls an L1 kernel (get a pallas validation artifact)
+KERNEL_MODELS = ["gaussian_10kd", "gauss_unknown", "naive_bayes", "logreg", "lda"]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_model(spec):
+    """Lower value_and_grad of the model's log-joint: (theta, *data) ->
+    (logp, grad)."""
+
+    def vg(theta, *data):
+        return jax.value_and_grad(spec.logp, argnums=0)(theta, *data)
+
+    args = [jax.ShapeDtypeStruct((spec.theta_dim,), jnp.float64)]
+    for shape, dtype in spec.data_specs:
+        args.append(jax.ShapeDtypeStruct(shape, dtype))
+    return jax.jit(vg).lower(*args)
+
+
+def lower_traj(spec, n_leapfrog: int = 4):
+    """Lower a fused static-HMC leapfrog trajectory (identity mass):
+
+        (theta, p, eps, *data) -> (theta_L, p_L, logp_L)
+
+    One PJRT call per HMC iteration instead of n_leapfrog+1 — the §Perf
+    optimization that removes host↔runtime round-trips on the hot path.
+    """
+
+    def traj(theta, p, eps, g0, *data):
+        def vg(t):
+            return jax.value_and_grad(spec.logp, argnums=0)(t, *data)
+
+        def step(carry, _):
+            th, pp, g = carry
+            pp = pp + 0.5 * eps * g
+            th = th + eps * pp
+            lp, g = vg(th)
+            pp = pp + 0.5 * eps * g
+            return (th, pp, g), lp
+
+        # the caller threads the gradient across iterations, so a
+        # trajectory costs exactly n_leapfrog gradient evaluations
+        (theta, p, g), lps = jax.lax.scan(
+            step, (theta, p, g0), None, length=n_leapfrog
+        )
+        return theta, p, lps[-1], g
+
+    args = [
+        jax.ShapeDtypeStruct((spec.theta_dim,), jnp.float64),
+        jax.ShapeDtypeStruct((spec.theta_dim,), jnp.float64),
+        jax.ShapeDtypeStruct((), jnp.float64),
+        jax.ShapeDtypeStruct((spec.theta_dim,), jnp.float64),
+    ]
+    for shape, dtype in spec.data_specs:
+        args.append(jax.ShapeDtypeStruct(shape, dtype))
+    return jax.jit(traj).lower(*args)
+
+
+def manifest_line(spec) -> str:
+    inputs = [f"theta:float64:{spec.theta_dim}"]
+    for i, (shape, dtype) in enumerate(spec.data_specs):
+        dims = "x".join(str(s) for s in shape)
+        inputs.append(f"data{i}:{dtype}:{dims}")
+    return f"model={spec.name} theta_dim={spec.theta_dim} inputs={';'.join(inputs)} outputs=logp,grad"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--models", default="all", help="comma-separated model names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = list(MODELS) if args.models == "all" else args.models.split(",")
+    manifest = []
+    for name in names:
+        spec = MODELS[name]
+        # runtime artifact: fused-jnp kernels (XLA-fused CPU hot path; the
+        # role the Pallas kernel plays on real TPU hardware)
+        config.set_impl("jnp")
+        path = os.path.join(args.out, f"{name}.vg.hlo.txt")
+        text = to_hlo_text(lower_model(spec))
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(manifest_line(spec))
+        print(f"wrote {path} ({len(text)} chars)")
+        # fused 4-leapfrog trajectory artifact (perf path)
+        tpath = os.path.join(args.out, f"{name}.traj4.hlo.txt")
+        ttext = to_hlo_text(lower_traj(spec, 4))
+        with open(tpath, "w") as f:
+            f.write(ttext)
+        print(f"wrote {tpath} ({len(ttext)} chars)")
+        # validation artifact: the real Pallas kernels (interpret lowering)
+        if name in KERNEL_MODELS:
+            config.set_impl("pallas")
+            ppath = os.path.join(args.out, f"{name}.pallas.hlo.txt")
+            ptext = to_hlo_text(lower_model(spec))
+            with open(ppath, "w") as f:
+                f.write(ptext)
+            print(f"wrote {ppath} ({len(ptext)} chars)")
+            config.set_impl("jnp")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote manifest with {len(manifest)} models")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Constrained <-> unconstrained transforms, mirroring rust/src/dist/bijector.rs.
+
+The AOT-compiled log-densities (L2) must agree bit-for-bit in *semantics*
+with the Rust typed executor: same transforms, same log-Jacobian terms, same
+parameter ordering. Every function here takes unconstrained coordinates and
+returns ``(constrained, log_abs_det_jacobian)``.
+"""
+
+import jax.numpy as jnp
+
+
+def identity(y):
+    """R^n -> R^n."""
+    return y, jnp.zeros(())
+
+
+def positive(y):
+    """R -> (0, inf): x = exp(y), ladj = sum(y)."""
+    return jnp.exp(y), jnp.sum(y)
+
+
+def log_sigmoid(x):
+    # stable -log1p(exp(-x))
+    return -jnp.logaddexp(0.0, -x)
+
+
+def unit_interval(y):
+    """R -> (0,1): x = sigmoid(y), ladj = log sig(y) + log sig(-y)."""
+    x = jnp.where(y >= 0, 1.0 / (1.0 + jnp.exp(-y)), jnp.exp(y) / (1.0 + jnp.exp(y)))
+    ladj = jnp.sum(log_sigmoid(y) + log_sigmoid(-y))
+    return x, ladj
+
+
+def interval(y, lo, hi):
+    """R -> (lo, hi): scaled sigmoid."""
+    x, ladj = unit_interval(y)
+    return lo + (hi - lo) * x, ladj + jnp.log(hi - lo) * jnp.size(y)
+
+
+def simplex(y):
+    """R^(K-1) -> K-simplex via Stan's stick-breaking (with the K-offset so
+    y = 0 maps to the uniform simplex); returns (x[K], ladj).
+
+    Mirrors Domain::Simplex in bijector.rs exactly.
+    """
+    k = y.shape[-1] + 1
+    offsets = jnp.log(1.0 / jnp.arange(k - 1, 0, -1))
+    adj = y + offsets
+    z = jnp.where(
+        adj >= 0, 1.0 / (1.0 + jnp.exp(-adj)), jnp.exp(adj) / (1.0 + jnp.exp(adj))
+    )
+
+    # sticks: x_i = z_i * prod_{j<i}(1 - z_j)
+    one_minus = jnp.concatenate([jnp.ones((1,)), jnp.cumprod(1.0 - z)])
+    x_head = z * one_minus[:-1]
+    x_last = one_minus[-1]
+    x = jnp.concatenate([x_head, x_last[None]])
+    # ladj: sum_i [log z_i + log(1-z_i) + log stick_i] with stick_i = one_minus[i]
+    ladj = jnp.sum(log_sigmoid(adj) + log_sigmoid(-adj) + jnp.log(one_minus[:-1]))
+    return x, ladj

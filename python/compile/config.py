@@ -1,0 +1,32 @@
+"""Kernel implementation switch for the L1 hot-spots.
+
+``KERNEL_IMPL`` selects how the three L1 kernels execute inside the L2
+log-joints:
+
+- ``"pallas"`` — the Pallas kernels under ``interpret=True``. This is the
+  *validation* configuration: it exercises the real kernel code (BlockSpec
+  schedule, masking, VMEM tiling structure) with CPU-numpy semantics.
+  Interpret-mode lowering produces a grid loop of dynamic-slice ops, which
+  the CPU PJRT backend executes slowly — it is NOT a performance proxy
+  (see DESIGN.md §Hardware-Adaptation).
+- ``"jnp"`` — the pure-jnp reference expressions (ref.py), which XLA fuses
+  into tight CPU loops. This is the *runtime* configuration used by the
+  Table-1 artifacts: on a real TPU the Pallas kernel would play this role.
+
+`make artifacts` builds the runtime artifacts with "jnp" and one
+validation artifact per kernel-bearing model with "pallas"
+(``<model>.pallas.hlo.txt``); `rust/tests/runtime_aot.rs` checks both
+against the Rust typed executor.
+"""
+
+KERNEL_IMPL = "jnp"
+
+
+def use_pallas() -> bool:
+    return KERNEL_IMPL == "pallas"
+
+
+def set_impl(impl: str) -> None:
+    global KERNEL_IMPL
+    assert impl in ("pallas", "jnp"), impl
+    KERNEL_IMPL = impl

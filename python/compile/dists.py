@@ -1,0 +1,50 @@
+"""Log-density helpers mirroring rust/src/dist (same parameterizations).
+
+Used by the L2 model definitions; kept scalar/vector-generic jnp so the
+whole log-joint traces into one HLO module.
+"""
+
+import jax.numpy as jnp
+from jax.scipy.special import gammaln
+
+LN_2PI = 1.8378770664093454835606594728112353
+LN_PI = 1.1447298858494001741434273513530587
+
+
+def normal_lp(x, mu, sigma):
+    z = (x - mu) / sigma
+    return -0.5 * z * z - jnp.log(sigma) - 0.5 * LN_2PI
+
+
+def cauchy_lp(x, loc, scale):
+    z = (x - loc) / scale
+    return -jnp.log1p(z * z) - jnp.log(scale) - LN_PI
+
+
+def half_cauchy_lp(x, scale):
+    z = x / scale
+    return -jnp.log1p(z * z) - jnp.log(scale) + jnp.log(2.0 / jnp.pi)
+
+
+def uniform_lp(x, lo, hi):
+    del x
+    return -jnp.log(hi - lo)
+
+
+def exponential_lp(x, rate):
+    return jnp.log(rate) - rate * x
+
+
+def inverse_gamma_lp(x, shape, scale):
+    return shape * jnp.log(scale) - gammaln(shape) - (shape + 1.0) * jnp.log(x) - scale / x
+
+
+def dirichlet_lp(x, alpha):
+    """alpha: (K,) concrete; x: (K,) on the simplex."""
+    norm = gammaln(jnp.sum(alpha)) - jnp.sum(gammaln(alpha))
+    return norm + jnp.sum((alpha - 1.0) * jnp.log(x))
+
+
+def poisson_lp(k, rate):
+    """k float-valued counts."""
+    return k * jnp.log(rate) - rate - gammaln(k + 1.0)

@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: fused logistic-regression log-likelihood.
+
+Hot spot of the Logistic Regression benchmark (10,000 x 100): for each row
+block, compute ``logits = X_blk @ w`` (MXU-shaped matvec) and reduce the
+Bernoulli-logit log-likelihood ``sum log sigmoid((2y-1) * logits)`` without
+materializing the logits in HBM. One (block_n, D) tile of X streams through
+VMEM per grid step; w stays resident.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): X tile (512 x 100 f32 = 200 KB)
++ w (400 B) fit comfortably in 16 MB VMEM with double buffering; the matvec
+N=1 shape is VPU-bound so the roofline is HBM bandwidth on X.
+
+Backward pass is the closed-form ``X^T (y - sigmoid(logits))``, supplied via
+custom_vjp so AOT gradient lowering never differentiates through the kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 512
+
+
+def _loglik_kernel(x_ref, sign_ref, w_ref, out_ref):
+    logits = x_ref[...] @ w_ref[...]
+    s = sign_ref[...]
+    # masked rows have sign 0 -> contribute log sigmoid(0)... avoid that by
+    # weighting: contribution = -|s| * log1p(exp(-s*logits)) with |s| in {0,1}
+    ll = -jnp.abs(s) * jnp.logaddexp(0.0, -s * logits)
+    out_ref[0] = jnp.sum(ll)
+
+
+def _loglik_partials(xm, w, y, block_n):
+    from .. import config
+
+    if not config.use_pallas():
+        logits = xm @ w
+        sign = 2.0 * y - 1.0
+        return jnp.sum(-jnp.logaddexp(0.0, -sign * logits))
+    n, d = xm.shape
+    nb = -(-n // block_n)
+    pad = nb * block_n - n
+    xp = jnp.pad(xm, ((0, pad), (0, 0)))
+    sign = jnp.pad(2.0 * y - 1.0, (0, pad))
+    partials = pl.pallas_call(
+        _loglik_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb,), xm.dtype),
+        interpret=True,
+    )(xp, sign, w)
+    return jnp.sum(partials)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def logreg_loglik(xm, w, y, block_n=DEFAULT_BLOCK_N):
+    """Bernoulli-logit log-likelihood with a fused Pallas forward pass."""
+    return _loglik_partials(xm, w, y, block_n)
+
+
+def _fwd(xm, w, y, block_n):
+    s = _loglik_partials(xm, w, y, block_n)
+    return s, (xm, w, y)
+
+
+def _bwd(block_n, res, g):
+    xm, w, y = res
+    logits = xm @ w
+    p = jax.nn.sigmoid(logits)
+    dw = g * (xm.T @ (y - p))
+    # data cotangents unused by the models (data is constant) but must be
+    # shaped correctly
+    dx = g * jnp.outer(y - p, w)
+    dy = g * logits
+    return dx, dw, dy
+
+
+logreg_loglik.defvjp(_fwd, _bwd)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: pytest sweeps shapes and dtypes
+(hypothesis) and asserts the Pallas kernels' outputs match these to within
+float tolerance. They are also what the kernels' HLO is compared against in
+the Rust runtime tests (via the AOT artifacts).
+"""
+
+import jax.numpy as jnp
+
+LN_2PI = 1.8378770664093454835606594728112353
+
+
+def gauss_logpdf_ref(x, mu, sigma):
+    """Sum over iid Normal(mu, sigma) log-densities of a vector x."""
+    z = (x - mu) / sigma
+    n = x.shape[0]
+    return -0.5 * jnp.sum(z * z) - n * jnp.log(sigma) - 0.5 * n * LN_2PI
+
+
+def logreg_loglik_ref(xm, w, y):
+    """Bernoulli-logit log-likelihood: sum_i log sigmoid((2 y_i - 1) x_i.w).
+
+    ``xm``: (N, D) float; ``w``: (D,) float; ``y``: (N,) float in {0, 1}.
+    """
+    logits = xm @ w
+    sign = 2.0 * y - 1.0
+    return jnp.sum(-jnp.logaddexp(0.0, -sign * logits))
+
+
+def softmax_mix_ref(log_weights, log_comps):
+    """Mixture log-likelihood: sum_n LSE_k(log_weights[k] + log_comps[k, n]).
+
+    ``log_weights``: (K,); ``log_comps``: (K, N).
+    """
+    a = log_weights[:, None] + log_comps
+    m = jnp.max(a, axis=0)
+    return jnp.sum(m + jnp.log(jnp.sum(jnp.exp(a - m[None, :]), axis=0)))
+
+
+def sq_dist_ref(x, mu):
+    """Sum of squared distances of rows of x (N, D) to a vector mu (D,)."""
+    d = x - mu[None, :]
+    return jnp.sum(d * d)

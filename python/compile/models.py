@@ -1,0 +1,289 @@
+"""L2: the 8 Table-1 benchmark models as JAX log-joints over unconstrained
+parameters, calling the L1 Pallas kernels for their compute hot-spots.
+
+Every model here mirrors — statement for statement, transform for
+transform — the corresponding Rust DSL model in ``rust/src/models/``: the
+Rust typed executor and the AOT artifact must produce the *same* scalar at
+the same unconstrained point (checked by `rust/tests/runtime_aot.rs`).
+
+Parameter layout (the typed trace's visit order) per model is documented on
+each ``ModelSpec``; data buffers are runtime inputs to the compiled
+artifact, in the order of ``data_specs``.
+"""
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import bijectors as bij
+from . import dists as d
+from .kernels.gauss_logpdf import gauss_logpdf
+from .kernels.logreg import logreg_loglik
+from .kernels.softmax_mix import softmax_mix
+
+
+@dataclass
+class ModelSpec:
+    name: str
+    theta_dim: int
+    # (shape, dtype) per data input, in artifact argument order after theta
+    data_specs: List[Tuple[Tuple[int, ...], str]]
+    logp: Callable  # logp(theta, *data) -> scalar
+    # Table-1 workload description (for DESIGN/EXPERIMENTS cross-reference)
+    workload: str = ""
+    meta: dict = field(default_factory=dict)
+
+
+# ---------------------------------------------------------------- T1.1
+# 10,000-D Gaussian: x ~ IsoNormal(0, 1, 10_000); no data.
+GAUSS_DIM = 10_000
+
+
+def gaussian_10kd_logp(theta):
+    return gauss_logpdf(theta, jnp.float64(0.0), jnp.float64(1.0))
+
+
+# ---------------------------------------------------------------- T1.2
+# Gauss Unknown (gdemo at scale): s ~ InverseGamma(2,3); m ~ Normal(0, √s);
+# y .~ Normal(m, √s), 10,000 observations.
+GU_N = 10_000
+
+
+def gauss_unknown_logp(theta, y):
+    s, ladj_s = bij.positive(theta[0])
+    m = theta[1]
+    sd = jnp.sqrt(s)
+    lp = d.inverse_gamma_lp(s, 2.0, 3.0) + ladj_s
+    lp = lp + d.normal_lp(m, 0.0, sd)
+    lp = lp + gauss_logpdf(y, m, sd)
+    return lp
+
+
+# ---------------------------------------------------------------- T1.3
+# Naive Bayes: C=10 classes, D=40 features (synthetic PCA-MNIST), N=1000
+# labelled observations. mu[c] ~ IsoNormal(0,1,D); x_i ~ Normal(mu[c_i], 1).
+NB_C, NB_D, NB_N = 10, 40, 1000
+
+
+def naive_bayes_logp(theta, x, onehot):
+    mu = theta.reshape(NB_C, NB_D)
+    # prior via the Pallas reduction over the flattened means
+    lp = gauss_logpdf(theta, jnp.float64(0.0), jnp.float64(1.0))
+    # likelihood: -0.5 Σ_i ||x_i - mu_{c_i}||² - N·D/2 ln 2π
+    mu_per_obs = onehot @ mu  # (N, D)
+    diff = x - mu_per_obs
+    lp = lp - 0.5 * jnp.sum(diff * diff) - 0.5 * NB_N * NB_D * d.LN_2PI
+    return lp
+
+
+# ---------------------------------------------------------------- T1.4
+# Logistic Regression: D=100, N=10,000. w ~ IsoNormal(0,1,D);
+# y .~ BernoulliLogit(X w).
+LR_N, LR_D = 10_000, 100
+
+
+def logreg_logp(theta, x, y):
+    lp = gauss_logpdf(theta, jnp.float64(0.0), jnp.float64(1.0))
+    lp = lp + logreg_loglik(x, theta, y)
+    return lp
+
+
+# ---------------------------------------------------------------- T1.5
+# Hierarchical Poisson: G=10 groups × M=5 obs = 50 observations.
+# a0 ~ Normal(0,10); σ ~ Exponential(1); b[g] ~ Normal(0,σ);
+# y_gm ~ Poisson(exp(a0 + b_g)).
+HP_G, HP_M = 10, 5
+
+
+def hier_poisson_logp(theta, y):
+    a0 = theta[0]
+    sigma, ladj = bij.positive(theta[1])
+    b = theta[2:]
+    lp = d.normal_lp(a0, 0.0, 10.0)
+    lp = lp + d.exponential_lp(sigma, 1.0) + ladj
+    lp = lp + jnp.sum(d.normal_lp(b, 0.0, sigma))
+    eta = a0 + b  # (G,)
+    rate = jnp.exp(eta)
+    lp = lp + jnp.sum(d.poisson_lp(y, rate[:, None]))
+    return lp
+
+
+# ---------------------------------------------------------------- T1.6
+# Stochastic Volatility: T=500. φ ~ Uniform(-1,1); σ ~ HalfCauchy(2);
+# μ ~ Cauchy(0,10); h₀ ~ N(μ, σ/√(1-φ²)); h_t ~ N(μ+φ(h_{t-1}-μ), σ);
+# y_t ~ N(0, exp(h_t/2)).
+SV_T = 500
+
+
+def sto_vol_logp(theta, y):
+    phi, ladj_phi = bij.interval(theta[0], -1.0, 1.0)
+    sigma, ladj_sig = bij.positive(theta[1])
+    mu = theta[2]
+    h = theta[3:]
+    lp = d.uniform_lp(phi, -1.0, 1.0) + ladj_phi
+    lp = lp + d.half_cauchy_lp(sigma, 2.0) + ladj_sig
+    lp = lp + d.cauchy_lp(mu, 0.0, 10.0)
+    lp = lp + d.normal_lp(h[0], mu, sigma / jnp.sqrt(1.0 - phi * phi))
+    lp = lp + jnp.sum(d.normal_lp(h[1:], mu + phi * (h[:-1] - mu), sigma))
+    # y_t ~ Normal(0, exp(h_t / 2))
+    lp = lp + jnp.sum(-0.5 * y * y * jnp.exp(-h) - 0.5 * h - 0.5 * d.LN_2PI)
+    return lp
+
+
+# ---------------------------------------------------------------- T1.7
+# Semi-supervised HMM: K=5 states, V=20 symbols, T=300 steps of which the
+# first 100 have supervised states; the last 200 are marginalized by the
+# forward algorithm. trans[k] ~ Dirichlet(1,K); emit[k] ~ Dirichlet(1,V).
+HMM_K, HMM_V, HMM_T, HMM_TSUP = 5, 20, 300, 100
+
+
+def hmm_logp(theta, w, z_sup):
+    """w: (T,) int32 observations; z_sup: (TSUP,) int32 supervised states."""
+    off = 0
+    rows_t = []
+    ladj = jnp.zeros(())
+    for _ in range(HMM_K):
+        r, la = bij.simplex(theta[off : off + HMM_K - 1])
+        rows_t.append(r)
+        ladj = ladj + la
+        off += HMM_K - 1
+    rows_e = []
+    for _ in range(HMM_K):
+        r, la = bij.simplex(theta[off : off + HMM_V - 1])
+        rows_e.append(r)
+        ladj = ladj + la
+        off += HMM_V - 1
+    trans = jnp.stack(rows_t)  # (K, K)
+    emit = jnp.stack(rows_e)  # (K, V)
+    alpha_conc = jnp.ones((HMM_K,))
+    beta_conc = jnp.ones((HMM_V,))
+    lp = ladj
+    for k in range(HMM_K):
+        lp = lp + d.dirichlet_lp(trans[k], alpha_conc)
+        lp = lp + d.dirichlet_lp(emit[k], beta_conc)
+
+    log_trans = jnp.log(trans)
+    log_emit = jnp.log(emit)
+
+    # supervised segment
+    w_sup = w[:HMM_TSUP]
+    lp = lp + jnp.sum(log_emit[z_sup, w_sup])
+    lp = lp + jnp.sum(log_trans[z_sup[:-1], z_sup[1:]])
+
+    # unsupervised segment: forward algorithm from the last supervised state
+    w_unsup = w[HMM_TSUP:]
+    alpha0 = log_trans[z_sup[-1]] + log_emit[:, w_unsup[0]]
+
+    def step(alpha, wt):
+        a = alpha[:, None] + log_trans  # (K, K)
+        m = jnp.max(a, axis=0)
+        nxt = m + jnp.log(jnp.sum(jnp.exp(a - m[None, :]), axis=0)) + log_emit[:, wt]
+        return nxt, ()
+
+    alpha_fin, _ = jax.lax.scan(step, alpha0, w_unsup[1:])
+    m = jnp.max(alpha_fin)
+    lp = lp + m + jnp.log(jnp.sum(jnp.exp(alpha_fin - m)))
+    return lp
+
+
+# ---------------------------------------------------------------- T1.8
+# LDA: K=5 topics, V=100 vocabulary, DOCS=10 documents × ~1000 tokens
+# (N=10,000 total). theta[d] ~ Dirichlet(1,K); phi[k] ~ Dirichlet(1,V);
+# token n: w_n ~ Categorical(Σ_k theta[doc_n] φ_k) (z marginalized).
+LDA_K, LDA_V, LDA_DOCS, LDA_N = 5, 100, 10, 10_000
+
+
+def lda_logp(theta, w, doc):
+    off = 0
+    ladj = jnp.zeros(())
+    th_rows = []
+    for _ in range(LDA_DOCS):
+        r, la = bij.simplex(theta[off : off + LDA_K - 1])
+        th_rows.append(r)
+        ladj = ladj + la
+        off += LDA_K - 1
+    ph_rows = []
+    for _ in range(LDA_K):
+        r, la = bij.simplex(theta[off : off + LDA_V - 1])
+        ph_rows.append(r)
+        ladj = ladj + la
+        off += LDA_V - 1
+    th = jnp.stack(th_rows)  # (DOCS, K)
+    ph = jnp.stack(ph_rows)  # (K, V)
+    lp = ladj
+    for r in th_rows:
+        lp = lp + d.dirichlet_lp(r, jnp.ones((LDA_K,)))
+    for r in ph_rows:
+        lp = lp + d.dirichlet_lp(r, jnp.ones((LDA_V,)))
+
+    # token mixture via the Pallas LSE kernel: comps[k, n] = log θ[doc_n, k]
+    # + log φ[k, w_n]; weights zero.
+    log_th = jnp.log(th)  # (DOCS, K)
+    log_ph = jnp.log(ph)  # (K, V)
+    comps = log_th[doc].T + log_ph[:, w]  # (K, N)
+    lp = lp + softmax_mix(jnp.zeros((LDA_K,)), comps)
+    return lp
+
+
+# ------------------------------------------------------------ registry
+
+MODELS = {
+    "gaussian_10kd": ModelSpec(
+        name="gaussian_10kd",
+        theta_dim=GAUSS_DIM,
+        data_specs=[],
+        logp=gaussian_10kd_logp,
+        workload="single 10,000-dim standard normal parameter",
+    ),
+    "gauss_unknown": ModelSpec(
+        name="gauss_unknown",
+        theta_dim=2,
+        data_specs=[((GU_N,), "float64")],
+        logp=gauss_unknown_logp,
+        workload="10,000 scalar observations, unknown mean and variance",
+    ),
+    "naive_bayes": ModelSpec(
+        name="naive_bayes",
+        theta_dim=NB_C * NB_D,
+        data_specs=[((NB_N, NB_D), "float64"), ((NB_N, NB_C), "float64")],
+        logp=naive_bayes_logp,
+        workload="1,000 obs × 40 dims, 10 classes (synthetic PCA-MNIST)",
+    ),
+    "logreg": ModelSpec(
+        name="logreg",
+        theta_dim=LR_D,
+        data_specs=[((LR_N, LR_D), "float64"), ((LR_N,), "float64")],
+        logp=logreg_logp,
+        workload="10,000 obs × 100 dims logistic regression",
+    ),
+    "hier_poisson": ModelSpec(
+        name="hier_poisson",
+        theta_dim=2 + HP_G,
+        data_specs=[((HP_G, HP_M), "float64")],
+        logp=hier_poisson_logp,
+        workload="50 obs hierarchical Poisson (10 groups × 5)",
+    ),
+    "sto_volatility": ModelSpec(
+        name="sto_volatility",
+        theta_dim=3 + SV_T,
+        data_specs=[((SV_T,), "float64")],
+        logp=sto_vol_logp,
+        workload="500-step stochastic volatility",
+    ),
+    "hmm_semisup": ModelSpec(
+        name="hmm_semisup",
+        theta_dim=HMM_K * (HMM_K - 1) + HMM_K * (HMM_V - 1),
+        data_specs=[((HMM_T,), "int32"), ((HMM_TSUP,), "int32")],
+        logp=hmm_logp,
+        workload="K=5, V=20, 300 obs (200 unsupervised, forward-marginalized)",
+    ),
+    "lda": ModelSpec(
+        name="lda",
+        theta_dim=LDA_DOCS * (LDA_K - 1) + LDA_K * (LDA_V - 1),
+        data_specs=[((LDA_N,), "int32"), ((LDA_N,), "int32")],
+        logp=lda_logp,
+        workload="V=100, K=5, 10 docs × ~1,000 words (topics marginalized)",
+    ),
+}

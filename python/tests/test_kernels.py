@@ -1,0 +1,127 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and values; assert_allclose against ref.py. This
+is the core correctness signal for the kernel layer.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import config as _config
+
+_config.set_impl("pallas")  # test the real kernels, not the jnp fallback
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.gauss_logpdf import gauss_logpdf, sq_sum
+from compile.kernels.logreg import logreg_loglik
+from compile.kernels.ref import (
+    gauss_logpdf_ref,
+    logreg_loglik_ref,
+    softmax_mix_ref,
+)
+from compile.kernels.softmax_mix import softmax_mix
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=5000),
+    mu=st.floats(min_value=-5, max_value=5),
+    sigma=st.floats(min_value=0.05, max_value=10),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    block=st.sampled_from([64, 257, 1024, 2048]),
+)
+def test_gauss_logpdf_matches_ref(n, mu, sigma, seed, block):
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.normal(size=n))
+    got = gauss_logpdf(x, jnp.float64(mu), jnp.float64(sigma), block=block)
+    want = gauss_logpdf_ref(x, mu, sigma)
+    assert_allclose(got, want, rtol=1e-10)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=2000),
+    d=st.integers(min_value=1, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    block=st.sampled_from([32, 100, 512]),
+)
+def test_logreg_loglik_matches_ref(n, d, seed, block):
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.normal(size=(n, d)))
+    w = jnp.array(rng.normal(size=d))
+    y = jnp.array(rng.integers(0, 2, size=n).astype(np.float64))
+    got = logreg_loglik(x, w, y, block_n=block)
+    want = logreg_loglik_ref(x, w, y)
+    assert_allclose(got, want, rtol=1e-10)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.integers(min_value=1, max_value=12),
+    n=st.integers(min_value=1, max_value=3000),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    block=st.sampled_from([128, 1000, 2048]),
+)
+def test_softmax_mix_matches_ref(k, n, seed, block):
+    rng = np.random.default_rng(seed)
+    lw = jnp.array(rng.normal(size=k))
+    lc = jnp.array(rng.normal(size=(k, n)) * 3.0)
+    got = softmax_mix(lw, lc, block_n=block)
+    want = softmax_mix_ref(lw, lc)
+    assert_allclose(got, want, rtol=1e-10)
+
+
+def test_gauss_gradient_matches_autodiff_of_ref():
+    rng = np.random.default_rng(3)
+    x = jnp.array(rng.normal(size=300))
+    mu, sigma = jnp.float64(0.4), jnp.float64(1.7)
+    g_kernel = jax.grad(lambda xx, m, s: gauss_logpdf(xx, m, s), argnums=(0, 1, 2))(
+        x, mu, sigma
+    )
+    g_ref = jax.grad(gauss_logpdf_ref, argnums=(0, 1, 2))(x, mu, sigma)
+    for a, b in zip(g_kernel, g_ref):
+        assert_allclose(a, b, rtol=1e-9)
+
+
+def test_logreg_gradient_matches_autodiff_of_ref():
+    rng = np.random.default_rng(4)
+    x = jnp.array(rng.normal(size=(200, 7)))
+    w = jnp.array(rng.normal(size=7))
+    y = jnp.array(rng.integers(0, 2, size=200).astype(np.float64))
+    gk = jax.grad(lambda ww: logreg_loglik(x, ww, y))(w)
+    gr = jax.grad(lambda ww: logreg_loglik_ref(x, ww, y))(w)
+    assert_allclose(gk, gr, rtol=1e-9)
+
+
+def test_softmax_mix_gradient_matches_autodiff_of_ref():
+    rng = np.random.default_rng(5)
+    lw = jnp.array(rng.normal(size=4))
+    lc = jnp.array(rng.normal(size=(4, 50)))
+    gk = jax.grad(lambda a, b: softmax_mix(a, b), argnums=(0, 1))(lw, lc)
+    gr = jax.grad(softmax_mix_ref, argnums=(0, 1))(lw, lc)
+    for a, b in zip(gk, gr):
+        assert_allclose(a, b, rtol=1e-9)
+
+
+def test_sq_sum_extreme_values_stable():
+    x = jnp.array([1e8, -1e8, 0.0])
+    s = sq_sum(x, jnp.float64(0.0), jnp.float64(1.0))
+    assert_allclose(s, 2e16, rtol=1e-12)
+
+
+@pytest.mark.parametrize("n", [1, 63, 64, 65, 2047, 2048, 2049])
+def test_block_boundary_sizes(n):
+    """Padding/masking must be exact at every block boundary."""
+    rng = np.random.default_rng(n)
+    x = jnp.array(rng.normal(size=n))
+    assert_allclose(
+        gauss_logpdf(x, jnp.float64(0.1), jnp.float64(2.0), block=64),
+        gauss_logpdf_ref(x, 0.1, 2.0),
+        rtol=1e-10,
+    )

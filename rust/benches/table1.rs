@@ -1,0 +1,38 @@
+//! `cargo bench --bench table1` — regenerates the paper's Table 1.
+//!
+//! Every benchmark model × every backend, static HMC with 4 leapfrog steps
+//! (the paper's configuration). Honest full-length runs for the fast
+//! backends; the deliberately-slow dynamic paths are extrapolated from
+//! shorter runs (marked `~`), preserving the ordering/ratio claims.
+//!
+//! Env knobs:
+//!   T1_ITERS   target iteration count (default 2000, the paper's value)
+//!   T1_REPS    replicates per cell (default 3)
+//!   T1_MODELS  comma-separated subset
+//!   T1_FULL=1  disable extrapolation (run slow paths in full)
+
+use dynamicppl::bench::{render_table1, run_table1, Table1Config};
+
+fn main() {
+    let mut cfg = Table1Config::default();
+    if let Ok(v) = std::env::var("T1_ITERS") {
+        cfg.iters = v.parse().expect("T1_ITERS");
+    }
+    if let Ok(v) = std::env::var("T1_REPS") {
+        cfg.reps = v.parse().expect("T1_REPS");
+    }
+    if let Ok(v) = std::env::var("T1_MODELS") {
+        cfg.models = v.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    if let Ok(v) = std::env::var("T1_MAX_RUN") {
+        cfg.max_run_iters = Some(v.parse().expect("T1_MAX_RUN"));
+    }
+    if std::env::var("T1_FUSED").is_ok() {
+        cfg.backends.push(dynamicppl::bench::BenchBackend::TypedXlaFused);
+    }
+    if std::env::var("T1_FULL").is_ok() {
+        cfg.max_run_iters = None;
+    }
+    let cells = run_table1(&cfg);
+    println!("{}", render_table1(&cells, &cfg));
+}

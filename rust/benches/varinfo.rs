@@ -1,0 +1,74 @@
+//! `cargo bench --bench varinfo` — the §2.2 ablation: what does trace
+//! specialization actually buy?
+//!
+//! Micro-benchmarks of the boxed (UntypedVarInfo) vs flat (TypedVarInfo)
+//! trace on identical models: full log-density evaluations, trace
+//! construction, specialization, and link/invlink round-trips.
+
+use dynamicppl::context::Context;
+use dynamicppl::model::{init_trace, typed_logp, untyped_logp};
+use dynamicppl::models::{build_small, ALL_MODELS};
+use dynamicppl::util::rng::Xoshiro256pp;
+use dynamicppl::util::timing::{bench_micro, render_table, Measurement};
+use dynamicppl::varinfo::TypedVarInfo;
+
+fn main() {
+    let mut rows: Vec<Measurement> = Vec::new();
+
+    for name in ["gauss_unknown", "logreg", "sto_volatility", "lda"] {
+        let bm = build_small(name, 5);
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let vi = init_trace(bm.model.as_ref(), &mut rng);
+        let tvi = TypedVarInfo::from_untyped(&vi);
+        let theta: Vec<f64> = tvi.unconstrained.iter().map(|x| x * 0.5).collect();
+
+        rows.push(bench_micro(&format!("{name}/logp untyped"), 5e-3, 5, || {
+            std::hint::black_box(untyped_logp(
+                bm.model.as_ref(),
+                &vi,
+                &theta,
+                Context::Default,
+            ));
+        }));
+        rows.push(bench_micro(&format!("{name}/logp typed"), 5e-3, 5, || {
+            std::hint::black_box(typed_logp(
+                bm.model.as_ref(),
+                &tvi,
+                &theta,
+                Context::Default,
+            ));
+        }));
+    }
+
+    // trace lifecycle costs
+    for name in ALL_MODELS {
+        let bm = build_small(name, 5);
+        rows.push(bench_micro(&format!("{name}/init_trace"), 5e-3, 3, || {
+            let mut rng = Xoshiro256pp::seed_from_u64(5);
+            std::hint::black_box(init_trace(bm.model.as_ref(), &mut rng));
+        }));
+    }
+    {
+        let bm = build_small("lda", 5);
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let vi = init_trace(bm.model.as_ref(), &mut rng);
+        rows.push(bench_micro("lda/specialize", 5e-3, 5, || {
+            std::hint::black_box(TypedVarInfo::from_untyped(&vi));
+        }));
+        let mut tvi = TypedVarInfo::from_untyped(&vi);
+        let theta = tvi.unconstrained.clone();
+        rows.push(bench_micro("lda/set_unconstrained", 5e-3, 5, || {
+            tvi.set_unconstrained(std::hint::black_box(&theta));
+        }));
+    }
+
+    println!("{}", render_table("varinfo micro-benchmarks (per call)", &rows));
+
+    // the headline ratio
+    let find = |n: &str| rows.iter().find(|m| m.name == n).map(|m| m.mean()).unwrap();
+    for name in ["gauss_unknown", "logreg", "sto_volatility", "lda"] {
+        let u = find(&format!("{name}/logp untyped"));
+        let t = find(&format!("{name}/logp typed"));
+        println!("{name}: untyped/typed = {:.2}×", u / t);
+    }
+}

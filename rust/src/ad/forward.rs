@@ -1,0 +1,235 @@
+//! Forward-mode AD: dual numbers (ForwardDiff.jl analogue).
+//!
+//! [`Dual`] carries one directional derivative; a full gradient of an
+//! n-parameter density costs n evaluations. That is acceptable for the small
+//! models and is exactly how the *vectorized* forward mode of ForwardDiff
+//! behaves per chunk; `grad_forward` evaluates in chunks of one.
+
+use super::Scalar;
+use crate::util::math;
+
+/// Dual number a + b·ε with ε² = 0.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Dual {
+    pub v: f64,
+    pub d: f64,
+}
+
+impl Dual {
+    #[inline]
+    pub fn new(v: f64, d: f64) -> Self {
+        Self { v, d }
+    }
+
+    /// Seed variable: derivative 1.
+    #[inline]
+    pub fn var(v: f64) -> Self {
+        Self { v, d: 1.0 }
+    }
+}
+
+macro_rules! impl_dual_binop {
+    ($trait:ident, $fn:ident, |$a:ident, $b:ident| $v:expr, |$av:ident, $ad:ident, $bv:ident, $bd:ident| $d:expr) => {
+        impl std::ops::$trait for Dual {
+            type Output = Dual;
+            #[inline]
+            fn $fn(self, rhs: Dual) -> Dual {
+                let ($a, $b) = (self.v, rhs.v);
+                let ($av, $ad, $bv, $bd) = (self.v, self.d, rhs.v, rhs.d);
+                let _ = ($av, $bv);
+                Dual::new($v, $d)
+            }
+        }
+        impl std::ops::$trait<f64> for Dual {
+            type Output = Dual;
+            #[inline]
+            fn $fn(self, rhs: f64) -> Dual {
+                std::ops::$trait::$fn(self, Dual::new(rhs, 0.0))
+            }
+        }
+        impl std::ops::$trait<Dual> for f64 {
+            type Output = Dual;
+            #[inline]
+            fn $fn(self, rhs: Dual) -> Dual {
+                std::ops::$trait::$fn(Dual::new(self, 0.0), rhs)
+            }
+        }
+    };
+}
+
+impl_dual_binop!(Add, add, |a, b| a + b, |av, ad, bv, bd| ad + bd);
+impl_dual_binop!(Sub, sub, |a, b| a - b, |av, ad, bv, bd| ad - bd);
+impl_dual_binop!(Mul, mul, |a, b| a * b, |av, ad, bv, bd| ad * bv + av * bd);
+impl_dual_binop!(Div, div, |a, b| a / b, |av, ad, bv, bd| (ad * bv - av * bd)
+    / (bv * bv));
+
+impl std::ops::Neg for Dual {
+    type Output = Dual;
+    #[inline]
+    fn neg(self) -> Dual {
+        Dual::new(-self.v, -self.d)
+    }
+}
+
+impl PartialOrd for Dual {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        self.v.partial_cmp(&other.v)
+    }
+}
+
+impl Scalar for Dual {
+    #[inline]
+    fn constant(x: f64) -> Self {
+        Dual::new(x, 0.0)
+    }
+    #[inline]
+    fn value(&self) -> f64 {
+        self.v
+    }
+    #[inline]
+    fn ln(self) -> Self {
+        Dual::new(self.v.ln(), self.d / self.v)
+    }
+    #[inline]
+    fn exp(self) -> Self {
+        let e = self.v.exp();
+        Dual::new(e, self.d * e)
+    }
+    #[inline]
+    fn sqrt(self) -> Self {
+        let s = self.v.sqrt();
+        Dual::new(s, self.d / (2.0 * s))
+    }
+    #[inline]
+    fn powi(self, n: i32) -> Self {
+        Dual::new(
+            self.v.powi(n),
+            self.d * n as f64 * self.v.powi(n - 1),
+        )
+    }
+    #[inline]
+    fn powf(self, e: f64) -> Self {
+        Dual::new(self.v.powf(e), self.d * e * self.v.powf(e - 1.0))
+    }
+    #[inline]
+    fn abs(self) -> Self {
+        if self.v >= 0.0 {
+            self
+        } else {
+            -self
+        }
+    }
+    #[inline]
+    fn ln_1p(self) -> Self {
+        Dual::new(self.v.ln_1p(), self.d / (1.0 + self.v))
+    }
+    #[inline]
+    fn tanh(self) -> Self {
+        let t = self.v.tanh();
+        Dual::new(t, self.d * (1.0 - t * t))
+    }
+    #[inline]
+    fn sin(self) -> Self {
+        Dual::new(self.v.sin(), self.d * self.v.cos())
+    }
+    #[inline]
+    fn cos(self) -> Self {
+        Dual::new(self.v.cos(), -self.d * self.v.sin())
+    }
+    #[inline]
+    fn lgamma(self) -> Self {
+        Dual::new(math::lgamma(self.v), self.d * math::digamma(self.v))
+    }
+}
+
+/// Full gradient of `f` at `x` by n forward passes (one seed per input).
+/// Returns (f(x), ∇f(x)).
+pub fn grad_forward<F>(mut f: F, x: &[f64]) -> (f64, Vec<f64>)
+where
+    F: FnMut(&[Dual]) -> Dual,
+{
+    let n = x.len();
+    let mut duals: Vec<Dual> = x.iter().map(|&v| Dual::constant(v)).collect();
+    let mut grad = vec![0.0; n];
+    let mut val = 0.0;
+    if n == 0 {
+        // Evaluate once for the value.
+        return (f(&duals).v, grad);
+    }
+    for i in 0..n {
+        duals[i].d = 1.0;
+        let out = f(&duals);
+        duals[i].d = 0.0;
+        grad[i] = out.d;
+        val = out.v;
+    }
+    (val, grad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ad::finite_diff_grad;
+
+    #[test]
+    fn arithmetic_rules() {
+        let x = Dual::var(3.0);
+        let y = x * x + 2.0 * x + 1.0; // d/dx = 2x + 2 = 8
+        assert!((y.v - 16.0).abs() < 1e-14);
+        assert!((y.d - 8.0).abs() < 1e-14);
+        let z = (x * x) / (x + 1.0); // d/dx = (x²+2x)/(x+1)²
+        assert!((z.d - (9.0 + 6.0) / 16.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn transcendental_rules() {
+        let x = Dual::var(0.7);
+        assert!((Scalar::ln(x).d - 1.0 / 0.7).abs() < 1e-14);
+        assert!((Scalar::exp(x).d - 0.7f64.exp()).abs() < 1e-14);
+        assert!((Scalar::sqrt(x).d - 0.5 / 0.7f64.sqrt()).abs() < 1e-14);
+        assert!((Scalar::tanh(x).d - (1.0 - 0.7f64.tanh().powi(2))).abs() < 1e-14);
+        assert!((Scalar::sin(x).d - 0.7f64.cos()).abs() < 1e-14);
+        assert!((x.powf(2.5).d - 2.5 * 0.7f64.powf(1.5)).abs() < 1e-14);
+        assert!((x.powi(3).d - 3.0 * 0.49).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lgamma_derivative_is_digamma() {
+        let x = Dual::var(4.2);
+        assert!((Scalar::lgamma(x).d - math::digamma(4.2)).abs() < 1e-11);
+    }
+
+    #[test]
+    fn stable_helpers_differentiate() {
+        let x = Dual::var(1.3);
+        let s = x.sigmoid();
+        let sv = 1.0 / (1.0 + (-1.3f64).exp());
+        assert!((s.d - sv * (1.0 - sv)).abs() < 1e-13);
+        let l = x.log_sigmoid();
+        assert!((l.d - (1.0 - sv)).abs() < 1e-13);
+    }
+
+    #[test]
+    fn grad_forward_matches_fd() {
+        let f_primal = |x: &[f64]| x[0].ln() * x[1] + (x[2] * x[0]).sin();
+        let fd = finite_diff_grad(f_primal, &[1.2, 0.8, 2.0], 1e-6);
+        let (v, g) = grad_forward(
+            |x: &[Dual]| Scalar::ln(x[0]) * x[1] + Scalar::sin(x[2] * x[0]),
+            &[1.2, 0.8, 2.0],
+        );
+        assert!((v - f_primal(&[1.2, 0.8, 2.0])).abs() < 1e-14);
+        for (a, b) in g.iter().zip(&fd) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn log_add_exp_dual() {
+        let a = Dual::var(2.0);
+        let b = Dual::constant(1.0);
+        let r = a.log_add_exp(b);
+        // d/da log(e^a + e^b) = softmax weight of a
+        let w = 2.0f64.exp() / (2.0f64.exp() + 1.0f64.exp());
+        assert!((r.d - w).abs() < 1e-13);
+    }
+}

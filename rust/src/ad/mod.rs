@@ -1,0 +1,218 @@
+//! Automatic differentiation substrates.
+//!
+//! The paper's §3.2 point is that the *trace* must be written so that the
+//! value vector's element type can be swapped for an AD number: ForwardDiff
+//! dual numbers or Tracker tracked reals in Julia. We reproduce that design
+//! with a [`Scalar`] trait that the whole model-evaluation path (trace,
+//! distributions, bijectors, log-density accumulation) is generic over:
+//!
+//! - [`forward::Dual`] — forward-mode dual numbers (ForwardDiff.jl analogue)
+//! - [`reverse::TVar`] — tape-based reverse mode with one heap node per op
+//!   (Tracker.jl analogue — it *deliberately* carries the dynamic-dispatch /
+//!   allocation overhead the paper measures in §4)
+//! - `f64` — plain evaluation
+//!
+//! The fast path in this reproduction (the paper's "Julia compiler
+//! specializes the typed trace") is the AOT-compiled XLA gradient, which is
+//! not an instance of `Scalar` — see `crate::gradient`.
+
+pub mod forward;
+pub mod reverse;
+
+use crate::util::math;
+
+/// A differentiable scalar: the element type of traced parameter vectors.
+///
+/// All model code (distributions, bijectors, log-density math) is written
+/// against this trait so the same definition executes as plain `f64`,
+/// forward dual, or reverse tape variable — the paper's AD-interoperability
+/// contribution.
+pub trait Scalar:
+    Copy
+    + Clone
+    + std::fmt::Debug
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::ops::Neg<Output = Self>
+    + std::ops::Add<f64, Output = Self>
+    + std::ops::Sub<f64, Output = Self>
+    + std::ops::Mul<f64, Output = Self>
+    + std::ops::Div<f64, Output = Self>
+    + PartialOrd
+{
+    /// Lift a constant (no derivative).
+    fn constant(x: f64) -> Self;
+    /// Primal value.
+    fn value(&self) -> f64;
+
+    fn ln(self) -> Self;
+    fn exp(self) -> Self;
+    fn sqrt(self) -> Self;
+    fn powi(self, n: i32) -> Self;
+    fn powf(self, e: f64) -> Self;
+    fn abs(self) -> Self;
+    fn ln_1p(self) -> Self;
+    fn tanh(self) -> Self;
+    fn sin(self) -> Self;
+    fn cos(self) -> Self;
+    /// log Γ(x) with derivative ψ(x).
+    fn lgamma(self) -> Self;
+
+    /// Numerically stable log(1+exp(x)).
+    fn log1p_exp(self) -> Self {
+        // Branch on the primal; both branches have the right derivative in
+        // their region.
+        if self.value() > 35.0 {
+            self
+        } else if self.value() < -35.0 {
+            self.exp()
+        } else {
+            self.exp().ln_1p()
+        }
+    }
+
+    /// Stable log-sigmoid −log(1+exp(−x)).
+    fn log_sigmoid(self) -> Self {
+        -((-self).log1p_exp())
+    }
+
+    /// Logistic sigmoid with stable branches.
+    fn sigmoid(self) -> Self {
+        if self.value() >= 0.0 {
+            let one_plus = (-self).exp() + 1.0;
+            Self::constant(1.0) / one_plus
+        } else {
+            let e = self.exp();
+            e / (e + 1.0)
+        }
+    }
+
+    /// Pairwise stable log-add-exp.
+    fn log_add_exp(self, other: Self) -> Self {
+        let (hi, lo) = if self.value() >= other.value() {
+            (self, other)
+        } else {
+            (other, self)
+        };
+        if hi.value() == f64::NEG_INFINITY {
+            return Self::constant(f64::NEG_INFINITY);
+        }
+        hi + (lo - hi).exp().ln_1p()
+    }
+}
+
+impl Scalar for f64 {
+    #[inline]
+    fn constant(x: f64) -> Self {
+        x
+    }
+    #[inline]
+    fn value(&self) -> f64 {
+        *self
+    }
+    #[inline]
+    fn ln(self) -> Self {
+        f64::ln(self)
+    }
+    #[inline]
+    fn exp(self) -> Self {
+        f64::exp(self)
+    }
+    #[inline]
+    fn sqrt(self) -> Self {
+        f64::sqrt(self)
+    }
+    #[inline]
+    fn powi(self, n: i32) -> Self {
+        f64::powi(self, n)
+    }
+    #[inline]
+    fn powf(self, e: f64) -> Self {
+        f64::powf(self, e)
+    }
+    #[inline]
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+    #[inline]
+    fn ln_1p(self) -> Self {
+        f64::ln_1p(self)
+    }
+    #[inline]
+    fn tanh(self) -> Self {
+        f64::tanh(self)
+    }
+    #[inline]
+    fn sin(self) -> Self {
+        f64::sin(self)
+    }
+    #[inline]
+    fn cos(self) -> Self {
+        f64::cos(self)
+    }
+    #[inline]
+    fn lgamma(self) -> Self {
+        math::lgamma(self)
+    }
+}
+
+/// Stable log-sum-exp over a slice of scalars.
+pub fn log_sum_exp_t<T: Scalar>(xs: &[T]) -> T {
+    let m = xs
+        .iter()
+        .cloned()
+        .fold(f64::NEG_INFINITY, |a, b| a.max(b.value()));
+    if m == f64::NEG_INFINITY {
+        return T::constant(f64::NEG_INFINITY);
+    }
+    let mut s = T::constant(0.0);
+    for &x in xs {
+        s = s + (x - m).exp();
+    }
+    s.ln() + m
+}
+
+/// Gradient of `f` at `x` by central finite differences — test oracle only.
+pub fn finite_diff_grad<F: FnMut(&[f64]) -> f64>(mut f: F, x: &[f64], h: f64) -> Vec<f64> {
+    let mut g = vec![0.0; x.len()];
+    let mut xp = x.to_vec();
+    for i in 0..x.len() {
+        let x0 = xp[i];
+        xp[i] = x0 + h;
+        let fp = f(&xp);
+        xp[i] = x0 - h;
+        let fm = f(&xp);
+        xp[i] = x0;
+        g[i] = (fp - fm) / (2.0 * h);
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_scalar_ops() {
+        let x: f64 = 2.0;
+        assert!((Scalar::ln(x) - std::f64::consts::LN_2).abs() < 1e-15);
+        assert!((x.log1p_exp() - (1.0 + x.exp()).ln()).abs() < 1e-12);
+        assert!((x.sigmoid() - 1.0 / (1.0 + (-2.0f64).exp())).abs() < 1e-15);
+        assert!(((-50.0f64).log_sigmoid() + 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lse_t_matches_math() {
+        let xs = [1.0f64, -2.0, 0.5];
+        assert!((log_sum_exp_t(&xs) - math::log_sum_exp(&xs)).abs() < 1e-14);
+    }
+
+    #[test]
+    fn finite_diff_sane() {
+        let g = finite_diff_grad(|x| x[0] * x[0] + 3.0 * x[1], &[2.0, 1.0], 1e-6);
+        assert!((g[0] - 4.0).abs() < 1e-5);
+        assert!((g[1] - 3.0).abs() < 1e-5);
+    }
+}

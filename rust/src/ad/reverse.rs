@@ -1,0 +1,352 @@
+//! Reverse-mode AD: a dynamic tape (Tracker.jl analogue).
+//!
+//! Every scalar operation appends a node (parents + local partials) to a
+//! thread-local tape through a `RefCell` — i.e. an indirect, allocating,
+//! dynamically-dispatched step per primitive op. This is an intentional
+//! reproduction of the overhead profile the paper attributes to Tracker.jl
+//! in §4 ("repeated use of Julia's dynamic dispatch leading to a large
+//! run-time overhead"), which dominates on scalar-loop time-series models
+//! (stochastic volatility, HMM). The AOT/XLA backend is the repaired path.
+
+use std::cell::RefCell;
+
+use super::Scalar;
+use crate::util::math;
+
+const NONE: u32 = u32::MAX;
+
+#[derive(Clone, Copy, Debug)]
+struct Node {
+    parents: [u32; 2],
+    partials: [f64; 2],
+}
+
+#[derive(Default)]
+struct Tape {
+    values: Vec<f64>,
+    nodes: Vec<Node>,
+}
+
+thread_local! {
+    static TAPE: RefCell<Tape> = RefCell::new(Tape::default());
+}
+
+/// A tracked real: an index into the thread-local tape.
+#[derive(Clone, Copy, Debug)]
+pub struct TVar {
+    idx: u32,
+    v: f64, // cached primal so comparisons don't hit the tape
+}
+
+impl TVar {
+    /// Push a leaf (input) variable.
+    pub fn input(v: f64) -> Self {
+        TAPE.with(|t| {
+            let mut t = t.borrow_mut();
+            let idx = t.values.len() as u32;
+            t.values.push(v);
+            t.nodes.push(Node {
+                parents: [NONE, NONE],
+                partials: [0.0, 0.0],
+            });
+            TVar { idx, v }
+        })
+    }
+
+    #[inline]
+    fn unary(self, v: f64, dv: f64) -> Self {
+        TAPE.with(|t| {
+            let mut t = t.borrow_mut();
+            let idx = t.values.len() as u32;
+            t.values.push(v);
+            t.nodes.push(Node {
+                parents: [self.idx, NONE],
+                partials: [dv, 0.0],
+            });
+            TVar { idx, v }
+        })
+    }
+
+    #[inline]
+    fn binary(self, rhs: TVar, v: f64, da: f64, db: f64) -> Self {
+        TAPE.with(|t| {
+            let mut t = t.borrow_mut();
+            let idx = t.values.len() as u32;
+            t.values.push(v);
+            t.nodes.push(Node {
+                parents: [self.idx, rhs.idx],
+                partials: [da, db],
+            });
+            TVar { idx, v }
+        })
+    }
+}
+
+/// Clear the thread-local tape. Must be called before each fresh gradient
+/// evaluation; `grad_reverse` does this for you.
+pub fn reset_tape() {
+    TAPE.with(|t| {
+        let mut t = t.borrow_mut();
+        t.values.clear();
+        t.nodes.clear();
+    });
+}
+
+/// Current number of tape nodes (diagnostics / tests).
+pub fn tape_len() -> usize {
+    TAPE.with(|t| t.borrow().nodes.len())
+}
+
+/// Backpropagate from `out`, returning adjoints of the first `n_inputs`
+/// tape entries (which must be the leaves created first, in order).
+pub fn backward(out: TVar, n_inputs: usize) -> Vec<f64> {
+    TAPE.with(|t| {
+        let t = t.borrow();
+        let n = t.nodes.len();
+        let mut adj = vec![0.0f64; n];
+        if (out.idx as usize) < n {
+            adj[out.idx as usize] = 1.0;
+        }
+        for i in (0..n).rev() {
+            let a = adj[i];
+            if a == 0.0 {
+                continue;
+            }
+            let node = &t.nodes[i];
+            for k in 0..2 {
+                let p = node.parents[k];
+                if p != NONE {
+                    adj[p as usize] += a * node.partials[k];
+                }
+            }
+        }
+        adj.truncate(n_inputs);
+        adj
+    })
+}
+
+/// Evaluate `f` on tracked inputs and return (value, gradient).
+pub fn grad_reverse<F>(mut f: F, x: &[f64]) -> (f64, Vec<f64>)
+where
+    F: FnMut(&[TVar]) -> TVar,
+{
+    reset_tape();
+    let inputs: Vec<TVar> = x.iter().map(|&v| TVar::input(v)).collect();
+    let out = f(&inputs);
+    let g = backward(out, x.len());
+    let v = out.v;
+    reset_tape();
+    (v, g)
+}
+
+macro_rules! impl_tvar_binop {
+    ($trait:ident, $fn:ident, |$a:ident, $b:ident| $v:expr, $da:expr, $db:expr) => {
+        impl std::ops::$trait for TVar {
+            type Output = TVar;
+            #[inline]
+            fn $fn(self, rhs: TVar) -> TVar {
+                let ($a, $b) = (self.v, rhs.v);
+                let _ = ($a, $b);
+                self.binary(rhs, $v, $da, $db)
+            }
+        }
+        impl std::ops::$trait<f64> for TVar {
+            type Output = TVar;
+            #[inline]
+            fn $fn(self, rhs: f64) -> TVar {
+                let ($a, $b) = (self.v, rhs);
+                let _ = ($a, $b);
+                self.unary($v, $da)
+            }
+        }
+        impl std::ops::$trait<TVar> for f64 {
+            type Output = TVar;
+            #[inline]
+            fn $fn(self, rhs: TVar) -> TVar {
+                let ($a, $b) = (self, rhs.v);
+                let _ = ($a, $b);
+                rhs.unary($v, $db)
+            }
+        }
+    };
+}
+
+impl_tvar_binop!(Add, add, |a, b| a + b, 1.0, 1.0);
+impl_tvar_binop!(Sub, sub, |a, b| a - b, 1.0, -1.0);
+impl_tvar_binop!(Mul, mul, |a, b| a * b, b, a);
+impl_tvar_binop!(Div, div, |a, b| a / b, 1.0 / b, -a / (b * b));
+
+impl std::ops::Neg for TVar {
+    type Output = TVar;
+    #[inline]
+    fn neg(self) -> TVar {
+        self.unary(-self.v, -1.0)
+    }
+}
+
+impl PartialEq for TVar {
+    fn eq(&self, other: &Self) -> bool {
+        self.v == other.v
+    }
+}
+
+impl PartialOrd for TVar {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        self.v.partial_cmp(&other.v)
+    }
+}
+
+impl Scalar for TVar {
+    #[inline]
+    fn constant(x: f64) -> Self {
+        TVar::input(x) // leaf with no seeding; adjoint discarded
+    }
+    #[inline]
+    fn value(&self) -> f64 {
+        self.v
+    }
+    #[inline]
+    fn ln(self) -> Self {
+        self.unary(self.v.ln(), 1.0 / self.v)
+    }
+    #[inline]
+    fn exp(self) -> Self {
+        let e = self.v.exp();
+        self.unary(e, e)
+    }
+    #[inline]
+    fn sqrt(self) -> Self {
+        let s = self.v.sqrt();
+        self.unary(s, 0.5 / s)
+    }
+    #[inline]
+    fn powi(self, n: i32) -> Self {
+        self.unary(self.v.powi(n), n as f64 * self.v.powi(n - 1))
+    }
+    #[inline]
+    fn powf(self, e: f64) -> Self {
+        self.unary(self.v.powf(e), e * self.v.powf(e - 1.0))
+    }
+    #[inline]
+    fn abs(self) -> Self {
+        if self.v >= 0.0 {
+            self
+        } else {
+            -self
+        }
+    }
+    #[inline]
+    fn ln_1p(self) -> Self {
+        self.unary(self.v.ln_1p(), 1.0 / (1.0 + self.v))
+    }
+    #[inline]
+    fn tanh(self) -> Self {
+        let t = self.v.tanh();
+        self.unary(t, 1.0 - t * t)
+    }
+    #[inline]
+    fn sin(self) -> Self {
+        self.unary(self.v.sin(), self.v.cos())
+    }
+    #[inline]
+    fn cos(self) -> Self {
+        self.unary(self.v.cos(), -self.v.sin())
+    }
+    #[inline]
+    fn lgamma(self) -> Self {
+        self.unary(math::lgamma(self.v), math::digamma(self.v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ad::finite_diff_grad;
+
+    #[test]
+    fn simple_gradient() {
+        let (v, g) = grad_reverse(|x| x[0] * x[0] + x[1] * 3.0, &[2.0, 5.0]);
+        assert!((v - 19.0).abs() < 1e-14);
+        assert!((g[0] - 4.0).abs() < 1e-14);
+        assert!((g[1] - 3.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn fan_out_accumulates() {
+        // y = x*x + x → dy/dx = 2x + 1
+        let (_, g) = grad_reverse(|x| x[0] * x[0] + x[0], &[3.0]);
+        assert!((g[0] - 7.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn matches_finite_differences() {
+        let primal = |x: &[f64]| (x[0] * x[1]).sin() + (x[2].exp() + x[0]).ln();
+        let fd = finite_diff_grad(primal, &[0.5, 1.5, 0.3], 1e-6);
+        let (v, g) = grad_reverse(
+            |x: &[TVar]| Scalar::sin(x[0] * x[1]) + Scalar::ln(Scalar::exp(x[2]) + x[0]),
+            &[0.5, 1.5, 0.3],
+        );
+        assert!((v - primal(&[0.5, 1.5, 0.3])).abs() < 1e-13);
+        for (a, b) in g.iter().zip(&fd) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn constants_do_not_leak_gradient() {
+        let (_, g) = grad_reverse(
+            |x: &[TVar]| {
+                let c = TVar::constant(10.0);
+                x[0] * c
+            },
+            &[2.0],
+        );
+        assert!((g[0] - 10.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn scalar_loop_time_series() {
+        // AR(1)-like recursion, the workload shape where tape AD is slow.
+        let n = 50;
+        let obs: Vec<f64> = (0..n).map(|i| (i as f64 * 0.1).sin()).collect();
+        let primal = |p: &[f64]| {
+            let (phi, mut h) = (p[0], p[1]);
+            let mut lp = 0.0;
+            for &y in &obs {
+                h = phi * h;
+                lp += -0.5 * (y - h) * (y - h);
+            }
+            lp
+        };
+        let fd = finite_diff_grad(primal, &[0.9, 0.2], 1e-6);
+        let (_, g) = grad_reverse(
+            |p: &[TVar]| {
+                let phi = p[0];
+                let mut h = p[1];
+                let mut lp = TVar::constant(0.0);
+                for &y in &obs {
+                    h = phi * h;
+                    let r = y - h;
+                    lp = lp + -0.5 * (r * r);
+                }
+                lp
+            },
+            &[0.9, 0.2],
+        );
+        for (a, b) in g.iter().zip(&fd) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn tape_resets() {
+        let _ = grad_reverse(|x| x[0] + x[0], &[1.0]);
+        assert_eq!(tape_len(), 0);
+    }
+
+    #[test]
+    fn lgamma_reverse() {
+        let (_, g) = grad_reverse(|x| Scalar::lgamma(x[0]), &[3.7]);
+        assert!((g[0] - math::digamma(3.7)).abs() < 1e-11);
+    }
+}

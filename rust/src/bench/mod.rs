@@ -1,0 +1,399 @@
+//! Table-1 benchmark harness: times static HMC (4 leapfrog steps, paper
+//! step sizes) across execution backends for every benchmark model, and
+//! renders the paper-shaped comparison table.
+//!
+//! The paper reports seconds for 2,000 iterations. Slow backends (the
+//! boxed/tape paths exist precisely to be slow) are run for fewer
+//! iterations and linearly extrapolated — per-iteration cost is constant
+//! in iteration count for static HMC, so this preserves the ordering and
+//! ratios Table 1 is about. Extrapolated cells are marked `~`.
+
+use std::fmt::Write as _;
+
+use crate::context::Context;
+use crate::gradient::{Backend, LogDensity, NativeDensity, UntypedDensity};
+use crate::inference::Hmc;
+use crate::model::{init_trace, typed_logp};
+use crate::models::{build, BenchModel};
+use crate::runtime::{artifact_exists, artifacts_dir, XlaDensity};
+use crate::stanlike::stanlike_density;
+use crate::util::rng::Xoshiro256pp;
+use crate::varinfo::TypedVarInfo;
+
+/// Execution backend for a Table-1 cell (DESIGN.md §4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BenchBackend {
+    /// Boxed trace + tape reverse AD: the pre-specialization dynamic path.
+    Untyped,
+    /// Typed trace + tape reverse AD (Tracker.jl analogue).
+    TypedTape,
+    /// Typed trace + forward-mode duals (ForwardDiff.jl analogue).
+    TypedForward,
+    /// Typed layout + AOT-compiled XLA logp∇ (the paper's headline path).
+    TypedXla,
+    /// XLA with the fused 4-leapfrog trajectory artifact (§Perf).
+    TypedXlaFused,
+    /// Hand-coded static Rust + analytic gradients (the Stan comparator).
+    StanLike,
+}
+
+impl BenchBackend {
+    pub fn label(&self) -> &'static str {
+        match self {
+            BenchBackend::Untyped => "untyped",
+            BenchBackend::TypedTape => "typed+tape",
+            BenchBackend::TypedForward => "typed+fwd",
+            BenchBackend::TypedXla => "typed+xla",
+            BenchBackend::TypedXlaFused => "typed+xla-fused",
+            BenchBackend::StanLike => "stanlike",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "untyped" => BenchBackend::Untyped,
+            "typed+tape" | "tape" => BenchBackend::TypedTape,
+            "typed+fwd" | "forward" => BenchBackend::TypedForward,
+            "typed+xla" | "xla" => BenchBackend::TypedXla,
+            "typed+xla-fused" | "xla-fused" | "fused" => BenchBackend::TypedXlaFused,
+            "stanlike" | "stan" => BenchBackend::StanLike,
+            _ => return None,
+        })
+    }
+
+    /// Iteration budget fraction relative to the full 2,000 (slow paths
+    /// are extrapolated; see module docs).
+    fn iter_fraction(&self) -> f64 {
+        match self {
+            BenchBackend::Untyped | BenchBackend::TypedTape | BenchBackend::TypedForward => 0.02,
+            _ => 1.0,
+        }
+    }
+}
+
+/// Default backend set for the Table-1 run.
+pub const DEFAULT_BACKENDS: [BenchBackend; 4] = [
+    BenchBackend::Untyped,
+    BenchBackend::TypedTape,
+    BenchBackend::TypedXla,
+    BenchBackend::StanLike,
+];
+
+/// One Table-1 cell.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub model: String,
+    pub backend: BenchBackend,
+    /// seconds per `iters` iterations (mean over reps)
+    pub mean: f64,
+    pub std: f64,
+    pub extrapolated: bool,
+    pub note: Option<String>,
+}
+
+/// Benchmark configuration.
+#[derive(Clone, Debug)]
+pub struct Table1Config {
+    /// target iteration count reported (paper: 2,000)
+    pub iters: usize,
+    pub reps: usize,
+    pub seed: u64,
+    pub backends: Vec<BenchBackend>,
+    pub models: Vec<String>,
+    /// cap on actually-executed iterations per cell (None = full); cells
+    /// below `iters` are extrapolated and marked `~`
+    pub max_run_iters: Option<usize>,
+}
+
+impl Default for Table1Config {
+    fn default() -> Self {
+        Self {
+            iters: 2000,
+            reps: 3,
+            seed: 42,
+            backends: DEFAULT_BACKENDS.to_vec(),
+            models: crate::models::ALL_MODELS.iter().map(|s| s.to_string()).collect(),
+            // bound plain `cargo bench` runs: every cell is measured over
+            // ≤ 200 executed iterations and extrapolated to `iters`
+            // (marked `~`); set to None / T1_FULL=1 for full-length runs
+            max_run_iters: Some(200),
+        }
+    }
+}
+
+/// Time static HMC over a density: returns seconds per `target_iters`.
+fn time_hmc(
+    ld: &dyn LogDensity,
+    theta0: &[f64],
+    step_size: f64,
+    target_iters: usize,
+    run_iters: usize,
+    reps: usize,
+    seed: u64,
+) -> (f64, f64) {
+    let hmc = Hmc::paper(step_size);
+    let mut times = Vec::with_capacity(reps);
+    for r in 0..reps {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed + r as u64);
+        let t0 = std::time::Instant::now();
+        let out = hmc.sample(ld, theta0, 0, run_iters, &mut rng);
+        let dt = t0.elapsed().as_secs_f64();
+        std::hint::black_box(out.logps.last());
+        times.push(dt * target_iters as f64 / run_iters as f64);
+    }
+    (
+        crate::util::stats::mean(&times),
+        if reps > 1 {
+            crate::util::stats::std(&times)
+        } else {
+            0.0
+        },
+    )
+}
+
+/// Starting point: a stable point near the typed trace's prior draw,
+/// shrunk toward 0 so every backend starts from an identical, numerically
+/// safe position.
+fn start_point(bm: &BenchModel, seed: u64) -> (TypedVarInfo, Vec<f64>) {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let vi = init_trace(bm.model.as_ref(), &mut rng);
+    let tvi = TypedVarInfo::from_untyped(&vi);
+    let theta0: Vec<f64> = tvi.unconstrained.iter().map(|x| x * 0.1).collect();
+    // sanity: must be finite
+    let lp = typed_logp(bm.model.as_ref(), &tvi, &theta0, Context::Default);
+    assert!(lp.is_finite(), "{}: start point has logp {lp}", bm.name);
+    (tvi, theta0)
+}
+
+/// Run one cell.
+pub fn run_cell(
+    name: &str,
+    backend: BenchBackend,
+    cfg: &Table1Config,
+) -> Cell {
+    let bm = build(name, cfg.seed);
+    let (tvi, theta0) = start_point(&bm, cfg.seed);
+    let mut run_iters =
+        ((cfg.iters as f64 * backend.iter_fraction()) as usize).clamp(5, cfg.iters);
+    if let Some(cap) = cfg.max_run_iters {
+        run_iters = run_iters.min(cap.max(5));
+    }
+    let extrapolated = run_iters < cfg.iters;
+
+    let (mean, std) = match backend {
+        BenchBackend::Untyped => {
+            let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+            let vi = init_trace(bm.model.as_ref(), &mut rng);
+            let ld = UntypedDensity::new(bm.model.as_ref(), &vi, Backend::Reverse);
+            time_hmc(&ld, &theta0, bm.step_size, cfg.iters, run_iters, cfg.reps, cfg.seed)
+        }
+        BenchBackend::TypedTape => {
+            let ld = NativeDensity::new(bm.model.as_ref(), &tvi, Backend::Reverse);
+            time_hmc(&ld, &theta0, bm.step_size, cfg.iters, run_iters, cfg.reps, cfg.seed)
+        }
+        BenchBackend::TypedForward => {
+            let ld = NativeDensity::new(bm.model.as_ref(), &tvi, Backend::Forward);
+            time_hmc(&ld, &theta0, bm.step_size, cfg.iters, run_iters, cfg.reps, cfg.seed)
+        }
+        BenchBackend::TypedXla => {
+            if !artifact_exists(name) {
+                return Cell {
+                    model: name.into(),
+                    backend,
+                    mean: f64::NAN,
+                    std: 0.0,
+                    extrapolated: false,
+                    note: Some("artifact missing (make artifacts)".into()),
+                };
+            }
+            let ld = XlaDensity::load(&artifacts_dir(), name, bm.theta_dim, &bm.data)
+                .expect("artifact load failed");
+            time_hmc(&ld, &theta0, bm.step_size, cfg.iters, run_iters, cfg.reps, cfg.seed)
+        }
+        BenchBackend::TypedXlaFused => {
+            if !artifact_exists(name)
+                || !crate::runtime::XlaTrajectory::traj_artifact_exists(name)
+            {
+                return Cell {
+                    model: name.into(),
+                    backend,
+                    mean: f64::NAN,
+                    std: 0.0,
+                    extrapolated: false,
+                    note: Some("artifact missing (make artifacts)".into()),
+                };
+            }
+            let traj =
+                crate::runtime::XlaTrajectory::load(&artifacts_dir(), name, bm.theta_dim, &bm.data)
+                    .expect("trajectory artifact load failed");
+            let vg = XlaDensity::load(&artifacts_dir(), name, bm.theta_dim, &bm.data)
+                .expect("artifact load failed");
+            let sampler = crate::inference::hmc::HmcFusedXla {
+                traj: &traj,
+                vg: &vg,
+                step_size: bm.step_size,
+            };
+            let mut times = Vec::with_capacity(cfg.reps);
+            for r in 0..cfg.reps {
+                let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed + r as u64);
+                let t0 = std::time::Instant::now();
+                let out = sampler.sample(&theta0, 0, run_iters, &mut rng);
+                let dt = t0.elapsed().as_secs_f64();
+                std::hint::black_box(out.logps.last());
+                times.push(dt * cfg.iters as f64 / run_iters as f64);
+            }
+            (
+                crate::util::stats::mean(&times),
+                if cfg.reps > 1 { crate::util::stats::std(&times) } else { 0.0 },
+            )
+        }
+        BenchBackend::StanLike => {
+            let ld = stanlike_density(&bm);
+            time_hmc(
+                ld.as_ref(),
+                &theta0,
+                bm.step_size,
+                cfg.iters,
+                run_iters,
+                cfg.reps,
+                cfg.seed,
+            )
+        }
+    };
+    Cell {
+        model: name.into(),
+        backend,
+        mean,
+        std,
+        extrapolated,
+        note: None,
+    }
+}
+
+/// Run the full table.
+pub fn run_table1(cfg: &Table1Config) -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for name in &cfg.models {
+        for &backend in &cfg.backends {
+            eprintln!("bench: {name} / {}", backend.label());
+            cells.push(run_cell(name, backend, cfg));
+        }
+    }
+    cells
+}
+
+/// Render the paper-shaped table: rows = backends, columns = models.
+pub fn render_table1(cells: &[Cell], cfg: &Table1Config) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "Table 1 — inference time for {} iterations of static HMC(4 leapfrog), seconds;\n\
+         smaller is better. `~` marks cells extrapolated from a shorter run.\n",
+        cfg.iters
+    );
+    let col_w = 16usize;
+    let _ = write!(out, "{:<12}", "backend");
+    for m in &cfg.models {
+        let _ = write!(out, "{:>col_w$}", m);
+    }
+    let _ = writeln!(out);
+    for &backend in &cfg.backends {
+        let _ = write!(out, "{:<12}", backend.label());
+        for m in &cfg.models {
+            let cell = cells
+                .iter()
+                .find(|c| &c.model == m && c.backend == backend);
+            match cell {
+                Some(c) if c.mean.is_finite() => {
+                    let mark = if c.extrapolated { "~" } else { "" };
+                    let _ = write!(
+                        out,
+                        "{:>col_w$}",
+                        format!("{mark}{:.3}±{:.3}", c.mean, c.std)
+                    );
+                }
+                Some(c) => {
+                    let _ = write!(out, "{:>col_w$}", c.note.as_deref().unwrap_or("n/a"));
+                }
+                None => {
+                    let _ = write!(out, "{:>col_w$}", "-");
+                }
+            }
+        }
+        let _ = writeln!(out);
+    }
+    // headline ratios
+    let _ = writeln!(out, "\nspeedups (× vs typed+xla):");
+    for m in &cfg.models {
+        let xla = cells
+            .iter()
+            .find(|c| &c.model == m && c.backend == BenchBackend::TypedXla)
+            .map(|c| c.mean);
+        if let Some(x) = xla.filter(|x| x.is_finite()) {
+            let _ = write!(out, "  {m}:");
+            for &b in &cfg.backends {
+                if b == BenchBackend::TypedXla {
+                    continue;
+                }
+                if let Some(c) = cells
+                    .iter()
+                    .find(|c| &c.model == m && c.backend == b)
+                    .filter(|c| c.mean.is_finite())
+                {
+                    let _ = write!(out, " {}={:.1}×", b.label(), c.mean / x);
+                }
+            }
+            let _ = writeln!(out);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_labels_roundtrip() {
+        for b in [
+            BenchBackend::Untyped,
+            BenchBackend::TypedTape,
+            BenchBackend::TypedForward,
+            BenchBackend::TypedXla,
+            BenchBackend::StanLike,
+        ] {
+            assert_eq!(BenchBackend::parse(b.label()), Some(b));
+        }
+        assert_eq!(BenchBackend::parse("nope"), None);
+    }
+
+    #[test]
+    fn tiny_cell_runs_stanlike() {
+        let cfg = Table1Config {
+            iters: 10,
+            reps: 1,
+            seed: 3,
+            backends: vec![BenchBackend::StanLike],
+            models: vec!["hier_poisson".into()],
+            max_run_iters: None,
+        };
+        let cell = run_cell("hier_poisson", BenchBackend::StanLike, &cfg);
+        assert!(cell.mean.is_finite() && cell.mean > 0.0);
+        let table = render_table1(&[cell], &cfg);
+        assert!(table.contains("hier_poisson"));
+    }
+
+    #[test]
+    fn tiny_cell_runs_typed_tape() {
+        let cfg = Table1Config {
+            iters: 10,
+            reps: 1,
+            seed: 3,
+            backends: vec![BenchBackend::TypedTape],
+            models: vec!["gauss_unknown".into()],
+            max_run_iters: None,
+        };
+        let cell = run_cell("gauss_unknown", BenchBackend::TypedTape, &cfg);
+        assert!(cell.mean.is_finite() && cell.mean > 0.0);
+    }
+}

@@ -1,0 +1,281 @@
+//! MCMC chain storage and diagnostics (the MCMCChains.jl analogue).
+//!
+//! A [`Chain`] holds constrained-space draws as rows (one column per scalar
+//! parameter element, named like `w[3]`), the per-draw log-density, and
+//! sampler statistics. [`MultiChain`] aggregates several chains for split-R̂.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+use crate::util::stats;
+
+/// Sampler-level statistics for one run.
+#[derive(Clone, Debug, Default)]
+pub struct SamplerStats {
+    pub accept_rate: f64,
+    pub divergences: usize,
+    pub step_size: f64,
+    pub n_grad_evals: u64,
+    pub wall_secs: f64,
+}
+
+/// One MCMC chain in constrained space.
+#[derive(Clone, Debug)]
+pub struct Chain {
+    names: Vec<String>,
+    index: HashMap<String, usize>,
+    /// draws[i] is one row over all columns.
+    draws: Vec<Vec<f64>>,
+    /// log-density per draw.
+    pub logp: Vec<f64>,
+    pub stats: SamplerStats,
+}
+
+impl Chain {
+    pub fn new(names: Vec<String>) -> Self {
+        let index = names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.clone(), i))
+            .collect();
+        Self {
+            names,
+            index,
+            draws: Vec::new(),
+            logp: Vec::new(),
+            stats: SamplerStats::default(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<f64>, logp: f64) {
+        debug_assert_eq!(row.len(), self.names.len());
+        self.draws.push(row);
+        self.logp.push(logp);
+    }
+
+    pub fn len(&self) -> usize {
+        self.draws.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.draws.is_empty()
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn rows(&self) -> &[Vec<f64>] {
+        &self.draws
+    }
+
+    /// Column by name (e.g. `"w[0]"`), as a fresh vector.
+    pub fn column(&self, name: &str) -> Option<Vec<f64>> {
+        let &i = self.index.get(name)?;
+        Some(self.draws.iter().map(|r| r[i]).collect())
+    }
+
+    /// All columns whose name starts with `sym` (`"w"` matches `w[0]`, `w[1]`, …).
+    pub fn columns_of(&self, sym: &str) -> Vec<(String, Vec<f64>)> {
+        let prefix_bracket = format!("{sym}[");
+        self.names
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.as_str() == sym || n.starts_with(&prefix_bracket))
+            .map(|(i, n)| (n.clone(), self.draws.iter().map(|r| r[i]).collect()))
+            .collect()
+    }
+
+    pub fn mean(&self, name: &str) -> Option<f64> {
+        self.column(name).map(|c| stats::mean(&c))
+    }
+
+    pub fn std(&self, name: &str) -> Option<f64> {
+        self.column(name).map(|c| stats::std(&c))
+    }
+
+    pub fn quantile(&self, name: &str, q: f64) -> Option<f64> {
+        self.column(name).map(|c| stats::quantile(&c, q))
+    }
+
+    pub fn ess(&self, name: &str) -> Option<f64> {
+        self.column(name).map(|c| stats::ess(&c))
+    }
+
+    /// Drop the first `n` draws (warmup).
+    pub fn discard_warmup(&mut self, n: usize) {
+        let n = n.min(self.draws.len());
+        self.draws.drain(..n);
+        self.logp.drain(..n);
+    }
+
+    /// Keep every `k`-th draw.
+    pub fn thin(&mut self, k: usize) {
+        assert!(k >= 1);
+        if k == 1 {
+            return;
+        }
+        self.draws = self
+            .draws
+            .iter()
+            .step_by(k)
+            .cloned()
+            .collect();
+        self.logp = self.logp.iter().step_by(k).cloned().collect();
+    }
+
+    /// Formatted summary table: mean, std, 2.5%/50%/97.5% quantiles, ESS.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        let w = self.names.iter().map(|n| n.len()).max().unwrap_or(5).max(5);
+        let _ = writeln!(
+            out,
+            "{:<w$} {:>10} {:>10} {:>10} {:>10} {:>10} {:>8}",
+            "param", "mean", "std", "2.5%", "50%", "97.5%", "ess"
+        );
+        for name in &self.names {
+            let c = self.column(name).unwrap();
+            let _ = writeln!(
+                out,
+                "{:<w$} {:>10.4} {:>10.4} {:>10.4} {:>10.4} {:>10.4} {:>8.1}",
+                name,
+                stats::mean(&c),
+                stats::std(&c),
+                stats::quantile(&c, 0.025),
+                stats::quantile(&c, 0.5),
+                stats::quantile(&c, 0.975),
+                stats::ess(&c),
+            );
+        }
+        out
+    }
+}
+
+/// Several chains of the same model (for split-R̂ and pooled estimates).
+#[derive(Clone, Debug)]
+pub struct MultiChain {
+    pub chains: Vec<Chain>,
+}
+
+impl MultiChain {
+    pub fn new(chains: Vec<Chain>) -> Self {
+        assert!(!chains.is_empty());
+        let names = chains[0].names().to_vec();
+        for c in &chains[1..] {
+            assert_eq!(c.names(), &names[..], "chains disagree on columns");
+        }
+        Self { chains }
+    }
+
+    pub fn rhat(&self, name: &str) -> Option<f64> {
+        let cols: Vec<Vec<f64>> = self
+            .chains
+            .iter()
+            .map(|c| c.column(name))
+            .collect::<Option<_>>()?;
+        let refs: Vec<&[f64]> = cols.iter().map(|c| c.as_slice()).collect();
+        Some(stats::split_rhat(&refs))
+    }
+
+    /// Pooled posterior mean across chains.
+    pub fn mean(&self, name: &str) -> Option<f64> {
+        let mut acc = 0.0;
+        let mut n = 0usize;
+        for c in &self.chains {
+            let col = c.column(name)?;
+            acc += col.iter().sum::<f64>();
+            n += col.len();
+        }
+        Some(acc / n as f64)
+    }
+
+    /// Total ESS (sum over chains).
+    pub fn ess(&self, name: &str) -> Option<f64> {
+        let mut acc = 0.0;
+        for c in &self.chains {
+            acc += c.ess(name)?;
+        }
+        Some(acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Rng, Xoshiro256pp};
+
+    fn demo_chain(seed: u64, shift: f64) -> Chain {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut c = Chain::new(vec!["a".into(), "b[0]".into(), "b[1]".into()]);
+        for _ in 0..2000 {
+            let a = rng.normal() + shift;
+            c.push(vec![a, rng.normal() * 2.0, rng.normal() - 1.0], -a * a);
+        }
+        c
+    }
+
+    #[test]
+    fn column_access_and_moments() {
+        let c = demo_chain(1, 0.0);
+        assert_eq!(c.len(), 2000);
+        assert!(c.mean("a").unwrap().abs() < 0.1);
+        assert!((c.std("b[0]").unwrap() - 2.0).abs() < 0.15);
+        assert!((c.mean("b[1]").unwrap() + 1.0).abs() < 0.1);
+        assert!(c.column("nope").is_none());
+    }
+
+    #[test]
+    fn columns_of_groups_elements() {
+        let c = demo_chain(2, 0.0);
+        let cols = c.columns_of("b");
+        assert_eq!(cols.len(), 2);
+        assert_eq!(cols[0].0, "b[0]");
+        let cols = c.columns_of("a");
+        assert_eq!(cols.len(), 1);
+    }
+
+    #[test]
+    fn warmup_and_thin() {
+        let mut c = demo_chain(3, 0.0);
+        c.discard_warmup(500);
+        assert_eq!(c.len(), 1500);
+        c.thin(3);
+        assert_eq!(c.len(), 500);
+        assert_eq!(c.logp.len(), 500);
+    }
+
+    #[test]
+    fn quantiles_are_ordered() {
+        let c = demo_chain(4, 0.0);
+        let lo = c.quantile("a", 0.025).unwrap();
+        let mid = c.quantile("a", 0.5).unwrap();
+        let hi = c.quantile("a", 0.975).unwrap();
+        assert!(lo < mid && mid < hi);
+        // standard normal quantiles approximately
+        assert!((lo + 1.96).abs() < 0.2, "{lo}");
+        assert!((hi - 1.96).abs() < 0.2, "{hi}");
+    }
+
+    #[test]
+    fn multichain_rhat() {
+        let good = MultiChain::new(vec![demo_chain(5, 0.0), demo_chain(6, 0.0)]);
+        assert!((good.rhat("a").unwrap() - 1.0).abs() < 0.02);
+        let bad = MultiChain::new(vec![demo_chain(7, 0.0), demo_chain(8, 4.0)]);
+        assert!(bad.rhat("a").unwrap() > 1.5);
+    }
+
+    #[test]
+    fn summary_contains_all_params() {
+        let c = demo_chain(9, 0.0);
+        let s = c.summary();
+        assert!(s.contains("b[0]") && s.contains("b[1]") && s.contains("ess"));
+    }
+
+    #[test]
+    #[should_panic(expected = "disagree")]
+    fn multichain_rejects_mismatched_columns() {
+        let a = Chain::new(vec!["x".into()]);
+        let b = Chain::new(vec!["y".into()]);
+        let _ = MultiChain::new(vec![a, b]);
+    }
+}

@@ -1,0 +1,193 @@
+//! Execution contexts (paper §3.1) and the log-probability accumulator
+//! with early rejection (paper §3.3).
+//!
+//! Every model run happens in a [`Context`] that decides how each tilde
+//! statement contributes to the accumulated log-density:
+//!
+//! - [`Context::Default`] — log-joint: priors + likelihood.
+//! - [`Context::Likelihood`] — observation terms only.
+//! - [`Context::Prior`] — parameter terms only.
+//! - [`Context::MiniBatch`] — log-joint with the likelihood scaled by
+//!   `scale` (= N/batch), so stochastic-VI gradients are unbiased.
+//!
+//! Rather than four types dispatching at compile time (Julia's design), a
+//! context here is a pair of weights applied to the prior- and
+//! likelihood-side accumulators — semantically identical, and the weights
+//! constant-fold on the typed path.
+
+use crate::ad::Scalar;
+
+/// Which log-density terms a model execution accumulates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Context {
+    /// Log-joint of parameters and observations (`DefaultContext`).
+    Default,
+    /// Only observation (likelihood) terms (`LikelihoodContext`).
+    Likelihood,
+    /// Only parameter (prior) terms (`PriorContext`).
+    Prior,
+    /// Log-joint with scaled likelihood (`MiniBatchContext`): the paper's
+    /// mechanism for stochastic-gradient VI.
+    MiniBatch { scale: f64 },
+}
+
+impl Context {
+    /// Weight applied to prior-side (assume) terms, including Jacobian
+    /// corrections of linked parameters.
+    #[inline]
+    pub fn prior_weight(&self) -> f64 {
+        match self {
+            Context::Likelihood => 0.0,
+            _ => 1.0,
+        }
+    }
+
+    /// Weight applied to likelihood-side (observe) terms.
+    #[inline]
+    pub fn lik_weight(&self) -> f64 {
+        match self {
+            Context::Prior => 0.0,
+            Context::MiniBatch { scale } => *scale,
+            _ => 1.0,
+        }
+    }
+}
+
+/// Log-density accumulator with the paper's early-rejection flag.
+///
+/// Calling [`Accumulator::reject`] pins the total at −∞ (the `@logpdf() =
+/// -Inf; return` idiom); subsequent accumulation is ignored and model code
+/// should return promptly (the `tilde!` macros insert the check).
+#[derive(Clone, Copy, Debug)]
+pub struct Accumulator<T: Scalar> {
+    logp: T,
+    rejected: bool,
+    prior_w: f64,
+    lik_w: f64,
+}
+
+impl<T: Scalar> Accumulator<T> {
+    pub fn new(ctx: Context) -> Self {
+        Self {
+            logp: T::constant(0.0),
+            rejected: false,
+            prior_w: ctx.prior_weight(),
+            lik_w: ctx.lik_weight(),
+        }
+    }
+
+    /// Add a prior-side term (weighted by the context).
+    #[inline]
+    pub fn add_prior(&mut self, lp: T) {
+        if self.rejected {
+            return;
+        }
+        if lp.value() == f64::NEG_INFINITY {
+            self.reject();
+            return;
+        }
+        if self.prior_w != 0.0 {
+            self.logp = self.logp + lp * self.prior_w;
+        }
+    }
+
+    /// Add a likelihood-side term (weighted by the context).
+    #[inline]
+    pub fn add_lik(&mut self, lp: T) {
+        if self.rejected {
+            return;
+        }
+        if lp.value() == f64::NEG_INFINITY {
+            self.reject();
+            return;
+        }
+        if self.lik_w != 0.0 {
+            self.logp = self.logp + lp * self.lik_w;
+        }
+    }
+
+    /// Early rejection: pin the accumulator at −∞.
+    #[inline]
+    pub fn reject(&mut self) {
+        self.rejected = true;
+    }
+
+    #[inline]
+    pub fn rejected(&self) -> bool {
+        self.rejected
+    }
+
+    /// Final value: −∞ if rejected.
+    #[inline]
+    pub fn total(&self) -> T {
+        if self.rejected {
+            T::constant(f64::NEG_INFINITY)
+        } else {
+            self.logp
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_accumulates_both() {
+        let mut a = Accumulator::<f64>::new(Context::Default);
+        a.add_prior(-1.0);
+        a.add_lik(-2.0);
+        assert_eq!(a.total(), -3.0);
+    }
+
+    #[test]
+    fn likelihood_drops_prior() {
+        let mut a = Accumulator::<f64>::new(Context::Likelihood);
+        a.add_prior(-1.0);
+        a.add_lik(-2.0);
+        assert_eq!(a.total(), -2.0);
+    }
+
+    #[test]
+    fn prior_drops_likelihood() {
+        let mut a = Accumulator::<f64>::new(Context::Prior);
+        a.add_prior(-1.0);
+        a.add_lik(-2.0);
+        assert_eq!(a.total(), -1.0);
+    }
+
+    #[test]
+    fn minibatch_scales_likelihood_only() {
+        let mut a = Accumulator::<f64>::new(Context::MiniBatch { scale: 10.0 });
+        a.add_prior(-1.0);
+        a.add_lik(-2.0);
+        assert_eq!(a.total(), -21.0);
+    }
+
+    #[test]
+    fn reject_pins_neg_inf() {
+        let mut a = Accumulator::<f64>::new(Context::Default);
+        a.add_prior(-1.0);
+        a.reject();
+        a.add_lik(-2.0);
+        assert!(a.rejected());
+        assert_eq!(a.total(), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn neg_inf_term_triggers_rejection() {
+        let mut a = Accumulator::<f64>::new(Context::Default);
+        a.add_lik(f64::NEG_INFINITY);
+        assert!(a.rejected());
+        assert_eq!(a.total(), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn weights_expose_paper_semantics() {
+        assert_eq!(Context::Default.prior_weight(), 1.0);
+        assert_eq!(Context::Default.lik_weight(), 1.0);
+        assert_eq!(Context::Likelihood.prior_weight(), 0.0);
+        assert_eq!(Context::Prior.lik_weight(), 0.0);
+        assert_eq!(Context::MiniBatch { scale: 5.0 }.lik_weight(), 5.0);
+    }
+}

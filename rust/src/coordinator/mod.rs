@@ -1,0 +1,355 @@
+//! The leader process: model registry, CLI command dispatch, multi-chain
+//! orchestration. This is what `dppl` (rust/src/main.rs) drives.
+
+use std::sync::Arc;
+
+use crate::bench::{run_table1, render_table1, BenchBackend, Table1Config};
+use crate::chain::{Chain, MultiChain};
+use crate::context::Context;
+use crate::gradient::{Backend, LogDensity, NativeDensity};
+use crate::inference::{sample_chain, Hmc, Nuts, RwMh, SamplerKind};
+use crate::model::init_typed;
+use crate::models::{build, ALL_MODELS};
+use crate::query::{eval_query, Bindings, ModelRegistry, Query};
+use crate::runtime::{artifact_exists, artifacts_dir, XlaDensity};
+use crate::stanlike::stanlike_density;
+use crate::util::cli::{Args, Usage};
+use crate::util::rng::Xoshiro256pp;
+use crate::util::threadpool::{default_threads, parallel_map};
+use crate::value::Value;
+
+/// CLI usage text.
+pub fn usage() -> String {
+    Usage {
+        program: "dppl",
+        about: "DynamicPPL reproduction — Stan-like speed for dynamic probabilistic models",
+        commands: vec![
+            ("list", "list benchmark models"),
+            ("info", "show runtime/platform information"),
+            (
+                "sample",
+                "run MCMC: --model NAME [--sampler hmc|nuts|mh] [--backend xla|tape|forward|stan] [--iters N] [--warmup N] [--chains C] [--seed S]",
+            ),
+            (
+                "bench",
+                "bench table1 [--models a,b] [--backends x,y] [--iters N] [--reps R]",
+            ),
+            ("query", "evaluate a probability query string (paper §3.5)"),
+        ],
+    }
+    .render()
+}
+
+/// Entry point used by main.rs; returns process exit code.
+pub fn run(argv: Vec<String>) -> i32 {
+    let mut it = argv.into_iter();
+    let cmd = match it.next() {
+        Some(c) => c,
+        None => {
+            print!("{}", usage());
+            return 2;
+        }
+    };
+    let args = match Args::parse(it) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    match cmd.as_str() {
+        "list" => cmd_list(),
+        "info" => cmd_info(),
+        "sample" => cmd_sample(&args),
+        "bench" => cmd_bench(&args),
+        "query" => cmd_query(&args),
+        "help" | "--help" | "-h" => {
+            print!("{}", usage());
+            0
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n{}", usage());
+            2
+        }
+    }
+}
+
+fn cmd_list() -> i32 {
+    println!("Table-1 benchmark models:");
+    for name in ALL_MODELS {
+        let bm = build(name, 0);
+        println!(
+            "  {name:<16} dim={:<6} artifact={}",
+            bm.theta_dim,
+            if artifact_exists(name) { "yes" } else { "NO (make artifacts)" }
+        );
+    }
+    0
+}
+
+fn cmd_info() -> i32 {
+    match crate::runtime::Runtime::cpu() {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("artifacts dir: {}", artifacts_dir().display());
+            println!("threads:       {}", default_threads());
+            0
+        }
+        Err(e) => {
+            eprintln!("PJRT unavailable: {e:?}");
+            1
+        }
+    }
+}
+
+fn cmd_sample(args: &Args) -> i32 {
+    let model_name = match args.get("model") {
+        Some(m) => m.to_string(),
+        None => {
+            eprintln!("--model required (see `dppl list`)");
+            return 2;
+        }
+    };
+    let sampler = args.get_or("sampler", "nuts").to_string();
+    let backend = args.get_or("backend", "xla").to_string();
+    let iters = args.get_parse_or("iters", 1000usize).unwrap_or(1000);
+    let warmup = args.get_parse_or("warmup", 500usize).unwrap_or(500);
+    let n_chains = args.get_parse_or("chains", 2usize).unwrap_or(2);
+    let seed = args.get_parse_or("seed", 42u64).unwrap_or(42);
+
+    let mc = match sample_model(
+        &model_name, &sampler, &backend, iters, warmup, n_chains, seed,
+    ) {
+        Ok(mc) => mc,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    report_chains(&mc);
+    0
+}
+
+/// Build the requested density and sample `n_chains` chains in parallel.
+pub fn sample_model(
+    model_name: &str,
+    sampler: &str,
+    backend: &str,
+    iters: usize,
+    warmup: usize,
+    n_chains: usize,
+    seed: u64,
+) -> Result<MultiChain, String> {
+    if !ALL_MODELS.contains(&model_name) {
+        return Err(format!("unknown model {model_name:?}"));
+    }
+    let bm = Arc::new(build(model_name, seed));
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let tvi = Arc::new(init_typed(bm.model.as_ref(), &mut rng));
+    let kind = match sampler {
+        "hmc" => SamplerKind::Hmc(Hmc {
+            step_size: bm.step_size,
+            ..Hmc::default()
+        }),
+        "nuts" => SamplerKind::Nuts(Nuts {
+            step_size: bm.step_size,
+            ..Nuts::default()
+        }),
+        "mh" => SamplerKind::RwMh(RwMh::default()),
+        other => return Err(format!("unknown sampler {other:?}")),
+    };
+    let backend = backend.to_string();
+    let chains: Vec<Chain> = parallel_map(
+        default_threads().min(n_chains),
+        n_chains,
+        move |i| -> Chain {
+            let ld: Box<dyn LogDensity> = match backend.as_str() {
+                "xla" => Box::new(
+                    XlaDensity::load(&artifacts_dir(), bm.name, bm.theta_dim, &bm.data)
+                        .expect("artifact load failed (run `make artifacts`)"),
+                ),
+                "tape" => Box::new(NativeDensity::new(
+                    bm.model.as_ref(),
+                    &tvi,
+                    Backend::Reverse,
+                )),
+                "forward" => Box::new(NativeDensity::new(
+                    bm.model.as_ref(),
+                    &tvi,
+                    Backend::Forward,
+                )),
+                "stan" => stanlike_density(&bm) as Box<dyn LogDensity>,
+                other => panic!("unknown backend {other:?}"),
+            };
+            sample_chain(ld.as_ref(), &tvi, &kind, warmup, iters, seed + 1000 * i as u64)
+        },
+    );
+    Ok(MultiChain::new(chains))
+}
+
+fn report_chains(mc: &MultiChain) {
+    let c0 = &mc.chains[0];
+    println!("{}", c0.summary());
+    println!("chains: {}", mc.chains.len());
+    for (i, c) in mc.chains.iter().enumerate() {
+        println!(
+            "  chain {i}: accept={:.2} divergences={} grad_evals={} wall={:.2}s",
+            c.stats.accept_rate, c.stats.divergences, c.stats.n_grad_evals, c.stats.wall_secs
+        );
+    }
+    // R-hat on the first few columns
+    for name in c0.names().iter().take(5) {
+        if let Some(r) = mc.rhat(name) {
+            println!("  R̂[{name}] = {r:.3}");
+        }
+    }
+}
+
+fn cmd_bench(args: &Args) -> i32 {
+    let what = args.positional.first().map(|s| s.as_str()).unwrap_or("table1");
+    match what {
+        "table1" => {
+            let mut cfg = Table1Config::default();
+            if let Some(models) = args.get("models") {
+                cfg.models = models.split(',').map(|s| s.trim().to_string()).collect();
+            }
+            if let Some(backends) = args.get("backends") {
+                cfg.backends = backends
+                    .split(',')
+                    .map(|s| {
+                        BenchBackend::parse(s.trim())
+                            .unwrap_or_else(|| panic!("unknown backend {s:?}"))
+                    })
+                    .collect();
+            }
+            cfg.iters = args.get_parse_or("iters", cfg.iters).unwrap_or(cfg.iters);
+            cfg.reps = args.get_parse_or("reps", cfg.reps).unwrap_or(cfg.reps);
+            cfg.seed = args.get_parse_or("seed", cfg.seed).unwrap_or(cfg.seed);
+            cfg.max_run_iters = args.get_parse::<usize>("max-run").ok().flatten();
+            let cells = run_table1(&cfg);
+            println!("{}", render_table1(&cells, &cfg));
+            0
+        }
+        other => {
+            eprintln!("unknown bench target {other:?} (try: table1)");
+            2
+        }
+    }
+}
+
+/// Query-command registry: the paper's linreg example model plus
+/// gauss_unknown, built from query data bindings.
+pub fn query_registry() -> ModelRegistry {
+    let mut reg = ModelRegistry::new();
+    reg.register("linreg", |data: &Bindings| {
+        let get = |n: &str| data.iter().find(|(k, _)| k == n).map(|(_, v)| v.clone());
+        let dim = match get("dim") {
+            Some(Value::F64(d)) => d as usize,
+            _ => 2,
+        };
+        let x: Vec<Vec<f64>> = match get("X") {
+            Some(Value::Vec(flat)) => flat.chunks(dim).map(|c| c.to_vec()).collect(),
+            _ => vec![],
+        };
+        let y: Vec<f64> = match get("y") {
+            Some(Value::Vec(v)) => v,
+            Some(Value::F64(v)) => vec![v],
+            _ => vec![],
+        };
+        Box::new(QueryLinReg { x, y, dim })
+    });
+    reg.register("gauss_unknown", |data: &Bindings| {
+        let y: Vec<f64> = match data.iter().find(|(k, _)| k == "y").map(|(_, v)| v) {
+            Some(Value::Vec(v)) => v.clone(),
+            Some(Value::F64(v)) => vec![*v],
+            _ => vec![],
+        };
+        Box::new(crate::models::gauss::GaussUnknown { y })
+    });
+    reg
+}
+
+crate::model! {
+    /// The paper's linreg example, data-parameterized for queries.
+    pub QueryLinReg {
+        x: Vec<Vec<f64>>,
+        y: Vec<f64>,
+        dim: usize,
+    }
+    fn body<T>(this, api) {
+        let s = crate::tilde!(api, s ~ InverseGamma(crate::model::macros::c(2.0), crate::model::macros::c(3.0)));
+        let sd = s.sqrt();
+        let w = crate::tilde_vec!(api, w ~ IsoNormal(crate::model::macros::c(0.0), sd, this.dim));
+        for i in 0..this.y.len() {
+            let mut mu = crate::model::macros::c::<T>(0.0);
+            for j in 0..this.dim {
+                mu = mu + w[j] * this.x[i][j];
+            }
+            crate::obs!(api, this.y[i] => Normal(mu, sd));
+        }
+    }
+}
+
+fn cmd_query(args: &Args) -> i32 {
+    let qs = match args.positional.first() {
+        Some(q) => q.clone(),
+        None => {
+            eprintln!("usage: dppl query \"w = [1.0, 0.0], s = 1.0 | model = linreg\"");
+            return 2;
+        }
+    };
+    let q = match Query::parse(&qs) {
+        Ok(q) => q,
+        Err(e) => {
+            eprintln!("parse error: {e}");
+            return 2;
+        }
+    };
+    match eval_query(&q, &query_registry(), None) {
+        Ok(r) => {
+            println!("log-probability = {:.6}", r.log_prob);
+            println!("probability     = {:.6e}", r.prob());
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn usage_mentions_all_commands() {
+        let u = usage();
+        for c in ["list", "sample", "bench", "query", "info"] {
+            assert!(u.contains(c), "{c}");
+        }
+    }
+
+    #[test]
+    fn query_registry_evaluates_paper_example() {
+        let q = Query::parse("w = [1.0, 1.0], s = 1.0 | model = linreg").unwrap();
+        let r = eval_query(&q, &query_registry(), None).unwrap();
+        assert!(r.log_prob.is_finite());
+    }
+
+    #[test]
+    fn sample_model_small_run() {
+        let mc = sample_model("hier_poisson", "hmc", "stan", 100, 100, 2, 9).unwrap();
+        assert_eq!(mc.chains.len(), 2);
+        assert_eq!(mc.chains[0].len(), 100);
+        // a0 should be near 1 (ground truth) — loose check
+        let a0 = mc.mean("a0").unwrap();
+        assert!(a0.is_finite());
+    }
+
+    #[test]
+    fn run_dispatches_unknown_command() {
+        assert_eq!(run(vec!["frobnicate".into()]), 2);
+        assert_eq!(run(vec!["help".into()]), 0);
+    }
+}

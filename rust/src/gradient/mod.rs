@@ -1,0 +1,168 @@
+//! Log-density + gradient backends.
+//!
+//! Samplers only see the [`LogDensity`] trait. Four families implement it:
+//!
+//! - [`NativeDensity`] — model executed through the **typed** trace with a
+//!   Rust AD backend ([`Backend::Forward`] duals or [`Backend::Reverse`]
+//!   tape). The "TypedVarInfo + Julia AD" configuration of the paper.
+//! - [`UntypedDensity`] — same, through the boxed trace: the
+//!   pre-specialization configuration.
+//! - `XlaDensity` (in [`crate::runtime`]) — the AOT-compiled artifact:
+//!   this reproduction's "Stan-like machine code" path.
+//! - [`FnDensity`] — closures; used for the hand-coded Stan-baseline
+//!   models in [`crate::stanlike`] and for tests.
+
+use crate::context::Context;
+use crate::model::{
+    typed_grad_forward, typed_grad_reverse, typed_logp, untyped_grad_forward,
+    untyped_grad_reverse, untyped_logp, Model,
+};
+use crate::varinfo::{TypedVarInfo, UntypedVarInfo};
+
+/// A differentiable target density over unconstrained ℝⁿ.
+pub trait LogDensity: Sync {
+    fn dim(&self) -> usize;
+    fn logp(&self, theta: &[f64]) -> f64;
+    /// Value and gradient.
+    fn logp_grad(&self, theta: &[f64]) -> (f64, Vec<f64>);
+}
+
+/// Which Rust AD engine a native density uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Forward duals: n passes per gradient (ForwardDiff.jl analogue).
+    Forward,
+    /// Reverse tape: one pass, per-op heap nodes (Tracker.jl analogue).
+    Reverse,
+}
+
+/// Model + typed trace + Rust AD.
+pub struct NativeDensity<'a> {
+    pub model: &'a dyn Model,
+    pub tvi: &'a TypedVarInfo,
+    pub ctx: Context,
+    pub backend: Backend,
+}
+
+impl<'a> NativeDensity<'a> {
+    pub fn new(model: &'a dyn Model, tvi: &'a TypedVarInfo, backend: Backend) -> Self {
+        Self {
+            model,
+            tvi,
+            ctx: Context::Default,
+            backend,
+        }
+    }
+}
+
+impl<'a> LogDensity for NativeDensity<'a> {
+    fn dim(&self) -> usize {
+        self.tvi.dim()
+    }
+
+    fn logp(&self, theta: &[f64]) -> f64 {
+        typed_logp(self.model, self.tvi, theta, self.ctx)
+    }
+
+    fn logp_grad(&self, theta: &[f64]) -> (f64, Vec<f64>) {
+        match self.backend {
+            Backend::Forward => typed_grad_forward(self.model, self.tvi, theta, self.ctx),
+            Backend::Reverse => typed_grad_reverse(self.model, self.tvi, theta, self.ctx),
+        }
+    }
+}
+
+/// Model + boxed trace + Rust AD: the dynamic, pre-specialization path.
+pub struct UntypedDensity<'a> {
+    pub model: &'a dyn Model,
+    pub vi: &'a UntypedVarInfo,
+    pub ctx: Context,
+    pub backend: Backend,
+}
+
+impl<'a> UntypedDensity<'a> {
+    pub fn new(model: &'a dyn Model, vi: &'a UntypedVarInfo, backend: Backend) -> Self {
+        Self {
+            model,
+            vi,
+            ctx: Context::Default,
+            backend,
+        }
+    }
+}
+
+impl<'a> LogDensity for UntypedDensity<'a> {
+    fn dim(&self) -> usize {
+        self.vi.num_unconstrained()
+    }
+
+    fn logp(&self, theta: &[f64]) -> f64 {
+        untyped_logp(self.model, self.vi, theta, self.ctx)
+    }
+
+    fn logp_grad(&self, theta: &[f64]) -> (f64, Vec<f64>) {
+        match self.backend {
+            Backend::Forward => untyped_grad_forward(self.model, self.vi, theta, self.ctx),
+            Backend::Reverse => untyped_grad_reverse(self.model, self.vi, theta, self.ctx),
+        }
+    }
+}
+
+/// Closure-backed density (hand-coded models, test fixtures).
+pub struct FnDensity<F, G>
+where
+    F: Fn(&[f64]) -> f64 + Sync,
+    G: Fn(&[f64]) -> (f64, Vec<f64>) + Sync,
+{
+    pub dim: usize,
+    pub f: F,
+    pub g: G,
+}
+
+impl<F, G> LogDensity for FnDensity<F, G>
+where
+    F: Fn(&[f64]) -> f64 + Sync,
+    G: Fn(&[f64]) -> (f64, Vec<f64>) + Sync,
+{
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn logp(&self, theta: &[f64]) -> f64 {
+        (self.f)(theta)
+    }
+
+    fn logp_grad(&self, theta: &[f64]) -> (f64, Vec<f64>) {
+        (self.g)(theta)
+    }
+}
+
+/// Standard-normal test target.
+pub fn std_normal_density(dim: usize) -> impl LogDensity {
+    FnDensity {
+        dim,
+        f: move |th: &[f64]| -0.5 * th.iter().map(|x| x * x).sum::<f64>(),
+        g: move |th: &[f64]| {
+            (
+                -0.5 * th.iter().map(|x| x * x).sum::<f64>(),
+                th.iter().map(|x| -x).collect(),
+            )
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fn_density_roundtrip() {
+        let d = std_normal_density(3);
+        assert_eq!(d.dim(), 3);
+        let th = [1.0, -2.0, 0.5];
+        assert!((d.logp(&th) + 0.5 * 5.25).abs() < 1e-12);
+        let (v, g) = d.logp_grad(&th);
+        assert_eq!(v, d.logp(&th));
+        assert_eq!(g, vec![-1.0, 2.0, -0.5]);
+    }
+}

@@ -1,0 +1,160 @@
+//! Warmup adaptation: dual-averaging step-size (Nesterov 2009, as used by
+//! Stan and AdvancedHMC) and diagonal mass-matrix estimation (Welford).
+
+/// Dual-averaging step-size adaptation targeting an acceptance statistic.
+#[derive(Clone, Debug)]
+pub struct DualAveraging {
+    pub target_accept: f64,
+    mu: f64,
+    log_eps: f64,
+    log_eps_bar: f64,
+    h_bar: f64,
+    t: u64,
+    gamma: f64,
+    t0: f64,
+    kappa: f64,
+}
+
+impl DualAveraging {
+    pub fn new(eps0: f64, target_accept: f64) -> Self {
+        Self {
+            target_accept,
+            mu: (10.0 * eps0).ln(),
+            log_eps: eps0.ln(),
+            log_eps_bar: 0.0,
+            h_bar: 0.0,
+            t: 0,
+            gamma: 0.05,
+            t0: 10.0,
+            kappa: 0.75,
+        }
+    }
+
+    /// Update with the iteration's acceptance probability; returns the new
+    /// step size to use next iteration.
+    pub fn update(&mut self, accept_prob: f64) -> f64 {
+        self.t += 1;
+        let t = self.t as f64;
+        let eta = 1.0 / (t + self.t0);
+        self.h_bar = (1.0 - eta) * self.h_bar + eta * (self.target_accept - accept_prob);
+        self.log_eps = self.mu - t.sqrt() / self.gamma * self.h_bar;
+        let x_eta = t.powf(-self.kappa);
+        self.log_eps_bar = x_eta * self.log_eps + (1.0 - x_eta) * self.log_eps_bar;
+        self.log_eps.exp()
+    }
+
+    /// Current (adapting) step size.
+    pub fn current(&self) -> f64 {
+        self.log_eps.exp()
+    }
+
+    /// Smoothed step size to freeze after warmup.
+    pub fn finalized(&self) -> f64 {
+        self.log_eps_bar.exp()
+    }
+}
+
+/// Streaming diagonal (co)variance estimator for mass-matrix adaptation.
+#[derive(Clone, Debug)]
+pub struct WelfordVar {
+    n: u64,
+    mean: Vec<f64>,
+    m2: Vec<f64>,
+}
+
+impl WelfordVar {
+    pub fn new(dim: usize) -> Self {
+        Self {
+            n: 0,
+            mean: vec![0.0; dim],
+            m2: vec![0.0; dim],
+        }
+    }
+
+    pub fn push(&mut self, x: &[f64]) {
+        self.n += 1;
+        let n = self.n as f64;
+        for i in 0..x.len() {
+            let d = x[i] - self.mean[i];
+            self.mean[i] += d / n;
+            self.m2[i] += d * (x[i] - self.mean[i]);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Regularized variance estimate (Stan's shrinkage toward unit).
+    pub fn variance(&self) -> Vec<f64> {
+        let n = self.n as f64;
+        if self.n < 2 {
+            return vec![1.0; self.mean.len()];
+        }
+        let w = n / (n + 5.0);
+        self.m2
+            .iter()
+            .map(|&m2| (w * m2 / (n - 1.0) + (1.0 - w) * 1e-3).max(1e-10))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dual_averaging_raises_eps_when_overaccepting() {
+        let mut da = DualAveraging::new(0.1, 0.8);
+        for _ in 0..100 {
+            da.update(1.0); // always accepting → step too small
+        }
+        assert!(da.finalized() > 0.1);
+    }
+
+    #[test]
+    fn dual_averaging_lowers_eps_when_rejecting() {
+        let mut da = DualAveraging::new(0.1, 0.8);
+        for _ in 0..100 {
+            da.update(0.0);
+        }
+        assert!(da.finalized() < 0.1);
+    }
+
+    #[test]
+    fn dual_averaging_converges_near_target() {
+        // Toy response: accept prob decreases with eps as exp(-eps).
+        let mut da = DualAveraging::new(1.0, 0.65);
+        let mut eps: f64 = 1.0;
+        for _ in 0..2000 {
+            let acc = (-eps).exp();
+            eps = da.update(acc);
+        }
+        let fin = da.finalized();
+        assert!(
+            ((-fin).exp() - 0.65).abs() < 0.05,
+            "converged eps {fin} gives accept {}",
+            (-fin).exp()
+        );
+    }
+
+    #[test]
+    fn welford_variance() {
+        let mut w = WelfordVar::new(2);
+        // stream with var [4, 0.25]
+        let mut rng = crate::util::rng::Xoshiro256pp::seed_from_u64(5);
+        use crate::util::rng::Rng;
+        for _ in 0..20000 {
+            w.push(&[2.0 * rng.normal(), 0.5 * rng.normal() + 3.0]);
+        }
+        let v = w.variance();
+        assert!((v[0] - 4.0).abs() < 0.3, "{v:?}");
+        assert!((v[1] - 0.25).abs() < 0.05, "{v:?}");
+    }
+
+    #[test]
+    fn welford_regularizes_small_samples() {
+        let w = WelfordVar::new(3);
+        assert_eq!(w.variance(), vec![1.0, 1.0, 1.0]);
+    }
+}

@@ -1,0 +1,338 @@
+//! Blocked Gibbs sampling over the typed trace.
+//!
+//! Each [`GibbsBlock`] owns a subset of `VarName`s and a within-block
+//! sampler; one Gibbs sweep updates every block from its full conditional
+//! (∝ the joint, with the other blocks held fixed). Discrete variables are
+//! updated by exact enumeration of their support — the combination
+//! (HMC-within-Gibbs over continuous blocks + enumeration of discrete ones)
+//! is the Turing idiom the paper's §3.2 mentions ("HMC within Gibbs").
+
+use rand_core::RngCore;
+
+use crate::chain::SamplerStats;
+use crate::context::Context;
+use crate::dist::Domain;
+use crate::model::{typed_grad_forward, typed_grad_reverse, typed_logp, Model};
+use crate::util::rng::Rng;
+use crate::varinfo::TypedVarInfo;
+use crate::varname::VarName;
+
+/// Within-block sampler.
+#[derive(Clone, Debug)]
+pub enum BlockSampler {
+    /// Random-walk MH on the block's unconstrained coordinates.
+    RwMh { scale: f64 },
+    /// Static HMC on the block (other coordinates' gradient masked).
+    Hmc { step_size: f64, n_leapfrog: usize },
+    /// Exact enumeration (categorical/bool supports only).
+    Enumerate,
+}
+
+/// One Gibbs block: which variables it owns + how it updates them.
+#[derive(Clone, Debug)]
+pub struct GibbsBlock {
+    pub vars: Vec<VarName>,
+    pub sampler: BlockSampler,
+}
+
+impl GibbsBlock {
+    pub fn rwmh(vars: &[&str], scale: f64) -> Self {
+        Self {
+            vars: vars.iter().map(|v| VarName::new(v)).collect(),
+            sampler: BlockSampler::RwMh { scale },
+        }
+    }
+
+    pub fn hmc(vars: &[&str], step_size: f64, n_leapfrog: usize) -> Self {
+        Self {
+            vars: vars.iter().map(|v| VarName::new(v)).collect(),
+            sampler: BlockSampler::Hmc {
+                step_size,
+                n_leapfrog,
+            },
+        }
+    }
+
+    pub fn enumerate(vars: &[&str]) -> Self {
+        Self {
+            vars: vars.iter().map(|v| VarName::new(v)).collect(),
+            sampler: BlockSampler::Enumerate,
+        }
+    }
+}
+
+/// AD backend for HMC blocks.
+#[derive(Clone, Copy, Debug)]
+pub enum GibbsGrad {
+    Forward,
+    Reverse,
+}
+
+/// Blocked Gibbs sampler.
+#[derive(Clone, Debug)]
+pub struct Gibbs {
+    pub blocks: Vec<GibbsBlock>,
+    pub grad: GibbsGrad,
+}
+
+/// Gibbs output: constrained rows (continuous + discrete, in
+/// `TypedVarInfo::row` order) plus per-sweep log-density.
+#[derive(Clone, Debug)]
+pub struct GibbsDraws {
+    pub rows: Vec<Vec<f64>>,
+    pub logps: Vec<f64>,
+    pub stats: SamplerStats,
+}
+
+impl Gibbs {
+    pub fn new(blocks: Vec<GibbsBlock>) -> Self {
+        Self {
+            blocks,
+            grad: GibbsGrad::Forward,
+        }
+    }
+
+    pub fn sample<R: RngCore>(
+        &self,
+        model: &dyn Model,
+        tvi0: &TypedVarInfo,
+        warmup: usize,
+        iters: usize,
+        rng: &mut R,
+    ) -> GibbsDraws {
+        let t_start = std::time::Instant::now();
+        let mut tvi = tvi0.clone();
+        let mut theta = tvi.unconstrained.clone();
+        let mut lp = typed_logp(model, &tvi, &theta, Context::Default);
+        assert!(lp.is_finite(), "Gibbs initialized at zero-probability point");
+
+        // Resolve blocks to coordinate index sets / discrete slots.
+        let mut cont_blocks: Vec<(usize, Vec<usize>)> = Vec::new(); // (block idx, θ coords)
+        let mut disc_blocks: Vec<(usize, Vec<usize>)> = Vec::new(); // (block idx, slot idx)
+        for (bi, block) in self.blocks.iter().enumerate() {
+            let mut coords = Vec::new();
+            let mut slots = Vec::new();
+            for (si, slot) in tvi.slots().iter().enumerate() {
+                if block.vars.iter().any(|v| slot.vn.subsumed_by(v)) {
+                    if slot.domain.is_discrete() {
+                        slots.push(si);
+                    } else {
+                        coords.extend(slot.unc_offset..slot.unc_offset + slot.unc_len);
+                    }
+                }
+            }
+            assert!(
+                !(coords.is_empty() && slots.is_empty()),
+                "Gibbs block {bi} matches no variables"
+            );
+            if matches!(block.sampler, BlockSampler::Enumerate) {
+                assert!(coords.is_empty(), "Enumerate block over continuous vars");
+                disc_blocks.push((bi, slots));
+            } else {
+                assert!(slots.is_empty(), "continuous sampler over discrete vars");
+                cont_blocks.push((bi, coords));
+            }
+        }
+
+        let mut rows = Vec::with_capacity(iters);
+        let mut logps = Vec::with_capacity(iters);
+        let mut accepts = 0.0;
+        let mut proposals = 0.0;
+        let mut n_grad = 0u64;
+
+        for it in 0..warmup + iters {
+            // continuous blocks
+            for (bi, coords) in &cont_blocks {
+                match self.blocks[*bi].sampler {
+                    BlockSampler::RwMh { scale } => {
+                        let mut prop = theta.clone();
+                        for &c in coords {
+                            prop[c] += scale * rng.normal();
+                        }
+                        let lp_prop = typed_logp(model, &tvi, &prop, Context::Default);
+                        proposals += 1.0;
+                        if lp_prop.is_finite() && rng.uniform_pos().ln() < lp_prop - lp {
+                            theta = prop;
+                            lp = lp_prop;
+                            accepts += 1.0;
+                        }
+                    }
+                    BlockSampler::Hmc {
+                        step_size,
+                        n_leapfrog,
+                    } => {
+                        let grad_fn = |th: &[f64]| -> (f64, Vec<f64>) {
+                            match self.grad {
+                                GibbsGrad::Forward => {
+                                    typed_grad_forward(model, &tvi, th, Context::Default)
+                                }
+                                GibbsGrad::Reverse => {
+                                    typed_grad_reverse(model, &tvi, th, Context::Default)
+                                }
+                            }
+                        };
+                        let (lp0, mut grad) = grad_fn(&theta);
+                        n_grad += 1;
+                        let mut prop = theta.clone();
+                        let mut p: Vec<f64> = coords.iter().map(|_| rng.normal()).collect();
+                        let ke0: f64 = 0.5 * p.iter().map(|x| x * x).sum::<f64>();
+                        let h0 = -lp0 + ke0;
+                        let mut lp_prop = lp0;
+                        let mut ok = true;
+                        for _ in 0..n_leapfrog {
+                            for (j, &c) in coords.iter().enumerate() {
+                                p[j] += 0.5 * step_size * grad[c];
+                                prop[c] += step_size * p[j];
+                            }
+                            let (l, g) = grad_fn(&prop);
+                            n_grad += 1;
+                            lp_prop = l;
+                            grad = g;
+                            if !l.is_finite() {
+                                ok = false;
+                                break;
+                            }
+                            for (j, &c) in coords.iter().enumerate() {
+                                p[j] += 0.5 * step_size * grad[c];
+                            }
+                        }
+                        proposals += 1.0;
+                        if ok {
+                            let ke1: f64 = 0.5 * p.iter().map(|x| x * x).sum::<f64>();
+                            let h1 = -lp_prop + ke1;
+                            if rng.uniform_pos().ln() < h0 - h1 {
+                                theta = prop;
+                                lp = lp_prop;
+                                accepts += 1.0;
+                            }
+                        }
+                    }
+                    BlockSampler::Enumerate => unreachable!(),
+                }
+            }
+
+            // discrete blocks: exact full-conditional draws
+            for (_, slots) in &disc_blocks {
+                for &si in slots {
+                    let slot = tvi.slots()[si].clone();
+                    let support: Vec<i64> = match slot.domain {
+                        Domain::DiscreteCategory(k) => (0..k as i64).collect(),
+                        Domain::DiscreteBool => vec![0, 1],
+                        ref d => panic!("cannot enumerate domain {d:?}"),
+                    };
+                    let mut logw = Vec::with_capacity(support.len());
+                    for &k in &support {
+                        tvi.discrete[slot.disc_offset] = k;
+                        logw.push(typed_logp(model, &tvi, &theta, Context::Default));
+                    }
+                    let z = crate::util::math::log_sum_exp(&logw);
+                    let probs: Vec<f64> = logw.iter().map(|&l| (l - z).exp()).collect();
+                    let pick = rng.categorical(&probs);
+                    tvi.discrete[slot.disc_offset] = support[pick];
+                    lp = logw[pick];
+                }
+            }
+
+            if it >= warmup {
+                tvi.set_unconstrained(&theta);
+                rows.push(tvi.row());
+                logps.push(lp);
+            }
+        }
+
+        GibbsDraws {
+            rows,
+            logps,
+            stats: SamplerStats {
+                accept_rate: if proposals > 0.0 {
+                    accepts / proposals
+                } else {
+                    1.0
+                },
+                divergences: 0,
+                step_size: 0.0,
+                n_grad_evals: n_grad,
+                wall_secs: t_start.elapsed().as_secs_f64(),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init_typed;
+    use crate::prelude::*;
+    use crate::util::stats;
+
+    model! {
+        /// Conjugate normal with unknown mean and variance.
+        pub GaussUnknown {
+            y: Vec<f64>,
+        }
+        fn body<T>(this, api) {
+            let var = tilde!(api, var ~ InverseGamma(c(2.0), c(3.0)));
+            let m = tilde!(api, m ~ Normal(c(0.0), (var * 2.0).sqrt()));
+            let sd = var.sqrt();
+            for &yi in &this.y {
+                obs!(api, yi => Normal(m, sd));
+            }
+        }
+    }
+
+    model! {
+        /// Two-component mixture with a discrete assignment parameter.
+        pub TinyMixture {
+            y: f64,
+        }
+        fn body<T>(this, api) {
+            let z = tilde_int!(api, z ~ Bernoulli(c(0.3)));
+            let mu = if z == 1 { 3.0 } else { -3.0 };
+            obs!(api, this.y => Normal(c(mu), c(1.0)));
+        }
+    }
+
+    #[test]
+    fn gibbs_mixes_continuous_blocks() {
+        let mut rng = Xoshiro256pp::seed_from_u64(21);
+        let y: Vec<f64> = (0..200).map(|_| 1.5 + 0.7 * rng.normal()).collect();
+        let m = GaussUnknown { y };
+        let tvi = init_typed(&m, &mut rng);
+        let gibbs = Gibbs::new(vec![
+            GibbsBlock::rwmh(&["var"], 0.3),
+            GibbsBlock::hmc(&["m"], 0.05, 8),
+        ]);
+        let out = gibbs.sample(&m, &tvi, 1500, 6000, &mut rng);
+        // column order: var, m
+        let means: Vec<f64> = out.rows.iter().map(|r| r[1]).collect();
+        assert!((stats::mean(&means) - 1.5).abs() < 0.1, "{}", stats::mean(&means));
+        let vars: Vec<f64> = out.rows.iter().map(|r| r[0]).collect();
+        assert!((stats::mean(&vars) - 0.49).abs() < 0.25, "{}", stats::mean(&vars));
+    }
+
+    #[test]
+    fn gibbs_enumerates_discrete_exactly() {
+        let m = TinyMixture { y: 2.0 };
+        let mut rng = Xoshiro256pp::seed_from_u64(22);
+        let tvi = init_typed(&m, &mut rng);
+        let gibbs = Gibbs::new(vec![GibbsBlock::enumerate(&["z"])]);
+        let out = gibbs.sample(&m, &tvi, 200, 4000, &mut rng);
+        // posterior P(z=1|y=2) by Bayes
+        let l1 = 0.3 * (-0.5f64).exp(); // N(2;3,1) ∝ exp(-0.5)
+        let l0 = 0.7 * (-12.5f64).exp(); // N(2;-3,1) ∝ exp(-12.5)
+        let expect = l1 / (l1 + l0);
+        let freq: f64 =
+            out.rows.iter().map(|r| r[0]).sum::<f64>() / out.rows.len() as f64;
+        assert!((freq - expect).abs() < 0.03, "{freq} vs {expect}");
+    }
+
+    #[test]
+    #[should_panic(expected = "matches no variables")]
+    fn unknown_block_var_panics() {
+        let m = TinyMixture { y: 0.0 };
+        let mut rng = Xoshiro256pp::seed_from_u64(23);
+        let tvi = init_typed(&m, &mut rng);
+        let gibbs = Gibbs::new(vec![GibbsBlock::rwmh(&["nope"], 0.1)]);
+        let _ = gibbs.sample(&m, &tvi, 1, 1, &mut rng);
+    }
+}

@@ -1,0 +1,343 @@
+//! Static Hamiltonian Monte Carlo — the paper's benchmark sampler
+//! ("static HMC with 4 leapfrog steps for 2,000 iterations").
+
+use rand_core::RngCore;
+
+use crate::chain::SamplerStats;
+use crate::gradient::LogDensity;
+use crate::util::rng::Rng;
+
+use super::adapt::{DualAveraging, WelfordVar};
+use super::RawDraws;
+
+/// Static HMC configuration.
+#[derive(Clone, Debug)]
+pub struct Hmc {
+    /// Leapfrog step size ε (initial value if `adapt_step_size`).
+    pub step_size: f64,
+    /// Number of leapfrog steps per proposal (paper: 4).
+    pub n_leapfrog: usize,
+    /// Adapt ε by dual averaging during warmup.
+    pub adapt_step_size: bool,
+    /// Adapt a diagonal mass matrix during warmup.
+    pub adapt_mass: bool,
+    /// Dual-averaging target acceptance.
+    pub target_accept: f64,
+}
+
+impl Default for Hmc {
+    fn default() -> Self {
+        Self {
+            step_size: 0.1,
+            n_leapfrog: 4,
+            adapt_step_size: true,
+            adapt_mass: false,
+            target_accept: 0.8,
+        }
+    }
+}
+
+impl Hmc {
+    /// Paper configuration: fixed ε, 4 leapfrog steps, no adaptation.
+    pub fn paper(step_size: f64) -> Self {
+        Self {
+            step_size,
+            n_leapfrog: 4,
+            adapt_step_size: false,
+            adapt_mass: false,
+            target_accept: 0.8,
+        }
+    }
+
+    /// Draw `iters` post-warmup samples starting at `theta0` (unconstrained).
+    ///
+    /// Total model evaluations: `(warmup + iters) × (n_leapfrog + 1)` grad
+    /// calls — the quantity the Table-1 benchmarks time.
+    pub fn sample<R: RngCore>(
+        &self,
+        ld: &dyn LogDensity,
+        theta0: &[f64],
+        warmup: usize,
+        iters: usize,
+        rng: &mut R,
+    ) -> RawDraws {
+        let dim = ld.dim();
+        assert_eq!(theta0.len(), dim);
+        let t_start = std::time::Instant::now();
+
+        let mut theta = theta0.to_vec();
+        let (mut lp, mut grad) = ld.logp_grad(&theta);
+        assert!(
+            lp.is_finite(),
+            "HMC initialized at a zero-probability point (logp = {lp})"
+        );
+        let mut n_grad: u64 = 1;
+
+        let mut eps = self.step_size;
+        let mut da = DualAveraging::new(eps, self.target_accept);
+        let mut mass_est = WelfordVar::new(dim);
+        // inv_mass[i] = estimated posterior variance of coordinate i
+        let mut inv_mass: Vec<f64> = vec![1.0; dim];
+
+        let mut thetas = Vec::with_capacity(iters);
+        let mut logps = Vec::with_capacity(iters);
+        let mut accepts = 0.0f64;
+        let mut divergences = 0usize;
+
+        // scratch buffers reused across iterations (no allocation in the
+        // hot loop — see EXPERIMENTS.md §Perf)
+        let mut p = vec![0.0; dim];
+        let mut theta_prop = vec![0.0; dim];
+        let mut grad_prop = vec![0.0; dim];
+
+        for it in 0..warmup + iters {
+            // momentum ~ N(0, M) with M = diag(1/inv_mass)
+            for i in 0..dim {
+                p[i] = rng.normal() / inv_mass[i].sqrt();
+            }
+            // kinetic energy: ½ pᵀ M⁻¹ p
+            let ke0: f64 = 0.5
+                * p.iter()
+                    .zip(&inv_mass)
+                    .map(|(&pi, &im)| pi * pi * im)
+                    .sum::<f64>();
+            let h0 = -lp + ke0;
+
+            theta_prop.copy_from_slice(&theta);
+            grad_prop.copy_from_slice(&grad);
+            let mut lp_prop = lp;
+            let mut diverged = false;
+
+            // leapfrog trajectory
+            for _ in 0..self.n_leapfrog {
+                for i in 0..dim {
+                    p[i] += 0.5 * eps * grad_prop[i];
+                    theta_prop[i] += eps * p[i] * inv_mass[i];
+                }
+                let (l, g) = ld.logp_grad(&theta_prop);
+                n_grad += 1;
+                lp_prop = l;
+                grad_prop.copy_from_slice(&g);
+                if !l.is_finite() {
+                    diverged = true;
+                    break;
+                }
+                for i in 0..dim {
+                    p[i] += 0.5 * eps * grad_prop[i];
+                }
+            }
+
+            let accept_prob = if diverged {
+                0.0
+            } else {
+                let ke1: f64 = 0.5
+                    * p.iter()
+                        .zip(&inv_mass)
+                        .map(|(&pi, &im)| pi * pi * im)
+                        .sum::<f64>();
+                let h1 = -lp_prop + ke1;
+                if (h1 - h0) > 1000.0 {
+                    divergences += 1;
+                }
+                ((h0 - h1).exp()).min(1.0)
+            };
+            if diverged {
+                divergences += 1;
+            }
+
+            if rng.uniform() < accept_prob {
+                std::mem::swap(&mut theta, &mut theta_prop);
+                std::mem::swap(&mut grad, &mut grad_prop);
+                lp = lp_prop;
+            }
+
+            if it < warmup {
+                if self.adapt_step_size {
+                    eps = da.update(accept_prob);
+                }
+                if self.adapt_mass {
+                    mass_est.push(&theta);
+                    if mass_est.count() > 50 {
+                        inv_mass = mass_est.variance();
+                    }
+                }
+                if it + 1 == warmup && self.adapt_step_size {
+                    eps = da.finalized();
+                }
+            } else {
+                accepts += accept_prob;
+                thetas.push(theta.clone());
+                logps.push(lp);
+            }
+        }
+
+        RawDraws {
+            thetas,
+            logps,
+            stats: SamplerStats {
+                accept_rate: if iters > 0 { accepts / iters as f64 } else { 0.0 },
+                divergences,
+                step_size: eps,
+                n_grad_evals: n_grad,
+                wall_secs: t_start.elapsed().as_secs_f64(),
+            },
+        }
+    }
+}
+
+/// Static HMC over the fused XLA trajectory artifact (§Perf): identical
+/// proposal distribution to [`Hmc::paper`] with identity mass, but each
+/// iteration is **one** PJRT call instead of `n_leapfrog + 1`.
+pub struct HmcFusedXla<'a> {
+    pub traj: &'a crate::runtime::XlaTrajectory,
+    /// plain value_and_grad artifact, used once for the initial log-density
+    pub vg: &'a crate::runtime::XlaDensity,
+    pub step_size: f64,
+}
+
+impl<'a> HmcFusedXla<'a> {
+    pub fn sample<R: RngCore>(
+        &self,
+        theta0: &[f64],
+        warmup: usize,
+        iters: usize,
+        rng: &mut R,
+    ) -> RawDraws {
+        let dim = self.traj.dim();
+        let t_start = std::time::Instant::now();
+        let mut theta = theta0.to_vec();
+        let (mut lp, mut grad) = self.vg.logp_grad(&theta);
+        assert!(lp.is_finite(), "fused HMC initialized at logp = {lp}");
+
+        let mut thetas = Vec::with_capacity(iters);
+        let mut logps = Vec::with_capacity(iters);
+        let mut accepts = 0.0;
+        let mut divergences = 0usize;
+        let mut p = vec![0.0; dim];
+        let mut theta_prop = vec![0.0; dim];
+        let mut grad_prop = vec![0.0; dim];
+        let mut n_traj = 0u64;
+
+        for it in 0..warmup + iters {
+            for pi in p.iter_mut() {
+                *pi = rng.normal();
+            }
+            let ke0: f64 = 0.5 * p.iter().map(|x| x * x).sum::<f64>();
+            let h0 = -lp + ke0;
+            theta_prop.copy_from_slice(&theta);
+            grad_prop.copy_from_slice(&grad);
+            // one PJRT call runs the whole trajectory; the gradient is
+            // threaded through so each iteration costs exactly n_leapfrog
+            // gradient evaluations, like the unfused sampler
+            let lp_prop = self
+                .traj
+                .run(&mut theta_prop, &mut p, self.step_size, &mut grad_prop)
+                .expect("trajectory execution failed");
+            n_traj += 1;
+            let accept_prob = if lp_prop.is_finite() {
+                let ke1: f64 = 0.5 * p.iter().map(|x| x * x).sum::<f64>();
+                ((h0 - (-lp_prop + ke1)).exp()).min(1.0)
+            } else {
+                divergences += 1;
+                0.0
+            };
+            if rng.uniform() < accept_prob {
+                std::mem::swap(&mut theta, &mut theta_prop);
+                std::mem::swap(&mut grad, &mut grad_prop);
+                lp = lp_prop;
+            }
+            if it >= warmup {
+                accepts += accept_prob;
+                thetas.push(theta.clone());
+                logps.push(lp);
+            }
+        }
+
+        RawDraws {
+            thetas,
+            logps,
+            stats: SamplerStats {
+                accept_rate: if iters > 0 { accepts / iters as f64 } else { 0.0 },
+                divergences,
+                step_size: self.step_size,
+                n_grad_evals: n_traj * 4,
+                wall_secs: t_start.elapsed().as_secs_f64(),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gradient::{std_normal_density, FnDensity};
+    use crate::util::rng::Xoshiro256pp;
+    use crate::util::stats;
+
+    #[test]
+    fn std_normal_moments() {
+        let ld = std_normal_density(3);
+        let mut rng = Xoshiro256pp::seed_from_u64(42);
+        let hmc = Hmc::default();
+        let out = hmc.sample(&ld, &[0.5, -0.5, 0.0], 500, 4000, &mut rng);
+        assert_eq!(out.thetas.len(), 4000);
+        for i in 0..3 {
+            let col: Vec<f64> = out.thetas.iter().map(|t| t[i]).collect();
+            assert!(stats::mean(&col).abs() < 0.1, "dim {i}");
+            assert!((stats::variance(&col) - 1.0).abs() < 0.15, "dim {i}");
+        }
+        assert!(out.stats.accept_rate > 0.6);
+    }
+
+    #[test]
+    fn correlated_target_with_mass_adaptation() {
+        // N(0, diag(100, 0.01)): needs mass adaptation to mix both dims
+        let ld = FnDensity {
+            dim: 2,
+            f: |t: &[f64]| -0.5 * (t[0] * t[0] / 100.0 + t[1] * t[1] / 0.01),
+            g: |t: &[f64]| {
+                (
+                    -0.5 * (t[0] * t[0] / 100.0 + t[1] * t[1] / 0.01),
+                    vec![-t[0] / 100.0, -t[1] / 0.01],
+                )
+            },
+        };
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let hmc = Hmc {
+            n_leapfrog: 16,
+            adapt_mass: true,
+            ..Hmc::default()
+        };
+        let out = hmc.sample(&ld, &[1.0, 0.01], 1500, 6000, &mut rng);
+        let c0: Vec<f64> = out.thetas.iter().map(|t| t[0]).collect();
+        let c1: Vec<f64> = out.thetas.iter().map(|t| t[1]).collect();
+        assert!((stats::variance(&c0) - 100.0).abs() < 30.0, "{}", stats::variance(&c0));
+        assert!((stats::variance(&c1) - 0.01).abs() < 0.004, "{}", stats::variance(&c1));
+    }
+
+    #[test]
+    fn paper_config_runs_fixed_eps() {
+        let ld = std_normal_density(2);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let hmc = Hmc::paper(0.3);
+        let out = hmc.sample(&ld, &[0.0, 0.0], 0, 500, &mut rng);
+        assert_eq!(out.stats.step_size, 0.3);
+        assert_eq!(out.thetas.len(), 500);
+        // grad evals: ≤ (0 + 500) × 4 + 1 initial (divergent trajectories
+        // break the leapfrog loop early)
+        assert!(out.stats.n_grad_evals <= 500 * 4 + 1);
+        assert!(out.stats.n_grad_evals > 500 * 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero-probability")]
+    fn rejects_invalid_init() {
+        let ld = FnDensity {
+            dim: 1,
+            f: |_: &[f64]| f64::NEG_INFINITY,
+            g: |_: &[f64]| (f64::NEG_INFINITY, vec![0.0]),
+        };
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        Hmc::default().sample(&ld, &[0.0], 10, 10, &mut rng);
+    }
+}

@@ -1,0 +1,133 @@
+//! Random-walk Metropolis–Hastings over unconstrained coordinates.
+//! Gradient-free: exercises the pure log-density path (and is the
+//! within-block sampler for Gibbs).
+
+use rand_core::RngCore;
+
+use crate::chain::SamplerStats;
+use crate::gradient::LogDensity;
+use crate::util::rng::Rng;
+
+use super::RawDraws;
+
+/// Random-walk MH with isotropic Gaussian proposals.
+#[derive(Clone, Debug)]
+pub struct RwMh {
+    /// Proposal standard deviation.
+    pub scale: f64,
+    /// Adapt the scale toward 23.4% acceptance during warmup.
+    pub adapt_scale: bool,
+}
+
+impl Default for RwMh {
+    fn default() -> Self {
+        Self {
+            scale: 0.5,
+            adapt_scale: true,
+        }
+    }
+}
+
+impl RwMh {
+    pub fn new(scale: f64) -> Self {
+        Self {
+            scale,
+            adapt_scale: true,
+        }
+    }
+
+    pub fn sample<R: RngCore>(
+        &self,
+        ld: &dyn LogDensity,
+        theta0: &[f64],
+        warmup: usize,
+        iters: usize,
+        rng: &mut R,
+    ) -> RawDraws {
+        let dim = ld.dim();
+        let t_start = std::time::Instant::now();
+        let mut theta = theta0.to_vec();
+        let mut lp = ld.logp(&theta);
+        assert!(lp.is_finite(), "MH initialized at zero-probability point");
+
+        let mut scale = self.scale;
+        let mut thetas = Vec::with_capacity(iters);
+        let mut logps = Vec::with_capacity(iters);
+        let mut accepts = 0usize;
+        let mut prop = vec![0.0; dim];
+
+        for it in 0..warmup + iters {
+            for i in 0..dim {
+                prop[i] = theta[i] + scale * rng.normal();
+            }
+            let lp_prop = ld.logp(&prop);
+            let accepted = lp_prop.is_finite() && rng.uniform_pos().ln() < lp_prop - lp;
+            if accepted {
+                theta.copy_from_slice(&prop);
+                lp = lp_prop;
+            }
+            if it < warmup {
+                if self.adapt_scale {
+                    // Robbins–Monro toward 0.234 acceptance
+                    let acc = if accepted { 1.0 } else { 0.0 };
+                    let eta = (it as f64 + 10.0).powf(-0.6);
+                    scale = (scale.ln() + eta * (acc - 0.234)).exp();
+                }
+            } else {
+                if accepted {
+                    accepts += 1;
+                }
+                thetas.push(theta.clone());
+                logps.push(lp);
+            }
+        }
+
+        RawDraws {
+            thetas,
+            logps,
+            stats: SamplerStats {
+                accept_rate: if iters > 0 {
+                    accepts as f64 / iters as f64
+                } else {
+                    0.0
+                },
+                divergences: 0,
+                step_size: scale,
+                n_grad_evals: 0,
+                wall_secs: t_start.elapsed().as_secs_f64(),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gradient::std_normal_density;
+    use crate::util::rng::Xoshiro256pp;
+    use crate::util::stats;
+
+    #[test]
+    fn std_normal_moments() {
+        let ld = std_normal_density(2);
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let out = RwMh::default().sample(&ld, &[3.0, -3.0], 2000, 30_000, &mut rng);
+        for i in 0..2 {
+            let col: Vec<f64> = out.thetas.iter().map(|t| t[i]).collect();
+            assert!(stats::mean(&col).abs() < 0.1);
+            assert!((stats::variance(&col) - 1.0).abs() < 0.15);
+        }
+    }
+
+    #[test]
+    fn adaptation_reaches_reasonable_acceptance() {
+        let ld = std_normal_density(5);
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let out = RwMh::new(10.0).sample(&ld, &[0.0; 5], 3000, 5000, &mut rng);
+        assert!(
+            out.stats.accept_rate > 0.1 && out.stats.accept_rate < 0.5,
+            "acceptance {}",
+            out.stats.accept_rate
+        );
+    }
+}

@@ -1,0 +1,26 @@
+//! Inference algorithms: static HMC (the paper's benchmark sampler), NUTS,
+//! random-walk Metropolis–Hastings, blocked Gibbs, and prior sampling —
+//! the Turing/AdvancedHMC layer of the paper's stack.
+
+pub mod adapt;
+pub mod gibbs;
+pub mod hmc;
+pub mod mh;
+pub mod nuts;
+pub mod run;
+
+pub use gibbs::{Gibbs, GibbsBlock};
+pub use hmc::Hmc;
+pub use mh::RwMh;
+pub use nuts::Nuts;
+pub use run::{sample_chain, sample_chains, SamplerKind};
+
+use crate::chain::SamplerStats;
+
+/// Raw sampler output: unconstrained draws + per-draw log-density.
+#[derive(Clone, Debug)]
+pub struct RawDraws {
+    pub thetas: Vec<Vec<f64>>,
+    pub logps: Vec<f64>,
+    pub stats: SamplerStats,
+}

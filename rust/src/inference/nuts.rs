@@ -1,0 +1,346 @@
+//! No-U-Turn Sampler (Hoffman & Gelman 2014), multinomial variant with
+//! dual-averaging step-size adaptation — AdvancedHMC.jl's default, included
+//! beyond the paper's static-HMC benchmarks as the "production" sampler.
+
+use rand_core::RngCore;
+
+use crate::chain::SamplerStats;
+use crate::gradient::LogDensity;
+use crate::util::rng::Rng;
+
+use super::adapt::{DualAveraging, WelfordVar};
+use super::RawDraws;
+
+/// NUTS configuration.
+#[derive(Clone, Debug)]
+pub struct Nuts {
+    pub step_size: f64,
+    pub max_depth: usize,
+    pub target_accept: f64,
+    pub adapt_mass: bool,
+}
+
+impl Default for Nuts {
+    fn default() -> Self {
+        Self {
+            step_size: 0.1,
+            max_depth: 10,
+            target_accept: 0.8,
+            adapt_mass: true,
+        }
+    }
+}
+
+#[derive(Clone)]
+struct State {
+    theta: Vec<f64>,
+    p: Vec<f64>,
+    grad: Vec<f64>,
+    lp: f64,
+}
+
+struct Tree {
+    minus: State,
+    plus: State,
+    /// multinomial-sampled representative of this subtree
+    sample: State,
+    /// log of the subtree weight Σ exp(−H)
+    log_w: f64,
+    /// sum of min(1, exp(−ΔH)) over leaves (for adaptation)
+    alpha_sum: f64,
+    n_leaves: f64,
+    turning_or_diverged: bool,
+}
+
+impl Nuts {
+    pub fn sample<R: RngCore>(
+        &self,
+        ld: &dyn LogDensity,
+        theta0: &[f64],
+        warmup: usize,
+        iters: usize,
+        rng: &mut R,
+    ) -> RawDraws {
+        let dim = ld.dim();
+        let t_start = std::time::Instant::now();
+        let mut eps = self.step_size;
+        let mut da = DualAveraging::new(eps, self.target_accept);
+        let mut mass_est = WelfordVar::new(dim);
+        let mut inv_mass: Vec<f64> = vec![1.0; dim];
+
+        let (lp0, grad0) = ld.logp_grad(theta0);
+        assert!(lp0.is_finite(), "NUTS initialized at zero-probability point");
+        let mut n_grad: u64 = 1;
+        let mut current = State {
+            theta: theta0.to_vec(),
+            p: vec![0.0; dim],
+            grad: grad0,
+            lp: lp0,
+        };
+
+        let mut thetas = Vec::with_capacity(iters);
+        let mut logps = Vec::with_capacity(iters);
+        let mut divergences = 0usize;
+        let mut accept_stat_sum = 0.0;
+
+        for it in 0..warmup + iters {
+            for i in 0..dim {
+                current.p[i] = rng.normal() / inv_mass[i].sqrt();
+            }
+            let h0 = hamiltonian(&current, &inv_mass);
+
+            let mut minus = current.clone();
+            let mut plus = current.clone();
+            let mut sample = current.clone();
+            // All weights are normalized relative to the initial energy:
+            // the starting state has weight exp(h0 − h0) = 1.
+            let mut log_w = 0.0;
+            let mut depth = 0;
+            let mut turning = false;
+            let mut alpha_sum = 0.0;
+            let mut n_leaves = 0.0;
+
+            while depth < self.max_depth && !turning {
+                let go_right = rng.bernoulli(0.5);
+                let sub = if go_right {
+                    build_tree(
+                        ld, &plus, 1.0, depth, eps, h0, &inv_mass, rng, &mut n_grad,
+                    )
+                } else {
+                    build_tree(
+                        ld, &minus, -1.0, depth, eps, h0, &inv_mass, rng, &mut n_grad,
+                    )
+                };
+                alpha_sum += sub.alpha_sum;
+                n_leaves += sub.n_leaves;
+                if sub.turning_or_diverged {
+                    if sub.alpha_sum == 0.0 && sub.n_leaves <= 1.0 {
+                        divergences += 1;
+                    }
+                    break;
+                }
+                // multinomial merge: accept subtree sample with prob w'/(w+w')
+                let log_sum = log_add(log_w, sub.log_w);
+                if rng.uniform_pos().ln() < sub.log_w - log_sum {
+                    sample = sub.sample.clone();
+                }
+                log_w = log_sum;
+                if go_right {
+                    plus = sub.plus;
+                } else {
+                    minus = sub.minus;
+                }
+                turning = is_turning(&minus, &plus, &inv_mass);
+                depth += 1;
+            }
+
+            current = sample.clone();
+            let accept_stat = if n_leaves > 0.0 {
+                alpha_sum / n_leaves
+            } else {
+                0.0
+            };
+            accept_stat_sum += accept_stat;
+
+            if it < warmup {
+                eps = da.update(accept_stat);
+                if self.adapt_mass {
+                    mass_est.push(&current.theta);
+                    if mass_est.count() > 50 {
+                        inv_mass = mass_est.variance();
+                    }
+                }
+                if it + 1 == warmup {
+                    eps = da.finalized();
+                }
+            } else {
+                thetas.push(current.theta.clone());
+                logps.push(current.lp);
+            }
+        }
+
+        RawDraws {
+            thetas,
+            logps,
+            stats: SamplerStats {
+                accept_rate: accept_stat_sum / (warmup + iters) as f64,
+                divergences,
+                step_size: eps,
+                n_grad_evals: n_grad,
+                wall_secs: t_start.elapsed().as_secs_f64(),
+            },
+        }
+    }
+}
+
+fn hamiltonian(s: &State, inv_mass: &[f64]) -> f64 {
+    let ke: f64 = 0.5
+        * s.p
+            .iter()
+            .zip(inv_mass)
+            .map(|(&pi, &im)| pi * pi * im)
+            .sum::<f64>();
+    -s.lp + ke
+}
+
+fn log_add(a: f64, b: f64) -> f64 {
+    crate::util::math::log_add_exp(a, b)
+}
+
+fn leapfrog(ld: &dyn LogDensity, s: &State, dir: f64, eps: f64, inv_mass: &[f64]) -> State {
+    let dim = s.theta.len();
+    let e = dir * eps;
+    let mut p = s.p.clone();
+    let mut theta = s.theta.clone();
+    for i in 0..dim {
+        p[i] += 0.5 * e * s.grad[i];
+        theta[i] += e * p[i] * inv_mass[i];
+    }
+    let (lp, grad) = ld.logp_grad(&theta);
+    for i in 0..dim {
+        p[i] += 0.5 * e * grad[i];
+    }
+    State { theta, p, grad, lp }
+}
+
+fn is_turning(minus: &State, plus: &State, inv_mass: &[f64]) -> bool {
+    let mut dot_m = 0.0;
+    let mut dot_p = 0.0;
+    for i in 0..minus.theta.len() {
+        let dq = plus.theta[i] - minus.theta[i];
+        dot_m += dq * minus.p[i] * inv_mass[i];
+        dot_p += dq * plus.p[i] * inv_mass[i];
+    }
+    dot_m < 0.0 || dot_p < 0.0
+}
+
+#[allow(clippy::too_many_arguments)]
+fn build_tree<R: RngCore>(
+    ld: &dyn LogDensity,
+    start: &State,
+    dir: f64,
+    depth: usize,
+    eps: f64,
+    h0: f64,
+    inv_mass: &[f64],
+    rng: &mut R,
+    n_grad: &mut u64,
+) -> Tree {
+    if depth == 0 {
+        let s = leapfrog(ld, start, dir, eps, inv_mass);
+        *n_grad += 1;
+        let h = hamiltonian(&s, inv_mass);
+        let dh = h0 - h;
+        let diverged = !dh.is_finite() || dh < -1000.0;
+        let alpha = if dh.is_finite() { dh.exp().min(1.0) } else { 0.0 };
+        return Tree {
+            minus: s.clone(),
+            plus: s.clone(),
+            sample: s,
+            log_w: if diverged { f64::NEG_INFINITY } else { dh },
+            alpha_sum: alpha,
+            n_leaves: 1.0,
+            turning_or_diverged: diverged,
+        };
+    }
+    let first = build_tree(ld, start, dir, depth - 1, eps, h0, inv_mass, rng, n_grad);
+    if first.turning_or_diverged {
+        return first;
+    }
+    let cont = if dir > 0.0 { &first.plus } else { &first.minus };
+    let second = build_tree(ld, cont, dir, depth - 1, eps, h0, inv_mass, rng, n_grad);
+    let log_w = log_add(first.log_w, second.log_w);
+    let sample = if !second.turning_or_diverged
+        && rng.uniform_pos().ln() < second.log_w - log_w
+    {
+        second.sample.clone()
+    } else {
+        first.sample.clone()
+    };
+    let (minus, plus) = if dir > 0.0 {
+        (first.minus, second.plus.clone())
+    } else {
+        (second.minus.clone(), first.plus)
+    };
+    let turning = second.turning_or_diverged || is_turning(&minus, &plus, inv_mass);
+    Tree {
+        minus,
+        plus,
+        sample,
+        log_w,
+        alpha_sum: first.alpha_sum + second.alpha_sum,
+        n_leaves: first.n_leaves + second.n_leaves,
+        turning_or_diverged: turning,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gradient::{std_normal_density, FnDensity};
+    use crate::util::rng::Xoshiro256pp;
+    use crate::util::stats;
+
+    #[test]
+    fn std_normal_moments() {
+        let ld = std_normal_density(4);
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let out = Nuts::default().sample(&ld, &[1.0, -1.0, 0.5, 0.0], 800, 3000, &mut rng);
+        assert_eq!(out.thetas.len(), 3000);
+        for i in 0..4 {
+            let col: Vec<f64> = out.thetas.iter().map(|t| t[i]).collect();
+            assert!(stats::mean(&col).abs() < 0.1, "dim {i}: {}", stats::mean(&col));
+            assert!(
+                (stats::variance(&col) - 1.0).abs() < 0.15,
+                "dim {i}: {}",
+                stats::variance(&col)
+            );
+        }
+    }
+
+    #[test]
+    fn banana_like_target_mixes() {
+        // Rosenbrock-ish curved target; NUTS should still recover the
+        // marginal mean of x ≈ 0.
+        let ld = FnDensity {
+            dim: 2,
+            f: |t: &[f64]| {
+                -0.5 * (t[0] * t[0] + 4.0 * (t[1] - t[0] * t[0]) * (t[1] - t[0] * t[0]))
+            },
+            g: |t: &[f64]| {
+                let d = t[1] - t[0] * t[0];
+                (
+                    -0.5 * (t[0] * t[0] + 4.0 * d * d),
+                    vec![-t[0] + 8.0 * d * t[0], -4.0 * d],
+                )
+            },
+        };
+        let mut rng = Xoshiro256pp::seed_from_u64(12);
+        let out = Nuts::default().sample(&ld, &[0.1, 0.1], 1000, 12000, &mut rng);
+        let x: Vec<f64> = out.thetas.iter().map(|t| t[0]).collect();
+        let y: Vec<f64> = out.thetas.iter().map(|t| t[1]).collect();
+        assert!(stats::mean(&x).abs() < 0.25, "{}", stats::mean(&x));
+        // E[y] = E[x²] = 1
+        assert!((stats::mean(&y) - 1.0).abs() < 0.3, "{}", stats::mean(&y));
+    }
+
+    #[test]
+    fn nuts_beats_fixed_hmc_on_stiff_target() {
+        // anisotropic Gaussian: NUTS adapts; count grad evals are reported
+        let ld = FnDensity {
+            dim: 2,
+            f: |t: &[f64]| -0.5 * (t[0] * t[0] / 25.0 + t[1] * t[1]),
+            g: |t: &[f64]| {
+                (
+                    -0.5 * (t[0] * t[0] / 25.0 + t[1] * t[1]),
+                    vec![-t[0] / 25.0, -t[1]],
+                )
+            },
+        };
+        let mut rng = Xoshiro256pp::seed_from_u64(13);
+        let out = Nuts::default().sample(&ld, &[0.0, 0.0], 1000, 4000, &mut rng);
+        let x: Vec<f64> = out.thetas.iter().map(|t| t[0]).collect();
+        assert!((stats::variance(&x) - 25.0).abs() < 6.0, "{}", stats::variance(&x));
+        assert!(out.stats.n_grad_evals > 0);
+    }
+}

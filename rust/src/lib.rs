@@ -1,0 +1,63 @@
+//! # dynamicppl — Stan-like speed for dynamic probabilistic models
+//!
+//! A reproduction of *DynamicPPL: Stan-like Speed for Dynamic Probabilistic
+//! Models* (Tarek, Xu, Trapp, Ge, Ghahramani, 2020) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)** — the probabilistic-programming runtime: tilde-DSL
+//!   models, `VarName` addressing, untyped→typed trace specialization
+//!   (`varinfo`), execution contexts, samplers (MH/HMC/NUTS/Gibbs), chains
+//!   and probability queries, plus the benchmark coordinator.
+//! - **L2 (python/compile, build-time)** — each benchmark model's
+//!   unconstrained log-joint and gradient written in JAX, AOT-lowered to
+//!   HLO text artifacts.
+//! - **L1 (python/compile/kernels, build-time)** — Pallas kernels for the
+//!   density hot-spots, validated against pure-jnp oracles.
+//!
+//! At run time the Rust binary is self-contained: artifacts are loaded and
+//! executed through the PJRT CPU client (`runtime`); Python never runs on
+//! the sampling path.
+
+pub mod ad;
+pub mod bench;
+pub mod chain;
+pub mod context;
+pub mod coordinator;
+pub mod dist;
+pub mod gradient;
+pub mod inference;
+#[macro_use]
+pub mod model;
+pub mod models;
+pub mod query;
+pub mod runtime;
+pub mod stanlike;
+pub mod util;
+pub mod value;
+pub mod varinfo;
+pub mod varname;
+
+pub use value::Value;
+pub use varname::{Sym, VarName};
+
+/// Convenience re-exports for model authors and examples.
+pub mod prelude {
+    pub use crate::ad::forward::Dual;
+    pub use crate::ad::reverse::TVar;
+    pub use crate::ad::Scalar;
+    pub use crate::context::Context;
+    pub use crate::dist::*;
+    pub use crate::model::macros::c;
+    pub use crate::model::{
+        init_trace, init_typed, sample_run, typed_grad_forward, typed_grad_reverse, typed_logp,
+        untyped_grad_forward, untyped_grad_reverse, untyped_logp, Model, TildeApi,
+    };
+    pub use crate::util::rng::{Rng, Xoshiro256pp};
+    pub use crate::value::Value;
+    pub use crate::varinfo::{TypedVarInfo, UntypedVarInfo};
+    pub use crate::varname::{Sym, VarName};
+    pub use crate::{
+        check_reject, model, obs, obs_iid, obs_int, obs_int_iid, obs_vec, tilde, tilde_int,
+        tilde_vec,
+    };
+}

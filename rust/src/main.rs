@@ -1,0 +1,9 @@
+//! `dppl` — the leader binary: CLI over the coordinator.
+//!
+//! The binary is self-contained at run time: it loads AOT artifacts from
+//! `artifacts/` (built once by `make artifacts`) and never invokes Python.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(dynamicppl::coordinator::run(argv));
+}

@@ -1,0 +1,366 @@
+//! [`TildeApi`] implementations: the three ways a model body executes.
+
+use rand_core::RngCore;
+
+use crate::ad::Scalar;
+use crate::context::{Accumulator, Context};
+use crate::dist::{bijector, DiscreteDist, ScalarDist, VecDist};
+use crate::value::Value;
+use crate::varinfo::{flags, TypedVarInfo, UntypedVarInfo};
+use crate::varname::VarName;
+
+use super::TildeApi;
+
+/// Draws missing variables from their priors into an [`UntypedVarInfo`].
+///
+/// - Variables already present (and not flagged `RESAMPLE`) keep their
+///   stored value; their metadata (distribution) is refreshed since
+///   parameters of the distribution may have changed.
+/// - Missing or flagged variables are drawn fresh.
+///
+/// This executor is the paper's "initial sampling phase" and also serves
+/// prior sampling and MH re-evaluation of boxed traces.
+pub struct SampleExecutor<'a, R: RngCore> {
+    rng: &'a mut R,
+    vi: &'a mut UntypedVarInfo,
+    acc: Accumulator<f64>,
+    ctx: Context,
+}
+
+impl<'a, R: RngCore> SampleExecutor<'a, R> {
+    pub fn new(rng: &'a mut R, vi: &'a mut UntypedVarInfo, ctx: Context) -> Self {
+        Self {
+            rng,
+            vi,
+            acc: Accumulator::new(ctx),
+            ctx,
+        }
+    }
+
+    pub fn logp(&self) -> f64 {
+        self.acc.total()
+    }
+
+    fn fetch_or_draw(&mut self, vn: VarName, dist: crate::dist::AnyDist) -> Value {
+        if self.vi.contains(&vn) && !self.vi.is_flagged(&vn, flags::RESAMPLE) {
+            let val = self.vi.get(&vn).unwrap().value.clone();
+            self.vi.update(&vn, val.clone(), dist);
+            val
+        } else {
+            let val = dist.sample(self.rng);
+            if self.vi.contains(&vn) {
+                self.vi.update(&vn, val.clone(), dist);
+                self.vi.clear_flag(&vn, flags::RESAMPLE);
+            } else {
+                self.vi.insert(vn, val.clone(), dist);
+            }
+            val
+        }
+    }
+}
+
+impl<'a, R: RngCore> TildeApi<f64> for SampleExecutor<'a, R> {
+    fn assume(&mut self, vn: VarName, dist: &ScalarDist<f64>) -> f64 {
+        let val = self.fetch_or_draw(vn, dist.boxed());
+        let x = val.as_f64().expect("scalar assume got non-scalar value");
+        self.acc.add_prior(dist.logpdf(x));
+        x
+    }
+
+    fn assume_vec(&mut self, vn: VarName, dist: &VecDist<f64>) -> Vec<f64> {
+        let val = self.fetch_or_draw(vn, dist.boxed());
+        let x = val
+            .as_slice()
+            .expect("vector assume got non-vector value")
+            .to_vec();
+        self.acc.add_prior(dist.logpdf(&x));
+        x
+    }
+
+    fn assume_int(&mut self, vn: VarName, dist: &DiscreteDist<f64>) -> i64 {
+        let val = self.fetch_or_draw(vn, dist.boxed());
+        let k = val.as_int().expect("discrete assume got non-integer value");
+        self.acc.add_prior(dist.logpmf(k));
+        k
+    }
+
+    fn observe(&mut self, dist: &ScalarDist<f64>, obs: f64) {
+        self.acc.add_lik(dist.logpdf(obs));
+    }
+
+    fn observe_int(&mut self, dist: &DiscreteDist<f64>, obs: i64) {
+        self.acc.add_lik(dist.logpmf(obs));
+    }
+
+    fn observe_vec(&mut self, dist: &VecDist<f64>, obs: &[f64]) {
+        self.acc.add_lik(dist.logpdf(obs));
+    }
+
+    fn add_obs_logp(&mut self, lp: f64) {
+        self.acc.add_lik(lp);
+    }
+
+    fn add_prior_logp(&mut self, lp: f64) {
+        self.acc.add_prior(lp);
+    }
+
+    fn reject(&mut self) {
+        self.acc.reject();
+    }
+
+    fn rejected(&self) -> bool {
+        self.acc.rejected()
+    }
+
+    fn context(&self) -> Context {
+        self.ctx
+    }
+}
+
+/// Evaluates the log-density from a flat unconstrained slice using the
+/// frozen [`TypedVarInfo`] layout — the specialized fast path.
+///
+/// Assumes are served by a cursor walk over the layout: slot `i` of the
+/// layout must be visit `i` of the model (checked with `debug_assert`).
+/// Each assume invlinks its coordinates (adding the Jacobian term) and
+/// scores the prior. Generic over `T` so the same executor computes plain
+/// values, forward duals and tape gradients.
+pub struct TypedExecutor<'a, T: Scalar> {
+    tvi: &'a TypedVarInfo,
+    theta: &'a [T],
+    cursor: usize,
+    acc: Accumulator<T>,
+    ctx: Context,
+    buf: Vec<T>,
+}
+
+impl<'a> TypedExecutor<'a, f64> {
+    pub fn new(tvi: &'a TypedVarInfo, theta: &'a [f64], ctx: Context) -> Self {
+        Self::new_generic(tvi, theta, ctx)
+    }
+
+    pub fn logp(&self) -> f64 {
+        self.acc.total()
+    }
+}
+
+impl<'a, T: Scalar> TypedExecutor<'a, T> {
+    pub fn new_generic(tvi: &'a TypedVarInfo, theta: &'a [T], ctx: Context) -> Self {
+        debug_assert_eq!(theta.len(), tvi.dim());
+        Self {
+            tvi,
+            theta,
+            cursor: 0,
+            acc: Accumulator::new(ctx),
+            ctx,
+            buf: Vec::with_capacity(8),
+        }
+    }
+
+    pub fn logp_t(&self) -> T {
+        self.acc.total()
+    }
+
+    #[inline]
+    fn next_slot(&mut self, vn: &VarName) -> &'a crate::varinfo::Slot {
+        let slot = self
+            .tvi
+            .slots()
+            .get(self.cursor)
+            .unwrap_or_else(|| panic!("typed layout exhausted at {vn} — dynamic structure change; re-specialize the trace"));
+        debug_assert_eq!(
+            &slot.vn, vn,
+            "typed layout mismatch: expected {}, model visited {vn}",
+            slot.vn
+        );
+        self.cursor += 1;
+        slot
+    }
+}
+
+impl<'a, T: Scalar> TildeApi<T> for TypedExecutor<'a, T> {
+    fn assume(&mut self, vn: VarName, dist: &ScalarDist<T>) -> T {
+        let slot = self.next_slot(&vn);
+        self.buf.clear();
+        let y = &self.theta[slot.unc_offset..slot.unc_offset + slot.unc_len];
+        let mut out = std::mem::take(&mut self.buf);
+        let ladj = bijector::invlink(&slot.domain, y, &mut out);
+        let x = out[0];
+        self.buf = out;
+        self.acc.add_prior(dist.logpdf(x) + ladj);
+        x
+    }
+
+    fn assume_vec(&mut self, vn: VarName, dist: &VecDist<T>) -> Vec<T> {
+        let slot = self.next_slot(&vn);
+        let y = &self.theta[slot.unc_offset..slot.unc_offset + slot.unc_len];
+        let mut out = Vec::with_capacity(slot.cons_len);
+        let ladj = bijector::invlink(&slot.domain, y, &mut out);
+        self.acc.add_prior(dist.logpdf(&out) + ladj);
+        out
+    }
+
+    fn assume_int(&mut self, vn: VarName, dist: &DiscreteDist<T>) -> i64 {
+        let slot = self.next_slot(&vn);
+        let k = self.tvi.discrete[slot.disc_offset];
+        self.acc.add_prior(dist.logpmf(k));
+        k
+    }
+
+    fn observe(&mut self, dist: &ScalarDist<T>, obs: f64) {
+        self.acc.add_lik(dist.logpdf(T::constant(obs)));
+    }
+
+    fn observe_int(&mut self, dist: &DiscreteDist<T>, obs: i64) {
+        self.acc.add_lik(dist.logpmf(obs));
+    }
+
+    fn observe_vec(&mut self, dist: &VecDist<T>, obs: &[f64]) {
+        let obs_t: Vec<T> = obs.iter().map(|&o| T::constant(o)).collect();
+        self.acc.add_lik(dist.logpdf(&obs_t));
+    }
+
+    fn add_obs_logp(&mut self, lp: T) {
+        self.acc.add_lik(lp);
+    }
+
+    fn add_prior_logp(&mut self, lp: T) {
+        self.acc.add_prior(lp);
+    }
+
+    fn reject(&mut self) {
+        self.acc.reject();
+    }
+
+    fn rejected(&self) -> bool {
+        self.acc.rejected()
+    }
+
+    fn context(&self) -> Context {
+        self.ctx
+    }
+}
+
+/// Evaluates the log-density from a flat unconstrained slice **through the
+/// boxed trace**: every assume re-derives its offset by hashing the
+/// `VarName` and re-reads domain metadata through the `AnyDist` enum.
+///
+/// Semantically identical to [`TypedExecutor`]; mechanically it pays the
+/// dynamic costs the paper's §2.2 attributes to `UntypedVarInfo` (abstract
+/// element types defeating specialization). Offsets are recomputed each
+/// run from the record order, mimicking `Vector{Real}` re-traversal.
+pub struct UntypedFlatExecutor<'a, T: Scalar> {
+    vi: &'a UntypedVarInfo,
+    offsets: std::collections::HashMap<VarName, usize>,
+    theta: &'a [T],
+    acc: Accumulator<T>,
+    ctx: Context,
+}
+
+impl<'a> UntypedFlatExecutor<'a, f64> {
+    pub fn new(vi: &'a UntypedVarInfo, theta: &'a [f64], ctx: Context) -> Self {
+        Self::new_generic(vi, theta, ctx)
+    }
+
+    pub fn logp(&self) -> f64 {
+        self.acc.total()
+    }
+}
+
+impl<'a, T: Scalar> UntypedFlatExecutor<'a, T> {
+    pub fn new_generic(vi: &'a UntypedVarInfo, theta: &'a [T], ctx: Context) -> Self {
+        // Rebuild the VarName→offset map on every executor construction —
+        // the boxed path has no frozen layout to reuse.
+        let mut offsets = std::collections::HashMap::new();
+        let mut off = 0;
+        for rec in vi.records() {
+            offsets.insert(rec.vn.clone(), off);
+            off += rec.domain.unconstrained_dim();
+        }
+        debug_assert_eq!(off, theta.len());
+        Self {
+            vi,
+            offsets,
+            theta,
+            acc: Accumulator::new(ctx),
+            ctx,
+        }
+    }
+
+    pub fn logp_t(&self) -> T {
+        self.acc.total()
+    }
+
+    fn lookup(&self, vn: &VarName) -> (usize, crate::dist::Domain) {
+        let off = *self
+            .offsets
+            .get(vn)
+            .unwrap_or_else(|| panic!("variable {vn} not in trace — dynamic structure change"));
+        let rec = self.vi.get(vn).unwrap();
+        (off, rec.domain.clone())
+    }
+}
+
+impl<'a, T: Scalar> TildeApi<T> for UntypedFlatExecutor<'a, T> {
+    fn assume(&mut self, vn: VarName, dist: &ScalarDist<T>) -> T {
+        let (off, domain) = self.lookup(&vn);
+        let n = domain.unconstrained_dim();
+        let mut out = Vec::with_capacity(1);
+        let ladj = bijector::invlink(&domain, &self.theta[off..off + n], &mut out);
+        let x = out[0];
+        self.acc.add_prior(dist.logpdf(x) + ladj);
+        x
+    }
+
+    fn assume_vec(&mut self, vn: VarName, dist: &VecDist<T>) -> Vec<T> {
+        let (off, domain) = self.lookup(&vn);
+        let n = domain.unconstrained_dim();
+        let mut out = Vec::with_capacity(domain.constrained_dim());
+        let ladj = bijector::invlink(&domain, &self.theta[off..off + n], &mut out);
+        self.acc.add_prior(dist.logpdf(&out) + ladj);
+        out
+    }
+
+    fn assume_int(&mut self, vn: VarName, dist: &DiscreteDist<T>) -> i64 {
+        let rec = self
+            .vi
+            .get(&vn)
+            .unwrap_or_else(|| panic!("variable {vn} not in trace"));
+        let k = rec.value.as_int().expect("discrete assume of non-integer");
+        self.acc.add_prior(dist.logpmf(k));
+        k
+    }
+
+    fn observe(&mut self, dist: &ScalarDist<T>, obs: f64) {
+        self.acc.add_lik(dist.logpdf(T::constant(obs)));
+    }
+
+    fn observe_int(&mut self, dist: &DiscreteDist<T>, obs: i64) {
+        self.acc.add_lik(dist.logpmf(obs));
+    }
+
+    fn observe_vec(&mut self, dist: &VecDist<T>, obs: &[f64]) {
+        let obs_t: Vec<T> = obs.iter().map(|&o| T::constant(o)).collect();
+        self.acc.add_lik(dist.logpdf(&obs_t));
+    }
+
+    fn add_obs_logp(&mut self, lp: T) {
+        self.acc.add_lik(lp);
+    }
+
+    fn add_prior_logp(&mut self, lp: T) {
+        self.acc.add_prior(lp);
+    }
+
+    fn reject(&mut self) {
+        self.acc.reject();
+    }
+
+    fn rejected(&self) -> bool {
+        self.acc.rejected()
+    }
+
+    fn context(&self) -> Context {
+        self.ctx
+    }
+}

@@ -1,0 +1,213 @@
+//! The tilde DSL (paper §2.1).
+//!
+//! [`model!`] defines a model type: named data fields plus a generative
+//! body written once, generically over the AD scalar `T`. Inside the body,
+//! the tilde macros mirror DynamicPPL's notation:
+//!
+//! ```text
+//! DynamicPPL (Julia)                     this crate (Rust)
+//! ----------------------------------     ----------------------------------
+//! s ~ InverseGamma(2, 3)                 let s = tilde!(api, s ~ InverseGamma(c(2.0), c(3.0)));
+//! w ~ MvNormal(D, 1.0)                   let w = tilde_vec!(api, w ~ IsoNormal(c(0.0), c(1.0), d));
+//! h[t] ~ Normal(mu, sd)                  let h_t = tilde!(api, h[t] ~ Normal(mu, sd));
+//! y[i] ~ Normal(yhat, s)                 obs!(api, this.y[i] ~ Normal(yhat, s));
+//! y .~ Normal.(X*w, s)                   obs_iid!(api, &self.y .~ Normal(mu, s));
+//! @logpdf() = -Inf; return               api.reject(); return;
+//! ```
+//!
+//! `c(x)` is shorthand for `T::constant(x)` (re-exported in the prelude as
+//! [`crate::model::c`]).
+
+/// Lift an `f64` literal/expression to the generic scalar type. Free
+/// function form of `T::constant` that infers `T` from context.
+#[inline]
+pub fn c<T: crate::ad::Scalar>(x: f64) -> T {
+    T::constant(x)
+}
+
+/// Define a model type: data fields + generative body.
+///
+/// ```ignore
+/// model! {
+///     /// Bayesian linear regression.
+///     pub LinReg {
+///         x: Vec<Vec<f64>>,
+///         y: Vec<f64>,
+///     }
+///     fn body<T>(this, api) {
+///         let s = tilde!(api, s ~ InverseGamma(c(2.0), c(3.0)));
+///         let w = tilde_vec!(api, w ~ IsoNormal(c(0.0), c(1.0), this.x[0].len()));
+///         for i in 0..this.y.len() {
+///             let mut mu = c::<T>(0.0);
+///             for j in 0..w.len() { mu = mu + w[j] * this.x[i][j]; }
+///             obs!(api, this.y[i] ~ Normal(mu, s.sqrt()));
+///         }
+///     }
+/// }
+/// ```
+#[macro_export]
+macro_rules! model {
+    (
+        $(#[$meta:meta])*
+        pub $name:ident {
+            $($(#[$fmeta:meta])* $field:ident : $fty:ty),* $(,)?
+        }
+        fn body<$T:ident>($self_:ident, $api:ident) $body:block
+    ) => {
+        $(#[$meta])*
+        #[derive(Clone, Debug)]
+        pub struct $name {
+            $($(#[$fmeta])* pub $field: $fty),*
+        }
+
+        impl $name {
+            /// The generative body, generic over the AD scalar type.
+            pub fn eval_generic<$T: $crate::ad::Scalar>(
+                &self,
+                $api: &mut dyn $crate::model::TildeApi<$T>,
+            ) {
+                let $self_ = self;
+                let _ = &$self_;
+                $body
+            }
+        }
+
+        impl $crate::model::Model for $name {
+            fn name(&self) -> &str {
+                stringify!($name)
+            }
+            fn eval_f64(&self, api: &mut dyn $crate::model::TildeApi<f64>) {
+                self.eval_generic(api)
+            }
+            fn eval_dual(
+                &self,
+                api: &mut dyn $crate::model::TildeApi<$crate::ad::forward::Dual>,
+            ) {
+                self.eval_generic(api)
+            }
+            fn eval_tape(
+                &self,
+                api: &mut dyn $crate::model::TildeApi<$crate::ad::reverse::TVar>,
+            ) {
+                self.eval_generic(api)
+            }
+        }
+    };
+}
+
+/// Scalar parameter: `tilde!(api, name ~ Dist(args…))` or
+/// `tilde!(api, name[idx] ~ Dist(args…))`. Evaluates to the parameter's
+/// value (type `T`).
+#[macro_export]
+macro_rules! tilde {
+    ($api:expr, $name:ident ~ $dist:ident ( $($arg:expr),* $(,)? )) => {{
+        let __d = $crate::dist::ScalarDist::$dist($crate::dist::$dist::new($($arg),*));
+        $api.assume($crate::varname::VarName::new(stringify!($name)), &__d)
+    }};
+    ($api:expr, $name:ident [ $idx:expr ] ~ $dist:ident ( $($arg:expr),* $(,)? )) => {{
+        let __d = $crate::dist::ScalarDist::$dist($crate::dist::$dist::new($($arg),*));
+        $api.assume(
+            $crate::varname::VarName::indexed(stringify!($name), $idx),
+            &__d,
+        )
+    }};
+}
+
+/// Vector parameter: `tilde_vec!(api, name ~ VecDistVariant(args…))`.
+/// Evaluates to `Vec<T>` in constrained space.
+#[macro_export]
+macro_rules! tilde_vec {
+    ($api:expr, $name:ident ~ $dist:ident ( $($arg:expr),* $(,)? )) => {{
+        let __d = $crate::dist::VecDist::$dist($crate::dist::$dist::new($($arg),*));
+        $api.assume_vec($crate::varname::VarName::new(stringify!($name)), &__d)
+    }};
+    ($api:expr, $name:ident [ $idx:expr ] ~ $dist:ident ( $($arg:expr),* $(,)? )) => {{
+        let __d = $crate::dist::VecDist::$dist($crate::dist::$dist::new($($arg),*));
+        $api.assume_vec(
+            $crate::varname::VarName::indexed(stringify!($name), $idx),
+            &__d,
+        )
+    }};
+}
+
+/// Discrete parameter: `tilde_int!(api, name ~ DiscreteDistVariant(args…))`.
+/// Evaluates to `i64`.
+#[macro_export]
+macro_rules! tilde_int {
+    ($api:expr, $name:ident ~ $dist:ident ( $($arg:expr),* $(,)? )) => {{
+        let __d = $crate::dist::DiscreteDist::$dist($crate::dist::$dist::new($($arg),*));
+        $api.assume_int($crate::varname::VarName::new(stringify!($name)), &__d)
+    }};
+    ($api:expr, $name:ident [ $idx:expr ] ~ $dist:ident ( $($arg:expr),* $(,)? )) => {{
+        let __d = $crate::dist::DiscreteDist::$dist($crate::dist::$dist::new($($arg),*));
+        $api.assume_int(
+            $crate::varname::VarName::indexed(stringify!($name), $idx),
+            &__d,
+        )
+    }};
+}
+
+/// Continuous observation: `obs!(api, value ~ Dist(args…))`.
+#[macro_export]
+macro_rules! obs {
+    ($api:expr, $val:expr => $dist:ident ( $($arg:expr),* $(,)? )) => {{
+        let __d = $crate::dist::ScalarDist::$dist($crate::dist::$dist::new($($arg),*));
+        $api.observe(&__d, $val)
+    }};
+    ($api:expr, $val:expr , ~ $dist:ident ( $($arg:expr),* $(,)? )) => {
+        $crate::obs!($api, $val => $dist($($arg),*))
+    };
+}
+
+/// Discrete observation: `obs_int!(api, value => Dist(args…))`.
+#[macro_export]
+macro_rules! obs_int {
+    ($api:expr, $val:expr => $dist:ident ( $($arg:expr),* $(,)? )) => {{
+        let __d = $crate::dist::DiscreteDist::$dist($crate::dist::$dist::new($($arg),*));
+        $api.observe_int(&__d, $val)
+    }};
+}
+
+/// Vector observation: `obs_vec!(api, slice => VecDistVariant(args…))`.
+#[macro_export]
+macro_rules! obs_vec {
+    ($api:expr, $val:expr => $dist:ident ( $($arg:expr),* $(,)? )) => {{
+        let __d = $crate::dist::VecDist::$dist($crate::dist::$dist::new($($arg),*));
+        $api.observe_vec(&__d, $val)
+    }};
+}
+
+/// Broadcast iid observation (the paper's `.~`):
+/// `obs_iid!(api, slice .~ Dist(args…))`.
+#[macro_export]
+macro_rules! obs_iid {
+    ($api:expr, $vals:expr , .~ $dist:ident ( $($arg:expr),* $(,)? )) => {{
+        let __d = $crate::dist::ScalarDist::$dist($crate::dist::$dist::new($($arg),*));
+        $api.observe_iid(&__d, $vals)
+    }};
+    ($api:expr, $vals:expr => $dist:ident ( $($arg:expr),* $(,)? )) => {{
+        let __d = $crate::dist::ScalarDist::$dist($crate::dist::$dist::new($($arg),*));
+        $api.observe_iid(&__d, $vals)
+    }};
+}
+
+/// Broadcast iid discrete observation:
+/// `obs_int_iid!(api, slice => Dist(args…))`.
+#[macro_export]
+macro_rules! obs_int_iid {
+    ($api:expr, $vals:expr => $dist:ident ( $($arg:expr),* $(,)? )) => {{
+        let __d = $crate::dist::DiscreteDist::$dist($crate::dist::$dist::new($($arg),*));
+        $api.observe_int_iid(&__d, $vals)
+    }};
+}
+
+/// Early-rejection guard: returns from the model body if rejected
+/// (paper §3.3: `@logpdf() = -Inf; return`).
+#[macro_export]
+macro_rules! check_reject {
+    ($api:expr) => {
+        if $api.rejected() {
+            return;
+        }
+    };
+}

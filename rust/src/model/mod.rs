@@ -1,0 +1,232 @@
+//! Model definition and execution (the paper's §2.1 `@model` DSL).
+//!
+//! A model is written **once**, generically over the AD scalar type, as a
+//! sequence of tilde statements against the [`TildeApi`]. The [`Model`]
+//! trait exposes three monomorphized entry points (`f64`, forward dual,
+//! reverse tape) so model objects stay `dyn`-safe while the body compiles
+//! to specialized code per scalar type — the Rust rendering of Julia's
+//! compile-on-first-call specialization.
+//!
+//! Executors implementing [`TildeApi`]:
+//! - [`executors::SampleExecutor`] — draws missing variables from their
+//!   priors into an [`UntypedVarInfo`] (first contact with a model, prior
+//!   sampling, particle-style resampling).
+//! - [`executors::TypedExecutor`] — evaluates the log-density from a flat
+//!   unconstrained parameter slice using the fixed [`TypedVarInfo`] layout
+//!   (cursor walk; no hashing). Generic over `T` → used by both plain
+//!   evaluation and AD gradients.
+//! - [`executors::UntypedFlatExecutor`] — same semantics but addresses
+//!   parameters through the boxed trace's hash map on every tilde: the
+//!   pre-specialization dynamic path the benchmarks contrast against.
+
+pub mod executors;
+#[macro_use]
+pub mod macros;
+
+use crate::ad::forward::Dual;
+use crate::ad::reverse::TVar;
+use crate::ad::Scalar;
+use crate::context::Context;
+use crate::dist::{DiscreteDist, ScalarDist, VecDist};
+use crate::varname::VarName;
+
+/// The tilde-statement interface models are written against.
+///
+/// `assume*` introduce **parameters** (returning their current/drawn
+/// value); `observe*` score **data**. `reject` implements the paper's
+/// early-rejection idiom (§3.3) — model code should `return` after calling
+/// it; the `tilde!` macros insert the check automatically.
+pub trait TildeApi<T: Scalar> {
+    /// `v ~ dist` for a scalar parameter.
+    fn assume(&mut self, vn: VarName, dist: &ScalarDist<T>) -> T;
+    /// `v ~ dist` for a vector parameter.
+    fn assume_vec(&mut self, vn: VarName, dist: &VecDist<T>) -> Vec<T>;
+    /// `v ~ dist` for a discrete parameter (never an HMC coordinate; used
+    /// by prior sampling and Gibbs).
+    fn assume_int(&mut self, vn: VarName, dist: &DiscreteDist<T>) -> i64;
+
+    /// `obs ~ dist` for a continuous observation.
+    fn observe(&mut self, dist: &ScalarDist<T>, obs: f64);
+    /// `obs ~ dist` for a discrete observation.
+    fn observe_int(&mut self, dist: &DiscreteDist<T>, obs: i64);
+    /// `obs ~ dist` for a vector observation.
+    fn observe_vec(&mut self, dist: &VecDist<T>, obs: &[f64]);
+
+    /// Add a raw likelihood-side term (custom densities, marginalized
+    /// mixtures — the `@logpdf` escape hatch).
+    fn add_obs_logp(&mut self, lp: T);
+    /// Add a raw prior-side term.
+    fn add_prior_logp(&mut self, lp: T);
+
+    /// Early rejection: pin log-density at −∞.
+    fn reject(&mut self);
+    /// Whether this run has been rejected.
+    fn rejected(&self) -> bool;
+
+    /// The execution context (models may inspect e.g. minibatch scale).
+    fn context(&self) -> Context;
+
+    /// iid continuous observations under one distribution.
+    fn observe_iid(&mut self, dist: &ScalarDist<T>, obs: &[f64]) {
+        for &o in obs {
+            if self.rejected() {
+                return;
+            }
+            self.observe(dist, o);
+        }
+    }
+
+    /// iid discrete observations under one distribution.
+    fn observe_int_iid(&mut self, dist: &DiscreteDist<T>, obs: &[i64]) {
+        for &o in obs {
+            if self.rejected() {
+                return;
+            }
+            self.observe_int(dist, o);
+        }
+    }
+}
+
+/// A probabilistic model: data plus a generative body.
+///
+/// Implementations are usually produced by the [`crate::model!`] macro,
+/// which writes the body once (generic over [`Scalar`]) and dispatches the
+/// three monomorphizations here.
+pub trait Model: Send + Sync {
+    fn name(&self) -> &str;
+    /// Evaluate with plain floats (sampling, cheap log-density).
+    fn eval_f64(&self, api: &mut dyn TildeApi<f64>);
+    /// Evaluate with forward-mode duals.
+    fn eval_dual(&self, api: &mut dyn TildeApi<Dual>);
+    /// Evaluate with reverse-tape variables.
+    fn eval_tape(&self, api: &mut dyn TildeApi<TVar>);
+}
+
+/// Run the model under a [`executors::SampleExecutor`], drawing any missing
+/// variables from their priors, and return the accumulated log-joint.
+pub fn sample_run<R: rand_core::RngCore>(
+    model: &dyn Model,
+    rng: &mut R,
+    vi: &mut crate::varinfo::UntypedVarInfo,
+    ctx: Context,
+) -> f64 {
+    let mut exec = executors::SampleExecutor::new(rng, vi, ctx);
+    model.eval_f64(&mut exec);
+    let lp = exec.logp();
+    vi.logp = lp;
+    lp
+}
+
+/// Build a fresh trace from the model's prior (first contact): the
+/// "initial sampling phase with UntypedVarInfo" of §2.2.
+pub fn init_trace<R: rand_core::RngCore>(
+    model: &dyn Model,
+    rng: &mut R,
+) -> crate::varinfo::UntypedVarInfo {
+    let mut vi = crate::varinfo::UntypedVarInfo::new();
+    let _ = sample_run(model, rng, &mut vi, Context::Default);
+    vi
+}
+
+/// Specialize: run once untyped, then freeze into a [`crate::varinfo::TypedVarInfo`].
+pub fn init_typed<R: rand_core::RngCore>(
+    model: &dyn Model,
+    rng: &mut R,
+) -> crate::varinfo::TypedVarInfo {
+    let vi = init_trace(model, rng);
+    crate::varinfo::TypedVarInfo::from_untyped(&vi)
+}
+
+/// Log-density (+ optionally gradient) of the model at unconstrained θ
+/// through the **typed** layout. `T = f64` gives plain evaluation.
+pub fn typed_logp(
+    model: &dyn Model,
+    tvi: &crate::varinfo::TypedVarInfo,
+    theta: &[f64],
+    ctx: Context,
+) -> f64 {
+    let mut exec = executors::TypedExecutor::<f64>::new(tvi, theta, ctx);
+    model.eval_f64(&mut exec);
+    exec.logp()
+}
+
+/// Gradient via forward duals through the typed layout (n passes).
+pub fn typed_grad_forward(
+    model: &dyn Model,
+    tvi: &crate::varinfo::TypedVarInfo,
+    theta: &[f64],
+    ctx: Context,
+) -> (f64, Vec<f64>) {
+    crate::ad::forward::grad_forward(
+        |duals| {
+            let mut exec = executors::TypedExecutor::<Dual>::new_generic(tvi, duals, ctx);
+            model.eval_dual(&mut exec);
+            exec.logp_t()
+        },
+        theta,
+    )
+}
+
+/// Gradient via the reverse tape through the typed layout (one pass).
+pub fn typed_grad_reverse(
+    model: &dyn Model,
+    tvi: &crate::varinfo::TypedVarInfo,
+    theta: &[f64],
+    ctx: Context,
+) -> (f64, Vec<f64>) {
+    crate::ad::reverse::grad_reverse(
+        |tvars| {
+            let mut exec = executors::TypedExecutor::<TVar>::new_generic(tvi, tvars, ctx);
+            model.eval_tape(&mut exec);
+            exec.logp_t()
+        },
+        theta,
+    )
+}
+
+/// Log-density at unconstrained θ through the **untyped** (boxed, hashed)
+/// trace — the pre-specialization path.
+pub fn untyped_logp(
+    model: &dyn Model,
+    vi: &crate::varinfo::UntypedVarInfo,
+    theta: &[f64],
+    ctx: Context,
+) -> f64 {
+    let mut exec = executors::UntypedFlatExecutor::<f64>::new(vi, theta, ctx);
+    model.eval_f64(&mut exec);
+    exec.logp()
+}
+
+/// Forward-mode gradient through the untyped trace.
+pub fn untyped_grad_forward(
+    model: &dyn Model,
+    vi: &crate::varinfo::UntypedVarInfo,
+    theta: &[f64],
+    ctx: Context,
+) -> (f64, Vec<f64>) {
+    crate::ad::forward::grad_forward(
+        |duals| {
+            let mut exec = executors::UntypedFlatExecutor::<Dual>::new_generic(vi, duals, ctx);
+            model.eval_dual(&mut exec);
+            exec.logp_t()
+        },
+        theta,
+    )
+}
+
+/// Reverse-tape gradient through the untyped trace.
+pub fn untyped_grad_reverse(
+    model: &dyn Model,
+    vi: &crate::varinfo::UntypedVarInfo,
+    theta: &[f64],
+    ctx: Context,
+) -> (f64, Vec<f64>) {
+    crate::ad::reverse::grad_reverse(
+        |tvars| {
+            let mut exec = executors::UntypedFlatExecutor::<TVar>::new_generic(vi, tvars, ctx);
+            model.eval_tape(&mut exec);
+            exec.logp_t()
+        },
+        theta,
+    )
+}

@@ -1,0 +1,117 @@
+//! T1.1 (10,000-D Gaussian) and T1.2 (Gauss Unknown).
+
+use crate::prelude::*;
+use crate::runtime::DataInput;
+
+use super::BenchModel;
+
+model! {
+    /// `x ~ IsoNormal(0, 1, dim)` — the 10,000-D Gaussian benchmark. Pure
+    /// prior; the hot spot is the long iid-normal reduction (L1 kernel
+    /// `gauss_logpdf` on the AOT path).
+    pub GaussianKd {
+        dim: usize,
+    }
+    fn body<T>(this, api) {
+        let _x = tilde_vec!(api, x ~ IsoNormal(c(0.0), c(1.0), this.dim));
+    }
+}
+
+/// Full Table-1 workload: 10,000 dimensions.
+pub fn gaussian_10kd() -> BenchModel {
+    gaussian_kd(10_000)
+}
+
+pub fn gaussian_kd(dim: usize) -> BenchModel {
+    BenchModel {
+        name: "gaussian_10kd",
+        theta_dim: dim,
+        step_size: 0.08,
+        model: Box::new(GaussianKd { dim }),
+        data: vec![],
+    }
+}
+
+model! {
+    /// Gauss Unknown (gdemo at scale): `s ~ InverseGamma(2,3);
+    /// m ~ Normal(0, √s); y .~ Normal(m, √s)` with 10,000 observations.
+    pub GaussUnknown {
+        y: Vec<f64>,
+    }
+    fn body<T>(this, api) {
+        let s = tilde!(api, s ~ InverseGamma(c(2.0), c(3.0)));
+        check_reject!(api);
+        let sd = s.sqrt();
+        let m = tilde!(api, m ~ Normal(c(0.0), sd));
+        // manual iid loop (hot path): identical to obs_iid! but avoids
+        // re-creating the distribution per observation
+        let mut ss = c::<T>(0.0);
+        for &yi in &this.y {
+            let z = (m - yi) / sd;
+            ss = ss + z * z;
+        }
+        let n = this.y.len() as f64;
+        api.add_obs_logp(ss * (-0.5) - sd.ln() * n - 0.5 * crate::util::math::LN_2PI * n);
+    }
+}
+
+/// Full Table-1 workload: 10,000 one-dimensional observations.
+pub fn gauss_unknown(seed: u64) -> BenchModel {
+    gauss_unknown_n(seed, 10_000)
+}
+
+pub fn gauss_unknown_n(seed: u64, n: usize) -> BenchModel {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xA001);
+    // ground truth: m = 1.5, sd = 0.7
+    let y: Vec<f64> = (0..n).map(|_| 1.5 + 0.7 * rng.normal()).collect();
+    let data = vec![DataInput::f64(y.clone(), &[n])];
+    BenchModel {
+        name: "gauss_unknown",
+        theta_dim: 2,
+        step_size: 0.002,
+        model: Box::new(GaussUnknown { y }),
+        data,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::context::Context;
+    use crate::model::{init_typed, typed_logp};
+    use crate::util::math::LN_2PI;
+
+    #[test]
+    fn gauss_unknown_matches_manual() {
+        let bm = gauss_unknown_n(1, 50);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let tvi = init_typed(bm.model.as_ref(), &mut rng);
+        let theta = [0.3f64, 1.1];
+        let got = typed_logp(bm.model.as_ref(), &tvi, &theta, Context::Default);
+        // manual
+        let s = theta[0].exp();
+        let sd = s.sqrt();
+        let mut lp = InverseGamma::new(2.0, 3.0).logpdf(s) + theta[0];
+        lp += Normal::new(0.0, sd).logpdf(theta[1]);
+        let y = match &bm.data[0] {
+            DataInput::F64 { data, .. } => data.clone(),
+            _ => unreachable!(),
+        };
+        for yi in y {
+            lp += Normal::new(theta[1], sd).logpdf(yi);
+        }
+        assert!((got - lp).abs() < 1e-10, "{got} vs {lp}");
+        let _ = LN_2PI;
+    }
+
+    #[test]
+    fn gaussian_kd_is_std_normal() {
+        let bm = gaussian_kd(10);
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let tvi = init_typed(bm.model.as_ref(), &mut rng);
+        let theta = vec![0.5; 10];
+        let got = typed_logp(bm.model.as_ref(), &tvi, &theta, Context::Default);
+        let want = IsoNormal::new(0.0, 1.0, 10).logpdf(&theta);
+        assert!((got - want).abs() < 1e-12);
+    }
+}

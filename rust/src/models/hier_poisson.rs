@@ -1,0 +1,95 @@
+//! T1.5 Hierarchical Poisson: 10 groups × 5 observations = 50 counts.
+
+use crate::prelude::*;
+use crate::runtime::DataInput;
+
+use super::BenchModel;
+
+model! {
+    /// `a0 ~ Normal(0,10); σ ~ Exponential(1); b[g] ~ Normal(0,σ);
+    /// y_gm ~ Poisson(exp(a0 + b_g))`.
+    pub HierPoisson {
+        y: Vec<i64>,
+        groups: usize,
+        per_group: usize,
+    }
+    fn body<T>(this, api) {
+        let a0 = tilde!(api, a0 ~ Normal(c(0.0), c(10.0)));
+        let sigma = tilde!(api, sigma ~ Exponential(c(1.0)));
+        check_reject!(api);
+        let g = this.groups;
+        let b = tilde_vec!(api, b ~ IsoNormal(c(0.0), sigma, g));
+        check_reject!(api);
+        for gi in 0..g {
+            let eta = a0 + b[gi];
+            let rate = eta.exp();
+            for mi in 0..this.per_group {
+                let k = this.y[gi * this.per_group + mi];
+                obs_int!(api, k => Poisson(rate));
+            }
+        }
+    }
+}
+
+/// Full Table-1 workload: 50 observations (10 × 5).
+pub fn hier_poisson(seed: u64) -> BenchModel {
+    let (g, m) = (10usize, 5usize);
+    let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xA005);
+    let a0 = 1.0;
+    let sigma = 0.5;
+    let b: Vec<f64> = (0..g).map(|_| sigma * rng.normal()).collect();
+    let mut y = Vec::with_capacity(g * m);
+    for gi in 0..g {
+        let lam = (a0 + b[gi]).exp();
+        for _ in 0..m {
+            y.push(rng.poisson(lam) as i64);
+        }
+    }
+    let yf: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+    let data = vec![DataInput::f64(yf, &[g, m])];
+    BenchModel {
+        name: "hier_poisson",
+        theta_dim: 2 + g,
+        step_size: 0.02,
+        model: Box::new(HierPoisson {
+            y,
+            groups: g,
+            per_group: m,
+        }),
+        data,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::context::Context;
+    use crate::model::{init_typed, typed_logp};
+
+    #[test]
+    fn matches_manual_density() {
+        let bm = hier_poisson(4);
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let tvi = init_typed(bm.model.as_ref(), &mut rng);
+        let theta: Vec<f64> = (0..12).map(|i| 0.1 * (i as f64) - 0.5).collect();
+        let got = typed_logp(bm.model.as_ref(), &tvi, &theta, Context::Default);
+        let y = match &bm.data[0] {
+            DataInput::F64 { data, .. } => data.clone(),
+            _ => unreachable!(),
+        };
+        let a0 = theta[0];
+        let sigma = theta[1].exp();
+        let b = &theta[2..];
+        let mut want = Normal::new(0.0, 10.0).logpdf(a0)
+            + Exponential::new(1.0).logpdf(sigma)
+            + theta[1]
+            + IsoNormal::new(0.0, sigma, 10).logpdf(b);
+        for gi in 0..10 {
+            let rate = (a0 + b[gi]).exp();
+            for mi in 0..5 {
+                want += Poisson::new(rate).logpmf(y[gi * 5 + mi] as i64);
+            }
+        }
+        assert!((got - want).abs() < 1e-10, "{got} vs {want}");
+    }
+}

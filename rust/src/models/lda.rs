@@ -1,0 +1,143 @@
+//! T1.8 LDA: V=100 vocabulary, K=5 topics, 10 documents × ~1,000 words,
+//! topic assignments marginalized (the HMC-compatible collapsed form used
+//! by both the Stan and Turing benchmark suites).
+
+use crate::prelude::*;
+use crate::runtime::DataInput;
+
+use super::BenchModel;
+
+model! {
+    /// `theta[d] ~ Dirichlet(1,K)` per doc; `phi[k] ~ Dirichlet(1,V)` per
+    /// topic; token n: `w_n ~ Mixture_k(theta[doc_n,k], phi[k])`.
+    pub Lda {
+        w: Vec<usize>,
+        doc: Vec<usize>,
+        n_topics: usize,
+        vocab: usize,
+        n_docs: usize,
+    }
+    fn body<T>(this, api) {
+        let (kk, vv) = (this.n_topics, this.vocab);
+        let mut th: Vec<Vec<T>> = Vec::with_capacity(this.n_docs);
+        for d in 0..this.n_docs {
+            th.push(tilde_vec!(api, theta[d] ~ Dirichlet(vec![1.0; kk])));
+        }
+        let mut ph: Vec<Vec<T>> = Vec::with_capacity(kk);
+        for k in 0..kk {
+            ph.push(tilde_vec!(api, phi[k] ~ Dirichlet(vec![1.0; vv])));
+        }
+        check_reject!(api);
+        let mut lp = c::<T>(0.0);
+        for (n, (&wn, &dn)) in this.w.iter().zip(&this.doc).enumerate() {
+            let td = &th[dn];
+            let mut p = c::<T>(0.0);
+            for k in 0..kk {
+                p = p + td[k] * ph[k][wn];
+            }
+            lp = lp + p.ln();
+            // accumulate in chunks so a single rejection exits early
+            if n % 512 == 511 {
+                api.add_obs_logp(lp);
+                lp = c::<T>(0.0);
+                check_reject!(api);
+            }
+        }
+        api.add_obs_logp(lp);
+    }
+}
+
+/// Full Table-1 workload: N = 10,000 tokens over 10 docs.
+pub fn lda(seed: u64) -> BenchModel {
+    lda_n(seed, 10_000)
+}
+
+pub fn lda_n(seed: u64, n_tokens: usize) -> BenchModel {
+    let (kk, vv, dd) = (5usize, 100usize, 10usize);
+    let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xA008);
+    // ground truth: sparse topics
+    let mut phi = vec![vec![0.0f64; vv]; kk];
+    for row in phi.iter_mut() {
+        rng.dirichlet_into(&vec![0.3; vv], row);
+    }
+    let mut theta = vec![vec![0.0f64; kk]; dd];
+    for row in theta.iter_mut() {
+        rng.dirichlet_into(&vec![0.8; kk], row);
+    }
+    let mut w = Vec::with_capacity(n_tokens);
+    let mut doc = Vec::with_capacity(n_tokens);
+    for n in 0..n_tokens {
+        let d = n * dd / n_tokens; // ~equal-length docs
+        let z = rng.categorical(&theta[d]);
+        w.push(rng.categorical(&phi[z]));
+        doc.push(d);
+    }
+    let data = vec![
+        DataInput::i32(w.iter().map(|&x| x as i32).collect(), &[n_tokens]),
+        DataInput::i32(doc.iter().map(|&x| x as i32).collect(), &[n_tokens]),
+    ];
+    BenchModel {
+        name: "lda",
+        theta_dim: dd * (kk - 1) + kk * (vv - 1),
+        step_size: 0.003,
+        model: Box::new(Lda {
+            w,
+            doc,
+            n_topics: kk,
+            vocab: vv,
+            n_docs: dd,
+        }),
+        data,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::context::Context;
+    use crate::model::{init_typed, typed_logp};
+
+    #[test]
+    fn token_likelihood_matches_manual_mixture() {
+        let bm = lda_n(13, 100);
+        let mut rng = Xoshiro256pp::seed_from_u64(13);
+        let tvi = init_typed(bm.model.as_ref(), &mut rng);
+        let theta: Vec<f64> = (0..bm.theta_dim)
+            .map(|i| 0.03 * ((i % 17) as f64) - 0.2)
+            .collect();
+        let got = typed_logp(bm.model.as_ref(), &tvi, &theta, Context::Likelihood);
+
+        use crate::dist::bijector::invlink;
+        use crate::dist::Domain;
+        let (kk, vv, dd) = (5usize, 100usize, 10usize);
+        let mut off = 0;
+        let mut th = Vec::new();
+        for _ in 0..dd {
+            let mut row = Vec::new();
+            let _ = invlink(&Domain::Simplex(kk), &theta[off..off + kk - 1], &mut row);
+            th.push(row);
+            off += kk - 1;
+        }
+        let mut ph = Vec::new();
+        for _ in 0..kk {
+            let mut row = Vec::new();
+            let _ = invlink(&Domain::Simplex(vv), &theta[off..off + vv - 1], &mut row);
+            ph.push(row);
+            off += vv - 1;
+        }
+        let (w, doc) = match (&bm.data[0], &bm.data[1]) {
+            (
+                crate::runtime::DataInput::I32 { data: w, .. },
+                crate::runtime::DataInput::I32 { data: d, .. },
+            ) => (w.clone(), d.clone()),
+            _ => unreachable!(),
+        };
+        let mut want = 0.0;
+        for n in 0..100 {
+            let (wn, dn) = (w[n] as usize, doc[n] as usize);
+            let p: f64 = (0..kk).map(|k| th[dn][k] * ph[k][wn]).sum();
+            want += p.ln();
+        }
+        assert!((got - want).abs() < 1e-10, "{got} vs {want}");
+    }
+}

@@ -1,0 +1,136 @@
+//! The 8 Table-1 benchmark models, written in the tilde DSL, plus their
+//! synthetic workload generators.
+//!
+//! Each model mirrors — statement for statement — the JAX definition in
+//! `python/compile/models.py`: same visit order, same transforms, same
+//! parameterizations, so the typed Rust executor and the AOT artifact
+//! compute the same log-density at the same unconstrained point
+//! (`rust/tests/runtime_aot.rs` checks this numerically).
+//!
+//! Workloads are the paper's Table-1 sizes, generated synthetically with a
+//! fixed seed (see DESIGN.md §7 for the MNIST substitution).
+
+pub mod gauss;
+pub mod hier_poisson;
+pub mod hmm;
+pub mod lda;
+pub mod logreg;
+pub mod naive_bayes;
+pub mod sto_vol;
+
+use crate::model::Model;
+use crate::runtime::DataInput;
+
+/// A benchmark model instance: the DSL model, its XLA data inputs (in
+/// artifact argument order), and the paper's HMC step size for it.
+pub struct BenchModel {
+    pub name: &'static str,
+    pub theta_dim: usize,
+    /// static-HMC step size used by the Table-1 harness ("step size varies
+    /// for different models").
+    pub step_size: f64,
+    pub model: Box<dyn Model>,
+    pub data: Vec<DataInput>,
+}
+
+/// All Table-1 model names, in the paper's order.
+pub const ALL_MODELS: [&str; 8] = [
+    "gaussian_10kd",
+    "gauss_unknown",
+    "naive_bayes",
+    "logreg",
+    "hier_poisson",
+    "sto_volatility",
+    "hmm_semisup",
+    "lda",
+];
+
+/// Build a benchmark model with its synthetic Table-1 workload.
+pub fn build(name: &str, seed: u64) -> BenchModel {
+    match name {
+        "gaussian_10kd" => gauss::gaussian_10kd(),
+        "gauss_unknown" => gauss::gauss_unknown(seed),
+        "naive_bayes" => naive_bayes::naive_bayes(seed),
+        "logreg" => logreg::logreg(seed),
+        "hier_poisson" => hier_poisson::hier_poisson(seed),
+        "sto_volatility" => sto_vol::sto_volatility(seed),
+        "hmm_semisup" => hmm::hmm_semisup(seed),
+        "lda" => lda::lda(seed),
+        other => panic!("unknown benchmark model {other:?} (known: {ALL_MODELS:?})"),
+    }
+}
+
+/// Smaller variants of the same models for fast tests and the untyped-path
+/// benchmarks (same code paths, reduced N).
+pub fn build_small(name: &str, seed: u64) -> BenchModel {
+    match name {
+        "gaussian_10kd" => gauss::gaussian_kd(100),
+        "gauss_unknown" => gauss::gauss_unknown_n(seed, 200),
+        "naive_bayes" => naive_bayes::naive_bayes_n(seed, 50),
+        "logreg" => logreg::logreg_n(seed, 200, 10),
+        "hier_poisson" => hier_poisson::hier_poisson(seed),
+        "sto_volatility" => sto_vol::sto_volatility_t(seed, 50),
+        "hmm_semisup" => hmm::hmm_semisup_t(seed, 30, 10),
+        "lda" => lda::lda_n(seed, 300),
+        other => panic!("unknown benchmark model {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::context::Context;
+    use crate::model::{init_trace, init_typed, typed_logp};
+    use crate::util::rng::Xoshiro256pp;
+    use crate::varinfo::TypedVarInfo;
+
+    #[test]
+    fn all_models_build_and_have_expected_dims() {
+        let dims = [10_000, 2, 400, 100, 12, 503, 115, 535];
+        for (name, dim) in ALL_MODELS.iter().zip(dims) {
+            let bm = build_small(name, 3);
+            assert_eq!(bm.name, *name);
+            let full = build(name, 3);
+            assert_eq!(full.theta_dim, dim, "{name}");
+        }
+    }
+
+    #[test]
+    fn typed_trace_dims_match_declared() {
+        for name in ALL_MODELS {
+            let bm = build_small(name, 5);
+            let mut rng = Xoshiro256pp::seed_from_u64(5);
+            let tvi = init_typed(bm.model.as_ref(), &mut rng);
+            // small variants have their own dims; just check logp finite
+            let lp = typed_logp(
+                bm.model.as_ref(),
+                &tvi,
+                &tvi.unconstrained,
+                Context::Default,
+            );
+            assert!(lp.is_finite(), "{name}: logp {lp}");
+        }
+    }
+
+    #[test]
+    fn full_workloads_evaluate_finite() {
+        for name in ALL_MODELS {
+            let bm = build(name, 7);
+            let mut rng = Xoshiro256pp::seed_from_u64(7);
+            let vi = init_trace(bm.model.as_ref(), &mut rng);
+            assert_eq!(
+                vi.num_unconstrained(),
+                bm.theta_dim,
+                "{name}: trace dim vs declared"
+            );
+            let tvi = TypedVarInfo::from_untyped(&vi);
+            let lp = typed_logp(
+                bm.model.as_ref(),
+                &tvi,
+                &tvi.unconstrained,
+                Context::Default,
+            );
+            assert!(lp.is_finite(), "{name}: logp {lp}");
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! T1.3 Naive Bayes: 1,000 observations × 40 dims, 10 classes.
+//!
+//! Data substitution (DESIGN.md §7): the paper uses MNIST projected to 40
+//! PCA dimensions; we generate 10 class-conditional Gaussian clusters with
+//! the same shapes, exercising the identical compute path.
+
+use crate::prelude::*;
+use crate::runtime::DataInput;
+use crate::util::math::LN_2PI;
+
+use super::BenchModel;
+
+model! {
+    /// `mu[c] ~ IsoNormal(0,1,D)` per class; `x_i ~ Normal(mu[c_i], 1)`
+    /// per dimension, labels observed (supervised NB, as in the Turing
+    /// benchmark suite — Stan cannot sample the discrete labels).
+    pub NaiveBayes {
+        x: Vec<f64>,
+        labels: Vec<usize>,
+        n_classes: usize,
+        dim: usize,
+    }
+    fn body<T>(this, api) {
+        let (cc, dd) = (this.n_classes, this.dim);
+        let mut mus: Vec<Vec<T>> = Vec::with_capacity(cc);
+        for k in 0..cc {
+            mus.push(tilde_vec!(api, mu[k] ~ IsoNormal(c(0.0), c(1.0), dd)));
+        }
+        check_reject!(api);
+        for (i, &ci) in this.labels.iter().enumerate() {
+            let mu_c = &mus[ci];
+            let row = &this.x[i * dd..(i + 1) * dd];
+            let mut ss = c::<T>(0.0);
+            for j in 0..dd {
+                let z = mu_c[j] - row[j];
+                ss = ss + z * z;
+            }
+            api.add_obs_logp(ss * (-0.5) - 0.5 * LN_2PI * dd as f64);
+        }
+    }
+}
+
+/// Full Table-1 workload: N=1,000, D=40, C=10.
+pub fn naive_bayes(seed: u64) -> BenchModel {
+    naive_bayes_n(seed, 1000)
+}
+
+pub fn naive_bayes_n(seed: u64, n: usize) -> BenchModel {
+    let (cc, dd) = (10usize, 40usize);
+    let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xA003);
+    let centers: Vec<Vec<f64>> = (0..cc)
+        .map(|_| (0..dd).map(|_| 1.5 * rng.normal()).collect())
+        .collect();
+    let mut x = Vec::with_capacity(n * dd);
+    let mut labels = Vec::with_capacity(n);
+    let mut onehot = vec![0.0f64; n * cc];
+    for i in 0..n {
+        let ci = rng.uniform_usize(cc);
+        labels.push(ci);
+        onehot[i * cc + ci] = 1.0;
+        for j in 0..dd {
+            x.push(centers[ci][j] + rng.normal());
+        }
+    }
+    let data = vec![
+        DataInput::f64(x.clone(), &[n, dd]),
+        DataInput::f64(onehot, &[n, cc]),
+    ];
+    BenchModel {
+        name: "naive_bayes",
+        theta_dim: cc * dd,
+        step_size: 0.01,
+        model: Box::new(NaiveBayes {
+            x,
+            labels,
+            n_classes: cc,
+            dim: dd,
+        }),
+        data,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::context::Context;
+    use crate::model::{init_typed, typed_logp};
+
+    #[test]
+    fn matches_distribution_based_formulation() {
+        let bm = naive_bayes_n(9, 20);
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let tvi = init_typed(bm.model.as_ref(), &mut rng);
+        let theta: Vec<f64> = (0..400).map(|i| (i as f64 * 0.01).sin() * 0.3).collect();
+        let got = typed_logp(bm.model.as_ref(), &tvi, &theta, Context::Default);
+        // reference with Normal objects
+        let x = match &bm.data[0] {
+            DataInput::F64 { data, .. } => data.clone(),
+            _ => unreachable!(),
+        };
+        let onehot = match &bm.data[1] {
+            DataInput::F64 { data, .. } => data.clone(),
+            _ => unreachable!(),
+        };
+        let mut want = IsoNormal::new(0.0, 1.0, 400).logpdf(&theta);
+        for i in 0..20 {
+            let ci = (0..10).find(|&k| onehot[i * 10 + k] == 1.0).unwrap();
+            for j in 0..40 {
+                want += Normal::new(theta[ci * 40 + j], 1.0).logpdf(x[i * 40 + j]);
+            }
+        }
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+    }
+}

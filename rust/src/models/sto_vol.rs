@@ -1,0 +1,102 @@
+//! T1.6 Stochastic Volatility: 500-step AR(1) latent log-variance.
+//!
+//! The scalar time-series loop is the workload where the paper finds the
+//! tape-based reverse AD (Tracker.jl) slowest — each of the 500 latent
+//! states participates in two sequential density terms.
+
+use crate::prelude::*;
+use crate::runtime::DataInput;
+
+use super::BenchModel;
+
+model! {
+    /// `φ ~ Uniform(-1,1); σ ~ HalfCauchy(2); μ ~ Cauchy(0,10);
+    /// h₀ ~ N(μ, σ/√(1-φ²)); h_t ~ N(μ+φ(h_{t-1}-μ), σ);
+    /// y_t ~ N(0, exp(h_t/2))`.
+    pub StoVol {
+        y: Vec<f64>,
+    }
+    fn body<T>(this, api) {
+        let phi = tilde!(api, phi ~ Uniform(c(-1.0), c(1.0)));
+        let sigma = tilde!(api, sigma ~ HalfCauchy(c(2.0)));
+        let mu = tilde!(api, mu ~ Cauchy(c(0.0), c(10.0)));
+        check_reject!(api);
+        let t_len = this.y.len();
+        let sd0 = sigma / (-(phi * phi) + 1.0).sqrt();
+        let mut h_prev = tilde!(api, h[0] ~ Normal(mu, sd0));
+        obs!(api, this.y[0] => Normal(c(0.0), (h_prev * 0.5).exp()));
+        for t in 1..t_len {
+            let m = mu + phi * (h_prev - mu);
+            let h_t = tilde!(api, h[t] ~ Normal(m, sigma));
+            obs!(api, this.y[t] => Normal(c(0.0), (h_t * 0.5).exp()));
+            h_prev = h_t;
+        }
+    }
+}
+
+/// Full Table-1 workload: T = 500.
+pub fn sto_volatility(seed: u64) -> BenchModel {
+    sto_volatility_t(seed, 500)
+}
+
+pub fn sto_volatility_t(seed: u64, t_len: usize) -> BenchModel {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xA006);
+    let (phi, sigma, mu) = (0.95, 0.25, -1.0);
+    let mut h = mu;
+    let mut y = Vec::with_capacity(t_len);
+    for _ in 0..t_len {
+        h = mu + phi * (h - mu) + sigma * rng.normal();
+        y.push((h / 2.0).exp() * rng.normal());
+    }
+    let data = vec![DataInput::f64(y.clone(), &[t_len])];
+    BenchModel {
+        name: "sto_volatility",
+        theta_dim: 3 + t_len,
+        step_size: 0.004,
+        model: Box::new(StoVol { y }),
+        data,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::context::Context;
+    use crate::model::{init_typed, typed_logp};
+
+    #[test]
+    fn matches_manual_density() {
+        let bm = sto_volatility_t(8, 20);
+        let mut rng = Xoshiro256pp::seed_from_u64(8);
+        let tvi = init_typed(bm.model.as_ref(), &mut rng);
+        let theta: Vec<f64> = (0..23).map(|i| 0.05 * i as f64 - 0.4).collect();
+        let got = typed_logp(bm.model.as_ref(), &tvi, &theta, Context::Default);
+
+        let y = match &bm.data[0] {
+            DataInput::F64 { data, .. } => data.clone(),
+            _ => unreachable!(),
+        };
+        // manual, mirroring python/compile/models.py::sto_vol_logp
+        let u = theta[0];
+        let sig_u = crate::util::math::sigmoid(u);
+        let phi = -1.0 + 2.0 * sig_u;
+        let ladj_phi = crate::util::math::log_sigmoid(u)
+            + crate::util::math::log_sigmoid(-u)
+            + 2.0f64.ln();
+        let sigma = theta[1].exp();
+        let mu = theta[2];
+        let h = &theta[3..];
+        let mut want = Uniform::new(-1.0, 1.0).logpdf(phi) + ladj_phi;
+        want += HalfCauchy::new(2.0).logpdf(sigma) + theta[1];
+        want += Cauchy::new(0.0, 10.0).logpdf(mu);
+        let sd0 = sigma / (1.0 - phi * phi).sqrt();
+        want += Normal::new(mu, sd0).logpdf(h[0]);
+        for t in 1..20 {
+            want += Normal::new(mu + phi * (h[t - 1] - mu), sigma).logpdf(h[t]);
+        }
+        for t in 0..20 {
+            want += Normal::new(0.0, (h[t] / 2.0).exp()).logpdf(y[t]);
+        }
+        assert!((got - want).abs() < 1e-10, "{got} vs {want}");
+    }
+}

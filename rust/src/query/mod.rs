@@ -1,0 +1,448 @@
+//! Probability queries — the paper's `prob"..."` string macro (§3.5).
+//!
+//! A query string has the shape
+//!
+//! ```text
+//! lhs₁ = v₁, lhs₂ = v₂ | rhs₁ = w₁, …, model = name [, chain]
+//! ```
+//!
+//! and is evaluated against a [`ModelRegistry`] of model builders:
+//!
+//! - parameters on the LHS, nothing bound on the RHS → **prior**
+//!   probability of those parameter values;
+//! - data on the LHS, parameters on the RHS → **likelihood** of the data
+//!   given the parameters;
+//! - data *and* parameters on the LHS → **joint** probability;
+//! - data on the LHS, `chain` on the RHS → **posterior predictive**
+//!   probability averaged over the chain's draws.
+//!
+//! Values support scalar (`1.5`), vector (`[1.0, 2.0]`) and integer-vector
+//! (`[0, 1, 1]i`) literals. All results are returned as **log**-probability
+//! ([`QueryResult::log_prob`]); `.prob()` exponentiates.
+
+use std::collections::HashMap;
+
+use crate::context::{Accumulator, Context};
+use crate::dist::{DiscreteDist, ScalarDist, VecDist};
+use crate::model::{Model, TildeApi};
+use crate::value::Value;
+use crate::varname::VarName;
+
+/// Parsed variable bindings.
+pub type Bindings = Vec<(String, Value)>;
+
+/// A parsed probability query.
+#[derive(Clone, Debug)]
+pub struct Query {
+    pub lhs: Bindings,
+    pub rhs: Bindings,
+    pub model: Option<String>,
+    pub use_chain: bool,
+}
+
+/// Model builders: name → closure(data bindings) → model instance.
+/// Builders look up the data fields they need in the bindings (LHS ∪ RHS)
+/// and default to empty data when absent (so pure prior queries work).
+#[derive(Default)]
+pub struct ModelRegistry {
+    builders: HashMap<String, Box<dyn Fn(&Bindings) -> Box<dyn Model> + Send + Sync>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register<F>(&mut self, name: &str, f: F)
+    where
+        F: Fn(&Bindings) -> Box<dyn Model> + Send + Sync + 'static,
+    {
+        self.builders.insert(name.to_string(), Box::new(f));
+    }
+
+    pub fn build(&self, name: &str, data: &Bindings) -> Result<Box<dyn Model>, String> {
+        self.builders
+            .get(name)
+            .map(|b| b(data))
+            .ok_or_else(|| format!("unknown model {name:?}"))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.builders.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+/// Result of a query evaluation.
+#[derive(Clone, Copy, Debug)]
+pub struct QueryResult {
+    pub log_prob: f64,
+}
+
+impl QueryResult {
+    pub fn prob(&self) -> f64 {
+        self.log_prob.exp()
+    }
+}
+
+impl Query {
+    /// Parse `"a = 1.5, b = [1, 2] | s = 0.3, model = linreg"`.
+    pub fn parse(s: &str) -> Result<Query, String> {
+        let (lhs_s, rhs_s) = s
+            .split_once('|')
+            .ok_or_else(|| "query must contain '|'".to_string())?;
+        let lhs = parse_bindings(lhs_s)?;
+        let mut rhs = Vec::new();
+        let mut model = None;
+        let mut use_chain = false;
+        for (k, v_raw) in split_assignments(rhs_s)? {
+            match k.as_str() {
+                "model" => model = Some(v_raw.trim().to_string()),
+                "chain" => use_chain = true,
+                _ => rhs.push((k, parse_value(&v_raw)?)),
+            }
+        }
+        Ok(Query {
+            lhs,
+            rhs,
+            model,
+            use_chain,
+        })
+    }
+}
+
+fn split_assignments(s: &str) -> Result<Vec<(String, String)>, String> {
+    // split on commas not inside brackets
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut cur = String::new();
+    for ch in s.chars() {
+        match ch {
+            '[' => {
+                depth += 1;
+                cur.push(ch);
+            }
+            ']' => {
+                depth = depth.saturating_sub(1);
+                cur.push(ch);
+            }
+            ',' if depth == 0 => {
+                if !cur.trim().is_empty() {
+                    out.push(std::mem::take(&mut cur));
+                }
+            }
+            _ => cur.push(ch),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out.into_iter()
+        .map(|frag| {
+            let frag = frag.trim();
+            if frag == "chain" {
+                return Ok(("chain".to_string(), String::new()));
+            }
+            let (k, v) = frag
+                .split_once('=')
+                .ok_or_else(|| format!("expected 'name = value' in {frag:?}"))?;
+            Ok((k.trim().to_string(), v.trim().to_string()))
+        })
+        .collect()
+}
+
+fn parse_bindings(s: &str) -> Result<Bindings, String> {
+    split_assignments(s)?
+        .into_iter()
+        .map(|(k, v)| Ok((k, parse_value(&v)?)))
+        .collect()
+}
+
+/// Parse a value literal: `1.5`, `[1.0, 2.0]`, `[0, 1, 1]i` (int vector),
+/// `3i` (integer).
+pub fn parse_value(s: &str) -> Result<Value, String> {
+    let s = s.trim();
+    if let Some(body) = s.strip_suffix('i') {
+        let body = body.trim();
+        if let Some(inner) = body.strip_prefix('[').and_then(|b| b.strip_suffix(']')) {
+            let v: Result<Vec<i64>, _> = inner
+                .split(',')
+                .filter(|p| !p.trim().is_empty())
+                .map(|p| p.trim().parse::<i64>())
+                .collect();
+            return v
+                .map(Value::IntVec)
+                .map_err(|e| format!("bad int vector {s:?}: {e}"));
+        }
+        return body
+            .parse::<i64>()
+            .map(Value::Int)
+            .map_err(|e| format!("bad int {s:?}: {e}"));
+    }
+    if let Some(inner) = s.strip_prefix('[').and_then(|b| b.strip_suffix(']')) {
+        let v: Result<Vec<f64>, _> = inner
+            .split(',')
+            .filter(|p| !p.trim().is_empty())
+            .map(|p| p.trim().parse::<f64>())
+            .collect();
+        return v
+            .map(Value::Vec)
+            .map_err(|e| format!("bad vector {s:?}: {e}"));
+    }
+    s.parse::<f64>()
+        .map(Value::F64)
+        .map_err(|e| format!("bad scalar {s:?}: {e}"))
+}
+
+/// A [`TildeApi`] that reads every parameter from a fixed binding map and
+/// accumulates the context-weighted log-density. Parameters missing from
+/// the bindings are an error (the query must pin every parameter the model
+/// visits).
+struct FixedValuesExecutor<'a> {
+    values: &'a HashMap<VarName, Value>,
+    acc: Accumulator<f64>,
+    ctx: Context,
+    missing: Option<String>,
+}
+
+impl<'a> FixedValuesExecutor<'a> {
+    fn new(values: &'a HashMap<VarName, Value>, ctx: Context) -> Self {
+        Self {
+            values,
+            acc: Accumulator::new(ctx),
+            ctx,
+            missing: None,
+        }
+    }
+
+    fn fetch(&mut self, vn: &VarName) -> Option<&'a Value> {
+        let v = self.values.get(vn);
+        if v.is_none() && self.missing.is_none() {
+            self.missing = Some(vn.to_string());
+            self.acc.reject();
+        }
+        v
+    }
+}
+
+impl<'a> TildeApi<f64> for FixedValuesExecutor<'a> {
+    fn assume(&mut self, vn: VarName, dist: &ScalarDist<f64>) -> f64 {
+        match self.fetch(&vn).and_then(|v| v.as_f64()) {
+            Some(x) => {
+                self.acc.add_prior(dist.logpdf(x));
+                x
+            }
+            None => 0.0,
+        }
+    }
+
+    fn assume_vec(&mut self, vn: VarName, dist: &VecDist<f64>) -> Vec<f64> {
+        match self.fetch(&vn).and_then(|v| v.as_slice()) {
+            Some(x) => {
+                self.acc.add_prior(dist.logpdf(x));
+                x.to_vec()
+            }
+            None => vec![0.0; dist.len()],
+        }
+    }
+
+    fn assume_int(&mut self, vn: VarName, dist: &DiscreteDist<f64>) -> i64 {
+        match self.fetch(&vn).and_then(|v| v.as_int()) {
+            Some(k) => {
+                self.acc.add_prior(dist.logpmf(k));
+                k
+            }
+            None => 0,
+        }
+    }
+
+    fn observe(&mut self, dist: &ScalarDist<f64>, obs: f64) {
+        self.acc.add_lik(dist.logpdf(obs));
+    }
+
+    fn observe_int(&mut self, dist: &DiscreteDist<f64>, obs: i64) {
+        self.acc.add_lik(dist.logpmf(obs));
+    }
+
+    fn observe_vec(&mut self, dist: &VecDist<f64>, obs: &[f64]) {
+        self.acc.add_lik(dist.logpdf(obs));
+    }
+
+    fn add_obs_logp(&mut self, lp: f64) {
+        self.acc.add_lik(lp);
+    }
+
+    fn add_prior_logp(&mut self, lp: f64) {
+        self.acc.add_prior(lp);
+    }
+
+    fn reject(&mut self) {
+        self.acc.reject();
+    }
+
+    fn rejected(&self) -> bool {
+        self.acc.rejected()
+    }
+
+    fn context(&self) -> Context {
+        self.ctx
+    }
+}
+
+fn bindings_to_map(bs: &Bindings) -> Result<HashMap<VarName, Value>, String> {
+    let mut map = HashMap::new();
+    for (k, v) in bs {
+        map.insert(VarName::parse(k)?, v.clone());
+    }
+    Ok(map)
+}
+
+fn run_fixed(model: &dyn Model, params: &HashMap<VarName, Value>, ctx: Context) -> Result<f64, String> {
+    let mut exec = FixedValuesExecutor::new(params, ctx);
+    model.eval_f64(&mut exec);
+    if let Some(m) = exec.missing {
+        return Err(format!(
+            "query does not bind parameter {m} (and no chain was provided)"
+        ));
+    }
+    Ok(exec.acc.total())
+}
+
+/// Evaluate a query against the registry (and a chain for posterior
+/// predictive queries). Returns log-probability.
+pub fn eval_query(
+    q: &Query,
+    registry: &ModelRegistry,
+    chain: Option<&crate::chain::Chain>,
+) -> Result<QueryResult, String> {
+    let model_name = q
+        .model
+        .as_deref()
+        .ok_or_else(|| "query must bind 'model = <name>'".to_string())
+    // `model=` may be absent only in chain queries that still name it
+    ;
+    let model_name = model_name?;
+
+    // all data bindings visible to the builder
+    let mut data: Bindings = q.lhs.clone();
+    data.extend(q.rhs.iter().cloned());
+    let model = registry.build(model_name, &data)?;
+
+    if q.use_chain {
+        // Posterior predictive: average the LHS likelihood over chain draws.
+        let chain = chain.ok_or_else(|| "query says 'chain' but none was passed".to_string())?;
+        let mut log_terms = Vec::with_capacity(chain.len());
+        for row_idx in 0..chain.len() {
+            let mut params = HashMap::new();
+            // Group chain columns back into vector/scalar values by symbol.
+            let mut by_sym: HashMap<String, Vec<(usize, f64)>> = HashMap::new();
+            for (ci, name) in chain.names().iter().enumerate() {
+                let (sym, idx) = match name.split_once('[') {
+                    Some((s, rest)) => {
+                        let idx: usize = rest
+                            .trim_end_matches(']')
+                            .parse()
+                            .map_err(|_| format!("bad chain column {name}"))?;
+                        (s.to_string(), idx)
+                    }
+                    None => (name.clone(), 0),
+                };
+                by_sym
+                    .entry(sym)
+                    .or_default()
+                    .push((idx, chain.rows()[row_idx][ci]));
+            }
+            for (sym, mut elems) in by_sym {
+                elems.sort_by_key(|(i, _)| *i);
+                let vals: Vec<f64> = elems.iter().map(|(_, v)| *v).collect();
+                let value = if vals.len() == 1 && !chain.names().contains(&format!("{sym}[0]")) {
+                    Value::F64(vals[0])
+                } else {
+                    Value::Vec(vals)
+                };
+                params.insert(VarName::new(&sym), value);
+            }
+            log_terms.push(run_fixed(model.as_ref(), &params, Context::Likelihood)?);
+        }
+        // log mean exp
+        let lme = crate::util::math::log_sum_exp(&log_terms) - (log_terms.len() as f64).ln();
+        return Ok(QueryResult { log_prob: lme });
+    }
+
+    let lhs_map = bindings_to_map(&q.lhs)?;
+    let rhs_map = bindings_to_map(&q.rhs)?;
+
+    // Which side binds parameters decides the context:
+    //   params only on LHS            → prior probability of those params
+    //   params on RHS (data on LHS)   → likelihood of the LHS data
+    //   params + data on LHS          → joint
+    let mut params: HashMap<VarName, Value> = rhs_map.clone();
+    for (k, v) in &lhs_map {
+        params.insert(k.clone(), v.clone());
+    }
+    // Which side binds parameters decides the semantics (paper's examples):
+    //  - no RHS params: LHS holds parameters (and possibly data the builder
+    //    consumed) → prior of the params, plus the likelihood of any
+    //    observations the model scores = prior or joint, automatically.
+    //  - RHS params present: LHS is data → likelihood given the params.
+    if rhs_map.is_empty() {
+        let prior = run_fixed(model.as_ref(), &params, Context::Prior)?;
+        let lik = run_fixed(model.as_ref(), &params, Context::Likelihood)?;
+        Ok(QueryResult {
+            log_prob: prior + lik,
+        })
+    } else {
+        let lp = run_fixed(model.as_ref(), &params, Context::Likelihood)?;
+        Ok(QueryResult { log_prob: lp })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars_vectors_ints() {
+        assert_eq!(parse_value("1.5").unwrap(), Value::F64(1.5));
+        assert_eq!(
+            parse_value("[1.0, 2.5]").unwrap(),
+            Value::Vec(vec![1.0, 2.5])
+        );
+        assert_eq!(parse_value("3i").unwrap(), Value::Int(3));
+        assert_eq!(
+            parse_value("[0, 1, 1]i").unwrap(),
+            Value::IntVec(vec![0, 1, 1])
+        );
+        assert!(parse_value("abc").is_err());
+    }
+
+    #[test]
+    fn parse_query_structure() {
+        let q = Query::parse("X = [1.0, 2.0], y = [2.0] | w = [0.5, 0.0], s = 1.0, model = linreg")
+            .unwrap();
+        assert_eq!(q.lhs.len(), 2);
+        assert_eq!(q.rhs.len(), 2);
+        assert_eq!(q.model.as_deref(), Some("linreg"));
+        assert!(!q.use_chain);
+    }
+
+    #[test]
+    fn parse_chain_query() {
+        let q = Query::parse("y = [2.0] | chain, model = linreg").unwrap();
+        assert!(q.use_chain);
+        assert_eq!(q.model.as_deref(), Some("linreg"));
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(Query::parse("no pipe here").is_err());
+        assert!(Query::parse("a = [1,2 | model = m").is_err());
+        assert!(Query::parse("a == 3 | model = m").is_err());
+    }
+
+    #[test]
+    fn commas_inside_brackets_are_kept() {
+        let b = parse_bindings("a = [1.0, 2.0, 3.0], b = 4.0").unwrap();
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0].1, Value::Vec(vec![1.0, 2.0, 3.0]));
+    }
+}

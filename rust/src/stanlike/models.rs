@@ -1,0 +1,602 @@
+//! Hand-coded static densities (the Stan comparator) for all 8 Table-1
+//! models. Likelihood gradients are fully analytic; the tiny
+//! constrained↔unconstrained chain rule uses [`super::pull_back`].
+
+use crate::dist::Domain;
+use crate::gradient::LogDensity;
+use crate::models::BenchModel;
+use crate::runtime::DataInput;
+use crate::util::math::{lgamma, sigmoid, LN_2PI, LN_PI};
+
+use super::{pull_back, push_forward};
+
+/// Generic driver: a model described by its slot domains plus a
+/// constrained-space logp/grad implementation.
+pub struct StanDensity<M: ConsModel> {
+    pub model: M,
+    domains: Vec<Domain>,
+    unc_offsets: Vec<usize>,
+    cons_offsets: Vec<usize>,
+    dim: usize,
+    cons_dim: usize,
+}
+
+/// Constrained-space density: everything Stan would compile statically.
+pub trait ConsModel: Sync + Send {
+    fn domains(&self) -> Vec<Domain>;
+    /// logp (excluding Jacobian terms) and gradient w.r.t. constrained
+    /// values, accumulated into `grad` (pre-zeroed).
+    fn logp_grad_cons(&self, x: &[f64], grad: &mut [f64]) -> f64;
+}
+
+impl<M: ConsModel> StanDensity<M> {
+    pub fn new(model: M) -> Self {
+        let domains = model.domains();
+        let mut unc_offsets = Vec::with_capacity(domains.len());
+        let mut cons_offsets = Vec::with_capacity(domains.len());
+        let (mut u, mut c) = (0, 0);
+        for d in &domains {
+            unc_offsets.push(u);
+            cons_offsets.push(c);
+            u += d.unconstrained_dim();
+            c += d.constrained_dim();
+        }
+        Self {
+            model,
+            domains,
+            unc_offsets,
+            cons_offsets,
+            dim: u,
+            cons_dim: c,
+        }
+    }
+
+    fn constrain(&self, theta: &[f64]) -> (Vec<f64>, f64) {
+        let mut x = Vec::with_capacity(self.cons_dim);
+        let mut ladj = 0.0;
+        for (d, &off) in self.domains.iter().zip(&self.unc_offsets) {
+            let (xs, la) = push_forward(d, &theta[off..off + d.unconstrained_dim()]);
+            x.extend_from_slice(&xs);
+            ladj += la;
+        }
+        (x, ladj)
+    }
+}
+
+impl<M: ConsModel> LogDensity for StanDensity<M> {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn logp(&self, theta: &[f64]) -> f64 {
+        let (x, ladj) = self.constrain(theta);
+        let mut scratch = vec![0.0; self.cons_dim];
+        self.model.logp_grad_cons(&x, &mut scratch) + ladj
+    }
+
+    fn logp_grad(&self, theta: &[f64]) -> (f64, Vec<f64>) {
+        let (x, ladj) = self.constrain(theta);
+        let mut grad_cons = vec![0.0; self.cons_dim];
+        let lp = self.model.logp_grad_cons(&x, &mut grad_cons) + ladj;
+        let mut grad = vec![0.0; self.dim];
+        for (i, d) in self.domains.iter().enumerate() {
+            let (uo, un) = (self.unc_offsets[i], d.unconstrained_dim());
+            let (co, cn) = (self.cons_offsets[i], d.constrained_dim());
+            let _ = pull_back(
+                d,
+                &theta[uo..uo + un],
+                &grad_cons[co..co + cn],
+                &mut grad[uo..uo + un],
+            );
+        }
+        (lp, grad)
+    }
+}
+
+fn f64_data(d: &DataInput) -> Vec<f64> {
+    match d {
+        DataInput::F64 { data, .. } => data.clone(),
+        DataInput::I32 { data, .. } => data.iter().map(|&v| v as f64).collect(),
+    }
+}
+
+fn i32_data(d: &DataInput) -> Vec<i32> {
+    match d {
+        DataInput::I32 { data, .. } => data.clone(),
+        DataInput::F64 { data, .. } => data.iter().map(|&v| v as i32).collect(),
+    }
+}
+
+/// Build the hand-coded density matching a benchmark model's data.
+pub fn stanlike_density(bm: &BenchModel) -> Box<dyn LogDensity + Send> {
+    match bm.name {
+        "gaussian_10kd" => Box::new(StanDensity::new(GaussKd { dim: bm.theta_dim })),
+        "gauss_unknown" => Box::new(StanDensity::new(GaussUnknown {
+            y: f64_data(&bm.data[0]),
+        })),
+        "naive_bayes" => Box::new(StanDensity::new(NaiveBayes {
+            x: f64_data(&bm.data[0]),
+            onehot: f64_data(&bm.data[1]),
+            c: 10,
+            d: 40,
+        })),
+        "logreg" => Box::new(StanDensity::new(LogReg {
+            x: f64_data(&bm.data[0]),
+            y: f64_data(&bm.data[1]),
+            d: bm.theta_dim,
+        })),
+        "hier_poisson" => Box::new(StanDensity::new(HierPoisson {
+            y: f64_data(&bm.data[0]),
+            g: 10,
+            m: 5,
+        })),
+        "sto_volatility" => Box::new(StanDensity::new(StoVol {
+            y: f64_data(&bm.data[0]),
+        })),
+        "hmm_semisup" => Box::new(StanDensity::new(Hmm {
+            w: i32_data(&bm.data[0]),
+            z: i32_data(&bm.data[1]),
+            k: 5,
+            v: 20,
+        })),
+        "lda" => Box::new(StanDensity::new(Lda {
+            w: i32_data(&bm.data[0]),
+            doc: i32_data(&bm.data[1]),
+            k: 5,
+            v: 100,
+            docs: 10,
+        })),
+        other => panic!("no stanlike model for {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------- T1.1
+
+pub struct GaussKd {
+    pub dim: usize,
+}
+
+impl ConsModel for GaussKd {
+    fn domains(&self) -> Vec<Domain> {
+        vec![Domain::RealVec(self.dim)]
+    }
+
+    fn logp_grad_cons(&self, x: &[f64], grad: &mut [f64]) -> f64 {
+        let mut ss = 0.0;
+        for (g, &xi) in grad.iter_mut().zip(x) {
+            ss += xi * xi;
+            *g += -xi;
+        }
+        -0.5 * ss - 0.5 * LN_2PI * self.dim as f64
+    }
+}
+
+// ---------------------------------------------------------------- T1.2
+
+pub struct GaussUnknown {
+    pub y: Vec<f64>,
+}
+
+impl ConsModel for GaussUnknown {
+    fn domains(&self) -> Vec<Domain> {
+        vec![Domain::Positive, Domain::Real]
+    }
+
+    fn logp_grad_cons(&self, x: &[f64], grad: &mut [f64]) -> f64 {
+        let (s, m) = (x[0], x[1]);
+        let n = self.y.len() as f64;
+        // InverseGamma(2, 3)
+        let (a, b): (f64, f64) = (2.0, 3.0);
+        let mut lp = a * b.ln() - lgamma(a) - (a + 1.0) * s.ln() - b / s;
+        grad[0] += -(a + 1.0) / s + b / (s * s);
+        // m ~ Normal(0, √s)
+        lp += -0.5 * m * m / s - 0.5 * s.ln() - 0.5 * LN_2PI;
+        grad[1] += -m / s;
+        grad[0] += 0.5 * m * m / (s * s) - 0.5 / s;
+        // y ~ Normal(m, √s)
+        let mut ss = 0.0;
+        let mut sum_r = 0.0;
+        for &yi in &self.y {
+            let r = yi - m;
+            ss += r * r;
+            sum_r += r;
+        }
+        lp += -0.5 * ss / s - 0.5 * n * s.ln() - 0.5 * n * LN_2PI;
+        grad[1] += sum_r / s;
+        grad[0] += 0.5 * ss / (s * s) - 0.5 * n / s;
+        lp
+    }
+}
+
+// ---------------------------------------------------------------- T1.3
+
+pub struct NaiveBayes {
+    pub x: Vec<f64>,
+    pub onehot: Vec<f64>,
+    pub c: usize,
+    pub d: usize,
+}
+
+impl ConsModel for NaiveBayes {
+    fn domains(&self) -> Vec<Domain> {
+        (0..self.c).map(|_| Domain::RealVec(self.d)).collect()
+    }
+
+    fn logp_grad_cons(&self, mu: &[f64], grad: &mut [f64]) -> f64 {
+        let (cc, dd) = (self.c, self.d);
+        let n = self.x.len() / dd;
+        // prior N(0,1)
+        let mut lp = 0.0;
+        for (g, &m) in grad.iter_mut().zip(mu) {
+            lp += -0.5 * m * m;
+            *g += -m;
+        }
+        lp += -0.5 * LN_2PI * (cc * dd) as f64;
+        // likelihood
+        for i in 0..n {
+            let ci = (0..cc)
+                .find(|&k| self.onehot[i * cc + k] == 1.0)
+                .expect("onehot row without a 1");
+            let row = &self.x[i * dd..(i + 1) * dd];
+            let mc = &mu[ci * dd..(ci + 1) * dd];
+            let gc = &mut grad[ci * dd..(ci + 1) * dd];
+            for j in 0..dd {
+                let r = row[j] - mc[j];
+                lp += -0.5 * r * r;
+                gc[j] += r;
+            }
+        }
+        lp - 0.5 * LN_2PI * (n * dd) as f64
+    }
+}
+
+// ---------------------------------------------------------------- T1.4
+
+pub struct LogReg {
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+    pub d: usize,
+}
+
+impl ConsModel for LogReg {
+    fn domains(&self) -> Vec<Domain> {
+        vec![Domain::RealVec(self.d)]
+    }
+
+    fn logp_grad_cons(&self, w: &[f64], grad: &mut [f64]) -> f64 {
+        let d = self.d;
+        let n = self.x.len() / d;
+        let mut lp = 0.0;
+        for (g, &wi) in grad.iter_mut().zip(w) {
+            lp += -0.5 * wi * wi;
+            *g += -wi;
+        }
+        lp += -0.5 * LN_2PI * d as f64;
+        for i in 0..n {
+            let row = &self.x[i * d..(i + 1) * d];
+            let mut logit = 0.0;
+            for j in 0..d {
+                logit += row[j] * w[j];
+            }
+            let p = sigmoid(logit);
+            let yi = self.y[i];
+            // log σ(s·logit), s = 2y−1
+            lp += if yi == 1.0 {
+                crate::util::math::log_sigmoid(logit)
+            } else {
+                crate::util::math::log_sigmoid(-logit)
+            };
+            let coef = yi - p;
+            for j in 0..d {
+                grad[j] += coef * row[j];
+            }
+        }
+        lp
+    }
+}
+
+// ---------------------------------------------------------------- T1.5
+
+pub struct HierPoisson {
+    pub y: Vec<f64>,
+    pub g: usize,
+    pub m: usize,
+}
+
+impl ConsModel for HierPoisson {
+    fn domains(&self) -> Vec<Domain> {
+        vec![Domain::Real, Domain::Positive, Domain::RealVec(self.g)]
+    }
+
+    fn logp_grad_cons(&self, x: &[f64], grad: &mut [f64]) -> f64 {
+        let a0 = x[0];
+        let sigma = x[1];
+        let b = &x[2..];
+        let mut lp = -0.5 * a0 * a0 / 100.0 - (10.0f64).ln() - 0.5 * LN_2PI;
+        grad[0] += -a0 / 100.0;
+        // σ ~ Exponential(1)
+        lp += -sigma;
+        grad[1] += -1.0;
+        // b ~ N(0, σ)
+        for (gi, &bg) in b.iter().enumerate() {
+            lp += -0.5 * bg * bg / (sigma * sigma) - sigma.ln() - 0.5 * LN_2PI;
+            grad[2 + gi] += -bg / (sigma * sigma);
+            grad[1] += bg * bg / (sigma * sigma * sigma) - 1.0 / sigma;
+        }
+        // y ~ Poisson(exp(a0 + b_g))
+        for gi in 0..self.g {
+            let eta = a0 + b[gi];
+            let lam = eta.exp();
+            for mi in 0..self.m {
+                let yv = self.y[gi * self.m + mi];
+                lp += yv * eta - lam - lgamma(yv + 1.0);
+                let d_eta = yv - lam;
+                grad[0] += d_eta;
+                grad[2 + gi] += d_eta;
+            }
+        }
+        lp
+    }
+}
+
+// ---------------------------------------------------------------- T1.6
+
+pub struct StoVol {
+    pub y: Vec<f64>,
+}
+
+impl ConsModel for StoVol {
+    fn domains(&self) -> Vec<Domain> {
+        let mut d = vec![
+            Domain::Interval(-1.0, 1.0),
+            Domain::Positive,
+            Domain::Real,
+        ];
+        d.extend((0..self.y.len()).map(|_| Domain::Real));
+        d
+    }
+
+    fn logp_grad_cons(&self, x: &[f64], grad: &mut [f64]) -> f64 {
+        let t_len = self.y.len();
+        let (phi, sigma, mu) = (x[0], x[1], x[2]);
+        let h = &x[3..];
+        let s2 = sigma * sigma;
+        let mut lp = 0.0;
+
+        // priors: φ ~ U(-1,1); σ ~ HalfCauchy(2); μ ~ Cauchy(0,10)
+        lp += -(2.0f64).ln();
+        lp += -(1.0 + (sigma / 2.0).powi(2)).ln() - (2.0f64).ln()
+            + (2.0 / std::f64::consts::PI).ln();
+        grad[1] += -2.0 * sigma / (4.0 + sigma * sigma);
+        lp += -(1.0 + (mu / 10.0).powi(2)).ln() - (10.0f64).ln() - LN_PI;
+        grad[2] += -2.0 * mu / (100.0 + mu * mu);
+
+        // h₀ ~ N(μ, sd0), sd0 = σ/√(1−φ²)
+        let om = 1.0 - phi * phi;
+        let sd0 = sigma / om.sqrt();
+        let r0 = h[0] - mu;
+        lp += -0.5 * (r0 / sd0).powi(2) - sd0.ln() - 0.5 * LN_2PI;
+        let dlp_dsd0 = r0 * r0 / (sd0 * sd0 * sd0) - 1.0 / sd0;
+        grad[3] += -r0 / (sd0 * sd0);
+        grad[2] += r0 / (sd0 * sd0);
+        grad[1] += dlp_dsd0 / om.sqrt();
+        grad[0] += dlp_dsd0 * sigma * phi * om.powf(-1.5);
+
+        // h_t ~ N(μ + φ(h_{t−1}−μ), σ)
+        for t in 1..t_len {
+            let dev = h[t - 1] - mu;
+            let r = h[t] - mu - phi * dev;
+            lp += -0.5 * r * r / s2 - sigma.ln() - 0.5 * LN_2PI;
+            grad[3 + t] += -r / s2;
+            grad[3 + t - 1] += phi * r / s2;
+            grad[2] += r * (1.0 - phi) / s2;
+            grad[0] += r * dev / s2;
+            grad[1] += r * r / (s2 * sigma) - 1.0 / sigma;
+        }
+
+        // y_t ~ N(0, exp(h_t/2))
+        for t in 0..t_len {
+            let e = (-h[t]).exp();
+            lp += -0.5 * self.y[t] * self.y[t] * e - 0.5 * h[t] - 0.5 * LN_2PI;
+            grad[3 + t] += 0.5 * self.y[t] * self.y[t] * e - 0.5;
+        }
+        lp
+    }
+}
+
+// ---------------------------------------------------------------- T1.7
+
+pub struct Hmm {
+    pub w: Vec<i32>,
+    pub z: Vec<i32>,
+    pub k: usize,
+    pub v: usize,
+}
+
+impl ConsModel for Hmm {
+    fn domains(&self) -> Vec<Domain> {
+        let mut d: Vec<Domain> = (0..self.k).map(|_| Domain::Simplex(self.k)).collect();
+        d.extend((0..self.k).map(|_| Domain::Simplex(self.v)));
+        d
+    }
+
+    fn logp_grad_cons(&self, x: &[f64], grad: &mut [f64]) -> f64 {
+        let (kk, vv) = (self.k, self.v);
+        let t_sup = self.z.len();
+        let t_total = self.w.len();
+        let trans = |i: usize, j: usize| x[i * kk + j];
+        let emit_off = kk * kk;
+        let emit = |i: usize, v_: usize| x[emit_off + i * vv + v_];
+
+        // Dirichlet(1) priors: density = lnΓ(K) per row, zero gradient.
+        let mut lp = (0..kk).map(|_| lgamma(kk as f64)).sum::<f64>()
+            + (0..kk).map(|_| lgamma(vv as f64)).sum::<f64>();
+
+        // supervised counts → exact gradient n/p
+        for t in 0..t_sup {
+            let (zt, wt) = (self.z[t] as usize, self.w[t] as usize);
+            lp += emit(zt, wt).ln();
+            grad[emit_off + zt * vv + wt] += 1.0 / emit(zt, wt);
+        }
+        for t in 1..t_sup {
+            let (a, b) = (self.z[t - 1] as usize, self.z[t] as usize);
+            lp += trans(a, b).ln();
+            grad[a * kk + b] += 1.0 / trans(a, b);
+        }
+
+        // forward pass (log space), storing alphas
+        let z_last = self.z[t_sup - 1] as usize;
+        let t_un = t_total - t_sup;
+        let mut alphas = vec![vec![0.0f64; kk]; t_un];
+        for j in 0..kk {
+            alphas[0][j] = trans(z_last, j).ln() + emit(j, self.w[t_sup] as usize).ln();
+        }
+        for t in 1..t_un {
+            let wt = self.w[t_sup + t] as usize;
+            for j in 0..kk {
+                let mut terms = [0.0f64; 16];
+                for i in 0..kk {
+                    terms[i] = alphas[t - 1][i] + trans(i, j).ln();
+                }
+                alphas[t][j] =
+                    crate::util::math::log_sum_exp(&terms[..kk]) + emit(j, wt).ln();
+            }
+        }
+        let ln_z = crate::util::math::log_sum_exp(&alphas[t_un - 1]);
+        lp += ln_z;
+
+        // backward pass for expected counts (gradient of ln Z)
+        let mut beta = vec![0.0f64; kk]; // log β_{T-1} = 0
+        let mut beta_next = vec![0.0f64; kk];
+        // emission counts at the last step
+        for j in 0..kk {
+            let wt = self.w[t_total - 1] as usize;
+            let gamma = (alphas[t_un - 1][j] + beta[j] - ln_z).exp();
+            grad[emit_off + j * vv + wt] += gamma / emit(j, wt);
+        }
+        for t in (0..t_un - 1).rev() {
+            let wt1 = self.w[t_sup + t + 1] as usize;
+            // β_t(i) = LSE_j [ logT_ij + logE_j(w_{t+1}) + β_{t+1}(j) ]
+            for i in 0..kk {
+                let mut terms = [0.0f64; 16];
+                for j in 0..kk {
+                    terms[j] = trans(i, j).ln() + emit(j, wt1).ln() + beta[j];
+                }
+                beta_next[i] = crate::util::math::log_sum_exp(&terms[..kk]);
+            }
+            // expected transition counts ξ_t(i,j) and emission counts γ
+            for i in 0..kk {
+                for j in 0..kk {
+                    let xi = (alphas[t][i]
+                        + trans(i, j).ln()
+                        + emit(j, wt1).ln()
+                        + beta[j]
+                        - ln_z)
+                        .exp();
+                    grad[i * kk + j] += xi / trans(i, j);
+                }
+            }
+            for j in 0..kk {
+                let gamma = (alphas[t][j] + beta_next[j] - ln_z).exp();
+                let wt = self.w[t_sup + t] as usize;
+                grad[emit_off + j * vv + wt] += gamma / emit(j, wt);
+            }
+            std::mem::swap(&mut beta, &mut beta_next);
+        }
+        // initial-step transition counts from z_last
+        // γ_0(j) already counted emissions above; transitions z_last → j:
+        for j in 0..kk {
+            let xi = (alphas[0][j] + beta[j] - ln_z).exp();
+            grad[z_last * kk + j] += xi / trans(z_last, j);
+        }
+        lp
+    }
+}
+
+// ---------------------------------------------------------------- T1.8
+
+pub struct Lda {
+    pub w: Vec<i32>,
+    pub doc: Vec<i32>,
+    pub k: usize,
+    pub v: usize,
+    pub docs: usize,
+}
+
+impl ConsModel for Lda {
+    fn domains(&self) -> Vec<Domain> {
+        let mut d: Vec<Domain> = (0..self.docs).map(|_| Domain::Simplex(self.k)).collect();
+        d.extend((0..self.k).map(|_| Domain::Simplex(self.v)));
+        d
+    }
+
+    fn logp_grad_cons(&self, x: &[f64], grad: &mut [f64]) -> f64 {
+        let (kk, vv, dd) = (self.k, self.v, self.docs);
+        let phi_off = dd * kk;
+        let theta = |d_: usize, k_: usize| x[d_ * kk + k_];
+        let phi = |k_: usize, w_: usize| x[phi_off + k_ * vv + w_];
+
+        // Dirichlet(1) priors: constants
+        let mut lp = dd as f64 * lgamma(kk as f64) + kk as f64 * lgamma(vv as f64);
+
+        for n in 0..self.w.len() {
+            let (wn, dn) = (self.w[n] as usize, self.doc[n] as usize);
+            let mut p = 0.0;
+            for k_ in 0..kk {
+                p += theta(dn, k_) * phi(k_, wn);
+            }
+            lp += p.ln();
+            for k_ in 0..kk {
+                grad[dn * kk + k_] += phi(k_, wn) / p;
+                grad[phi_off + k_ * vv + wn] += theta(dn, k_) / p;
+            }
+        }
+        lp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::ad::finite_diff_grad;
+    use crate::context::Context;
+    use crate::model::{init_typed, typed_logp};
+    use crate::models::{build_small, ALL_MODELS};
+    use crate::util::rng::Xoshiro256pp;
+
+    use super::stanlike_density;
+    use crate::gradient::LogDensity;
+
+    /// The hand-coded density must match the DSL model's typed log-density
+    /// exactly, and its analytic gradient must match finite differences —
+    /// for every benchmark model.
+    #[test]
+    fn stanlike_matches_dsl_and_fd() {
+        for name in ALL_MODELS {
+            let bm = build_small(name, 17);
+            let stan = stanlike_density(&bm);
+            let mut rng = Xoshiro256pp::seed_from_u64(17);
+            let tvi = init_typed(bm.model.as_ref(), &mut rng);
+            assert_eq!(stan.dim(), tvi.dim(), "{name}: dim");
+            let theta: Vec<f64> = (0..tvi.dim())
+                .map(|i| 0.07 * ((i % 11) as f64) - 0.3)
+                .collect();
+            let lp_dsl = typed_logp(bm.model.as_ref(), &tvi, &theta, Context::Default);
+            let (lp_stan, grad) = stan.logp_grad(&theta);
+            let denom = 1.0 + lp_dsl.abs();
+            assert!(
+                ((lp_dsl - lp_stan) / denom).abs() < 1e-10,
+                "{name}: dsl {lp_dsl} vs stan {lp_stan}"
+            );
+            let fd = finite_diff_grad(|t| stan.logp(t), &theta, 1e-6);
+            for i in 0..theta.len() {
+                let scale = 1.0 + fd[i].abs();
+                assert!(
+                    ((grad[i] - fd[i]) / scale).abs() < 1e-4,
+                    "{name} grad[{i}]: {} vs fd {}",
+                    grad[i],
+                    fd[i]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Minimal command-line argument parsing (clap is not in the vendored
+//! dependency set). Supports subcommands, `--flag`, `--key value`,
+//! `--key=value` and positional arguments, with typed getters and
+//! automatic usage generation.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Parsed arguments: subcommand path, options, flags, positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw argv fragments (excluding the program/subcommand).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    // "--" separator: rest is positional
+                    out.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--") || n.parse::<f64>().is_ok())
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("invalid value for --{name}: {s:?}")),
+        }
+    }
+
+    pub fn get_parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        Ok(self.get_parse(name)?.unwrap_or(default))
+    }
+}
+
+/// Declarative usage text builder for subcommands.
+pub struct Usage {
+    pub program: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<(&'static str, &'static str)>,
+}
+
+impl Usage {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.program, self.about);
+        let _ = writeln!(s, "\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:", self.program);
+        let w = self.commands.iter().map(|(c, _)| c.len()).max().unwrap_or(0);
+        for (c, d) in &self.commands {
+            let _ = writeln!(s, "  {c:<w$}  {d}");
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_key_value_both_forms() {
+        let a = parse(&["--model", "lda", "--iters=500"]);
+        assert_eq!(a.get("model"), Some("lda"));
+        assert_eq!(a.get_parse::<u32>("iters").unwrap(), Some(500));
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = parse(&["run", "--verbose", "--seed", "3", "extra"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["run", "extra"]);
+        assert_eq!(a.get_parse_or::<u64>("seed", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn negative_numbers_are_values() {
+        let a = parse(&["--offset", "-1.5"]);
+        assert_eq!(a.get_parse::<f64>("offset").unwrap(), Some(-1.5));
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = parse(&["--x", "1", "--", "--not-a-flag"]);
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+
+    #[test]
+    fn default_fallbacks() {
+        let a = parse(&[]);
+        assert_eq!(a.get_or("model", "all"), "all");
+        assert_eq!(a.get_parse_or("threads", 4usize).unwrap(), 4);
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = parse(&["--n", "abc"]);
+        assert!(a.get_parse::<u32>("n").is_err());
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = Usage {
+            program: "dppl",
+            about: "demo",
+            commands: vec![("bench", "run benchmarks"), ("sample", "draw samples")],
+        };
+        let s = u.render();
+        assert!(s.contains("bench") && s.contains("sample"));
+    }
+}

@@ -1,0 +1,126 @@
+//! Memoization of expensive model sub-computations (paper §3.4).
+//!
+//! The paper points at Memoization.jl for caching expensive functions
+//! inside models during Gibbs sampling, where a block update recomputes
+//! terms that depend only on *other* blocks' (unchanged) values. [`Memo`]
+//! is that utility: a bounded, hash-keyed cache over quantized f64 keys
+//! (bit-exact keys — two calls hit only if the inputs are identical,
+//! which is precisely the Gibbs case where other blocks are frozen).
+
+use std::collections::HashMap;
+
+/// A bounded memo cache from `Vec<u64>` (f64 bit patterns) to `V`.
+pub struct Memo<V: Clone> {
+    map: HashMap<Vec<u64>, V>,
+    capacity: usize,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl<V: Clone> Memo<V> {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            map: HashMap::new(),
+            capacity: capacity.max(1),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    fn key(args: &[f64]) -> Vec<u64> {
+        args.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// Look up `args`, computing and caching on miss. When the cache is
+    /// full it is cleared (cheap epoch eviction — Gibbs access patterns
+    /// are phase-local, so LRU buys nothing over epochs).
+    pub fn get_or<F: FnOnce() -> V>(&mut self, args: &[f64], f: F) -> V {
+        let k = Self::key(args);
+        if let Some(v) = self.map.get(&k) {
+            self.hits += 1;
+            return v.clone();
+        }
+        self.misses += 1;
+        let v = f();
+        if self.map.len() >= self.capacity {
+            self.map.clear();
+        }
+        self.map.insert(k, v.clone());
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.hits + self.misses == 0 {
+            0.0
+        } else {
+            self.hits as f64 / (self.hits + self.misses) as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::Cell;
+
+    #[test]
+    fn caches_and_counts() {
+        let mut memo = Memo::new(16);
+        let evals = Cell::new(0u32);
+        let mut f = |x: f64| {
+            memo.get_or(&[x], || {
+                evals.set(evals.get() + 1);
+                x * x
+            })
+        };
+        assert_eq!(f(2.0), 4.0);
+        assert_eq!(f(2.0), 4.0);
+        assert_eq!(f(3.0), 9.0);
+        assert_eq!(evals.get(), 2);
+        assert_eq!(memo.hits, 1);
+        assert_eq!(memo.misses, 2);
+        assert!(memo.hit_rate() > 0.3);
+    }
+
+    #[test]
+    fn distinguishes_bit_patterns() {
+        let mut memo = Memo::new(4);
+        let a = memo.get_or(&[0.0], || 1);
+        let b = memo.get_or(&[-0.0], || 2); // -0.0 has a different bit pattern
+        assert_eq!((a, b), (1, 2));
+    }
+
+    #[test]
+    fn epoch_eviction_bounds_size() {
+        let mut memo = Memo::new(8);
+        for i in 0..100 {
+            let _ = memo.get_or(&[i as f64], || i);
+        }
+        assert!(memo.len() <= 8);
+    }
+
+    /// The paper's Gibbs use case: a block update holds other blocks
+    /// fixed, so the expensive term keyed on the frozen block hits.
+    #[test]
+    fn gibbs_pattern_hit_rate() {
+        let mut memo = Memo::new(64);
+        let frozen = [1.5, -0.3]; // "other block" values, constant this sweep
+        let mut total_evals = 0;
+        for _step in 0..50 {
+            let _ = memo.get_or(&frozen, || {
+                total_evals += 1;
+                frozen.iter().map(|x| x.exp()).sum::<f64>()
+            });
+        }
+        assert_eq!(total_evals, 1);
+        assert_eq!(memo.hits, 49);
+    }
+}

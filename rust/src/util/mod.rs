@@ -1,0 +1,14 @@
+//! Shared substrates: special-function math, RNG, CLI parsing, a small
+//! thread pool, and summary statistics.
+//!
+//! Everything here is built from scratch — the only external crates on the
+//! hot path are `xla` (PJRT) and the std library. This mirrors the paper's
+//! stance that the tracing library itself must own its performance story.
+
+pub mod cli;
+pub mod math;
+pub mod memo;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod timing;

@@ -1,0 +1,539 @@
+//! Pseudo-random number generation, built from scratch.
+//!
+//! [`Xoshiro256pp`] (xoshiro256++ by Blackman & Vigna) is the workhorse
+//! generator: 256-bit state, jump-free splitting via SplitMix64 seeding,
+//! and passes BigCrush. It implements [`rand_core::RngCore`] so external
+//! code expecting the standard traits interoperates.
+//!
+//! Scalar variate samplers (normal, gamma, …) live on the [`Rng`] extension
+//! trait; distribution objects in [`crate::dist`] call into these.
+
+use rand_core::{Error, RngCore};
+
+/// SplitMix64 — used to expand a 64-bit seed into xoshiro state and as a
+/// tiny standalone generator for tests.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ generator.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    /// Seed from a single u64 via SplitMix64 (the authors' recommendation).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let mut s = [0u64; 4];
+        for v in &mut s {
+            *v = sm.next_u64();
+        }
+        // All-zero state is invalid; SplitMix64 cannot produce 4 zeros from
+        // any seed, but guard anyway.
+        if s == [0, 0, 0, 0] {
+            s[0] = 0x9E3779B97F4A7C15;
+        }
+        Self { s }
+    }
+
+    #[inline]
+    pub fn next_u64_inline(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// The canonical jump function: advances the stream by 2^128 steps.
+    /// Used to derive independent per-chain streams from one seed.
+    pub fn jump(&mut self) {
+        const JUMP: [u64; 4] = [
+            0x180ec6d33cfd0aba,
+            0xd5a61266f0c9392c,
+            0xa9582618e03fc9aa,
+            0x39abdc4529b1661c,
+        ];
+        let mut s = [0u64; 4];
+        for &j in &JUMP {
+            for b in 0..64 {
+                if (j & (1u64 << b)) != 0 {
+                    s[0] ^= self.s[0];
+                    s[1] ^= self.s[1];
+                    s[2] ^= self.s[2];
+                    s[3] ^= self.s[3];
+                }
+                self.next_u64_inline();
+            }
+        }
+        self.s = s;
+    }
+
+    /// A new generator 2^128 steps ahead (and advances self): independent
+    /// stream for chain `i` when called `i` times.
+    pub fn split(&mut self) -> Self {
+        let child = self.clone();
+        self.jump();
+        child
+    }
+}
+
+impl RngCore for Xoshiro256pp {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        (self.next_u64_inline() >> 32) as u32
+    }
+
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        self.next_u64_inline()
+    }
+
+    fn fill_bytes(&mut self, dest: &mut [u8]) {
+        let mut chunks = dest.chunks_exact_mut(8);
+        for chunk in &mut chunks {
+            chunk.copy_from_slice(&self.next_u64_inline().to_le_bytes());
+        }
+        let rem = chunks.into_remainder();
+        if !rem.is_empty() {
+            let bytes = self.next_u64_inline().to_le_bytes();
+            rem.copy_from_slice(&bytes[..rem.len()]);
+        }
+    }
+
+    fn try_fill_bytes(&mut self, dest: &mut [u8]) -> Result<(), Error> {
+        self.fill_bytes(dest);
+        Ok(())
+    }
+}
+
+/// Extension trait with the variate samplers the PPL needs. Blanket-implemented
+/// for every `RngCore`.
+pub trait Rng: RngCore {
+    /// Uniform in [0, 1) with 53 bits of precision.
+    #[inline]
+    fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in (0, 1] — safe as a log() argument.
+    #[inline]
+    fn uniform_pos(&mut self) -> f64 {
+        ((self.next_u64() >> 11) + 1) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    fn uniform_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n) by Lemire's method.
+    fn uniform_usize(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        let n = n as u64;
+        // 128-bit multiply rejection sampling (Lemire 2018).
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Standard normal via the polar (Marsaglia) method.
+    ///
+    /// Stateless (no cached second value) — slightly wasteful but keeps the
+    /// generator `Clone`-safe and reproducible across call sites.
+    fn normal(&mut self) -> f64 {
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Exponential(1) via inversion.
+    #[inline]
+    fn exponential(&mut self) -> f64 {
+        -self.uniform_pos().ln()
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang; shape may be < 1 (boosted).
+    fn gamma(&mut self, shape: f64) -> f64 {
+        assert!(shape > 0.0, "gamma shape must be positive");
+        if shape < 1.0 {
+            // boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let g = self.gamma(shape + 1.0);
+            return g * self.uniform_pos().powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.uniform_pos();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v3;
+            }
+            if u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln()) {
+                return d * v3;
+            }
+        }
+    }
+
+    /// Beta(a, b) via two gammas.
+    fn beta(&mut self, a: f64, b: f64) -> f64 {
+        let x = self.gamma(a);
+        let y = self.gamma(b);
+        x / (x + y)
+    }
+
+    /// Poisson(λ): Knuth multiplication for λ < 30, else PTRS transformed
+    /// rejection (Hörmann 1993).
+    fn poisson(&mut self, lambda: f64) -> u64 {
+        assert!(lambda >= 0.0);
+        if lambda == 0.0 {
+            return 0;
+        }
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.uniform();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            // PTRS
+            let b = 0.931 + 2.53 * lambda.sqrt();
+            let a = -0.059 + 0.02483 * b;
+            let inv_alpha = 1.1239 + 1.1328 / (b - 3.4);
+            let v_r = 0.9277 - 3.6224 / (b - 2.0);
+            loop {
+                let u = self.uniform() - 0.5;
+                let v = self.uniform();
+                let us = 0.5 - u.abs();
+                let k = ((2.0 * a / us + b) * u + lambda + 0.43).floor();
+                if us >= 0.07 && v <= v_r {
+                    return k as u64;
+                }
+                if k < 0.0 || (us < 0.013 && v > us) {
+                    continue;
+                }
+                if v.ln() * inv_alpha / (a / (us * us) + b)
+                    <= k * lambda.ln() - lambda - crate::util::math::lgamma(k + 1.0)
+                {
+                    return k as u64;
+                }
+            }
+        }
+    }
+
+    /// Binomial(n, p) by inversion for small n·p, else BTPE-lite (sum of
+    /// bernoullis fallback for moderate n — n in our models is small).
+    fn binomial(&mut self, n: u64, p: f64) -> u64 {
+        assert!((0.0..=1.0).contains(&p));
+        if p == 0.0 {
+            return 0;
+        }
+        if p == 1.0 {
+            return n;
+        }
+        // Symmetry: sample the rarer outcome.
+        if p > 0.5 {
+            return n - self.binomial(n, 1.0 - p);
+        }
+        // For the model sizes used here (n ≤ a few thousand) a waiting-time
+        // / geometric skip method is plenty fast.
+        if n < 64 {
+            let mut k = 0;
+            for _ in 0..n {
+                if self.uniform() < p {
+                    k += 1;
+                }
+            }
+            return k;
+        }
+        // Geometric skipping: trials to first success ~ Geometric(p).
+        let lq = (1.0 - p).ln();
+        let mut k = 0u64;
+        let mut i = 0u64;
+        loop {
+            let g = (self.uniform_pos().ln() / lq).floor() as u64 + 1;
+            i += g;
+            if i > n {
+                break;
+            }
+            k += 1;
+        }
+        k
+    }
+
+    /// Bernoulli(p) as bool.
+    #[inline]
+    fn bernoulli(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
+    /// Categorical draw from (unnormalized) probabilities; linear scan.
+    fn categorical(&mut self, probs: &[f64]) -> usize {
+        let total: f64 = probs.iter().sum();
+        assert!(total > 0.0, "categorical probabilities sum to zero");
+        let mut u = self.uniform() * total;
+        for (i, &p) in probs.iter().enumerate() {
+            u -= p;
+            if u < 0.0 {
+                return i;
+            }
+        }
+        probs.len() - 1
+    }
+
+    /// Dirichlet(α) via normalized gammas, written into `out`.
+    fn dirichlet_into(&mut self, alpha: &[f64], out: &mut [f64]) {
+        assert_eq!(alpha.len(), out.len());
+        let mut sum = 0.0;
+        for (o, &a) in out.iter_mut().zip(alpha) {
+            *o = self.gamma(a);
+            sum += *o;
+        }
+        // Guard against all-zero underflow for tiny α.
+        if sum <= 0.0 {
+            let n = out.len() as f64;
+            for o in out.iter_mut() {
+                *o = 1.0 / n;
+            }
+            return;
+        }
+        for o in out.iter_mut() {
+            *o /= sum;
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.uniform_usize(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+impl<R: RngCore + ?Sized> Rng for R {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Xoshiro256pp {
+        Xoshiro256pp::seed_from_u64(42)
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = rng();
+        let mut b = rng();
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn jump_decorrelates() {
+        let mut a = rng();
+        let mut b = rng();
+        b.jump();
+        let eq = (0..1000).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(eq, 0);
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = rng();
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            let v = r.uniform_pos();
+            assert!(v > 0.0 && v <= 1.0);
+        }
+    }
+
+    #[test]
+    fn uniform_usize_bounds_and_coverage() {
+        let mut r = rng();
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let k = r.uniform_usize(7);
+            assert!(k < 7);
+            seen[k] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = rng();
+        let n = 200_000;
+        let (mut m, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            m += x;
+            m2 += x * x;
+        }
+        m /= n as f64;
+        m2 /= n as f64;
+        assert!(m.abs() < 0.01, "mean {m}");
+        assert!((m2 - 1.0).abs() < 0.02, "var {m2}");
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut r = rng();
+        for &shape in &[0.5, 1.0, 2.5, 10.0] {
+            let n = 100_000;
+            let mut m = 0.0;
+            for _ in 0..n {
+                m += r.gamma(shape);
+            }
+            m /= n as f64;
+            assert!(
+                (m - shape).abs() < 0.05 * shape.max(1.0),
+                "shape {shape}: mean {m}"
+            );
+        }
+    }
+
+    #[test]
+    fn poisson_moments() {
+        let mut r = rng();
+        for &lam in &[0.5, 5.0, 80.0] {
+            let n = 60_000;
+            let mut m = 0.0;
+            for _ in 0..n {
+                m += r.poisson(lam) as f64;
+            }
+            m /= n as f64;
+            assert!((m - lam).abs() < 0.05 * lam.max(1.0), "λ {lam}: mean {m}");
+        }
+    }
+
+    #[test]
+    fn binomial_moments() {
+        let mut r = rng();
+        for &(n_tr, p) in &[(10u64, 0.3), (500u64, 0.02), (200u64, 0.9)] {
+            let n = 40_000;
+            let mut m = 0.0;
+            for _ in 0..n {
+                m += r.binomial(n_tr, p) as f64;
+            }
+            m /= n as f64;
+            let expect = n_tr as f64 * p;
+            assert!(
+                (m - expect).abs() < 0.06 * expect.max(1.0),
+                "n={n_tr} p={p}: mean {m} want {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn categorical_frequencies() {
+        let mut r = rng();
+        let probs = [0.1, 0.2, 0.7];
+        let mut counts = [0usize; 3];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[r.categorical(&probs)] += 1;
+        }
+        for (c, p) in counts.iter().zip(&probs) {
+            let f = *c as f64 / n as f64;
+            assert!((f - p).abs() < 0.01, "{f} vs {p}");
+        }
+    }
+
+    #[test]
+    fn dirichlet_simplex() {
+        let mut r = rng();
+        let alpha = [0.5, 1.0, 3.0, 0.1];
+        let mut out = [0.0; 4];
+        for _ in 0..100 {
+            r.dirichlet_into(&alpha, &mut out);
+            let s: f64 = out.iter().sum();
+            assert!((s - 1.0).abs() < 1e-12);
+            assert!(out.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn beta_mean() {
+        let mut r = rng();
+        let (a, b) = (2.0, 5.0);
+        let n = 100_000;
+        let mut m = 0.0;
+        for _ in 0..n {
+            m += r.beta(a, b);
+        }
+        m /= n as f64;
+        assert!((m - a / (a + b)).abs() < 0.01);
+    }
+
+    #[test]
+    fn fill_bytes_works() {
+        let mut r = rng();
+        let mut buf = [0u8; 13];
+        r.fill_bytes(&mut buf);
+        assert!(buf.iter().any(|&b| b != 0));
+    }
+
+    #[test]
+    fn shuffle_permutes() {
+        let mut r = rng();
+        let mut xs: Vec<u32> = (0..20).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..20).collect::<Vec<_>>());
+        assert_ne!(xs, (0..20).collect::<Vec<_>>()); // astronomically unlikely
+    }
+}

@@ -1,0 +1,247 @@
+//! Summary statistics over sample vectors: mean/variance (Welford),
+//! quantiles, autocorrelation, effective sample size (Geyer initial
+//! monotone sequence) and split-R̂ (Vehtari et al. 2021) — the diagnostics
+//! MCMCChains.jl provides in the paper's ecosystem.
+
+/// Streaming mean/variance accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct RunningStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl RunningStats {
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample (n−1) variance.
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            f64::NAN
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Arithmetic mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample variance (n−1 denominator).
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return f64::NAN;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+pub fn std(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Linear-interpolated quantile (type-7, same as numpy default). `q` ∈ [0,1].
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&q));
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = pos - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Sample autocovariance at lag `k` (biased, n denominator — standard for
+/// ESS estimation).
+pub fn autocovariance(xs: &[f64], k: usize) -> f64 {
+    let n = xs.len();
+    assert!(k < n);
+    let m = mean(xs);
+    let mut s = 0.0;
+    for i in 0..n - k {
+        s += (xs[i] - m) * (xs[i + k] - m);
+    }
+    s / n as f64
+}
+
+/// Effective sample size of a single chain via Geyer's initial monotone
+/// positive sequence estimator.
+pub fn ess(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    if n < 4 {
+        return n as f64;
+    }
+    let c0 = autocovariance(xs, 0);
+    if c0 <= 0.0 {
+        return n as f64; // constant chain
+    }
+    let max_lag = (n - 2).min(n / 2);
+    // Sum of adjacent-pair autocorrelations, truncated at first negative
+    // pair, enforcing monotone decrease.
+    let mut rho_sum = 0.0;
+    let mut prev_pair = f64::INFINITY;
+    let mut k = 1;
+    while k + 1 <= max_lag {
+        let pair = (autocovariance(xs, k) + autocovariance(xs, k + 1)) / c0;
+        if pair <= 0.0 {
+            break;
+        }
+        let pair = pair.min(prev_pair);
+        rho_sum += pair;
+        prev_pair = pair;
+        k += 2;
+    }
+    let tau = 1.0 + 2.0 * rho_sum;
+    (n as f64 / tau).min(n as f64).max(1.0)
+}
+
+/// Split-R̂ across `chains` (each a slice of equal length): Gelman–Rubin
+/// potential scale reduction with chain splitting.
+pub fn split_rhat(chains: &[&[f64]]) -> f64 {
+    // Split each chain in half → 2m sequences.
+    let mut seqs: Vec<&[f64]> = Vec::with_capacity(chains.len() * 2);
+    for c in chains {
+        let h = c.len() / 2;
+        if h < 2 {
+            return f64::NAN;
+        }
+        seqs.push(&c[..h]);
+        seqs.push(&c[h..2 * h]);
+    }
+    let m = seqs.len() as f64;
+    let n = seqs[0].len() as f64;
+    let means: Vec<f64> = seqs.iter().map(|s| mean(s)).collect();
+    let vars: Vec<f64> = seqs.iter().map(|s| variance(s)).collect();
+    let grand = mean(&means);
+    let b = n / (m - 1.0) * means.iter().map(|&x| (x - grand) * (x - grand)).sum::<f64>();
+    let w = mean(&vars);
+    if w <= 0.0 {
+        return 1.0; // constant chains
+    }
+    let var_plus = (n - 1.0) / n * w + b / n;
+    (var_plus / w).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Rng, Xoshiro256pp};
+
+    #[test]
+    fn running_stats_matches_batch() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.5, -3.0];
+        let mut rs = RunningStats::new();
+        for &x in &xs {
+            rs.push(x);
+        }
+        assert!((rs.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((rs.variance() - variance(&xs)).abs() < 1e-12);
+        assert_eq!(rs.min(), -3.0);
+        assert_eq!(rs.max(), 16.5);
+        assert_eq!(rs.count(), 6);
+    }
+
+    #[test]
+    fn quantile_pins() {
+        let xs = [3.0, 1.0, 2.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+        assert!((quantile(&xs, 0.25) - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ess_iid_close_to_n() {
+        let mut r = Xoshiro256pp::seed_from_u64(7);
+        let xs: Vec<f64> = (0..4000).map(|_| r.normal()).collect();
+        let e = ess(&xs);
+        assert!(e > 3000.0, "iid ESS should be near n, got {e}");
+    }
+
+    #[test]
+    fn ess_ar1_reduced() {
+        // AR(1) with phi=0.9 → tau ≈ (1+phi)/(1-phi) = 19
+        let mut r = Xoshiro256pp::seed_from_u64(8);
+        let mut x = 0.0;
+        let xs: Vec<f64> = (0..20_000)
+            .map(|_| {
+                x = 0.9 * x + r.normal();
+                x
+            })
+            .collect();
+        let e = ess(&xs);
+        let expect = xs.len() as f64 / 19.0;
+        assert!(
+            e > expect * 0.5 && e < expect * 2.0,
+            "ESS {e}, expected ≈ {expect}"
+        );
+    }
+
+    #[test]
+    fn rhat_mixed_chains_near_one() {
+        let mut r = Xoshiro256pp::seed_from_u64(9);
+        let a: Vec<f64> = (0..2000).map(|_| r.normal()).collect();
+        let b: Vec<f64> = (0..2000).map(|_| r.normal()).collect();
+        let rh = split_rhat(&[&a, &b]);
+        assert!((rh - 1.0).abs() < 0.02, "R̂ {rh}");
+    }
+
+    #[test]
+    fn rhat_detects_disagreement() {
+        let mut r = Xoshiro256pp::seed_from_u64(10);
+        let a: Vec<f64> = (0..2000).map(|_| r.normal()).collect();
+        let b: Vec<f64> = (0..2000).map(|_| r.normal() + 5.0).collect();
+        let rh = split_rhat(&[&a, &b]);
+        assert!(rh > 2.0, "R̂ should flag separated chains, got {rh}");
+    }
+}

@@ -1,0 +1,159 @@
+//! A small scoped thread pool for running independent MCMC chains in
+//! parallel. Built on std::thread + channels (no tokio/rayon in the vendored
+//! dependency set). Work items are boxed closures; results are collected in
+//! submission order.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool. Jobs are executed FIFO by any idle worker.
+pub struct ThreadPool {
+    workers: Vec<thread::JoinHandle<()>>,
+    tx: Option<mpsc::Sender<Job>>,
+}
+
+impl ThreadPool {
+    /// Create a pool with `size` workers (min 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("dppl-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // sender dropped → shut down
+                        }
+                    })
+                    .expect("failed to spawn worker thread")
+            })
+            .collect();
+        Self {
+            workers,
+            tx: Some(tx),
+        }
+    }
+
+    /// Submit a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel → workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run `n` jobs produced by `make_job(i)` in parallel on up to `threads`
+/// workers and return their results in index order. Panics in jobs are
+/// propagated.
+pub fn parallel_map<T, F>(threads: usize, n: usize, make_job: F) -> Vec<T>
+where
+    T: Send + 'static,
+    F: Fn(usize) -> T + Send + Sync + 'static,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return (0..n).map(make_job).collect();
+    }
+    let make_job = Arc::new(make_job);
+    let (tx, rx) = mpsc::channel::<(usize, thread::Result<T>)>();
+    let pool = ThreadPool::new(threads);
+    for i in 0..n {
+        let tx = tx.clone();
+        let mj = Arc::clone(&make_job);
+        pool.execute(move || {
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| mj(i)));
+            let _ = tx.send((i, out));
+        });
+    }
+    drop(tx);
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for _ in 0..n {
+        let (i, res) = rx.recv().expect("worker dropped result channel");
+        match res {
+            Ok(v) => slots[i] = Some(v),
+            Err(p) => std::panic::resume_unwind(p),
+        }
+    }
+    slots.into_iter().map(|s| s.unwrap()).collect()
+}
+
+/// Default parallelism: number of available CPUs (≥1).
+pub fn default_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let out = parallel_map(4, 50, |i| i * i);
+        assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_single_thread_path() {
+        let out = parallel_map(1, 5, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let out: Vec<usize> = parallel_map(4, 0, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn parallel_map_propagates_panics() {
+        let _ = parallel_map(2, 4, |i| {
+            if i == 2 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+}

@@ -1,0 +1,193 @@
+//! Benchmark timing: warmup + replicated measurement producing mean ± std,
+//! the exact reporting format of the paper's Table 1. Used both by the
+//! criterion-free `cargo bench` harnesses and the `dppl bench` CLI.
+
+use std::time::Instant;
+
+use super::stats::RunningStats;
+
+/// One benchmark measurement: replicate wall-clock times in seconds.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub times: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn mean(&self) -> f64 {
+        crate::util::stats::mean(&self.times)
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.times.len() < 2 {
+            0.0
+        } else {
+            crate::util::stats::std(&self.times)
+        }
+    }
+
+    /// `mean ± std` in adaptive units.
+    pub fn display(&self) -> String {
+        let (scale, unit) = pick_unit(self.mean());
+        format!(
+            "{:.3} ± {:.3} {}",
+            self.mean() * scale,
+            self.std() * scale,
+            unit
+        )
+    }
+}
+
+fn pick_unit(secs: f64) -> (f64, &'static str) {
+    if secs >= 1.0 {
+        (1.0, "s")
+    } else if secs >= 1e-3 {
+        (1e3, "ms")
+    } else if secs >= 1e-6 {
+        (1e6, "µs")
+    } else {
+        (1e9, "ns")
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `reps` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    Measurement {
+        name: name.to_string(),
+        times,
+    }
+}
+
+/// Adaptive micro-bench: repeat the closure in growing batches until a
+/// target per-measurement duration is hit, returning per-iteration seconds.
+/// Suitable for nanosecond-scale bodies where one call is below timer
+/// resolution.
+pub fn bench_micro<F: FnMut()>(name: &str, target_secs: f64, reps: usize, mut f: F) -> Measurement {
+    // Find a batch size where one batch takes ≥ target_secs.
+    let mut batch = 1usize;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        if dt >= target_secs || batch >= 1 << 30 {
+            break;
+        }
+        batch = if dt <= 0.0 {
+            batch * 16
+        } else {
+            ((batch as f64 * target_secs / dt * 1.2) as usize).max(batch * 2)
+        };
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        times.push(t0.elapsed().as_secs_f64() / batch as f64);
+    }
+    Measurement {
+        name: name.to_string(),
+        times,
+    }
+}
+
+/// Render a list of measurements as an aligned text table.
+pub fn render_table(title: &str, rows: &[Measurement]) -> String {
+    let name_w = rows.iter().map(|r| r.name.len()).max().unwrap_or(4).max(4);
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    out.push_str(&format!("{:<name_w$}  {:>20}\n", "name", "time (mean ± std)"));
+    for r in rows {
+        out.push_str(&format!("{:<name_w$}  {:>20}\n", r.name, r.display()));
+    }
+    out
+}
+
+/// Blackbox to defeat dead-code elimination in benches (std::hint::black_box
+/// wrapper kept behind one name so benches read uniformly).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Simple throughput helper: items/sec given a Measurement and batch size.
+pub fn throughput(m: &Measurement, items_per_rep: usize) -> f64 {
+    items_per_rep as f64 / m.mean()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut acc = RunningStats::new();
+        let m = bench("sleepless", 1, 5, || {
+            acc.push(1.0);
+        });
+        assert_eq!(m.times.len(), 5);
+        assert!(m.mean() >= 0.0);
+        assert!(!m.display().is_empty());
+    }
+
+    #[test]
+    fn micro_bench_batches() {
+        let mut x = 0u64;
+        let m = bench_micro("incr", 1e-4, 3, || {
+            x = x.wrapping_add(1);
+        });
+        assert_eq!(m.times.len(), 3);
+        assert!(m.mean() < 1e-4, "per-iter time should be tiny: {}", m.mean());
+    }
+
+    #[test]
+    fn unit_scaling() {
+        let m = Measurement {
+            name: "x".into(),
+            times: vec![2.5e-6, 2.5e-6],
+        };
+        assert!(m.display().contains("µs"));
+        let m = Measurement {
+            name: "x".into(),
+            times: vec![3.0, 3.0],
+        };
+        assert!(m.display().ends_with("s"));
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let rows = vec![
+            Measurement {
+                name: "alpha".into(),
+                times: vec![0.1],
+            },
+            Measurement {
+                name: "beta".into(),
+                times: vec![0.2],
+            },
+        ];
+        let t = render_table("demo", &rows);
+        assert!(t.contains("alpha") && t.contains("beta") && t.contains("demo"));
+    }
+
+    #[test]
+    fn throughput_sane() {
+        let m = Measurement {
+            name: "x".into(),
+            times: vec![0.5],
+        };
+        assert!((throughput(&m, 100) - 200.0).abs() < 1e-9);
+    }
+}

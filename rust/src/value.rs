@@ -1,0 +1,206 @@
+//! Dynamically-typed run-time values.
+//!
+//! [`Value`] is the boxed representation used by `UntypedVarInfo` — the
+//! analogue of the paper's `Vector{Real}` storage where the element type is
+//! abstract and every access pays a dispatch/unbox cost. The typed trace
+//! (`TypedVarInfo`) stores flat `f64` buffers instead and never touches
+//! this enum on the hot path.
+
+use std::fmt;
+
+/// A dynamically-typed value: scalar, integer, vector, integer vector or
+/// dense row-major matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    F64(f64),
+    Int(i64),
+    Vec(Vec<f64>),
+    IntVec(Vec<i64>),
+    Matrix { data: Vec<f64>, rows: usize, cols: usize },
+}
+
+impl Value {
+    /// Number of f64 slots this value occupies when flattened into a
+    /// parameter vector (integers are not flattened — they are discrete and
+    /// never HMC parameters).
+    pub fn num_elements(&self) -> usize {
+        match self {
+            Value::F64(_) => 1,
+            Value::Int(_) => 1,
+            Value::Vec(v) => v.len(),
+            Value::IntVec(v) => v.len(),
+            Value::Matrix { data, .. } => data.len(),
+        }
+    }
+
+    /// True if the value holds continuous (f64) data.
+    pub fn is_continuous(&self) -> bool {
+        matches!(self, Value::F64(_) | Value::Vec(_) | Value::Matrix { .. })
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::F64(x) => Some(*x),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            Value::F64(x) if x.fract() == 0.0 => Some(*x as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_slice(&self) -> Option<&[f64]> {
+        match self {
+            Value::Vec(v) => Some(v),
+            Value::Matrix { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    pub fn as_int_slice(&self) -> Option<&[i64]> {
+        match self {
+            Value::IntVec(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Flatten continuous content into `out`. Panics on integer values.
+    pub fn flatten_into(&self, out: &mut Vec<f64>) {
+        match self {
+            Value::F64(x) => out.push(*x),
+            Value::Vec(v) => out.extend_from_slice(v),
+            Value::Matrix { data, .. } => out.extend_from_slice(data),
+            Value::Int(_) | Value::IntVec(_) => {
+                panic!("cannot flatten discrete value into continuous parameter vector")
+            }
+        }
+    }
+
+    /// Rebuild a value of the same shape as `self` from a flat slice,
+    /// consuming `self.num_elements()` entries.
+    pub fn unflatten_from(&self, flat: &[f64]) -> Value {
+        match self {
+            Value::F64(_) => Value::F64(flat[0]),
+            Value::Vec(v) => Value::Vec(flat[..v.len()].to_vec()),
+            Value::Matrix { rows, cols, .. } => Value::Matrix {
+                data: flat[..rows * cols].to_vec(),
+                rows: *rows,
+                cols: *cols,
+            },
+            Value::Int(_) | Value::IntVec(_) => {
+                panic!("cannot unflatten discrete value from continuous parameter vector")
+            }
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::F64(x) => write!(f, "{x}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Vec(v) => {
+                write!(f, "[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+            Value::IntVec(v) => write!(f, "{v:?}"),
+            Value::Matrix { rows, cols, .. } => write!(f, "<{rows}×{cols} matrix>"),
+        }
+    }
+}
+
+impl From<f64> for Value {
+    fn from(x: f64) -> Self {
+        Value::F64(x)
+    }
+}
+
+impl From<i64> for Value {
+    fn from(x: i64) -> Self {
+        Value::Int(x)
+    }
+}
+
+impl From<Vec<f64>> for Value {
+    fn from(v: Vec<f64>) -> Self {
+        Value::Vec(v)
+    }
+}
+
+impl From<Vec<i64>> for Value {
+    fn from(v: Vec<i64>) -> Self {
+        Value::IntVec(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flatten_roundtrip_scalar() {
+        let v = Value::F64(2.5);
+        let mut flat = Vec::new();
+        v.flatten_into(&mut flat);
+        assert_eq!(flat, vec![2.5]);
+        assert_eq!(v.unflatten_from(&flat), v);
+    }
+
+    #[test]
+    fn flatten_roundtrip_vec_and_matrix() {
+        let v = Value::Vec(vec![1.0, 2.0, 3.0]);
+        let m = Value::Matrix {
+            data: vec![1.0, 2.0, 3.0, 4.0],
+            rows: 2,
+            cols: 2,
+        };
+        let mut flat = Vec::new();
+        v.flatten_into(&mut flat);
+        m.flatten_into(&mut flat);
+        assert_eq!(flat.len(), 7);
+        assert_eq!(v.unflatten_from(&flat[..3]), v);
+        assert_eq!(m.unflatten_from(&flat[3..]), m);
+    }
+
+    #[test]
+    fn accessors() {
+        assert_eq!(Value::F64(1.5).as_f64(), Some(1.5));
+        assert_eq!(Value::Int(3).as_f64(), Some(3.0));
+        assert_eq!(Value::F64(2.0).as_int(), Some(2));
+        assert_eq!(Value::F64(2.5).as_int(), None);
+        assert_eq!(Value::Vec(vec![1.0]).as_slice(), Some(&[1.0][..]));
+        assert!(Value::Int(1).as_slice().is_none());
+        assert_eq!(Value::IntVec(vec![1, 2]).as_int_slice(), Some(&[1i64, 2][..]));
+    }
+
+    #[test]
+    fn continuity_flags() {
+        assert!(Value::F64(0.0).is_continuous());
+        assert!(!Value::Int(0).is_continuous());
+        assert!(!Value::IntVec(vec![]).is_continuous());
+    }
+
+    #[test]
+    #[should_panic]
+    fn flatten_discrete_panics() {
+        let mut out = Vec::new();
+        Value::Int(1).flatten_into(&mut out);
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(Value::F64(1.0).to_string(), "1");
+        assert_eq!(Value::Vec(vec![1.0, 2.0]).to_string(), "[1, 2]");
+    }
+}

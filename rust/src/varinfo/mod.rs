@@ -1,0 +1,26 @@
+//! Execution traces (the paper's §2.2): `UntypedVarInfo` and
+//! `TypedVarInfo`.
+//!
+//! The central performance mechanism of the paper: run the model once with
+//! a dynamically-typed trace that can absorb any variable structure
+//! ([`UntypedVarInfo`] — boxed values, hash-map addressing), then
+//! *specialize* it into a strictly-typed, flat representation
+//! ([`TypedVarInfo`]) whose layout the hot loop walks with a cursor — no
+//! hashing, no boxing, no dispatch. In Julia the specialization step lets
+//! the compiler generate monomorphic machine code; here it additionally
+//! fixes the parameter layout that the AOT-compiled XLA log-density
+//! artifact (the "generated machine code" of this reproduction) consumes.
+
+pub mod typed;
+pub mod untyped;
+
+pub use typed::{Slot, TypedVarInfo};
+pub use untyped::{UntypedVarInfo, VarRecord};
+
+/// Per-variable flags (paper: `set_flag!`/`is_flagged`).
+pub mod flags {
+    /// Value should be re-drawn on the next sampling run ("del" flag).
+    pub const RESAMPLE: u8 = 1 << 0;
+    /// Value was produced by this run's sampler (vs carried over).
+    pub const TRANS: u8 = 1 << 1;
+}

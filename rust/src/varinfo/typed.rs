@@ -1,0 +1,284 @@
+//! The specialized trace: flat storage, fixed layout, cursor access.
+//!
+//! `TypedVarInfo` is produced from a completed [`UntypedVarInfo`] run, once
+//! every variable's type, shape and support are known — the paper's type
+//! inference step. All continuous state lives in two flat `f64` buffers
+//! (unconstrained coordinates and their constrained images) and discrete
+//! state in one `i64` buffer; [`Slot`]s record the layout in model visit
+//! order so executors walk a cursor instead of hashing `VarName`s.
+
+use crate::dist::{bijector, Domain};
+use crate::value::Value;
+use crate::varname::VarName;
+
+use super::untyped::UntypedVarInfo;
+
+/// Layout entry for one traced variable, in model visit order.
+#[derive(Clone, Debug)]
+pub struct Slot {
+    pub vn: VarName,
+    pub domain: Domain,
+    /// Offset/length into the unconstrained vector (0-length for discrete).
+    pub unc_offset: usize,
+    pub unc_len: usize,
+    /// Offset/length into the constrained vector (0-length for discrete).
+    pub cons_offset: usize,
+    pub cons_len: usize,
+    /// Offset into the discrete buffer (only for discrete slots).
+    pub disc_offset: usize,
+    /// Whether the value is a vector (affects boxing back to `Value`).
+    pub is_vec: bool,
+}
+
+/// Strictly-typed execution trace with flat storage.
+#[derive(Clone, Debug)]
+pub struct TypedVarInfo {
+    slots: Vec<Slot>,
+    /// Flat unconstrained parameter vector θ (HMC state).
+    pub unconstrained: Vec<f64>,
+    /// Constrained images of θ, same layout as `slots[*].cons_*`.
+    pub constrained: Vec<f64>,
+    /// Discrete values in visit order.
+    pub discrete: Vec<i64>,
+    /// log-density of the last evaluation.
+    pub logp: f64,
+}
+
+impl TypedVarInfo {
+    /// Specialize an untyped trace. This is `TypedVarInfo(vi)` in the
+    /// paper: called once the initial run has discovered every variable.
+    pub fn from_untyped(vi: &UntypedVarInfo) -> Self {
+        let mut slots = Vec::with_capacity(vi.len());
+        let mut unconstrained = Vec::new();
+        let mut constrained = Vec::new();
+        let mut discrete = Vec::new();
+        for rec in vi.records() {
+            let unc_offset = unconstrained.len();
+            let cons_offset = constrained.len();
+            let disc_offset = discrete.len();
+            let mut is_vec = false;
+            match (&rec.value, rec.domain.is_discrete()) {
+                (Value::F64(x), false) => {
+                    bijector::link(&rec.domain, &[*x], &mut unconstrained);
+                    constrained.push(*x);
+                }
+                (Value::Vec(v), false) => {
+                    is_vec = true;
+                    bijector::link(&rec.domain, v, &mut unconstrained);
+                    constrained.extend_from_slice(v);
+                }
+                (Value::Int(k), true) => {
+                    discrete.push(*k);
+                }
+                (val, disc) => panic!(
+                    "cannot specialize record {} (value {val:?}, discrete={disc})",
+                    rec.vn
+                ),
+            }
+            slots.push(Slot {
+                vn: rec.vn.clone(),
+                domain: rec.domain.clone(),
+                unc_offset,
+                unc_len: unconstrained.len() - unc_offset,
+                cons_offset,
+                cons_len: constrained.len() - cons_offset,
+                disc_offset,
+                is_vec,
+            });
+        }
+        TypedVarInfo {
+            slots,
+            unconstrained,
+            constrained,
+            discrete,
+            logp: vi.logp,
+        }
+    }
+
+    pub fn slots(&self) -> &[Slot] {
+        &self.slots
+    }
+
+    /// Dimension of the unconstrained parameter vector.
+    pub fn dim(&self) -> usize {
+        self.unconstrained.len()
+    }
+
+    /// Overwrite θ and refresh the constrained cache.
+    pub fn set_unconstrained(&mut self, theta: &[f64]) {
+        assert_eq!(theta.len(), self.unconstrained.len());
+        self.unconstrained.copy_from_slice(theta);
+        self.refresh_constrained();
+    }
+
+    /// Recompute the constrained buffer from θ (invlink per slot).
+    pub fn refresh_constrained(&mut self) {
+        let mut buf: Vec<f64> = Vec::with_capacity(8);
+        for slot in &self.slots {
+            if slot.unc_len == 0 {
+                continue;
+            }
+            buf.clear();
+            let y = &self.unconstrained[slot.unc_offset..slot.unc_offset + slot.unc_len];
+            let _ = bijector::invlink(&slot.domain, y, &mut buf);
+            self.constrained[slot.cons_offset..slot.cons_offset + slot.cons_len]
+                .copy_from_slice(&buf);
+        }
+    }
+
+    /// Constrained value of a slot as a boxed [`Value`] (chain recording).
+    pub fn boxed_value(&self, slot: &Slot) -> Value {
+        if slot.domain.is_discrete() {
+            Value::Int(self.discrete[slot.disc_offset])
+        } else if slot.is_vec {
+            Value::Vec(
+                self.constrained[slot.cons_offset..slot.cons_offset + slot.cons_len].to_vec(),
+            )
+        } else {
+            Value::F64(self.constrained[slot.cons_offset])
+        }
+    }
+
+    /// Column names for chain output: one per constrained scalar element
+    /// (`s`, `w[0]`, `w[1]`, …) plus discrete slots.
+    pub fn column_names(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        for slot in &self.slots {
+            if slot.domain.is_discrete() {
+                names.push(slot.vn.to_string());
+            } else if slot.is_vec {
+                for i in 0..slot.cons_len {
+                    names.push(format!("{}[{i}]", slot.vn));
+                }
+            } else {
+                names.push(slot.vn.to_string());
+            }
+        }
+        names
+    }
+
+    /// Flatten current constrained + discrete state into one row (chain
+    /// recording; same order as `column_names`).
+    pub fn row(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.constrained.len() + self.discrete.len());
+        for slot in &self.slots {
+            if slot.domain.is_discrete() {
+                out.push(self.discrete[slot.disc_offset] as f64);
+            } else {
+                out.extend_from_slice(
+                    &self.constrained[slot.cons_offset..slot.cons_offset + slot.cons_len],
+                );
+            }
+        }
+        out
+    }
+
+    /// Check that this layout is still valid for a trace that just ran:
+    /// same variables in the same order with the same domains. Dynamic
+    /// models can change structure between iterations; on mismatch the
+    /// caller must re-specialize (paper: fall back to UntypedVarInfo).
+    pub fn layout_matches(&self, vi: &UntypedVarInfo) -> bool {
+        if self.slots.len() != vi.len() {
+            return false;
+        }
+        self.slots
+            .iter()
+            .zip(vi.records())
+            .all(|(s, r)| s.vn == r.vn && s.domain == r.domain)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{Categorical, Dirichlet, DiscreteDist, Gamma, IsoNormal, ScalarDist, VecDist};
+
+    fn demo_untyped() -> UntypedVarInfo {
+        let mut vi = UntypedVarInfo::new();
+        vi.insert(
+            VarName::new("s"),
+            Value::F64(2.0),
+            ScalarDist::Gamma(Gamma::new(2.0, 3.0)).boxed(),
+        );
+        vi.insert(
+            VarName::new("w"),
+            Value::Vec(vec![0.1, -0.2, 0.3]),
+            VecDist::IsoNormal(IsoNormal::new(0.0, 1.0, 3)).boxed(),
+        );
+        vi.insert(
+            VarName::new("z"),
+            Value::Int(2),
+            DiscreteDist::Categorical(Categorical::from_probs(&[0.2, 0.3, 0.5])).boxed(),
+        );
+        vi.insert(
+            VarName::new("theta"),
+            Value::Vec(vec![0.2, 0.3, 0.5]),
+            VecDist::Dirichlet(Dirichlet::symmetric(1.0, 3)).boxed(),
+        );
+        vi
+    }
+
+    #[test]
+    fn specialization_layout() {
+        let tvi = TypedVarInfo::from_untyped(&demo_untyped());
+        assert_eq!(tvi.slots().len(), 4);
+        // dims: s→1, w→3, z→0, theta→2 ⇒ 6 unconstrained
+        assert_eq!(tvi.dim(), 6);
+        assert_eq!(tvi.constrained.len(), 7); // 1 + 3 + 3
+        assert_eq!(tvi.discrete, vec![2]);
+        let s = &tvi.slots()[0];
+        assert_eq!((s.unc_offset, s.unc_len), (0, 1));
+        let w = &tvi.slots()[1];
+        assert_eq!((w.unc_offset, w.unc_len), (1, 3));
+        let z = &tvi.slots()[2];
+        assert_eq!(z.unc_len, 0);
+        let th = &tvi.slots()[3];
+        assert_eq!((th.unc_offset, th.unc_len), (4, 2));
+    }
+
+    #[test]
+    fn set_unconstrained_refreshes_constrained() {
+        let mut tvi = TypedVarInfo::from_untyped(&demo_untyped());
+        let mut theta = tvi.unconstrained.clone();
+        theta[0] = 0.0; // s = exp(0) = 1
+        tvi.set_unconstrained(&theta);
+        assert!((tvi.constrained[0] - 1.0).abs() < 1e-12);
+        // simplex block still sums to 1
+        let s: f64 = tvi.constrained[4..7].iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn boxed_values_and_rows() {
+        let tvi = TypedVarInfo::from_untyped(&demo_untyped());
+        assert_eq!(tvi.boxed_value(&tvi.slots()[0]), Value::F64(2.0));
+        assert_eq!(
+            tvi.boxed_value(&tvi.slots()[1]),
+            Value::Vec(vec![0.1, -0.2, 0.3])
+        );
+        assert_eq!(tvi.boxed_value(&tvi.slots()[2]), Value::Int(2));
+        let names = tvi.column_names();
+        assert_eq!(
+            names,
+            vec!["s", "w[0]", "w[1]", "w[2]", "z", "theta[0]", "theta[1]", "theta[2]"]
+        );
+        let row = tvi.row();
+        assert_eq!(row.len(), names.len());
+        assert_eq!(row[4], 2.0);
+    }
+
+    #[test]
+    fn layout_match_detects_structure_change() {
+        let vi = demo_untyped();
+        let tvi = TypedVarInfo::from_untyped(&vi);
+        assert!(tvi.layout_matches(&vi));
+        // a dynamic model that adds a variable invalidates the layout
+        let mut vi2 = demo_untyped();
+        vi2.insert(
+            VarName::new("extra"),
+            Value::F64(0.0),
+            ScalarDist::Gamma(Gamma::new(1.0, 1.0)).boxed(),
+        );
+        assert!(!tvi.layout_matches(&vi2));
+    }
+}

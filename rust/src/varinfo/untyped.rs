@@ -1,0 +1,285 @@
+//! The dynamically-typed trace: boxed values, hash-map addressing.
+//!
+//! This is the paper's `UntypedVarInfo` — `Vector{Real}` / abstract
+//! element types in Julia, an enum-boxed [`Value`] plus [`AnyDist`] here.
+//! It can absorb *any* model structure on first contact (dynamic model
+//! dimensionality, type changes between runs), at the price of per-access
+//! boxing and hashing. After one successful run it is specialized into
+//! [`super::TypedVarInfo`].
+
+use std::collections::HashMap;
+
+use crate::dist::{bijector, AnyDist, Domain};
+use crate::value::Value;
+use crate::varname::VarName;
+
+/// One traced random variable: value, distribution and support metadata.
+#[derive(Clone, Debug)]
+pub struct VarRecord {
+    pub vn: VarName,
+    pub value: Value,
+    pub dist: AnyDist,
+    pub domain: Domain,
+    pub flags: u8,
+}
+
+/// Dynamically-typed execution trace.
+#[derive(Clone, Debug, Default)]
+pub struct UntypedVarInfo {
+    records: Vec<VarRecord>,
+    index: HashMap<VarName, usize>,
+    /// log-density of the last full evaluation that used this trace
+    pub logp: f64,
+}
+
+impl UntypedVarInfo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn contains(&self, vn: &VarName) -> bool {
+        self.index.contains_key(vn)
+    }
+
+    /// Insert a fresh variable; returns its record index. Panics if already
+    /// present (model visited the same VarName twice in one run — a model
+    /// bug the paper's DSL also rejects).
+    pub fn insert(&mut self, vn: VarName, value: Value, dist: AnyDist) -> usize {
+        assert!(
+            !self.index.contains_key(&vn),
+            "duplicate tilde statement for variable {vn}"
+        );
+        let domain = dist.domain();
+        let idx = self.records.len();
+        self.index.insert(vn.clone(), idx);
+        self.records.push(VarRecord {
+            vn,
+            value,
+            dist,
+            domain,
+            flags: 0,
+        });
+        idx
+    }
+
+    pub fn get(&self, vn: &VarName) -> Option<&VarRecord> {
+        self.index.get(vn).map(|&i| &self.records[i])
+    }
+
+    pub fn get_mut(&mut self, vn: &VarName) -> Option<&mut VarRecord> {
+        let i = *self.index.get(vn)?;
+        Some(&mut self.records[i])
+    }
+
+    /// Update value + distribution metadata for an existing variable (the
+    /// distribution's parameters may change between runs when they depend
+    /// on other parameters).
+    pub fn update(&mut self, vn: &VarName, value: Value, dist: AnyDist) {
+        let rec = self.get_mut(vn).expect("update of unknown variable");
+        rec.domain = dist.domain();
+        rec.value = value;
+        rec.dist = dist;
+    }
+
+    pub fn set_value(&mut self, vn: &VarName, value: Value) {
+        let rec = self.get_mut(vn).expect("set_value of unknown variable");
+        rec.value = value;
+    }
+
+    pub fn set_flag(&mut self, vn: &VarName, flag: u8) {
+        if let Some(rec) = self.get_mut(vn) {
+            rec.flags |= flag;
+        }
+    }
+
+    pub fn clear_flag(&mut self, vn: &VarName, flag: u8) {
+        if let Some(rec) = self.get_mut(vn) {
+            rec.flags &= !flag;
+        }
+    }
+
+    pub fn is_flagged(&self, vn: &VarName, flag: u8) -> bool {
+        self.get(vn).map(|r| r.flags & flag != 0).unwrap_or(false)
+    }
+
+    /// Set the resample flag on every record (force fresh draws next run).
+    pub fn flag_all_resample(&mut self) {
+        for rec in &mut self.records {
+            rec.flags |= super::flags::RESAMPLE;
+        }
+    }
+
+    /// Records in insertion (visit) order.
+    pub fn records(&self) -> &[VarRecord] {
+        &self.records
+    }
+
+    /// Number of unconstrained (continuous) coordinates.
+    pub fn num_unconstrained(&self) -> usize {
+        self.records
+            .iter()
+            .map(|r| r.domain.unconstrained_dim())
+            .sum()
+    }
+
+    /// Flatten all continuous variables to unconstrained coordinates in
+    /// visit order (the `link` step).
+    pub fn to_unconstrained(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.num_unconstrained());
+        for rec in &self.records {
+            if rec.domain.is_discrete() {
+                continue;
+            }
+            match &rec.value {
+                Value::F64(x) => bijector::link(&rec.domain, &[*x], &mut out),
+                Value::Vec(v) => bijector::link(&rec.domain, v, &mut out),
+                other => panic!("continuous domain with non-continuous value {other:?}"),
+            }
+        }
+        out
+    }
+
+    /// Write unconstrained coordinates back into the boxed values (the
+    /// `invlink` step); `theta` must have `num_unconstrained()` entries.
+    pub fn set_from_unconstrained(&mut self, theta: &[f64]) {
+        let mut off = 0;
+        let mut buf: Vec<f64> = Vec::new();
+        for rec in &mut self.records {
+            let d = rec.domain.unconstrained_dim();
+            if d == 0 {
+                continue;
+            }
+            buf.clear();
+            let _ = bijector::invlink(&rec.domain, &theta[off..off + d], &mut buf);
+            off += d;
+            rec.value = match &rec.value {
+                Value::F64(_) => Value::F64(buf[0]),
+                Value::Vec(_) => Value::Vec(buf.clone()),
+                other => panic!("continuous domain with non-continuous value {other:?}"),
+            };
+        }
+        assert_eq!(off, theta.len(), "theta length mismatch");
+    }
+
+    /// Sum of prior log-densities at the current values (in constrained
+    /// space, no Jacobian) — the boxed slow path used by MH and tests.
+    pub fn prior_logp(&self) -> f64 {
+        self.records
+            .iter()
+            .map(|r| r.dist.logpdf(&r.value))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{Dirichlet, Gamma, IsoNormal, Normal, ScalarDist, VecDist};
+    use crate::varinfo::flags;
+
+    fn demo_vi() -> UntypedVarInfo {
+        let mut vi = UntypedVarInfo::new();
+        vi.insert(
+            VarName::new("s"),
+            Value::F64(2.0),
+            ScalarDist::Gamma(Gamma::new(2.0, 3.0)).boxed(),
+        );
+        vi.insert(
+            VarName::new("w"),
+            Value::Vec(vec![0.1, -0.2, 0.3]),
+            VecDist::IsoNormal(IsoNormal::new(0.0, 1.0, 3)).boxed(),
+        );
+        vi.insert(
+            VarName::new("theta"),
+            Value::Vec(vec![0.2, 0.3, 0.5]),
+            VecDist::Dirichlet(Dirichlet::symmetric(1.0, 3)).boxed(),
+        );
+        vi
+    }
+
+    #[test]
+    fn insert_get_update() {
+        let mut vi = demo_vi();
+        assert_eq!(vi.len(), 3);
+        assert!(vi.contains(&VarName::new("s")));
+        assert_eq!(vi.get(&VarName::new("s")).unwrap().value, Value::F64(2.0));
+        vi.set_value(&VarName::new("s"), Value::F64(5.0));
+        assert_eq!(vi.get(&VarName::new("s")).unwrap().value, Value::F64(5.0));
+        vi.update(
+            &VarName::new("s"),
+            Value::F64(1.0),
+            ScalarDist::Normal(Normal::std()).boxed(),
+        );
+        assert_eq!(vi.get(&VarName::new("s")).unwrap().domain, Domain::Real);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate tilde")]
+    fn duplicate_insert_panics() {
+        let mut vi = demo_vi();
+        vi.insert(
+            VarName::new("s"),
+            Value::F64(0.0),
+            ScalarDist::Normal(Normal::std()).boxed(),
+        );
+    }
+
+    #[test]
+    fn unconstrained_dims() {
+        let vi = demo_vi();
+        // s: Positive → 1; w: RealVec(3) → 3; theta: Simplex(3) → 2
+        assert_eq!(vi.num_unconstrained(), 6);
+    }
+
+    #[test]
+    fn link_invlink_roundtrip() {
+        let mut vi = demo_vi();
+        let theta = vi.to_unconstrained();
+        assert_eq!(theta.len(), 6);
+        // s is log-transformed
+        assert!((theta[0] - 2.0f64.ln()).abs() < 1e-12);
+        // perturb, write back, re-read
+        let theta2: Vec<f64> = theta.iter().map(|t| t + 0.1).collect();
+        vi.set_from_unconstrained(&theta2);
+        let theta3 = vi.to_unconstrained();
+        for (a, b) in theta2.iter().zip(&theta3) {
+            assert!((a - b).abs() < 1e-10);
+        }
+        // simplex value still valid
+        let th = vi.get(&VarName::new("theta")).unwrap();
+        let s: f64 = th.value.as_slice().unwrap().iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flags_roundtrip() {
+        let mut vi = demo_vi();
+        let s = VarName::new("s");
+        assert!(!vi.is_flagged(&s, flags::RESAMPLE));
+        vi.set_flag(&s, flags::RESAMPLE);
+        assert!(vi.is_flagged(&s, flags::RESAMPLE));
+        vi.clear_flag(&s, flags::RESAMPLE);
+        assert!(!vi.is_flagged(&s, flags::RESAMPLE));
+        vi.flag_all_resample();
+        assert!(vi.is_flagged(&VarName::new("w"), flags::RESAMPLE));
+    }
+
+    #[test]
+    fn prior_logp_sums_records() {
+        let vi = demo_vi();
+        let expect = Gamma::new(2.0, 3.0).logpdf(2.0)
+            + IsoNormal::new(0.0, 1.0, 3).logpdf(&[0.1, -0.2, 0.3])
+            + Dirichlet::symmetric(1.0, 3).logpdf(&[0.2f64, 0.3, 0.5]);
+        assert!((vi.prior_logp() - expect).abs() < 1e-12);
+    }
+
+    use crate::dist::Domain;
+}

@@ -1,0 +1,266 @@
+//! Run-time addressing of random variables (the paper's `VarName`).
+//!
+//! Each tilde statement creates a `VarName` holding the user-visible symbol
+//! (e.g. `"w"`) plus optional indexing (e.g. `w[3]`, `theta[2][1]`). Symbols
+//! are interned to small integers so hot-path comparisons and hashing are a
+//! single integer op rather than a string hash — the Rust analogue of
+//! Julia's `Symbol` type used by DynamicPPL.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::Mutex;
+
+use once_cell::sync::Lazy;
+
+/// Global symbol interner.
+static INTERNER: Lazy<Mutex<Interner>> = Lazy::new(|| Mutex::new(Interner::default()));
+
+#[derive(Default)]
+struct Interner {
+    map: HashMap<String, u32>,
+    names: Vec<String>,
+}
+
+/// An interned symbol.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Sym(u32);
+
+impl Sym {
+    /// Intern a string.
+    pub fn new(s: &str) -> Sym {
+        let mut int = INTERNER.lock().unwrap();
+        if let Some(&id) = int.map.get(s) {
+            return Sym(id);
+        }
+        let id = int.names.len() as u32;
+        int.names.push(s.to_string());
+        int.map.insert(s.to_string(), id);
+        Sym(id)
+    }
+
+    /// Resolve back to the string.
+    pub fn as_str(&self) -> String {
+        INTERNER.lock().unwrap().names[self.0 as usize].clone()
+    }
+
+    pub fn id(&self) -> u32 {
+        self.0
+    }
+}
+
+impl fmt::Display for Sym {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.as_str())
+    }
+}
+
+/// One indexing step applied to a symbol.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Index {
+    /// `x[i]` (0-based internally; display is 0-based too, unlike Julia).
+    At(usize),
+    /// `x[i, j]` for matrices.
+    At2(usize, usize),
+}
+
+/// The address of a random variable: symbol + index path.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VarName {
+    sym: Sym,
+    indices: Vec<Index>,
+}
+
+impl VarName {
+    /// Plain variable `x`.
+    pub fn new(sym: &str) -> Self {
+        VarName {
+            sym: Sym::new(sym),
+            indices: Vec::new(),
+        }
+    }
+
+    /// From an already-interned symbol (hot path: avoids the interner lock).
+    pub fn from_sym(sym: Sym) -> Self {
+        VarName {
+            sym,
+            indices: Vec::new(),
+        }
+    }
+
+    /// Indexed variable `x[i]`.
+    pub fn indexed(sym: &str, i: usize) -> Self {
+        VarName {
+            sym: Sym::new(sym),
+            indices: vec![Index::At(i)],
+        }
+    }
+
+    /// From interned symbol + index (hot path).
+    pub fn from_sym_indexed(sym: Sym, i: usize) -> Self {
+        VarName {
+            sym,
+            indices: vec![Index::At(i)],
+        }
+    }
+
+    /// Append an index step, consuming self: `vn.index(3)` ⇒ `x[3]`.
+    pub fn index(mut self, i: usize) -> Self {
+        self.indices.push(Index::At(i));
+        self
+    }
+
+    /// Append a 2-D index step: `x[i, j]`.
+    pub fn index2(mut self, i: usize, j: usize) -> Self {
+        self.indices.push(Index::At2(i, j));
+        self
+    }
+
+    pub fn sym(&self) -> Sym {
+        self.sym
+    }
+
+    pub fn indices(&self) -> &[Index] {
+        &self.indices
+    }
+
+    /// True if `self` is `other` or an element of `other` (same symbol and
+    /// `other` has no indices, or index path prefix match). Used by Gibbs to
+    /// select which variables a sub-sampler owns.
+    pub fn subsumed_by(&self, other: &VarName) -> bool {
+        if self.sym != other.sym {
+            return false;
+        }
+        if other.indices.is_empty() {
+            return true;
+        }
+        self.indices.len() >= other.indices.len()
+            && self.indices[..other.indices.len()] == other.indices[..]
+    }
+
+    /// Parse from display syntax: `w`, `w[3]`, `m[1,2]`, `z[2][0]`.
+    pub fn parse(s: &str) -> Result<VarName, String> {
+        let s = s.trim();
+        let open = s.find('[');
+        let (base, rest) = match open {
+            None => (s, ""),
+            Some(i) => (&s[..i], &s[i..]),
+        };
+        if base.is_empty()
+            || !base
+                .chars()
+                .all(|c| c.is_alphanumeric() || c == '_' || c == '.')
+            || base.chars().next().unwrap().is_numeric()
+        {
+            return Err(format!("invalid variable name: {s:?}"));
+        }
+        let mut vn = VarName::new(base);
+        let mut rest = rest;
+        while !rest.is_empty() {
+            if !rest.starts_with('[') {
+                return Err(format!("expected '[' in {s:?}"));
+            }
+            let close = rest
+                .find(']')
+                .ok_or_else(|| format!("unclosed '[' in {s:?}"))?;
+            let inner = &rest[1..close];
+            let parts: Vec<&str> = inner.split(',').map(|p| p.trim()).collect();
+            match parts.len() {
+                1 => {
+                    let i: usize = parts[0]
+                        .parse()
+                        .map_err(|_| format!("bad index {:?} in {s:?}", parts[0]))?;
+                    vn = vn.index(i);
+                }
+                2 => {
+                    let i: usize = parts[0]
+                        .parse()
+                        .map_err(|_| format!("bad index {:?} in {s:?}", parts[0]))?;
+                    let j: usize = parts[1]
+                        .parse()
+                        .map_err(|_| format!("bad index {:?} in {s:?}", parts[1]))?;
+                    vn = vn.index2(i, j);
+                }
+                _ => return Err(format!("too many indices in {s:?}")),
+            }
+            rest = &rest[close + 1..];
+        }
+        Ok(vn)
+    }
+}
+
+impl fmt::Display for VarName {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.sym)?;
+        for idx in &self.indices {
+            match idx {
+                Index::At(i) => write!(f, "[{i}]")?,
+                Index::At2(i, j) => write!(f, "[{i},{j}]")?,
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interning_is_stable() {
+        let a = Sym::new("w");
+        let b = Sym::new("w");
+        let c = Sym::new("s");
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.as_str(), "w");
+    }
+
+    #[test]
+    fn display_roundtrip() {
+        for s in ["w", "w[3]", "m[1,2]", "z[2][0]", "theta_k[0]"] {
+            let vn = VarName::parse(s).unwrap();
+            assert_eq!(vn.to_string(), s.replace(" ", ""));
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(VarName::parse("").is_err());
+        assert!(VarName::parse("1abc").is_err());
+        assert!(VarName::parse("x[").is_err());
+        assert!(VarName::parse("x[a]").is_err());
+        assert!(VarName::parse("x[1,2,3]").is_err());
+    }
+
+    #[test]
+    fn equality_and_hash() {
+        use std::collections::HashSet;
+        let mut set = HashSet::new();
+        set.insert(VarName::indexed("w", 0));
+        set.insert(VarName::indexed("w", 1));
+        set.insert(VarName::indexed("w", 0)); // duplicate
+        assert_eq!(set.len(), 2);
+        assert!(set.contains(&VarName::parse("w[1]").unwrap()));
+    }
+
+    #[test]
+    fn subsumption() {
+        let w = VarName::new("w");
+        let w0 = VarName::indexed("w", 0);
+        let s = VarName::new("s");
+        assert!(w0.subsumed_by(&w));
+        assert!(w.subsumed_by(&w));
+        assert!(!w.subsumed_by(&w0));
+        assert!(!w0.subsumed_by(&s));
+        let m01 = VarName::new("m").index2(0, 1);
+        assert!(m01.subsumed_by(&VarName::new("m")));
+    }
+
+    #[test]
+    fn from_sym_fast_path() {
+        let sym = Sym::new("h");
+        let a = VarName::from_sym_indexed(sym, 4);
+        let b = VarName::indexed("h", 4);
+        assert_eq!(a, b);
+    }
+}

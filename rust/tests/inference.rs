@@ -1,0 +1,145 @@
+//! Statistical end-to-end tests: samplers must recover known posteriors
+//! through every backend, including the full AOT path.
+
+use dynamicppl::context::Context;
+use dynamicppl::gradient::{Backend, NativeDensity};
+use dynamicppl::inference::{sample_chain, Hmc, Nuts, RwMh, SamplerKind};
+use dynamicppl::model::init_typed;
+use dynamicppl::models::{build_small, gauss::gauss_unknown_n};
+use dynamicppl::prelude::*;
+use dynamicppl::runtime::{artifact_exists, artifacts_dir, XlaDensity};
+use dynamicppl::stanlike::stanlike_density;
+use dynamicppl::util::stats;
+
+/// Conjugate-ish check: gauss_unknown with many observations concentrates
+/// around the data mean/variance (ground truth m=1.5, sd=0.7 → s=0.49).
+fn check_gauss_posterior(chain: &dynamicppl::chain::Chain, label: &str) {
+    let m = chain.column("m").unwrap();
+    let s = chain.column("s").unwrap();
+    assert!(
+        (stats::mean(&m) - 1.5).abs() < 0.1,
+        "{label}: posterior mean of m = {}",
+        stats::mean(&m)
+    );
+    assert!(
+        (stats::mean(&s) - 0.49).abs() < 0.1,
+        "{label}: posterior mean of s = {}",
+        stats::mean(&s)
+    );
+}
+
+#[test]
+fn nuts_recovers_gauss_unknown_tape() {
+    let bm = gauss_unknown_n(1, 500);
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+    let tvi = init_typed(bm.model.as_ref(), &mut rng);
+    let ld = NativeDensity::new(bm.model.as_ref(), &tvi, Backend::Reverse);
+    let chain = sample_chain(&ld, &tvi, &SamplerKind::Nuts(Nuts::default()), 600, 2000, 3);
+    check_gauss_posterior(&chain, "nuts+tape");
+}
+
+#[test]
+fn hmc_recovers_gauss_unknown_stanlike() {
+    let bm = gauss_unknown_n(2, 500);
+    let mut rng = Xoshiro256pp::seed_from_u64(2);
+    let tvi = init_typed(bm.model.as_ref(), &mut rng);
+    let ld = stanlike_density(&bm);
+    let chain = sample_chain(
+        ld.as_ref(),
+        &tvi,
+        &SamplerKind::Hmc(Hmc {
+            step_size: 0.01,
+            n_leapfrog: 16,
+            ..Hmc::default()
+        }),
+        800,
+        3000,
+        4,
+    );
+    check_gauss_posterior(&chain, "hmc+stanlike");
+}
+
+#[test]
+fn hmc_recovers_gauss_unknown_xla_full_workload() {
+    // Uses the full 10,000-observation artifact: the paper's workload
+    // through the complete three-layer stack.
+    if !artifact_exists("gauss_unknown") {
+        eprintln!("SKIP: artifact missing");
+        return;
+    }
+    let bm = dynamicppl::models::build("gauss_unknown", 42);
+    let mut rng = Xoshiro256pp::seed_from_u64(42);
+    let tvi = init_typed(bm.model.as_ref(), &mut rng);
+    let ld = XlaDensity::load(&artifacts_dir(), "gauss_unknown", bm.theta_dim, &bm.data).unwrap();
+    let chain = sample_chain(
+        &ld,
+        &tvi,
+        &SamplerKind::Hmc(Hmc {
+            step_size: 0.005,
+            n_leapfrog: 8,
+            ..Hmc::default()
+        }),
+        500,
+        1500,
+        5,
+    );
+    // with 10k observations the posterior is very tight
+    let m = chain.column("m").unwrap();
+    assert!(
+        (stats::mean(&m) - 1.5).abs() < 0.05,
+        "xla: posterior mean of m = {}",
+        stats::mean(&m)
+    );
+    assert!(chain.stats.accept_rate > 0.5);
+}
+
+#[test]
+fn mh_matches_hmc_on_small_model() {
+    // Two very different samplers must agree on the posterior.
+    let bm = build_small("hier_poisson", 8);
+    let mut rng = Xoshiro256pp::seed_from_u64(8);
+    let tvi = init_typed(bm.model.as_ref(), &mut rng);
+    let ld = stanlike_density(&bm);
+    let mh = sample_chain(
+        ld.as_ref(),
+        &tvi,
+        &SamplerKind::RwMh(RwMh::default()),
+        4000,
+        30_000,
+        11,
+    );
+    let hmc = sample_chain(
+        ld.as_ref(),
+        &tvi,
+        &SamplerKind::Hmc(Hmc {
+            step_size: 0.05,
+            n_leapfrog: 8,
+            ..Hmc::default()
+        }),
+        1500,
+        8000,
+        12,
+    );
+    let a0_mh = stats::mean(&mh.column("a0").unwrap());
+    let a0_hmc = stats::mean(&hmc.column("a0").unwrap());
+    assert!(
+        (a0_mh - a0_hmc).abs() < 0.15,
+        "MH {a0_mh} vs HMC {a0_hmc} disagree on a0 posterior"
+    );
+}
+
+#[test]
+fn likelihood_context_excludes_prior_in_sampler_target() {
+    // Sampling the LikelihoodContext of gaussian_10kd (flat prior
+    // contribution removed) must not blow up — a regression guard on
+    // context plumbing through densities.
+    let bm = build_small("gaussian_10kd", 3);
+    let mut rng = Xoshiro256pp::seed_from_u64(3);
+    let tvi = init_typed(bm.model.as_ref(), &mut rng);
+    let mut ld = NativeDensity::new(bm.model.as_ref(), &tvi, Backend::Reverse);
+    ld.ctx = Context::Prior; // prior-only target == the model itself here
+    let chain = sample_chain(&ld, &tvi, &SamplerKind::Hmc(Hmc::default()), 300, 1000, 6);
+    let x0 = chain.column("x[0]").unwrap();
+    assert!(stats::mean(&x0).abs() < 0.2);
+    assert!((stats::variance(&x0) - 1.0).abs() < 0.35);
+}

@@ -1,0 +1,323 @@
+//! Integration tests across the model DSL, traces, contexts and executors:
+//! a linear-regression model defined with `model!` must produce identical
+//! log-densities through every execution path, and gradients must agree
+//! between forward duals, the reverse tape and finite differences.
+
+use dynamicppl::ad::finite_diff_grad;
+use dynamicppl::prelude::*;
+
+model! {
+    /// Bayesian linear regression (the paper's first example model):
+    /// s ~ InverseGamma(2,3); w ~ Normal(0, √s) per coordinate;
+    /// y[i] ~ Normal(x[i]·w, √s).
+    pub LinReg {
+        x: Vec<Vec<f64>>,
+        y: Vec<f64>,
+    }
+    fn body<T>(this, api) {
+        let s = tilde!(api, s ~ InverseGamma(c(2.0), c(3.0)));
+        check_reject!(api);
+        let sd = s.sqrt();
+        let d = this.x[0].len();
+        let w = tilde_vec!(api, w ~ IsoNormal(c(0.0), sd, d));
+        check_reject!(api);
+        for i in 0..this.y.len() {
+            let mut mu = c::<T>(0.0);
+            for j in 0..d {
+                mu = mu + w[j] * this.x[i][j];
+            }
+            obs!(api, this.y[i] => Normal(mu, sd));
+        }
+    }
+}
+
+fn demo_model() -> LinReg {
+    LinReg {
+        x: vec![
+            vec![1.0, 0.5],
+            vec![-0.3, 1.2],
+            vec![0.8, -1.0],
+            vec![2.0, 0.1],
+        ],
+        y: vec![1.1, 0.2, -0.4, 2.2],
+    }
+}
+
+/// Reference log-joint computed by hand in constrained space.
+fn manual_logp(m: &LinReg, s: f64, w: &[f64]) -> f64 {
+    let mut lp = InverseGamma::new(2.0, 3.0).logpdf(s);
+    lp += IsoNormal::new(0.0, s.sqrt(), 2).logpdf(w);
+    for (xi, &yi) in m.x.iter().zip(&m.y) {
+        let mu = w[0] * xi[0] + w[1] * xi[1];
+        lp += Normal::new(mu, s.sqrt()).logpdf(yi);
+    }
+    lp
+}
+
+#[test]
+fn init_trace_discovers_structure() {
+    let m = demo_model();
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+    let vi = init_trace(&m, &mut rng);
+    assert_eq!(vi.len(), 2);
+    assert!(vi.contains(&VarName::new("s")));
+    assert!(vi.contains(&VarName::new("w")));
+    // s positive, w: R^2 → 3 unconstrained dims
+    assert_eq!(vi.num_unconstrained(), 3);
+    let s = vi.get(&VarName::new("s")).unwrap().value.as_f64().unwrap();
+    assert!(s > 0.0);
+}
+
+#[test]
+fn sample_run_logp_matches_manual() {
+    let m = demo_model();
+    let mut rng = Xoshiro256pp::seed_from_u64(2);
+    let mut vi = UntypedVarInfo::new();
+    let lp = sample_run(&m, &mut rng, &mut vi, Context::Default);
+    let s = vi.get(&VarName::new("s")).unwrap().value.as_f64().unwrap();
+    let w = vi
+        .get(&VarName::new("w"))
+        .unwrap()
+        .value
+        .as_slice()
+        .unwrap()
+        .to_vec();
+    assert!((lp - manual_logp(&m, s, &w)).abs() < 1e-12);
+}
+
+#[test]
+fn typed_and_untyped_paths_agree() {
+    let m = demo_model();
+    let mut rng = Xoshiro256pp::seed_from_u64(3);
+    let vi = init_trace(&m, &mut rng);
+    let tvi = TypedVarInfo::from_untyped(&vi);
+    let theta = vi.to_unconstrained();
+    assert_eq!(theta, tvi.unconstrained);
+    for delta in [0.0, 0.5, -1.3] {
+        let th: Vec<f64> = theta.iter().map(|t| t + delta).collect();
+        let lp_typed = typed_logp(&m, &tvi, &th, Context::Default);
+        let lp_untyped = untyped_logp(&m, &vi, &th, Context::Default);
+        assert!(
+            (lp_typed - lp_untyped).abs() < 1e-12,
+            "typed {lp_typed} vs untyped {lp_untyped} at delta {delta}"
+        );
+    }
+}
+
+#[test]
+fn typed_logp_matches_manual_plus_jacobian() {
+    let m = demo_model();
+    let mut rng = Xoshiro256pp::seed_from_u64(4);
+    let tvi = init_typed(&m, &mut rng);
+    let theta = tvi.unconstrained.clone();
+    // manual: logp(constrained) + log|J| where only s is transformed
+    // (s = exp(θ₀) ⇒ ladj = θ₀)
+    let s = theta[0].exp();
+    let w = [theta[1], theta[2]];
+    let expect = manual_logp(&m, s, &w) + theta[0];
+    let got = typed_logp(&m, &tvi, &theta, Context::Default);
+    assert!((got - expect).abs() < 1e-12, "{got} vs {expect}");
+}
+
+#[test]
+fn gradients_agree_across_backends() {
+    let m = demo_model();
+    let mut rng = Xoshiro256pp::seed_from_u64(5);
+    let vi = init_trace(&m, &mut rng);
+    let tvi = TypedVarInfo::from_untyped(&vi);
+    let theta = vec![0.3, 0.7, -0.2];
+
+    let (v_fwd, g_fwd) = typed_grad_forward(&m, &tvi, &theta, Context::Default);
+    let (v_rev, g_rev) = typed_grad_reverse(&m, &tvi, &theta, Context::Default);
+    let (v_ufwd, g_ufwd) = untyped_grad_forward(&m, &vi, &theta, Context::Default);
+    let (v_urev, g_urev) = untyped_grad_reverse(&m, &vi, &theta, Context::Default);
+    let fd = finite_diff_grad(
+        |th| typed_logp(&m, &tvi, th, Context::Default),
+        &theta,
+        1e-6,
+    );
+
+    assert!((v_fwd - v_rev).abs() < 1e-12);
+    assert!((v_fwd - v_ufwd).abs() < 1e-12);
+    assert!((v_fwd - v_urev).abs() < 1e-12);
+    for i in 0..theta.len() {
+        assert!((g_fwd[i] - fd[i]).abs() < 1e-5, "fwd[{i}]");
+        assert!((g_rev[i] - fd[i]).abs() < 1e-5, "rev[{i}]");
+        assert!((g_ufwd[i] - fd[i]).abs() < 1e-5, "ufwd[{i}]");
+        assert!((g_urev[i] - fd[i]).abs() < 1e-5, "urev[{i}]");
+    }
+}
+
+#[test]
+fn contexts_partition_the_log_joint() {
+    let m = demo_model();
+    let mut rng = Xoshiro256pp::seed_from_u64(6);
+    let tvi = init_typed(&m, &mut rng);
+    let theta = vec![0.1, -0.5, 0.9];
+    let joint = typed_logp(&m, &tvi, &theta, Context::Default);
+    let prior = typed_logp(&m, &tvi, &theta, Context::Prior);
+    let lik = typed_logp(&m, &tvi, &theta, Context::Likelihood);
+    assert!((joint - (prior + lik)).abs() < 1e-12);
+    // MiniBatch with scale 1 == Default
+    let mb1 = typed_logp(&m, &tvi, &theta, Context::MiniBatch { scale: 1.0 });
+    assert!((mb1 - joint).abs() < 1e-12);
+    // MiniBatch scale 3 scales only the likelihood part
+    let mb3 = typed_logp(&m, &tvi, &theta, Context::MiniBatch { scale: 3.0 });
+    assert!((mb3 - (prior + 3.0 * lik)).abs() < 1e-12);
+}
+
+#[test]
+fn minibatch_context_is_unbiased_over_batches() {
+    // Scaled minibatch likelihoods must average to the full-data likelihood.
+    let m = demo_model();
+    let mut rng = Xoshiro256pp::seed_from_u64(7);
+    let tvi = init_typed(&m, &mut rng);
+    let theta = vec![0.1, -0.5, 0.9];
+    let full_lik = typed_logp(&m, &tvi, &theta, Context::Likelihood);
+    // two half batches, each scaled ×2
+    let m1 = LinReg {
+        x: m.x[..2].to_vec(),
+        y: m.y[..2].to_vec(),
+    };
+    let m2 = LinReg {
+        x: m.x[2..].to_vec(),
+        y: m.y[2..].to_vec(),
+    };
+    // same parameter trace works: identical parameter structure
+    let lik1 = typed_logp(&m1, &tvi, &theta, Context::Likelihood);
+    let lik2 = typed_logp(&m2, &tvi, &theta, Context::Likelihood);
+    assert!((full_lik - (lik1 + lik2)).abs() < 1e-12);
+    let mb1 = typed_logp(&m1, &tvi, &theta, Context::MiniBatch { scale: 2.0 })
+        - typed_logp(&m1, &tvi, &theta, Context::Prior);
+    let mb2 = typed_logp(&m2, &tvi, &theta, Context::MiniBatch { scale: 2.0 })
+        - typed_logp(&m2, &tvi, &theta, Context::Prior);
+    assert!(((mb1 + mb2) / 2.0 - full_lik).abs() < 1e-12);
+}
+
+model! {
+    /// A model that rejects when its parameter is in a "bad" region —
+    /// exercises early rejection (§3.3).
+    pub Rejecting {
+        threshold: f64,
+    }
+    fn body<T>(this, api) {
+        let x = tilde!(api, x ~ Normal(c(0.0), c(1.0)));
+        if x.value() > this.threshold {
+            api.reject();
+            return;
+        }
+        obs!(api, 1.0 => Normal(x, c(1.0)));
+    }
+}
+
+#[test]
+fn early_rejection_pins_neg_inf() {
+    let m = Rejecting { threshold: 0.0 };
+    let mut rng = Xoshiro256pp::seed_from_u64(8);
+    let tvi = init_typed(&m, &mut rng);
+    // θ > 0 rejects, θ < 0 doesn't
+    let lp_bad = typed_logp(&m, &tvi, &[1.0], Context::Default);
+    assert_eq!(lp_bad, f64::NEG_INFINITY);
+    let lp_ok = typed_logp(&m, &tvi, &[-1.0], Context::Default);
+    assert!(lp_ok.is_finite());
+}
+
+model! {
+    /// A *dynamic* model: the number of traced variables depends on a
+    /// parameter's value (the paper's "dynamic model dimensionality").
+    pub DynamicDim {
+        max_k: usize,
+    }
+    fn body<T>(this, api) {
+        let r = tilde!(api, r ~ Beta(c(2.0), c(2.0)));
+        // number of components grows with r
+        let k = 1 + (r.value() * this.max_k as f64) as usize;
+        for i in 0..k {
+            let _ = tilde!(api, z[i] ~ Normal(c(0.0), c(1.0)));
+        }
+    }
+}
+
+#[test]
+fn dynamic_model_changes_structure_and_layout_detects_it() {
+    let m = DynamicDim { max_k: 6 };
+    // find two seeds giving different k
+    let mut dims = std::collections::HashSet::new();
+    let mut traces = Vec::new();
+    for seed in 0..20 {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let vi = init_trace(&m, &mut rng);
+        dims.insert(vi.len());
+        traces.push(vi);
+    }
+    assert!(dims.len() > 1, "expected varying structure, got {dims:?}");
+    // layout from one structure must reject a different structure
+    let t0 = TypedVarInfo::from_untyped(&traces[0]);
+    let other = traces
+        .iter()
+        .find(|v| v.len() != traces[0].len())
+        .expect("some trace differs");
+    assert!(!t0.layout_matches(other));
+    assert!(t0.layout_matches(&traces[0]));
+}
+
+#[test]
+fn resample_flag_forces_fresh_draws() {
+    let m = demo_model();
+    let mut rng = Xoshiro256pp::seed_from_u64(9);
+    let mut vi = init_trace(&m, &mut rng);
+    let s0 = vi.get(&VarName::new("s")).unwrap().value.clone();
+    // without flag: value kept
+    let _ = sample_run(&m, &mut rng, &mut vi, Context::Default);
+    assert_eq!(vi.get(&VarName::new("s")).unwrap().value, s0);
+    // with flag: value redrawn
+    vi.flag_all_resample();
+    let _ = sample_run(&m, &mut rng, &mut vi, Context::Default);
+    assert_ne!(vi.get(&VarName::new("s")).unwrap().value, s0);
+}
+
+model! {
+    /// Missing-data promotion (paper §2.1: "RVs … given a value of
+    /// `missing` will be treated as model parameters"): observations are
+    /// `Option<f64>`; `None` entries become latent variables.
+    pub MissingData {
+        y: Vec<Option<f64>>,
+    }
+    fn body<T>(this, api) {
+        let m = tilde!(api, m ~ Normal(c(0.0), c(10.0)));
+        for (i, yi) in this.y.iter().enumerate() {
+            match yi {
+                Some(v) => obs!(api, *v => Normal(m, c(1.0))),
+                // missing observation → promoted to a parameter
+                None => {
+                    let _ = tilde!(api, y_miss[i] ~ Normal(m, c(1.0)));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn missing_data_becomes_parameter() {
+    let m = MissingData {
+        y: vec![Some(1.0), None, Some(2.0), None],
+    };
+    let mut rng = Xoshiro256pp::seed_from_u64(14);
+    let vi = init_trace(&m, &mut rng);
+    // parameters: m + 2 promoted missing observations
+    assert_eq!(vi.len(), 3);
+    assert!(vi.contains(&VarName::indexed("y_miss", 1)));
+    assert!(vi.contains(&VarName::indexed("y_miss", 3)));
+    assert!(!vi.contains(&VarName::indexed("y_miss", 0)));
+    let tvi = TypedVarInfo::from_untyped(&vi);
+    assert_eq!(tvi.dim(), 3);
+    // and the posterior over a missing point tracks the mean parameter
+    use dynamicppl::gradient::{Backend, NativeDensity};
+    use dynamicppl::inference::{sample_chain, Nuts, SamplerKind};
+    let ld = NativeDensity::new(&m, &tvi, Backend::Reverse);
+    let chain = sample_chain(&ld, &tvi, &SamplerKind::Nuts(Nuts::default()), 500, 2000, 2);
+    let mm = chain.mean("m").unwrap();
+    let y1 = chain.mean("y_miss[1]").unwrap();
+    assert!((mm - 1.5).abs() < 0.6, "m posterior {mm}");
+    assert!((y1 - mm).abs() < 0.4, "missing-data posterior should track m");
+}

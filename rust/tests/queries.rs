@@ -1,0 +1,135 @@
+//! End-to-end tests of the probability-query engine (paper §3.5): the four
+//! query forms from the paper against the linear-regression model, with
+//! hand-computed reference probabilities.
+
+use dynamicppl::chain::Chain;
+use dynamicppl::prelude::*;
+use dynamicppl::query::{eval_query, Bindings, ModelRegistry, Query};
+
+model! {
+    /// linreg from the paper: s ~ InverseGamma(2,3), w ~ Normal(0,√s) iid,
+    /// y[i] ~ Normal(x[i]·w, √s).
+    pub LinReg {
+        x: Vec<Vec<f64>>,
+        y: Vec<f64>,
+        dim: usize,
+    }
+    fn body<T>(this, api) {
+        let s = tilde!(api, s ~ InverseGamma(c(2.0), c(3.0)));
+        let sd = s.sqrt();
+        let w = tilde_vec!(api, w ~ IsoNormal(c(0.0), sd, this.dim));
+        for i in 0..this.y.len() {
+            let mut mu = c::<T>(0.0);
+            for j in 0..this.dim {
+                mu = mu + w[j] * this.x[i][j];
+            }
+            obs!(api, this.y[i] => Normal(mu, sd));
+        }
+    }
+}
+
+fn registry() -> ModelRegistry {
+    let mut reg = ModelRegistry::new();
+    reg.register("linreg", |data: &Bindings| {
+        let get = |name: &str| data.iter().find(|(k, _)| k == name).map(|(_, v)| v.clone());
+        // X is a flat row-major matrix binding [x11, x12, ...] with ncol=2
+        // for this test model; absent data ⇒ no observations.
+        let x: Vec<Vec<f64>> = match get("X") {
+            Some(Value::Vec(flat)) => flat.chunks(2).map(|c| c.to_vec()).collect(),
+            _ => vec![],
+        };
+        let y: Vec<f64> = match get("y") {
+            Some(Value::Vec(v)) => v,
+            Some(Value::F64(v)) => vec![v],
+            _ => vec![],
+        };
+        assert_eq!(x.len(), y.len(), "X rows must match y length");
+        Box::new(LinReg { x, y, dim: 2 })
+    });
+    reg
+}
+
+#[test]
+fn prior_query_matches_closed_form() {
+    // prob"w = [1.0, 1.0], s = 1.0 | model = linreg"  (paper example 2)
+    let q = Query::parse("w = [1.0, 1.0], s = 1.0 | model = linreg").unwrap();
+    let r = eval_query(&q, &registry(), None).unwrap();
+    let expect = InverseGamma::new(2.0, 3.0).logpdf(1.0)
+        + IsoNormal::new(0.0, 1.0, 2).logpdf(&[1.0, 1.0]);
+    assert!(
+        (r.log_prob - expect).abs() < 1e-12,
+        "{} vs {expect}",
+        r.log_prob
+    );
+}
+
+#[test]
+fn likelihood_query_matches_closed_form() {
+    // prob"X = ..., y = [2.0] | w = [0.5, 0.0], s = 1.0, model = linreg"
+    // (paper example 1)
+    let q = Query::parse("X = [1.0, 2.0], y = [2.0] | w = [0.5, 0.0], s = 1.0, model = linreg")
+        .unwrap();
+    let r = eval_query(&q, &registry(), None).unwrap();
+    // mu = 0.5·1 + 0·2 = 0.5; N(2; 0.5, 1)
+    let expect = Normal::new(0.5, 1.0).logpdf(2.0);
+    assert!(
+        (r.log_prob - expect).abs() < 1e-12,
+        "{} vs {expect}",
+        r.log_prob
+    );
+}
+
+#[test]
+fn joint_query_is_prior_plus_likelihood() {
+    // prob"X = ..., y = [2.0], w = [0.0, 0.0], s = 1.0 | model = linreg"
+    // (paper example 3)
+    let q = Query::parse(
+        "X = [1.0, 2.0], y = [2.0], w = [0.0, 0.0], s = 1.0 | model = linreg",
+    )
+    .unwrap();
+    let r = eval_query(&q, &registry(), None).unwrap();
+    let prior =
+        InverseGamma::new(2.0, 3.0).logpdf(1.0) + IsoNormal::new(0.0, 1.0, 2).logpdf(&[0.0, 0.0]);
+    let lik = Normal::new(0.0, 1.0).logpdf(2.0);
+    assert!((r.log_prob - (prior + lik)).abs() < 1e-12);
+}
+
+#[test]
+fn chain_query_is_posterior_predictive() {
+    // prob"X = ..., y = [2.0] | chain, model = linreg"  (paper example 4)
+    // Build a fake 2-draw chain and check the log-mean-exp average.
+    let mut chain = Chain::new(vec!["s".into(), "w[0]".into(), "w[1]".into()]);
+    chain.push(vec![1.0, 0.5, 0.0], 0.0);
+    chain.push(vec![4.0, 1.0, -1.0], 0.0);
+    let q = Query::parse("X = [1.0, 2.0], y = [2.0] | chain, model = linreg").unwrap();
+    let r = eval_query(&q, &registry(), Some(&chain)).unwrap();
+    let l1 = Normal::new(0.5, 1.0).logpdf(2.0); // draw 1: mu = 0.5, sd = 1
+    let l2 = Normal::new(-1.0, 2.0).logpdf(2.0); // draw 2: mu = 1-2 = -1, sd = 2
+    let expect = dynamicppl::util::math::log_sum_exp(&[l1, l2]) - 2f64.ln();
+    assert!(
+        (r.log_prob - expect).abs() < 1e-12,
+        "{} vs {expect}",
+        r.log_prob
+    );
+}
+
+#[test]
+fn missing_parameter_is_an_error() {
+    let q = Query::parse("X = [1.0, 2.0], y = [2.0] | w = [0.5, 0.0], model = linreg").unwrap();
+    let err = eval_query(&q, &registry(), None).unwrap_err();
+    assert!(err.contains('s'), "{err}");
+}
+
+#[test]
+fn unknown_model_is_an_error() {
+    let q = Query::parse("s = 1.0 | model = nope").unwrap();
+    assert!(eval_query(&q, &registry(), None).is_err());
+}
+
+#[test]
+fn probabilities_exponentiate() {
+    let q = Query::parse("w = [0.0, 0.0], s = 1.0 | model = linreg").unwrap();
+    let r = eval_query(&q, &registry(), None).unwrap();
+    assert!((r.prob() - r.log_prob.exp()).abs() < 1e-300);
+    assert!(r.prob() > 0.0 && r.prob() < 1.0);
+}

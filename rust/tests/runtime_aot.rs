@@ -1,0 +1,191 @@
+//! Three-layer consistency: for every Table-1 model, the AOT-compiled XLA
+//! artifact (L2/L1, built by `make artifacts`) must compute the same
+//! log-density as the Rust typed executor (L3) at the same unconstrained
+//! point — and its gradient must match the Rust reverse-mode tape.
+//!
+//! These tests are skipped (with a message) when `artifacts/` has not been
+//! built; run `make artifacts` first.
+
+use dynamicppl::context::Context;
+use dynamicppl::gradient::LogDensity;
+use dynamicppl::model::{init_typed, typed_grad_reverse, typed_logp};
+use dynamicppl::models::{build, ALL_MODELS};
+use dynamicppl::runtime::{artifact_exists, artifacts_dir, XlaDensity};
+use dynamicppl::util::rng::Xoshiro256pp;
+
+fn check_model(name: &str, grad_rtol: f64) {
+    if !artifact_exists(name) {
+        eprintln!("SKIP {name}: artifact missing (run `make artifacts`)");
+        return;
+    }
+    let bm = build(name, 42);
+    let xla = XlaDensity::load(&artifacts_dir(), name, bm.theta_dim, &bm.data)
+        .unwrap_or_else(|e| panic!("{name}: {e:?}"));
+
+    let mut rng = Xoshiro256pp::seed_from_u64(42);
+    let tvi = init_typed(bm.model.as_ref(), &mut rng);
+    assert_eq!(tvi.dim(), bm.theta_dim, "{name}: layout dim");
+
+    // three test points: the prior draw, a perturbation, and a "cold" point
+    let base = tvi.unconstrained.clone();
+    let points: Vec<Vec<f64>> = vec![
+        base.clone(),
+        base.iter().map(|x| x * 0.5 + 0.1).collect(),
+        base.iter().map(|_| -0.2).collect(),
+    ];
+
+    for (pi, theta) in points.iter().enumerate() {
+        let lp_rust = typed_logp(bm.model.as_ref(), &tvi, theta, Context::Default);
+        let (lp_xla, grad_xla) = xla.logp_grad(theta);
+        let denom = 1.0 + lp_rust.abs();
+        assert!(
+            ((lp_rust - lp_xla) / denom).abs() < 1e-9,
+            "{name} point {pi}: rust logp {lp_rust} vs xla {lp_xla}"
+        );
+        // gradient vs the Rust tape
+        let (_, grad_rust) = typed_grad_reverse(bm.model.as_ref(), &tvi, theta, Context::Default);
+        for i in 0..theta.len() {
+            let scale = 1.0 + grad_rust[i].abs();
+            assert!(
+                ((grad_rust[i] - grad_xla[i]) / scale).abs() < grad_rtol,
+                "{name} point {pi} grad[{i}]: rust {} vs xla {}",
+                grad_rust[i],
+                grad_xla[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn gaussian_10kd_xla_matches_rust() {
+    check_model("gaussian_10kd", 1e-8);
+}
+
+#[test]
+fn gauss_unknown_xla_matches_rust() {
+    check_model("gauss_unknown", 1e-8);
+}
+
+#[test]
+fn naive_bayes_xla_matches_rust() {
+    check_model("naive_bayes", 1e-8);
+}
+
+#[test]
+fn logreg_xla_matches_rust() {
+    check_model("logreg", 1e-8);
+}
+
+#[test]
+fn hier_poisson_xla_matches_rust() {
+    check_model("hier_poisson", 1e-8);
+}
+
+#[test]
+fn sto_volatility_xla_matches_rust() {
+    check_model("sto_volatility", 1e-8);
+}
+
+#[test]
+fn hmm_semisup_xla_matches_rust() {
+    check_model("hmm_semisup", 1e-7);
+}
+
+#[test]
+fn lda_xla_matches_rust() {
+    check_model("lda", 1e-7);
+}
+
+/// The Pallas validation artifact (interpret-mode kernels) must agree with
+/// the fused-jnp runtime artifact — i.e. the L1 kernel schedule computes
+/// the same numbers as its oracle *through the whole AOT pipeline*.
+#[test]
+fn pallas_artifacts_match_runtime_artifacts() {
+    for name in ["gauss_unknown", "logreg"] {
+        let pallas_path = artifacts_dir().join(format!("{name}.pallas.hlo.txt"));
+        if !artifact_exists(name) || !pallas_path.exists() {
+            eprintln!("SKIP {name}: artifacts missing");
+            continue;
+        }
+        let bm = build(name, 42);
+        let runtime_art = XlaDensity::load(&artifacts_dir(), name, bm.theta_dim, &bm.data)
+            .unwrap();
+        // load the pallas variant by renaming through a temp dir view
+        let tmp = std::env::temp_dir().join(format!("dppl_pallas_{name}_{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::copy(&pallas_path, tmp.join(format!("{name}.vg.hlo.txt"))).unwrap();
+        let pallas_art = XlaDensity::load(&tmp, name, bm.theta_dim, &bm.data).unwrap();
+
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let tvi = init_typed(bm.model.as_ref(), &mut rng);
+        let theta: Vec<f64> = tvi.unconstrained.iter().map(|x| x * 0.4 + 0.05).collect();
+        let (lp_r, g_r) = runtime_art.logp_grad(&theta);
+        let (lp_p, g_p) = pallas_art.logp_grad(&theta);
+        assert!(
+            ((lp_r - lp_p) / (1.0 + lp_r.abs())).abs() < 1e-10,
+            "{name}: jnp {lp_r} vs pallas {lp_p}"
+        );
+        for i in 0..g_r.len() {
+            assert!(
+                ((g_r[i] - g_p[i]) / (1.0 + g_r[i].abs())).abs() < 1e-9,
+                "{name} grad[{i}]"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+}
+
+/// The fused trajectory artifact must reproduce the unfused sampler's
+/// chain draw-for-draw (same RNG stream, identity mass, fixed ε).
+#[test]
+fn fused_trajectory_matches_unfused_hmc() {
+    use dynamicppl::inference::hmc::HmcFusedXla;
+    use dynamicppl::inference::Hmc;
+    use dynamicppl::runtime::XlaTrajectory;
+
+    for name in ["gauss_unknown", "hier_poisson"] {
+        if !artifact_exists(name) || !XlaTrajectory::traj_artifact_exists(name) {
+            eprintln!("SKIP {name}: artifacts missing");
+            continue;
+        }
+        let bm = build(name, 42);
+        let vg = XlaDensity::load(&artifacts_dir(), name, bm.theta_dim, &bm.data).unwrap();
+        let traj = XlaTrajectory::load(&artifacts_dir(), name, bm.theta_dim, &bm.data).unwrap();
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let tvi = init_typed(bm.model.as_ref(), &mut rng);
+        let theta0: Vec<f64> = tvi.unconstrained.iter().map(|x| x * 0.1).collect();
+
+        let mut rng1 = Xoshiro256pp::seed_from_u64(7);
+        let unfused = Hmc::paper(bm.step_size).sample(&vg, &theta0, 0, 30, &mut rng1);
+        let mut rng2 = Xoshiro256pp::seed_from_u64(7);
+        let fused = HmcFusedXla {
+            traj: &traj,
+            vg: &vg,
+            step_size: bm.step_size,
+        }
+        .sample(&theta0, 0, 30, &mut rng2);
+
+        assert_eq!(unfused.thetas.len(), fused.thetas.len());
+        for (i, (a, b)) in unfused.thetas.iter().zip(&fused.thetas).enumerate() {
+            for (x, y) in a.iter().zip(b) {
+                assert!(
+                    (x - y).abs() < 1e-8,
+                    "{name} draw {i}: {x} vs {y} (fused/unfused diverged)"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn all_artifacts_in_manifest() {
+    let manifest = artifacts_dir().join("manifest.txt");
+    if !manifest.exists() {
+        eprintln!("SKIP: no manifest (run `make artifacts`)");
+        return;
+    }
+    let text = std::fs::read_to_string(manifest).unwrap();
+    for name in ALL_MODELS {
+        assert!(text.contains(&format!("model={name} ")), "{name} missing");
+    }
+}
