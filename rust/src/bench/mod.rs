@@ -349,6 +349,137 @@ pub fn render_table1(cells: &[Cell], cfg: &Table1Config) -> String {
     out
 }
 
+// ------------------------------------------------------------------- SMC
+
+/// One SMC benchmark row: the particle workload the Table-1 HMC harness
+/// cannot express (evidence estimation over sequential models).
+#[derive(Clone, Debug)]
+pub struct SmcRow {
+    pub model: String,
+    pub n_particles: usize,
+    /// Observe-statement count = SMC step count of the model.
+    pub n_obs: usize,
+    /// Log-marginal-likelihood estimate.
+    pub log_evidence: f64,
+    /// ESS after the final observation (weight health).
+    pub final_ess: f64,
+    pub resamples: usize,
+    pub wall_secs: f64,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+/// SMC benchmark configuration.
+#[derive(Clone, Debug)]
+pub struct SmcBenchConfig {
+    pub models: Vec<String>,
+    pub n_particles: usize,
+    pub seed: u64,
+    pub threads: usize,
+    /// Use the reduced workloads (default — the full StoVol/HMM workloads
+    /// re-execute the whole body per observation and are bench-only).
+    pub small: bool,
+}
+
+impl Default for SmcBenchConfig {
+    fn default() -> Self {
+        Self {
+            models: vec!["hmm_semisup".into(), "sto_volatility".into()],
+            n_particles: 512,
+            seed: 42,
+            threads: 1,
+            small: true,
+        }
+    }
+}
+
+/// Run SMC over each configured model and collect evidence/ESS/time rows.
+pub fn run_smc_bench(cfg: &SmcBenchConfig) -> Vec<SmcRow> {
+    let mut rows = Vec::with_capacity(cfg.models.len());
+    for name in &cfg.models {
+        eprintln!("bench: {name} / smc×{}", cfg.n_particles);
+        let bm = if cfg.small {
+            crate::models::build_small(name, cfg.seed)
+        } else {
+            build(name, cfg.seed)
+        };
+        let smc = crate::inference::Smc {
+            n_particles: cfg.n_particles,
+            threads: cfg.threads,
+            ..crate::inference::Smc::default()
+        };
+        let out = smc.run(bm.model.as_ref(), cfg.seed);
+        rows.push(SmcRow {
+            model: name.clone(),
+            n_particles: cfg.n_particles,
+            n_obs: out.cloud.n_obs,
+            log_evidence: out.log_evidence,
+            final_ess: out.ess_trace.last().copied().unwrap_or(f64::NAN),
+            resamples: out.resamples,
+            wall_secs: out.wall_secs,
+            threads: cfg.threads,
+            seed: cfg.seed,
+        });
+    }
+    rows
+}
+
+/// Human-readable SMC table.
+pub fn render_smc_table(rows: &[SmcRow]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "SMC — log-evidence / ESS / wall time per model (N particles, ESS-triggered systematic resampling)\n"
+    );
+    let _ = writeln!(
+        out,
+        "{:<16} {:>10} {:>6} {:>14} {:>10} {:>10} {:>10}",
+        "model", "particles", "steps", "log Ẑ", "final ESS", "resamples", "wall (s)"
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{:<16} {:>10} {:>6} {:>14.4} {:>10.1} {:>10} {:>10.3}",
+            r.model, r.n_particles, r.n_obs, r.log_evidence, r.final_ess, r.resamples, r.wall_secs
+        );
+    }
+    out
+}
+
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Serialize SMC rows as the coordinator's `BENCH_SMC.json` payload
+/// (hand-rolled writer — no serde in the offline dependency set).
+pub fn smc_rows_to_json(rows: &[SmcRow]) -> String {
+    let mut out = String::from("{\n  \"bench\": \"smc\",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"model\": \"{}\", \"n_particles\": {}, \"n_obs\": {}, \
+             \"log_evidence\": {}, \"final_ess\": {}, \"resamples\": {}, \
+             \"wall_secs\": {}, \"threads\": {}, \"seed\": {}}}",
+            r.model,
+            r.n_particles,
+            r.n_obs,
+            json_num(r.log_evidence),
+            json_num(r.final_ess),
+            r.resamples,
+            json_num(r.wall_secs),
+            r.threads,
+            r.seed,
+        );
+        out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -381,6 +512,37 @@ mod tests {
         assert!(cell.mean.is_finite() && cell.mean > 0.0);
         let table = render_table1(&[cell], &cfg);
         assert!(table.contains("hier_poisson"));
+    }
+
+    #[test]
+    fn smc_bench_rows_and_json() {
+        let cfg = SmcBenchConfig {
+            models: vec!["hmm_semisup".into()],
+            n_particles: 32,
+            seed: 4,
+            threads: 1,
+            small: true,
+        };
+        let rows = run_smc_bench(&cfg);
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].log_evidence.is_finite());
+        assert!(rows[0].n_obs >= 1);
+        let table = render_smc_table(&rows);
+        assert!(table.contains("hmm_semisup"));
+        let json = smc_rows_to_json(&rows);
+        assert!(json.contains("\"bench\": \"smc\""));
+        assert!(json.contains("\"model\": \"hmm_semisup\""));
+        assert!(json.contains("\"log_evidence\": "));
+        // valid-ish JSON: balanced braces/brackets, no trailing comma
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert!(!json.contains(",\n  ]"));
+    }
+
+    #[test]
+    fn json_num_maps_non_finite_to_null() {
+        assert_eq!(json_num(1.5), "1.5");
+        assert_eq!(json_num(f64::NAN), "null");
+        assert_eq!(json_num(f64::NEG_INFINITY), "null");
     }
 
     #[test]

@@ -10,13 +10,29 @@ use std::fmt::Write as _;
 use crate::util::stats;
 
 /// Sampler-level statistics for one run.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct SamplerStats {
     pub accept_rate: f64,
     pub divergences: usize,
     pub step_size: f64,
     pub n_grad_evals: u64,
     pub wall_secs: f64,
+    /// log-marginal-likelihood estimate (particle samplers only; `NaN`
+    /// for samplers that do not estimate evidence).
+    pub log_evidence: f64,
+}
+
+impl Default for SamplerStats {
+    fn default() -> Self {
+        Self {
+            accept_rate: 0.0,
+            divergences: 0,
+            step_size: 0.0,
+            n_grad_evals: 0,
+            wall_secs: 0.0,
+            log_evidence: f64::NAN,
+        }
+    }
 }
 
 /// One MCMC chain in constrained space.
@@ -167,14 +183,51 @@ impl MultiChain {
         Self { chains }
     }
 
+    /// Split-R̂ with rank normalization (Vehtari et al. 2021): the default
+    /// diagnostic. Rank-normalizing before the Gelman–Rubin computation
+    /// makes the statistic robust to heavy tails and sensitive to
+    /// single-chain non-stationarity (trends split across halves).
     pub fn rhat(&self, name: &str) -> Option<f64> {
+        self.rhat_with(name, true)
+    }
+
+    /// Classic (non-rank-normalized) split-R̂ — the pre-2021 behavior,
+    /// kept for comparisons and regression baselines.
+    pub fn rhat_classic(&self, name: &str) -> Option<f64> {
+        self.rhat_with(name, false)
+    }
+
+    /// Split-R̂ with rank normalization toggled by `rank_normalized`.
+    pub fn rhat_with(&self, name: &str, rank_normalized: bool) -> Option<f64> {
         let cols: Vec<Vec<f64>> = self
             .chains
             .iter()
             .map(|c| c.column(name))
             .collect::<Option<_>>()?;
         let refs: Vec<&[f64]> = cols.iter().map(|c| c.as_slice()).collect();
-        Some(stats::split_rhat(&refs))
+        Some(if rank_normalized {
+            stats::rank_normalized_split_rhat(&refs)
+        } else {
+            stats::split_rhat(&refs)
+        })
+    }
+
+    /// Pooled log-evidence across chains: the log-mean-exp of the
+    /// per-chain estimates (each chain's particle run is an independent
+    /// unbiased estimator of the marginal likelihood, so averaging in
+    /// probability space is the right aggregation). `None` when no chain
+    /// carries an estimate.
+    pub fn log_evidence(&self) -> Option<f64> {
+        let finite: Vec<f64> = self
+            .chains
+            .iter()
+            .map(|c| c.stats.log_evidence)
+            .filter(|l| !l.is_nan())
+            .collect();
+        if finite.is_empty() {
+            return None;
+        }
+        Some(crate::util::math::log_sum_exp(&finite) - (finite.len() as f64).ln())
     }
 
     /// Pooled posterior mean across chains.
@@ -262,6 +315,32 @@ mod tests {
         assert!((good.rhat("a").unwrap() - 1.0).abs() < 0.02);
         let bad = MultiChain::new(vec![demo_chain(7, 0.0), demo_chain(8, 4.0)]);
         assert!(bad.rhat("a").unwrap() > 1.5);
+        // classic flag preserved for baselines; also flags separation
+        assert!(bad.rhat_classic("a").unwrap() > 1.5);
+        assert!((good.rhat_classic("a").unwrap() - 1.0).abs() < 0.02);
+        assert!((good.rhat_with("a", false).unwrap()
+            - good.rhat_classic("a").unwrap())
+        .abs()
+            < 1e-12);
+    }
+
+    #[test]
+    fn multichain_pools_log_evidence() {
+        let mut a = demo_chain(10, 0.0);
+        let mut b = demo_chain(11, 0.0);
+        // no chain has an estimate → None
+        let mc = MultiChain::new(vec![a.clone(), b.clone()]);
+        assert!(mc.log_evidence().is_none());
+        // log-mean-exp of per-chain estimates
+        a.stats.log_evidence = -10.0;
+        b.stats.log_evidence = -12.0;
+        let mc = MultiChain::new(vec![a.clone(), b.clone()]);
+        let expect = crate::util::math::log_sum_exp(&[-10.0, -12.0]) - 2f64.ln();
+        assert!((mc.log_evidence().unwrap() - expect).abs() < 1e-12);
+        // NaN chains are ignored, not propagated
+        b.stats.log_evidence = f64::NAN;
+        let mc = MultiChain::new(vec![a, b]);
+        assert!((mc.log_evidence().unwrap() + 10.0).abs() < 1e-12);
     }
 
     #[test]

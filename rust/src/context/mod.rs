@@ -29,6 +29,12 @@ pub enum Context {
     /// Log-joint with scaled likelihood (`MiniBatchContext`): the paper's
     /// mechanism for stochastic-gradient VI.
     MiniBatch { scale: f64 },
+    /// Replay-with-regenerate particle mode (SMC / Particle-Gibbs): score
+    /// only the observe statements with visit index in `[lo, hi)`, drop
+    /// all prior-side terms (the bootstrap proposal *is* the prior, so
+    /// they cancel in the importance weight). The executor counts observe
+    /// statements in model visit order; see `crate::particle`.
+    ObsWindow { lo: usize, hi: usize },
 }
 
 impl Context {
@@ -37,7 +43,7 @@ impl Context {
     #[inline]
     pub fn prior_weight(&self) -> f64 {
         match self {
-            Context::Likelihood => 0.0,
+            Context::Likelihood | Context::ObsWindow { .. } => 0.0,
             _ => 1.0,
         }
     }
@@ -49,6 +55,16 @@ impl Context {
             Context::Prior => 0.0,
             Context::MiniBatch { scale } => *scale,
             _ => 1.0,
+        }
+    }
+
+    /// The observation-index window scored by this context:
+    /// `[0, usize::MAX)` for every non-particle context.
+    #[inline]
+    pub fn obs_window(&self) -> (usize, usize) {
+        match self {
+            Context::ObsWindow { lo, hi } => (*lo, *hi),
+            _ => (0, usize::MAX),
         }
     }
 }
@@ -189,5 +205,14 @@ mod tests {
         assert_eq!(Context::Likelihood.prior_weight(), 0.0);
         assert_eq!(Context::Prior.lik_weight(), 0.0);
         assert_eq!(Context::MiniBatch { scale: 5.0 }.lik_weight(), 5.0);
+    }
+
+    #[test]
+    fn obs_window_context_drops_priors_and_exposes_window() {
+        let ctx = Context::ObsWindow { lo: 3, hi: 7 };
+        assert_eq!(ctx.prior_weight(), 0.0);
+        assert_eq!(ctx.lik_weight(), 1.0);
+        assert_eq!(ctx.obs_window(), (3, 7));
+        assert_eq!(Context::Default.obs_window(), (0, usize::MAX));
     }
 }

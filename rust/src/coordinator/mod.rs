@@ -3,11 +3,14 @@
 
 use std::sync::Arc;
 
-use crate::bench::{run_table1, render_table1, BenchBackend, Table1Config};
+use crate::bench::{
+    render_smc_table, render_table1, run_smc_bench, run_table1, smc_rows_to_json, BenchBackend,
+    SmcBenchConfig, Table1Config,
+};
 use crate::chain::{Chain, MultiChain};
 use crate::context::Context;
 use crate::gradient::{Backend, LogDensity, NativeDensity};
-use crate::inference::{sample_chain, Hmc, Nuts, RwMh, SamplerKind};
+use crate::inference::{sample_chain, sample_smc_chain, Hmc, Nuts, RwMh, SamplerKind, Smc};
 use crate::model::init_typed;
 use crate::models::{build, ALL_MODELS};
 use crate::query::{eval_query, Bindings, ModelRegistry, Query};
@@ -28,11 +31,11 @@ pub fn usage() -> String {
             ("info", "show runtime/platform information"),
             (
                 "sample",
-                "run MCMC: --model NAME [--sampler hmc|nuts|mh] [--backend xla|tape|forward|stan] [--iters N] [--warmup N] [--chains C] [--seed S]",
+                "run MCMC: --model NAME [--sampler hmc|nuts|mh|smc] [--backend xla|tape|forward|stan] [--iters N] [--warmup N] [--chains C] [--seed S]  (smc: iters = particles)",
             ),
             (
                 "bench",
-                "bench table1 [--models a,b] [--backends x,y] [--iters N] [--reps R]",
+                "bench table1 [--models a,b] [--backends x,y] [--iters N] [--reps R] | bench smc [--models a,b] [--particles N] [--threads T] [--full] [--out FILE.json]",
             ),
             ("query", "evaluate a probability query string (paper §3.5)"),
         ],
@@ -144,6 +147,27 @@ pub fn sample_model(
         return Err(format!("unknown model {model_name:?}"));
     }
     let bm = Arc::new(build(model_name, seed));
+
+    // SMC is model-space (no density backend): one particle-filter pass
+    // per chain; `iters` is interpreted as the particle count and the
+    // per-chain evidence lands in `stats.log_evidence`.
+    if sampler == "smc" {
+        let n_particles = iters.max(2);
+        let bmc = Arc::clone(&bm);
+        let chains: Vec<Chain> = parallel_map(
+            default_threads().min(n_chains),
+            n_chains,
+            move |i| {
+                let smc = Smc {
+                    n_particles,
+                    ..Smc::default()
+                };
+                sample_smc_chain(bmc.model.as_ref(), &smc, seed + 1000 * i as u64)
+            },
+        );
+        return Ok(MultiChain::new(chains));
+    }
+
     let mut rng = Xoshiro256pp::seed_from_u64(seed);
     let tvi = Arc::new(init_typed(bm.model.as_ref(), &mut rng));
     let kind = match sampler {
@@ -203,6 +227,9 @@ fn report_chains(mc: &MultiChain) {
             println!("  R̂[{name}] = {r:.3}");
         }
     }
+    if let Some(lz) = mc.log_evidence() {
+        println!("  log-evidence (pooled) = {lz:.4}");
+    }
 }
 
 fn cmd_bench(args: &Args) -> i32 {
@@ -230,8 +257,36 @@ fn cmd_bench(args: &Args) -> i32 {
             println!("{}", render_table1(&cells, &cfg));
             0
         }
+        "smc" => {
+            let mut cfg = SmcBenchConfig::default();
+            if let Some(models) = args.get("models") {
+                cfg.models = models.split(',').map(|s| s.trim().to_string()).collect();
+            }
+            cfg.n_particles = args
+                .get_parse_or("particles", cfg.n_particles)
+                .unwrap_or(cfg.n_particles);
+            cfg.threads = args
+                .get_parse_or("threads", cfg.threads)
+                .unwrap_or(cfg.threads);
+            cfg.seed = args.get_parse_or("seed", cfg.seed).unwrap_or(cfg.seed);
+            cfg.small = !args.flag("full");
+            let rows = run_smc_bench(&cfg);
+            println!("{}", render_smc_table(&rows));
+            let out_path = args.get_or("out", "BENCH_SMC.json").to_string();
+            let json = smc_rows_to_json(&rows);
+            match std::fs::write(&out_path, &json) {
+                Ok(()) => {
+                    println!("wrote {out_path}");
+                    0
+                }
+                Err(e) => {
+                    eprintln!("failed to write {out_path}: {e}");
+                    1
+                }
+            }
+        }
         other => {
-            eprintln!("unknown bench target {other:?} (try: table1)");
+            eprintln!("unknown bench target {other:?} (try: table1, smc)");
             2
         }
     }
@@ -335,6 +390,21 @@ mod tests {
         let q = Query::parse("w = [1.0, 1.0], s = 1.0 | model = linreg").unwrap();
         let r = eval_query(&q, &query_registry(), None).unwrap();
         assert!(r.log_prob.is_finite());
+    }
+
+    #[test]
+    fn sample_model_smc_carries_evidence() {
+        // iters = particle count for the SMC sampler
+        let mc = sample_model("hier_poisson", "smc", "stan", 64, 0, 2, 11).unwrap();
+        assert_eq!(mc.chains.len(), 2);
+        assert_eq!(mc.chains[0].len(), 64);
+        assert!(mc.chains[0].stats.log_evidence.is_finite());
+        assert!(mc.log_evidence().unwrap().is_finite());
+        // distinct seeds → distinct evidence estimates
+        assert_ne!(
+            mc.chains[0].stats.log_evidence,
+            mc.chains[1].stats.log_evidence
+        );
     }
 
     #[test]

@@ -1,0 +1,844 @@
+//! The distribution library (the Distributions.jl slice the paper's models
+//! need), written once, generically over the AD [`Scalar`].
+//!
+//! Three families mirror the three tilde forms of the DSL:
+//!
+//! - [`ScalarDist`] — univariate continuous (`tilde!` / `obs!`);
+//! - [`VecDist`] — fixed-length multivariate (`tilde_vec!` / `obs_vec!`);
+//! - [`DiscreteDist`] — integer-valued (`tilde_int!` / `obs_int!`).
+//!
+//! Every distribution knows its [`Domain`] (support metadata driving the
+//! [`bijector`] link/invlink transforms and trace layout) and its exact
+//! log-density including normalization constants — the hand-coded
+//! `stanlike` densities and the AOT JAX artifacts pin the same constants,
+//! so all execution backends agree to 1e-10.
+//!
+//! [`AnyDist`] is the boxed, `f64`-specialized form stored inside
+//! [`crate::varinfo::UntypedVarInfo`] records: it can sample a fresh
+//! [`Value`] (prior draws, particle regeneration) and score a boxed value
+//! (the MH slow path).
+
+pub mod bijector;
+
+use rand_core::RngCore;
+
+use crate::ad::Scalar;
+use crate::util::math;
+use crate::util::rng::Rng as _;
+use crate::value::Value;
+
+/// Support metadata for one random variable: what the bijector needs to
+/// map it to unconstrained coordinates, and what the trace layout records.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Domain {
+    /// ℝ (identity transform).
+    Real,
+    /// (0, ∞) (log transform).
+    Positive,
+    /// (lo, hi) (scaled-logit transform).
+    Interval(f64, f64),
+    /// ℝⁿ.
+    RealVec(usize),
+    /// (0, ∞)ⁿ (elementwise log).
+    PositiveVec(usize),
+    /// The (n−1)-simplex embedded in ℝⁿ (stick-breaking transform).
+    Simplex(usize),
+    /// {0, 1}.
+    DiscreteBool,
+    /// {0, …, k−1}.
+    DiscreteCategory(usize),
+    /// ℕ (unbounded counts; observation-only in the benchmark set).
+    DiscreteCount,
+}
+
+impl Domain {
+    /// True for integer-valued supports (never HMC coordinates).
+    pub fn is_discrete(&self) -> bool {
+        matches!(
+            self,
+            Domain::DiscreteBool | Domain::DiscreteCategory(_) | Domain::DiscreteCount
+        )
+    }
+
+    /// Number of unconstrained (ℝ) coordinates the value flattens to.
+    pub fn unconstrained_dim(&self) -> usize {
+        match self {
+            Domain::Real | Domain::Positive | Domain::Interval(_, _) => 1,
+            Domain::RealVec(n) | Domain::PositiveVec(n) => *n,
+            Domain::Simplex(n) => n - 1,
+            Domain::DiscreteBool | Domain::DiscreteCategory(_) | Domain::DiscreteCount => 0,
+        }
+    }
+
+    /// Number of constrained scalar elements of the value.
+    pub fn constrained_dim(&self) -> usize {
+        match self {
+            Domain::Real | Domain::Positive | Domain::Interval(_, _) => 1,
+            Domain::RealVec(n) | Domain::PositiveVec(n) | Domain::Simplex(n) => *n,
+            Domain::DiscreteBool | Domain::DiscreteCategory(_) | Domain::DiscreteCount => 0,
+        }
+    }
+}
+
+// ------------------------------------------------------------------ scalar
+
+/// Normal(mean, sd).
+#[derive(Clone, Copy, Debug)]
+pub struct Normal<T: Scalar> {
+    pub mean: T,
+    pub sd: T,
+}
+
+impl<T: Scalar> Normal<T> {
+    pub fn new(mean: T, sd: T) -> Self {
+        Self { mean, sd }
+    }
+
+    /// Standard normal.
+    pub fn std() -> Self {
+        Self {
+            mean: T::constant(0.0),
+            sd: T::constant(1.0),
+        }
+    }
+
+    pub fn logpdf(&self, x: T) -> T {
+        if self.sd.value() <= 0.0 {
+            return T::constant(f64::NEG_INFINITY);
+        }
+        let z = (x - self.mean) / self.sd;
+        -(z * z) * 0.5 - self.sd.ln() - 0.5 * math::LN_2PI
+    }
+}
+
+/// InverseGamma(shape α, scale β): density ∝ x^{−α−1} e^{−β/x}.
+#[derive(Clone, Copy, Debug)]
+pub struct InverseGamma<T: Scalar> {
+    pub shape: T,
+    pub scale: T,
+}
+
+impl<T: Scalar> InverseGamma<T> {
+    pub fn new(shape: T, scale: T) -> Self {
+        Self { shape, scale }
+    }
+
+    pub fn logpdf(&self, x: T) -> T {
+        if x.value() <= 0.0 {
+            return T::constant(f64::NEG_INFINITY);
+        }
+        self.shape * self.scale.ln() - self.shape.lgamma()
+            - (self.shape + 1.0) * x.ln()
+            - self.scale / x
+    }
+}
+
+/// Gamma(shape α, rate β): mean α/β.
+#[derive(Clone, Copy, Debug)]
+pub struct Gamma<T: Scalar> {
+    pub shape: T,
+    pub rate: T,
+}
+
+impl<T: Scalar> Gamma<T> {
+    pub fn new(shape: T, rate: T) -> Self {
+        Self { shape, rate }
+    }
+
+    pub fn logpdf(&self, x: T) -> T {
+        if x.value() <= 0.0 {
+            return T::constant(f64::NEG_INFINITY);
+        }
+        self.shape * self.rate.ln() - self.shape.lgamma()
+            + (self.shape - 1.0) * x.ln()
+            - self.rate * x
+    }
+}
+
+/// Beta(a, b) on (0, 1).
+#[derive(Clone, Copy, Debug)]
+pub struct Beta<T: Scalar> {
+    pub a: T,
+    pub b: T,
+}
+
+impl<T: Scalar> Beta<T> {
+    pub fn new(a: T, b: T) -> Self {
+        Self { a, b }
+    }
+
+    pub fn logpdf(&self, x: T) -> T {
+        let xv = x.value();
+        if xv <= 0.0 || xv >= 1.0 {
+            return T::constant(f64::NEG_INFINITY);
+        }
+        let lbeta = self.a.lgamma() + self.b.lgamma() - (self.a + self.b).lgamma();
+        (self.a - 1.0) * x.ln() + (self.b - 1.0) * (T::constant(1.0) - x).ln() - lbeta
+    }
+}
+
+/// Exponential(rate λ): mean 1/λ.
+#[derive(Clone, Copy, Debug)]
+pub struct Exponential<T: Scalar> {
+    pub rate: T,
+}
+
+impl<T: Scalar> Exponential<T> {
+    pub fn new(rate: T) -> Self {
+        Self { rate }
+    }
+
+    pub fn logpdf(&self, x: T) -> T {
+        if x.value() < 0.0 {
+            return T::constant(f64::NEG_INFINITY);
+        }
+        self.rate.ln() - self.rate * x
+    }
+}
+
+/// Uniform(lo, hi).
+#[derive(Clone, Copy, Debug)]
+pub struct Uniform<T: Scalar> {
+    pub lo: T,
+    pub hi: T,
+}
+
+impl<T: Scalar> Uniform<T> {
+    pub fn new(lo: T, hi: T) -> Self {
+        Self { lo, hi }
+    }
+
+    pub fn logpdf(&self, x: T) -> T {
+        let xv = x.value();
+        if xv < self.lo.value() || xv > self.hi.value() {
+            return T::constant(f64::NEG_INFINITY);
+        }
+        -((self.hi - self.lo).ln())
+    }
+}
+
+/// Cauchy(loc, scale).
+#[derive(Clone, Copy, Debug)]
+pub struct Cauchy<T: Scalar> {
+    pub loc: T,
+    pub scale: T,
+}
+
+impl<T: Scalar> Cauchy<T> {
+    pub fn new(loc: T, scale: T) -> Self {
+        Self { loc, scale }
+    }
+
+    pub fn logpdf(&self, x: T) -> T {
+        let z = (x - self.loc) / self.scale;
+        T::constant(-math::LN_PI) - self.scale.ln() - (z * z).ln_1p()
+    }
+}
+
+/// HalfCauchy(scale): |Cauchy(0, scale)|, supported on [0, ∞).
+#[derive(Clone, Copy, Debug)]
+pub struct HalfCauchy<T: Scalar> {
+    pub scale: T,
+}
+
+impl<T: Scalar> HalfCauchy<T> {
+    pub fn new(scale: T) -> Self {
+        Self { scale }
+    }
+
+    pub fn logpdf(&self, x: T) -> T {
+        if x.value() < 0.0 {
+            return T::constant(f64::NEG_INFINITY);
+        }
+        let z = x / self.scale;
+        T::constant(std::f64::consts::LN_2 - math::LN_PI) - self.scale.ln() - (z * z).ln_1p()
+    }
+}
+
+/// Univariate continuous distributions.
+#[derive(Clone, Debug)]
+pub enum ScalarDist<T: Scalar> {
+    Normal(Normal<T>),
+    InverseGamma(InverseGamma<T>),
+    Gamma(Gamma<T>),
+    Beta(Beta<T>),
+    Exponential(Exponential<T>),
+    Uniform(Uniform<T>),
+    Cauchy(Cauchy<T>),
+    HalfCauchy(HalfCauchy<T>),
+}
+
+impl<T: Scalar> ScalarDist<T> {
+    pub fn logpdf(&self, x: T) -> T {
+        match self {
+            ScalarDist::Normal(d) => d.logpdf(x),
+            ScalarDist::InverseGamma(d) => d.logpdf(x),
+            ScalarDist::Gamma(d) => d.logpdf(x),
+            ScalarDist::Beta(d) => d.logpdf(x),
+            ScalarDist::Exponential(d) => d.logpdf(x),
+            ScalarDist::Uniform(d) => d.logpdf(x),
+            ScalarDist::Cauchy(d) => d.logpdf(x),
+            ScalarDist::HalfCauchy(d) => d.logpdf(x),
+        }
+    }
+
+    pub fn domain(&self) -> Domain {
+        match self {
+            ScalarDist::Normal(_) | ScalarDist::Cauchy(_) => Domain::Real,
+            ScalarDist::InverseGamma(_)
+            | ScalarDist::Gamma(_)
+            | ScalarDist::Exponential(_)
+            | ScalarDist::HalfCauchy(_) => Domain::Positive,
+            ScalarDist::Beta(_) => Domain::Interval(0.0, 1.0),
+            ScalarDist::Uniform(d) => Domain::Interval(d.lo.value(), d.hi.value()),
+        }
+    }
+}
+
+impl ScalarDist<f64> {
+    /// Box into the dynamically-typed form stored in `UntypedVarInfo`.
+    pub fn boxed(&self) -> AnyDist {
+        AnyDist::Scalar(self.clone())
+    }
+
+    /// Draw one value (prior sampling / particle regeneration).
+    pub fn sample<R: RngCore + ?Sized>(&self, rng: &mut R) -> f64 {
+        match self {
+            ScalarDist::Normal(d) => d.mean + d.sd * rng.normal(),
+            ScalarDist::InverseGamma(d) => d.scale / rng.gamma(d.shape),
+            ScalarDist::Gamma(d) => rng.gamma(d.shape) / d.rate,
+            ScalarDist::Beta(d) => rng.beta(d.a, d.b),
+            ScalarDist::Exponential(d) => rng.exponential() / d.rate,
+            ScalarDist::Uniform(d) => rng.uniform_range(d.lo, d.hi),
+            ScalarDist::Cauchy(d) => {
+                d.loc + d.scale * (std::f64::consts::PI * (rng.uniform() - 0.5)).tan()
+            }
+            ScalarDist::HalfCauchy(d) => {
+                (d.scale * (std::f64::consts::PI * (rng.uniform() - 0.5)).tan()).abs()
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------ vector
+
+/// Isotropic normal: n iid Normal(mean, sd) coordinates.
+#[derive(Clone, Copy, Debug)]
+pub struct IsoNormal<T: Scalar> {
+    pub mean: T,
+    pub sd: T,
+    pub n: usize,
+}
+
+impl<T: Scalar> IsoNormal<T> {
+    pub fn new(mean: T, sd: T, n: usize) -> Self {
+        Self { mean, sd, n }
+    }
+
+    pub fn logpdf(&self, x: &[T]) -> T {
+        debug_assert_eq!(x.len(), self.n);
+        if self.sd.value() <= 0.0 {
+            return T::constant(f64::NEG_INFINITY);
+        }
+        let mut ss = T::constant(0.0);
+        for &xi in x {
+            let z = (xi - self.mean) / self.sd;
+            ss = ss + z * z;
+        }
+        let n = self.n as f64;
+        ss * (-0.5) - self.sd.ln() * n - 0.5 * math::LN_2PI * n
+    }
+}
+
+/// Dirichlet(α) over the (n−1)-simplex. α is data (never a parameter in
+/// the benchmark set), so it stays `f64`.
+#[derive(Clone, Debug)]
+pub struct Dirichlet {
+    pub alpha: Vec<f64>,
+}
+
+impl Dirichlet {
+    pub fn new(alpha: Vec<f64>) -> Self {
+        assert!(!alpha.is_empty() && alpha.iter().all(|&a| a > 0.0));
+        Self { alpha }
+    }
+
+    /// Symmetric Dirichlet(a, …, a) of length n.
+    pub fn symmetric(a: f64, n: usize) -> Self {
+        Self::new(vec![a; n])
+    }
+
+    pub fn logpdf<T: Scalar>(&self, x: &[T]) -> T {
+        debug_assert_eq!(x.len(), self.alpha.len());
+        let mut lp = T::constant(self.log_norm());
+        for (&a, &xi) in self.alpha.iter().zip(x) {
+            if xi.value() <= 0.0 {
+                return T::constant(f64::NEG_INFINITY);
+            }
+            // skip α=1 terms: exact zero, and avoids 0·ln(x) tape nodes
+            if a != 1.0 {
+                lp = lp + xi.ln() * (a - 1.0);
+            }
+        }
+        lp
+    }
+
+    /// lnΓ(Σα) − Σ lnΓ(αᵢ).
+    fn log_norm(&self) -> f64 {
+        let sum: f64 = self.alpha.iter().sum();
+        math::lgamma(sum) - self.alpha.iter().map(|&a| math::lgamma(a)).sum::<f64>()
+    }
+}
+
+/// Fixed-length multivariate distributions.
+#[derive(Clone, Debug)]
+pub enum VecDist<T: Scalar> {
+    IsoNormal(IsoNormal<T>),
+    Dirichlet(Dirichlet),
+}
+
+impl<T: Scalar> VecDist<T> {
+    pub fn logpdf(&self, x: &[T]) -> T {
+        match self {
+            VecDist::IsoNormal(d) => d.logpdf(x),
+            VecDist::Dirichlet(d) => d.logpdf(x),
+        }
+    }
+
+    pub fn domain(&self) -> Domain {
+        match self {
+            VecDist::IsoNormal(d) => Domain::RealVec(d.n),
+            VecDist::Dirichlet(d) => Domain::Simplex(d.alpha.len()),
+        }
+    }
+
+    /// Length of the constrained value vector.
+    pub fn len(&self) -> usize {
+        match self {
+            VecDist::IsoNormal(d) => d.n,
+            VecDist::Dirichlet(d) => d.alpha.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl VecDist<f64> {
+    pub fn boxed(&self) -> AnyDist {
+        AnyDist::Vector(self.clone())
+    }
+
+    pub fn sample<R: RngCore + ?Sized>(&self, rng: &mut R) -> Vec<f64> {
+        match self {
+            VecDist::IsoNormal(d) => (0..d.n).map(|_| d.mean + d.sd * rng.normal()).collect(),
+            VecDist::Dirichlet(d) => {
+                let mut out = vec![0.0; d.alpha.len()];
+                rng.dirichlet_into(&d.alpha, &mut out);
+                out
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- discrete
+
+/// Bernoulli(p) over {0, 1}.
+#[derive(Clone, Copy, Debug)]
+pub struct Bernoulli<T: Scalar> {
+    pub p: T,
+}
+
+impl<T: Scalar> Bernoulli<T> {
+    pub fn new(p: T) -> Self {
+        Self { p }
+    }
+
+    pub fn logpmf(&self, k: i64) -> T {
+        match k {
+            1 => self.p.ln(),
+            0 => (T::constant(1.0) - self.p).ln(),
+            _ => T::constant(f64::NEG_INFINITY),
+        }
+    }
+}
+
+/// Bernoulli on the logit scale: P(1) = σ(logit).
+#[derive(Clone, Copy, Debug)]
+pub struct BernoulliLogit<T: Scalar> {
+    pub logit: T,
+}
+
+impl<T: Scalar> BernoulliLogit<T> {
+    pub fn new(logit: T) -> Self {
+        Self { logit }
+    }
+
+    pub fn logpmf(&self, k: i64) -> T {
+        match k {
+            1 => self.logit.log_sigmoid(),
+            0 => (-self.logit).log_sigmoid(),
+            _ => T::constant(f64::NEG_INFINITY),
+        }
+    }
+}
+
+/// Poisson(rate λ).
+#[derive(Clone, Copy, Debug)]
+pub struct Poisson<T: Scalar> {
+    pub rate: T,
+}
+
+impl<T: Scalar> Poisson<T> {
+    pub fn new(rate: T) -> Self {
+        Self { rate }
+    }
+
+    pub fn logpmf(&self, k: i64) -> T {
+        if k < 0 {
+            return T::constant(f64::NEG_INFINITY);
+        }
+        self.rate.ln() * (k as f64) - self.rate - math::ln_factorial(k as u64)
+    }
+}
+
+/// Categorical over {0, …, K−1} with fixed (data-side) probabilities.
+#[derive(Clone, Debug)]
+pub struct Categorical {
+    pub probs: Vec<f64>,
+}
+
+impl Categorical {
+    /// Normalize (possibly unnormalized) probabilities.
+    pub fn from_probs(probs: &[f64]) -> Self {
+        let total: f64 = probs.iter().sum();
+        assert!(total > 0.0, "categorical probabilities sum to zero");
+        Self {
+            probs: probs.iter().map(|&p| p / total).collect(),
+        }
+    }
+
+    pub fn logpmf<T: Scalar>(&self, k: i64) -> T {
+        if k < 0 || k as usize >= self.probs.len() {
+            return T::constant(f64::NEG_INFINITY);
+        }
+        T::constant(self.probs[k as usize].ln())
+    }
+}
+
+/// Integer-valued distributions.
+#[derive(Clone, Debug)]
+pub enum DiscreteDist<T: Scalar> {
+    Bernoulli(Bernoulli<T>),
+    BernoulliLogit(BernoulliLogit<T>),
+    Poisson(Poisson<T>),
+    Categorical(Categorical),
+}
+
+impl<T: Scalar> DiscreteDist<T> {
+    pub fn logpmf(&self, k: i64) -> T {
+        match self {
+            DiscreteDist::Bernoulli(d) => d.logpmf(k),
+            DiscreteDist::BernoulliLogit(d) => d.logpmf(k),
+            DiscreteDist::Poisson(d) => d.logpmf(k),
+            DiscreteDist::Categorical(d) => d.logpmf(k),
+        }
+    }
+
+    pub fn domain(&self) -> Domain {
+        match self {
+            DiscreteDist::Bernoulli(_) | DiscreteDist::BernoulliLogit(_) => Domain::DiscreteBool,
+            DiscreteDist::Poisson(_) => Domain::DiscreteCount,
+            DiscreteDist::Categorical(d) => Domain::DiscreteCategory(d.probs.len()),
+        }
+    }
+}
+
+impl DiscreteDist<f64> {
+    pub fn boxed(&self) -> AnyDist {
+        AnyDist::Discrete(self.clone())
+    }
+
+    pub fn sample<R: RngCore + ?Sized>(&self, rng: &mut R) -> i64 {
+        match self {
+            DiscreteDist::Bernoulli(d) => rng.bernoulli(d.p) as i64,
+            DiscreteDist::BernoulliLogit(d) => rng.bernoulli(math::sigmoid(d.logit)) as i64,
+            DiscreteDist::Poisson(d) => rng.poisson(d.rate) as i64,
+            DiscreteDist::Categorical(d) => rng.categorical(&d.probs) as i64,
+        }
+    }
+}
+
+// ------------------------------------------------------------------- boxed
+
+/// The dynamically-typed (boxed, `f64`-specialized) distribution stored in
+/// `UntypedVarInfo` records — the paper's abstract-element-type storage.
+#[derive(Clone, Debug)]
+pub enum AnyDist {
+    Scalar(ScalarDist<f64>),
+    Vector(VecDist<f64>),
+    Discrete(DiscreteDist<f64>),
+}
+
+impl AnyDist {
+    pub fn domain(&self) -> Domain {
+        match self {
+            AnyDist::Scalar(d) => d.domain(),
+            AnyDist::Vector(d) => d.domain(),
+            AnyDist::Discrete(d) => d.domain(),
+        }
+    }
+
+    /// Draw a fresh boxed value from the distribution.
+    pub fn sample<R: RngCore + ?Sized>(&self, rng: &mut R) -> Value {
+        match self {
+            AnyDist::Scalar(d) => Value::F64(d.sample(rng)),
+            AnyDist::Vector(d) => Value::Vec(d.sample(rng)),
+            AnyDist::Discrete(d) => Value::Int(d.sample(rng)),
+        }
+    }
+
+    /// Log-density of a boxed value (constrained space, no Jacobian).
+    pub fn logpdf(&self, v: &Value) -> f64 {
+        match self {
+            AnyDist::Scalar(d) => match v.as_f64() {
+                Some(x) => d.logpdf(x),
+                None => f64::NEG_INFINITY,
+            },
+            AnyDist::Vector(d) => match v.as_slice() {
+                Some(x) => d.logpdf(x),
+                None => f64::NEG_INFINITY,
+            },
+            AnyDist::Discrete(d) => match v.as_int() {
+                Some(k) => d.logpmf(k),
+                None => f64::NEG_INFINITY,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ad::forward::Dual;
+    use crate::ad::finite_diff_grad;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() <= tol * (1.0 + b.abs()), "{a} vs {b}");
+    }
+
+    #[test]
+    fn normal_pins() {
+        // N(0,1) at 0: -0.5 ln 2π
+        close(Normal::new(0.0, 1.0).logpdf(0.0), -0.5 * math::LN_2PI, 1e-14);
+        close(
+            Normal::new(1.0, 2.0).logpdf(3.0),
+            -0.5 - (2.0f64).ln() - 0.5 * math::LN_2PI,
+            1e-14,
+        );
+        assert_eq!(Normal::new(0.0, 0.0).logpdf(0.0), f64::NEG_INFINITY);
+        close(Normal::<f64>::std().logpdf(1.0), -0.5 - 0.5 * math::LN_2PI, 1e-14);
+    }
+
+    #[test]
+    fn inverse_gamma_pins() {
+        // IG(2,3) at x: 2 ln3 − lnΓ(2) − 3 ln x − 3/x
+        let d = InverseGamma::new(2.0, 3.0);
+        close(d.logpdf(1.0), 2.0 * 3.0f64.ln() - 3.0, 1e-13);
+        assert_eq!(d.logpdf(-1.0), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn gamma_exponential_consistency() {
+        // Gamma(1, λ) = Exponential(λ)
+        for &x in &[0.1, 1.0, 4.2] {
+            close(
+                Gamma::new(1.0, 2.5).logpdf(x),
+                Exponential::new(2.5).logpdf(x),
+                1e-13,
+            );
+        }
+    }
+
+    #[test]
+    fn beta_uniform_consistency() {
+        // Beta(1,1) = Uniform(0,1)
+        for &x in &[0.2, 0.5, 0.9] {
+            close(Beta::new(1.0, 1.0).logpdf(x), 0.0, 1e-13);
+            close(Uniform::new(0.0, 1.0).logpdf(x), 0.0, 1e-14);
+        }
+        assert_eq!(Uniform::new(0.0, 1.0).logpdf(1.5), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn cauchy_and_half_cauchy() {
+        // Cauchy(0,1) at 0: −ln π
+        close(Cauchy::new(0.0, 1.0).logpdf(0.0), -math::LN_PI, 1e-14);
+        // HalfCauchy doubles the density on the positive side
+        close(
+            HalfCauchy::new(2.0).logpdf(1.3),
+            Cauchy::new(0.0, 2.0).logpdf(1.3) + 2.0f64.ln(),
+            1e-13,
+        );
+        assert_eq!(HalfCauchy::new(1.0).logpdf(-0.1), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn iso_normal_is_sum_of_normals() {
+        let d = IsoNormal::new(0.5, 1.5, 3);
+        let x = [0.1, -0.2, 2.0];
+        let want: f64 = x.iter().map(|&xi| Normal::new(0.5, 1.5).logpdf(xi)).sum();
+        close(d.logpdf(&x), want, 1e-13);
+    }
+
+    #[test]
+    fn dirichlet_uniform_is_log_gamma_k() {
+        // Dirichlet(1,…,1) over the K-simplex has constant density Γ(K)
+        let d = Dirichlet::symmetric(1.0, 4);
+        close(d.logpdf(&[0.1f64, 0.2, 0.3, 0.4]), math::lgamma(4.0), 1e-13);
+        // general α
+        let d = Dirichlet::new(vec![2.0, 3.0, 0.5]);
+        let x = [0.3f64, 0.5, 0.2];
+        let want = math::lgamma(5.5) - math::lgamma(2.0) - math::lgamma(3.0)
+            - math::lgamma(0.5)
+            + 1.0 * x[0].ln()
+            + 2.0 * x[1].ln()
+            - 0.5 * x[2].ln();
+        close(d.logpdf(&x), want, 1e-12);
+        assert_eq!(
+            d.logpdf(&[1.0f64, 0.0, 0.0]),
+            f64::NEG_INFINITY
+        );
+    }
+
+    #[test]
+    fn discrete_pmfs() {
+        close(Bernoulli::new(0.3).logpmf(1), 0.3f64.ln(), 1e-14);
+        close(Bernoulli::new(0.3).logpmf(0), 0.7f64.ln(), 1e-14);
+        assert_eq!(Bernoulli::new(0.3).logpmf(2), f64::NEG_INFINITY);
+        // BernoulliLogit(logit(0.3)) == Bernoulli(0.3)
+        let logit = (0.3f64 / 0.7).ln();
+        close(
+            BernoulliLogit::new(logit).logpmf(1),
+            0.3f64.ln(),
+            1e-12,
+        );
+        // Poisson(2) at k=3: 3 ln2 − 2 − ln 6
+        close(
+            Poisson::new(2.0).logpmf(3),
+            3.0 * 2.0f64.ln() - 2.0 - 6.0f64.ln(),
+            1e-13,
+        );
+        let c = Categorical::from_probs(&[1.0, 1.0, 2.0]);
+        close(c.logpmf::<f64>(2), 0.5f64.ln(), 1e-14);
+        assert_eq!(c.logpmf::<f64>(3), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn domains_are_consistent() {
+        assert_eq!(ScalarDist::Normal(Normal::<f64>::std()).domain(), Domain::Real);
+        assert_eq!(
+            ScalarDist::Gamma(Gamma::new(1.0, 1.0)).domain(),
+            Domain::Positive
+        );
+        assert_eq!(
+            ScalarDist::Uniform(Uniform::new(-2.0, 3.0)).domain(),
+            Domain::Interval(-2.0, 3.0)
+        );
+        assert_eq!(
+            VecDist::<f64>::Dirichlet(Dirichlet::symmetric(1.0, 5)).domain(),
+            Domain::Simplex(5)
+        );
+        assert_eq!(
+            DiscreteDist::<f64>::Categorical(Categorical::from_probs(&[0.5, 0.5])).domain(),
+            Domain::DiscreteCategory(2)
+        );
+        assert!(Domain::DiscreteBool.is_discrete());
+        assert_eq!(Domain::Simplex(4).unconstrained_dim(), 3);
+        assert_eq!(Domain::Simplex(4).constrained_dim(), 4);
+        assert_eq!(Domain::DiscreteCategory(3).unconstrained_dim(), 0);
+    }
+
+    #[test]
+    fn sampling_moments() {
+        let mut rng = Xoshiro256pp::seed_from_u64(99);
+        let n = 40_000;
+        // Normal(2, 0.5)
+        let d = ScalarDist::Normal(Normal::new(2.0, 0.5));
+        let m: f64 = (0..n).map(|_| d.sample(&mut rng)).sum::<f64>() / n as f64;
+        close(m, 2.0, 0.02);
+        // Gamma(3, 2): mean 1.5
+        let d = ScalarDist::Gamma(Gamma::new(3.0, 2.0));
+        let m: f64 = (0..n).map(|_| d.sample(&mut rng)).sum::<f64>() / n as f64;
+        close(m, 1.5, 0.03);
+        // InverseGamma(3, 2): mean b/(a−1) = 1
+        let d = ScalarDist::InverseGamma(InverseGamma::new(3.0, 2.0));
+        let m: f64 = (0..n).map(|_| d.sample(&mut rng)).sum::<f64>() / n as f64;
+        close(m, 1.0, 0.05);
+        // Uniform(-1, 3): mean 1
+        let d = ScalarDist::Uniform(Uniform::new(-1.0, 3.0));
+        let m: f64 = (0..n).map(|_| d.sample(&mut rng)).sum::<f64>() / n as f64;
+        close(m, 1.0, 0.05);
+        // Bernoulli(0.3)
+        let d = DiscreteDist::Bernoulli(Bernoulli::new(0.3));
+        let m: f64 = (0..n).map(|_| d.sample(&mut rng) as f64).sum::<f64>() / n as f64;
+        close(m, 0.3, 0.05);
+        // Dirichlet samples live on the simplex
+        let d = VecDist::Dirichlet(Dirichlet::symmetric(0.7, 4));
+        let v = d.sample(&mut rng);
+        close(v.iter().sum::<f64>(), 1.0, 1e-12);
+    }
+
+    #[test]
+    fn any_dist_boxed_roundtrip() {
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let any = ScalarDist::Gamma(Gamma::new(2.0, 3.0)).boxed();
+        assert_eq!(any.domain(), Domain::Positive);
+        let v = any.sample(&mut rng);
+        let x = v.as_f64().unwrap();
+        assert!(x > 0.0);
+        close(any.logpdf(&v), Gamma::new(2.0, 3.0).logpdf(x), 1e-14);
+        // type mismatch scores −∞
+        assert_eq!(any.logpdf(&Value::Vec(vec![1.0])), f64::NEG_INFINITY);
+
+        let anyv = VecDist::IsoNormal(IsoNormal::new(0.0, 1.0, 3)).boxed();
+        let v = anyv.sample(&mut rng);
+        assert_eq!(v.as_slice().unwrap().len(), 3);
+        let anyd = DiscreteDist::Categorical(Categorical::from_probs(&[0.2, 0.8])).boxed();
+        let v = anyd.sample(&mut rng);
+        assert!(matches!(v, Value::Int(0 | 1)));
+    }
+
+    #[test]
+    fn dual_gradients_match_finite_differences() {
+        // d/dx of several log-densities via forward duals vs FD
+        let fd_check = |f: &dyn Fn(f64) -> f64, fdual: &dyn Fn(Dual) -> Dual, x0: f64| {
+            let g_fd = finite_diff_grad(|x| f(x[0]), &[x0], 1e-6)[0];
+            let g_ad = fdual(Dual::var(x0)).d;
+            assert!((g_fd - g_ad).abs() < 1e-5, "{g_fd} vs {g_ad} at {x0}");
+        };
+        fd_check(
+            &|x| Normal::new(0.5, 2.0).logpdf(x),
+            &|x| Normal::new(Dual::constant(0.5), Dual::constant(2.0)).logpdf(x),
+            1.3,
+        );
+        fd_check(
+            &|x| Gamma::new(2.0, 3.0).logpdf(x),
+            &|x| Gamma::new(Dual::constant(2.0), Dual::constant(3.0)).logpdf(x),
+            0.8,
+        );
+        fd_check(
+            &|x| HalfCauchy::new(2.0).logpdf(x),
+            &|x| HalfCauchy::new(Dual::constant(2.0)).logpdf(x),
+            1.1,
+        );
+        // gradient w.r.t. a *parameter*
+        let g_fd = finite_diff_grad(|m| Normal::new(m[0], 1.0).logpdf(0.7), &[0.2], 1e-6)[0];
+        let g_ad = Normal::new(Dual::var(0.2), Dual::constant(1.0))
+            .logpdf(Dual::constant(0.7))
+            .d;
+        assert!((g_fd - g_ad).abs() < 1e-6);
+    }
+}

@@ -11,9 +11,11 @@ use rand_core::RngCore;
 
 use crate::chain::SamplerStats;
 use crate::context::Context;
-use crate::dist::Domain;
-use crate::model::{typed_grad_forward, typed_grad_reverse, typed_logp, Model};
+use crate::dist::{bijector, Domain};
+use crate::model::{init_trace, typed_grad_forward, typed_grad_reverse, typed_logp, Model};
+use crate::particle::Resampler;
 use crate::util::rng::Rng;
+use crate::value::Value;
 use crate::varinfo::TypedVarInfo;
 use crate::varname::VarName;
 
@@ -26,6 +28,16 @@ pub enum BlockSampler {
     Hmc { step_size: f64, n_leapfrog: usize },
     /// Exact enumeration (categorical/bool supports only).
     Enumerate,
+    /// Conditional SMC (Particle-Gibbs): the block is updated by an
+    /// N-particle filter pinned to the current trajectory
+    /// ([`crate::inference::smc::csmc_sweep`]). Works for continuous,
+    /// discrete and mixed blocks — the particle analogue of "HMC within
+    /// Gibbs", and the only block sampler that handles unbounded discrete
+    /// supports.
+    ParticleGibbs {
+        n_particles: usize,
+        resampler: Resampler,
+    },
 }
 
 /// One Gibbs block: which variables it owns + how it updates them.
@@ -57,6 +69,18 @@ impl GibbsBlock {
         Self {
             vars: vars.iter().map(|v| VarName::new(v)).collect(),
             sampler: BlockSampler::Enumerate,
+        }
+    }
+
+    /// Particle-Gibbs block (multinomial resampling — the safe scheme for
+    /// the conditional filter).
+    pub fn particle_gibbs(vars: &[&str], n_particles: usize) -> Self {
+        Self {
+            vars: vars.iter().map(|v| VarName::new(v)).collect(),
+            sampler: BlockSampler::ParticleGibbs {
+                n_particles,
+                resampler: Resampler::Multinomial,
+            },
         }
     }
 }
@@ -109,11 +133,14 @@ impl Gibbs {
         // Resolve blocks to coordinate index sets / discrete slots.
         let mut cont_blocks: Vec<(usize, Vec<usize>)> = Vec::new(); // (block idx, θ coords)
         let mut disc_blocks: Vec<(usize, Vec<usize>)> = Vec::new(); // (block idx, slot idx)
+        let mut pg_blocks: Vec<(usize, Vec<usize>)> = Vec::new(); // (block idx, slot idx)
         for (bi, block) in self.blocks.iter().enumerate() {
             let mut coords = Vec::new();
             let mut slots = Vec::new();
+            let mut all_slots = Vec::new();
             for (si, slot) in tvi.slots().iter().enumerate() {
                 if block.vars.iter().any(|v| slot.vn.subsumed_by(v)) {
+                    all_slots.push(si);
                     if slot.domain.is_discrete() {
                         slots.push(si);
                     } else {
@@ -125,14 +152,36 @@ impl Gibbs {
                 !(coords.is_empty() && slots.is_empty()),
                 "Gibbs block {bi} matches no variables"
             );
-            if matches!(block.sampler, BlockSampler::Enumerate) {
-                assert!(coords.is_empty(), "Enumerate block over continuous vars");
-                disc_blocks.push((bi, slots));
-            } else {
-                assert!(slots.is_empty(), "continuous sampler over discrete vars");
-                cont_blocks.push((bi, coords));
+            match block.sampler {
+                BlockSampler::Enumerate => {
+                    assert!(coords.is_empty(), "Enumerate block over continuous vars");
+                    disc_blocks.push((bi, slots));
+                }
+                // Particle-Gibbs owns continuous *and* discrete slots
+                BlockSampler::ParticleGibbs { .. } => pg_blocks.push((bi, all_slots)),
+                _ => {
+                    assert!(slots.is_empty(), "continuous sampler over discrete vars");
+                    cont_blocks.push((bi, coords));
+                }
             }
         }
+
+        // Particle-Gibbs blocks replay the model through a boxed trace
+        // template that mirrors the typed layout (one record per slot);
+        // the observe-statement count is a model constant — probe once.
+        let mut pg_vi = if pg_blocks.is_empty() {
+            None
+        } else {
+            let vi = init_trace(model, rng);
+            assert!(
+                tvi.layout_matches(&vi),
+                "Particle-Gibbs requires a trace layout matching the model"
+            );
+            Some(vi)
+        };
+        let pg_n_obs = pg_vi
+            .as_ref()
+            .map(|vi| crate::particle::count_observes(model, vi));
 
         let mut rows = Vec::with_capacity(iters);
         let mut logps = Vec::with_capacity(iters);
@@ -207,8 +256,65 @@ impl Gibbs {
                             }
                         }
                     }
-                    BlockSampler::Enumerate => unreachable!(),
+                    BlockSampler::Enumerate | BlockSampler::ParticleGibbs { .. } => {
+                        unreachable!()
+                    }
                 }
+            }
+
+            // Particle-Gibbs blocks: conditional-SMC sweeps
+            for (bi, slots) in &pg_blocks {
+                let (n_particles, resampler) = match self.blocks[*bi].sampler {
+                    BlockSampler::ParticleGibbs {
+                        n_particles,
+                        resampler,
+                    } => (n_particles, resampler),
+                    _ => unreachable!(),
+                };
+                let vi = pg_vi.as_mut().expect("pg template exists");
+                // sync the current typed state into the replay template
+                tvi.set_unconstrained(&theta);
+                for slot in tvi.slots() {
+                    vi.set_value(&slot.vn, tvi.boxed_value(slot));
+                }
+                let sweep_seed = rng.next_u64();
+                let selected = crate::inference::smc::csmc_sweep(
+                    model,
+                    vi,
+                    &self.blocks[*bi].vars,
+                    n_particles,
+                    resampler,
+                    0.5,
+                    sweep_seed,
+                    pg_n_obs,
+                );
+                // write the selected particle's block values back into the
+                // typed state (link continuous values, copy discrete ones)
+                let mut buf: Vec<f64> = Vec::new();
+                for &si in slots {
+                    let slot = tvi.slots()[si].clone();
+                    let value = selected
+                        .get(&slot.vn)
+                        .expect("selected trace lost a block variable")
+                        .value
+                        .clone();
+                    if slot.domain.is_discrete() {
+                        tvi.discrete[slot.disc_offset] =
+                            value.as_int().expect("discrete slot with non-integer value");
+                    } else {
+                        buf.clear();
+                        match &value {
+                            Value::F64(x) => bijector::link(&slot.domain, &[*x], &mut buf),
+                            Value::Vec(v) => bijector::link(&slot.domain, v, &mut buf),
+                            other => panic!("continuous slot with value {other:?}"),
+                        }
+                        theta[slot.unc_offset..slot.unc_offset + slot.unc_len]
+                            .copy_from_slice(&buf);
+                    }
+                }
+                lp = typed_logp(model, &tvi, &theta, Context::Default);
+                proposals += 1.0;
+                accepts += 1.0; // CSMC selection always yields a valid draw
             }
 
             // discrete blocks: exact full-conditional draws
@@ -253,6 +359,7 @@ impl Gibbs {
                 step_size: 0.0,
                 n_grad_evals: n_grad,
                 wall_secs: t_start.elapsed().as_secs_f64(),
+                ..SamplerStats::default()
             },
         }
     }
@@ -324,6 +431,55 @@ mod tests {
         let freq: f64 =
             out.rows.iter().map(|r| r[0]).sum::<f64>() / out.rows.len() as f64;
         assert!((freq - expect).abs() < 0.03, "{freq} vs {expect}");
+    }
+
+    #[test]
+    fn particle_gibbs_block_matches_exact_discrete_posterior() {
+        // Same posterior check as the Enumerate test, but the discrete
+        // latent is updated by conditional SMC instead of enumeration.
+        let m = TinyMixture { y: 2.0 };
+        let mut rng = Xoshiro256pp::seed_from_u64(31);
+        let tvi = init_typed(&m, &mut rng);
+        let gibbs = Gibbs::new(vec![GibbsBlock::particle_gibbs(&["z"], 24)]);
+        let out = gibbs.sample(&m, &tvi, 200, 4000, &mut rng);
+        let l1 = 0.3 * (-0.5f64).exp();
+        let l0 = 0.7 * (-12.5f64).exp();
+        let expect = l1 / (l1 + l0);
+        let freq: f64 = out.rows.iter().map(|r| r[0]).sum::<f64>() / out.rows.len() as f64;
+        assert!((freq - expect).abs() < 0.04, "{freq} vs {expect}");
+    }
+
+    #[test]
+    fn particle_gibbs_mixed_with_hmc_recovers_continuous_posterior() {
+        // PG over the variance block + HMC over the mean: posterior means
+        // must agree with the all-HMC/MH baseline within a loose MCSE band.
+        let mut rng = Xoshiro256pp::seed_from_u64(33);
+        let y: Vec<f64> = (0..8).map(|_| 1.5 + 0.7 * rng.normal()).collect();
+        let m = GaussUnknown { y };
+        let tvi = init_typed(&m, &mut rng);
+
+        let baseline = Gibbs::new(vec![
+            GibbsBlock::rwmh(&["var"], 0.4),
+            GibbsBlock::hmc(&["m"], 0.05, 8),
+        ])
+        .sample(&m, &tvi, 1000, 8000, &mut rng);
+
+        let pg = Gibbs::new(vec![
+            GibbsBlock::particle_gibbs(&["var"], 32),
+            GibbsBlock::hmc(&["m"], 0.05, 8),
+        ])
+        .sample(&m, &tvi, 500, 4000, &mut rng);
+
+        // column order: var, m
+        let m_base = stats::mean(&baseline.rows.iter().map(|r| r[1]).collect::<Vec<_>>());
+        let m_pg = stats::mean(&pg.rows.iter().map(|r| r[1]).collect::<Vec<_>>());
+        assert!((m_base - m_pg).abs() < 0.15, "m: baseline {m_base} vs PG {m_pg}");
+        let v_base = stats::mean(&baseline.rows.iter().map(|r| r[0]).collect::<Vec<_>>());
+        let v_pg = stats::mean(&pg.rows.iter().map(|r| r[0]).collect::<Vec<_>>());
+        assert!(
+            (v_base - v_pg).abs() < 0.25 * (1.0 + v_base),
+            "var: baseline {v_base} vs PG {v_pg}"
+        );
     }
 
     #[test]

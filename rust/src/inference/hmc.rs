@@ -180,6 +180,7 @@ impl Hmc {
                 step_size: eps,
                 n_grad_evals: n_grad,
                 wall_secs: t_start.elapsed().as_secs_f64(),
+                ..SamplerStats::default()
             },
         }
     }
@@ -262,6 +263,7 @@ impl<'a> HmcFusedXla<'a> {
                 step_size: self.step_size,
                 n_grad_evals: n_traj * 4,
                 wall_secs: t_start.elapsed().as_secs_f64(),
+                ..SamplerStats::default()
             },
         }
     }

@@ -95,6 +95,7 @@ impl RwMh {
                 step_size: scale,
                 n_grad_evals: 0,
                 wall_secs: t_start.elapsed().as_secs_f64(),
+                ..SamplerStats::default()
             },
         }
     }

@@ -1,6 +1,8 @@
 //! Inference algorithms: static HMC (the paper's benchmark sampler), NUTS,
-//! random-walk Metropolis–Hastings, blocked Gibbs, and prior sampling —
-//! the Turing/AdvancedHMC layer of the paper's stack.
+//! random-walk Metropolis–Hastings, blocked Gibbs, sequential Monte Carlo
+//! (SMC + Particle-Gibbs over the `particle` substrate), and prior
+//! sampling — the Turing/AdvancedHMC/AdvancedPS layer of the paper's
+//! stack.
 
 pub mod adapt;
 pub mod gibbs;
@@ -8,12 +10,14 @@ pub mod hmc;
 pub mod mh;
 pub mod nuts;
 pub mod run;
+pub mod smc;
 
-pub use gibbs::{Gibbs, GibbsBlock};
+pub use gibbs::{BlockSampler, Gibbs, GibbsBlock};
 pub use hmc::Hmc;
 pub use mh::RwMh;
 pub use nuts::Nuts;
-pub use run::{sample_chain, sample_chains, SamplerKind};
+pub use run::{sample_chain, sample_chains, sample_smc_chain, SamplerKind};
+pub use smc::{csmc_sweep, Smc, SmcResult};
 
 use crate::chain::SamplerStats;
 

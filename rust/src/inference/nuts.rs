@@ -168,6 +168,7 @@ impl Nuts {
                 step_size: eps,
                 n_grad_evals: n_grad,
                 wall_secs: t_start.elapsed().as_secs_f64(),
+                ..SamplerStats::default()
             },
         }
     }

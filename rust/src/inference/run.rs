@@ -9,14 +9,17 @@ use crate::util::rng::Xoshiro256pp;
 use crate::util::threadpool::parallel_map;
 use crate::varinfo::{TypedVarInfo, UntypedVarInfo};
 
-use super::{Hmc, Nuts, RwMh};
+use super::{Hmc, Nuts, RwMh, Smc};
 
-/// Which sampler drives the unconstrained density.
+/// Which sampler drives a chain. The gradient/density samplers (HMC,
+/// NUTS, MH) run against a [`LogDensity`]; [`SamplerKind::Smc`] is a
+/// model-space particle sampler and is driven by [`sample_smc_chain`].
 #[derive(Clone, Debug)]
 pub enum SamplerKind {
     Hmc(Hmc),
     Nuts(Nuts),
     RwMh(RwMh),
+    Smc(Smc),
 }
 
 /// Run one chain: sample unconstrained draws from `ld`, convert them to
@@ -35,6 +38,10 @@ pub fn sample_chain(
         SamplerKind::Hmc(h) => h.sample(ld, &theta0, warmup, iters, &mut rng),
         SamplerKind::Nuts(n) => n.sample(ld, &theta0, warmup, iters, &mut rng),
         SamplerKind::RwMh(m) => m.sample(ld, &theta0, warmup, iters, &mut rng),
+        SamplerKind::Smc(_) => panic!(
+            "SMC re-executes the model and cannot run from a LogDensity; \
+             use inference::sample_smc_chain(model, &smc, seed)"
+        ),
     };
     let mut work = tvi.clone();
     let mut chain = Chain::new(work.column_names());
@@ -53,6 +60,14 @@ where
     F: Fn(usize) -> Chain + Send + Sync + 'static,
 {
     MultiChain::new(parallel_map(threads, n_chains, make))
+}
+
+/// Run one SMC "chain": a full particle-filter pass over the model's
+/// observations, returned as an equal-weight chain of `n_particles`
+/// draws whose `stats.log_evidence` carries the marginal-likelihood
+/// estimate (see [`crate::inference::smc`]).
+pub fn sample_smc_chain(model: &dyn Model, smc: &Smc, seed: u64) -> Chain {
+    smc.sample_chain(model, seed)
 }
 
 /// Sample from the prior by repeated fresh model runs (one trace rebuild
@@ -143,6 +158,30 @@ mod tests {
         assert!((rhat - 1.0).abs() < 0.05, "R̂ = {rhat}");
         // distinct seeds → distinct draws
         assert_ne!(mc.chains[0].rows()[0], mc.chains[1].rows()[0]);
+    }
+
+    #[test]
+    fn smc_chain_driver_produces_equal_weight_draws() {
+        model! {
+            pub SmcDemo { y: Vec<f64>, }
+            fn body<T>(this, api) {
+                let m = tilde!(api, m ~ Normal(c(0.0), c(1.0)));
+                for &yi in &this.y {
+                    obs!(api, yi => Normal(m, c(1.0)));
+                }
+            }
+        }
+        let m = SmcDemo { y: vec![0.2, -0.4, 0.1] };
+        let smc = Smc {
+            n_particles: 256,
+            ..Smc::default()
+        };
+        let chain = sample_smc_chain(&m, &smc, 13);
+        assert_eq!(chain.len(), 256);
+        assert!(chain.stats.log_evidence.is_finite());
+        let ms = chain.column("m").unwrap();
+        // conjugate posterior mean: Σy / (n + 1)
+        assert!((stats::mean(&ms) + 0.025).abs() < 0.15, "{}", stats::mean(&ms));
     }
 
     #[test]

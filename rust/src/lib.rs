@@ -29,6 +29,7 @@ pub mod inference;
 #[macro_use]
 pub mod model;
 pub mod models;
+pub mod particle;
 pub mod query;
 pub mod runtime;
 pub mod stanlike;

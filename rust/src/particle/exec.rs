@@ -1,0 +1,363 @@
+//! The replay-with-regenerate executor: how a particle re-runs the model.
+//!
+//! SMC without continuations re-executes the whole model body once per
+//! observation step (the CuPPL strategy). A [`ReplayExecutor`] run under
+//! [`Context::ObsWindow`] does three things at once:
+//!
+//! 1. **Replay** — variables already in the trace (and not flagged
+//!    `RESAMPLE`) keep their stored values, so the retained prefix of the
+//!    trajectory is reproduced exactly;
+//! 2. **Regenerate** — flagged or missing variables are drawn fresh from
+//!    their priors (the bootstrap proposal), clearing the flag;
+//! 3. **Windowed scoring** — only observe statements whose visit index
+//!    falls in `[lo, hi)` contribute to the accumulated weight. Because
+//!    the proposal is the prior, prior terms cancel in the importance
+//!    weight and the window's likelihood *is* the incremental weight.
+//!
+//! The executor also stamps every record visited up to the window end
+//! with [`flags::LOCKED`]: those records have been scored, so a
+//! resampling fork regenerates exactly the *unlocked* remainder
+//! ([`UntypedVarInfo::flag_unlocked`]) without invalidating accumulated
+//! weights — the paper's "del" flag machinery (§3.3) driving diversity
+//! after resampling. Stamping actual record indices (rather than a
+//! visit-count prefix) stays correct for dynamic models whose
+//! regeneration changes control flow and hence the visit/insertion
+//! correspondence.
+//!
+//! **Scoped (conditional) clouds.** When a `scope` restricts the filter
+//! to a subset of variables (Particle-Gibbs), out-of-scope variables are
+//! replayed verbatim — but their *prior* densities may depend on scoped
+//! values (e.g. `m ~ Normal(0, √(2·var))` while the filter updates
+//! `var`), so those terms vary across particles and belong to the
+//! importance weight. The rule: an assume visited inside the window
+//! (i.e. being locked in at this step) contributes its prior term to the
+//! weight iff it is *out of scope*; scoped assumes are bootstrap
+//! proposals whose prior cancels. With no scope (plain SMC) every assume
+//! is a proposal and no prior term is ever weighted.
+
+use rand_core::RngCore;
+
+use crate::context::{Accumulator, Context};
+use crate::dist::{DiscreteDist, ScalarDist, VecDist};
+use crate::model::{Model, TildeApi};
+use crate::value::Value;
+use crate::varinfo::{flags, UntypedVarInfo};
+use crate::varname::VarName;
+
+/// Outcome of one replay run.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplayReport {
+    /// Sum of in-window observation log-likelihoods (the incremental
+    /// log-weight of this particle for the step).
+    pub delta_logw: f64,
+    /// Total observe statements the model visited (the SMC step count).
+    pub obs_total: usize,
+    /// Number of trace records in the retained prefix: records `>= this`
+    /// may be flagged for regeneration after a resampling fork.
+    pub prefix_records: usize,
+}
+
+/// [`TildeApi`] implementation for particle replay (f64 only — particles
+/// never differentiate).
+pub struct ReplayExecutor<'a, R: RngCore> {
+    rng: &'a mut R,
+    vi: &'a mut UntypedVarInfo,
+    acc: Accumulator<f64>,
+    ctx: Context,
+    /// Conditional-cloud scope; `None` = plain SMC (everything proposed).
+    scope: Option<&'a [VarName]>,
+    lo: usize,
+    hi: usize,
+    obs_seen: usize,
+    assumes_seen: usize,
+    prefix_records: Option<usize>,
+    /// Record indices visited this run, collected until the window end is
+    /// reached and the prefix is stamped `LOCKED`.
+    visited: Vec<usize>,
+    locking_done: bool,
+}
+
+impl<'a, R: RngCore> ReplayExecutor<'a, R> {
+    pub fn new(
+        rng: &'a mut R,
+        vi: &'a mut UntypedVarInfo,
+        ctx: Context,
+        scope: Option<&'a [VarName]>,
+    ) -> Self {
+        let (lo, hi) = ctx.obs_window();
+        Self {
+            rng,
+            vi,
+            acc: Accumulator::new(ctx),
+            ctx,
+            scope,
+            lo,
+            hi,
+            obs_seen: 0,
+            assumes_seen: 0,
+            // hi = 0: nothing scored yet → the whole trace is regenerable
+            prefix_records: if hi == 0 { Some(0) } else { None },
+            visited: Vec::new(),
+            locking_done: hi == 0,
+        }
+    }
+
+    /// Run `model` once and report.
+    pub fn run(
+        model: &dyn Model,
+        rng: &'a mut R,
+        vi: &'a mut UntypedVarInfo,
+        ctx: Context,
+        scope: Option<&'a [VarName]>,
+    ) -> ReplayReport {
+        let mut exec = ReplayExecutor::new(rng, vi, ctx, scope);
+        model.eval_f64(&mut exec);
+        exec.finalize()
+    }
+
+    /// Stamp the scored prefix and produce the report. When the observe
+    /// counter never reached `hi`, every record visited this run was
+    /// scored by the window: lock them all.
+    fn finalize(mut self) -> ReplayReport {
+        if !self.locking_done {
+            for &i in &self.visited {
+                self.vi.flag_record(i, flags::LOCKED);
+            }
+        }
+        ReplayReport {
+            delta_logw: self.acc.total(),
+            obs_total: self.obs_seen,
+            prefix_records: self.prefix_records.unwrap_or(self.assumes_seen),
+        }
+    }
+
+    /// Replay a stored value or draw a fresh one (flagged/missing).
+    fn fetch_or_draw(&mut self, vn: VarName, dist: crate::dist::AnyDist) -> Value {
+        self.assumes_seen += 1;
+        let (idx, val) = if self.vi.contains(&vn) && !self.vi.is_flagged(&vn, flags::RESAMPLE) {
+            let val = self.vi.get(&vn).unwrap().value.clone();
+            self.vi.update(&vn, val.clone(), dist);
+            (self.vi.index_of(&vn).unwrap(), val)
+        } else {
+            let val = dist.sample(self.rng);
+            if self.vi.contains(&vn) {
+                self.vi.update(&vn, val.clone(), dist);
+                self.vi.clear_flag(&vn, flags::RESAMPLE);
+                (self.vi.index_of(&vn).unwrap(), val)
+            } else {
+                (self.vi.insert(vn, val.clone(), dist), val)
+            }
+        };
+        if !self.locking_done {
+            self.visited.push(idx);
+        }
+        val
+    }
+
+    /// Count an observe statement; true if it falls inside the window.
+    #[inline]
+    fn note_obs(&mut self) -> bool {
+        let i = self.obs_seen;
+        self.obs_seen += 1;
+        if self.obs_seen == self.hi && self.prefix_records.is_none() {
+            self.prefix_records = Some(self.assumes_seen);
+            // everything visited so far is now scored: lock it
+            for &idx in &self.visited {
+                self.vi.flag_record(idx, flags::LOCKED);
+            }
+            self.locking_done = true;
+        }
+        i >= self.lo && i < self.hi
+    }
+
+    /// Score an assume's prior term. Out-of-scope assumes being locked in
+    /// by this window add it to the weight (their prior can depend on
+    /// scoped values); everything else is a proposal draw whose prior
+    /// cancels (routed to the zero-weighted prior side, which still
+    /// triggers early rejection on −∞).
+    #[inline]
+    fn score_assume(&mut self, vn: &VarName, lp: f64) {
+        let in_window = self.obs_seen >= self.lo && self.obs_seen < self.hi;
+        let proposed = match self.scope {
+            None => true,
+            Some(vars) => vars.iter().any(|v| vn.subsumed_by(v)),
+        };
+        if in_window && !proposed {
+            self.acc.add_lik(lp);
+        } else {
+            self.acc.add_prior(lp);
+        }
+    }
+}
+
+impl<'a, R: RngCore> TildeApi<f64> for ReplayExecutor<'a, R> {
+    fn assume(&mut self, vn: VarName, dist: &ScalarDist<f64>) -> f64 {
+        let val = self.fetch_or_draw(vn.clone(), dist.boxed());
+        let x = val.as_f64().expect("scalar assume got non-scalar value");
+        self.score_assume(&vn, dist.logpdf(x));
+        x
+    }
+
+    fn assume_vec(&mut self, vn: VarName, dist: &VecDist<f64>) -> Vec<f64> {
+        let val = self.fetch_or_draw(vn.clone(), dist.boxed());
+        let x = val
+            .as_slice()
+            .expect("vector assume got non-vector value")
+            .to_vec();
+        self.score_assume(&vn, dist.logpdf(&x));
+        x
+    }
+
+    fn assume_int(&mut self, vn: VarName, dist: &DiscreteDist<f64>) -> i64 {
+        let val = self.fetch_or_draw(vn.clone(), dist.boxed());
+        let k = val.as_int().expect("discrete assume got non-integer value");
+        self.score_assume(&vn, dist.logpmf(k));
+        k
+    }
+
+    fn observe(&mut self, dist: &ScalarDist<f64>, obs: f64) {
+        if self.note_obs() {
+            self.acc.add_lik(dist.logpdf(obs));
+        }
+    }
+
+    fn observe_int(&mut self, dist: &DiscreteDist<f64>, obs: i64) {
+        if self.note_obs() {
+            self.acc.add_lik(dist.logpmf(obs));
+        }
+    }
+
+    fn observe_vec(&mut self, dist: &VecDist<f64>, obs: &[f64]) {
+        if self.note_obs() {
+            self.acc.add_lik(dist.logpdf(obs));
+        }
+    }
+
+    fn add_obs_logp(&mut self, lp: f64) {
+        if self.note_obs() {
+            self.acc.add_lik(lp);
+        }
+    }
+
+    fn add_prior_logp(&mut self, lp: f64) {
+        self.acc.add_prior(lp);
+    }
+
+    fn reject(&mut self) {
+        self.acc.reject();
+    }
+
+    fn rejected(&self) -> bool {
+        self.acc.rejected()
+    }
+
+    fn context(&self) -> Context {
+        self.ctx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prelude::*;
+
+    model! {
+        /// Two observations interleaved with latent draws:
+        /// a ~ N(0,1); obs y0 ~ N(a,1); b ~ N(a,1); obs y1 ~ N(b,1).
+        pub TwoStep {
+            y0: f64,
+            y1: f64,
+        }
+        fn body<T>(this, api) {
+            let a = tilde!(api, a ~ Normal(c(0.0), c(1.0)));
+            obs!(api, this.y0 => Normal(a, c(1.0)));
+            let b = tilde!(api, b ~ Normal(a, c(1.0)));
+            obs!(api, this.y1 => Normal(b, c(1.0)));
+        }
+    }
+
+    fn demo() -> TwoStep {
+        TwoStep { y0: 0.5, y1: -0.3 }
+    }
+
+    #[test]
+    fn initial_run_draws_everything_and_scores_nothing() {
+        let m = demo();
+        let mut vi = UntypedVarInfo::new();
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let rep = ReplayExecutor::run(&m, &mut rng, &mut vi, Context::ObsWindow { lo: 0, hi: 0 }, None);
+        assert_eq!(rep.obs_total, 2);
+        assert_eq!(rep.delta_logw, 0.0);
+        assert_eq!(vi.len(), 2);
+        // hi = 0 → nothing scored yet, everything regenerable: prefix 0
+        assert_eq!(rep.prefix_records, 0);
+    }
+
+    #[test]
+    fn windowed_weight_is_single_observation_likelihood() {
+        let m = demo();
+        let mut vi = UntypedVarInfo::new();
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let _ = ReplayExecutor::run(&m, &mut rng, &mut vi, Context::ObsWindow { lo: 0, hi: 0 }, None);
+        let a = vi.get(&VarName::new("a")).unwrap().value.as_f64().unwrap();
+        let b = vi.get(&VarName::new("b")).unwrap().value.as_f64().unwrap();
+
+        let rep0 = ReplayExecutor::run(&m, &mut rng, &mut vi, Context::ObsWindow { lo: 0, hi: 1 }, None);
+        assert!((rep0.delta_logw - Normal::new(a, 1.0).logpdf(0.5)).abs() < 1e-12);
+        // after scoring obs 0, only `a` is in the retained prefix
+        assert_eq!(rep0.prefix_records, 1);
+
+        let rep1 = ReplayExecutor::run(&m, &mut rng, &mut vi, Context::ObsWindow { lo: 1, hi: 2 }, None);
+        assert!((rep1.delta_logw - Normal::new(b, 1.0).logpdf(-0.3)).abs() < 1e-12);
+        assert_eq!(rep1.prefix_records, 2);
+        // replay is exact: values unchanged
+        assert_eq!(
+            vi.get(&VarName::new("a")).unwrap().value.as_f64().unwrap(),
+            a
+        );
+    }
+
+    #[test]
+    fn scored_records_are_locked_and_flag_unlocked_spares_them() {
+        let m = demo();
+        let mut vi = UntypedVarInfo::new();
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let _ = ReplayExecutor::run(&m, &mut rng, &mut vi, Context::ObsWindow { lo: 0, hi: 0 }, None);
+        use crate::varinfo::flags;
+        let a = VarName::new("a");
+        let b = VarName::new("b");
+        // nothing scored yet → nothing locked
+        assert!(!vi.is_flagged(&a, flags::LOCKED));
+        // score obs 0: `a` is locked, `b` (after the window) is not
+        let _ = ReplayExecutor::run(&m, &mut rng, &mut vi, Context::ObsWindow { lo: 0, hi: 1 }, None);
+        assert!(vi.is_flagged(&a, flags::LOCKED));
+        assert!(!vi.is_flagged(&b, flags::LOCKED));
+        // the fork sweep regenerates exactly the unlocked remainder
+        vi.flag_unlocked(None, flags::RESAMPLE);
+        assert!(!vi.is_flagged(&a, flags::RESAMPLE));
+        assert!(vi.is_flagged(&b, flags::RESAMPLE));
+        // score obs 1: `b` becomes locked too (after regeneration)
+        let _ = ReplayExecutor::run(&m, &mut rng, &mut vi, Context::ObsWindow { lo: 1, hi: 2 }, None);
+        assert!(vi.is_flagged(&b, flags::LOCKED));
+        vi.flag_unlocked(None, flags::RESAMPLE);
+        assert!(!vi.is_flagged(&b, flags::RESAMPLE));
+    }
+
+    #[test]
+    fn flagged_suffix_regenerates_only_the_suffix() {
+        let m = demo();
+        let mut vi = UntypedVarInfo::new();
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let _ = ReplayExecutor::run(&m, &mut rng, &mut vi, Context::ObsWindow { lo: 0, hi: 0 }, None);
+        let a = vi.get(&VarName::new("a")).unwrap().value.as_f64().unwrap();
+        let b = vi.get(&VarName::new("b")).unwrap().value.as_f64().unwrap();
+        // fork-style: keep prefix (a), regenerate suffix (b)
+        vi.flag_suffix(1, None, crate::varinfo::flags::RESAMPLE);
+        let _ = ReplayExecutor::run(&m, &mut rng, &mut vi, Context::ObsWindow { lo: 1, hi: 2 }, None);
+        let a2 = vi.get(&VarName::new("a")).unwrap().value.as_f64().unwrap();
+        let b2 = vi.get(&VarName::new("b")).unwrap().value.as_f64().unwrap();
+        assert_eq!(a2, a, "prefix must replay");
+        assert_ne!(b2, b, "flagged suffix must regenerate");
+        assert!(!vi.is_flagged(&VarName::new("b"), crate::varinfo::flags::RESAMPLE));
+    }
+}

@@ -1,0 +1,421 @@
+//! Particle-inference substrate: weighted trace clouds with cheap forking.
+//!
+//! This is the subsystem the paper's trace machinery was built to enable
+//! (§3.3: the `del`/`RESAMPLE` flag exists for particle samplers): a
+//! [`ParticleCloud`] holds N execution traces ([`UntypedVarInfo`]) with
+//! normalized log-weights and advances them one *observe statement* at a
+//! time by whole-body re-execution under [`Context::ObsWindow`] — the
+//! replay-with-regenerate mode implemented by [`exec::ReplayExecutor`].
+//!
+//! Per step the cloud:
+//! 1. **propagates** every particle in parallel ([`parallel_for_each_mut`];
+//!    bitwise-deterministic for a fixed seed regardless of thread count,
+//!    because each particle's RNG is derived from `(seed, step, index)`
+//!    and all weight reductions run serially on the caller thread);
+//! 2. **reweights** by the window's incremental log-likelihood and folds
+//!    the normalizer into a running log-marginal-likelihood (evidence)
+//!    estimate `log Ẑ = Σ_t log Σ_i W_i·w_i^{(t)}`;
+//! 3. optionally **resamples** (ESS-triggered) by forking ancestor traces
+//!    and flagging each fork's unscored suffix for regeneration, which
+//!    restores particle diversity exactly the way Turing's `Trace` copy +
+//!    `del` flag does.
+//!
+//! A cloud can be *scoped* to a subset of variables (Particle-Gibbs /
+//! conditional SMC): out-of-scope variables are never flagged, so every
+//! replay reproduces them bit-for-bit and the cloud targets their full
+//! conditional.
+
+pub mod exec;
+pub mod resample;
+
+pub use exec::{ReplayExecutor, ReplayReport};
+pub use resample::{ess, normalize_log_weights, Resampler};
+
+use rand_core::RngCore;
+
+use crate::context::Context;
+use crate::model::Model;
+use crate::util::math;
+use crate::util::rng::Xoshiro256pp;
+use crate::util::threadpool::parallel_for_each_mut;
+use crate::varinfo::{flags, UntypedVarInfo};
+use crate::varname::VarName;
+
+/// One weighted execution trace.
+#[derive(Clone, Debug)]
+pub struct Particle {
+    /// The trace (complete model execution; replayed/regenerated per step).
+    pub trace: UntypedVarInfo,
+    /// Normalized log-weight (log-sum-exp over the cloud ≈ 0).
+    pub log_weight: f64,
+    /// Last step's incremental log-likelihood.
+    pub delta: f64,
+    /// Retained-prefix record count after the last advance: records at
+    /// index ≥ `prefix` have not been scored and may be regenerated.
+    pub prefix: usize,
+}
+
+/// Count the observe statements `model` visits when replaying `trace`
+/// (one scratch whole-body replay; the trace must be complete).
+pub fn count_observes(model: &dyn Model, trace: &UntypedVarInfo) -> usize {
+    let mut probe = trace.clone();
+    let mut rng = Xoshiro256pp::seed_from_u64(0);
+    ReplayExecutor::run(
+        model,
+        &mut rng,
+        &mut probe,
+        Context::ObsWindow { lo: 0, hi: 0 },
+        None,
+    )
+    .obs_total
+}
+
+/// Derive a particle-local RNG seed from `(run seed, step, index)`.
+/// Stable across thread counts — the basis of deterministic parallelism.
+pub fn particle_seed(seed: u64, step: usize, index: usize) -> u64 {
+    let mut x = seed ^ 0xA5A5_5A5A_DEAD_BEEF;
+    x = x.wrapping_add((step as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    x = x.wrapping_add((index as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9));
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// A cloud of weighted particles stepping through a model's observations.
+#[derive(Clone, Debug)]
+pub struct ParticleCloud {
+    pub particles: Vec<Particle>,
+    /// Running log-marginal-likelihood (evidence) estimate.
+    pub log_evidence: f64,
+    /// Next observe index to score (completed steps so far).
+    pub step: usize,
+    /// Total observe statements of the model (SMC step count).
+    pub n_obs: usize,
+    /// Restrict regeneration to these variables (Particle-Gibbs scope);
+    /// `None` = every variable participates (plain SMC).
+    pub scope: Option<Vec<VarName>>,
+}
+
+impl ParticleCloud {
+    /// Bootstrap initialization: N empty traces, each populated by one
+    /// prior run (window `[0,0)` scores nothing). Deterministic in `seed`.
+    pub fn from_prior(model: &dyn Model, n: usize, seed: u64, threads: usize) -> Self {
+        assert!(n >= 2, "a particle cloud needs at least 2 particles");
+        let mut particles: Vec<Particle> = (0..n)
+            .map(|_| Particle {
+                trace: UntypedVarInfo::new(),
+                log_weight: -(n as f64).ln(),
+                delta: 0.0,
+                prefix: 0,
+            })
+            .collect();
+        let mut n_obs_per: Vec<usize> = vec![0; n];
+        {
+            let n_obs_slots = std::sync::Mutex::new(&mut n_obs_per);
+            parallel_for_each_mut(threads, &mut particles, |i, p| {
+                let mut rng = Xoshiro256pp::seed_from_u64(particle_seed(seed, 0, i));
+                let rep = ReplayExecutor::run(
+                    model,
+                    &mut rng,
+                    &mut p.trace,
+                    Context::ObsWindow { lo: 0, hi: 0 },
+                    None,
+                );
+                p.prefix = rep.prefix_records;
+                n_obs_slots.lock().unwrap()[i] = rep.obs_total;
+            });
+        }
+        let n_obs = n_obs_per.into_iter().max().unwrap_or(0);
+        ParticleCloud {
+            particles,
+            log_evidence: 0.0,
+            step: 0,
+            n_obs,
+            scope: None,
+        }
+    }
+
+    /// Conditional (CSMC) initialization for Particle-Gibbs: particle 0 is
+    /// the retained reference trajectory; particles 1..n fork it with all
+    /// `scope` variables flagged, so the first advance regenerates them
+    /// from the prior while out-of-scope variables replay exactly.
+    ///
+    /// `n_obs` is the model's observe-statement count; pass `None` to
+    /// probe it with one scratch replay, or `Some` (from
+    /// [`count_observes`], computed once) when sweeping repeatedly.
+    pub fn conditional(
+        model: &dyn Model,
+        reference: &UntypedVarInfo,
+        scope: &[VarName],
+        n: usize,
+        seed: u64,
+        n_obs: Option<usize>,
+    ) -> Self {
+        assert!(n >= 2, "conditional SMC needs at least 2 particles");
+        assert!(!scope.is_empty(), "conditional SMC needs a variable scope");
+        let _ = seed;
+        let log_w0 = -(n as f64).ln();
+        let mut particles = Vec::with_capacity(n);
+        for j in 0..n {
+            let mut trace = reference.clone();
+            // fresh sweep: no record is scored yet, and the reference must
+            // replay exactly — scrub stale particle flags either way
+            trace.clear_flag_all(flags::RESAMPLE | flags::LOCKED);
+            if j > 0 {
+                trace.flag_suffix(0, Some(scope), flags::RESAMPLE);
+            }
+            particles.push(Particle {
+                trace,
+                log_weight: log_w0,
+                delta: 0.0,
+                prefix: 0,
+            });
+        }
+        let n_obs = n_obs.unwrap_or_else(|| count_observes(model, reference));
+        ParticleCloud {
+            particles,
+            log_evidence: 0.0,
+            step: 0,
+            n_obs,
+            scope: Some(scope.to_vec()),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.particles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.particles.is_empty()
+    }
+
+    /// Normalized weights (probabilities).
+    pub fn weights(&self) -> Vec<f64> {
+        let logw: Vec<f64> = self.particles.iter().map(|p| p.log_weight).collect();
+        normalize_log_weights(&logw).0
+    }
+
+    /// Effective sample size of the current weights.
+    pub fn ess(&self) -> f64 {
+        ess(&self.weights())
+    }
+
+    /// Propagate every particle through the next observe window, update
+    /// weights and the running evidence estimate. Returns the step's
+    /// log-normalizer `log Σ_i W_i·w_i`.
+    pub fn advance(&mut self, model: &dyn Model, seed: u64, threads: usize) -> f64 {
+        assert!(self.step < self.n_obs, "cloud already consumed all observations");
+        let (lo, hi) = (self.step, self.step + 1);
+        let step_for_seed = self.step + 1; // 0 is the init run
+        let scope = self.scope.clone();
+        parallel_for_each_mut(threads, &mut self.particles, |i, p| {
+            let mut rng =
+                Xoshiro256pp::seed_from_u64(particle_seed(seed, step_for_seed, i));
+            let rep = ReplayExecutor::run(
+                model,
+                &mut rng,
+                &mut p.trace,
+                Context::ObsWindow { lo, hi },
+                scope.as_deref(),
+            );
+            p.delta = rep.delta_logw;
+            p.prefix = rep.prefix_records;
+        });
+        // serial reduction (index order → deterministic)
+        let logw_new: Vec<f64> = self
+            .particles
+            .iter()
+            .map(|p| p.log_weight + p.delta)
+            .collect();
+        let lz_step = math::log_sum_exp(&logw_new);
+        self.log_evidence += lz_step;
+        if lz_step == f64::NEG_INFINITY {
+            // every particle died: reset to uniform (evidence is −∞ now)
+            let lw = -(self.len() as f64).ln();
+            for p in &mut self.particles {
+                p.log_weight = lw;
+            }
+        } else {
+            for (p, lw) in self.particles.iter_mut().zip(logw_new) {
+                p.log_weight = lw - lz_step;
+            }
+        }
+        self.step += 1;
+        lz_step
+    }
+
+    /// Fork a new generation from ancestors drawn by `resampler`; children
+    /// get uniform weights and their unscored suffix flagged for
+    /// regeneration (scope-restricted when the cloud is conditional).
+    /// With `conditional`, particle 0's ancestor is pinned to the
+    /// reference (index 0) and its trace is forked unflagged.
+    pub fn resample<R: RngCore>(&mut self, resampler: Resampler, conditional: bool, rng: &mut R) {
+        let n = self.len();
+        let weights = self.weights();
+        let mut ancestors = resampler.ancestors(&weights, n, rng);
+        if conditional {
+            ancestors[0] = 0;
+        }
+        let scope = self.scope.clone();
+        let log_w0 = -(n as f64).ln();
+        let new: Vec<Particle> = ancestors
+            .iter()
+            .enumerate()
+            .map(|(j, &a)| {
+                let src = &self.particles[a];
+                let mut trace = src.trace.clone();
+                if !(conditional && j == 0) {
+                    // regenerate everything not yet scored (scope-bounded)
+                    trace.flag_unlocked(scope.as_deref(), flags::RESAMPLE);
+                }
+                Particle {
+                    trace,
+                    log_weight: log_w0,
+                    delta: src.delta,
+                    prefix: src.prefix,
+                }
+            })
+            .collect();
+        self.particles = new;
+    }
+
+    /// Resample only when ESS drops below `threshold_frac · N`. Returns
+    /// whether a resampling pass happened.
+    pub fn maybe_resample<R: RngCore>(
+        &mut self,
+        resampler: Resampler,
+        threshold_frac: f64,
+        conditional: bool,
+        rng: &mut R,
+    ) -> bool {
+        if self.ess() < threshold_frac * self.len() as f64 {
+            self.resample(resampler, conditional, rng);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Draw one trace index from the final weights (the Particle-Gibbs
+    /// selection step).
+    pub fn select<R: RngCore>(&self, rng: &mut R) -> usize {
+        use crate::util::rng::Rng as _;
+        rng.categorical(&self.weights())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prelude::*;
+
+    model! {
+        /// m ~ N(0,1); y_t ~ N(m, 1) — one observe statement per data
+        /// point, the canonical SMC stepping structure.
+        pub IidNormal {
+            y: Vec<f64>,
+        }
+        fn body<T>(this, api) {
+            let m = tilde!(api, m ~ Normal(c(0.0), c(1.0)));
+            for &yi in &this.y {
+                obs!(api, yi => Normal(m, c(1.0)));
+            }
+        }
+    }
+
+    #[test]
+    fn from_prior_counts_observations() {
+        let m = IidNormal { y: vec![0.1, -0.2, 0.3] };
+        let cloud = ParticleCloud::from_prior(&m, 8, 11, 1);
+        assert_eq!(cloud.n_obs, 3);
+        assert_eq!(cloud.len(), 8);
+        assert_eq!(cloud.step, 0);
+        let w = cloud.weights();
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((cloud.ess() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn advance_accumulates_evidence_and_reweights() {
+        let m = IidNormal { y: vec![0.5, -0.5] };
+        let mut cloud = ParticleCloud::from_prior(&m, 64, 3, 1);
+        let lz0 = cloud.advance(&m, 3, 1);
+        assert!(lz0.is_finite() && lz0 < 0.0);
+        assert_eq!(cloud.step, 1);
+        assert!((cloud.log_evidence - lz0).abs() < 1e-12);
+        // weights renormalized
+        let w = cloud.weights();
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-10);
+        let _ = cloud.advance(&m, 3, 1);
+        assert_eq!(cloud.step, 2);
+        assert!(cloud.log_evidence < lz0);
+    }
+
+    #[test]
+    fn resample_forks_and_uniformizes() {
+        let m = IidNormal { y: vec![2.0, 2.0, 2.0] };
+        let mut cloud = ParticleCloud::from_prior(&m, 32, 5, 1);
+        let _ = cloud.advance(&m, 5, 1);
+        let ess_before = cloud.ess();
+        assert!(ess_before < 32.0);
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        cloud.resample(Resampler::Systematic, false, &mut rng);
+        assert!((cloud.ess() - 32.0).abs() < 1e-9, "uniform after resample");
+        // maybe_resample: ESS is maximal now → no-op
+        assert!(!cloud.maybe_resample(Resampler::Systematic, 0.5, false, &mut rng));
+    }
+
+    #[test]
+    fn particle_seed_is_stable_and_index_sensitive() {
+        assert_eq!(particle_seed(1, 2, 3), particle_seed(1, 2, 3));
+        assert_ne!(particle_seed(1, 2, 3), particle_seed(1, 2, 4));
+        assert_ne!(particle_seed(1, 2, 3), particle_seed(1, 3, 3));
+        assert_ne!(particle_seed(1, 2, 3), particle_seed(2, 2, 3));
+    }
+
+    #[test]
+    fn conditional_cloud_keeps_reference_trajectory() {
+        let m = IidNormal { y: vec![0.3, 0.7] };
+        let mut rng = Xoshiro256pp::seed_from_u64(21);
+        let reference = crate::model::init_trace(&m, &mut rng);
+        let m_ref = reference
+            .get(&VarName::new("m"))
+            .unwrap()
+            .value
+            .as_f64()
+            .unwrap();
+        let scope = [VarName::new("m")];
+        assert_eq!(count_observes(&m, &reference), 2);
+        let mut cloud = ParticleCloud::conditional(&m, &reference, &scope, 16, 77, None);
+        assert_eq!(cloud.n_obs, 2);
+        let m_of = |cloud: &ParticleCloud, j: usize| -> f64 {
+            cloud.particles[j]
+                .trace
+                .get(&VarName::new("m"))
+                .unwrap()
+                .value
+                .as_f64()
+                .unwrap()
+        };
+
+        // step 0: non-reference particles regenerate m from the prior
+        let _ = cloud.advance(&m, 77, 1);
+        assert_eq!(m_of(&cloud, 0), m_ref, "reference must replay exactly");
+        assert!(
+            cloud.particles[1..]
+                .iter()
+                .enumerate()
+                .any(|(j, _)| m_of(&cloud, j + 1) != m_ref),
+            "non-reference particles must regenerate their scoped variable"
+        );
+
+        // conditional resampling pins the reference at index 0
+        let mut r = Xoshiro256pp::seed_from_u64(123);
+        cloud.resample(Resampler::Systematic, true, &mut r);
+        assert_eq!(m_of(&cloud, 0), m_ref);
+
+        // and it survives the next advance untouched
+        let _ = cloud.advance(&m, 77, 1);
+        assert_eq!(m_of(&cloud, 0), m_ref);
+    }
+}

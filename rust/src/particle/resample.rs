@@ -1,0 +1,183 @@
+//! Resampling schemes for particle clouds.
+//!
+//! All three draw `n_out` ancestor indices from a normalized weight vector;
+//! they differ in variance. Systematic (one uniform, evenly spaced CDF
+//! probes) has the lowest variance and is the SMC default; stratified (one
+//! uniform per probe, each confined to its stratum) sits between it and
+//! plain multinomial.
+
+use rand_core::RngCore;
+
+use crate::util::rng::Rng as _;
+
+/// Which resampling scheme a particle sampler uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Resampler {
+    /// iid categorical draws (highest variance; the textbook baseline).
+    Multinomial,
+    /// One shared uniform offset, probes at `(u + k)/n` (lowest variance).
+    Systematic,
+    /// Independent uniform per stratum `[k/n, (k+1)/n)`.
+    Stratified,
+}
+
+impl Resampler {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Resampler::Multinomial => "multinomial",
+            Resampler::Systematic => "systematic",
+            Resampler::Stratified => "stratified",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "multinomial" => Resampler::Multinomial,
+            "systematic" => Resampler::Systematic,
+            "stratified" => Resampler::Stratified,
+            _ => return None,
+        })
+    }
+
+    /// Draw `n_out` ancestor indices from normalized `weights` (sum ≈ 1).
+    /// Systematic/stratified outputs are sorted by construction.
+    pub fn ancestors<R: RngCore>(
+        &self,
+        weights: &[f64],
+        n_out: usize,
+        rng: &mut R,
+    ) -> Vec<usize> {
+        assert!(!weights.is_empty());
+        debug_assert!(
+            (weights.iter().sum::<f64>() - 1.0).abs() < 1e-6,
+            "weights must be normalized"
+        );
+        match self {
+            Resampler::Multinomial => (0..n_out).map(|_| rng.categorical(weights)).collect(),
+            Resampler::Systematic => {
+                let u0 = rng.uniform() / n_out as f64;
+                cdf_probes(weights, (0..n_out).map(|k| u0 + k as f64 / n_out as f64))
+            }
+            Resampler::Stratified => {
+                let probes: Vec<f64> = (0..n_out)
+                    .map(|k| (k as f64 + rng.uniform()) / n_out as f64)
+                    .collect();
+                cdf_probes(weights, probes.into_iter())
+            }
+        }
+    }
+}
+
+/// Walk the weight CDF once over an ascending probe sequence.
+fn cdf_probes<I: Iterator<Item = f64>>(weights: &[f64], probes: I) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut acc = weights[0];
+    let mut idx = 0usize;
+    for p in probes {
+        while p > acc && idx + 1 < weights.len() {
+            idx += 1;
+            acc += weights[idx];
+        }
+        out.push(idx);
+    }
+    out
+}
+
+/// Effective sample size of normalized weights: `1 / Σ wᵢ²`.
+pub fn ess(weights: &[f64]) -> f64 {
+    let s2: f64 = weights.iter().map(|w| w * w).sum();
+    if s2 <= 0.0 {
+        0.0
+    } else {
+        1.0 / s2
+    }
+}
+
+/// Normalize log-weights in place to probabilities; returns their
+/// log-sum-exp (the normalizer).
+pub fn normalize_log_weights(logw: &[f64]) -> (Vec<f64>, f64) {
+    let lse = crate::util::math::log_sum_exp(logw);
+    if lse == f64::NEG_INFINITY {
+        // fully degenerate cloud: fall back to uniform
+        let n = logw.len() as f64;
+        return (vec![1.0 / n; logw.len()], lse);
+    }
+    (logw.iter().map(|&l| (l - lse).exp()).collect(), lse)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn ess_bounds() {
+        assert!((ess(&[0.25; 4]) - 4.0).abs() < 1e-12);
+        assert!((ess(&[1.0, 0.0, 0.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalize_log_weights_sums_to_one() {
+        let (w, lse) = normalize_log_weights(&[-1.0, -2.0, -3.0]);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        let expect = crate::util::math::log_sum_exp(&[-1.0, -2.0, -3.0]);
+        assert!((lse - expect).abs() < 1e-12);
+        // degenerate
+        let (w, _) = normalize_log_weights(&[f64::NEG_INFINITY; 3]);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_schemes_track_expected_counts() {
+        let weights = [0.1, 0.2, 0.3, 0.4];
+        for scheme in [
+            Resampler::Multinomial,
+            Resampler::Systematic,
+            Resampler::Stratified,
+        ] {
+            let mut rng = Xoshiro256pp::seed_from_u64(31);
+            let mut counts = [0usize; 4];
+            let reps = 2000;
+            let n = 16;
+            for _ in 0..reps {
+                for a in scheme.ancestors(&weights, n, &mut rng) {
+                    counts[a] += 1;
+                }
+            }
+            let total = (reps * n) as f64;
+            for (c, w) in counts.iter().zip(&weights) {
+                let f = *c as f64 / total;
+                assert!(
+                    (f - w).abs() < 0.02,
+                    "{}: freq {f} vs weight {w}",
+                    scheme.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn systematic_counts_are_near_deterministic() {
+        // systematic resampling gives each index either ⌊nw⌋ or ⌈nw⌉ copies
+        let weights = [0.5, 0.25, 0.25];
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        for _ in 0..50 {
+            let a = Resampler::Systematic.ancestors(&weights, 8, &mut rng);
+            let c0 = a.iter().filter(|&&x| x == 0).count();
+            assert_eq!(c0, 4, "{a:?}");
+            assert_eq!(a.iter().filter(|&&x| x == 1).count(), 2);
+        }
+    }
+
+    #[test]
+    fn labels_roundtrip() {
+        for r in [
+            Resampler::Multinomial,
+            Resampler::Systematic,
+            Resampler::Stratified,
+        ] {
+            assert_eq!(Resampler::parse(r.label()), Some(r));
+        }
+        assert_eq!(Resampler::parse("bogus"), None);
+    }
+}

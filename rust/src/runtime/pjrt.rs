@@ -1,0 +1,248 @@
+//! PJRT-backed implementation of the runtime (requires the `xla` feature
+//! and the rust_pallas toolchain's `xla` + `anyhow` crates).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context as _, Result};
+
+use super::{artifacts_dir, DataInput};
+use crate::gradient::LogDensity;
+
+/// Shared PJRT client (CPU).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn compile_hlo_text(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))
+    }
+
+    /// Upload an f64 buffer to the device.
+    pub fn upload_f64(&self, data: &[f64], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Upload an i32 buffer to the device.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("{e:?}"))
+    }
+}
+
+/// The AOT log-density: `(theta, data…) → (logp, grad)` compiled from the
+/// matching JAX model. Data buffers are uploaded once at construction;
+/// only θ moves per call.
+pub struct XlaDensity {
+    exe: xla::PjRtLoadedExecutable,
+    runtime: Runtime,
+    data_bufs: Vec<xla::PjRtBuffer>,
+    dim: usize,
+}
+
+// The PJRT CPU client is internally synchronized; we only share immutable
+// handles across sampler threads.
+unsafe impl Sync for XlaDensity {}
+unsafe impl Send for XlaDensity {}
+
+impl XlaDensity {
+    /// Load `artifacts/<model>.vg.hlo.txt` and upload its data inputs.
+    pub fn load(artifacts_dir: &Path, model: &str, dim: usize, data: &[DataInput]) -> Result<Self> {
+        let runtime = Runtime::cpu()?;
+        let path = artifacts_dir.join(format!("{model}.vg.hlo.txt"));
+        let exe = runtime
+            .compile_hlo_text(&path)
+            .with_context(|| format!("loading artifact for {model}"))?;
+        let mut data_bufs = Vec::with_capacity(data.len());
+        for d in data {
+            data_bufs.push(match d {
+                DataInput::F64 { data, dims } => runtime.upload_f64(data, dims)?,
+                DataInput::I32 { data, dims } => runtime.upload_i32(data, dims)?,
+            });
+        }
+        Ok(Self {
+            exe,
+            runtime,
+            data_bufs,
+            dim,
+        })
+    }
+
+    /// Execute at θ; returns (logp, grad).
+    pub fn call(&self, theta: &[f64]) -> Result<(f64, Vec<f64>)> {
+        assert_eq!(theta.len(), self.dim);
+        let tb = self.runtime.upload_f64(theta, &[theta.len()])?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.data_bufs.len());
+        args.push(&tb);
+        args.extend(self.data_bufs.iter());
+        let out = self
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let row = &out[0];
+        match row.len() {
+            // untupled outputs: (logp, grad) as two buffers
+            2 => {
+                let mut lp = [0.0f64];
+                row[0]
+                    .copy_raw_to_host_sync(&mut lp, 0)
+                    .map_err(|e| anyhow!("{e:?}"))?;
+                let mut grad = vec![0.0f64; self.dim];
+                row[1]
+                    .copy_raw_to_host_sync(&mut grad, 0)
+                    .map_err(|e| anyhow!("{e:?}"))?;
+                Ok((lp[0], grad))
+            }
+            // tupled output: one buffer holding (logp, grad)
+            1 => {
+                let lit = row[0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
+                let parts = lit.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+                if parts.len() != 2 {
+                    return Err(anyhow!("expected 2-tuple, got {}", parts.len()));
+                }
+                let lp: f64 = parts[0]
+                    .get_first_element()
+                    .map_err(|e| anyhow!("{e:?}"))?;
+                let grad = parts[1].to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?;
+                Ok((lp, grad))
+            }
+            n => Err(anyhow!("unexpected output arity {n}")),
+        }
+    }
+}
+
+impl LogDensity for XlaDensity {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn logp(&self, theta: &[f64]) -> f64 {
+        self.call(theta).expect("XLA execution failed").0
+    }
+
+    fn logp_grad(&self, theta: &[f64]) -> (f64, Vec<f64>) {
+        self.call(theta).expect("XLA execution failed")
+    }
+}
+
+/// The fused static-HMC trajectory artifact (§Perf):
+/// `(θ, p, ε, data…) → (θ_L, p_L, logp_L)` running all `L` leapfrog steps
+/// (identity mass) inside one XLA executable — one PJRT call per HMC
+/// iteration instead of `L + 1`.
+pub struct XlaTrajectory {
+    exe: xla::PjRtLoadedExecutable,
+    runtime: Runtime,
+    data_bufs: Vec<xla::PjRtBuffer>,
+    dim: usize,
+}
+
+unsafe impl Sync for XlaTrajectory {}
+unsafe impl Send for XlaTrajectory {}
+
+impl XlaTrajectory {
+    /// Load `artifacts/<model>.traj4.hlo.txt`.
+    pub fn load(
+        artifacts_dir: &Path,
+        model: &str,
+        dim: usize,
+        data: &[DataInput],
+    ) -> Result<Self> {
+        let runtime = Runtime::cpu()?;
+        let path = artifacts_dir.join(format!("{model}.traj4.hlo.txt"));
+        let exe = runtime
+            .compile_hlo_text(&path)
+            .with_context(|| format!("loading trajectory artifact for {model}"))?;
+        let mut data_bufs = Vec::with_capacity(data.len());
+        for d in data {
+            data_bufs.push(match d {
+                DataInput::F64 { data, dims } => runtime.upload_f64(data, dims)?,
+                DataInput::I32 { data, dims } => runtime.upload_i32(data, dims)?,
+            });
+        }
+        Ok(Self {
+            exe,
+            runtime,
+            data_bufs,
+            dim,
+        })
+    }
+
+    /// Run the fused trajectory; θ, p and the threaded gradient g are
+    /// updated in place; returns logp(θ_L).
+    pub fn run(&self, theta: &mut [f64], p: &mut [f64], eps: f64, g: &mut [f64]) -> Result<f64> {
+        assert_eq!(theta.len(), self.dim);
+        let tb = self.runtime.upload_f64(theta, &[self.dim])?;
+        let pb = self.runtime.upload_f64(p, &[self.dim])?;
+        let eb = self.runtime.upload_f64(&[eps], &[])?;
+        let gb = self.runtime.upload_f64(g, &[self.dim])?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(4 + self.data_bufs.len());
+        args.push(&tb);
+        args.push(&pb);
+        args.push(&eb);
+        args.push(&gb);
+        args.extend(self.data_bufs.iter());
+        let out = self
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let row = &out[0];
+        if row.len() == 4 {
+            row[0]
+                .copy_raw_to_host_sync(theta, 0)
+                .map_err(|e| anyhow!("{e:?}"))?;
+            row[1]
+                .copy_raw_to_host_sync(p, 0)
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let mut lp = [0.0f64];
+            row[2]
+                .copy_raw_to_host_sync(&mut lp, 0)
+                .map_err(|e| anyhow!("{e:?}"))?;
+            row[3]
+                .copy_raw_to_host_sync(g, 0)
+                .map_err(|e| anyhow!("{e:?}"))?;
+            Ok(lp[0])
+        } else {
+            let lit = row[0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
+            let parts = lit.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+            if parts.len() != 4 {
+                return Err(anyhow!("expected 4-tuple, got {}", parts.len()));
+            }
+            let th = parts[0].to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?;
+            let pv = parts[1].to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?;
+            theta.copy_from_slice(&th);
+            p.copy_from_slice(&pv);
+            let gv = parts[3].to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?;
+            g.copy_from_slice(&gv);
+            parts[2].get_first_element().map_err(|e| anyhow!("{e:?}"))
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn traj_artifact_exists(model: &str) -> bool {
+        artifacts_dir().join(format!("{model}.traj4.hlo.txt")).exists()
+    }
+}

@@ -1,0 +1,140 @@
+//! API-compatible stand-in for the PJRT runtime used when the crate is
+//! built without the `xla` feature (the fully-offline configuration).
+//!
+//! Loaders always return an error naming the missing feature; the types
+//! are uninhabited (they hold [`std::convert::Infallible`]) so the
+//! executing methods are statically unreachable. Callers that guard on
+//! [`super::artifact_exists`] behave exactly as they do when artifacts
+//! have not been built.
+
+use std::convert::Infallible;
+use std::fmt;
+use std::path::Path;
+
+use super::DataInput;
+use crate::gradient::LogDensity;
+
+/// Error produced by every stub entry point.
+pub struct RuntimeError(String);
+
+impl fmt::Debug for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+fn unavailable(what: &str) -> RuntimeError {
+    RuntimeError(format!(
+        "{what} requires the PJRT runtime — rebuild with `--features xla` \
+         on the rust_pallas toolchain image"
+    ))
+}
+
+/// Stub PJRT client: cannot be constructed.
+pub struct Runtime {
+    never: Infallible,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self, RuntimeError> {
+        Err(unavailable("Runtime::cpu"))
+    }
+
+    pub fn platform(&self) -> String {
+        match self.never {}
+    }
+}
+
+/// Stub AOT log-density: `load` always fails; the type is uninhabited.
+pub struct XlaDensity {
+    never: Infallible,
+}
+
+impl XlaDensity {
+    pub fn load(
+        _artifacts_dir: &Path,
+        model: &str,
+        _dim: usize,
+        _data: &[DataInput],
+    ) -> Result<Self, RuntimeError> {
+        Err(unavailable(&format!("XlaDensity::load({model:?})")))
+    }
+
+    pub fn call(&self, _theta: &[f64]) -> Result<(f64, Vec<f64>), RuntimeError> {
+        match self.never {}
+    }
+}
+
+impl LogDensity for XlaDensity {
+    fn dim(&self) -> usize {
+        match self.never {}
+    }
+
+    fn logp(&self, _theta: &[f64]) -> f64 {
+        match self.never {}
+    }
+
+    fn logp_grad(&self, _theta: &[f64]) -> (f64, Vec<f64>) {
+        match self.never {}
+    }
+}
+
+/// Stub fused-trajectory executable; see [`XlaDensity`].
+pub struct XlaTrajectory {
+    never: Infallible,
+}
+
+impl XlaTrajectory {
+    pub fn load(
+        _artifacts_dir: &Path,
+        model: &str,
+        _dim: usize,
+        _data: &[DataInput],
+    ) -> Result<Self, RuntimeError> {
+        Err(unavailable(&format!("XlaTrajectory::load({model:?})")))
+    }
+
+    pub fn run(
+        &self,
+        _theta: &mut [f64],
+        _p: &mut [f64],
+        _eps: f64,
+        _g: &mut [f64],
+    ) -> Result<f64, RuntimeError> {
+        match self.never {}
+    }
+
+    pub fn dim(&self) -> usize {
+        match self.never {}
+    }
+
+    pub fn traj_artifact_exists(model: &str) -> bool {
+        super::artifacts_dir()
+            .join(format!("{model}.traj4.hlo.txt"))
+            .exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loaders_fail_with_feature_hint() {
+        let err = Runtime::cpu().map(|_| ()).unwrap_err();
+        assert!(format!("{err:?}").contains("features xla"));
+        let err = XlaDensity::load(Path::new("artifacts"), "gauss_unknown", 2, &[]).map(|_| ());
+        assert!(err.is_err());
+        let err = XlaTrajectory::load(Path::new("artifacts"), "gauss_unknown", 2, &[]).map(|_| ());
+        assert!(err.is_err());
+        assert!(!XlaTrajectory::traj_artifact_exists("nope"));
+    }
+}

@@ -172,6 +172,51 @@ pub fn split_rhat(chains: &[&[f64]]) -> f64 {
     (var_plus / w).sqrt()
 }
 
+/// Rank-normalized split-R̂ (Vehtari, Gelman, Simpson, Carpenter, Bürkner
+/// 2021): pool all draws, replace each by the normal quantile of its
+/// fractional rank (Blom offsets), then compute [`split_rhat`] on the
+/// transformed chains. Robust to heavy tails and scale, and — because
+/// each chain is still split in half — sensitive to within-chain trends
+/// (single-chain non-stationarity).
+pub fn rank_normalized_split_rhat(chains: &[&[f64]]) -> f64 {
+    let n_per: Vec<usize> = chains.iter().map(|c| c.len()).collect();
+    let total: usize = n_per.iter().sum();
+    if total == 0 {
+        return f64::NAN;
+    }
+    let pooled: Vec<f64> = chains.iter().flat_map(|c| c.iter().copied()).collect();
+    if pooled.iter().any(|x| x.is_nan()) {
+        return f64::NAN; // match classic split_rhat's graceful NaN
+    }
+    let mut idx: Vec<usize> = (0..total).collect();
+    idx.sort_by(|&a, &b| pooled[a].partial_cmp(&pooled[b]).unwrap());
+    // average 1-based ranks over ties
+    let mut rank = vec![0.0f64; total];
+    let mut i = 0;
+    while i < total {
+        let mut j = i;
+        while j + 1 < total && pooled[idx[j + 1]] == pooled[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            rank[k] = avg;
+        }
+        i = j + 1;
+    }
+    let z: Vec<f64> = rank
+        .iter()
+        .map(|&r| crate::util::math::norm_inv_cdf((r - 0.375) / (total as f64 + 0.25)))
+        .collect();
+    let mut zchains: Vec<&[f64]> = Vec::with_capacity(chains.len());
+    let mut off = 0;
+    for &n in &n_per {
+        zchains.push(&z[off..off + n]);
+        off += n;
+    }
+    split_rhat(&zchains)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -243,5 +288,51 @@ mod tests {
         let b: Vec<f64> = (0..2000).map(|_| r.normal() + 5.0).collect();
         let rh = split_rhat(&[&a, &b]);
         assert!(rh > 2.0, "R̂ should flag separated chains, got {rh}");
+    }
+
+    #[test]
+    fn rank_rhat_mixed_chains_near_one() {
+        let mut r = Xoshiro256pp::seed_from_u64(11);
+        let a: Vec<f64> = (0..2000).map(|_| r.normal()).collect();
+        let b: Vec<f64> = (0..2000).map(|_| r.normal()).collect();
+        let rh = rank_normalized_split_rhat(&[&a, &b]);
+        assert!((rh - 1.0).abs() < 0.02, "rank R̂ {rh}");
+    }
+
+    #[test]
+    fn rank_rhat_detects_single_chain_trend() {
+        // one drifting chain: classic multi-chain R̂ can't see this with
+        // m = 1, but the split halves disagree after rank normalization
+        let mut r = Xoshiro256pp::seed_from_u64(12);
+        let a: Vec<f64> = (0..2000)
+            .map(|i| r.normal() + i as f64 / 200.0)
+            .collect();
+        let rh = rank_normalized_split_rhat(&[&a]);
+        assert!(rh > 1.2, "rank R̂ should flag the trend, got {rh}");
+        // a stationary single chain is fine
+        let b: Vec<f64> = (0..2000).map(|_| r.normal()).collect();
+        let rh = rank_normalized_split_rhat(&[&b]);
+        assert!((rh - 1.0).abs() < 0.03, "{rh}");
+    }
+
+    #[test]
+    fn rank_rhat_is_nan_on_nan_draws_not_a_panic() {
+        let a = [0.1, f64::NAN, 0.3, 0.4, 0.5, 0.6];
+        let b = [0.2, 0.3, 0.1, 0.5, 0.4, 0.7];
+        assert!(rank_normalized_split_rhat(&[&a, &b]).is_nan());
+    }
+
+    #[test]
+    fn rank_rhat_is_scale_invariant_under_heavy_tails() {
+        // Cauchy-ish draws break moment-based R̂; ranks don't care
+        let mut r = Xoshiro256pp::seed_from_u64(13);
+        let heavy = |r: &mut Xoshiro256pp| {
+            let u = std::f64::consts::PI * (r.uniform() - 0.5);
+            u.tan()
+        };
+        let a: Vec<f64> = (0..4000).map(|_| heavy(&mut r)).collect();
+        let b: Vec<f64> = (0..4000).map(|_| heavy(&mut r)).collect();
+        let rh = rank_normalized_split_rhat(&[&a, &b]);
+        assert!((rh - 1.0).abs() < 0.03, "rank R̂ {rh}");
     }
 }

@@ -104,6 +104,44 @@ where
     slots.into_iter().map(|s| s.unwrap()).collect()
 }
 
+/// Apply `f(i, &mut items[i])` to every element, splitting the slice into
+/// contiguous chunks across up to `threads` scoped worker threads.
+///
+/// Unlike [`parallel_map`], the closure may borrow non-`'static` state
+/// (the model, the data) because the threads are scoped — this is the
+/// particle-propagation primitive: each particle is advanced in place,
+/// and determinism is preserved because the result layout is fixed by
+/// index, not by completion order (callers must derive any randomness
+/// from `i`, never from thread identity). Panics in `f` propagate.
+pub fn parallel_for_each_mut<T, F>(threads: usize, items: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let chunk = (n + threads - 1) / threads;
+    thread::scope(|scope| {
+        for (ci, items_chunk) in items.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                for (j, item) in items_chunk.iter_mut().enumerate() {
+                    f(ci * chunk + j, item);
+                }
+            });
+        }
+    });
+}
+
 /// Default parallelism: number of available CPUs (≥1).
 pub fn default_threads() -> usize {
     thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
@@ -144,6 +182,26 @@ mod tests {
     fn parallel_map_empty() {
         let out: Vec<usize> = parallel_map(4, 0, |i| i);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn parallel_for_each_mut_touches_every_item_in_order() {
+        for threads in [1, 2, 4, 7] {
+            let mut items: Vec<usize> = vec![0; 23];
+            parallel_for_each_mut(threads, &mut items, |i, x| *x = i * i);
+            assert_eq!(items, (0..23).map(|i| i * i).collect::<Vec<_>>(), "{threads}");
+        }
+        let mut empty: Vec<usize> = Vec::new();
+        parallel_for_each_mut(4, &mut empty, |_, _| {});
+    }
+
+    #[test]
+    fn parallel_for_each_mut_borrows_local_state() {
+        // non-'static capture: the whole point vs parallel_map
+        let offset = 100usize;
+        let mut items = vec![0usize; 8];
+        parallel_for_each_mut(3, &mut items, |i, x| *x = i + offset);
+        assert_eq!(items[7], 107);
     }
 
     #[test]

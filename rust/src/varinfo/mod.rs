@@ -14,7 +14,7 @@
 pub mod typed;
 pub mod untyped;
 
-pub use typed::{Slot, TypedVarInfo};
+pub use typed::{Slot, TraceSnapshot, TypedVarInfo};
 pub use untyped::{UntypedVarInfo, VarRecord};
 
 /// Per-variable flags (paper: `set_flag!`/`is_flagged`).
@@ -23,4 +23,10 @@ pub mod flags {
     pub const RESAMPLE: u8 = 1 << 0;
     /// Value was produced by this run's sampler (vs carried over).
     pub const TRANS: u8 = 1 << 1;
+    /// Particle samplers: this record has been scored by an observation
+    /// window and is part of the retained trajectory — resampling forks
+    /// must never regenerate it. Robust against dynamic models whose
+    /// visit order diverges from record insertion order (a prefix
+    /// *count* is not; see `crate::particle::exec`).
+    pub const LOCKED: u8 = 1 << 2;
 }

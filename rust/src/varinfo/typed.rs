@@ -31,9 +31,14 @@ pub struct Slot {
 }
 
 /// Strictly-typed execution trace with flat storage.
+///
+/// The layout (`slots`) is behind an [`Arc`]: cloning a `TypedVarInfo`
+/// copies only the three flat buffers and shares the layout — the cheap
+/// trace forking that particle samplers (`crate::particle`) rely on when
+/// they duplicate thousands of particles per resampling step.
 #[derive(Clone, Debug)]
 pub struct TypedVarInfo {
-    slots: Vec<Slot>,
+    slots: std::sync::Arc<[Slot]>,
     /// Flat unconstrained parameter vector θ (HMC state).
     pub unconstrained: Vec<f64>,
     /// Constrained images of θ, same layout as `slots[*].cons_*`.
@@ -41,6 +46,16 @@ pub struct TypedVarInfo {
     /// Discrete values in visit order.
     pub discrete: Vec<i64>,
     /// log-density of the last evaluation.
+    pub logp: f64,
+}
+
+/// A buffers-only snapshot of a [`TypedVarInfo`]: everything that varies
+/// between particles sharing one layout. Restoring is three `memcpy`s.
+#[derive(Clone, Debug)]
+pub struct TraceSnapshot {
+    pub unconstrained: Vec<f64>,
+    pub constrained: Vec<f64>,
+    pub discrete: Vec<i64>,
     pub logp: f64,
 }
 
@@ -87,7 +102,7 @@ impl TypedVarInfo {
             });
         }
         TypedVarInfo {
-            slots,
+            slots: slots.into(),
             unconstrained,
             constrained,
             discrete,
@@ -97,6 +112,39 @@ impl TypedVarInfo {
 
     pub fn slots(&self) -> &[Slot] {
         &self.slots
+    }
+
+    /// Cheap fork: shares the layout `Arc`, copies only the value buffers.
+    /// Semantically identical to `clone()`; the name documents intent at
+    /// particle-forking call sites.
+    pub fn fork(&self) -> TypedVarInfo {
+        self.clone()
+    }
+
+    /// True if `other` shares this trace's layout allocation (forks do).
+    pub fn shares_layout(&self, other: &TypedVarInfo) -> bool {
+        std::sync::Arc::ptr_eq(&self.slots, &other.slots)
+    }
+
+    /// Capture the per-particle state (buffers + logp) without the layout.
+    pub fn snapshot(&self) -> TraceSnapshot {
+        TraceSnapshot {
+            unconstrained: self.unconstrained.clone(),
+            constrained: self.constrained.clone(),
+            discrete: self.discrete.clone(),
+            logp: self.logp,
+        }
+    }
+
+    /// Restore a snapshot taken from a trace with the same layout.
+    pub fn restore(&mut self, s: &TraceSnapshot) {
+        assert_eq!(s.unconstrained.len(), self.unconstrained.len());
+        assert_eq!(s.constrained.len(), self.constrained.len());
+        assert_eq!(s.discrete.len(), self.discrete.len());
+        self.unconstrained.copy_from_slice(&s.unconstrained);
+        self.constrained.copy_from_slice(&s.constrained);
+        self.discrete.copy_from_slice(&s.discrete);
+        self.logp = s.logp;
     }
 
     /// Dimension of the unconstrained parameter vector.
@@ -265,6 +313,29 @@ mod tests {
         let row = tvi.row();
         assert_eq!(row.len(), names.len());
         assert_eq!(row[4], 2.0);
+    }
+
+    #[test]
+    fn fork_shares_layout_and_snapshot_restores() {
+        let mut tvi = TypedVarInfo::from_untyped(&demo_untyped());
+        let snap = tvi.snapshot();
+        let fork = tvi.fork();
+        assert!(tvi.shares_layout(&fork));
+        assert_eq!(fork.unconstrained, tvi.unconstrained);
+        // mutate, then restore
+        let theta: Vec<f64> = tvi.unconstrained.iter().map(|x| x + 1.0).collect();
+        tvi.set_unconstrained(&theta);
+        tvi.discrete[0] = 0;
+        tvi.logp = -123.0;
+        assert_ne!(tvi.unconstrained, snap.unconstrained);
+        tvi.restore(&snap);
+        assert_eq!(tvi.unconstrained, snap.unconstrained);
+        assert_eq!(tvi.constrained, snap.constrained);
+        assert_eq!(tvi.discrete, vec![2]);
+        assert_eq!(tvi.logp, snap.logp);
+        // a from-scratch specialization does NOT share the allocation
+        let other = TypedVarInfo::from_untyped(&demo_untyped());
+        assert!(!tvi.shares_layout(&other));
     }
 
     #[test]

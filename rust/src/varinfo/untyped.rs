@@ -117,6 +117,64 @@ impl UntypedVarInfo {
         }
     }
 
+    /// Set `flag` on every record with insertion (visit) index `>= from`
+    /// whose name is subsumed by one of `scope` (every record when `scope`
+    /// is `None`). This is the particle-sampler "del" sweep: after a
+    /// resampling fork, the retained prefix is kept and the suffix is
+    /// regenerated on the next replay run.
+    pub fn flag_suffix(&mut self, from: usize, scope: Option<&[VarName]>, flag: u8) {
+        for rec in self.records.iter_mut().skip(from) {
+            let in_scope = match scope {
+                None => true,
+                Some(vars) => vars.iter().any(|v| rec.vn.subsumed_by(v)),
+            };
+            if in_scope {
+                rec.flags |= flag;
+            }
+        }
+    }
+
+    /// Record by insertion (visit) index.
+    pub fn record(&self, i: usize) -> &VarRecord {
+        &self.records[i]
+    }
+
+    /// Insertion index of a variable, if present.
+    pub fn index_of(&self, vn: &VarName) -> Option<usize> {
+        self.index.get(vn).copied()
+    }
+
+    /// Set `flag` on the record at insertion index `i`.
+    pub fn flag_record(&mut self, i: usize, flag: u8) {
+        self.records[i].flags |= flag;
+    }
+
+    /// Set `flag` on every in-`scope` record that does **not** carry the
+    /// `LOCKED` stamp — the particle-fork regeneration sweep: locked
+    /// records have been scored and must replay; everything else is fair
+    /// game to redraw.
+    pub fn flag_unlocked(&mut self, scope: Option<&[VarName]>, flag: u8) {
+        for rec in &mut self.records {
+            if rec.flags & super::flags::LOCKED != 0 {
+                continue;
+            }
+            let in_scope = match scope {
+                None => true,
+                Some(vars) => vars.iter().any(|v| rec.vn.subsumed_by(v)),
+            };
+            if in_scope {
+                rec.flags |= flag;
+            }
+        }
+    }
+
+    /// Clear `flag` (a bit mask; may combine flags) on every record.
+    pub fn clear_flag_all(&mut self, flag: u8) {
+        for rec in &mut self.records {
+            rec.flags &= !flag;
+        }
+    }
+
     /// Records in insertion (visit) order.
     pub fn records(&self) -> &[VarRecord] {
         &self.records
@@ -270,6 +328,23 @@ mod tests {
         assert!(!vi.is_flagged(&s, flags::RESAMPLE));
         vi.flag_all_resample();
         assert!(vi.is_flagged(&VarName::new("w"), flags::RESAMPLE));
+    }
+
+    #[test]
+    fn flag_suffix_respects_index_and_scope() {
+        let mut vi = demo_vi(); // records: s, w, theta
+        vi.flag_suffix(1, None, flags::RESAMPLE);
+        assert!(!vi.is_flagged(&VarName::new("s"), flags::RESAMPLE));
+        assert!(vi.is_flagged(&VarName::new("w"), flags::RESAMPLE));
+        assert!(vi.is_flagged(&VarName::new("theta"), flags::RESAMPLE));
+
+        let mut vi = demo_vi();
+        let scope = [VarName::new("theta")];
+        vi.flag_suffix(0, Some(&scope), flags::RESAMPLE);
+        assert!(!vi.is_flagged(&VarName::new("s"), flags::RESAMPLE));
+        assert!(!vi.is_flagged(&VarName::new("w"), flags::RESAMPLE));
+        assert!(vi.is_flagged(&VarName::new("theta"), flags::RESAMPLE));
+        assert_eq!(vi.record(0).vn, VarName::new("s"));
     }
 
     #[test]

@@ -8,12 +8,14 @@
 
 use std::collections::HashMap;
 use std::fmt;
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 
-use once_cell::sync::Lazy;
+/// Global symbol interner (std `OnceLock`; no external lazy-init crate).
+static INTERNER: OnceLock<Mutex<Interner>> = OnceLock::new();
 
-/// Global symbol interner.
-static INTERNER: Lazy<Mutex<Interner>> = Lazy::new(|| Mutex::new(Interner::default()));
+fn interner() -> &'static Mutex<Interner> {
+    INTERNER.get_or_init(|| Mutex::new(Interner::default()))
+}
 
 #[derive(Default)]
 struct Interner {
@@ -28,7 +30,7 @@ pub struct Sym(u32);
 impl Sym {
     /// Intern a string.
     pub fn new(s: &str) -> Sym {
-        let mut int = INTERNER.lock().unwrap();
+        let mut int = interner().lock().unwrap();
         if let Some(&id) = int.map.get(s) {
             return Sym(id);
         }
@@ -40,7 +42,7 @@ impl Sym {
 
     /// Resolve back to the string.
     pub fn as_str(&self) -> String {
-        INTERNER.lock().unwrap().names[self.0 as usize].clone()
+        interner().lock().unwrap().names[self.0 as usize].clone()
     }
 
     pub fn id(&self) -> u32 {

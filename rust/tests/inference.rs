@@ -143,3 +143,59 @@ fn likelihood_context_excludes_prior_in_sampler_target() {
     assert!(stats::mean(&x0).abs() < 0.2);
     assert!((stats::variance(&x0) - 1.0).abs() < 0.35);
 }
+
+#[test]
+fn enumerate_gibbs_recovers_discrete_latent_mixture_end_to_end() {
+    // Satellite coverage: BlockSampler::Enumerate on a discrete-latent
+    // model, end to end — unknown component means (HMC block) plus one
+    // Bernoulli assignment per observation (Enumerate block).
+    model! {
+        pub MixTwo {
+            y: Vec<f64>,
+        }
+        fn body<T>(this, api) {
+            let mu0 = tilde!(api, mu0 ~ Normal(c(-2.0), c(2.0)));
+            let mu1 = tilde!(api, mu1 ~ Normal(c(2.0), c(2.0)));
+            check_reject!(api);
+            for i in 0..this.y.len() {
+                let z = tilde_int!(api, z[i] ~ Bernoulli(c(0.5)));
+                let mu = if z == 1 { mu1 } else { mu0 };
+                obs!(api, this.y[i] => Normal(mu, c(0.8)));
+            }
+        }
+    }
+
+    // two well-separated clusters at ±2 (labels fixed by the priors)
+    let mut rng = Xoshiro256pp::seed_from_u64(44);
+    let mut y = Vec::new();
+    let mut truth = Vec::new();
+    for i in 0..24 {
+        let one = i % 2 == 0;
+        truth.push(one);
+        let center = if one { 2.0 } else { -2.0 };
+        y.push(center + 0.8 * rng.normal());
+    }
+    let m = MixTwo { y };
+    let tvi = dynamicppl::model::init_typed(&m, &mut rng);
+    let gibbs = dynamicppl::inference::Gibbs::new(vec![
+        dynamicppl::inference::GibbsBlock::hmc(&["mu0", "mu1"], 0.05, 8),
+        dynamicppl::inference::GibbsBlock::enumerate(&["z"]),
+    ]);
+    let out = gibbs.sample(&m, &tvi, 800, 3000, &mut rng);
+
+    // column order follows visit order: mu0, mu1, z[0..24]
+    let mu0 = stats::mean(&out.rows.iter().map(|r| r[0]).collect::<Vec<_>>());
+    let mu1 = stats::mean(&out.rows.iter().map(|r| r[1]).collect::<Vec<_>>());
+    assert!((mu0 + 2.0).abs() < 0.5, "mu0 = {mu0}");
+    assert!((mu1 - 2.0).abs() < 0.5, "mu1 = {mu1}");
+
+    // posterior assignments recover the generating labels
+    let mut correct = 0;
+    for (i, &one) in truth.iter().enumerate() {
+        let freq = stats::mean(&out.rows.iter().map(|r| r[2 + i]).collect::<Vec<_>>());
+        if (freq > 0.5) == one {
+            correct += 1;
+        }
+    }
+    assert!(correct >= 22, "only {correct}/24 assignments recovered");
+}

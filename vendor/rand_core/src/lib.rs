@@ -1,0 +1,104 @@
+//! Minimal, dependency-free subset of the `rand_core` 0.6 API.
+//!
+//! Vendored so the workspace builds with no network access: the crate
+//! exposes exactly the surface this repository uses — the [`RngCore`]
+//! trait (with the 0.6-era fallible `try_fill_bytes`) and an opaque
+//! [`Error`] type. Generators in `dynamicppl::util::rng` implement
+//! `RngCore`, and everything downstream is generic over it, so swapping
+//! this for the real crates.io `rand_core` is a one-line manifest change.
+
+use std::fmt;
+
+/// Opaque RNG error (never produced by the in-tree generators, which are
+/// infallible; present only to satisfy the 0.6 trait signature).
+pub struct Error {
+    msg: &'static str,
+}
+
+impl Error {
+    pub fn new(msg: &'static str) -> Self {
+        Self { msg }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "rand_core::Error({})", self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// The core RNG trait: raw 32/64-bit output plus byte filling.
+pub trait RngCore {
+    fn next_u32(&mut self) -> u32;
+    fn next_u64(&mut self) -> u64;
+    fn fill_bytes(&mut self, dest: &mut [u8]);
+    fn try_fill_bytes(&mut self, dest: &mut [u8]) -> Result<(), Error>;
+}
+
+impl<R: RngCore + ?Sized> RngCore for &mut R {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        (**self).next_u32()
+    }
+
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        (**self).next_u64()
+    }
+
+    #[inline]
+    fn fill_bytes(&mut self, dest: &mut [u8]) {
+        (**self).fill_bytes(dest)
+    }
+
+    #[inline]
+    fn try_fill_bytes(&mut self, dest: &mut [u8]) -> Result<(), Error> {
+        (**self).try_fill_bytes(dest)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Counter(u64);
+
+    impl RngCore for Counter {
+        fn next_u32(&mut self) -> u32 {
+            self.next_u64() as u32
+        }
+        fn next_u64(&mut self) -> u64 {
+            self.0 = self.0.wrapping_add(1);
+            self.0
+        }
+        fn fill_bytes(&mut self, dest: &mut [u8]) {
+            for b in dest {
+                *b = self.next_u64() as u8;
+            }
+        }
+        fn try_fill_bytes(&mut self, dest: &mut [u8]) -> Result<(), Error> {
+            self.fill_bytes(dest);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn trait_object_and_reference_impls() {
+        let mut c = Counter(0);
+        assert_eq!(c.next_u64(), 1);
+        let r: &mut dyn RngCore = &mut c;
+        assert_eq!(r.next_u64(), 2);
+        let mut buf = [0u8; 3];
+        (&mut c).fill_bytes(&mut buf);
+        assert!((&mut c).try_fill_bytes(&mut buf).is_ok());
+        let _ = format!("{:?} {}", Error::new("x"), Error::new("x"));
+    }
+}
