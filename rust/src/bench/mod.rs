@@ -351,11 +351,41 @@ pub fn render_table1(cells: &[Cell], cfg: &Table1Config) -> String {
 
 // ------------------------------------------------------------------- SMC
 
+/// Which particle-replay path an SMC bench row measured.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SmcPath {
+    /// Typed fast path: cursor walks over forked `TypedVarInfo` buffers
+    /// (automatic demotion on dynamic structure change).
+    Typed,
+    /// Boxed baseline: hash-addressed `ReplayExecutor` replay.
+    Boxed,
+}
+
+impl SmcPath {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SmcPath::Typed => "typed",
+            SmcPath::Boxed => "boxed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "typed" => SmcPath::Typed,
+            "boxed" => SmcPath::Boxed,
+            _ => return None,
+        })
+    }
+}
+
 /// One SMC benchmark row: the particle workload the Table-1 HMC harness
-/// cannot express (evidence estimation over sequential models).
+/// cannot express (evidence estimation over sequential models), measured
+/// per replay path so `BENCH_SMC.json` records the typed-vs-boxed speedup.
 #[derive(Clone, Debug)]
 pub struct SmcRow {
     pub model: String,
+    /// Replay path this row measured (`typed` / `boxed`).
+    pub path: SmcPath,
     pub n_particles: usize,
     /// Observe-statement count = SMC step count of the model.
     pub n_obs: usize,
@@ -364,6 +394,10 @@ pub struct SmcRow {
     /// ESS after the final observation (weight health).
     pub final_ess: f64,
     pub resamples: usize,
+    /// Steps that actually executed on the typed fast path.
+    pub typed_steps: usize,
+    /// Mid-sweep demotions to the boxed path.
+    pub demotions: usize,
     pub wall_secs: f64,
     pub threads: usize,
     pub seed: u64,
@@ -379,6 +413,9 @@ pub struct SmcBenchConfig {
     /// Use the reduced workloads (default — the full StoVol/HMM workloads
     /// re-execute the whole body per observation and are bench-only).
     pub small: bool,
+    /// Replay paths to measure (default: both, so the JSON carries the
+    /// speedup at equal particle count).
+    pub paths: Vec<SmcPath>,
 }
 
 impl Default for SmcBenchConfig {
@@ -389,59 +426,93 @@ impl Default for SmcBenchConfig {
             seed: 42,
             threads: 1,
             small: true,
+            paths: vec![SmcPath::Typed, SmcPath::Boxed],
         }
     }
 }
 
-/// Run SMC over each configured model and collect evidence/ESS/time rows.
+/// Run SMC over each configured model × path and collect rows.
 pub fn run_smc_bench(cfg: &SmcBenchConfig) -> Vec<SmcRow> {
-    let mut rows = Vec::with_capacity(cfg.models.len());
+    let mut rows = Vec::with_capacity(cfg.models.len() * cfg.paths.len());
     for name in &cfg.models {
-        eprintln!("bench: {name} / smc×{}", cfg.n_particles);
         let bm = if cfg.small {
             crate::models::build_small(name, cfg.seed)
         } else {
             build(name, cfg.seed)
         };
-        let smc = crate::inference::Smc {
-            n_particles: cfg.n_particles,
-            threads: cfg.threads,
-            ..crate::inference::Smc::default()
-        };
-        let out = smc.run(bm.model.as_ref(), cfg.seed);
-        rows.push(SmcRow {
-            model: name.clone(),
-            n_particles: cfg.n_particles,
-            n_obs: out.cloud.n_obs,
-            log_evidence: out.log_evidence,
-            final_ess: out.ess_trace.last().copied().unwrap_or(f64::NAN),
-            resamples: out.resamples,
-            wall_secs: out.wall_secs,
-            threads: cfg.threads,
-            seed: cfg.seed,
-        });
+        for &path in &cfg.paths {
+            eprintln!("bench: {name} / smc×{} ({})", cfg.n_particles, path.label());
+            let smc = crate::inference::Smc {
+                n_particles: cfg.n_particles,
+                threads: cfg.threads,
+                use_typed: path == SmcPath::Typed,
+                ..crate::inference::Smc::default()
+            };
+            let out = smc.run(bm.model.as_ref(), cfg.seed);
+            rows.push(SmcRow {
+                model: name.clone(),
+                path,
+                n_particles: cfg.n_particles,
+                n_obs: out.cloud.n_obs(),
+                log_evidence: out.log_evidence,
+                final_ess: out.ess_trace.last().copied().unwrap_or(f64::NAN),
+                resamples: out.resamples,
+                typed_steps: out.typed_steps,
+                demotions: out.demotions,
+                wall_secs: out.wall_secs,
+                threads: cfg.threads,
+                seed: cfg.seed,
+            });
+        }
     }
     rows
 }
 
-/// Human-readable SMC table.
+/// Human-readable SMC table, with per-model typed-vs-boxed speedups when
+/// both paths were measured.
 pub fn render_smc_table(rows: &[SmcRow]) -> String {
     let mut out = String::new();
     let _ = writeln!(
         out,
-        "SMC — log-evidence / ESS / wall time per model (N particles, ESS-triggered systematic resampling)\n"
+        "SMC — log-evidence / ESS / wall time per model × replay path (N particles, ESS-triggered systematic resampling)\n"
     );
     let _ = writeln!(
         out,
-        "{:<16} {:>10} {:>6} {:>14} {:>10} {:>10} {:>10}",
-        "model", "particles", "steps", "log Ẑ", "final ESS", "resamples", "wall (s)"
+        "{:<16} {:>6} {:>10} {:>6} {:>14} {:>10} {:>10} {:>10}",
+        "model", "path", "particles", "steps", "log Ẑ", "final ESS", "resamples", "wall (s)"
     );
     for r in rows {
         let _ = writeln!(
             out,
-            "{:<16} {:>10} {:>6} {:>14.4} {:>10.1} {:>10} {:>10.3}",
-            r.model, r.n_particles, r.n_obs, r.log_evidence, r.final_ess, r.resamples, r.wall_secs
+            "{:<16} {:>6} {:>10} {:>6} {:>14.4} {:>10.1} {:>10} {:>10.3}",
+            r.model,
+            r.path.label(),
+            r.n_particles,
+            r.n_obs,
+            r.log_evidence,
+            r.final_ess,
+            r.resamples,
+            r.wall_secs
         );
+    }
+    let mut wrote_header = false;
+    for r in rows.iter().filter(|r| r.path == SmcPath::Typed) {
+        if let Some(b) = rows
+            .iter()
+            .find(|b| b.path == SmcPath::Boxed && b.model == r.model)
+        {
+            if !wrote_header {
+                let _ = writeln!(out, "\nspeedups (boxed / typed wall time):");
+                wrote_header = true;
+            }
+            let _ = writeln!(
+                out,
+                "  {:<16} {:.2}×  (evidence bit-identical: {})",
+                r.model,
+                b.wall_secs / r.wall_secs,
+                r.log_evidence.to_bits() == b.log_evidence.to_bits()
+            );
+        }
     }
     out
 }
@@ -461,20 +532,55 @@ pub fn smc_rows_to_json(rows: &[SmcRow]) -> String {
     for (i, r) in rows.iter().enumerate() {
         let _ = write!(
             out,
-            "    {{\"model\": \"{}\", \"n_particles\": {}, \"n_obs\": {}, \
+            "    {{\"model\": \"{}\", \"path\": \"{}\", \"n_particles\": {}, \"n_obs\": {}, \
              \"log_evidence\": {}, \"final_ess\": {}, \"resamples\": {}, \
+             \"typed_steps\": {}, \"demotions\": {}, \
              \"wall_secs\": {}, \"threads\": {}, \"seed\": {}}}",
             r.model,
+            r.path.label(),
             r.n_particles,
             r.n_obs,
             json_num(r.log_evidence),
             json_num(r.final_ess),
             r.resamples,
+            r.typed_steps,
+            r.demotions,
             json_num(r.wall_secs),
             r.threads,
             r.seed,
         );
         out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Serialize Table-1 cells as the coordinator's `BENCH_TABLE1.json`
+/// payload — the paper's headline table in machine-readable form, so the
+/// perf trajectory across PRs is fully scriptable.
+pub fn table1_cells_to_json(cells: &[Cell], cfg: &Table1Config) -> String {
+    let mut out = String::new();
+    let _ = write!(
+        out,
+        "{{\n  \"bench\": \"table1\",\n  \"iters\": {},\n  \"reps\": {},\n  \"seed\": {},\n  \"cells\": [\n",
+        cfg.iters, cfg.reps, cfg.seed
+    );
+    for (i, c) in cells.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"model\": \"{}\", \"backend\": \"{}\", \"mean_secs\": {}, \
+             \"std_secs\": {}, \"extrapolated\": {}, \"note\": {}}}",
+            c.model,
+            c.backend.label(),
+            json_num(c.mean),
+            json_num(c.std),
+            c.extrapolated,
+            match &c.note {
+                Some(n) => format!("\"{n}\""),
+                None => "null".to_string(),
+            },
+        );
+        out.push_str(if i + 1 < cells.len() { ",\n" } else { "\n" });
     }
     out.push_str("  ]\n}\n");
     out
@@ -522,18 +628,52 @@ mod tests {
             seed: 4,
             threads: 1,
             small: true,
+            ..SmcBenchConfig::default()
         };
         let rows = run_smc_bench(&cfg);
-        assert_eq!(rows.len(), 1);
+        // one typed + one boxed row, bit-identical evidence
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].path, SmcPath::Typed);
+        assert_eq!(rows[1].path, SmcPath::Boxed);
         assert!(rows[0].log_evidence.is_finite());
+        assert_eq!(
+            rows[0].log_evidence.to_bits(),
+            rows[1].log_evidence.to_bits(),
+            "typed and boxed paths must agree bitwise"
+        );
+        assert_eq!(rows[0].typed_steps, rows[0].n_obs);
+        assert_eq!(rows[1].typed_steps, 0);
         assert!(rows[0].n_obs >= 1);
         let table = render_smc_table(&rows);
         assert!(table.contains("hmm_semisup"));
+        assert!(table.contains("speedups"));
         let json = smc_rows_to_json(&rows);
         assert!(json.contains("\"bench\": \"smc\""));
         assert!(json.contains("\"model\": \"hmm_semisup\""));
+        assert!(json.contains("\"path\": \"typed\""));
+        assert!(json.contains("\"path\": \"boxed\""));
         assert!(json.contains("\"log_evidence\": "));
         // valid-ish JSON: balanced braces/brackets, no trailing comma
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert!(!json.contains(",\n  ]"));
+    }
+
+    #[test]
+    fn table1_json_is_balanced_and_labeled() {
+        let cfg = Table1Config {
+            iters: 10,
+            reps: 1,
+            seed: 3,
+            backends: vec![BenchBackend::StanLike],
+            models: vec!["hier_poisson".into()],
+            max_run_iters: None,
+        };
+        let cell = run_cell("hier_poisson", BenchBackend::StanLike, &cfg);
+        let json = table1_cells_to_json(&[cell], &cfg);
+        assert!(json.contains("\"bench\": \"table1\""));
+        assert!(json.contains("\"model\": \"hier_poisson\""));
+        assert!(json.contains("\"backend\": \"stanlike\""));
+        assert!(json.contains("\"mean_secs\": "));
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert!(!json.contains(",\n  ]"));
     }

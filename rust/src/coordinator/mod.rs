@@ -4,8 +4,8 @@
 use std::sync::Arc;
 
 use crate::bench::{
-    render_smc_table, render_table1, run_smc_bench, run_table1, smc_rows_to_json, BenchBackend,
-    SmcBenchConfig, Table1Config,
+    render_smc_table, render_table1, run_smc_bench, run_table1, smc_rows_to_json,
+    table1_cells_to_json, BenchBackend, SmcBenchConfig, SmcPath, Table1Config,
 };
 use crate::chain::{Chain, MultiChain};
 use crate::context::Context;
@@ -35,7 +35,7 @@ pub fn usage() -> String {
             ),
             (
                 "bench",
-                "bench table1 [--models a,b] [--backends x,y] [--iters N] [--reps R] | bench smc [--models a,b] [--particles N] [--threads T] [--full] [--out FILE.json]",
+                "bench table1 [--models a,b] [--backends x,y] [--iters N] [--reps R] [--out FILE.json] | bench smc [--models a,b] [--particles N] [--threads T] [--path typed|boxed|both] [--full] [--out FILE.json]",
             ),
             ("query", "evaluate a probability query string (paper §3.5)"),
         ],
@@ -255,7 +255,19 @@ fn cmd_bench(args: &Args) -> i32 {
             cfg.max_run_iters = args.get_parse::<usize>("max-run").ok().flatten();
             let cells = run_table1(&cfg);
             println!("{}", render_table1(&cells, &cfg));
-            0
+            // machine-readable Table-1 cells alongside the console table
+            let out_path = args.get_or("out", "BENCH_TABLE1.json").to_string();
+            let json = table1_cells_to_json(&cells, &cfg);
+            match std::fs::write(&out_path, &json) {
+                Ok(()) => {
+                    println!("wrote {out_path}");
+                    0
+                }
+                Err(e) => {
+                    eprintln!("failed to write {out_path}: {e}");
+                    1
+                }
+            }
         }
         "smc" => {
             let mut cfg = SmcBenchConfig::default();
@@ -270,6 +282,16 @@ fn cmd_bench(args: &Args) -> i32 {
                 .unwrap_or(cfg.threads);
             cfg.seed = args.get_parse_or("seed", cfg.seed).unwrap_or(cfg.seed);
             cfg.small = !args.flag("full");
+            match args.get_or("path", "both") {
+                "both" => {}
+                p => match SmcPath::parse(p) {
+                    Some(path) => cfg.paths = vec![path],
+                    None => {
+                        eprintln!("unknown path {p:?} (typed|boxed|both)");
+                        return 2;
+                    }
+                },
+            }
             let rows = run_smc_bench(&cfg);
             println!("{}", render_smc_table(&rows));
             let out_path = args.get_or("out", "BENCH_SMC.json").to_string();

@@ -22,24 +22,34 @@ use super::Domain;
 
 /// Constrained → unconstrained (f64 only), appending onto `out`.
 pub fn link(domain: &Domain, x: &[f64], out: &mut Vec<f64>) {
+    let start = out.len();
+    out.resize(start + domain.unconstrained_dim(), 0.0);
+    link_slice(domain, x, &mut out[start..]);
+}
+
+/// Constrained → unconstrained (f64 only), writing into a pre-sized slice
+/// of length `domain.unconstrained_dim()` — the allocation-free form used
+/// by in-place trace writes on the particle fast path.
+pub fn link_slice(domain: &Domain, x: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(out.len(), domain.unconstrained_dim());
     match domain {
-        Domain::Real | Domain::RealVec(_) => out.extend_from_slice(x),
+        Domain::Real | Domain::RealVec(_) => out.copy_from_slice(x),
         Domain::Positive | Domain::PositiveVec(_) => {
-            for &xi in x {
-                out.push(xi.ln());
+            for (o, &xi) in out.iter_mut().zip(x) {
+                *o = xi.ln();
             }
         }
         Domain::Interval(lo, hi) => {
             debug_assert_eq!(x.len(), 1);
             let z = (x[0] - lo) / (hi - lo);
-            out.push((z / (1.0 - z)).ln());
+            out[0] = (z / (1.0 - z)).ln();
         }
         Domain::Simplex(k) => {
             debug_assert_eq!(x.len(), *k);
             let mut stick = 1.0;
             for (i, &xi) in x.iter().take(k - 1).enumerate() {
                 let z = xi / stick;
-                out.push((z / (1.0 - z)).ln() + ((k - i - 1) as f64).ln());
+                out[i] = (z / (1.0 - z)).ln() + ((k - i - 1) as f64).ln();
                 stick -= xi;
             }
         }
@@ -50,15 +60,26 @@ pub fn link(domain: &Domain, x: &[f64], out: &mut Vec<f64>) {
 /// Unconstrained → constrained (generic over the AD scalar), appending the
 /// constrained value onto `out` and returning the log-abs-det-Jacobian.
 pub fn invlink<T: Scalar>(domain: &Domain, y: &[T], out: &mut Vec<T>) -> T {
+    let start = out.len();
+    out.resize(start + domain.constrained_dim(), T::constant(0.0));
+    invlink_slice(domain, y, &mut out[start..])
+}
+
+/// Unconstrained → constrained into a pre-sized slice of length
+/// `domain.constrained_dim()`, returning the log-abs-det-Jacobian. The
+/// allocation-free form: `TypedVarInfo::refresh_constrained` and the typed
+/// executors invlink directly into their destination buffers.
+pub fn invlink_slice<T: Scalar>(domain: &Domain, y: &[T], out: &mut [T]) -> T {
+    debug_assert_eq!(out.len(), domain.constrained_dim());
     match domain {
         Domain::Real | Domain::RealVec(_) => {
-            out.extend_from_slice(y);
+            out.copy_from_slice(y);
             T::constant(0.0)
         }
         Domain::Positive | Domain::PositiveVec(_) => {
             let mut ladj = T::constant(0.0);
-            for &yi in y {
-                out.push(yi.exp());
+            for (o, &yi) in out.iter_mut().zip(y) {
+                *o = yi.exp();
                 ladj = ladj + yi;
             }
             ladj
@@ -67,7 +88,7 @@ pub fn invlink<T: Scalar>(domain: &Domain, y: &[T], out: &mut Vec<T>) -> T {
             debug_assert_eq!(y.len(), 1);
             let width = hi - lo;
             let z = y[0].sigmoid();
-            out.push(z * width + *lo);
+            out[0] = z * width + *lo;
             T::constant(width.ln()) + y[0].log_sigmoid() + (-y[0]).log_sigmoid()
         }
         Domain::Simplex(k) => {
@@ -78,11 +99,11 @@ pub fn invlink<T: Scalar>(domain: &Domain, y: &[T], out: &mut Vec<T>) -> T {
                 let offset = ((k - i - 1) as f64).ln();
                 let z = (yi - offset).sigmoid();
                 let xi = stick * z;
-                out.push(xi);
+                out[i] = xi;
                 ladj = ladj + z.ln() + (T::constant(1.0) - z).ln() + stick.ln();
                 stick = stick - xi;
             }
-            out.push(stick);
+            out[k - 1] = stick;
             ladj
         }
         Domain::DiscreteBool | Domain::DiscreteCategory(_) | Domain::DiscreteCount => {
@@ -168,6 +189,28 @@ mod tests {
             "{ladj} vs {}",
             det.abs().ln()
         );
+    }
+
+    #[test]
+    fn slice_forms_match_vec_forms() {
+        for (domain, x) in [
+            (Domain::Positive, vec![2.5]),
+            (Domain::Interval(-1.0, 1.0), vec![0.4]),
+            (Domain::Simplex(4), vec![0.1, 0.2, 0.3, 0.4]),
+        ] {
+            let mut y_vec = Vec::new();
+            link(&domain, &x, &mut y_vec);
+            let mut y_slice = vec![0.0; domain.unconstrained_dim()];
+            link_slice(&domain, &x, &mut y_slice);
+            assert_eq!(y_vec, y_slice, "{domain:?}");
+
+            let mut back_vec: Vec<f64> = Vec::new();
+            let ladj_vec = invlink(&domain, &y_vec, &mut back_vec);
+            let mut back_slice = vec![0.0; domain.constrained_dim()];
+            let ladj_slice = invlink_slice(&domain, &y_slice, &mut back_slice);
+            assert_eq!(back_vec, back_slice, "{domain:?}");
+            assert_eq!(ladj_vec.to_bits(), ladj_slice.to_bits(), "{domain:?}");
+        }
     }
 
     #[test]

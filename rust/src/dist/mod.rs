@@ -70,6 +70,27 @@ impl Domain {
         }
     }
 
+    /// Structural compatibility: same support variant and dimensions.
+    /// `Interval` bounds are **not** compared — distribution parameters may
+    /// depend on other parameters (`Uniform(0, theta)`) without changing
+    /// the trace layout, so the typed replay path treats them as the same
+    /// slot shape. Strict equality (`==`) is what layout *specialization*
+    /// checks; this is what per-visit cursor walks check.
+    pub fn compatible(&self, other: &Domain) -> bool {
+        match (self, other) {
+            (Domain::Real, Domain::Real)
+            | (Domain::Positive, Domain::Positive)
+            | (Domain::Interval(_, _), Domain::Interval(_, _))
+            | (Domain::DiscreteBool, Domain::DiscreteBool)
+            | (Domain::DiscreteCount, Domain::DiscreteCount) => true,
+            (Domain::RealVec(a), Domain::RealVec(b))
+            | (Domain::PositiveVec(a), Domain::PositiveVec(b))
+            | (Domain::Simplex(a), Domain::Simplex(b))
+            | (Domain::DiscreteCategory(a), Domain::DiscreteCategory(b)) => a == b,
+            _ => false,
+        }
+    }
+
     /// Number of constrained scalar elements of the value.
     pub fn constrained_dim(&self) -> usize {
         match self {

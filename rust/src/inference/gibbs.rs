@@ -33,10 +33,17 @@ pub enum BlockSampler {
     /// ([`crate::inference::smc::csmc_sweep`]). Works for continuous,
     /// discrete and mixed blocks — the particle analogue of "HMC within
     /// Gibbs", and the only block sampler that handles unbounded discrete
-    /// supports.
+    /// supports. Sweeps run on the typed fast path (the sampler's
+    /// `TypedVarInfo` doubles as the particle template) and demote to the
+    /// boxed replay automatically on dynamic structure changes.
     ParticleGibbs {
         n_particles: usize,
         resampler: Resampler,
+        /// Ancestor sampling (PGAS): also resample the retained particle's
+        /// ancestor at each resampling step — much better path-space
+        /// mixing on long sequential blocks, at ~one extra evaluation
+        /// replay per particle per resampling step.
+        ancestor_sampling: bool,
     },
 }
 
@@ -80,6 +87,21 @@ impl GibbsBlock {
             sampler: BlockSampler::ParticleGibbs {
                 n_particles,
                 resampler: Resampler::Multinomial,
+                ancestor_sampling: false,
+            },
+        }
+    }
+
+    /// Particle-Gibbs block with ancestor sampling (PGAS) — use for long
+    /// sequential blocks (state-space latents) where the plain conditional
+    /// filter's path degeneracy freezes the early trajectory.
+    pub fn particle_gibbs_as(vars: &[&str], n_particles: usize) -> Self {
+        Self {
+            vars: vars.iter().map(|v| VarName::new(v)).collect(),
+            sampler: BlockSampler::ParticleGibbs {
+                n_particles,
+                resampler: Resampler::Multinomial,
+                ancestor_sampling: true,
             },
         }
     }
@@ -264,11 +286,17 @@ impl Gibbs {
 
             // Particle-Gibbs blocks: conditional-SMC sweeps
             for (bi, slots) in &pg_blocks {
-                let (n_particles, resampler) = match self.blocks[*bi].sampler {
+                let cfg = match self.blocks[*bi].sampler {
                     BlockSampler::ParticleGibbs {
                         n_particles,
                         resampler,
-                    } => (n_particles, resampler),
+                        ancestor_sampling,
+                    } => crate::inference::smc::Csmc {
+                        n_particles,
+                        resampler,
+                        ess_threshold: 0.5,
+                        ancestor_sampling,
+                    },
                     _ => unreachable!(),
                 };
                 let vi = pg_vi.as_mut().expect("pg template exists");
@@ -278,15 +306,17 @@ impl Gibbs {
                     vi.set_value(&slot.vn, tvi.boxed_value(slot));
                 }
                 let sweep_seed = rng.next_u64();
+                // the sampler's own typed state doubles as the particle
+                // template: sweeps run over forked flat buffers and fall
+                // back to the boxed replay on dynamic structure changes
                 let selected = crate::inference::smc::csmc_sweep(
                     model,
                     vi,
                     &self.blocks[*bi].vars,
-                    n_particles,
-                    resampler,
-                    0.5,
+                    &cfg,
                     sweep_seed,
                     pg_n_obs,
+                    Some(&tvi),
                 );
                 // write the selected particle's block values back into the
                 // typed state (link continuous values, copy discrete ones)

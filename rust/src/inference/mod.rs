@@ -17,7 +17,7 @@ pub use hmc::Hmc;
 pub use mh::RwMh;
 pub use nuts::Nuts;
 pub use run::{sample_chain, sample_chains, sample_smc_chain, SamplerKind};
-pub use smc::{csmc_sweep, Smc, SmcResult};
+pub use smc::{csmc_sweep, Csmc, Smc, SmcCloud, SmcResult};
 
 use crate::chain::SamplerStats;
 

@@ -9,6 +9,17 @@
 //! log-marginal-likelihood (evidence) estimate — a quantity none of the
 //! gradient samplers can produce.
 //!
+//! **Typed specialization.** The first full run (prior initialization)
+//! executes on boxed traces — the only representation that can discover a
+//! model's structure. When every particle comes back with the same
+//! layout, the cloud is *promoted* onto forked [`TypedVarInfo`] buffers
+//! and the whole sweep runs as flat cursor walks (paper §2.2 applied to
+//! particles). A dynamic structure change mid-sweep rolls the step back
+//! and transparently *demotes* to the boxed path — same seeds, same
+//! stream discipline, so a demoted run is bitwise identical to a run that
+//! had been boxed from the start. [`SmcResult::typed_steps`] /
+//! [`SmcResult::demotions`] report which path actually executed.
+//!
 //! Parallelism: particle propagation fans out over
 //! [`crate::util::threadpool::parallel_for_each_mut`]. Results are
 //! **bitwise deterministic** in the seed regardless of thread count
@@ -22,9 +33,14 @@ use std::collections::HashMap;
 
 use crate::chain::{Chain, SamplerStats};
 use crate::context::Context;
+use crate::model::executors::{ReplayScope, TypedReplayExecutor};
 use crate::model::{sample_run, Model};
-use crate::particle::{particle_seed, ParticleCloud, Resampler};
+use crate::particle::{
+    count_observes, particle_seed, BoxedCloud, LayoutMismatch, ParticleCloud, ParticleState,
+    Resampler, TypedCloud,
+};
 use crate::util::rng::Xoshiro256pp;
+use crate::value::Value;
 use crate::varinfo::{TypedVarInfo, UntypedVarInfo};
 use crate::varname::VarName;
 
@@ -40,6 +56,10 @@ pub struct Smc {
     /// Worker threads for particle propagation (1 = serial; any value
     /// yields identical results for a fixed seed).
     pub threads: usize,
+    /// Promote to the typed fast path after the first full run when the
+    /// layout holds (default). `false` forces the boxed `ReplayExecutor`
+    /// path — the benchmark baseline and a debugging escape hatch.
+    pub use_typed: bool,
 }
 
 impl Default for Smc {
@@ -49,6 +69,96 @@ impl Default for Smc {
             resampler: Resampler::Systematic,
             ess_threshold: 0.5,
             threads: 1,
+            use_typed: true,
+        }
+    }
+}
+
+/// The cloud an SMC run ended with: typed fast path (plus the boxed
+/// template kept for conversion) or boxed fallback.
+#[derive(Clone, Debug)]
+pub enum SmcCloud {
+    Typed {
+        cloud: TypedCloud,
+        template: UntypedVarInfo,
+    },
+    Boxed(BoxedCloud),
+}
+
+impl SmcCloud {
+    pub fn len(&self) -> usize {
+        match self {
+            SmcCloud::Typed { cloud, .. } => cloud.len(),
+            SmcCloud::Boxed(c) => c.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_typed(&self) -> bool {
+        matches!(self, SmcCloud::Typed { .. })
+    }
+
+    pub fn n_obs(&self) -> usize {
+        match self {
+            SmcCloud::Typed { cloud, .. } => cloud.n_obs,
+            SmcCloud::Boxed(c) => c.n_obs,
+        }
+    }
+
+    pub fn log_evidence(&self) -> f64 {
+        match self {
+            SmcCloud::Typed { cloud, .. } => cloud.log_evidence,
+            SmcCloud::Boxed(c) => c.log_evidence,
+        }
+    }
+
+    pub fn ess(&self) -> f64 {
+        match self {
+            SmcCloud::Typed { cloud, .. } => cloud.ess(),
+            SmcCloud::Boxed(c) => c.ess(),
+        }
+    }
+
+    /// Normalized weights (probabilities).
+    pub fn weights(&self) -> Vec<f64> {
+        match self {
+            SmcCloud::Typed { cloud, .. } => cloud.weights(),
+            SmcCloud::Boxed(c) => c.weights(),
+        }
+    }
+
+    /// Per-particle normalized log-weights.
+    pub fn log_weights(&self) -> Vec<f64> {
+        match self {
+            SmcCloud::Typed { cloud, .. } => {
+                cloud.particles.iter().map(|p| p.log_weight).collect()
+            }
+            SmcCloud::Boxed(c) => c.particles.iter().map(|p| p.log_weight).collect(),
+        }
+    }
+
+    /// Constrained value of variable `vn` in particle `i`, if traced.
+    pub fn value_of(&self, i: usize, vn: &VarName) -> Option<Value> {
+        match self {
+            SmcCloud::Typed { cloud, .. } => {
+                let state = &cloud.particles[i].state;
+                state
+                    .slots()
+                    .iter()
+                    .find(|s| &s.vn == vn)
+                    .map(|s| state.boxed_value(s))
+            }
+            SmcCloud::Boxed(c) => c.particles[i].state.get(vn).map(|r| r.value.clone()),
+        }
+    }
+
+    fn maybe_resample(&mut self, resampler: Resampler, threshold: f64, rng: &mut Xoshiro256pp) -> bool {
+        match self {
+            SmcCloud::Typed { cloud, .. } => cloud.maybe_resample(resampler, threshold, false, rng),
+            SmcCloud::Boxed(c) => c.maybe_resample(resampler, threshold, false, rng),
         }
     }
 }
@@ -56,13 +166,18 @@ impl Default for Smc {
 /// Outcome of one SMC run.
 pub struct SmcResult {
     /// Final weighted cloud (post last observation; not equalized).
-    pub cloud: ParticleCloud,
+    pub cloud: SmcCloud,
     /// Log-marginal-likelihood estimate `log Ẑ`.
     pub log_evidence: f64,
     /// ESS after each observation step.
     pub ess_trace: Vec<f64>,
     /// Number of resampling passes triggered.
     pub resamples: usize,
+    /// Observation steps executed on the typed fast path.
+    pub typed_steps: usize,
+    /// Mid-sweep demotions to the boxed path (dynamic structure changes;
+    /// 0 or 1 for a single sweep — once boxed, a sweep stays boxed).
+    pub demotions: usize,
     pub wall_secs: f64,
 }
 
@@ -79,27 +194,67 @@ impl Smc {
         assert!(self.n_particles >= 2);
         assert!(self.ess_threshold > 0.0 && self.ess_threshold <= 1.0);
         let t0 = Instant::now();
-        let mut cloud = ParticleCloud::from_prior(model, self.n_particles, seed, self.threads);
+        let boxed = BoxedCloud::from_prior(model, self.n_particles, seed, self.threads);
+        // specialize after the first full run: every particle must share
+        // one layout, otherwise the model is dynamic across particles and
+        // the sweep stays boxed
+        let mut state = if self.use_typed {
+            match TypedCloud::promote(&boxed) {
+                Some((cloud, template)) => SmcCloud::Typed { cloud, template },
+                None => SmcCloud::Boxed(boxed),
+            }
+        } else {
+            SmcCloud::Boxed(boxed)
+        };
         // master stream: resampling decisions only (serial → deterministic)
         let mut master =
             Xoshiro256pp::seed_from_u64(particle_seed(seed, usize::MAX / 2, 0x5EED));
-        let mut ess_trace = Vec::with_capacity(cloud.n_obs);
+        let n_obs = state.n_obs();
+        let mut ess_trace = Vec::with_capacity(n_obs);
         let mut resamples = 0usize;
-        for t in 0..cloud.n_obs {
-            cloud.advance(model, seed, self.threads);
-            ess_trace.push(cloud.ess());
+        let mut typed_steps = 0usize;
+        let mut demotions = 0usize;
+        for t in 0..n_obs {
+            state = match state {
+                SmcCloud::Typed { mut cloud, template } => {
+                    match cloud.advance(model, seed, self.threads) {
+                        Ok(_) => {
+                            typed_steps += 1;
+                            SmcCloud::Typed { cloud, template }
+                        }
+                        Err(LayoutMismatch) => {
+                            // roll-back happened inside advance; replay the
+                            // step through the boxed path (same RNG streams
+                            // → identical to an all-boxed run)
+                            demotions += 1;
+                            let mut b = cloud.demote(&template, None);
+                            b.advance(model, seed, self.threads)
+                                .expect("boxed replay cannot mismatch");
+                            SmcCloud::Boxed(b)
+                        }
+                    }
+                }
+                SmcCloud::Boxed(mut b) => {
+                    b.advance(model, seed, self.threads)
+                        .expect("boxed replay cannot mismatch");
+                    SmcCloud::Boxed(b)
+                }
+            };
+            ess_trace.push(state.ess());
             // keep the final cloud weighted: no resample after the last step
-            if t + 1 < cloud.n_obs
-                && cloud.maybe_resample(self.resampler, self.ess_threshold, false, &mut master)
+            if t + 1 < n_obs
+                && state.maybe_resample(self.resampler, self.ess_threshold, &mut master)
             {
                 resamples += 1;
             }
         }
         SmcResult {
-            log_evidence: cloud.log_evidence,
-            cloud,
+            log_evidence: state.log_evidence(),
+            cloud: state,
             ess_trace,
             resamples,
+            typed_steps,
+            demotions,
             wall_secs: t0.elapsed().as_secs_f64(),
         }
     }
@@ -124,14 +279,35 @@ impl Smc {
         let mut chain: Option<Chain> = None;
         for &a in &ancestors {
             if !rows.contains_key(&a) {
-                let mut trace = result.cloud.particles[a].trace.clone();
-                // full-joint replay (values all present → pure replay)
-                let lp = sample_run(model, &mut master, &mut trace, Context::Default);
-                let tvi = TypedVarInfo::from_untyped(&trace);
+                let (names, row, lp) = match &result.cloud {
+                    SmcCloud::Typed { cloud, .. } => {
+                        // full-joint evaluation directly over the flat
+                        // buffers (nothing flagged → pure replay; Default
+                        // context scores priors + likelihood, matching
+                        // `sample_run` bit for bit)
+                        let mut state = cloud.particles[a].state.clone();
+                        let mut rng0 = Xoshiro256pp::seed_from_u64(0);
+                        let rep = TypedReplayExecutor::run(
+                            model,
+                            &mut rng0,
+                            &mut state,
+                            Context::Default,
+                            ReplayScope::Unscoped,
+                        );
+                        (state.column_names(), state.row(), rep.delta_logw)
+                    }
+                    SmcCloud::Boxed(c) => {
+                        let mut trace = c.particles[a].state.clone();
+                        // full-joint replay (values all present → pure replay)
+                        let lp = sample_run(model, &mut master, &mut trace, Context::Default);
+                        let tvi = TypedVarInfo::from_untyped(&trace);
+                        (tvi.column_names(), tvi.row(), lp)
+                    }
+                };
                 if chain.is_none() {
-                    chain = Some(Chain::new(tvi.column_names()));
+                    chain = Some(Chain::new(names));
                 }
-                rows.insert(a, (tvi.row(), lp));
+                rows.insert(a, (row, lp));
             }
             let (row, lp) = &rows[&a];
             chain
@@ -150,6 +326,35 @@ impl Smc {
     }
 }
 
+/// Conditional-SMC sweep configuration (the Particle-Gibbs kernel).
+#[derive(Clone, Copy, Debug)]
+pub struct Csmc {
+    pub n_particles: usize,
+    /// Multinomial is the safe scheme for the conditional filter and the
+    /// Particle-Gibbs default.
+    pub resampler: Resampler,
+    /// Resample when `ESS < ess_threshold · N`.
+    pub ess_threshold: f64,
+    /// Ancestor sampling (PGAS): at every resampling step, also resample
+    /// the *retained* particle's ancestor index, weighting each candidate
+    /// by `W_i · p(reference future | candidate prefix)`. Breaks the path
+    /// degeneracy that freezes the early part of the retained trajectory,
+    /// at the cost of one evaluation replay per particle per resampling
+    /// step (Lindsten, Jordan & Schön 2014).
+    pub ancestor_sampling: bool,
+}
+
+impl Csmc {
+    pub fn new(n_particles: usize) -> Self {
+        Self {
+            n_particles,
+            resampler: Resampler::Multinomial,
+            ess_threshold: 0.5,
+            ancestor_sampling: false,
+        }
+    }
+}
+
 /// One conditional-SMC (Particle-Gibbs) sweep: run an N-particle filter
 /// in which particle 0 is pinned to the `reference` trajectory's values
 /// of the `scope` variables (all other variables replay exactly in every
@@ -157,33 +362,83 @@ impl Smc {
 /// trace is a sample from a Markov kernel that leaves the conditional
 /// posterior of `scope` invariant (Andrieu, Doucet & Holenstein 2010).
 ///
-/// Multinomial resampling is the safe scheme for the conditional filter
-/// and the Particle-Gibbs default.
-///
 /// `n_obs` is the model's observe-statement count: pass
 /// `Some(crate::particle::count_observes(model, reference))` computed
 /// once when sweeping in a loop (Gibbs does), or `None` to probe here.
+///
+/// `typed_template` switches the sweep onto the typed fast path: when the
+/// reference still fits the template's layout, all N particles run as
+/// flat-buffer forks; a mid-sweep structure change demotes to the boxed
+/// path and finishes the sweep there. `None` (or a stale template) runs
+/// boxed.
+#[allow(clippy::too_many_arguments)]
 pub fn csmc_sweep(
     model: &dyn Model,
     reference: &UntypedVarInfo,
     scope: &[VarName],
-    n_particles: usize,
-    resampler: Resampler,
-    ess_threshold: f64,
+    cfg: &Csmc,
     seed: u64,
     n_obs: Option<usize>,
+    typed_template: Option<&TypedVarInfo>,
 ) -> UntypedVarInfo {
-    let mut cloud =
-        ParticleCloud::conditional(model, reference, scope, n_particles, seed, n_obs);
+    let n_obs = n_obs.unwrap_or_else(|| count_observes(model, reference));
     let mut master = Xoshiro256pp::seed_from_u64(particle_seed(seed, usize::MAX / 2, 0xC5bC));
-    for t in 0..cloud.n_obs {
-        cloud.advance(model, seed, 1);
-        if t + 1 < cloud.n_obs {
-            cloud.maybe_resample(resampler, ess_threshold, true, &mut master);
+    if let Some(template) = typed_template {
+        if let Some(mut cloud) =
+            TypedCloud::conditional_typed(template, reference, scope, cfg.n_particles, n_obs)
+        {
+            match csmc_loop(&mut cloud, model, cfg, seed, &mut master) {
+                Ok(()) => {
+                    let k = cloud.select(&mut master);
+                    return cloud.particles[k].state.to_untyped(reference);
+                }
+                Err(LayoutMismatch) => {
+                    // finish the sweep on the boxed path, same streams
+                    let mut boxed = cloud.demote(reference, Some(scope.to_vec()));
+                    csmc_loop(&mut boxed, model, cfg, seed, &mut master)
+                        .expect("boxed replay cannot mismatch");
+                    let k = boxed.select(&mut master);
+                    return boxed.particles.swap_remove(k).state;
+                }
+            }
         }
     }
+    let mut cloud = BoxedCloud::conditional(reference, scope, cfg.n_particles, n_obs);
+    csmc_loop(&mut cloud, model, cfg, seed, &mut master)
+        .expect("boxed replay cannot mismatch");
     let k = cloud.select(&mut master);
-    cloud.particles.swap_remove(k).trace
+    cloud.particles.swap_remove(k).state
+}
+
+/// The conditional filter loop, written once for both representations.
+/// Resumes from `cloud.step`, so a demoted cloud continues mid-sweep.
+fn csmc_loop<S: ParticleState>(
+    cloud: &mut ParticleCloud<S>,
+    model: &dyn Model,
+    cfg: &Csmc,
+    seed: u64,
+    master: &mut Xoshiro256pp,
+) -> Result<(), LayoutMismatch> {
+    while cloud.step < cloud.n_obs {
+        let t = cloud.step;
+        cloud.advance(model, seed, 1)?;
+        if t + 1 < cloud.n_obs && cloud.ess() < cfg.ess_threshold * cloud.len() as f64 {
+            // PGAS: pick the retained path's new ancestry from the
+            // pre-resampling generation…
+            let new_reference = if cfg.ancestor_sampling {
+                Some(cloud.ancestor_sample_reference(model, master))
+            } else {
+                None
+            };
+            cloud.resample(cfg.resampler, true, master);
+            // …and splice it in after the children forked, so they forked
+            // from the original generation (Lindsten et al. 2014, step 2b)
+            if let Some(reference) = new_reference {
+                cloud.particles[0].state = reference;
+            }
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -232,15 +487,19 @@ mod tests {
         vec![0.4, -0.1, 0.7, 0.2, -0.3, 0.5]
     }
 
-    #[test]
-    fn smc_recovers_analytic_evidence_within_two_percent() {
-        let y = demo_data();
-        let m = NormalNormal {
-            y: y.clone(),
+    fn demo_model() -> NormalNormal {
+        NormalNormal {
+            y: demo_data(),
             mu0: 0.0,
             tau0: 1.0,
             sigma: 1.0,
-        };
+        }
+    }
+
+    #[test]
+    fn smc_recovers_analytic_evidence_within_two_percent() {
+        let y = demo_data();
+        let m = demo_model();
         let want = analytic_log_evidence(&y, 0.0, 1.0, 1.0);
         let smc = Smc {
             n_particles: 4096,
@@ -248,6 +507,10 @@ mod tests {
         };
         let out = smc.run(&m, 42);
         assert_eq!(out.ess_trace.len(), y.len());
+        // the static model must have run typed the whole way
+        assert!(out.cloud.is_typed());
+        assert_eq!(out.typed_steps, y.len());
+        assert_eq!(out.demotions, 0);
         assert!(
             ((out.log_evidence - want) / want).abs() < 0.02,
             "SMC log-evidence {} vs analytic {want}",
@@ -256,14 +519,35 @@ mod tests {
     }
 
     #[test]
+    fn typed_and_boxed_smc_agree_bitwise() {
+        let m = demo_model();
+        let typed = Smc {
+            n_particles: 256,
+            ..Smc::default()
+        }
+        .run(&m, 91);
+        let boxed = Smc {
+            n_particles: 256,
+            use_typed: false,
+            ..Smc::default()
+        }
+        .run(&m, 91);
+        assert!(typed.cloud.is_typed());
+        assert!(!boxed.cloud.is_typed());
+        assert_eq!(typed.log_evidence.to_bits(), boxed.log_evidence.to_bits());
+        assert_eq!(typed.resamples, boxed.resamples);
+        let (lt, lb) = (typed.cloud.log_weights(), boxed.cloud.log_weights());
+        let vn = VarName::new("m");
+        for i in 0..256 {
+            assert_eq!(lt[i].to_bits(), lb[i].to_bits());
+            assert_eq!(typed.cloud.value_of(i, &vn), boxed.cloud.value_of(i, &vn));
+        }
+    }
+
+    #[test]
     fn smc_posterior_matches_conjugate_posterior() {
         let y = demo_data();
-        let m = NormalNormal {
-            y: y.clone(),
-            mu0: 0.0,
-            tau0: 1.0,
-            sigma: 1.0,
-        };
+        let m = demo_model();
         // conjugate posterior of m
         let n = y.len() as f64;
         let post_var = 1.0 / (1.0 + n);
@@ -290,12 +574,7 @@ mod tests {
 
     #[test]
     fn parallel_propagation_is_bitwise_deterministic() {
-        let m = NormalNormal {
-            y: demo_data(),
-            mu0: 0.0,
-            tau0: 1.0,
-            sigma: 1.0,
-        };
+        let m = demo_model();
         let run = |threads: usize| {
             let smc = Smc {
                 n_particles: 512,
@@ -311,16 +590,11 @@ mod tests {
             parallel.log_evidence.to_bits(),
             "evidence must be bitwise identical across thread counts"
         );
-        for (a, b) in serial
-            .cloud
-            .particles
-            .iter()
-            .zip(&parallel.cloud.particles)
-        {
-            assert_eq!(a.log_weight.to_bits(), b.log_weight.to_bits());
-            let ma = a.trace.get(&VarName::new("m")).unwrap().value.clone();
-            let mb = b.trace.get(&VarName::new("m")).unwrap().value.clone();
-            assert_eq!(ma, mb);
+        let vn = VarName::new("m");
+        let (ls, lp) = (serial.cloud.log_weights(), parallel.cloud.log_weights());
+        for i in 0..512 {
+            assert_eq!(ls[i].to_bits(), lp[i].to_bits());
+            assert_eq!(serial.cloud.value_of(i, &vn), parallel.cloud.value_of(i, &vn));
         }
         // and fully reproducible for the same seed
         let again = run(4);
@@ -332,32 +606,20 @@ mod tests {
         // Iterated CSMC on the conjugate model must traverse the
         // posterior of m: run a short PG chain by hand and check moments.
         let y = demo_data();
-        let m = NormalNormal {
-            y: y.clone(),
-            mu0: 0.0,
-            tau0: 1.0,
-            sigma: 1.0,
-        };
+        let m = demo_model();
         let n = y.len() as f64;
         let post_var = 1.0 / (1.0 + n);
         let post_mean = post_var * y.iter().sum::<f64>();
 
         let mut rng = Xoshiro256pp::seed_from_u64(2);
         let mut state = crate::model::init_trace(&m, &mut rng);
+        let template = TypedVarInfo::from_untyped(&state);
         let scope = [VarName::new("m")];
         let n_obs = Some(crate::particle::count_observes(&m, &state));
+        let cfg = Csmc::new(16);
         let mut draws = Vec::new();
         for it in 0..3000 {
-            state = csmc_sweep(
-                &m,
-                &state,
-                &scope,
-                16,
-                Resampler::Multinomial,
-                0.5,
-                rng.next_u64(),
-                n_obs,
-            );
+            state = csmc_sweep(&m, &state, &scope, &cfg, rng.next_u64(), n_obs, Some(&template));
             if it >= 200 {
                 draws.push(state.get(&VarName::new("m")).unwrap().value.as_f64().unwrap());
             }
@@ -370,6 +632,44 @@ mod tests {
         assert!(
             (stats::variance(&draws) - post_var).abs() < 0.06,
             "PG var {} vs {post_var}",
+            stats::variance(&draws)
+        );
+    }
+
+    #[test]
+    fn csmc_with_ancestor_sampling_targets_the_same_posterior() {
+        // PGAS must leave the same conditional posterior invariant; only
+        // the mixing speed differs. Same moment checks as the plain sweep.
+        let y = demo_data();
+        let m = demo_model();
+        let n = y.len() as f64;
+        let post_var = 1.0 / (1.0 + n);
+        let post_mean = post_var * y.iter().sum::<f64>();
+
+        let mut rng = Xoshiro256pp::seed_from_u64(17);
+        let mut state = crate::model::init_trace(&m, &mut rng);
+        let template = TypedVarInfo::from_untyped(&state);
+        let scope = [VarName::new("m")];
+        let n_obs = Some(crate::particle::count_observes(&m, &state));
+        let cfg = Csmc {
+            ancestor_sampling: true,
+            ..Csmc::new(16)
+        };
+        let mut draws = Vec::new();
+        for it in 0..2500 {
+            state = csmc_sweep(&m, &state, &scope, &cfg, rng.next_u64(), n_obs, Some(&template));
+            if it >= 200 {
+                draws.push(state.get(&VarName::new("m")).unwrap().value.as_f64().unwrap());
+            }
+        }
+        assert!(
+            (stats::mean(&draws) - post_mean).abs() < 0.06,
+            "PGAS mean {} vs {post_mean}",
+            stats::mean(&draws)
+        );
+        assert!(
+            (stats::variance(&draws) - post_var).abs() < 0.07,
+            "PGAS var {} vs {post_var}",
             stats::variance(&draws)
         );
     }

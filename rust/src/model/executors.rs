@@ -9,7 +9,7 @@ use crate::value::Value;
 use crate::varinfo::{flags, TypedVarInfo, UntypedVarInfo};
 use crate::varname::VarName;
 
-use super::TildeApi;
+use super::{Model, TildeApi};
 
 /// Draws missing variables from their priors into an [`UntypedVarInfo`].
 ///
@@ -124,14 +124,15 @@ impl<'a, R: RngCore> TildeApi<f64> for SampleExecutor<'a, R> {
 /// layout must be visit `i` of the model (checked with `debug_assert`).
 /// Each assume invlinks its coordinates (adding the Jacobian term) and
 /// scores the prior. Generic over `T` so the same executor computes plain
-/// values, forward duals and tape gradients.
+/// values, forward duals and tape gradients. Invlinks write straight into
+/// fixed-size destinations ([`bijector::invlink_slice`]); the only
+/// allocation per assume is the `Vec` an `assume_vec` must hand back.
 pub struct TypedExecutor<'a, T: Scalar> {
     tvi: &'a TypedVarInfo,
     theta: &'a [T],
     cursor: usize,
     acc: Accumulator<T>,
     ctx: Context,
-    buf: Vec<T>,
 }
 
 impl<'a> TypedExecutor<'a, f64> {
@@ -153,7 +154,6 @@ impl<'a, T: Scalar> TypedExecutor<'a, T> {
             cursor: 0,
             acc: Accumulator::new(ctx),
             ctx,
-            buf: Vec::with_capacity(8),
         }
     }
 
@@ -181,21 +181,18 @@ impl<'a, T: Scalar> TypedExecutor<'a, T> {
 impl<'a, T: Scalar> TildeApi<T> for TypedExecutor<'a, T> {
     fn assume(&mut self, vn: VarName, dist: &ScalarDist<T>) -> T {
         let slot = self.next_slot(&vn);
-        self.buf.clear();
         let y = &self.theta[slot.unc_offset..slot.unc_offset + slot.unc_len];
-        let mut out = std::mem::take(&mut self.buf);
-        let ladj = bijector::invlink(&slot.domain, y, &mut out);
-        let x = out[0];
-        self.buf = out;
-        self.acc.add_prior(dist.logpdf(x) + ladj);
-        x
+        let mut out = [T::constant(0.0)];
+        let ladj = bijector::invlink_slice(&slot.domain, y, &mut out);
+        self.acc.add_prior(dist.logpdf(out[0]) + ladj);
+        out[0]
     }
 
     fn assume_vec(&mut self, vn: VarName, dist: &VecDist<T>) -> Vec<T> {
         let slot = self.next_slot(&vn);
         let y = &self.theta[slot.unc_offset..slot.unc_offset + slot.unc_len];
-        let mut out = Vec::with_capacity(slot.cons_len);
-        let ladj = bijector::invlink(&slot.domain, y, &mut out);
+        let mut out = vec![T::constant(0.0); slot.cons_len];
+        let ladj = bijector::invlink_slice(&slot.domain, y, &mut out);
         self.acc.add_prior(dist.logpdf(&out) + ladj);
         out
     }
@@ -225,6 +222,294 @@ impl<'a, T: Scalar> TildeApi<T> for TypedExecutor<'a, T> {
     }
 
     fn add_prior_logp(&mut self, lp: T) {
+        self.acc.add_prior(lp);
+    }
+
+    fn reject(&mut self) {
+        self.acc.reject();
+    }
+
+    fn rejected(&self) -> bool {
+        self.acc.rejected()
+    }
+
+    fn context(&self) -> Context {
+        self.ctx
+    }
+}
+
+/// What counts as a bootstrap proposal during a typed replay run — the
+/// typed mirror of the boxed `ReplayExecutor`'s `scope` parameter, but
+/// resolved per *slot index* (one bitmask lookup) instead of per
+/// `VarName` subsumption test.
+#[derive(Clone, Copy, Debug)]
+pub enum ReplayScope<'a> {
+    /// Plain SMC: every assume is a bootstrap proposal whose prior cancels
+    /// in the importance weight.
+    Unscoped,
+    /// Conditional cloud (Particle-Gibbs): slot `i` is proposed iff
+    /// `mask[i]`; out-of-scope assumes locked in by the current window
+    /// contribute their prior term to the weight.
+    Mask(&'a [bool]),
+    /// Pure evaluation: nothing is proposed, so every in-window assume's
+    /// prior is scored — `log p(future latents, future obs | prefix)`,
+    /// the ancestor-sampling weight (and, under [`Context::Default`], the
+    /// full constrained-space joint).
+    Eval,
+}
+
+/// Outcome of one typed replay run.
+#[derive(Clone, Copy, Debug)]
+pub struct TypedReplayReport {
+    /// Context-weighted accumulator total: the incremental log-weight
+    /// under `Context::ObsWindow`, the full log-joint under
+    /// `Context::Default`.
+    pub delta_logw: f64,
+    /// Total observe statements the model visited.
+    pub obs_total: usize,
+    /// `false` when the model's visit sequence diverged from the frozen
+    /// layout (dynamic structure change): the run was aborted via
+    /// rejection, the trace buffers are garbage, and the caller must
+    /// restore a snapshot and fall back to the boxed path.
+    pub layout_ok: bool,
+}
+
+/// The typed particle fast path: replay-with-regenerate as a **cursor walk
+/// over forked [`TypedVarInfo`] buffers** — no hashing, no boxed values,
+/// no `AnyDist` clones. Semantically identical to
+/// [`crate::particle::ReplayExecutor`] (replay unflagged slots from the
+/// flat buffers, draw flagged slots fresh via `dist.sample` + link into
+/// both buffers, score only the `[lo, hi)` observation window, stamp the
+/// scored prefix `LOCKED`), and bitwise-identical for a fixed RNG stream:
+/// both executors read/write exactly the same `f64` values in the same
+/// order, so log-evidence and particle values agree to the last bit.
+///
+/// The one thing the boxed executor can do that this one cannot is absorb
+/// a *structure change* (a model visiting different variables than the
+/// layout recorded). The cursor walk detects that — wrong name, wrong
+/// domain shape, layout exhausted, or layout not fully consumed — and
+/// reports `layout_ok = false` instead of panicking; the particle cloud
+/// then demotes the sweep to the boxed path.
+pub struct TypedReplayExecutor<'a, R: RngCore> {
+    rng: &'a mut R,
+    tvi: &'a mut TypedVarInfo,
+    acc: Accumulator<f64>,
+    ctx: Context,
+    scope: ReplayScope<'a>,
+    lo: usize,
+    hi: usize,
+    cursor: usize,
+    obs_seen: usize,
+    layout_ok: bool,
+    locking_done: bool,
+}
+
+impl<'a, R: RngCore> TypedReplayExecutor<'a, R> {
+    pub fn new(
+        rng: &'a mut R,
+        tvi: &'a mut TypedVarInfo,
+        ctx: Context,
+        scope: ReplayScope<'a>,
+    ) -> Self {
+        let (lo, hi) = ctx.obs_window();
+        Self {
+            rng,
+            tvi,
+            acc: Accumulator::new(ctx),
+            ctx,
+            scope,
+            lo,
+            hi,
+            cursor: 0,
+            obs_seen: 0,
+            layout_ok: true,
+            // hi = 0: nothing scored yet → nothing to lock; hi = MAX is a
+            // non-particle context (full evaluation) → don't stamp locks.
+            locking_done: hi == 0 || hi == usize::MAX,
+        }
+    }
+
+    /// Run `model` once over `tvi` and report.
+    pub fn run(
+        model: &dyn Model,
+        rng: &'a mut R,
+        tvi: &'a mut TypedVarInfo,
+        ctx: Context,
+        scope: ReplayScope<'a>,
+    ) -> TypedReplayReport {
+        let mut exec = TypedReplayExecutor::new(rng, tvi, ctx, scope);
+        model.eval_f64(&mut exec);
+        exec.finalize()
+    }
+
+    fn finalize(mut self) -> TypedReplayReport {
+        // A run that ended with slots left unvisited changed structure
+        // (model shrank) — unless it was cut short by a genuine −∞
+        // rejection, which the boxed path tolerates identically.
+        if self.layout_ok && !self.acc.rejected() && self.cursor != self.tvi.slots().len() {
+            self.layout_ok = false;
+        }
+        if self.layout_ok && !self.locking_done {
+            // observe counter never reached `hi`: everything visited this
+            // run was scored by the window — lock it (mirrors the boxed
+            // executor's finalize).
+            for i in 0..self.cursor {
+                self.tvi.flag_slot(i, flags::LOCKED);
+            }
+        }
+        TypedReplayReport {
+            delta_logw: self.acc.total(),
+            obs_total: self.obs_seen,
+            layout_ok: self.layout_ok,
+        }
+    }
+
+    /// Cursor step: the next slot must carry this variable with a
+    /// structurally compatible domain. On divergence the run is poisoned
+    /// (rejected + `layout_ok = false`) and every later tilde statement
+    /// short-circuits to shape-correct dummies.
+    #[inline]
+    fn next_slot(&mut self, vn: &VarName, domain: &crate::dist::Domain) -> Option<usize> {
+        if !self.layout_ok {
+            return None;
+        }
+        let i = self.cursor;
+        let ok = match self.tvi.slots().get(i) {
+            Some(s) => s.vn == *vn && s.domain.compatible(domain),
+            None => false,
+        };
+        if ok {
+            self.cursor += 1;
+            Some(i)
+        } else {
+            self.layout_ok = false;
+            self.acc.reject();
+            None
+        }
+    }
+
+    /// Count an observe statement; true if it falls inside the window.
+    /// Reaching the window end stamps every slot visited so far `LOCKED`
+    /// (for a static layout, visit order *is* slot order, so the scored
+    /// prefix is exactly `0..cursor`).
+    #[inline]
+    fn note_obs(&mut self) -> bool {
+        let i = self.obs_seen;
+        self.obs_seen += 1;
+        if self.obs_seen == self.hi && !self.locking_done {
+            for k in 0..self.cursor {
+                self.tvi.flag_slot(k, flags::LOCKED);
+            }
+            self.locking_done = true;
+        }
+        i >= self.lo && i < self.hi
+    }
+
+    /// Score an assume's prior term — same rule as the boxed executor: an
+    /// assume visited inside the window contributes to the weight iff it
+    /// is *not* a proposal draw; everything else goes to the (possibly
+    /// zero-weighted) prior side, which still triggers −∞ rejection.
+    #[inline]
+    fn score_assume(&mut self, si: usize, lp: f64) {
+        let in_window = self.obs_seen >= self.lo && self.obs_seen < self.hi;
+        let proposed = match self.scope {
+            ReplayScope::Unscoped => true,
+            ReplayScope::Mask(m) => m[si],
+            ReplayScope::Eval => false,
+        };
+        if in_window && !proposed {
+            self.acc.add_lik(lp);
+        } else {
+            self.acc.add_prior(lp);
+        }
+    }
+}
+
+impl<'a, R: RngCore> TildeApi<f64> for TypedReplayExecutor<'a, R> {
+    fn assume(&mut self, vn: VarName, dist: &ScalarDist<f64>) -> f64 {
+        let domain = dist.domain();
+        let si = match self.next_slot(&vn, &domain) {
+            Some(i) => i,
+            None => return 0.0,
+        };
+        let x = if self.tvi.is_slot_flagged(si, flags::RESAMPLE) {
+            let x = dist.sample(self.rng);
+            self.tvi.write_slot_f64(si, x, &domain);
+            self.tvi.clear_slot_flag(si, flags::RESAMPLE);
+            x
+        } else {
+            self.tvi.constrained[self.tvi.slots()[si].cons_offset]
+        };
+        self.score_assume(si, dist.logpdf(x));
+        x
+    }
+
+    fn assume_vec(&mut self, vn: VarName, dist: &VecDist<f64>) -> Vec<f64> {
+        let domain = dist.domain();
+        let si = match self.next_slot(&vn, &domain) {
+            Some(i) => i,
+            // shape-correct dummy: the (rejected) model body may index it
+            None => return vec![0.0; domain.constrained_dim()],
+        };
+        let (co, cl) = {
+            let s = &self.tvi.slots()[si];
+            (s.cons_offset, s.cons_len)
+        };
+        let xs = if self.tvi.is_slot_flagged(si, flags::RESAMPLE) {
+            let xs = dist.sample(self.rng);
+            self.tvi.write_slot_vec(si, &xs, &domain);
+            self.tvi.clear_slot_flag(si, flags::RESAMPLE);
+            xs
+        } else {
+            self.tvi.constrained[co..co + cl].to_vec()
+        };
+        self.score_assume(si, dist.logpdf(&xs));
+        xs
+    }
+
+    fn assume_int(&mut self, vn: VarName, dist: &DiscreteDist<f64>) -> i64 {
+        let domain = dist.domain();
+        let si = match self.next_slot(&vn, &domain) {
+            Some(i) => i,
+            None => return 0,
+        };
+        let k = if self.tvi.is_slot_flagged(si, flags::RESAMPLE) {
+            let k = dist.sample(self.rng);
+            self.tvi.write_slot_int(si, k);
+            self.tvi.clear_slot_flag(si, flags::RESAMPLE);
+            k
+        } else {
+            self.tvi.discrete[self.tvi.slots()[si].disc_offset]
+        };
+        self.score_assume(si, dist.logpmf(k));
+        k
+    }
+
+    fn observe(&mut self, dist: &ScalarDist<f64>, obs: f64) {
+        if self.note_obs() {
+            self.acc.add_lik(dist.logpdf(obs));
+        }
+    }
+
+    fn observe_int(&mut self, dist: &DiscreteDist<f64>, obs: i64) {
+        if self.note_obs() {
+            self.acc.add_lik(dist.logpmf(obs));
+        }
+    }
+
+    fn observe_vec(&mut self, dist: &VecDist<f64>, obs: &[f64]) {
+        if self.note_obs() {
+            self.acc.add_lik(dist.logpdf(obs));
+        }
+    }
+
+    fn add_obs_logp(&mut self, lp: f64) {
+        if self.note_obs() {
+            self.acc.add_lik(lp);
+        }
+    }
+
+    fn add_prior_logp(&mut self, lp: f64) {
         self.acc.add_prior(lp);
     }
 

@@ -2,10 +2,33 @@
 //!
 //! This is the subsystem the paper's trace machinery was built to enable
 //! (§3.3: the `del`/`RESAMPLE` flag exists for particle samplers): a
-//! [`ParticleCloud`] holds N execution traces ([`UntypedVarInfo`]) with
-//! normalized log-weights and advances them one *observe statement* at a
-//! time by whole-body re-execution under [`Context::ObsWindow`] — the
-//! replay-with-regenerate mode implemented by [`exec::ReplayExecutor`].
+//! [`ParticleCloud`] holds N execution traces with normalized log-weights
+//! and advances them one *observe statement* at a time by whole-body
+//! re-execution under [`Context::ObsWindow`].
+//!
+//! The cloud is **generic over its particle representation** via
+//! [`ParticleState`], with two implementations:
+//!
+//! - [`TypedVarInfo`] — the **typed fast path**: every particle is a fork
+//!   of one `Arc`-shared layout (three flat buffers + a flag byte per
+//!   slot), propagation is a cursor walk
+//!   ([`crate::model::executors::TypedReplayExecutor`]), and resampling
+//!   copies buffers through a reusable snapshot ring — no hashing, no
+//!   boxed values, no per-visit allocation. A dynamic structure change is
+//!   detected per particle (`layout_ok`), the pre-step snapshots are
+//!   restored, and the caller demotes the cloud to…
+//! - [`UntypedVarInfo`] — the **boxed fallback**: replay through the
+//!   hash-addressed dynamic trace ([`exec::ReplayExecutor`]), which
+//!   absorbs any structure change. This is the only representation that
+//!   can *discover* a model's shape, so every sweep starts here and
+//!   promotes ([`ParticleCloud::promote`]) once the first full run shows a
+//!   stable layout.
+//!
+//! Both representations are **bitwise equivalent** for a fixed seed: they
+//! read and write the same `f64` values in the same order and share the
+//! `(seed, step, index)` RNG stream discipline, so log-evidence, weights
+//! and particle values agree to the last bit — the typed path is purely a
+//! mechanical specialization, exactly the paper's §2.2 argument.
 //!
 //! Per step the cloud:
 //! 1. **propagates** every particle in parallel ([`parallel_for_each_mut`];
@@ -15,7 +38,7 @@
 //! 2. **reweights** by the window's incremental log-likelihood and folds
 //!    the normalizer into a running log-marginal-likelihood (evidence)
 //!    estimate `log Ẑ = Σ_t log Σ_i W_i·w_i^{(t)}`;
-//! 3. optionally **resamples** (ESS-triggered) by forking ancestor traces
+//! 3. optionally **resamples** (ESS-triggered) by forking ancestor states
 //!    and flagging each fork's unscored suffix for regeneration, which
 //!    restores particle diversity exactly the way Turing's `Trace` copy +
 //!    `del` flag does.
@@ -23,7 +46,10 @@
 //! A cloud can be *scoped* to a subset of variables (Particle-Gibbs /
 //! conditional SMC): out-of-scope variables are never flagged, so every
 //! replay reproduces them bit-for-bit and the cloud targets their full
-//! conditional.
+//! conditional. For ancestor sampling (PGAS),
+//! [`ParticleCloud::ancestor_sample_reference`] splices the reference's
+//! unscored future onto each particle's retained prefix and scores it
+//! with a pure evaluation replay.
 
 pub mod exec;
 pub mod resample;
@@ -34,25 +60,235 @@ pub use resample::{ess, normalize_log_weights, Resampler};
 use rand_core::RngCore;
 
 use crate::context::Context;
+use crate::model::executors::{ReplayScope, TypedReplayExecutor};
 use crate::model::Model;
 use crate::util::math;
 use crate::util::rng::Xoshiro256pp;
 use crate::util::threadpool::parallel_for_each_mut;
-use crate::varinfo::{flags, UntypedVarInfo};
+use crate::varinfo::{flags, TraceSnapshot, TypedVarInfo, UntypedVarInfo};
 use crate::varname::VarName;
 
-/// One weighted execution trace.
+/// Outcome of one particle propagation.
+#[derive(Clone, Copy, Debug)]
+pub struct StepReport {
+    /// Incremental log-weight of this particle for the step.
+    pub delta_logw: f64,
+    /// Total observe statements the model visited.
+    pub obs_total: usize,
+    /// `false` when the particle's structure diverged from its frozen
+    /// layout (typed path only) — the cloud must demote.
+    pub layout_ok: bool,
+}
+
+/// Marker error: a typed cloud hit a dynamic structure change mid-sweep.
+/// The cloud restored its pre-step state; demote and retry the step.
+#[derive(Clone, Copy, Debug)]
+pub struct LayoutMismatch;
+
+/// One representation of a particle's execution trace. The cloud drives
+/// propagation, forking and flag sweeps exclusively through this trait, so
+/// the SMC/CSMC algorithms are written once for both the typed fast path
+/// and the boxed fallback.
+pub trait ParticleState: Clone + Send + std::fmt::Debug {
+    /// Scope restriction for conditional clouds: variable names for the
+    /// boxed path, a per-slot bitmask for the typed path.
+    type Scope: Clone + Send + Sync + std::fmt::Debug;
+    /// Buffers-only copy of the per-particle state (the snapshot-ring
+    /// element used for resampling copies and mismatch rollback).
+    type Snapshot: Default + Clone + Send + std::fmt::Debug;
+    /// Whether propagation can fail on a dynamic structure change (typed
+    /// path). When `false`, `advance` skips the pre-step snapshot pass.
+    const CAN_MISMATCH: bool;
+
+    /// Re-run the model over observation window `[lo, hi)`: replay stored
+    /// values, regenerate `RESAMPLE`-flagged ones, lock the scored prefix.
+    fn propagate(
+        &mut self,
+        model: &dyn Model,
+        rng: &mut Xoshiro256pp,
+        lo: usize,
+        hi: usize,
+        scope: Option<&Self::Scope>,
+    ) -> StepReport;
+
+    /// Save the per-particle state into a ring slot (reuses allocations).
+    fn save_into(&self, snap: &mut Self::Snapshot);
+
+    /// Restore the per-particle state from a ring slot.
+    fn load_from(&mut self, snap: &Self::Snapshot);
+
+    /// `RESAMPLE`-flag every unscored (non-`LOCKED`) in-scope variable —
+    /// the regeneration sweep applied to resampling forks.
+    fn flag_unscored(&mut self, scope: Option<&Self::Scope>);
+
+    /// Clear all particle flags (`RESAMPLE | LOCKED`) — fresh-sweep reset.
+    fn clear_particle_flags(&mut self);
+
+    /// Copy `reference`'s values into every unscored in-scope variable of
+    /// `self`: the ancestor-sampling hybrid (my prefix + their future).
+    fn overlay_unscored_from(&mut self, reference: &Self, scope: Option<&Self::Scope>);
+
+    /// `log p(future latents, future observations | prefix)`: pure
+    /// evaluation of window `[lo, n_obs)` with in-window assume priors
+    /// scored. Mutates replay bookkeeping — call on a scratch clone.
+    fn future_logp(&mut self, model: &dyn Model, lo: usize, n_obs: usize) -> f64;
+}
+
+impl ParticleState for UntypedVarInfo {
+    type Scope = Vec<VarName>;
+    type Snapshot = UntypedVarInfo;
+    const CAN_MISMATCH: bool = false;
+
+    fn propagate(
+        &mut self,
+        model: &dyn Model,
+        rng: &mut Xoshiro256pp,
+        lo: usize,
+        hi: usize,
+        scope: Option<&Self::Scope>,
+    ) -> StepReport {
+        let rep = ReplayExecutor::run(
+            model,
+            rng,
+            self,
+            Context::ObsWindow { lo, hi },
+            scope.map(|s| s.as_slice()),
+        );
+        StepReport {
+            delta_logw: rep.delta_logw,
+            obs_total: rep.obs_total,
+            layout_ok: true,
+        }
+    }
+
+    fn save_into(&self, snap: &mut Self::Snapshot) {
+        snap.clone_from(self);
+    }
+
+    fn load_from(&mut self, snap: &Self::Snapshot) {
+        self.clone_from(snap);
+    }
+
+    fn flag_unscored(&mut self, scope: Option<&Self::Scope>) {
+        self.flag_unlocked(scope.map(|s| s.as_slice()), flags::RESAMPLE);
+    }
+
+    fn clear_particle_flags(&mut self) {
+        self.clear_flag_all(flags::RESAMPLE | flags::LOCKED);
+    }
+
+    fn overlay_unscored_from(&mut self, reference: &Self, scope: Option<&Self::Scope>) {
+        for i in 0..reference.len() {
+            let rec = reference.record(i);
+            let in_scope = match scope {
+                None => true,
+                Some(vars) => vars.iter().any(|v| rec.vn.subsumed_by(v)),
+            };
+            if !in_scope {
+                continue;
+            }
+            let unlocked = self
+                .get(&rec.vn)
+                .map(|mine| mine.flags & flags::LOCKED == 0);
+            if unlocked == Some(true) {
+                self.set_value(&rec.vn, rec.value.clone());
+            }
+        }
+    }
+
+    fn future_logp(&mut self, model: &dyn Model, lo: usize, n_obs: usize) -> f64 {
+        // An empty scope means *nothing* counts as a proposal, so every
+        // in-window assume's prior is scored: pure evaluation. Nothing is
+        // flagged, so the RNG is never consumed (seed is arbitrary).
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let empty: &[VarName] = &[];
+        ReplayExecutor::run(
+            model,
+            &mut rng,
+            self,
+            Context::ObsWindow { lo, hi: n_obs },
+            Some(empty),
+        )
+        .delta_logw
+    }
+}
+
+impl ParticleState for TypedVarInfo {
+    type Scope = std::sync::Arc<[bool]>;
+    type Snapshot = TraceSnapshot;
+    const CAN_MISMATCH: bool = true;
+
+    fn propagate(
+        &mut self,
+        model: &dyn Model,
+        rng: &mut Xoshiro256pp,
+        lo: usize,
+        hi: usize,
+        scope: Option<&Self::Scope>,
+    ) -> StepReport {
+        let replay_scope = match scope {
+            Some(mask) => ReplayScope::Mask(&mask[..]),
+            None => ReplayScope::Unscoped,
+        };
+        let rep = TypedReplayExecutor::run(
+            model,
+            rng,
+            self,
+            Context::ObsWindow { lo, hi },
+            replay_scope,
+        );
+        StepReport {
+            delta_logw: rep.delta_logw,
+            obs_total: rep.obs_total,
+            layout_ok: rep.layout_ok,
+        }
+    }
+
+    fn save_into(&self, snap: &mut Self::Snapshot) {
+        snap.copy_from(self);
+    }
+
+    fn load_from(&mut self, snap: &Self::Snapshot) {
+        self.restore(snap);
+    }
+
+    fn flag_unscored(&mut self, scope: Option<&Self::Scope>) {
+        self.flag_unlocked_slots(scope.map(|m| &m[..]), flags::RESAMPLE);
+    }
+
+    fn clear_particle_flags(&mut self) {
+        self.clear_all_slot_flags(flags::RESAMPLE | flags::LOCKED);
+    }
+
+    fn overlay_unscored_from(&mut self, reference: &Self, scope: Option<&Self::Scope>) {
+        self.overlay_unscored_slots_from(reference, scope.map(|m| &m[..]));
+    }
+
+    fn future_logp(&mut self, model: &dyn Model, lo: usize, n_obs: usize) -> f64 {
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        TypedReplayExecutor::run(
+            model,
+            &mut rng,
+            self,
+            Context::ObsWindow { lo, hi: n_obs },
+            ReplayScope::Eval,
+        )
+        .delta_logw
+    }
+}
+
+/// One weighted particle.
 #[derive(Clone, Debug)]
-pub struct Particle {
-    /// The trace (complete model execution; replayed/regenerated per step).
-    pub trace: UntypedVarInfo,
+pub struct Particle<S: ParticleState> {
+    /// The execution-trace state (typed buffers or boxed trace).
+    pub state: S,
     /// Normalized log-weight (log-sum-exp over the cloud ≈ 0).
     pub log_weight: f64,
     /// Last step's incremental log-likelihood.
     pub delta: f64,
-    /// Retained-prefix record count after the last advance: records at
-    /// index ≥ `prefix` have not been scored and may be regenerated.
-    pub prefix: usize,
+    /// Scratch written by `advance`: whether the last propagation kept the
+    /// frozen layout (always `true` on the boxed path).
+    pub layout_ok: bool,
 }
 
 /// Count the observe statements `model` visits when replaying `trace`
@@ -81,10 +317,22 @@ pub fn particle_seed(seed: u64, step: usize, index: usize) -> u64 {
     x ^ (x >> 31)
 }
 
-/// A cloud of weighted particles stepping through a model's observations.
+/// Per-slot scope bitmask for a typed layout: `mask[i]` ⇔ slot `i`'s
+/// variable is subsumed by one of `scope` — computed once per cloud so the
+/// hot cursor walk does a single indexed load instead of name subsumption.
+pub fn scope_mask(tvi: &TypedVarInfo, scope: &[VarName]) -> std::sync::Arc<[bool]> {
+    tvi.slots()
+        .iter()
+        .map(|s| scope.iter().any(|v| s.vn.subsumed_by(v)))
+        .collect::<Vec<bool>>()
+        .into()
+}
+
+/// A cloud of weighted particles stepping through a model's observations,
+/// generic over the particle representation (see module docs).
 #[derive(Clone, Debug)]
-pub struct ParticleCloud {
-    pub particles: Vec<Particle>,
+pub struct ParticleCloud<S: ParticleState> {
+    pub particles: Vec<Particle<S>>,
     /// Running log-marginal-likelihood (evidence) estimate.
     pub log_evidence: f64,
     /// Next observe index to score (completed steps so far).
@@ -93,94 +341,18 @@ pub struct ParticleCloud {
     pub n_obs: usize,
     /// Restrict regeneration to these variables (Particle-Gibbs scope);
     /// `None` = every variable participates (plain SMC).
-    pub scope: Option<Vec<VarName>>,
+    pub scope: Option<S::Scope>,
+    /// Snapshot ring: one buffers-only copy per particle, reused by
+    /// resampling forks and (typed path) mismatch rollback.
+    snapshots: Vec<S::Snapshot>,
 }
 
-impl ParticleCloud {
-    /// Bootstrap initialization: N empty traces, each populated by one
-    /// prior run (window `[0,0)` scores nothing). Deterministic in `seed`.
-    pub fn from_prior(model: &dyn Model, n: usize, seed: u64, threads: usize) -> Self {
-        assert!(n >= 2, "a particle cloud needs at least 2 particles");
-        let mut particles: Vec<Particle> = (0..n)
-            .map(|_| Particle {
-                trace: UntypedVarInfo::new(),
-                log_weight: -(n as f64).ln(),
-                delta: 0.0,
-                prefix: 0,
-            })
-            .collect();
-        let mut n_obs_per: Vec<usize> = vec![0; n];
-        {
-            let n_obs_slots = std::sync::Mutex::new(&mut n_obs_per);
-            parallel_for_each_mut(threads, &mut particles, |i, p| {
-                let mut rng = Xoshiro256pp::seed_from_u64(particle_seed(seed, 0, i));
-                let rep = ReplayExecutor::run(
-                    model,
-                    &mut rng,
-                    &mut p.trace,
-                    Context::ObsWindow { lo: 0, hi: 0 },
-                    None,
-                );
-                p.prefix = rep.prefix_records;
-                n_obs_slots.lock().unwrap()[i] = rep.obs_total;
-            });
-        }
-        let n_obs = n_obs_per.into_iter().max().unwrap_or(0);
-        ParticleCloud {
-            particles,
-            log_evidence: 0.0,
-            step: 0,
-            n_obs,
-            scope: None,
-        }
-    }
+/// The boxed-fallback cloud (hash-addressed traces; absorbs any model).
+pub type BoxedCloud = ParticleCloud<UntypedVarInfo>;
+/// The typed fast-path cloud (forked flat-buffer traces, shared layout).
+pub type TypedCloud = ParticleCloud<TypedVarInfo>;
 
-    /// Conditional (CSMC) initialization for Particle-Gibbs: particle 0 is
-    /// the retained reference trajectory; particles 1..n fork it with all
-    /// `scope` variables flagged, so the first advance regenerates them
-    /// from the prior while out-of-scope variables replay exactly.
-    ///
-    /// `n_obs` is the model's observe-statement count; pass `None` to
-    /// probe it with one scratch replay, or `Some` (from
-    /// [`count_observes`], computed once) when sweeping repeatedly.
-    pub fn conditional(
-        model: &dyn Model,
-        reference: &UntypedVarInfo,
-        scope: &[VarName],
-        n: usize,
-        seed: u64,
-        n_obs: Option<usize>,
-    ) -> Self {
-        assert!(n >= 2, "conditional SMC needs at least 2 particles");
-        assert!(!scope.is_empty(), "conditional SMC needs a variable scope");
-        let _ = seed;
-        let log_w0 = -(n as f64).ln();
-        let mut particles = Vec::with_capacity(n);
-        for j in 0..n {
-            let mut trace = reference.clone();
-            // fresh sweep: no record is scored yet, and the reference must
-            // replay exactly — scrub stale particle flags either way
-            trace.clear_flag_all(flags::RESAMPLE | flags::LOCKED);
-            if j > 0 {
-                trace.flag_suffix(0, Some(scope), flags::RESAMPLE);
-            }
-            particles.push(Particle {
-                trace,
-                log_weight: log_w0,
-                delta: 0.0,
-                prefix: 0,
-            });
-        }
-        let n_obs = n_obs.unwrap_or_else(|| count_observes(model, reference));
-        ParticleCloud {
-            particles,
-            log_evidence: 0.0,
-            step: 0,
-            n_obs,
-            scope: Some(scope.to_vec()),
-        }
-    }
-
+impl<S: ParticleState> ParticleCloud<S> {
     pub fn len(&self) -> usize {
         self.particles.len()
     }
@@ -200,27 +372,59 @@ impl ParticleCloud {
         ess(&self.weights())
     }
 
+    fn ensure_ring(&mut self) {
+        if self.snapshots.len() != self.particles.len() {
+            self.snapshots
+                .resize_with(self.particles.len(), Default::default);
+        }
+    }
+
+    /// Save every particle's state into the snapshot ring.
+    fn save_all(&mut self) {
+        self.ensure_ring();
+        for (p, snap) in self.particles.iter().zip(self.snapshots.iter_mut()) {
+            p.state.save_into(snap);
+        }
+    }
+
     /// Propagate every particle through the next observe window, update
     /// weights and the running evidence estimate. Returns the step's
     /// log-normalizer `log Σ_i W_i·w_i`.
-    pub fn advance(&mut self, model: &dyn Model, seed: u64, threads: usize) -> f64 {
+    ///
+    /// On the typed path a dynamic structure change in *any* particle
+    /// aborts the step: every particle is rolled back to its pre-step
+    /// snapshot, weights/evidence/step are untouched, and
+    /// [`LayoutMismatch`] tells the caller to demote to the boxed path and
+    /// retry the same step (whose per-particle RNG streams are derived
+    /// from `(seed, step, index)`, so the retry is exactly the run a
+    /// boxed-only sweep would have made). The boxed path never fails.
+    pub fn advance(
+        &mut self,
+        model: &dyn Model,
+        seed: u64,
+        threads: usize,
+    ) -> Result<f64, LayoutMismatch> {
         assert!(self.step < self.n_obs, "cloud already consumed all observations");
+        if S::CAN_MISMATCH {
+            self.save_all();
+        }
         let (lo, hi) = (self.step, self.step + 1);
         let step_for_seed = self.step + 1; // 0 is the init run
-        let scope = self.scope.clone();
+        let scope = self.scope.as_ref();
         parallel_for_each_mut(threads, &mut self.particles, |i, p| {
             let mut rng =
                 Xoshiro256pp::seed_from_u64(particle_seed(seed, step_for_seed, i));
-            let rep = ReplayExecutor::run(
-                model,
-                &mut rng,
-                &mut p.trace,
-                Context::ObsWindow { lo, hi },
-                scope.as_deref(),
-            );
+            let rep = p.state.propagate(model, &mut rng, lo, hi, scope);
             p.delta = rep.delta_logw;
-            p.prefix = rep.prefix_records;
+            p.layout_ok = rep.layout_ok;
         });
+        if S::CAN_MISMATCH && self.particles.iter().any(|p| !p.layout_ok) {
+            for (p, snap) in self.particles.iter_mut().zip(self.snapshots.iter()) {
+                p.state.load_from(snap);
+                p.layout_ok = true;
+            }
+            return Err(LayoutMismatch);
+        }
         // serial reduction (index order → deterministic)
         let logw_new: Vec<f64> = self
             .particles
@@ -241,14 +445,17 @@ impl ParticleCloud {
             }
         }
         self.step += 1;
-        lz_step
+        Ok(lz_step)
     }
 
     /// Fork a new generation from ancestors drawn by `resampler`; children
     /// get uniform weights and their unscored suffix flagged for
     /// regeneration (scope-restricted when the cloud is conditional).
     /// With `conditional`, particle 0's ancestor is pinned to the
-    /// reference (index 0) and its trace is forked unflagged.
+    /// reference (index 0) and its state is forked unflagged.
+    ///
+    /// Forks are buffers-only copies through the snapshot ring: no new
+    /// allocations on the typed path once the ring exists.
     pub fn resample<R: RngCore>(&mut self, resampler: Resampler, conditional: bool, rng: &mut R) {
         let n = self.len();
         let weights = self.weights();
@@ -256,27 +463,28 @@ impl ParticleCloud {
         if conditional {
             ancestors[0] = 0;
         }
-        let scope = self.scope.clone();
+        self.fork_generation(&ancestors, conditional);
+    }
+
+    /// Replace the generation by forks of `ancestors[j]` (see `resample`).
+    pub fn fork_generation(&mut self, ancestors: &[usize], conditional: bool) {
+        assert_eq!(ancestors.len(), self.len());
+        self.save_all();
+        let n = self.len();
+        let deltas: Vec<f64> = self.particles.iter().map(|p| p.delta).collect();
         let log_w0 = -(n as f64).ln();
-        let new: Vec<Particle> = ancestors
-            .iter()
-            .enumerate()
-            .map(|(j, &a)| {
-                let src = &self.particles[a];
-                let mut trace = src.trace.clone();
-                if !(conditional && j == 0) {
-                    // regenerate everything not yet scored (scope-bounded)
-                    trace.flag_unlocked(scope.as_deref(), flags::RESAMPLE);
-                }
-                Particle {
-                    trace,
-                    log_weight: log_w0,
-                    delta: src.delta,
-                    prefix: src.prefix,
-                }
-            })
-            .collect();
-        self.particles = new;
+        let scope = self.scope.as_ref();
+        let snaps = &self.snapshots;
+        for (j, p) in self.particles.iter_mut().enumerate() {
+            let a = ancestors[j];
+            p.state.load_from(&snaps[a]);
+            if !(conditional && j == 0) {
+                // regenerate everything not yet scored (scope-bounded)
+                p.state.flag_unscored(scope);
+            }
+            p.log_weight = log_w0;
+            p.delta = deltas[a];
+        }
     }
 
     /// Resample only when ESS drops below `threshold_frac · N`. Returns
@@ -302,6 +510,233 @@ impl ParticleCloud {
         use crate::util::rng::Rng as _;
         rng.categorical(&self.weights())
     }
+
+    /// Ancestor sampling (PGAS; Lindsten, Jordan & Schön 2014): for each
+    /// particle, splice the reference's unscored future onto its retained
+    /// prefix, weight by `W_i · p(future | prefix_i)`, and draw the
+    /// retained path's new ancestry. Returns the new reference state
+    /// (ancestor prefix + reference future, unflagged); assign it to
+    /// particle 0 **after** the ordinary conditional resampling pass, so
+    /// the other children still fork from the original generation.
+    ///
+    /// Costs one pure-evaluation replay per particle; serial by design so
+    /// results stay deterministic.
+    pub fn ancestor_sample_reference<R: RngCore>(
+        &self,
+        model: &dyn Model,
+        rng: &mut R,
+    ) -> S {
+        let scope = self.scope.as_ref();
+        let reference = &self.particles[0].state;
+        let mut logw = Vec::with_capacity(self.len());
+        for p in &self.particles {
+            let mut hybrid = p.state.clone();
+            hybrid.overlay_unscored_from(reference, scope);
+            let future = hybrid.future_logp(model, self.step, self.n_obs);
+            logw.push(p.log_weight + future);
+        }
+        let (probs, lse) = normalize_log_weights(&logw);
+        let a0 = if lse == f64::NEG_INFINITY {
+            0 // fully degenerate: keep the current ancestry
+        } else {
+            use crate::util::rng::Rng as _;
+            rng.categorical(&probs)
+        };
+        let mut new_reference = self.particles[a0].state.clone();
+        new_reference.overlay_unscored_from(reference, scope);
+        new_reference
+    }
+}
+
+impl BoxedCloud {
+    /// Bootstrap initialization: N empty traces, each populated by one
+    /// prior run (window `[0,0)` scores nothing). Deterministic in `seed`.
+    /// Always boxed — the first run is what *discovers* the layout; call
+    /// [`TypedCloud::promote`] afterwards to move onto the fast path.
+    pub fn from_prior(model: &dyn Model, n: usize, seed: u64, threads: usize) -> Self {
+        assert!(n >= 2, "a particle cloud needs at least 2 particles");
+        let mut particles: Vec<Particle<UntypedVarInfo>> = (0..n)
+            .map(|_| Particle {
+                state: UntypedVarInfo::new(),
+                log_weight: -(n as f64).ln(),
+                delta: 0.0,
+                layout_ok: true,
+            })
+            .collect();
+        let mut n_obs_per: Vec<usize> = vec![0; n];
+        {
+            let n_obs_slots = std::sync::Mutex::new(&mut n_obs_per);
+            parallel_for_each_mut(threads, &mut particles, |i, p| {
+                let mut rng = Xoshiro256pp::seed_from_u64(particle_seed(seed, 0, i));
+                let rep = ReplayExecutor::run(
+                    model,
+                    &mut rng,
+                    &mut p.state,
+                    Context::ObsWindow { lo: 0, hi: 0 },
+                    None,
+                );
+                n_obs_slots.lock().unwrap()[i] = rep.obs_total;
+            });
+        }
+        let n_obs = n_obs_per.into_iter().max().unwrap_or(0);
+        ParticleCloud {
+            particles,
+            log_evidence: 0.0,
+            step: 0,
+            n_obs,
+            scope: None,
+            snapshots: Vec::new(),
+        }
+    }
+
+    /// Conditional (CSMC) initialization for Particle-Gibbs: particle 0 is
+    /// the retained reference trajectory; particles 1..n fork it with all
+    /// `scope` variables flagged, so the first advance regenerates them
+    /// from the prior while out-of-scope variables replay exactly.
+    ///
+    /// `n_obs` is the model's observe-statement count (see
+    /// [`count_observes`], computed once when sweeping repeatedly).
+    pub fn conditional(
+        reference: &UntypedVarInfo,
+        scope: &[VarName],
+        n: usize,
+        n_obs: usize,
+    ) -> Self {
+        assert!(n >= 2, "conditional SMC needs at least 2 particles");
+        assert!(!scope.is_empty(), "conditional SMC needs a variable scope");
+        let log_w0 = -(n as f64).ln();
+        let mut particles = Vec::with_capacity(n);
+        for j in 0..n {
+            let mut state = reference.clone();
+            // fresh sweep: no record is scored yet, and the reference must
+            // replay exactly — scrub stale particle flags either way
+            state.clear_flag_all(flags::RESAMPLE | flags::LOCKED);
+            if j > 0 {
+                state.flag_suffix(0, Some(scope), flags::RESAMPLE);
+            }
+            particles.push(Particle {
+                state,
+                log_weight: log_w0,
+                delta: 0.0,
+                layout_ok: true,
+            });
+        }
+        ParticleCloud {
+            particles,
+            log_evidence: 0.0,
+            step: 0,
+            n_obs,
+            scope: Some(scope.to_vec()),
+            snapshots: Vec::new(),
+        }
+    }
+}
+
+impl TypedCloud {
+    /// Specialize a boxed cloud onto the typed fast path after its first
+    /// full run: freeze particle 0's structure into a shared layout and
+    /// refill every particle's buffers from its boxed trace. Returns
+    /// `None` when any particle's structure disagrees (the model is
+    /// dynamic *across particles* — stay boxed). Also returns the boxed
+    /// template kept for demotion/conversion.
+    pub fn promote(boxed: &BoxedCloud) -> Option<(TypedCloud, UntypedVarInfo)> {
+        let template = boxed.particles.first()?.state.clone();
+        if template.is_empty() {
+            return None; // nothing traced: nothing to specialize
+        }
+        let layout = TypedVarInfo::from_untyped(&template);
+        let mask = boxed.scope.as_ref().map(|vars| scope_mask(&layout, vars));
+        let mut particles = Vec::with_capacity(boxed.len());
+        for p in &boxed.particles {
+            let state = layout.refill_from_untyped(&p.state)?;
+            particles.push(Particle {
+                state,
+                log_weight: p.log_weight,
+                delta: p.delta,
+                layout_ok: true,
+            });
+        }
+        Some((
+            ParticleCloud {
+                particles,
+                log_evidence: boxed.log_evidence,
+                step: boxed.step,
+                n_obs: boxed.n_obs,
+                scope: mask,
+                snapshots: Vec::new(),
+            },
+            template,
+        ))
+    }
+
+    /// Typed conditional (CSMC) cloud: refill `template`'s layout from the
+    /// boxed `reference` trajectory, then fork it N times with all
+    /// in-scope slots flagged on particles 1..n (particle 0 replays the
+    /// reference exactly). `None` when the reference no longer fits the
+    /// layout — fall back to [`BoxedCloud::conditional`].
+    pub fn conditional_typed(
+        template: &TypedVarInfo,
+        reference: &UntypedVarInfo,
+        scope: &[VarName],
+        n: usize,
+        n_obs: usize,
+    ) -> Option<TypedCloud> {
+        assert!(n >= 2, "conditional SMC needs at least 2 particles");
+        assert!(!scope.is_empty(), "conditional SMC needs a variable scope");
+        let mut ref_state = template.refill_from_untyped(reference)?;
+        ref_state.clear_all_slot_flags(flags::RESAMPLE | flags::LOCKED);
+        let mask = scope_mask(template, scope);
+        let log_w0 = -(n as f64).ln();
+        let mut particles = Vec::with_capacity(n);
+        for j in 0..n {
+            let mut state = ref_state.clone();
+            if j > 0 {
+                state.flag_unlocked_slots(Some(&mask), flags::RESAMPLE);
+            }
+            particles.push(Particle {
+                state,
+                log_weight: log_w0,
+                delta: 0.0,
+                layout_ok: true,
+            });
+        }
+        Some(ParticleCloud {
+            particles,
+            log_evidence: 0.0,
+            step: 0,
+            n_obs,
+            scope: Some(mask),
+            snapshots: Vec::new(),
+        })
+    }
+
+    /// Demote to the boxed representation mid-sweep (dynamic structure
+    /// change): every particle's buffers and flags are written back into a
+    /// clone of `template`, and weights/step/evidence carry over, so the
+    /// boxed cloud resumes exactly where the typed one stopped.
+    pub fn demote(
+        &self,
+        template: &UntypedVarInfo,
+        scope: Option<Vec<VarName>>,
+    ) -> BoxedCloud {
+        ParticleCloud {
+            particles: self
+                .particles
+                .iter()
+                .map(|p| Particle {
+                    state: p.state.to_untyped(template),
+                    log_weight: p.log_weight,
+                    delta: p.delta,
+                    layout_ok: true,
+                })
+                .collect(),
+            log_evidence: self.log_evidence,
+            step: self.step,
+            n_obs: self.n_obs,
+            scope,
+            snapshots: Vec::new(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -323,10 +758,18 @@ mod tests {
         }
     }
 
+    fn m_of<S: ParticleState>(cloud: &ParticleCloud<S>, j: usize, get: impl Fn(&S) -> f64) -> f64 {
+        get(&cloud.particles[j].state)
+    }
+
+    fn boxed_m(state: &UntypedVarInfo) -> f64 {
+        state.get(&VarName::new("m")).unwrap().value.as_f64().unwrap()
+    }
+
     #[test]
     fn from_prior_counts_observations() {
         let m = IidNormal { y: vec![0.1, -0.2, 0.3] };
-        let cloud = ParticleCloud::from_prior(&m, 8, 11, 1);
+        let cloud = BoxedCloud::from_prior(&m, 8, 11, 1);
         assert_eq!(cloud.n_obs, 3);
         assert_eq!(cloud.len(), 8);
         assert_eq!(cloud.step, 0);
@@ -338,15 +781,15 @@ mod tests {
     #[test]
     fn advance_accumulates_evidence_and_reweights() {
         let m = IidNormal { y: vec![0.5, -0.5] };
-        let mut cloud = ParticleCloud::from_prior(&m, 64, 3, 1);
-        let lz0 = cloud.advance(&m, 3, 1);
+        let mut cloud = BoxedCloud::from_prior(&m, 64, 3, 1);
+        let lz0 = cloud.advance(&m, 3, 1).unwrap();
         assert!(lz0.is_finite() && lz0 < 0.0);
         assert_eq!(cloud.step, 1);
         assert!((cloud.log_evidence - lz0).abs() < 1e-12);
         // weights renormalized
         let w = cloud.weights();
         assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-10);
-        let _ = cloud.advance(&m, 3, 1);
+        let _ = cloud.advance(&m, 3, 1).unwrap();
         assert_eq!(cloud.step, 2);
         assert!(cloud.log_evidence < lz0);
     }
@@ -354,8 +797,8 @@ mod tests {
     #[test]
     fn resample_forks_and_uniformizes() {
         let m = IidNormal { y: vec![2.0, 2.0, 2.0] };
-        let mut cloud = ParticleCloud::from_prior(&m, 32, 5, 1);
-        let _ = cloud.advance(&m, 5, 1);
+        let mut cloud = BoxedCloud::from_prior(&m, 32, 5, 1);
+        let _ = cloud.advance(&m, 5, 1).unwrap();
         let ess_before = cloud.ess();
         assert!(ess_before < 32.0);
         let mut rng = Xoshiro256pp::seed_from_u64(9);
@@ -378,44 +821,82 @@ mod tests {
         let m = IidNormal { y: vec![0.3, 0.7] };
         let mut rng = Xoshiro256pp::seed_from_u64(21);
         let reference = crate::model::init_trace(&m, &mut rng);
-        let m_ref = reference
-            .get(&VarName::new("m"))
-            .unwrap()
-            .value
-            .as_f64()
-            .unwrap();
+        let m_ref = boxed_m(&reference);
         let scope = [VarName::new("m")];
         assert_eq!(count_observes(&m, &reference), 2);
-        let mut cloud = ParticleCloud::conditional(&m, &reference, &scope, 16, 77, None);
+        let mut cloud = BoxedCloud::conditional(&reference, &scope, 16, 2);
         assert_eq!(cloud.n_obs, 2);
-        let m_of = |cloud: &ParticleCloud, j: usize| -> f64 {
-            cloud.particles[j]
-                .trace
-                .get(&VarName::new("m"))
-                .unwrap()
-                .value
-                .as_f64()
-                .unwrap()
-        };
 
         // step 0: non-reference particles regenerate m from the prior
-        let _ = cloud.advance(&m, 77, 1);
-        assert_eq!(m_of(&cloud, 0), m_ref, "reference must replay exactly");
+        let _ = cloud.advance(&m, 77, 1).unwrap();
+        assert_eq!(m_of(&cloud, 0, boxed_m), m_ref, "reference must replay exactly");
         assert!(
-            cloud.particles[1..]
-                .iter()
-                .enumerate()
-                .any(|(j, _)| m_of(&cloud, j + 1) != m_ref),
+            (1..cloud.len()).any(|j| m_of(&cloud, j, boxed_m) != m_ref),
             "non-reference particles must regenerate their scoped variable"
         );
 
         // conditional resampling pins the reference at index 0
         let mut r = Xoshiro256pp::seed_from_u64(123);
         cloud.resample(Resampler::Systematic, true, &mut r);
-        assert_eq!(m_of(&cloud, 0), m_ref);
+        assert_eq!(m_of(&cloud, 0, boxed_m), m_ref);
 
         // and it survives the next advance untouched
-        let _ = cloud.advance(&m, 77, 1);
-        assert_eq!(m_of(&cloud, 0), m_ref);
+        let _ = cloud.advance(&m, 77, 1).unwrap();
+        assert_eq!(m_of(&cloud, 0, boxed_m), m_ref);
+    }
+
+    #[test]
+    fn promoted_cloud_is_bitwise_equal_to_boxed() {
+        // The central fast-path claim at the cloud level: a promoted typed
+        // cloud advances/resamples/regenerates exactly like its boxed
+        // source for the same seeds.
+        let m = IidNormal { y: vec![0.4, -0.1, 0.6] };
+        let mut boxed = BoxedCloud::from_prior(&m, 16, 9, 1);
+        let (mut typed, _template) = TypedCloud::promote(&boxed).expect("static layout");
+        let typed_m = |s: &TypedVarInfo| s.constrained[s.slots()[0].cons_offset];
+        for j in 0..16 {
+            assert_eq!(m_of(&typed, j, typed_m).to_bits(), m_of(&boxed, j, boxed_m).to_bits());
+        }
+        for t in 0..3 {
+            let lz_b = boxed.advance(&m, 9, 1).unwrap();
+            let lz_t = typed.advance(&m, 9, 1).unwrap();
+            assert_eq!(lz_b.to_bits(), lz_t.to_bits(), "step {t}");
+            if t == 1 {
+                let mut rb = Xoshiro256pp::seed_from_u64(31);
+                let mut rt = Xoshiro256pp::seed_from_u64(31);
+                boxed.resample(Resampler::Systematic, false, &mut rb);
+                typed.resample(Resampler::Systematic, false, &mut rt);
+            }
+        }
+        assert_eq!(boxed.log_evidence.to_bits(), typed.log_evidence.to_bits());
+        for j in 0..16 {
+            assert_eq!(
+                typed.particles[j].log_weight.to_bits(),
+                boxed.particles[j].log_weight.to_bits()
+            );
+            assert_eq!(m_of(&typed, j, typed_m).to_bits(), m_of(&boxed, j, boxed_m).to_bits());
+        }
+    }
+
+    #[test]
+    fn typed_conditional_cloud_demotes_cleanly() {
+        let m = IidNormal { y: vec![0.3, 0.7] };
+        let mut rng = Xoshiro256pp::seed_from_u64(22);
+        let reference = crate::model::init_trace(&m, &mut rng);
+        let template = TypedVarInfo::from_untyped(&reference);
+        let scope = [VarName::new("m")];
+        let mut cloud =
+            TypedCloud::conditional_typed(&template, &reference, &scope, 8, 2).expect("layout");
+        let _ = cloud.advance(&m, 5, 1).unwrap();
+        let demoted = cloud.demote(&reference, Some(scope.to_vec()));
+        assert_eq!(demoted.step, 1);
+        assert_eq!(demoted.n_obs, 2);
+        assert_eq!(m_of(&demoted, 0, boxed_m), boxed_m(&reference));
+        for j in 0..8 {
+            assert_eq!(
+                demoted.particles[j].log_weight.to_bits(),
+                cloud.particles[j].log_weight.to_bits()
+            );
+        }
     }
 }

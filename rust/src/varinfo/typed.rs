@@ -6,6 +6,15 @@
 //! (unconstrained coordinates and their constrained images) and discrete
 //! state in one `i64` buffer; [`Slot`]s record the layout in model visit
 //! order so executors walk a cursor instead of hashing `VarName`s.
+//!
+//! Since the typed-particle fast path landed, a typed trace also carries
+//! one **flag byte per slot** (`varinfo::flags` — `RESAMPLE`/`LOCKED`),
+//! the flat mirror of `UntypedVarInfo`'s per-record flags: particle
+//! samplers regenerate flagged slots in place ([`write_slot_f64`] and
+//! friends draw directly into the buffers) instead of replaying through
+//! boxed values.
+//!
+//! [`write_slot_f64`]: TypedVarInfo::write_slot_f64
 
 use crate::dist::{bijector, Domain};
 use crate::value::Value;
@@ -33,9 +42,11 @@ pub struct Slot {
 /// Strictly-typed execution trace with flat storage.
 ///
 /// The layout (`slots`) is behind an [`Arc`]: cloning a `TypedVarInfo`
-/// copies only the three flat buffers and shares the layout — the cheap
-/// trace forking that particle samplers (`crate::particle`) rely on when
-/// they duplicate thousands of particles per resampling step.
+/// copies only the flat buffers (+ flag bytes) and shares the layout — the
+/// cheap trace forking that particle samplers (`crate::particle`) rely on
+/// when they duplicate thousands of particles per resampling step.
+///
+/// [`Arc`]: std::sync::Arc
 #[derive(Clone, Debug)]
 pub struct TypedVarInfo {
     slots: std::sync::Arc<[Slot]>,
@@ -45,28 +56,49 @@ pub struct TypedVarInfo {
     pub constrained: Vec<f64>,
     /// Discrete values in visit order.
     pub discrete: Vec<i64>,
+    /// Per-slot particle flags (`flags::RESAMPLE` / `flags::LOCKED`),
+    /// indexed by slot position. Part of the per-particle state, not the
+    /// shared layout: forks carry their own copy.
+    pub slot_flags: Vec<u8>,
     /// log-density of the last evaluation.
     pub logp: f64,
 }
 
 /// A buffers-only snapshot of a [`TypedVarInfo`]: everything that varies
-/// between particles sharing one layout. Restoring is three `memcpy`s.
-#[derive(Clone, Debug)]
+/// between particles sharing one layout (values + flags + logp).
+/// Restoring is four `memcpy`s.
+#[derive(Clone, Debug, Default)]
 pub struct TraceSnapshot {
     pub unconstrained: Vec<f64>,
     pub constrained: Vec<f64>,
     pub discrete: Vec<i64>,
+    pub slot_flags: Vec<u8>,
     pub logp: f64,
+}
+
+impl TraceSnapshot {
+    /// Overwrite this snapshot with `src`'s per-particle state, reusing the
+    /// existing allocations — the snapshot-ring primitive of the typed
+    /// particle cloud (one ring slot per particle, refreshed every step).
+    pub fn copy_from(&mut self, src: &TypedVarInfo) {
+        self.unconstrained.clone_from(&src.unconstrained);
+        self.constrained.clone_from(&src.constrained);
+        self.discrete.clone_from(&src.discrete);
+        self.slot_flags.clone_from(&src.slot_flags);
+        self.logp = src.logp;
+    }
 }
 
 impl TypedVarInfo {
     /// Specialize an untyped trace. This is `TypedVarInfo(vi)` in the
     /// paper: called once the initial run has discovered every variable.
+    /// Per-record flags carry over to the per-slot flag bytes.
     pub fn from_untyped(vi: &UntypedVarInfo) -> Self {
         let mut slots = Vec::with_capacity(vi.len());
         let mut unconstrained = Vec::new();
         let mut constrained = Vec::new();
         let mut discrete = Vec::new();
+        let mut slot_flags = Vec::with_capacity(vi.len());
         for rec in vi.records() {
             let unc_offset = unconstrained.len();
             let cons_offset = constrained.len();
@@ -100,12 +132,14 @@ impl TypedVarInfo {
                 disc_offset,
                 is_vec,
             });
+            slot_flags.push(rec.flags);
         }
         TypedVarInfo {
             slots: slots.into(),
             unconstrained,
             constrained,
             discrete,
+            slot_flags,
             logp: vi.logp,
         }
     }
@@ -126,12 +160,189 @@ impl TypedVarInfo {
         std::sync::Arc::ptr_eq(&self.slots, &other.slots)
     }
 
-    /// Capture the per-particle state (buffers + logp) without the layout.
+    /// Fill a fresh trace **sharing this layout `Arc`** with the values and
+    /// flags of `vi`. Returns `None` when `vi`'s structure no longer
+    /// matches the layout (dynamic model changed shape) — the caller falls
+    /// back to the boxed path. This is how a particle cloud promotes every
+    /// particle onto one shared layout after its first full run.
+    pub fn refill_from_untyped(&self, vi: &UntypedVarInfo) -> Option<TypedVarInfo> {
+        if !self.layout_matches(vi) {
+            return None;
+        }
+        let mut out = TypedVarInfo {
+            slots: std::sync::Arc::clone(&self.slots),
+            unconstrained: Vec::with_capacity(self.unconstrained.len()),
+            constrained: Vec::with_capacity(self.constrained.len()),
+            discrete: Vec::with_capacity(self.discrete.len()),
+            slot_flags: Vec::with_capacity(self.slot_flags.len()),
+            logp: vi.logp,
+        };
+        for rec in vi.records() {
+            match (&rec.value, rec.domain.is_discrete()) {
+                (Value::F64(x), false) => {
+                    bijector::link(&rec.domain, &[*x], &mut out.unconstrained);
+                    out.constrained.push(*x);
+                }
+                (Value::Vec(v), false) => {
+                    bijector::link(&rec.domain, v, &mut out.unconstrained);
+                    out.constrained.extend_from_slice(v);
+                }
+                (Value::Int(k), true) => out.discrete.push(*k),
+                _ => return None,
+            }
+            out.slot_flags.push(rec.flags);
+        }
+        Some(out)
+    }
+
+    /// Convert back to the boxed representation: clone `template` (which
+    /// supplies names, distributions and record order — it must share this
+    /// trace's layout, e.g. the trace the layout was specialized from) and
+    /// overwrite its values and flags with this trace's buffers. Used when
+    /// a typed particle cloud demotes to the boxed path mid-sweep.
+    pub fn to_untyped(&self, template: &UntypedVarInfo) -> UntypedVarInfo {
+        assert_eq!(
+            template.len(),
+            self.slots.len(),
+            "demotion template does not match the typed layout"
+        );
+        let mut vi = template.clone();
+        for (i, slot) in self.slots.iter().enumerate() {
+            vi.set_value(&slot.vn, self.boxed_value(slot));
+            vi.set_record_flags(i, self.slot_flags[i]);
+        }
+        vi.logp = self.logp;
+        vi
+    }
+
+    // ------------------------------------------------------- slot flags
+
+    /// Whether slot `i` carries `flag`.
+    #[inline]
+    pub fn is_slot_flagged(&self, i: usize, flag: u8) -> bool {
+        self.slot_flags[i] & flag != 0
+    }
+
+    /// Set `flag` on slot `i`.
+    #[inline]
+    pub fn flag_slot(&mut self, i: usize, flag: u8) {
+        self.slot_flags[i] |= flag;
+    }
+
+    /// Clear `flag` on slot `i`.
+    #[inline]
+    pub fn clear_slot_flag(&mut self, i: usize, flag: u8) {
+        self.slot_flags[i] &= !flag;
+    }
+
+    /// Clear `mask` (may combine flags) on every slot.
+    pub fn clear_all_slot_flags(&mut self, mask: u8) {
+        for f in &mut self.slot_flags {
+            *f &= !mask;
+        }
+    }
+
+    /// Set `flag` on every slot that does **not** carry `flags::LOCKED`
+    /// and is selected by `mask` (all slots when `mask` is `None`) — the
+    /// flat mirror of [`UntypedVarInfo::flag_unlocked`], i.e. the
+    /// particle-fork regeneration sweep.
+    pub fn flag_unlocked_slots(&mut self, mask: Option<&[bool]>, flag: u8) {
+        for (i, f) in self.slot_flags.iter_mut().enumerate() {
+            if *f & super::flags::LOCKED != 0 {
+                continue;
+            }
+            let selected = match mask {
+                None => true,
+                Some(m) => m[i],
+            };
+            if selected {
+                *f |= flag;
+            }
+        }
+    }
+
+    /// Copy `reference`'s values into every slot of `self` that is not
+    /// `LOCKED` and is selected by `mask` — splicing the reference's
+    /// *future* onto this particle's retained prefix (ancestor sampling's
+    /// hybrid trajectory). Both traces must share the layout.
+    pub fn overlay_unscored_slots_from(&mut self, reference: &TypedVarInfo, mask: Option<&[bool]>) {
+        debug_assert!(self.shares_layout(reference));
+        for (i, slot) in self.slots.iter().enumerate() {
+            if self.slot_flags[i] & super::flags::LOCKED != 0 {
+                continue;
+            }
+            let selected = match mask {
+                None => true,
+                Some(m) => m[i],
+            };
+            if !selected {
+                continue;
+            }
+            if slot.domain.is_discrete() {
+                self.discrete[slot.disc_offset] = reference.discrete[slot.disc_offset];
+            } else {
+                let (uo, ul) = (slot.unc_offset, slot.unc_len);
+                self.unconstrained[uo..uo + ul]
+                    .copy_from_slice(&reference.unconstrained[uo..uo + ul]);
+                let (co, cl) = (slot.cons_offset, slot.cons_len);
+                self.constrained[co..co + cl]
+                    .copy_from_slice(&reference.constrained[co..co + cl]);
+            }
+        }
+    }
+
+    // -------------------------------------------------- in-place writes
+
+    /// Write a freshly drawn scalar into slot `i`: the constrained buffer
+    /// gets the raw value, the unconstrained buffer its link image —
+    /// written in place, no allocation. `domain` is the distribution's
+    /// *current* domain (parameters may depend on other parameters).
+    pub fn write_slot_f64(&mut self, i: usize, x: f64, domain: &Domain) {
+        let (co, uo, ul) = {
+            let s = &self.slots[i];
+            (s.cons_offset, s.unc_offset, s.unc_len)
+        };
+        self.constrained[co] = x;
+        bijector::link_slice(domain, &[x], &mut self.unconstrained[uo..uo + ul]);
+    }
+
+    /// Vector analogue of [`write_slot_f64`](Self::write_slot_f64).
+    pub fn write_slot_vec(&mut self, i: usize, xs: &[f64], domain: &Domain) {
+        let (co, cl, uo, ul) = {
+            let s = &self.slots[i];
+            (s.cons_offset, s.cons_len, s.unc_offset, s.unc_len)
+        };
+        debug_assert_eq!(xs.len(), cl);
+        self.constrained[co..co + cl].copy_from_slice(xs);
+        bijector::link_slice(domain, xs, &mut self.unconstrained[uo..uo + ul]);
+    }
+
+    /// Discrete analogue of [`write_slot_f64`](Self::write_slot_f64).
+    pub fn write_slot_int(&mut self, i: usize, k: i64) {
+        let off = self.slots[i].disc_offset;
+        self.discrete[off] = k;
+    }
+
+    /// Boxed-value form of the in-place write (demotion helpers, tests).
+    pub fn write_slot_sample(&mut self, i: usize, value: &Value) {
+        let domain = self.slots[i].domain.clone();
+        match value {
+            Value::F64(x) => self.write_slot_f64(i, *x, &domain),
+            Value::Vec(v) => self.write_slot_vec(i, v, &domain),
+            Value::Int(k) => self.write_slot_int(i, *k),
+        }
+    }
+
+    // ------------------------------------------------------- snapshots
+
+    /// Capture the per-particle state (buffers + flags + logp) without the
+    /// layout.
     pub fn snapshot(&self) -> TraceSnapshot {
         TraceSnapshot {
             unconstrained: self.unconstrained.clone(),
             constrained: self.constrained.clone(),
             discrete: self.discrete.clone(),
+            slot_flags: self.slot_flags.clone(),
             logp: self.logp,
         }
     }
@@ -141,9 +352,11 @@ impl TypedVarInfo {
         assert_eq!(s.unconstrained.len(), self.unconstrained.len());
         assert_eq!(s.constrained.len(), self.constrained.len());
         assert_eq!(s.discrete.len(), self.discrete.len());
+        assert_eq!(s.slot_flags.len(), self.slot_flags.len());
         self.unconstrained.copy_from_slice(&s.unconstrained);
         self.constrained.copy_from_slice(&s.constrained);
         self.discrete.copy_from_slice(&s.discrete);
+        self.slot_flags.copy_from_slice(&s.slot_flags);
         self.logp = s.logp;
     }
 
@@ -159,18 +372,17 @@ impl TypedVarInfo {
         self.refresh_constrained();
     }
 
-    /// Recompute the constrained buffer from θ (invlink per slot).
+    /// Recompute the constrained buffer from θ (invlink per slot), writing
+    /// each slot's image directly into the constrained buffer — no
+    /// temporary allocation.
     pub fn refresh_constrained(&mut self) {
-        let mut buf: Vec<f64> = Vec::with_capacity(8);
-        for slot in &self.slots {
+        for slot in self.slots.iter() {
             if slot.unc_len == 0 {
                 continue;
             }
-            buf.clear();
             let y = &self.unconstrained[slot.unc_offset..slot.unc_offset + slot.unc_len];
-            let _ = bijector::invlink(&slot.domain, y, &mut buf);
-            self.constrained[slot.cons_offset..slot.cons_offset + slot.cons_len]
-                .copy_from_slice(&buf);
+            let out = &mut self.constrained[slot.cons_offset..slot.cons_offset + slot.cons_len];
+            let _ = bijector::invlink_slice(&slot.domain, y, out);
         }
     }
 
@@ -191,7 +403,7 @@ impl TypedVarInfo {
     /// (`s`, `w[0]`, `w[1]`, …) plus discrete slots.
     pub fn column_names(&self) -> Vec<String> {
         let mut names = Vec::new();
-        for slot in &self.slots {
+        for slot in self.slots.iter() {
             if slot.domain.is_discrete() {
                 names.push(slot.vn.to_string());
             } else if slot.is_vec {
@@ -209,7 +421,7 @@ impl TypedVarInfo {
     /// recording; same order as `column_names`).
     pub fn row(&self) -> Vec<f64> {
         let mut out = Vec::with_capacity(self.constrained.len() + self.discrete.len());
-        for slot in &self.slots {
+        for slot in self.slots.iter() {
             if slot.domain.is_discrete() {
                 out.push(self.discrete[slot.disc_offset] as f64);
             } else {
@@ -240,6 +452,7 @@ impl TypedVarInfo {
 mod tests {
     use super::*;
     use crate::dist::{Categorical, Dirichlet, DiscreteDist, Gamma, IsoNormal, ScalarDist, VecDist};
+    use crate::varinfo::flags;
 
     fn demo_untyped() -> UntypedVarInfo {
         let mut vi = UntypedVarInfo::new();
@@ -274,6 +487,7 @@ mod tests {
         assert_eq!(tvi.dim(), 6);
         assert_eq!(tvi.constrained.len(), 7); // 1 + 3 + 3
         assert_eq!(tvi.discrete, vec![2]);
+        assert_eq!(tvi.slot_flags, vec![0, 0, 0, 0]);
         let s = &tvi.slots()[0];
         assert_eq!((s.unc_offset, s.unc_len), (0, 1));
         let w = &tvi.slots()[1];
@@ -326,16 +540,31 @@ mod tests {
         let theta: Vec<f64> = tvi.unconstrained.iter().map(|x| x + 1.0).collect();
         tvi.set_unconstrained(&theta);
         tvi.discrete[0] = 0;
+        tvi.flag_slot(1, flags::RESAMPLE);
         tvi.logp = -123.0;
         assert_ne!(tvi.unconstrained, snap.unconstrained);
         tvi.restore(&snap);
         assert_eq!(tvi.unconstrained, snap.unconstrained);
         assert_eq!(tvi.constrained, snap.constrained);
         assert_eq!(tvi.discrete, vec![2]);
+        assert_eq!(tvi.slot_flags, vec![0, 0, 0, 0]);
         assert_eq!(tvi.logp, snap.logp);
         // a from-scratch specialization does NOT share the allocation
         let other = TypedVarInfo::from_untyped(&demo_untyped());
         assert!(!tvi.shares_layout(&other));
+    }
+
+    #[test]
+    fn snapshot_ring_copy_from_reuses_buffers() {
+        let tvi = TypedVarInfo::from_untyped(&demo_untyped());
+        let mut ring = TraceSnapshot::default();
+        ring.copy_from(&tvi);
+        assert_eq!(ring.unconstrained, tvi.unconstrained);
+        assert_eq!(ring.slot_flags, tvi.slot_flags);
+        let mut restored = tvi.clone();
+        restored.discrete[0] = 1;
+        restored.restore(&ring);
+        assert_eq!(restored.discrete, vec![2]);
     }
 
     #[test]
@@ -351,5 +580,91 @@ mod tests {
             ScalarDist::Gamma(Gamma::new(1.0, 1.0)).boxed(),
         );
         assert!(!tvi.layout_matches(&vi2));
+    }
+
+    #[test]
+    fn refill_shares_layout_and_roundtrips_to_untyped() {
+        let vi = demo_untyped();
+        let tvi = TypedVarInfo::from_untyped(&vi);
+        // a second boxed trace with different values, same structure
+        let mut vi2 = demo_untyped();
+        vi2.set_value(&VarName::new("s"), Value::F64(5.0));
+        vi2.set_value(&VarName::new("z"), Value::Int(0));
+        vi2.set_record_flags(1, flags::RESAMPLE);
+        let t2 = tvi.refill_from_untyped(&vi2).expect("layout holds");
+        assert!(t2.shares_layout(&tvi));
+        assert_eq!(t2.constrained[0], 5.0);
+        assert_eq!(t2.discrete, vec![0]);
+        assert!(t2.is_slot_flagged(1, flags::RESAMPLE));
+        // demote back: values and flags survive the roundtrip
+        let back = t2.to_untyped(&vi);
+        assert_eq!(back.get(&VarName::new("s")).unwrap().value, Value::F64(5.0));
+        assert_eq!(back.get(&VarName::new("z")).unwrap().value, Value::Int(0));
+        assert!(back.is_flagged(&VarName::new("w"), flags::RESAMPLE));
+        assert!(!back.is_flagged(&VarName::new("s"), flags::RESAMPLE));
+        // structure change → refill refuses
+        let mut vi3 = demo_untyped();
+        vi3.insert(
+            VarName::new("extra"),
+            Value::F64(0.0),
+            ScalarDist::Gamma(Gamma::new(1.0, 1.0)).boxed(),
+        );
+        assert!(tvi.refill_from_untyped(&vi3).is_none());
+    }
+
+    #[test]
+    fn in_place_slot_writes_update_both_buffers() {
+        let mut tvi = TypedVarInfo::from_untyped(&demo_untyped());
+        // scalar slot 0: s ~ Gamma (Positive domain → log link)
+        let domain = tvi.slots()[0].domain.clone();
+        tvi.write_slot_f64(0, 4.0, &domain);
+        assert_eq!(tvi.constrained[0], 4.0);
+        assert!((tvi.unconstrained[0] - 4.0f64.ln()).abs() < 1e-12);
+        // vector slot 3: theta ~ Dirichlet (Simplex domain)
+        let domain = tvi.slots()[3].domain.clone();
+        tvi.write_slot_vec(3, &[0.5, 0.25, 0.25], &domain);
+        assert_eq!(&tvi.constrained[4..7], &[0.5, 0.25, 0.25]);
+        // the unconstrained image round-trips through refresh
+        let theta = tvi.unconstrained.clone();
+        tvi.refresh_constrained();
+        assert_eq!(tvi.unconstrained, theta);
+        let s: f64 = tvi.constrained[4..7].iter().sum();
+        assert!((s - 1.0).abs() < 1e-10);
+        // discrete slot 2
+        tvi.write_slot_int(2, 1);
+        assert_eq!(tvi.discrete, vec![1]);
+        // boxed-value dispatch form
+        tvi.write_slot_sample(2, &Value::Int(2));
+        assert_eq!(tvi.discrete, vec![2]);
+    }
+
+    #[test]
+    fn flag_sweeps_respect_locks_and_masks() {
+        let mut tvi = TypedVarInfo::from_untyped(&demo_untyped());
+        tvi.flag_slot(0, flags::LOCKED);
+        let mask = vec![true, true, false, true];
+        tvi.flag_unlocked_slots(Some(&mask), flags::RESAMPLE);
+        assert!(!tvi.is_slot_flagged(0, flags::RESAMPLE), "locked slot spared");
+        assert!(tvi.is_slot_flagged(1, flags::RESAMPLE));
+        assert!(!tvi.is_slot_flagged(2, flags::RESAMPLE), "masked-out slot spared");
+        assert!(tvi.is_slot_flagged(3, flags::RESAMPLE));
+        tvi.clear_all_slot_flags(flags::RESAMPLE | flags::LOCKED);
+        assert_eq!(tvi.slot_flags, vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn overlay_copies_only_unlocked_in_mask_slots() {
+        let base = TypedVarInfo::from_untyped(&demo_untyped());
+        let mut reference = base.fork();
+        let d0 = reference.slots()[0].domain.clone();
+        reference.write_slot_f64(0, 9.0, &d0);
+        reference.write_slot_int(2, 0);
+        let mut particle = base.fork();
+        particle.flag_slot(0, flags::LOCKED);
+        particle.overlay_unscored_slots_from(&reference, None);
+        // locked slot keeps the particle's own value
+        assert_eq!(particle.constrained[0], 2.0);
+        // unlocked discrete slot takes the reference's value
+        assert_eq!(particle.discrete, vec![0]);
     }
 }

@@ -149,6 +149,12 @@ impl UntypedVarInfo {
         self.records[i].flags |= flag;
     }
 
+    /// Overwrite the whole flag byte of record `i` (particle demotion:
+    /// typed per-slot flags are copied back verbatim).
+    pub fn set_record_flags(&mut self, i: usize, flags: u8) {
+        self.records[i].flags = flags;
+    }
+
     /// Set `flag` on every in-`scope` record that does **not** carry the
     /// `LOCKED` stamp — the particle-fork regeneration sweep: locked
     /// records have been scored and must replay; everything else is fair

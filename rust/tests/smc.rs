@@ -1,14 +1,17 @@
 //! End-to-end tests of the particle-inference subsystem: SMC evidence
 //! against closed forms (conjugate + Kalman), bitwise determinism of
-//! parallel propagation, and Particle-Gibbs agreement with both the exact
-//! smoother and the HMC-within-Gibbs baseline.
+//! parallel propagation, typed-vs-boxed replay equivalence, mid-sweep
+//! demotion on dynamic structure changes, ancestor-sampling mixing, and
+//! Particle-Gibbs agreement with both the exact smoother and the
+//! HMC-within-Gibbs baseline.
 
-use dynamicppl::inference::{csmc_sweep, Gibbs, GibbsBlock, Smc};
+use dynamicppl::inference::{csmc_sweep, Csmc, Gibbs, GibbsBlock, Smc};
 use dynamicppl::model::init_trace;
 use dynamicppl::models::build_small;
-use dynamicppl::particle::Resampler;
+use dynamicppl::particle::count_observes;
 use dynamicppl::prelude::*;
 use dynamicppl::util::stats;
+use dynamicppl::varinfo::{TypedVarInfo, UntypedVarInfo};
 use rand_core::RngCore;
 
 // ------------------------------------------------------------ models
@@ -42,6 +45,33 @@ model! {
             let h_t = tilde!(api, h[t] ~ Normal(h_prev * this.phi, c(this.q)));
             obs!(api, this.y[t] => Normal(h_t, c(this.r)));
             h_prev = h_t;
+        }
+    }
+}
+
+model! {
+    /// Dynamic structure: a mid-sequence Bernoulli latent decides whether
+    /// an `extra` variable exists for the rest of the trajectory. The
+    /// latent sits *between* observe statements, so a resampling fork can
+    /// regenerate it mid-sweep and flip the trace layout under a promoted
+    /// typed cloud — the demotion trigger.
+    pub DynStructure {
+        y: Vec<f64>,
+    }
+    fn body<T>(this, api) {
+        let m0 = tilde!(api, m0 ~ Normal(c(0.0), c(1.0)));
+        obs!(api, this.y[0] => Normal(m0, c(1.0)));
+        // rare branch: most prior clouds share a layout (→ promotion), and
+        // regeneration flips it often enough that ~40% of promoted runs
+        // demote mid-sweep while ~40% finish fully typed
+        let z = tilde_int!(api, z ~ Bernoulli(c(0.03)));
+        let mu = if z == 1 {
+            tilde!(api, extra ~ Normal(c(0.0), c(1.0))) + m0
+        } else {
+            m0
+        };
+        for t in 1..this.y.len() {
+            obs!(api, this.y[t] => Normal(mu, c(1.0)));
         }
     }
 }
@@ -121,6 +151,9 @@ fn smc_512_particles_recovers_conjugate_evidence_within_two_percent() {
         ..Smc::default()
     };
     let out = smc.run(&m, 99);
+    // static model: the whole sweep must have run on the typed fast path
+    assert!(out.cloud.is_typed());
+    assert_eq!(out.demotions, 0);
     assert!(
         ((out.log_evidence - want) / want).abs() < 0.02,
         "SMC log Ẑ = {} vs analytic {want}",
@@ -163,9 +196,153 @@ fn parallel_propagation_is_bitwise_deterministic_with_four_threads() {
     let b = run(4);
     assert_eq!(a.log_evidence.to_bits(), b.log_evidence.to_bits());
     assert_eq!(a.resamples, b.resamples);
-    for (pa, pb) in a.cloud.particles.iter().zip(&b.cloud.particles) {
-        assert_eq!(pa.log_weight.to_bits(), pb.log_weight.to_bits());
+    assert_eq!(a.typed_steps, b.typed_steps);
+    let (la, lb) = (a.cloud.log_weights(), b.cloud.log_weights());
+    for (wa, wb) in la.iter().zip(&lb) {
+        assert_eq!(wa.to_bits(), wb.to_bits());
     }
+}
+
+#[test]
+fn typed_and_boxed_replay_are_bitwise_equivalent() {
+    // The fast-path contract end-to-end: same seed ⇒ identical
+    // log-evidence, weights and particle values on a continuous model
+    // (gauss) and a simplex-structured single-lump model (HMM).
+    for (name, probe) in [("gauss_unknown", "m"), ("hmm_semisup", "trans[0]")] {
+        let bm = build_small(name, 11);
+        let typed = Smc {
+            n_particles: 48,
+            ..Smc::default()
+        }
+        .run(bm.model.as_ref(), 7);
+        let boxed = Smc {
+            n_particles: 48,
+            use_typed: false,
+            ..Smc::default()
+        }
+        .run(bm.model.as_ref(), 7);
+        assert!(typed.cloud.is_typed(), "{name} must promote");
+        assert_eq!(typed.typed_steps, typed.cloud.n_obs(), "{name}");
+        assert_eq!(typed.demotions, 0, "{name}");
+        assert_eq!(
+            typed.log_evidence.to_bits(),
+            boxed.log_evidence.to_bits(),
+            "{name}: evidence must be bit-identical across replay paths"
+        );
+        assert_eq!(typed.resamples, boxed.resamples, "{name}");
+        let vn = VarName::parse(probe).unwrap();
+        let (lt, lb) = (typed.cloud.log_weights(), boxed.cloud.log_weights());
+        for i in 0..48 {
+            assert_eq!(lt[i].to_bits(), lb[i].to_bits(), "{name} weight {i}");
+            assert_eq!(
+                typed.cloud.value_of(i, &vn),
+                boxed.cloud.value_of(i, &vn),
+                "{name} particle {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dynamic_structure_demotes_mid_sweep_without_panicking() {
+    // DynStructure flips its layout when a resampling fork regenerates z:
+    // a promoted typed cloud must detect the mismatch, roll the step back
+    // and finish boxed — bit-identical to a boxed-only run, never a panic.
+    let m = DynStructure {
+        y: vec![0.1, -0.2, 0.3, 0.05],
+    };
+    let mut saw_demotion = false;
+    let mut saw_typed_completion = false;
+    for seed in 0..120u64 {
+        let cfg = Smc {
+            n_particles: 8,
+            ess_threshold: 1.0, // resample every step: maximal flag churn
+            ..Smc::default()
+        };
+        let typed = cfg.run(&m, seed);
+        let boxed = Smc {
+            use_typed: false,
+            ..cfg
+        }
+        .run(&m, seed);
+        // whatever path the run took, it must equal the boxed ground truth
+        assert_eq!(
+            typed.log_evidence.to_bits(),
+            boxed.log_evidence.to_bits(),
+            "seed {seed}: demoted/typed run diverged from boxed"
+        );
+        if typed.demotions > 0 {
+            saw_demotion = true;
+            assert!(!typed.cloud.is_typed(), "seed {seed}: demoted cloud must be boxed");
+        }
+        if typed.cloud.is_typed() && typed.typed_steps == typed.cloud.n_obs() {
+            saw_typed_completion = true;
+        }
+        if saw_demotion && saw_typed_completion {
+            break;
+        }
+    }
+    assert!(
+        saw_demotion,
+        "no seed in 0..120 exercised a mid-sweep demotion — model/flag setup broken"
+    );
+    assert!(
+        saw_typed_completion,
+        "no seed in 0..120 completed a fully-typed sweep"
+    );
+}
+
+#[test]
+fn ancestor_sampling_improves_path_mixing_on_sto_vol() {
+    // Path degeneracy: plain CSMC almost never updates the *early* part
+    // of the retained trajectory (lineages coalesce onto the reference's
+    // prefix). PGAS resamples the retained path's ancestry each step, so
+    // h[0] must change across sweeps much more often.
+    let bm = dynamicppl::models::sto_vol::sto_volatility_t(3, 25);
+    let model = bm.model.as_ref();
+    let mut rng = Xoshiro256pp::seed_from_u64(4);
+    let reference = init_trace(model, &mut rng);
+    let template = TypedVarInfo::from_untyped(&reference);
+    let scope = [VarName::new("h")];
+    let n_obs = Some(count_observes(model, &reference));
+    let h0_of = |s: &UntypedVarInfo| -> f64 {
+        s.get(&VarName::indexed("h", 0)).unwrap().value.as_f64().unwrap()
+    };
+
+    let changes = |ancestor_sampling: bool| -> usize {
+        let mut state = reference.clone();
+        let mut seeds = Xoshiro256pp::seed_from_u64(99);
+        let cfg = Csmc {
+            ancestor_sampling,
+            ..Csmc::new(8)
+        };
+        let mut prev = h0_of(&state);
+        let mut count = 0usize;
+        for _ in 0..150 {
+            state = csmc_sweep(
+                model,
+                &state,
+                &scope,
+                &cfg,
+                seeds.next_u64(),
+                n_obs,
+                Some(&template),
+            );
+            let cur = h0_of(&state);
+            if cur != prev {
+                count += 1;
+            }
+            prev = cur;
+        }
+        count
+    };
+
+    let plain = changes(false);
+    let pgas = changes(true);
+    assert!(
+        pgas > plain,
+        "PGAS must mix the retained path's prefix better: h[0] updates {pgas} (PGAS) vs {plain} (plain CSMC) over 150 sweeps"
+    );
 }
 
 #[test]
@@ -191,8 +368,8 @@ fn particle_gibbs_matches_kalman_smoother_and_hmc_gibbs_baseline() {
     let mut rng = Xoshiro256pp::seed_from_u64(8);
     let tvi = dynamicppl::model::init_typed(&m, &mut rng);
 
-    // Particle-Gibbs over the whole latent path
-    let pg = Gibbs::new(vec![GibbsBlock::particle_gibbs(&["h"], 48)]);
+    // Particle-Gibbs over the whole latent path (typed sweeps w/ PGAS)
+    let pg = Gibbs::new(vec![GibbsBlock::particle_gibbs_as(&["h"], 48)]);
     let pg_out = pg.sample(&m, &tvi, 300, 2500, &mut rng);
 
     // HMC-within-Gibbs baseline on the same block
@@ -222,26 +399,29 @@ fn particle_gibbs_smoke_on_hmm_semisup() {
     // The marginalized HMM has a single likelihood lump (one observe
     // statement): CSMC degenerates to a valid importance-within-Gibbs
     // kernel. Smoke-check that the sweep machinery handles a 115-dim
-    // simplex-structured trace.
+    // simplex-structured trace, on both replay paths.
     let bm = build_small("hmm_semisup", 6);
     let mut rng = Xoshiro256pp::seed_from_u64(6);
     let mut state = init_trace(bm.model.as_ref(), &mut rng);
+    let template = TypedVarInfo::from_untyped(&state);
     let scope = [VarName::new("trans")];
-    let n_obs = Some(dynamicppl::particle::count_observes(bm.model.as_ref(), &state));
-    for _ in 0..3 {
+    let n_obs = Some(count_observes(bm.model.as_ref(), &state));
+    let cfg = Csmc::new(8);
+    for it in 0..4 {
+        // alternate typed / boxed sweeps: both must keep the trace whole
+        let template_opt = if it % 2 == 0 { Some(&template) } else { None };
         state = csmc_sweep(
             bm.model.as_ref(),
             &state,
             &scope,
-            8,
-            Resampler::Multinomial,
-            0.5,
+            &cfg,
             rng.next_u64(),
             n_obs,
+            template_opt,
         );
     }
     // the trace stays complete and scorable
-    let tvi = dynamicppl::varinfo::TypedVarInfo::from_untyped(&state);
+    let tvi = TypedVarInfo::from_untyped(&state);
     let lp = dynamicppl::model::typed_logp(
         bm.model.as_ref(),
         &tvi,
