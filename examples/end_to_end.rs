@@ -65,6 +65,7 @@ fn main() {
                 adapt_step_size: true,
                 adapt_mass: false,
                 target_accept: 0.8,
+                ..Hmc::default()
             }),
             warmup,
             iters,

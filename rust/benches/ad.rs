@@ -1,15 +1,22 @@
 //! `cargo bench --bench ad` — the §4 AD analysis: gradient-engine cost on
 //! the workload classes the paper discusses.
 //!
-//! Compares forward duals (ForwardDiff analogue), the reverse tape
-//! (Tracker analogue), the hand-coded static gradient (Stan analogue) and
-//! the AOT XLA artifact on: a vectorized model (logreg), and the two
+//! Compares the arena-fused engine (Stan-style analytic adjoints, the
+//! native default), forward duals (ForwardDiff analogue), the per-op
+//! reverse tape (Tracker analogue) and the hand-coded static gradient
+//! (Stan analogue) on: a vectorized model (logreg), and the two
 //! scalar-loop time-series models (sto_volatility, hmm_semisup) where the
 //! paper measured Tracker.jl's dynamic-dispatch overhead dominating.
+//!
+//! Also a perf-regression harness: it asserts that the reverse tape reuses
+//! its adjoint scratch and that the fused arena reaches zero steady-state
+//! allocation (capacities must be bit-stable across repeated gradients).
 
 use dynamicppl::context::Context;
 use dynamicppl::gradient::LogDensity;
-use dynamicppl::model::{init_typed, typed_grad_forward, typed_grad_reverse};
+use dynamicppl::model::{
+    init_typed, typed_grad_forward, typed_grad_fused_into, typed_grad_reverse,
+};
 use dynamicppl::models::build_small;
 use dynamicppl::stanlike::stanlike_density;
 use dynamicppl::util::rng::Xoshiro256pp;
@@ -25,7 +32,17 @@ fn main() {
         let tvi = init_typed(bm.model.as_ref(), &mut rng);
         let theta: Vec<f64> = tvi.unconstrained.iter().map(|x| x * 0.3).collect();
         let dim = theta.len();
+        let mut grad = vec![0.0; dim];
 
+        rows.push(bench_micro(&format!("{name}/fused"), 5e-3, 5, || {
+            std::hint::black_box(typed_grad_fused_into(
+                bm.model.as_ref(),
+                &tvi,
+                &theta,
+                Context::Default,
+                &mut grad,
+            ));
+        }));
         rows.push(bench_micro(&format!("{name}/tape"), 5e-3, 5, || {
             std::hint::black_box(typed_grad_reverse(
                 bm.model.as_ref(),
@@ -50,30 +67,62 @@ fn main() {
             std::hint::black_box(stan.logp_grad(&theta));
         }));
 
-        let tape = rows
-            .iter()
-            .find(|m| m.name == format!("{name}/tape"))
-            .unwrap()
-            .mean();
-        let stat = rows
-            .iter()
-            .find(|m| m.name == format!("{name}/static"))
-            .unwrap()
-            .mean();
-        ratios.push((name, tape / stat));
+        // ---- allocation-regression asserts -----------------------------
+        // (1) the reverse tape's backward must reuse its adjoint scratch
+        let _ = typed_grad_reverse(bm.model.as_ref(), &tvi, &theta, Context::Default);
+        let tape_scratch = dynamicppl::ad::reverse::adjoint_scratch_capacity();
+        assert!(tape_scratch > 0, "{name}: adjoint scratch not in use");
+        for _ in 0..5 {
+            let _ = typed_grad_reverse(bm.model.as_ref(), &tvi, &theta, Context::Default);
+        }
+        assert_eq!(
+            dynamicppl::ad::reverse::adjoint_scratch_capacity(),
+            tape_scratch,
+            "{name}: reverse::backward reallocated its adjoint buffer"
+        );
+        // (2) the fused arena must be at zero steady-state allocation
+        let arena_cap = dynamicppl::ad::arena::capacity_bytes();
+        for _ in 0..5 {
+            let _ = typed_grad_fused_into(
+                bm.model.as_ref(),
+                &tvi,
+                &theta,
+                Context::Default,
+                &mut grad,
+            );
+        }
+        assert_eq!(
+            dynamicppl::ad::arena::capacity_bytes(),
+            arena_cap,
+            "{name}: fused arena allocated at steady state"
+        );
+
+        let pick = |suffix: &str| {
+            rows.iter()
+                .find(|m| m.name == format!("{name}/{suffix}"))
+                .map(|m| m.mean())
+        };
+        let tape = pick("tape").unwrap();
+        let stat = pick("static").unwrap();
+        let fused = pick("fused").unwrap();
+        ratios.push((name, tape / stat, tape / fused, fused / stat));
     }
 
     println!("{}", render_table("gradient cost per evaluation", &rows));
-    println!("tape-vs-static overhead (the paper's Tracker.jl tax):");
-    for (name, r) in &ratios {
-        println!("  {name}: {r:.1}×");
+    println!("engine overhead vs the static (Stan-analogue) gradient:");
+    println!(
+        "{:<16} {:>14} {:>14} {:>16}",
+        "model", "tape/static", "tape/fused", "fused/static"
+    );
+    for (name, ts, tf, fs) in &ratios {
+        println!("{name:<16} {ts:>13.1}× {tf:>13.1}× {fs:>15.1}×");
     }
     println!(
         "\nNote: hmm_semisup's static baseline runs a full forward-backward\n\
          (expected-count) pass — a different, costlier algorithm than taping\n\
          the forward recursion — so its ratio is not a pure dispatch tax.\n\
-         On the directly comparable models the tape pays a 6-9× tax per\n\
-         gradient, which is what Table 1's typed+tape column inherits (the\n\
-         paper's §4 Tracker.jl finding)."
+         The tape column is the paper's §4 Tracker.jl finding; the fused\n\
+         column is how much of that tax the arena engine recovers without\n\
+         leaving native code (the rest is the XLA/AOT artifact's territory)."
     );
 }

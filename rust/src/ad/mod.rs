@@ -10,12 +10,17 @@
 //! - [`reverse::TVar`] — tape-based reverse mode with one heap node per op
 //!   (Tracker.jl analogue — it *deliberately* carries the dynamic-dispatch /
 //!   allocation overhead the paper measures in §4)
+//! - [`arena::AVar`] — arena-fused reverse mode: flat SoA tape with
+//!   retained capacity, variable-arity fused nodes (one per tilde
+//!   statement via analytic `logpdf_adj` kernels) and seed-based density
+//!   accumulation — the Stan-style repaired native path
 //! - `f64` — plain evaluation
 //!
-//! The fast path in this reproduction (the paper's "Julia compiler
-//! specializes the typed trace") is the AOT-compiled XLA gradient, which is
-//! not an instance of `Scalar` — see `crate::gradient`.
+//! The AOT alternative (the paper's "Julia compiler specializes the typed
+//! trace") is the XLA gradient artifact, which is not an instance of
+//! `Scalar` — see `crate::gradient`.
 
+pub mod arena;
 pub mod forward;
 pub mod reverse;
 

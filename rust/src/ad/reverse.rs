@@ -29,6 +29,13 @@ struct Tape {
 
 thread_local! {
     static TAPE: RefCell<Tape> = RefCell::new(Tape::default());
+    /// Adjoint scratch reused across [`backward`] calls — the buffer is as
+    /// long as the whole tape, so reallocating it per gradient evaluation
+    /// (the old `vec![0.0; n]`) dominated small-model backward passes.
+    static ADJ_SCRATCH: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+    /// Tape length of the last completed `grad_reverse` (survives the
+    /// reset, for node-count diagnostics in `bench grad`).
+    static LAST_TAPE_LEN: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
 }
 
 /// A tracked real: an index into the thread-local tape.
@@ -99,30 +106,49 @@ pub fn tape_len() -> usize {
 
 /// Backpropagate from `out`, returning adjoints of the first `n_inputs`
 /// tape entries (which must be the leaves created first, in order).
+///
+/// The full-tape adjoint buffer is a thread-local scratch reused across
+/// calls (clear + zero-fill, no steady-state allocation); only the small
+/// `n_inputs`-sized result is allocated.
 pub fn backward(out: TVar, n_inputs: usize) -> Vec<f64> {
     TAPE.with(|t| {
-        let t = t.borrow();
-        let n = t.nodes.len();
-        let mut adj = vec![0.0f64; n];
-        if (out.idx as usize) < n {
-            adj[out.idx as usize] = 1.0;
-        }
-        for i in (0..n).rev() {
-            let a = adj[i];
-            if a == 0.0 {
-                continue;
+        ADJ_SCRATCH.with(|s| {
+            let t = t.borrow();
+            let mut adj = s.borrow_mut();
+            let n = t.nodes.len();
+            adj.clear();
+            adj.resize(n, 0.0);
+            if (out.idx as usize) < n {
+                adj[out.idx as usize] = 1.0;
             }
-            let node = &t.nodes[i];
-            for k in 0..2 {
-                let p = node.parents[k];
-                if p != NONE {
-                    adj[p as usize] += a * node.partials[k];
+            for i in (0..n).rev() {
+                let a = adj[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let node = &t.nodes[i];
+                for k in 0..2 {
+                    let p = node.parents[k];
+                    if p != NONE {
+                        adj[p as usize] += a * node.partials[k];
+                    }
                 }
             }
-        }
-        adj.truncate(n_inputs);
-        adj
+            adj[..n_inputs].to_vec()
+        })
     })
+}
+
+/// Capacity of the reused adjoint scratch — steady across repeated
+/// gradient evaluations of the same model (regression probe for
+/// `benches/ad.rs`).
+pub fn adjoint_scratch_capacity() -> usize {
+    ADJ_SCRATCH.with(|s| s.borrow().capacity())
+}
+
+/// Tape length (node count) of the last completed [`grad_reverse`].
+pub fn last_tape_len() -> usize {
+    LAST_TAPE_LEN.get()
 }
 
 /// Evaluate `f` on tracked inputs and return (value, gradient).
@@ -135,6 +161,7 @@ where
     let out = f(&inputs);
     let g = backward(out, x.len());
     let v = out.v;
+    LAST_TAPE_LEN.set(tape_len());
     reset_tape();
     (v, g)
 }
@@ -342,6 +369,30 @@ mod tests {
     fn tape_resets() {
         let _ = grad_reverse(|x| x[0] + x[0], &[1.0]);
         assert_eq!(tape_len(), 0);
+    }
+
+    #[test]
+    fn adjoint_scratch_reused_across_calls() {
+        fn quad(v: &[TVar]) -> TVar {
+            let mut s = TVar::constant(0.0);
+            for &xi in v {
+                s = s + xi * xi;
+            }
+            s
+        }
+        let x: Vec<f64> = (0..64).map(|i| 0.1 * i as f64 + 0.5).collect();
+        let _ = grad_reverse(quad, &x);
+        let cap = adjoint_scratch_capacity();
+        assert!(cap > 0);
+        for _ in 0..5 {
+            let _ = grad_reverse(quad, &x);
+        }
+        assert_eq!(
+            adjoint_scratch_capacity(),
+            cap,
+            "backward must reuse its adjoint scratch, not reallocate"
+        );
+        assert!(last_tape_len() >= x.len());
     }
 
     #[test]

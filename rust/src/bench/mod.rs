@@ -27,6 +27,9 @@ pub enum BenchBackend {
     Untyped,
     /// Typed trace + tape reverse AD (Tracker.jl analogue).
     TypedTape,
+    /// Typed trace + arena-fused reverse AD (the native default — Stan's
+    /// fused-`_lpdf` design; see `crate::ad::arena`).
+    TypedFused,
     /// Typed trace + forward-mode duals (ForwardDiff.jl analogue).
     TypedForward,
     /// Typed layout + AOT-compiled XLA logp∇ (the paper's headline path).
@@ -42,6 +45,7 @@ impl BenchBackend {
         match self {
             BenchBackend::Untyped => "untyped",
             BenchBackend::TypedTape => "typed+tape",
+            BenchBackend::TypedFused => "typed+fused",
             BenchBackend::TypedForward => "typed+fwd",
             BenchBackend::TypedXla => "typed+xla",
             BenchBackend::TypedXlaFused => "typed+xla-fused",
@@ -53,9 +57,12 @@ impl BenchBackend {
         Some(match s {
             "untyped" => BenchBackend::Untyped,
             "typed+tape" | "tape" => BenchBackend::TypedTape,
+            // `fused` now names the native arena engine; the XLA
+            // trajectory artifact stays reachable as `xla-fused`
+            "typed+fused" | "fused" => BenchBackend::TypedFused,
             "typed+fwd" | "forward" => BenchBackend::TypedForward,
             "typed+xla" | "xla" => BenchBackend::TypedXla,
-            "typed+xla-fused" | "xla-fused" | "fused" => BenchBackend::TypedXlaFused,
+            "typed+xla-fused" | "xla-fused" => BenchBackend::TypedXlaFused,
             "stanlike" | "stan" => BenchBackend::StanLike,
             _ => return None,
         })
@@ -66,15 +73,17 @@ impl BenchBackend {
     fn iter_fraction(&self) -> f64 {
         match self {
             BenchBackend::Untyped | BenchBackend::TypedTape | BenchBackend::TypedForward => 0.02,
+            BenchBackend::TypedFused => 0.2,
             _ => 1.0,
         }
     }
 }
 
 /// Default backend set for the Table-1 run.
-pub const DEFAULT_BACKENDS: [BenchBackend; 4] = [
+pub const DEFAULT_BACKENDS: [BenchBackend; 5] = [
     BenchBackend::Untyped,
     BenchBackend::TypedTape,
+    BenchBackend::TypedFused,
     BenchBackend::TypedXla,
     BenchBackend::StanLike,
 ];
@@ -189,6 +198,10 @@ pub fn run_cell(
         }
         BenchBackend::TypedTape => {
             let ld = NativeDensity::new(bm.model.as_ref(), &tvi, Backend::Reverse);
+            time_hmc(&ld, &theta0, bm.step_size, cfg.iters, run_iters, cfg.reps, cfg.seed)
+        }
+        BenchBackend::TypedFused => {
+            let ld = NativeDensity::fused(bm.model.as_ref(), &tvi);
             time_hmc(&ld, &theta0, bm.step_size, cfg.iters, run_iters, cfg.reps, cfg.seed)
         }
         BenchBackend::TypedForward => {
@@ -517,6 +530,322 @@ pub fn render_smc_table(rows: &[SmcRow]) -> String {
     out
 }
 
+// ------------------------------------------------------------------ grad
+
+/// Which gradient engine a `bench grad` row measured.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GradEngine {
+    /// Arena-fused reverse mode (`Backend::ReverseFused`, the default).
+    Fused,
+    /// Per-op reverse tape (`Backend::Reverse`, the Tracker.jl analogue).
+    Tape,
+    /// Forward duals, n passes (`Backend::Forward`).
+    Forward,
+}
+
+impl GradEngine {
+    pub fn label(&self) -> &'static str {
+        match self {
+            GradEngine::Fused => "fused",
+            GradEngine::Tape => "tape",
+            GradEngine::Forward => "forward",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "fused" => GradEngine::Fused,
+            "tape" => GradEngine::Tape,
+            "forward" | "fwd" => GradEngine::Forward,
+            _ => return None,
+        })
+    }
+}
+
+/// One `bench grad` row: raw gradient-evaluation cost of one engine on one
+/// model — the per-leapfrog-step quantity every Table-1 HMC cell is built
+/// from, isolated from sampler logic.
+#[derive(Clone, Debug)]
+pub struct GradRow {
+    pub model: String,
+    pub engine: GradEngine,
+    /// Unconstrained dimension.
+    pub dim: usize,
+    /// Mean wall-clock seconds per gradient evaluation.
+    pub secs_per_grad: f64,
+    /// Tape nodes per evaluation (fused: arena nodes beyond the leaves;
+    /// tape: full per-op node count; forward: 0).
+    pub tape_nodes: usize,
+    /// Fused engines only: direct analytic-adjoint seeds per evaluation.
+    pub seeds: usize,
+    /// Tilde statements (assume + observe + raw-logp terms) per model run.
+    pub tilde_stmts: usize,
+    /// Max relative error vs the forward-dual gradient (NaN when forward
+    /// was not run).
+    pub max_rel_err_vs_forward: f64,
+    /// Wall-clock speedup vs the tape engine (fused/forward rows; NaN when
+    /// tape was not measured).
+    pub speedup_vs_tape: f64,
+    /// Fused only: arena-tape capacity was bit-stable across the timed run
+    /// (zero steady-state allocation in the gradient *engine*; the `Vec`
+    /// each vector-valued assume returns to the model body is outside this
+    /// probe — scalar-tilde models are fully allocation-free).
+    pub alloc_steady: bool,
+    pub seed: u64,
+}
+
+/// `bench grad` configuration.
+#[derive(Clone, Debug)]
+pub struct GradBenchConfig {
+    pub models: Vec<String>,
+    pub engines: Vec<GradEngine>,
+    pub seed: u64,
+    /// Use the reduced workloads (default) or the full Table-1 sizes.
+    pub small: bool,
+    /// Target seconds per timed measurement (per rep).
+    pub target_secs: f64,
+    pub reps: usize,
+}
+
+impl Default for GradBenchConfig {
+    fn default() -> Self {
+        Self {
+            models: crate::models::ALL_MODELS.iter().map(|s| s.to_string()).collect(),
+            engines: vec![GradEngine::Fused, GradEngine::Tape, GradEngine::Forward],
+            seed: 42,
+            small: true,
+            target_secs: 5e-3,
+            reps: 5,
+        }
+    }
+}
+
+/// Forward mode is n full passes — skip it above this dimension, unless
+/// forward is the *only* engine requested (an explicit single-engine run).
+const FORWARD_DIM_CAP: usize = 1500;
+
+/// Run the gradient-engine comparison and collect rows.
+pub fn run_grad_bench(cfg: &GradBenchConfig) -> Vec<GradRow> {
+    use crate::model::{
+        init_typed, typed_grad_forward, typed_grad_fused_into, typed_grad_reverse,
+    };
+
+    let mut rows = Vec::new();
+    for name in &cfg.models {
+        let bm = if cfg.small {
+            crate::models::build_small(name, cfg.seed)
+        } else {
+            build(name, cfg.seed)
+        };
+        let model = bm.model.as_ref();
+        let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+        let tvi = init_typed(model, &mut rng);
+        let theta: Vec<f64> = tvi.unconstrained.iter().map(|x| x * 0.3).collect();
+        let dim = theta.len();
+        let mut grad = vec![0.0; dim];
+
+        // one diagnostic eval per *requested* engine: node counts +
+        // reference gradients (the fused eval always runs — it is the
+        // cheapest engine and supplies the tilde/node diagnostics)
+        let want = |e: GradEngine| cfg.engines.contains(&e);
+        let lp_fused = typed_grad_fused_into(model, &tvi, &theta, Context::Default, &mut grad);
+        assert!(lp_fused.is_finite(), "{name}: fused logp {lp_fused}");
+        let fused_stats = crate::ad::arena::last_stats();
+        let g_fused = grad.clone();
+        let tape_nodes = if want(GradEngine::Tape) {
+            let _ = typed_grad_reverse(model, &tvi, &theta, Context::Default);
+            crate::ad::reverse::last_tape_len()
+        } else {
+            0
+        };
+        let run_forward =
+            want(GradEngine::Forward) && (dim <= FORWARD_DIM_CAP || cfg.engines.len() == 1);
+        let g_forward = if run_forward {
+            Some(typed_grad_forward(model, &tvi, &theta, Context::Default).1)
+        } else {
+            if want(GradEngine::Forward) {
+                eprintln!(
+                    "bench: {name}: skipping forward (dim {dim} > {FORWARD_DIM_CAP}; run with --engines forward to force)"
+                );
+            }
+            None
+        };
+        let max_rel_err = match &g_forward {
+            Some(gf) => g_fused
+                .iter()
+                .zip(gf)
+                .map(|(a, b)| (a - b).abs() / (1.0 + b.abs()))
+                .fold(0.0, f64::max),
+            None => f64::NAN,
+        };
+
+        let mut per_engine: Vec<(GradEngine, f64, usize, bool)> = Vec::new();
+        for &engine in &cfg.engines {
+            eprintln!("bench: {name} / grad×{}", engine.label());
+            let (m, nodes, steady) = match engine {
+                GradEngine::Fused => {
+                    let cap_before = crate::ad::arena::capacity_bytes();
+                    let m = crate::util::timing::bench_micro(
+                        &format!("{name}/fused"),
+                        cfg.target_secs,
+                        cfg.reps,
+                        || {
+                            std::hint::black_box(typed_grad_fused_into(
+                                model,
+                                &tvi,
+                                &theta,
+                                Context::Default,
+                                &mut grad,
+                            ));
+                        },
+                    );
+                    let steady = crate::ad::arena::capacity_bytes() == cap_before;
+                    (m, fused_stats.nodes, steady)
+                }
+                GradEngine::Tape => {
+                    let m = crate::util::timing::bench_micro(
+                        &format!("{name}/tape"),
+                        cfg.target_secs,
+                        cfg.reps,
+                        || {
+                            std::hint::black_box(typed_grad_reverse(
+                                model,
+                                &tvi,
+                                &theta,
+                                Context::Default,
+                            ));
+                        },
+                    );
+                    (m, tape_nodes, false)
+                }
+                GradEngine::Forward => {
+                    if !run_forward {
+                        continue;
+                    }
+                    let m = crate::util::timing::bench_micro(
+                        &format!("{name}/forward"),
+                        cfg.target_secs,
+                        cfg.reps,
+                        || {
+                            std::hint::black_box(typed_grad_forward(
+                                model,
+                                &tvi,
+                                &theta,
+                                Context::Default,
+                            ));
+                        },
+                    );
+                    (m, 0, false)
+                }
+            };
+            per_engine.push((engine, m.mean(), nodes, steady));
+        }
+
+        let tape_secs = per_engine
+            .iter()
+            .find(|(e, ..)| *e == GradEngine::Tape)
+            .map(|&(_, s, ..)| s);
+        for (engine, secs, nodes, steady) in per_engine {
+            rows.push(GradRow {
+                model: name.clone(),
+                engine,
+                dim,
+                secs_per_grad: secs,
+                tape_nodes: nodes,
+                seeds: if engine == GradEngine::Fused {
+                    fused_stats.seeds
+                } else {
+                    0
+                },
+                tilde_stmts: fused_stats.tilde_stmts,
+                max_rel_err_vs_forward: if engine == GradEngine::Fused {
+                    max_rel_err
+                } else {
+                    f64::NAN
+                },
+                speedup_vs_tape: match (engine, tape_secs) {
+                    (GradEngine::Tape, _) | (_, None) => f64::NAN,
+                    (_, Some(t)) => t / secs,
+                },
+                alloc_steady: steady,
+                seed: cfg.seed,
+            });
+        }
+    }
+    rows
+}
+
+/// Human-readable gradient-engine table.
+pub fn render_grad_table(rows: &[GradRow]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "grad — one gradient evaluation per engine (the per-leapfrog-step cost under every Table-1 HMC cell)\n"
+    );
+    let _ = writeln!(
+        out,
+        "{:<16} {:>8} {:>5} {:>12} {:>11} {:>8} {:>7} {:>14} {:>9}",
+        "model", "engine", "dim", "µs/grad", "nodes/eval", "seeds", "tildes", "vs-tape", "alloc"
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{:<16} {:>8} {:>5} {:>12.2} {:>11} {:>8} {:>7} {:>14} {:>9}",
+            r.model,
+            r.engine.label(),
+            r.dim,
+            r.secs_per_grad * 1e6,
+            r.tape_nodes,
+            r.seeds,
+            r.tilde_stmts,
+            if r.speedup_vs_tape.is_finite() {
+                format!("{:.1}×", r.speedup_vs_tape)
+            } else {
+                "-".into()
+            },
+            if r.engine == GradEngine::Fused {
+                if r.alloc_steady { "steady" } else { "GREW" }
+            } else {
+                "-"
+            },
+        );
+    }
+    out
+}
+
+/// Serialize grad rows as the coordinator's `BENCH_GRAD.json` payload.
+pub fn grad_rows_to_json(rows: &[GradRow], cfg: &GradBenchConfig) -> String {
+    let mut out = String::new();
+    let _ = write!(
+        out,
+        "{{\n  \"bench\": \"grad\",\n  \"seed\": {},\n  \"small\": {},\n  \"rows\": [\n",
+        cfg.seed, cfg.small
+    );
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"model\": \"{}\", \"engine\": \"{}\", \"dim\": {}, \"secs_per_grad\": {}, \
+             \"tape_nodes\": {}, \"seeds\": {}, \"tilde_stmts\": {}, \
+             \"max_rel_err_vs_forward\": {}, \"speedup_vs_tape\": {}, \"alloc_steady\": {}, \
+             \"seed\": {}}}",
+            r.model,
+            r.engine.label(),
+            r.dim,
+            json_num(r.secs_per_grad),
+            r.tape_nodes,
+            r.seeds,
+            r.tilde_stmts,
+            json_num(r.max_rel_err_vs_forward),
+            json_num(r.speedup_vs_tape),
+            r.alloc_steady,
+            r.seed,
+        );
+        out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
 fn json_num(x: f64) -> String {
     if x.is_finite() {
         format!("{x}")
@@ -595,13 +924,90 @@ mod tests {
         for b in [
             BenchBackend::Untyped,
             BenchBackend::TypedTape,
+            BenchBackend::TypedFused,
             BenchBackend::TypedForward,
             BenchBackend::TypedXla,
+            BenchBackend::TypedXlaFused,
             BenchBackend::StanLike,
         ] {
             assert_eq!(BenchBackend::parse(b.label()), Some(b));
         }
+        // `fused` names the native arena engine (the XLA trajectory path
+        // moved to `xla-fused`)
+        assert_eq!(BenchBackend::parse("fused"), Some(BenchBackend::TypedFused));
+        assert_eq!(
+            BenchBackend::parse("xla-fused"),
+            Some(BenchBackend::TypedXlaFused)
+        );
         assert_eq!(BenchBackend::parse("nope"), None);
+    }
+
+    #[test]
+    fn grad_bench_rows_and_json() {
+        let cfg = GradBenchConfig {
+            models: vec!["gauss_unknown".into(), "sto_volatility".into()],
+            seed: 6,
+            target_secs: 2e-4,
+            reps: 2,
+            ..GradBenchConfig::default()
+        };
+        let rows = run_grad_bench(&cfg);
+        // fused + tape + forward per model
+        assert_eq!(rows.len(), 6);
+        for model in ["gauss_unknown", "sto_volatility"] {
+            let fused = rows
+                .iter()
+                .find(|r| r.model == model && r.engine == GradEngine::Fused)
+                .unwrap();
+            let tape = rows
+                .iter()
+                .find(|r| r.model == model && r.engine == GradEngine::Tape)
+                .unwrap();
+            assert!(fused.secs_per_grad > 0.0 && tape.secs_per_grad > 0.0);
+            // tilde-dominated models collapse ~5×; models whose likelihood
+            // is hand-written body arithmetic (gauss_unknown) shrink less
+            let required = if model == "sto_volatility" {
+                tape.tape_nodes / 4
+            } else {
+                tape.tape_nodes
+            };
+            assert!(
+                fused.tape_nodes < required,
+                "{model}: fused {} vs tape {} nodes",
+                fused.tape_nodes,
+                tape.tape_nodes
+            );
+            assert!(fused.alloc_steady, "{model}: arena grew during timed run");
+            assert!(
+                fused.max_rel_err_vs_forward < 1e-8,
+                "{model}: rel err {}",
+                fused.max_rel_err_vs_forward
+            );
+            assert!(fused.tilde_stmts > 0 && fused.seeds > 0);
+        }
+        let table = render_grad_table(&rows);
+        assert!(table.contains("sto_volatility") && table.contains("fused"));
+        let json = grad_rows_to_json(&rows, &cfg);
+        assert!(json.contains("\"bench\": \"grad\""));
+        assert!(json.contains("\"engine\": \"fused\""));
+        assert!(json.contains("\"engine\": \"tape\""));
+        assert!(json.contains("\"engine\": \"forward\""));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert!(!json.contains(",\n  ]"));
+    }
+
+    #[test]
+    fn tiny_cell_runs_typed_fused() {
+        let cfg = Table1Config {
+            iters: 10,
+            reps: 1,
+            seed: 3,
+            backends: vec![BenchBackend::TypedFused],
+            models: vec!["gauss_unknown".into()],
+            max_run_iters: None,
+        };
+        let cell = run_cell("gauss_unknown", BenchBackend::TypedFused, &cfg);
+        assert!(cell.mean.is_finite() && cell.mean > 0.0);
     }
 
     #[test]

@@ -4,8 +4,9 @@
 use std::sync::Arc;
 
 use crate::bench::{
-    render_smc_table, render_table1, run_smc_bench, run_table1, smc_rows_to_json,
-    table1_cells_to_json, BenchBackend, SmcBenchConfig, SmcPath, Table1Config,
+    grad_rows_to_json, render_grad_table, render_smc_table, render_table1, run_grad_bench,
+    run_smc_bench, run_table1, smc_rows_to_json, table1_cells_to_json, BenchBackend,
+    GradBenchConfig, GradEngine, SmcBenchConfig, SmcPath, Table1Config,
 };
 use crate::chain::{Chain, MultiChain};
 use crate::context::Context;
@@ -31,11 +32,11 @@ pub fn usage() -> String {
             ("info", "show runtime/platform information"),
             (
                 "sample",
-                "run MCMC: --model NAME [--sampler hmc|nuts|mh|smc] [--backend xla|tape|forward|stan] [--iters N] [--warmup N] [--chains C] [--seed S]  (smc: iters = particles)",
+                "run MCMC: --model NAME [--sampler hmc|nuts|mh|smc] [--backend fused|xla|tape|forward|stan] [--iters N] [--warmup N] [--chains C] [--seed S]  (smc: iters = particles; default backend: fused)",
             ),
             (
                 "bench",
-                "bench table1 [--models a,b] [--backends x,y] [--iters N] [--reps R] [--out FILE.json] | bench smc [--models a,b] [--particles N] [--threads T] [--path typed|boxed|both] [--full] [--out FILE.json]",
+                "bench table1 [--models a,b] [--backends x,y] [--iters N] [--reps R] [--out FILE.json] | bench smc [--models a,b] [--particles N] [--threads T] [--path typed|boxed|both] [--full] [--out FILE.json] | bench grad [--models a,b] [--engines fused,tape,forward] [--full] [--out FILE.json]",
             ),
             ("query", "evaluate a probability query string (paper §3.5)"),
         ],
@@ -114,7 +115,9 @@ fn cmd_sample(args: &Args) -> i32 {
         }
     };
     let sampler = args.get_or("sampler", "nuts").to_string();
-    let backend = args.get_or("backend", "xla").to_string();
+    // the arena-fused native engine is the default — it needs no AOT
+    // artifacts and is the fastest in-process gradient path
+    let backend = args.get_or("backend", "fused").to_string();
     let iters = args.get_parse_or("iters", 1000usize).unwrap_or(1000);
     let warmup = args.get_parse_or("warmup", 500usize).unwrap_or(500);
     let n_chains = args.get_parse_or("chains", 2usize).unwrap_or(2);
@@ -192,6 +195,11 @@ pub fn sample_model(
                     XlaDensity::load(&artifacts_dir(), bm.name, bm.theta_dim, &bm.data)
                         .expect("artifact load failed (run `make artifacts`)"),
                 ),
+                "fused" => Box::new(NativeDensity::new(
+                    bm.model.as_ref(),
+                    &tvi,
+                    Backend::ReverseFused,
+                )),
                 "tape" => Box::new(NativeDensity::new(
                     bm.model.as_ref(),
                     &tvi,
@@ -307,8 +315,40 @@ fn cmd_bench(args: &Args) -> i32 {
                 }
             }
         }
+        "grad" => {
+            let mut cfg = GradBenchConfig::default();
+            if let Some(models) = args.get("models") {
+                cfg.models = models.split(',').map(|s| s.trim().to_string()).collect();
+            }
+            if let Some(engines) = args.get("engines") {
+                cfg.engines = engines
+                    .split(',')
+                    .map(|s| {
+                        GradEngine::parse(s.trim())
+                            .unwrap_or_else(|| panic!("unknown grad engine {s:?}"))
+                    })
+                    .collect();
+            }
+            cfg.seed = args.get_parse_or("seed", cfg.seed).unwrap_or(cfg.seed);
+            cfg.reps = args.get_parse_or("reps", cfg.reps).unwrap_or(cfg.reps);
+            cfg.small = !args.flag("full");
+            let rows = run_grad_bench(&cfg);
+            println!("{}", render_grad_table(&rows));
+            let out_path = args.get_or("out", "BENCH_GRAD.json").to_string();
+            let json = grad_rows_to_json(&rows, &cfg);
+            match std::fs::write(&out_path, &json) {
+                Ok(()) => {
+                    println!("wrote {out_path}");
+                    0
+                }
+                Err(e) => {
+                    eprintln!("failed to write {out_path}: {e}");
+                    1
+                }
+            }
+        }
         other => {
-            eprintln!("unknown bench target {other:?} (try: table1, smc)");
+            eprintln!("unknown bench target {other:?} (try: table1, smc, grad)");
             2
         }
     }
@@ -427,6 +467,15 @@ mod tests {
             mc.chains[0].stats.log_evidence,
             mc.chains[1].stats.log_evidence
         );
+    }
+
+    #[test]
+    fn sample_model_fused_backend_runs() {
+        // the default native backend: arena-fused reverse AD
+        let mc = sample_model("hier_poisson", "hmc", "fused", 50, 50, 1, 9).unwrap();
+        assert_eq!(mc.chains.len(), 1);
+        assert_eq!(mc.chains[0].len(), 50);
+        assert!(mc.chains[0].stats.n_grad_evals > 0);
     }
 
     #[test]

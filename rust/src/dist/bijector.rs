@@ -112,6 +112,54 @@ pub fn invlink_slice<T: Scalar>(domain: &Domain, y: &[T], out: &mut [T]) -> T {
     }
 }
 
+/// One scalar-domain invlink with its full analytic adjoint — the fused
+/// form the arena executors use: constrained value, dx/dy, and the
+/// log-abs-det-Jacobian with its derivative, all from one primal pass.
+#[derive(Clone, Copy, Debug)]
+pub struct ScalarLink {
+    pub x: f64,
+    pub dx_dy: f64,
+    pub ladj: f64,
+    pub dladj_dy: f64,
+}
+
+/// Analytic invlink adjoint for the scalar domains (`Real`, `Positive`,
+/// `Interval`). Vector domains go through the generic
+/// [`invlink_slice`] over arena variables instead.
+#[inline]
+pub fn invlink_scalar_adj(domain: &Domain, y: f64) -> ScalarLink {
+    match domain {
+        Domain::Real => ScalarLink {
+            x: y,
+            dx_dy: 1.0,
+            ladj: 0.0,
+            dladj_dy: 0.0,
+        },
+        Domain::Positive => {
+            let x = y.exp();
+            ScalarLink {
+                x,
+                dx_dy: x,
+                ladj: y,
+                dladj_dy: 1.0,
+            }
+        }
+        Domain::Interval(lo, hi) => {
+            let width = hi - lo;
+            let s = crate::util::math::sigmoid(y);
+            ScalarLink {
+                x: s * width + lo,
+                dx_dy: width * s * (1.0 - s),
+                ladj: width.ln()
+                    + crate::util::math::log_sigmoid(y)
+                    + crate::util::math::log_sigmoid(-y),
+                dladj_dy: 1.0 - 2.0 * s,
+            }
+        }
+        other => panic!("invlink_scalar_adj on non-scalar domain {other:?}"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,6 +258,47 @@ mod tests {
             let ladj_slice = invlink_slice(&domain, &y_slice, &mut back_slice);
             assert_eq!(back_vec, back_slice, "{domain:?}");
             assert_eq!(ladj_vec.to_bits(), ladj_slice.to_bits(), "{domain:?}");
+        }
+    }
+
+    #[test]
+    fn scalar_adj_matches_generic_invlink_and_fd() {
+        for (domain, y) in [
+            (Domain::Real, -0.8),
+            (Domain::Positive, 0.6),
+            (Domain::Interval(-1.0, 1.0), 0.9),
+            (Domain::Interval(2.0, 7.0), -1.3),
+        ] {
+            let link = invlink_scalar_adj(&domain, y);
+            // value + ladj agree with the generic slice form
+            let mut out = [0.0f64];
+            let ladj = invlink_slice(&domain, &[y], &mut out);
+            assert_eq!(link.x.to_bits(), out[0].to_bits(), "{domain:?}");
+            assert_eq!(link.ladj.to_bits(), ladj.to_bits(), "{domain:?}");
+            // derivatives agree with finite differences
+            let dx = finite_diff_grad(
+                |yy| {
+                    let mut o = [0.0f64];
+                    let _ = invlink_slice(&domain, &[yy[0]], &mut o);
+                    o[0]
+                },
+                &[y],
+                1e-6,
+            )[0];
+            assert!((link.dx_dy - dx).abs() < 1e-6, "{domain:?}: {} vs {dx}", link.dx_dy);
+            let dl = finite_diff_grad(
+                |yy| {
+                    let mut o = [0.0f64];
+                    invlink_slice(&domain, &[yy[0]], &mut o)
+                },
+                &[y],
+                1e-6,
+            )[0];
+            assert!(
+                (link.dladj_dy - dl).abs() < 1e-6,
+                "{domain:?}: {} vs {dl}",
+                link.dladj_dy
+            );
         }
     }
 

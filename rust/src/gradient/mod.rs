@@ -3,8 +3,11 @@
 //! Samplers only see the [`LogDensity`] trait. Four families implement it:
 //!
 //! - [`NativeDensity`] — model executed through the **typed** trace with a
-//!   Rust AD backend ([`Backend::Forward`] duals or [`Backend::Reverse`]
-//!   tape). The "TypedVarInfo + Julia AD" configuration of the paper.
+//!   Rust AD backend: [`Backend::ReverseFused`] (arena-fused analytic
+//!   adjoints — the native default), [`Backend::Forward`] duals, or
+//!   [`Backend::Reverse`] tape. The "TypedVarInfo + Julia AD"
+//!   configuration of the paper, with the fused engine standing in for
+//!   Stan's compiled `_lpdf` varis.
 //! - [`UntypedDensity`] — same, through the boxed trace: the
 //!   pre-specialization configuration.
 //! - `XlaDensity` (in [`crate::runtime`]) — the AOT-compiled artifact:
@@ -14,8 +17,9 @@
 
 use crate::context::Context;
 use crate::model::{
-    typed_grad_forward, typed_grad_reverse, typed_logp, untyped_grad_forward,
-    untyped_grad_reverse, untyped_logp, Model,
+    typed_grad_forward, typed_grad_fused, typed_grad_fused_into, typed_grad_reverse, typed_logp,
+    untyped_grad_forward, untyped_grad_fused, untyped_grad_fused_into, untyped_grad_reverse,
+    untyped_logp, Model,
 };
 use crate::varinfo::{TypedVarInfo, UntypedVarInfo};
 
@@ -25,15 +29,30 @@ pub trait LogDensity: Sync {
     fn logp(&self, theta: &[f64]) -> f64;
     /// Value and gradient.
     fn logp_grad(&self, theta: &[f64]) -> (f64, Vec<f64>);
+
+    /// Value and gradient into a caller-owned buffer — the leapfrog hot
+    /// path. The default delegates to [`LogDensity::logp_grad`] and
+    /// copies; allocation-free backends (the arena-fused native engine)
+    /// override it to write in place.
+    fn logp_grad_into(&self, theta: &[f64], grad: &mut [f64]) -> f64 {
+        let (lp, g) = self.logp_grad(theta);
+        grad.copy_from_slice(&g);
+        lp
+    }
 }
 
 /// Which Rust AD engine a native density uses.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum Backend {
     /// Forward duals: n passes per gradient (ForwardDiff.jl analogue).
     Forward,
     /// Reverse tape: one pass, per-op heap nodes (Tracker.jl analogue).
     Reverse,
+    /// Arena-fused reverse mode: one pass, one analytic-adjoint kernel per
+    /// tilde statement on a capacity-retaining arena (Stan's `_lpdf` vari
+    /// design) — the default native engine.
+    #[default]
+    ReverseFused,
 }
 
 /// Model + typed trace + Rust AD.
@@ -53,6 +72,11 @@ impl<'a> NativeDensity<'a> {
             backend,
         }
     }
+
+    /// The default native configuration: arena-fused reverse mode.
+    pub fn fused(model: &'a dyn Model, tvi: &'a TypedVarInfo) -> Self {
+        Self::new(model, tvi, Backend::ReverseFused)
+    }
 }
 
 impl<'a> LogDensity for NativeDensity<'a> {
@@ -68,6 +92,21 @@ impl<'a> LogDensity for NativeDensity<'a> {
         match self.backend {
             Backend::Forward => typed_grad_forward(self.model, self.tvi, theta, self.ctx),
             Backend::Reverse => typed_grad_reverse(self.model, self.tvi, theta, self.ctx),
+            Backend::ReverseFused => typed_grad_fused(self.model, self.tvi, theta, self.ctx),
+        }
+    }
+
+    fn logp_grad_into(&self, theta: &[f64], grad: &mut [f64]) -> f64 {
+        match self.backend {
+            // fused: straight into the caller's buffer, zero allocation
+            Backend::ReverseFused => {
+                typed_grad_fused_into(self.model, self.tvi, theta, self.ctx, grad)
+            }
+            _ => {
+                let (lp, g) = self.logp_grad(theta);
+                grad.copy_from_slice(&g);
+                lp
+            }
         }
     }
 }
@@ -104,6 +143,20 @@ impl<'a> LogDensity for UntypedDensity<'a> {
         match self.backend {
             Backend::Forward => untyped_grad_forward(self.model, self.vi, theta, self.ctx),
             Backend::Reverse => untyped_grad_reverse(self.model, self.vi, theta, self.ctx),
+            Backend::ReverseFused => untyped_grad_fused(self.model, self.vi, theta, self.ctx),
+        }
+    }
+
+    fn logp_grad_into(&self, theta: &[f64], grad: &mut [f64]) -> f64 {
+        match self.backend {
+            Backend::ReverseFused => {
+                untyped_grad_fused_into(self.model, self.vi, theta, self.ctx, grad)
+            }
+            _ => {
+                let (lp, g) = self.logp_grad(theta);
+                grad.copy_from_slice(&g);
+                lp
+            }
         }
     }
 }

@@ -1,5 +1,85 @@
 //! Warmup adaptation: dual-averaging step-size (Nesterov 2009, as used by
-//! Stan and AdvancedHMC) and diagonal mass-matrix estimation (Welford).
+//! Stan and AdvancedHMC), diagonal mass-matrix estimation (Welford), and
+//! Stan's initial-step-size doubling heuristic.
+
+use rand_core::RngCore;
+
+use crate::gradient::LogDensity;
+use crate::util::rng::Rng;
+
+/// Stan's initial-step-size heuristic (Hoffman & Gelman 2014, Alg. 4 with
+/// identity mass): from a random momentum, take **one** leapfrog step and
+/// double/halve ε until the step's acceptance probability crosses ½.
+/// Runs entirely on the allocation-free [`LogDensity::logp_grad_into`]
+/// path — two reused buffers, however many probes it takes.
+///
+/// Returns `(ε, gradient evaluations spent)` so callers can keep their
+/// `n_grad_evals` accounting honest. Self-contained by design: it
+/// evaluates its own base gradient at `theta0` (one evaluation the
+/// calling sampler will repeat), which keeps it usable standalone.
+pub fn find_initial_step_size<R: RngCore>(
+    ld: &dyn LogDensity,
+    theta0: &[f64],
+    eps0: f64,
+    rng: &mut R,
+) -> (f64, u64) {
+    let dim = ld.dim();
+    let mut eps = if eps0.is_finite() && eps0 > 0.0 {
+        eps0
+    } else {
+        1.0
+    };
+    let mut n_evals: u64 = 1;
+    let mut grad0 = vec![0.0; dim];
+    let lp0 = ld.logp_grad_into(theta0, &mut grad0);
+    if !lp0.is_finite() || dim == 0 {
+        return (eps, n_evals);
+    }
+    let p0: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+    let h0 = -lp0 + 0.5 * p0.iter().map(|x| x * x).sum::<f64>();
+
+    // scratch reused across probes
+    let mut theta = vec![0.0; dim];
+    let mut p = vec![0.0; dim];
+    let mut grad = vec![0.0; dim];
+
+    let mut log_ratio = |eps: f64, n_evals: &mut u64| -> f64 {
+        *n_evals += 1;
+        theta.copy_from_slice(theta0);
+        p.copy_from_slice(&p0);
+        for i in 0..dim {
+            p[i] += 0.5 * eps * grad0[i];
+            theta[i] += eps * p[i];
+        }
+        let lp = ld.logp_grad_into(&theta, &mut grad);
+        if !lp.is_finite() {
+            return f64::NEG_INFINITY;
+        }
+        for i in 0..dim {
+            p[i] += 0.5 * eps * grad[i];
+        }
+        h0 - (-lp + 0.5 * p.iter().map(|x| x * x).sum::<f64>())
+    };
+
+    // direction: double while accept > 1/2, else halve while accept < 1/2
+    let half_ln = (0.5f64).ln();
+    let mut r = log_ratio(eps, &mut n_evals);
+    let dir: f64 = if r > half_ln { 1.0 } else { -1.0 };
+    for _ in 0..50 {
+        if (dir > 0.0 && r <= half_ln) || (dir < 0.0 && r >= half_ln) {
+            break;
+        }
+        eps *= if dir > 0.0 { 2.0 } else { 0.5 };
+        if !(1e-10..=1e10).contains(&eps) {
+            // a degenerate target ran the doubling past the guard rail:
+            // hand dual averaging the rail, not the overshoot
+            eps = eps.clamp(1e-10, 1e10);
+            break;
+        }
+        r = log_ratio(eps, &mut n_evals);
+    }
+    (eps, n_evals)
+}
 
 /// Dual-averaging step-size adaptation targeting an acceptance statistic.
 #[derive(Clone, Debug)]
@@ -156,5 +236,29 @@ mod tests {
     fn welford_regularizes_small_samples() {
         let w = WelfordVar::new(3);
         assert_eq!(w.variance(), vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn initial_step_size_lands_near_target_scale() {
+        // Std normal: the heuristic's fixed point is ε where a single
+        // leapfrog step has accept ≈ 1/2, which for N(0, I) is O(1).
+        let ld = crate::gradient::std_normal_density(5);
+        let mut rng = crate::util::rng::Xoshiro256pp::seed_from_u64(3);
+        let theta0 = [0.3, -0.2, 0.1, 0.0, 0.4];
+        // far-too-small and far-too-large guesses both converge to O(1)
+        let (lo, lo_evals) = find_initial_step_size(&ld, &theta0, 1e-6, &mut rng);
+        let (hi, _) = find_initial_step_size(&ld, &theta0, 1e4, &mut rng);
+        assert!(lo > 1e-3 && lo < 100.0, "{lo}");
+        assert!(hi > 1e-3 && hi < 1e4, "{hi}");
+        // the probe reports its gradient spend (init eval + ≥1 probe)
+        assert!(lo_evals >= 2, "{lo_evals}");
+        // a tight target (tiny variance) forces a small ε
+        let stiff = crate::gradient::FnDensity {
+            dim: 1,
+            f: |t: &[f64]| -0.5 * t[0] * t[0] / 1e-6,
+            g: |t: &[f64]| (-0.5 * t[0] * t[0] / 1e-6, vec![-t[0] / 1e-6]),
+        };
+        let (eps, _) = find_initial_step_size(&stiff, &[0.0], 1.0, &mut rng);
+        assert!(eps < 0.1, "{eps}");
     }
 }

@@ -12,7 +12,9 @@ use rand_core::RngCore;
 use crate::chain::SamplerStats;
 use crate::context::Context;
 use crate::dist::{bijector, Domain};
-use crate::model::{init_trace, typed_grad_forward, typed_grad_reverse, typed_logp, Model};
+use crate::model::{
+    init_trace, typed_grad_forward, typed_grad_fused, typed_grad_reverse, typed_logp, Model,
+};
 use crate::particle::Resampler;
 use crate::util::rng::Rng;
 use crate::value::Value;
@@ -112,6 +114,8 @@ impl GibbsBlock {
 pub enum GibbsGrad {
     Forward,
     Reverse,
+    /// Arena-fused reverse mode (`Backend::ReverseFused`).
+    Fused,
 }
 
 /// Blocked Gibbs sampler.
@@ -239,6 +243,9 @@ impl Gibbs {
                                 }
                                 GibbsGrad::Reverse => {
                                     typed_grad_reverse(model, &tvi, th, Context::Default)
+                                }
+                                GibbsGrad::Fused => {
+                                    typed_grad_fused(model, &tvi, th, Context::Default)
                                 }
                             }
                         };

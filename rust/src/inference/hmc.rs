@@ -23,6 +23,10 @@ pub struct Hmc {
     pub adapt_mass: bool,
     /// Dual-averaging target acceptance.
     pub target_accept: f64,
+    /// Probe a starting ε with the warmup adapter's doubling heuristic
+    /// ([`super::adapt::find_initial_step_size`]) before dual averaging
+    /// takes over, instead of trusting `step_size` blindly.
+    pub init_step_size: bool,
 }
 
 impl Default for Hmc {
@@ -33,6 +37,7 @@ impl Default for Hmc {
             adapt_step_size: true,
             adapt_mass: false,
             target_accept: 0.8,
+            init_step_size: false,
         }
     }
 }
@@ -46,6 +51,7 @@ impl Hmc {
             adapt_step_size: false,
             adapt_mass: false,
             target_accept: 0.8,
+            init_step_size: false,
         }
     }
 
@@ -66,7 +72,8 @@ impl Hmc {
         let t_start = std::time::Instant::now();
 
         let mut theta = theta0.to_vec();
-        let (mut lp, mut grad) = ld.logp_grad(&theta);
+        let mut grad = vec![0.0; dim];
+        let mut lp = ld.logp_grad_into(&theta, &mut grad);
         assert!(
             lp.is_finite(),
             "HMC initialized at a zero-probability point (logp = {lp})"
@@ -74,6 +81,12 @@ impl Hmc {
         let mut n_grad: u64 = 1;
 
         let mut eps = self.step_size;
+        if self.init_step_size {
+            let (probed, evals) =
+                super::adapt::find_initial_step_size(ld, &theta, self.step_size, rng);
+            eps = probed;
+            n_grad += evals;
+        }
         let mut da = DualAveraging::new(eps, self.target_accept);
         let mut mass_est = WelfordVar::new(dim);
         // inv_mass[i] = estimated posterior variance of coordinate i
@@ -108,16 +121,19 @@ impl Hmc {
             let mut lp_prop = lp;
             let mut diverged = false;
 
-            // leapfrog trajectory
+            // leapfrog trajectory — gradients land in the reused buffer
+            // (`logp_grad_into`): with the fused backend the sampler and
+            // gradient engine allocate nothing here (the one exception is
+            // the `Vec` each vector-valued assume must hand the model
+            // body, inherent to the `TildeApi` contract)
             for _ in 0..self.n_leapfrog {
                 for i in 0..dim {
                     p[i] += 0.5 * eps * grad_prop[i];
                     theta_prop[i] += eps * p[i] * inv_mass[i];
                 }
-                let (l, g) = ld.logp_grad(&theta_prop);
+                let l = ld.logp_grad_into(&theta_prop, &mut grad_prop);
                 n_grad += 1;
                 lp_prop = l;
-                grad_prop.copy_from_slice(&g);
                 if !l.is_finite() {
                     diverged = true;
                     break;

@@ -18,6 +18,9 @@ pub struct Nuts {
     pub max_depth: usize,
     pub target_accept: f64,
     pub adapt_mass: bool,
+    /// Probe a starting ε with the warmup adapter's doubling heuristic
+    /// before dual averaging takes over.
+    pub init_step_size: bool,
 }
 
 impl Default for Nuts {
@@ -27,6 +30,7 @@ impl Default for Nuts {
             max_depth: 10,
             target_accept: 0.8,
             adapt_mass: true,
+            init_step_size: false,
         }
     }
 }
@@ -63,14 +67,22 @@ impl Nuts {
     ) -> RawDraws {
         let dim = ld.dim();
         let t_start = std::time::Instant::now();
+        let mut probe_evals: u64 = 0;
         let mut eps = self.step_size;
+        if self.init_step_size {
+            let (probed, evals) =
+                super::adapt::find_initial_step_size(ld, theta0, self.step_size, rng);
+            eps = probed;
+            probe_evals = evals;
+        }
         let mut da = DualAveraging::new(eps, self.target_accept);
         let mut mass_est = WelfordVar::new(dim);
         let mut inv_mass: Vec<f64> = vec![1.0; dim];
 
-        let (lp0, grad0) = ld.logp_grad(theta0);
+        let mut grad0 = vec![0.0; dim];
+        let lp0 = ld.logp_grad_into(theta0, &mut grad0);
         assert!(lp0.is_finite(), "NUTS initialized at zero-probability point");
-        let mut n_grad: u64 = 1;
+        let mut n_grad: u64 = 1 + probe_evals;
         let mut current = State {
             theta: theta0.to_vec(),
             p: vec![0.0; dim],
@@ -197,7 +209,12 @@ fn leapfrog(ld: &dyn LogDensity, s: &State, dir: f64, eps: f64, inv_mass: &[f64]
         p[i] += 0.5 * e * s.grad[i];
         theta[i] += e * p[i] * inv_mass[i];
     }
-    let (lp, grad) = ld.logp_grad(&theta);
+    // tree states own their (stored) buffers, so this allocation is
+    // inherent to NUTS's tree construction; `logp_grad_into` writes into
+    // it in place, keeping the gradient *engine* allocation-free (the
+    // fully allocation-free leapfrog loop lives in static HMC)
+    let mut grad = vec![0.0; dim];
+    let lp = ld.logp_grad_into(&theta, &mut grad);
     for i in 0..dim {
         p[i] += 0.5 * e * grad[i];
     }

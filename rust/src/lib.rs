@@ -43,6 +43,7 @@ pub use varname::{Sym, VarName};
 
 /// Convenience re-exports for model authors and examples.
 pub mod prelude {
+    pub use crate::ad::arena::AVar;
     pub use crate::ad::forward::Dual;
     pub use crate::ad::reverse::TVar;
     pub use crate::ad::Scalar;
@@ -50,8 +51,10 @@ pub mod prelude {
     pub use crate::dist::*;
     pub use crate::model::macros::c;
     pub use crate::model::{
-        init_trace, init_typed, sample_run, typed_grad_forward, typed_grad_reverse, typed_logp,
-        untyped_grad_forward, untyped_grad_reverse, untyped_logp, Model, TildeApi,
+        init_trace, init_typed, sample_run, typed_grad_forward, typed_grad_fused,
+        typed_grad_fused_into, typed_grad_reverse, typed_logp, untyped_grad_forward,
+        untyped_grad_fused, untyped_grad_fused_into, untyped_grad_reverse, untyped_logp, Model,
+        TildeApi,
     };
     pub use crate::util::rng::{Rng, Xoshiro256pp};
     pub use crate::value::Value;

@@ -2,9 +2,10 @@
 
 use rand_core::RngCore;
 
+use crate::ad::arena::{self, AVar};
 use crate::ad::Scalar;
 use crate::context::{Accumulator, Context};
-use crate::dist::{bijector, DiscreteDist, ScalarDist, VecDist};
+use crate::dist::{bijector, DiscreteDist, Domain, ScalarAdj, ScalarDist, VecDist};
 use crate::value::Value;
 use crate::varinfo::{flags, TypedVarInfo, UntypedVarInfo};
 use crate::varname::VarName;
@@ -117,6 +118,41 @@ impl<'a, R: RngCore> TildeApi<f64> for SampleExecutor<'a, R> {
     }
 }
 
+/// Cursor step shared by the typed flat executors: visit `i` of the model
+/// must be slot `i` of the frozen layout (checked with `debug_assert`);
+/// exhausting the layout is a dynamic structure change.
+#[inline]
+fn cursor_next_slot<'a>(
+    tvi: &'a TypedVarInfo,
+    cursor: &mut usize,
+    vn: &VarName,
+) -> &'a crate::varinfo::Slot {
+    let slot = tvi.slots().get(*cursor).unwrap_or_else(|| {
+        panic!("typed layout exhausted at {vn} — dynamic structure change; re-specialize the trace")
+    });
+    debug_assert_eq!(
+        &slot.vn, vn,
+        "typed layout mismatch: expected {}, model visited {vn}",
+        slot.vn
+    );
+    *cursor += 1;
+    slot
+}
+
+/// Rebuild a boxed trace's `VarName` → unconstrained-offset map (FNV-keyed
+/// — see `util::hash`). The boxed path has no frozen layout to reuse, so
+/// both untyped flat executors pay this on every construction, mimicking
+/// `Vector{Real}` re-traversal.
+fn untyped_offset_map(vi: &UntypedVarInfo) -> crate::util::hash::FnvHashMap<VarName, usize> {
+    let mut offsets = crate::util::hash::FnvHashMap::default();
+    let mut off = 0;
+    for rec in vi.records() {
+        offsets.insert(rec.vn.clone(), off);
+        off += rec.domain.unconstrained_dim();
+    }
+    offsets
+}
+
 /// Evaluates the log-density from a flat unconstrained slice using the
 /// frozen [`TypedVarInfo`] layout — the specialized fast path.
 ///
@@ -163,18 +199,7 @@ impl<'a, T: Scalar> TypedExecutor<'a, T> {
 
     #[inline]
     fn next_slot(&mut self, vn: &VarName) -> &'a crate::varinfo::Slot {
-        let slot = self
-            .tvi
-            .slots()
-            .get(self.cursor)
-            .unwrap_or_else(|| panic!("typed layout exhausted at {vn} — dynamic structure change; re-specialize the trace"));
-        debug_assert_eq!(
-            &slot.vn, vn,
-            "typed layout mismatch: expected {}, model visited {vn}",
-            slot.vn
-        );
-        self.cursor += 1;
-        slot
+        cursor_next_slot(self.tvi, &mut self.cursor, vn)
     }
 }
 
@@ -536,7 +561,7 @@ impl<'a, R: RngCore> TildeApi<f64> for TypedReplayExecutor<'a, R> {
 /// run from the record order, mimicking `Vector{Real}` re-traversal.
 pub struct UntypedFlatExecutor<'a, T: Scalar> {
     vi: &'a UntypedVarInfo,
-    offsets: std::collections::HashMap<VarName, usize>,
+    offsets: crate::util::hash::FnvHashMap<VarName, usize>,
     theta: &'a [T],
     acc: Accumulator<T>,
     ctx: Context,
@@ -554,18 +579,10 @@ impl<'a> UntypedFlatExecutor<'a, f64> {
 
 impl<'a, T: Scalar> UntypedFlatExecutor<'a, T> {
     pub fn new_generic(vi: &'a UntypedVarInfo, theta: &'a [T], ctx: Context) -> Self {
-        // Rebuild the VarName→offset map on every executor construction —
-        // the boxed path has no frozen layout to reuse.
-        let mut offsets = std::collections::HashMap::new();
-        let mut off = 0;
-        for rec in vi.records() {
-            offsets.insert(rec.vn.clone(), off);
-            off += rec.domain.unconstrained_dim();
-        }
-        debug_assert_eq!(off, theta.len());
+        debug_assert_eq!(vi.num_unconstrained(), theta.len());
         Self {
             vi,
-            offsets,
+            offsets: untyped_offset_map(vi),
             theta,
             acc: Accumulator::new(ctx),
             ctx,
@@ -647,5 +664,517 @@ impl<'a, T: Scalar> TildeApi<T> for UntypedFlatExecutor<'a, T> {
 
     fn context(&self) -> Context {
         self.ctx
+    }
+}
+
+// ------------------------------------------------------------- fused path
+
+/// Reused buffers for the fused executors, parked in a thread-local
+/// between gradient evaluations so the steady-state `logp_grad_into` path
+/// allocates nothing.
+#[derive(Default)]
+struct FusedScratch {
+    /// Per-component ∂logpdf/∂x of the current vector statement.
+    dx: Vec<f64>,
+    /// Constrained primal values of the current vector statement.
+    xs: Vec<f64>,
+    /// Unconstrained coordinates as arena variables (simplex invlink).
+    yv: Vec<AVar>,
+}
+
+thread_local! {
+    static FUSED_SCRATCH: std::cell::RefCell<FusedScratch> =
+        std::cell::RefCell::new(FusedScratch::default());
+}
+
+fn take_fused_scratch() -> FusedScratch {
+    FUSED_SCRATCH.with(|s| std::mem::take(&mut s.borrow_mut()))
+}
+
+fn park_fused_scratch(scratch: FusedScratch) {
+    FUSED_SCRATCH.with(|s| *s.borrow_mut() = scratch);
+}
+
+/// One fused scalar assume: invlink the single coordinate analytically,
+/// evaluate the density's analytic adjoint, and attach the constrained
+/// value to the tape as **at most one** node (`Real` aliases the input
+/// leaf outright).
+fn fused_assume_scalar(
+    theta: &[f64],
+    off: usize,
+    domain: &Domain,
+    dist: &ScalarDist<AVar>,
+) -> (AVar, f64, ScalarAdj, bijector::ScalarLink) {
+    let link = bijector::invlink_scalar_adj(domain, theta[off]);
+    let adj = dist.logpdf_adj(link.x);
+    let x = if matches!(domain, Domain::Real) {
+        AVar::leaf(off as u32, link.x)
+    } else {
+        let idx = arena::with_tape(|t| t.push1(off as u32, link.dx_dy));
+        AVar::from_node(idx, link.x)
+    };
+    (x, adj.lp + link.ladj, adj, link)
+}
+
+/// Seed the gradient contributions of a fused scalar assume, scaled by the
+/// context's prior weight.
+fn seed_assume_scalar(
+    x: &AVar,
+    off: usize,
+    dist: &ScalarDist<AVar>,
+    adj: &ScalarAdj,
+    link: &bijector::ScalarLink,
+    w: f64,
+) {
+    arena::with_tape(|t| {
+        t.seed(x.idx(), adj.d_x * w);
+        t.seed(off as u32, link.dladj_dy * w);
+        let (ps, np) = dist.param_vars();
+        for (p, d) in ps.iter().zip(adj.d_p).take(np) {
+            t.seed(p.idx(), d * w);
+        }
+    });
+}
+
+/// One fused vector assume. Diagonal links (`RealVec`, `PositiveVec`) get
+/// analytic per-component nodes (identity aliases the leaves, so costs
+/// zero nodes); `Simplex` runs the generic stick-breaking invlink over
+/// arena variables (O(n) two-parent nodes) and seeds the returned ladj
+/// node. The density itself is always one analytic `logpdf_adj` kernel.
+/// Returns `(value, lp, param partials, ladj node — NONE-indexed when the
+/// ladj gradient is seeded directly on the leaves)`.
+fn fused_assume_vec(
+    theta: &[f64],
+    off: usize,
+    domain: &Domain,
+    dist: &VecDist<AVar>,
+    scratch: &mut FusedScratch,
+) -> (Vec<AVar>, f64, ScalarAdj, AVar) {
+    let n = domain.constrained_dim();
+    scratch.dx.clear();
+    scratch.dx.resize(n, 0.0);
+    match domain {
+        Domain::RealVec(_) => {
+            let out: Vec<AVar> = (0..n)
+                .map(|i| AVar::leaf((off + i) as u32, theta[off + i]))
+                .collect();
+            let adj = dist.logpdf_adj(&theta[off..off + n], &mut scratch.dx);
+            (out, adj.lp, adj, AVar::constant(0.0))
+        }
+        Domain::PositiveVec(_) => {
+            scratch.xs.clear();
+            let mut ladj = 0.0;
+            let out: Vec<AVar> = (0..n)
+                .map(|i| {
+                    let y = theta[off + i];
+                    let x = y.exp();
+                    ladj += y;
+                    scratch.xs.push(x);
+                    let idx = arena::with_tape(|t| t.push1((off + i) as u32, x));
+                    AVar::from_node(idx, x)
+                })
+                .collect();
+            let adj = dist.logpdf_adj(&scratch.xs, &mut scratch.dx);
+            (out, adj.lp + ladj, adj, AVar::constant(0.0))
+        }
+        Domain::Simplex(_) => {
+            let m = domain.unconstrained_dim();
+            scratch.yv.clear();
+            scratch
+                .yv
+                .extend((0..m).map(|i| AVar::leaf((off + i) as u32, theta[off + i])));
+            let mut out = vec![AVar::constant(0.0); n];
+            let ladj = bijector::invlink_slice(domain, &scratch.yv, &mut out);
+            scratch.xs.clear();
+            scratch.xs.extend(out.iter().map(|x| x.value()));
+            let adj = dist.logpdf_adj(&scratch.xs, &mut scratch.dx);
+            (out, adj.lp + ladj.value(), adj, ladj)
+        }
+        other => panic!("vector assume over scalar/discrete domain {other:?}"),
+    }
+}
+
+/// Seed a fused vector assume: per-component density partials on the value
+/// nodes, ladj partials on the leaves (diagonal links) or the ladj node
+/// (simplex), parameter partials on the parameter variables.
+#[allow(clippy::too_many_arguments)]
+fn seed_assume_vec(
+    out: &[AVar],
+    off: usize,
+    domain: &Domain,
+    ladj: &AVar,
+    dist: &VecDist<AVar>,
+    adj: &ScalarAdj,
+    dx: &[f64],
+    w: f64,
+) {
+    arena::with_tape(|t| {
+        for (x, &d) in out.iter().zip(dx) {
+            t.seed(x.idx(), d * w);
+        }
+        match domain {
+            Domain::PositiveVec(n) => {
+                for i in 0..*n {
+                    t.seed((off + i) as u32, w);
+                }
+            }
+            Domain::Simplex(_) => t.seed(ladj.idx(), w),
+            _ => {}
+        }
+        let (ps, np) = dist.param_vars();
+        for (p, d) in ps.iter().zip(adj.d_p).take(np) {
+            t.seed(p.idx(), d * w);
+        }
+    });
+}
+
+/// The engine shared by both fused executors: context-weighted
+/// accumulation, seed-weight bookkeeping, the per-statement fused kernels
+/// and the parked scratch. The two executor types differ only in how a
+/// tilde statement resolves to an `(offset, domain)` — cursor walk over
+/// the frozen layout vs hash lookup in the boxed trace.
+struct FusedCore {
+    acc: Accumulator<f64>,
+    ctx: Context,
+    prior_w: f64,
+    lik_w: f64,
+    stmts: usize,
+    scratch: FusedScratch,
+}
+
+impl FusedCore {
+    fn new(ctx: Context) -> Self {
+        Self {
+            acc: Accumulator::new(ctx),
+            ctx,
+            prior_w: ctx.prior_weight(),
+            lik_w: ctx.lik_weight(),
+            stmts: 0,
+            scratch: take_fused_scratch(),
+        }
+    }
+
+    /// Final log-density + tilde-statement count; parks the scratch
+    /// buffers for the next run.
+    fn finish(self) -> (f64, usize) {
+        let lp = self.acc.total();
+        let stmts = self.stmts;
+        park_fused_scratch(self.scratch);
+        (lp, stmts)
+    }
+
+    /// Accumulate a prior-side term; returns the weight its seeds carry
+    /// (0.0 when the term is dropped — context weight zero, or the run
+    /// was already/just rejected).
+    #[inline]
+    fn prior_seed_weight(&mut self, lp: f64) -> f64 {
+        let pre = self.acc.rejected();
+        self.acc.add_prior(lp);
+        if !pre && !self.acc.rejected() {
+            self.prior_w
+        } else {
+            0.0
+        }
+    }
+
+    /// Likelihood-side analogue of [`Self::prior_seed_weight`].
+    #[inline]
+    fn lik_seed_weight(&mut self, lp: f64) -> f64 {
+        let pre = self.acc.rejected();
+        self.acc.add_lik(lp);
+        if !pre && !self.acc.rejected() {
+            self.lik_w
+        } else {
+            0.0
+        }
+    }
+
+    fn assume_scalar(
+        &mut self,
+        theta: &[f64],
+        off: usize,
+        domain: &Domain,
+        dist: &ScalarDist<AVar>,
+    ) -> AVar {
+        self.stmts += 1;
+        let (x, lp, adj, link) = fused_assume_scalar(theta, off, domain, dist);
+        let w = self.prior_seed_weight(lp);
+        if w != 0.0 {
+            seed_assume_scalar(&x, off, dist, &adj, &link, w);
+        }
+        x
+    }
+
+    fn assume_vec(
+        &mut self,
+        theta: &[f64],
+        off: usize,
+        domain: &Domain,
+        dist: &VecDist<AVar>,
+    ) -> Vec<AVar> {
+        self.stmts += 1;
+        let (out, lp, adj, ladj) = fused_assume_vec(theta, off, domain, dist, &mut self.scratch);
+        let w = self.prior_seed_weight(lp);
+        if w != 0.0 {
+            seed_assume_vec(&out, off, domain, &ladj, dist, &adj, &self.scratch.dx, w);
+        }
+        out
+    }
+
+    /// Score a discrete assume whose value `k` the caller fetched from
+    /// its trace representation.
+    fn assume_int(&mut self, k: i64, dist: &DiscreteDist<AVar>) -> i64 {
+        self.stmts += 1;
+        let (lp, dp) = dist.logpmf_adj(k);
+        let w = self.prior_seed_weight(lp);
+        if w != 0.0 {
+            if let Some(p) = dist.param_var() {
+                arena::seed(p.idx(), dp * w);
+            }
+        }
+        k
+    }
+
+    fn observe(&mut self, dist: &ScalarDist<AVar>, obs: f64) {
+        self.stmts += 1;
+        let adj = dist.logpdf_adj(obs);
+        let w = self.lik_seed_weight(adj.lp);
+        if w != 0.0 {
+            seed_params_scalar(dist, &adj, w);
+        }
+    }
+
+    fn observe_int(&mut self, dist: &DiscreteDist<AVar>, obs: i64) {
+        self.stmts += 1;
+        let (lp, dp) = dist.logpmf_adj(obs);
+        let w = self.lik_seed_weight(lp);
+        if w != 0.0 {
+            if let Some(p) = dist.param_var() {
+                arena::seed(p.idx(), dp * w);
+            }
+        }
+    }
+
+    fn observe_vec(&mut self, dist: &VecDist<AVar>, obs: &[f64]) {
+        self.stmts += 1;
+        self.scratch.dx.clear();
+        self.scratch.dx.resize(obs.len(), 0.0);
+        let adj = dist.logpdf_adj(obs, &mut self.scratch.dx);
+        let w = self.lik_seed_weight(adj.lp);
+        if w != 0.0 {
+            let (ps, np) = dist.param_vars();
+            arena::with_tape(|t| {
+                for (p, d) in ps.iter().zip(adj.d_p).take(np) {
+                    t.seed(p.idx(), d * w);
+                }
+            });
+        }
+    }
+
+    fn add_obs_logp(&mut self, lp: AVar) {
+        self.stmts += 1;
+        let w = self.lik_seed_weight(lp.value());
+        arena::seed(lp.idx(), w);
+    }
+
+    fn add_prior_logp(&mut self, lp: AVar) {
+        self.stmts += 1;
+        let w = self.prior_seed_weight(lp.value());
+        arena::seed(lp.idx(), w);
+    }
+}
+
+/// Seed a scalar density's parameter partials (observe statements).
+fn seed_params_scalar(dist: &ScalarDist<AVar>, adj: &ScalarAdj, w: f64) {
+    let (ps, np) = dist.param_vars();
+    arena::with_tape(|t| {
+        for (p, d) in ps.iter().zip(adj.d_p).take(np) {
+            t.seed(p.idx(), d * w);
+        }
+    });
+}
+
+/// Evaluates log-density and **analytic-adjoint gradient seeds** from a
+/// flat unconstrained slice over the frozen [`TypedVarInfo`] layout — the
+/// arena-fused fast path ([`crate::gradient::Backend::ReverseFused`]).
+///
+/// Cursor semantics are identical to [`TypedExecutor`]; the difference is
+/// what lands on the tape. Where the generic tape records ~20 scalar-op
+/// nodes per tilde statement, this executor calls each distribution's
+/// fused `logpdf_adj` kernel (value + closed-form partials in one pass)
+/// and records the partials as *seeds*, so a tilde costs at most one value
+/// node (`Real`-domain assumes and all observe statements cost zero).
+/// Model-body arithmetic between tilde statements still traces through
+/// [`AVar`] ops, which is what keeps arbitrary parameter dependencies
+/// (`Normal(mu + phi * h, sigma)`) exact.
+pub struct TypedFusedExecutor<'a> {
+    tvi: &'a TypedVarInfo,
+    theta: &'a [f64],
+    cursor: usize,
+    core: FusedCore,
+}
+
+impl<'a> TypedFusedExecutor<'a> {
+    pub fn new(tvi: &'a TypedVarInfo, theta: &'a [f64], ctx: Context) -> Self {
+        debug_assert_eq!(theta.len(), tvi.dim());
+        Self {
+            tvi,
+            theta,
+            cursor: 0,
+            core: FusedCore::new(ctx),
+        }
+    }
+
+    /// Final log-density + tilde-statement count.
+    pub fn finish(self) -> (f64, usize) {
+        self.core.finish()
+    }
+
+    #[inline]
+    fn next_slot(&mut self, vn: &VarName) -> &'a crate::varinfo::Slot {
+        cursor_next_slot(self.tvi, &mut self.cursor, vn)
+    }
+}
+
+impl<'a> TildeApi<AVar> for TypedFusedExecutor<'a> {
+    fn assume(&mut self, vn: VarName, dist: &ScalarDist<AVar>) -> AVar {
+        let slot = self.next_slot(&vn);
+        self.core
+            .assume_scalar(self.theta, slot.unc_offset, &slot.domain, dist)
+    }
+
+    fn assume_vec(&mut self, vn: VarName, dist: &VecDist<AVar>) -> Vec<AVar> {
+        let slot = self.next_slot(&vn);
+        self.core
+            .assume_vec(self.theta, slot.unc_offset, &slot.domain, dist)
+    }
+
+    fn assume_int(&mut self, vn: VarName, dist: &DiscreteDist<AVar>) -> i64 {
+        let slot = self.next_slot(&vn);
+        let k = self.tvi.discrete[slot.disc_offset];
+        self.core.assume_int(k, dist)
+    }
+
+    fn observe(&mut self, dist: &ScalarDist<AVar>, obs: f64) {
+        self.core.observe(dist, obs);
+    }
+
+    fn observe_int(&mut self, dist: &DiscreteDist<AVar>, obs: i64) {
+        self.core.observe_int(dist, obs);
+    }
+
+    fn observe_vec(&mut self, dist: &VecDist<AVar>, obs: &[f64]) {
+        self.core.observe_vec(dist, obs);
+    }
+
+    fn add_obs_logp(&mut self, lp: AVar) {
+        self.core.add_obs_logp(lp);
+    }
+
+    fn add_prior_logp(&mut self, lp: AVar) {
+        self.core.add_prior_logp(lp);
+    }
+
+    fn reject(&mut self) {
+        self.core.acc.reject();
+    }
+
+    fn rejected(&self) -> bool {
+        self.core.acc.rejected()
+    }
+
+    fn context(&self) -> Context {
+        self.core.ctx
+    }
+}
+
+/// The fused engine **through the boxed trace**: hash-addressed offsets
+/// and boxed domain metadata like [`UntypedFlatExecutor`] (the dynamic
+/// costs stay, deliberately), but density statements go through the same
+/// [`FusedCore`] kernels and arena seeds as [`TypedFusedExecutor`] —
+/// isolating trace overhead from AD overhead in the benchmarks.
+pub struct UntypedFusedExecutor<'a> {
+    vi: &'a UntypedVarInfo,
+    offsets: crate::util::hash::FnvHashMap<VarName, usize>,
+    theta: &'a [f64],
+    core: FusedCore,
+}
+
+impl<'a> UntypedFusedExecutor<'a> {
+    pub fn new(vi: &'a UntypedVarInfo, theta: &'a [f64], ctx: Context) -> Self {
+        debug_assert_eq!(vi.num_unconstrained(), theta.len());
+        Self {
+            vi,
+            offsets: untyped_offset_map(vi),
+            theta,
+            core: FusedCore::new(ctx),
+        }
+    }
+
+    /// Final log-density + tilde-statement count.
+    pub fn finish(self) -> (f64, usize) {
+        self.core.finish()
+    }
+
+    fn lookup(&self, vn: &VarName) -> (usize, Domain) {
+        let off = *self
+            .offsets
+            .get(vn)
+            .unwrap_or_else(|| panic!("variable {vn} not in trace — dynamic structure change"));
+        let rec = self.vi.get(vn).unwrap();
+        (off, rec.domain.clone())
+    }
+}
+
+impl<'a> TildeApi<AVar> for UntypedFusedExecutor<'a> {
+    fn assume(&mut self, vn: VarName, dist: &ScalarDist<AVar>) -> AVar {
+        let (off, domain) = self.lookup(&vn);
+        self.core.assume_scalar(self.theta, off, &domain, dist)
+    }
+
+    fn assume_vec(&mut self, vn: VarName, dist: &VecDist<AVar>) -> Vec<AVar> {
+        let (off, domain) = self.lookup(&vn);
+        self.core.assume_vec(self.theta, off, &domain, dist)
+    }
+
+    fn assume_int(&mut self, vn: VarName, dist: &DiscreteDist<AVar>) -> i64 {
+        let rec = self
+            .vi
+            .get(&vn)
+            .unwrap_or_else(|| panic!("variable {vn} not in trace"));
+        let k = rec.value.as_int().expect("discrete assume of non-integer");
+        self.core.assume_int(k, dist)
+    }
+
+    fn observe(&mut self, dist: &ScalarDist<AVar>, obs: f64) {
+        self.core.observe(dist, obs);
+    }
+
+    fn observe_int(&mut self, dist: &DiscreteDist<AVar>, obs: i64) {
+        self.core.observe_int(dist, obs);
+    }
+
+    fn observe_vec(&mut self, dist: &VecDist<AVar>, obs: &[f64]) {
+        self.core.observe_vec(dist, obs);
+    }
+
+    fn add_obs_logp(&mut self, lp: AVar) {
+        self.core.add_obs_logp(lp);
+    }
+
+    fn add_prior_logp(&mut self, lp: AVar) {
+        self.core.add_prior_logp(lp);
+    }
+
+    fn reject(&mut self) {
+        self.core.acc.reject();
+    }
+
+    fn rejected(&self) -> bool {
+        self.core.acc.rejected()
+    }
+
+    fn context(&self) -> Context {
+        self.core.ctx
     }
 }

@@ -91,6 +91,12 @@ macro_rules! model {
             ) {
                 self.eval_generic(api)
             }
+            fn eval_arena(
+                &self,
+                api: &mut dyn $crate::model::TildeApi<$crate::ad::arena::AVar>,
+            ) {
+                self.eval_generic(api)
+            }
         }
     };
 }

@@ -2,10 +2,10 @@
 //!
 //! A model is written **once**, generically over the AD scalar type, as a
 //! sequence of tilde statements against the [`TildeApi`]. The [`Model`]
-//! trait exposes three monomorphized entry points (`f64`, forward dual,
-//! reverse tape) so model objects stay `dyn`-safe while the body compiles
-//! to specialized code per scalar type — the Rust rendering of Julia's
-//! compile-on-first-call specialization.
+//! trait exposes four monomorphized entry points (`f64`, forward dual,
+//! reverse tape, arena-fused) so model objects stay `dyn`-safe while the
+//! body compiles to specialized code per scalar type — the Rust rendering
+//! of Julia's compile-on-first-call specialization.
 //!
 //! Executors implementing [`TildeApi`]:
 //! - [`executors::SampleExecutor`] — draws missing variables from their
@@ -18,11 +18,17 @@
 //! - [`executors::UntypedFlatExecutor`] — same semantics but addresses
 //!   parameters through the boxed trace's hash map on every tilde: the
 //!   pre-specialization dynamic path the benchmarks contrast against.
+//! - [`executors::TypedFusedExecutor`] / [`executors::UntypedFusedExecutor`]
+//!   — the arena-fused gradient path: same cursor/hash addressing as their
+//!   generic counterparts, but each tilde statement runs one analytic
+//!   `logpdf_adj` kernel and records gradient *seeds* instead of taping
+//!   every scalar op (`Backend::ReverseFused`, the native default).
 
 pub mod executors;
 #[macro_use]
 pub mod macros;
 
+use crate::ad::arena::AVar;
 use crate::ad::forward::Dual;
 use crate::ad::reverse::TVar;
 use crate::ad::Scalar;
@@ -91,7 +97,7 @@ pub trait TildeApi<T: Scalar> {
 ///
 /// Implementations are usually produced by the [`crate::model!`] macro,
 /// which writes the body once (generic over [`Scalar`]) and dispatches the
-/// three monomorphizations here.
+/// four monomorphizations here.
 pub trait Model: Send + Sync {
     fn name(&self) -> &str;
     /// Evaluate with plain floats (sampling, cheap log-density).
@@ -100,6 +106,9 @@ pub trait Model: Send + Sync {
     fn eval_dual(&self, api: &mut dyn TildeApi<Dual>);
     /// Evaluate with reverse-tape variables.
     fn eval_tape(&self, api: &mut dyn TildeApi<TVar>);
+    /// Evaluate with arena-fused reverse variables (the Stan-style native
+    /// gradient fast path; see [`crate::ad::arena`]).
+    fn eval_arena(&self, api: &mut dyn TildeApi<AVar>);
 }
 
 /// Run the model under a [`executors::SampleExecutor`], drawing any missing
@@ -167,6 +176,42 @@ pub fn typed_grad_forward(
     )
 }
 
+/// Arena-fused gradient through the typed layout, written into a
+/// caller-owned buffer — the allocation-free `logp_grad_into` hot path of
+/// HMC/NUTS leapfrog loops. One pass; density statements contribute
+/// analytic-adjoint seeds instead of per-op tape nodes. A rejected or
+/// non-finite evaluation zeroes `grad` and returns the (−∞/NaN) value.
+pub fn typed_grad_fused_into(
+    model: &dyn Model,
+    tvi: &crate::varinfo::TypedVarInfo,
+    theta: &[f64],
+    ctx: Context,
+    grad: &mut [f64],
+) -> f64 {
+    crate::ad::arena::begin(theta.len());
+    let mut exec = executors::TypedFusedExecutor::new(tvi, theta, ctx);
+    model.eval_arena(&mut exec);
+    let (lp, stmts) = exec.finish();
+    if !lp.is_finite() {
+        grad.fill(0.0);
+        return lp;
+    }
+    crate::ad::arena::backward_into(grad, stmts);
+    lp
+}
+
+/// Allocating convenience wrapper over [`typed_grad_fused_into`].
+pub fn typed_grad_fused(
+    model: &dyn Model,
+    tvi: &crate::varinfo::TypedVarInfo,
+    theta: &[f64],
+    ctx: Context,
+) -> (f64, Vec<f64>) {
+    let mut grad = vec![0.0; theta.len()];
+    let lp = typed_grad_fused_into(model, tvi, theta, ctx, &mut grad);
+    (lp, grad)
+}
+
 /// Gradient via the reverse tape through the typed layout (one pass).
 pub fn typed_grad_reverse(
     model: &dyn Model,
@@ -212,6 +257,39 @@ pub fn untyped_grad_forward(
         },
         theta,
     )
+}
+
+/// Arena-fused gradient through the untyped (boxed, hashed) trace into a
+/// caller-owned buffer: dynamic trace addressing, fused density kernels.
+pub fn untyped_grad_fused_into(
+    model: &dyn Model,
+    vi: &crate::varinfo::UntypedVarInfo,
+    theta: &[f64],
+    ctx: Context,
+    grad: &mut [f64],
+) -> f64 {
+    crate::ad::arena::begin(theta.len());
+    let mut exec = executors::UntypedFusedExecutor::new(vi, theta, ctx);
+    model.eval_arena(&mut exec);
+    let (lp, stmts) = exec.finish();
+    if !lp.is_finite() {
+        grad.fill(0.0);
+        return lp;
+    }
+    crate::ad::arena::backward_into(grad, stmts);
+    lp
+}
+
+/// Allocating convenience wrapper over [`untyped_grad_fused_into`].
+pub fn untyped_grad_fused(
+    model: &dyn Model,
+    vi: &crate::varinfo::UntypedVarInfo,
+    theta: &[f64],
+    ctx: Context,
+) -> (f64, Vec<f64>) {
+    let mut grad = vec![0.0; theta.len()];
+    let lp = untyped_grad_fused_into(model, vi, theta, ctx, &mut grad);
+    (lp, grad)
 }
 
 /// Reverse-tape gradient through the untyped trace.

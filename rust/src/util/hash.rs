@@ -1,0 +1,97 @@
+//! Vendored FNV-1a hashing (no external deps).
+//!
+//! `std`'s default `HashMap` hasher is SipHash-1-3 — DoS-resistant but
+//! expensive on the short keys the boxed trace hashes on every access
+//! (`VarName` = interned symbol + ≤2 indices, a dozen bytes). Trace keys
+//! are program-controlled, not attacker-controlled, so the boxed path uses
+//! FNV-1a instead: one xor-multiply per byte, the classic small-key choice
+//! (and what the `fnv` crate ships; vendored here because the offline
+//! build takes no external crates).
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+const FNV_OFFSET_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Streaming 64-bit FNV-1a.
+pub struct FnvHasher(u64);
+
+impl Default for FnvHasher {
+    fn default() -> Self {
+        FnvHasher(FNV_OFFSET_BASIS)
+    }
+}
+
+impl Hasher for FnvHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        self.0 = h;
+    }
+}
+
+/// `BuildHasher` for FNV-keyed maps.
+pub type FnvBuildHasher = BuildHasherDefault<FnvHasher>;
+
+/// `HashMap` with FNV-1a hashing — drop-in for the trace-index maps.
+pub type FnvHashMap<K, V> = HashMap<K, V, FnvBuildHasher>;
+
+/// `HashSet` with FNV-1a hashing.
+pub type FnvHashSet<T> = HashSet<T, FnvBuildHasher>;
+
+/// One-shot FNV-1a of a byte slice.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = FnvHasher::default();
+    h.write(bytes);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_reference_vectors() {
+        // Published FNV-1a 64-bit test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn map_roundtrip_with_varnames() {
+        use crate::varname::VarName;
+        let mut m: FnvHashMap<VarName, usize> = FnvHashMap::default();
+        for i in 0..100 {
+            m.insert(VarName::indexed("h", i), i);
+        }
+        m.insert(VarName::new("sigma"), 1000);
+        assert_eq!(m.len(), 101);
+        for i in 0..100 {
+            assert_eq!(m[&VarName::indexed("h", i)], i);
+        }
+        assert_eq!(m[&VarName::new("sigma")], 1000);
+        assert!(!m.contains_key(&VarName::new("phi")));
+    }
+
+    #[test]
+    fn short_key_distribution_is_sane() {
+        // indexed names must not collide in the low bits a HashMap uses
+        let mut low7 = FnvHashSet::default();
+        for i in 0..128u64 {
+            let h = fnv1a(format!("h[{i}]").as_bytes());
+            low7.insert(h % 128);
+        }
+        assert!(low7.len() > 70, "low-bit spread {}", low7.len());
+    }
+}

@@ -6,6 +6,7 @@
 //! stance that the tracing library itself must own its performance story.
 
 pub mod cli;
+pub mod hash;
 pub mod math;
 pub mod memo;
 pub mod rng;

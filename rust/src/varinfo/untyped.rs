@@ -7,9 +7,8 @@
 //! boxing and hashing. After one successful run it is specialized into
 //! [`super::TypedVarInfo`].
 
-use std::collections::HashMap;
-
 use crate::dist::{bijector, AnyDist, Domain};
+use crate::util::hash::FnvHashMap;
 use crate::value::Value;
 use crate::varname::VarName;
 
@@ -27,7 +26,9 @@ pub struct VarRecord {
 #[derive(Clone, Debug, Default)]
 pub struct UntypedVarInfo {
     records: Vec<VarRecord>,
-    index: HashMap<VarName, usize>,
+    /// FNV-1a-keyed: `VarName`s are short program-controlled keys, where
+    /// SipHash is pure overhead (see `util::hash`).
+    index: FnvHashMap<VarName, usize>,
     /// log-density of the last full evaluation that used this trace
     pub logp: f64,
 }
