@@ -19,6 +19,7 @@ use crate::runtime::{artifact_exists, artifacts_dir, XlaDensity};
 use crate::stanlike::stanlike_density;
 use crate::util::rng::Xoshiro256pp;
 use crate::varinfo::TypedVarInfo;
+use crate::vi::{Advi, ViFamily};
 
 /// Execution backend for a Table-1 cell (DESIGN.md §4).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -54,13 +55,19 @@ impl BenchBackend {
     }
 
     pub fn parse(s: &str) -> Option<Self> {
+        // bare native-engine names ("fused", "tape", "forward", aliases)
+        // go through the one `gradient::Backend` naming table; only the
+        // typed+/xla/stan spellings are bench-specific
+        if let Ok(b) = s.parse::<Backend>() {
+            return Some(BenchBackend::from(b));
+        }
         Some(match s {
             "untyped" => BenchBackend::Untyped,
-            "typed+tape" | "tape" => BenchBackend::TypedTape,
-            // `fused` now names the native arena engine; the XLA
-            // trajectory artifact stays reachable as `xla-fused`
-            "typed+fused" | "fused" => BenchBackend::TypedFused,
-            "typed+fwd" | "forward" => BenchBackend::TypedForward,
+            "typed+tape" => BenchBackend::TypedTape,
+            // `fused` names the native arena engine; the XLA trajectory
+            // artifact stays reachable as `xla-fused`
+            "typed+fused" => BenchBackend::TypedFused,
+            "typed+fwd" => BenchBackend::TypedForward,
             "typed+xla" | "xla" => BenchBackend::TypedXla,
             "typed+xla-fused" | "xla-fused" => BenchBackend::TypedXlaFused,
             "stanlike" | "stan" => BenchBackend::StanLike,
@@ -75,6 +82,17 @@ impl BenchBackend {
             BenchBackend::Untyped | BenchBackend::TypedTape | BenchBackend::TypedForward => 0.02,
             BenchBackend::TypedFused => 0.2,
             _ => 1.0,
+        }
+    }
+}
+
+/// The typed-trace Table-1 cell for a native AD engine.
+impl From<Backend> for BenchBackend {
+    fn from(b: Backend) -> Self {
+        match b {
+            Backend::ReverseFused => BenchBackend::TypedFused,
+            Backend::Reverse => BenchBackend::TypedTape,
+            Backend::Forward => BenchBackend::TypedForward,
         }
     }
 }
@@ -532,43 +550,16 @@ pub fn render_smc_table(rows: &[SmcRow]) -> String {
 
 // ------------------------------------------------------------------ grad
 
-/// Which gradient engine a `bench grad` row measured.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum GradEngine {
-    /// Arena-fused reverse mode (`Backend::ReverseFused`, the default).
-    Fused,
-    /// Per-op reverse tape (`Backend::Reverse`, the Tracker.jl analogue).
-    Tape,
-    /// Forward duals, n passes (`Backend::Forward`).
-    Forward,
-}
-
-impl GradEngine {
-    pub fn label(&self) -> &'static str {
-        match self {
-            GradEngine::Fused => "fused",
-            GradEngine::Tape => "tape",
-            GradEngine::Forward => "forward",
-        }
-    }
-
-    pub fn parse(s: &str) -> Option<Self> {
-        Some(match s {
-            "fused" => GradEngine::Fused,
-            "tape" => GradEngine::Tape,
-            "forward" | "fwd" => GradEngine::Forward,
-            _ => return None,
-        })
-    }
-}
-
-/// One `bench grad` row: raw gradient-evaluation cost of one engine on one
-/// model — the per-leapfrog-step quantity every Table-1 HMC cell is built
-/// from, isolated from sampler logic.
+/// One `bench grad` row: raw gradient-evaluation cost of one engine
+/// ([`gradient::Backend`], labeled/parsed by its own `label`/`FromStr`)
+/// on one model — the per-leapfrog-step quantity every Table-1 HMC cell
+/// is built from, isolated from sampler logic.
+///
+/// [`gradient::Backend`]: crate::gradient::Backend
 #[derive(Clone, Debug)]
 pub struct GradRow {
     pub model: String,
-    pub engine: GradEngine,
+    pub engine: Backend,
     /// Unconstrained dimension.
     pub dim: usize,
     /// Mean wall-clock seconds per gradient evaluation.
@@ -598,7 +589,7 @@ pub struct GradRow {
 #[derive(Clone, Debug)]
 pub struct GradBenchConfig {
     pub models: Vec<String>,
-    pub engines: Vec<GradEngine>,
+    pub engines: Vec<Backend>,
     pub seed: u64,
     /// Use the reduced workloads (default) or the full Table-1 sizes.
     pub small: bool,
@@ -611,7 +602,7 @@ impl Default for GradBenchConfig {
     fn default() -> Self {
         Self {
             models: crate::models::ALL_MODELS.iter().map(|s| s.to_string()).collect(),
-            engines: vec![GradEngine::Fused, GradEngine::Tape, GradEngine::Forward],
+            engines: vec![Backend::ReverseFused, Backend::Reverse, Backend::Forward],
             seed: 42,
             small: true,
             target_secs: 5e-3,
@@ -647,23 +638,23 @@ pub fn run_grad_bench(cfg: &GradBenchConfig) -> Vec<GradRow> {
         // one diagnostic eval per *requested* engine: node counts +
         // reference gradients (the fused eval always runs — it is the
         // cheapest engine and supplies the tilde/node diagnostics)
-        let want = |e: GradEngine| cfg.engines.contains(&e);
+        let want = |e: Backend| cfg.engines.contains(&e);
         let lp_fused = typed_grad_fused_into(model, &tvi, &theta, Context::Default, &mut grad);
         assert!(lp_fused.is_finite(), "{name}: fused logp {lp_fused}");
         let fused_stats = crate::ad::arena::last_stats();
         let g_fused = grad.clone();
-        let tape_nodes = if want(GradEngine::Tape) {
+        let tape_nodes = if want(Backend::Reverse) {
             let _ = typed_grad_reverse(model, &tvi, &theta, Context::Default);
             crate::ad::reverse::last_tape_len()
         } else {
             0
         };
         let run_forward =
-            want(GradEngine::Forward) && (dim <= FORWARD_DIM_CAP || cfg.engines.len() == 1);
+            want(Backend::Forward) && (dim <= FORWARD_DIM_CAP || cfg.engines.len() == 1);
         let g_forward = if run_forward {
             Some(typed_grad_forward(model, &tvi, &theta, Context::Default).1)
         } else {
-            if want(GradEngine::Forward) {
+            if want(Backend::Forward) {
                 eprintln!(
                     "bench: {name}: skipping forward (dim {dim} > {FORWARD_DIM_CAP}; run with --engines forward to force)"
                 );
@@ -679,11 +670,11 @@ pub fn run_grad_bench(cfg: &GradBenchConfig) -> Vec<GradRow> {
             None => f64::NAN,
         };
 
-        let mut per_engine: Vec<(GradEngine, f64, usize, bool)> = Vec::new();
+        let mut per_engine: Vec<(Backend, f64, usize, bool)> = Vec::new();
         for &engine in &cfg.engines {
             eprintln!("bench: {name} / grad×{}", engine.label());
             let (m, nodes, steady) = match engine {
-                GradEngine::Fused => {
+                Backend::ReverseFused => {
                     let cap_before = crate::ad::arena::capacity_bytes();
                     let m = crate::util::timing::bench_micro(
                         &format!("{name}/fused"),
@@ -702,7 +693,7 @@ pub fn run_grad_bench(cfg: &GradBenchConfig) -> Vec<GradRow> {
                     let steady = crate::ad::arena::capacity_bytes() == cap_before;
                     (m, fused_stats.nodes, steady)
                 }
-                GradEngine::Tape => {
+                Backend::Reverse => {
                     let m = crate::util::timing::bench_micro(
                         &format!("{name}/tape"),
                         cfg.target_secs,
@@ -718,7 +709,7 @@ pub fn run_grad_bench(cfg: &GradBenchConfig) -> Vec<GradRow> {
                     );
                     (m, tape_nodes, false)
                 }
-                GradEngine::Forward => {
+                Backend::Forward => {
                     if !run_forward {
                         continue;
                     }
@@ -743,7 +734,7 @@ pub fn run_grad_bench(cfg: &GradBenchConfig) -> Vec<GradRow> {
 
         let tape_secs = per_engine
             .iter()
-            .find(|(e, ..)| *e == GradEngine::Tape)
+            .find(|(e, ..)| *e == Backend::Reverse)
             .map(|&(_, s, ..)| s);
         for (engine, secs, nodes, steady) in per_engine {
             rows.push(GradRow {
@@ -752,19 +743,19 @@ pub fn run_grad_bench(cfg: &GradBenchConfig) -> Vec<GradRow> {
                 dim,
                 secs_per_grad: secs,
                 tape_nodes: nodes,
-                seeds: if engine == GradEngine::Fused {
+                seeds: if engine == Backend::ReverseFused {
                     fused_stats.seeds
                 } else {
                     0
                 },
                 tilde_stmts: fused_stats.tilde_stmts,
-                max_rel_err_vs_forward: if engine == GradEngine::Fused {
+                max_rel_err_vs_forward: if engine == Backend::ReverseFused {
                     max_rel_err
                 } else {
                     f64::NAN
                 },
                 speedup_vs_tape: match (engine, tape_secs) {
-                    (GradEngine::Tape, _) | (_, None) => f64::NAN,
+                    (Backend::Reverse, _) | (_, None) => f64::NAN,
                     (_, Some(t)) => t / secs,
                 },
                 alloc_steady: steady,
@@ -803,7 +794,7 @@ pub fn render_grad_table(rows: &[GradRow]) -> String {
             } else {
                 "-".into()
             },
-            if r.engine == GradEngine::Fused {
+            if r.engine == Backend::ReverseFused {
                 if r.alloc_steady { "steady" } else { "GREW" }
             } else {
                 "-"
@@ -915,6 +906,236 @@ pub fn table1_cells_to_json(cells: &[Cell], cfg: &Table1Config) -> String {
     out
 }
 
+// -------------------------------------------------------------------- vi
+
+/// One `bench vi` row: an ADVI fit on one model × family, with its ELBO
+/// trajectory plus a NUTS reference run at matched model so the JSON
+/// carries the wall-clock and accuracy trade of variational inference —
+/// the workload class neither the Table-1 HMC harness nor `bench smc`
+/// covers.
+#[derive(Clone, Debug)]
+pub struct ViRow {
+    pub model: String,
+    pub family: ViFamily,
+    /// Unconstrained dimension.
+    pub dim: usize,
+    /// Best evaluated ELBO and its Monte-Carlo standard error.
+    pub elbo: f64,
+    pub elbo_se: f64,
+    pub converged: bool,
+    /// Optimizer iterations actually run (≤ configured max).
+    pub iters: usize,
+    /// η chosen by the Stan-style ladder search.
+    pub eta: f64,
+    pub secs_per_iter: f64,
+    pub wall_secs: f64,
+    /// (iteration, ELBO) at every evaluation point.
+    pub elbo_trace: Vec<(usize, f64)>,
+    /// NUTS reference: wall seconds at matched model.
+    pub nuts_wall_secs: f64,
+    /// nuts_wall_secs / wall_secs.
+    pub speedup_vs_nuts: f64,
+    /// max over constrained columns of |mean_vi − mean_nuts| / (1 + |mean_nuts|).
+    pub max_mean_err_vs_nuts: f64,
+    /// Same for per-column standard deviations.
+    pub max_sd_err_vs_nuts: f64,
+    pub seed: u64,
+}
+
+/// `bench vi` configuration.
+#[derive(Clone, Debug)]
+pub struct ViBenchConfig {
+    pub models: Vec<String>,
+    pub families: Vec<ViFamily>,
+    pub seed: u64,
+    /// Use the reduced workloads (default) or the full Table-1 sizes.
+    pub small: bool,
+    /// Posterior draws per fit for the accuracy comparison.
+    pub draws: usize,
+    pub nuts_warmup: usize,
+    pub nuts_iters: usize,
+    /// Base ADVI configuration (`family` is overridden per row).
+    pub advi: Advi,
+}
+
+impl Default for ViBenchConfig {
+    fn default() -> Self {
+        Self {
+            // low-dimensional posteriors where both families are cheap
+            // and NUTS is an honest, fast reference
+            models: vec!["gauss_unknown".into(), "hier_poisson".into()],
+            families: vec![ViFamily::MeanField, ViFamily::FullRank],
+            seed: 42,
+            small: true,
+            draws: 2000,
+            nuts_warmup: 500,
+            nuts_iters: 1000,
+            advi: Advi {
+                max_iters: 1000,
+                eval_every: 25,
+                grad_samples: 2,
+                elbo_samples: 50,
+                ..Advi::default()
+            },
+        }
+    }
+}
+
+/// Run ADVI × family against a NUTS reference on each configured model.
+pub fn run_vi_bench(cfg: &ViBenchConfig) -> Vec<ViRow> {
+    use crate::inference::{sample_chain, Nuts, SamplerKind};
+    use crate::model::init_typed;
+
+    let mut rows = Vec::with_capacity(cfg.models.len() * cfg.families.len());
+    for name in &cfg.models {
+        let bm = if cfg.small {
+            crate::models::build_small(name, cfg.seed)
+        } else {
+            build(name, cfg.seed)
+        };
+        let model = bm.model.as_ref();
+        let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+        let tvi = init_typed(model, &mut rng);
+        let theta0: Vec<f64> = tvi.unconstrained.iter().map(|x| x * 0.1).collect();
+        let ld = NativeDensity::fused(model, &tvi);
+
+        // NUTS reference on the same fused density
+        eprintln!("bench: {name} / nuts reference");
+        let nuts = sample_chain(
+            &ld,
+            &tvi,
+            &SamplerKind::Nuts(Nuts {
+                step_size: bm.step_size,
+                ..Nuts::default()
+            }),
+            cfg.nuts_warmup,
+            cfg.nuts_iters,
+            cfg.seed,
+        );
+
+        for &family in &cfg.families {
+            eprintln!("bench: {name} / advi×{}", family.label());
+            let advi = Advi {
+                family,
+                ..cfg.advi.clone()
+            };
+            let mut vi_rng = Xoshiro256pp::seed_from_u64(cfg.seed ^ 0x5EED);
+            let fit = advi.fit(&ld, &theta0, &mut vi_rng);
+            let raw = fit.sample_raw(&ld, cfg.draws, &mut vi_rng);
+            // constrained-space chain of approximation draws, through the
+            // same conversion path as the `sample_chain` driver
+            let chain = crate::inference::raw_to_chain(&raw, &tvi);
+            let mut max_mean_err = 0.0f64;
+            let mut max_sd_err = 0.0f64;
+            for col in nuts.names() {
+                let (rm, rs) = (nuts.mean(col).unwrap(), nuts.std(col).unwrap());
+                let (vm, vs) = (chain.mean(col).unwrap(), chain.std(col).unwrap());
+                max_mean_err = max_mean_err.max((vm - rm).abs() / (1.0 + rm.abs()));
+                max_sd_err = max_sd_err.max((vs - rs).abs() / (1.0 + rs.abs()));
+            }
+            rows.push(ViRow {
+                model: name.clone(),
+                family,
+                dim: tvi.dim(),
+                elbo: fit.elbo,
+                elbo_se: fit.elbo_se,
+                converged: fit.converged,
+                iters: fit.iters,
+                eta: fit.eta,
+                // main-loop time only: the η ladder search is a one-off
+                // setup cost and would overstate the per-iteration figure
+                secs_per_iter: fit.opt_wall_secs / fit.iters.max(1) as f64,
+                wall_secs: fit.wall_secs,
+                elbo_trace: fit.elbo_trace,
+                nuts_wall_secs: nuts.stats.wall_secs,
+                speedup_vs_nuts: nuts.stats.wall_secs / fit.wall_secs,
+                max_mean_err_vs_nuts: max_mean_err,
+                max_sd_err_vs_nuts: max_sd_err,
+                seed: cfg.seed,
+            });
+        }
+    }
+    rows
+}
+
+/// Human-readable VI table.
+pub fn render_vi_table(rows: &[ViRow]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "vi — ADVI fit per model × family vs a NUTS reference (errors are vs the NUTS posterior)\n"
+    );
+    let _ = writeln!(
+        out,
+        "{:<16} {:>10} {:>5} {:>12} {:>5} {:>6} {:>10} {:>8} {:>10} {:>9}",
+        "model", "family", "dim", "ELBO", "conv", "iters", "wall (s)", "×nuts", "mean-err", "sd-err"
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{:<16} {:>10} {:>5} {:>12.3} {:>5} {:>6} {:>10.3} {:>8.1} {:>10.4} {:>9.4}",
+            r.model,
+            r.family.label(),
+            r.dim,
+            r.elbo,
+            if r.converged { "yes" } else { "NO" },
+            r.iters,
+            r.wall_secs,
+            r.speedup_vs_nuts,
+            r.max_mean_err_vs_nuts,
+            r.max_sd_err_vs_nuts,
+        );
+    }
+    out
+}
+
+/// Serialize VI rows as the coordinator's `BENCH_VI.json` payload.
+pub fn vi_rows_to_json(rows: &[ViRow], cfg: &ViBenchConfig) -> String {
+    let mut out = String::new();
+    let _ = write!(
+        out,
+        "{{\n  \"bench\": \"vi\",\n  \"seed\": {},\n  \"small\": {},\n  \"rows\": [\n",
+        cfg.seed, cfg.small
+    );
+    for (i, r) in rows.iter().enumerate() {
+        let mut trace = String::from("[");
+        for (j, (it, e)) in r.elbo_trace.iter().enumerate() {
+            if j > 0 {
+                trace.push_str(", ");
+            }
+            let _ = write!(trace, "[{it}, {}]", json_num(*e));
+        }
+        trace.push(']');
+        let _ = write!(
+            out,
+            "    {{\"model\": \"{}\", \"family\": \"{}\", \"dim\": {}, \"elbo\": {}, \
+             \"elbo_se\": {}, \"converged\": {}, \"iters\": {}, \"eta\": {}, \
+             \"secs_per_iter\": {}, \"wall_secs\": {}, \"nuts_wall_secs\": {}, \
+             \"speedup_vs_nuts\": {}, \"max_mean_err_vs_nuts\": {}, \
+             \"max_sd_err_vs_nuts\": {}, \"seed\": {}, \"elbo_trace\": {}}}",
+            r.model,
+            r.family.label(),
+            r.dim,
+            json_num(r.elbo),
+            json_num(r.elbo_se),
+            r.converged,
+            r.iters,
+            json_num(r.eta),
+            json_num(r.secs_per_iter),
+            json_num(r.wall_secs),
+            json_num(r.nuts_wall_secs),
+            json_num(r.speedup_vs_nuts),
+            json_num(r.max_mean_err_vs_nuts),
+            json_num(r.max_sd_err_vs_nuts),
+            r.seed,
+            trace,
+        );
+        out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -957,11 +1178,11 @@ mod tests {
         for model in ["gauss_unknown", "sto_volatility"] {
             let fused = rows
                 .iter()
-                .find(|r| r.model == model && r.engine == GradEngine::Fused)
+                .find(|r| r.model == model && r.engine == Backend::ReverseFused)
                 .unwrap();
             let tape = rows
                 .iter()
-                .find(|r| r.model == model && r.engine == GradEngine::Tape)
+                .find(|r| r.model == model && r.engine == Backend::Reverse)
                 .unwrap();
             assert!(fused.secs_per_grad > 0.0 && tape.secs_per_grad > 0.0);
             // tilde-dominated models collapse ~5×; models whose likelihood
@@ -1080,6 +1301,48 @@ mod tests {
         assert!(json.contains("\"model\": \"hier_poisson\""));
         assert!(json.contains("\"backend\": \"stanlike\""));
         assert!(json.contains("\"mean_secs\": "));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert!(!json.contains(",\n  ]"));
+    }
+
+    #[test]
+    fn vi_bench_rows_and_json() {
+        let cfg = ViBenchConfig {
+            models: vec!["gauss_unknown".into()],
+            seed: 8,
+            draws: 400,
+            nuts_warmup: 100,
+            nuts_iters: 200,
+            advi: Advi {
+                max_iters: 300,
+                eval_every: 25,
+                grad_samples: 2,
+                elbo_samples: 50,
+                ..Advi::default()
+            },
+            ..ViBenchConfig::default()
+        };
+        let rows = run_vi_bench(&cfg);
+        // one mean-field + one full-rank row
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].family, ViFamily::MeanField);
+        assert_eq!(rows[1].family, ViFamily::FullRank);
+        for r in &rows {
+            assert_eq!(r.dim, 2);
+            assert!(r.elbo.is_finite(), "{r:?}");
+            assert!(!r.elbo_trace.is_empty());
+            assert!(r.wall_secs > 0.0 && r.secs_per_iter > 0.0);
+            // both families agree with NUTS on this near-Gaussian
+            // posterior (loose: short reference run)
+            assert!(r.max_mean_err_vs_nuts < 0.2, "{r:?}");
+        }
+        let table = render_vi_table(&rows);
+        assert!(table.contains("gauss_unknown") && table.contains("meanfield"));
+        let json = vi_rows_to_json(&rows, &cfg);
+        assert!(json.contains("\"bench\": \"vi\""));
+        assert!(json.contains("\"family\": \"meanfield\""));
+        assert!(json.contains("\"family\": \"fullrank\""));
+        assert!(json.contains("\"elbo_trace\": [["));
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert!(!json.contains(",\n  ]"));
     }

@@ -17,8 +17,9 @@ pub struct SamplerStats {
     pub step_size: f64,
     pub n_grad_evals: u64,
     pub wall_secs: f64,
-    /// log-marginal-likelihood estimate (particle samplers only; `NaN`
-    /// for samplers that do not estimate evidence).
+    /// log-marginal-likelihood estimate: particle samplers store their
+    /// unbiased SMC estimate, VI chains the converged ELBO (a lower
+    /// bound); `NaN` for samplers that do not estimate evidence.
     pub log_evidence: f64,
 }
 

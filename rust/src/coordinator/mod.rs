@@ -4,9 +4,10 @@
 use std::sync::Arc;
 
 use crate::bench::{
-    grad_rows_to_json, render_grad_table, render_smc_table, render_table1, run_grad_bench,
-    run_smc_bench, run_table1, smc_rows_to_json, table1_cells_to_json, BenchBackend,
-    GradBenchConfig, GradEngine, SmcBenchConfig, SmcPath, Table1Config,
+    grad_rows_to_json, render_grad_table, render_smc_table, render_table1, render_vi_table,
+    run_grad_bench, run_smc_bench, run_table1, run_vi_bench, smc_rows_to_json,
+    table1_cells_to_json, vi_rows_to_json, BenchBackend, GradBenchConfig, SmcBenchConfig,
+    SmcPath, Table1Config, ViBenchConfig,
 };
 use crate::chain::{Chain, MultiChain};
 use crate::context::Context;
@@ -21,6 +22,7 @@ use crate::util::cli::{Args, Usage};
 use crate::util::rng::Xoshiro256pp;
 use crate::util::threadpool::{default_threads, parallel_map};
 use crate::value::Value;
+use crate::vi::{Advi, ViFamily};
 
 /// CLI usage text.
 pub fn usage() -> String {
@@ -32,11 +34,11 @@ pub fn usage() -> String {
             ("info", "show runtime/platform information"),
             (
                 "sample",
-                "run MCMC: --model NAME [--sampler hmc|nuts|mh|smc] [--backend fused|xla|tape|forward|stan] [--iters N] [--warmup N] [--chains C] [--seed S]  (smc: iters = particles; default backend: fused)",
+                "run inference: --model NAME [--sampler hmc|nuts|mh|smc|advi|advi-fullrank] [--backend fused|xla|tape|forward|stan] [--iters N] [--warmup N] [--chains C] [--seed S]  (smc: iters = particles; advi: iters = posterior draws; default backend: fused)",
             ),
             (
                 "bench",
-                "bench table1 [--models a,b] [--backends x,y] [--iters N] [--reps R] [--out FILE.json] | bench smc [--models a,b] [--particles N] [--threads T] [--path typed|boxed|both] [--full] [--out FILE.json] | bench grad [--models a,b] [--engines fused,tape,forward] [--full] [--out FILE.json]",
+                "bench table1 [--models a,b] [--backends x,y] [--iters N] [--reps R] [--out FILE.json] | bench smc [--models a,b] [--particles N] [--threads T] [--path typed|boxed|both] [--full] [--out FILE.json] | bench grad [--models a,b] [--engines fused,tape,forward] [--full] [--out FILE.json] | bench vi [--models a,b] [--families meanfield,fullrank] [--draws N] [--max-iters N] [--stl] [--full] [--out FILE.json]",
             ),
             ("query", "evaluate a probability query string (paper §3.5)"),
         ],
@@ -136,6 +138,29 @@ fn cmd_sample(args: &Args) -> i32 {
     0
 }
 
+/// How a CLI `--backend` string maps to a [`LogDensity`] implementation.
+/// Native-engine names resolve through the one [`Backend`] `FromStr`
+/// table; only the XLA and Stan comparators are coordinator-specific.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum DensityKind {
+    Native(Backend),
+    Xla,
+    Stan,
+}
+
+fn parse_density(s: &str) -> Result<DensityKind, String> {
+    if let Ok(b) = s.parse::<Backend>() {
+        return Ok(DensityKind::Native(b));
+    }
+    match s {
+        "xla" => Ok(DensityKind::Xla),
+        "stan" | "stanlike" => Ok(DensityKind::Stan),
+        other => Err(format!(
+            "unknown backend {other:?} (fused|tape|forward|xla|stan)"
+        )),
+    }
+}
+
 /// Build the requested density and sample `n_chains` chains in parallel.
 pub fn sample_model(
     model_name: &str,
@@ -183,35 +208,24 @@ pub fn sample_model(
             ..Nuts::default()
         }),
         "mh" => SamplerKind::RwMh(RwMh::default()),
+        // `iters` = posterior draws from the fitted approximation; the
+        // optimization budget lives in the Advi defaults
+        "advi" => SamplerKind::Advi(Advi::meanfield()),
+        "advi-fullrank" | "advi-fr" => SamplerKind::Advi(Advi::fullrank()),
         other => return Err(format!("unknown sampler {other:?}")),
     };
-    let backend = backend.to_string();
+    let density = parse_density(backend)?;
     let chains: Vec<Chain> = parallel_map(
         default_threads().min(n_chains),
         n_chains,
         move |i| -> Chain {
-            let ld: Box<dyn LogDensity> = match backend.as_str() {
-                "xla" => Box::new(
+            let ld: Box<dyn LogDensity> = match density {
+                DensityKind::Xla => Box::new(
                     XlaDensity::load(&artifacts_dir(), bm.name, bm.theta_dim, &bm.data)
                         .expect("artifact load failed (run `make artifacts`)"),
                 ),
-                "fused" => Box::new(NativeDensity::new(
-                    bm.model.as_ref(),
-                    &tvi,
-                    Backend::ReverseFused,
-                )),
-                "tape" => Box::new(NativeDensity::new(
-                    bm.model.as_ref(),
-                    &tvi,
-                    Backend::Reverse,
-                )),
-                "forward" => Box::new(NativeDensity::new(
-                    bm.model.as_ref(),
-                    &tvi,
-                    Backend::Forward,
-                )),
-                "stan" => stanlike_density(&bm) as Box<dyn LogDensity>,
-                other => panic!("unknown backend {other:?}"),
+                DensityKind::Native(b) => Box::new(NativeDensity::new(bm.model.as_ref(), &tvi, b)),
+                DensityKind::Stan => stanlike_density(&bm) as Box<dyn LogDensity>,
             };
             sample_chain(ld.as_ref(), &tvi, &kind, warmup, iters, seed + 1000 * i as u64)
         },
@@ -324,8 +338,9 @@ fn cmd_bench(args: &Args) -> i32 {
                 cfg.engines = engines
                     .split(',')
                     .map(|s| {
-                        GradEngine::parse(s.trim())
-                            .unwrap_or_else(|| panic!("unknown grad engine {s:?}"))
+                        s.trim()
+                            .parse::<Backend>()
+                            .unwrap_or_else(|e| panic!("{e}"))
                     })
                     .collect();
             }
@@ -347,8 +362,44 @@ fn cmd_bench(args: &Args) -> i32 {
                 }
             }
         }
+        "vi" => {
+            let mut cfg = ViBenchConfig::default();
+            if let Some(models) = args.get("models") {
+                cfg.models = models.split(',').map(|s| s.trim().to_string()).collect();
+            }
+            if let Some(families) = args.get("families") {
+                cfg.families = families
+                    .split(',')
+                    .map(|s| {
+                        ViFamily::parse(s.trim())
+                            .unwrap_or_else(|| panic!("unknown family {s:?} (meanfield|fullrank)"))
+                    })
+                    .collect();
+            }
+            cfg.seed = args.get_parse_or("seed", cfg.seed).unwrap_or(cfg.seed);
+            cfg.draws = args.get_parse_or("draws", cfg.draws).unwrap_or(cfg.draws);
+            cfg.advi.max_iters = args
+                .get_parse_or("max-iters", cfg.advi.max_iters)
+                .unwrap_or(cfg.advi.max_iters);
+            cfg.advi.stl = args.flag("stl");
+            cfg.small = !args.flag("full");
+            let rows = run_vi_bench(&cfg);
+            println!("{}", render_vi_table(&rows));
+            let out_path = args.get_or("out", "BENCH_VI.json").to_string();
+            let json = vi_rows_to_json(&rows, &cfg);
+            match std::fs::write(&out_path, &json) {
+                Ok(()) => {
+                    println!("wrote {out_path}");
+                    0
+                }
+                Err(e) => {
+                    eprintln!("failed to write {out_path}: {e}");
+                    1
+                }
+            }
+        }
         other => {
-            eprintln!("unknown bench target {other:?} (try: table1, smc, grad)");
+            eprintln!("unknown bench target {other:?} (try: table1, smc, grad, vi)");
             2
         }
     }
@@ -476,6 +527,24 @@ mod tests {
         assert_eq!(mc.chains.len(), 1);
         assert_eq!(mc.chains[0].len(), 50);
         assert!(mc.chains[0].stats.n_grad_evals > 0);
+    }
+
+    #[test]
+    fn sample_model_advi_draws_from_fitted_approximation() {
+        // iters = posterior-draw count; stats.log_evidence carries the ELBO
+        let mc = sample_model("gauss_unknown", "advi", "fused", 500, 0, 1, 21).unwrap();
+        assert_eq!(mc.chains.len(), 1);
+        assert_eq!(mc.chains[0].len(), 500);
+        assert!(mc.chains[0].stats.log_evidence.is_finite());
+        // ground truth of the small-workload generator is m ≈ 1.5
+        let m = mc.mean("m").unwrap();
+        assert!((m - 1.5).abs() < 0.25, "m = {m}");
+    }
+
+    #[test]
+    fn sample_model_rejects_unknown_backend_and_sampler() {
+        assert!(sample_model("gauss_unknown", "hmc", "frobnicate", 10, 10, 1, 1).is_err());
+        assert!(sample_model("gauss_unknown", "slice", "fused", 10, 10, 1, 1).is_err());
     }
 
     #[test]

@@ -55,6 +55,37 @@ pub enum Backend {
     ReverseFused,
 }
 
+impl Backend {
+    /// Canonical CLI/bench label — the single naming table every
+    /// backend-parsing CLI path goes through (see [`Backend::from_str`]).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Backend::Forward => "forward",
+            Backend::Reverse => "tape",
+            Backend::ReverseFused => "fused",
+        }
+    }
+}
+
+impl std::str::FromStr for Backend {
+    type Err = String;
+
+    /// Parse a native-engine name (the one place CLI backend strings are
+    /// mapped to engines; `bench` and `coordinator` both delegate here).
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "fused" | "reverse-fused" => Backend::ReverseFused,
+            "tape" | "reverse" => Backend::Reverse,
+            "forward" | "fwd" => Backend::Forward,
+            other => {
+                return Err(format!(
+                    "unknown gradient backend {other:?} (fused|tape|forward)"
+                ))
+            }
+        })
+    }
+}
+
 /// Model + typed trace + Rust AD.
 pub struct NativeDensity<'a> {
     pub model: &'a dyn Model,
@@ -207,6 +238,18 @@ pub fn std_normal_density(dim: usize) -> impl LogDensity {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn backend_labels_roundtrip_through_from_str() {
+        for b in [Backend::Forward, Backend::Reverse, Backend::ReverseFused] {
+            assert_eq!(b.label().parse::<Backend>(), Ok(b));
+        }
+        // aliases
+        assert_eq!("reverse".parse::<Backend>(), Ok(Backend::Reverse));
+        assert_eq!("fwd".parse::<Backend>(), Ok(Backend::Forward));
+        assert!("xla".parse::<Backend>().is_err());
+        assert_eq!(Backend::default(), Backend::ReverseFused);
+    }
 
     #[test]
     fn fn_density_roundtrip() {

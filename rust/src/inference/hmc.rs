@@ -25,7 +25,10 @@ pub struct Hmc {
     pub target_accept: f64,
     /// Probe a starting ε with the warmup adapter's doubling heuristic
     /// ([`super::adapt::find_initial_step_size`]) before dual averaging
-    /// takes over, instead of trusting `step_size` blindly.
+    /// takes over, instead of trusting `step_size` blindly. Default-on
+    /// since the seeded statistical tests were re-baselined with the
+    /// probe enabled ([`Hmc::paper`] keeps it off: the paper config is a
+    /// fixed-ε benchmark).
     pub init_step_size: bool,
 }
 
@@ -37,7 +40,7 @@ impl Default for Hmc {
             adapt_step_size: true,
             adapt_mass: false,
             target_accept: 0.8,
-            init_step_size: false,
+            init_step_size: true,
         }
     }
 }

@@ -2,7 +2,8 @@
 //! random-walk Metropolis–Hastings, blocked Gibbs, sequential Monte Carlo
 //! (SMC + Particle-Gibbs over the `particle` substrate), and prior
 //! sampling — the Turing/AdvancedHMC/AdvancedPS layer of the paper's
-//! stack.
+//! stack. Variational inference lives in [`crate::vi`] and plugs in here
+//! through [`SamplerKind::Advi`].
 
 pub mod adapt;
 pub mod gibbs;
@@ -16,7 +17,7 @@ pub use gibbs::{BlockSampler, Gibbs, GibbsBlock};
 pub use hmc::Hmc;
 pub use mh::RwMh;
 pub use nuts::Nuts;
-pub use run::{sample_chain, sample_chains, sample_smc_chain, SamplerKind};
+pub use run::{raw_to_chain, sample_chain, sample_chains, sample_smc_chain, SamplerKind};
 pub use smc::{csmc_sweep, Csmc, Smc, SmcCloud, SmcResult};
 
 use crate::chain::SamplerStats;

@@ -1,6 +1,13 @@
 //! No-U-Turn Sampler (Hoffman & Gelman 2014), multinomial variant with
 //! dual-averaging step-size adaptation — AdvancedHMC.jl's default, included
 //! beyond the paper's static-HMC benchmarks as the "production" sampler.
+//!
+//! Tree states (θ, p, ∇) live in a [`StatePool`] free-list retained across
+//! iterations: tree construction takes and returns pooled buffers instead
+//! of allocating, so the steady-state NUTS loop matches static HMC's
+//! allocation-free leapfrog (gradients already landed in place via
+//! [`LogDensity::logp_grad_into`]; the pool removes the per-node
+//! `Vec` churn that used to sit on top of it).
 
 use rand_core::RngCore;
 
@@ -19,7 +26,8 @@ pub struct Nuts {
     pub target_accept: f64,
     pub adapt_mass: bool,
     /// Probe a starting ε with the warmup adapter's doubling heuristic
-    /// before dual averaging takes over.
+    /// before dual averaging takes over. Default-on since the seeded
+    /// statistical tests were re-baselined with the probe enabled.
     pub init_step_size: bool,
 }
 
@@ -30,12 +38,12 @@ impl Default for Nuts {
             max_depth: 10,
             target_accept: 0.8,
             adapt_mass: true,
-            init_step_size: false,
+            init_step_size: true,
         }
     }
 }
 
-#[derive(Clone)]
+/// One phase-space point with its cached gradient and log-density.
 struct State {
     theta: Vec<f64>,
     p: Vec<f64>,
@@ -43,6 +51,80 @@ struct State {
     lp: f64,
 }
 
+impl State {
+    fn zeros(dim: usize) -> Self {
+        Self {
+            theta: vec![0.0; dim],
+            p: vec![0.0; dim],
+            grad: vec![0.0; dim],
+            lp: 0.0,
+        }
+    }
+
+    fn copy_from(&mut self, src: &State) {
+        self.theta.copy_from_slice(&src.theta);
+        self.p.copy_from_slice(&src.p);
+        self.grad.copy_from_slice(&src.grad);
+        self.lp = src.lp;
+    }
+}
+
+/// Free-list of tree [`State`]s. A NUTS iteration touches O(2^depth)
+/// leapfrog states but only O(depth) are live at once; the pool retains
+/// that working set across iterations, so after the first few iterations
+/// tree construction allocates nothing (ROADMAP PR-3 follow-up: the NUTS
+/// leapfrog now matches static HMC's allocation-free loop).
+struct StatePool {
+    free: Vec<State>,
+    dim: usize,
+    allocated: usize,
+}
+
+impl StatePool {
+    fn new(dim: usize) -> Self {
+        Self {
+            free: Vec::new(),
+            dim,
+            allocated: 0,
+        }
+    }
+
+    /// A state with unspecified contents (caller overwrites).
+    fn take(&mut self) -> State {
+        self.free.pop().unwrap_or_else(|| {
+            self.allocated += 1;
+            State::zeros(self.dim)
+        })
+    }
+
+    /// A state holding a copy of `src`.
+    fn take_copy(&mut self, src: &State) -> State {
+        let mut s = self.take();
+        s.copy_from(src);
+        s
+    }
+
+    fn put(&mut self, s: State) {
+        debug_assert_eq!(s.theta.len(), self.dim);
+        self.free.push(s);
+    }
+
+    /// Total states ever created — bounded by tree geometry, not by
+    /// iteration count.
+    #[cfg(test)]
+    fn allocated(&self) -> usize {
+        self.allocated
+    }
+
+    /// States currently taken and not returned.
+    fn outstanding(&self) -> usize {
+        self.allocated - self.free.len()
+    }
+}
+
+/// A (sub)tree: its two ends, a multinomial-sampled representative, and
+/// merge bookkeeping. All three states are pool-owned and must be taken
+/// from / returned to the iteration's [`StatePool`].
 struct Tree {
     minus: State,
     plus: State,
@@ -53,7 +135,11 @@ struct Tree {
     /// sum of min(1, exp(−ΔH)) over leaves (for adaptation)
     alpha_sum: f64,
     n_leaves: f64,
+    /// stop extending this trajectory (U-turn *or* divergence)
     turning_or_diverged: bool,
+    /// at least one leaf actually diverged (Stan's divergent-transition
+    /// diagnostic — distinct from merely turning)
+    diverged: bool,
 }
 
 impl Nuts {
@@ -64,6 +150,21 @@ impl Nuts {
         warmup: usize,
         iters: usize,
         rng: &mut R,
+    ) -> RawDraws {
+        let mut pool = StatePool::new(ld.dim());
+        let out = self.sample_impl(ld, theta0, warmup, iters, rng, &mut pool);
+        debug_assert_eq!(pool.outstanding(), 0, "tree states leaked from the pool");
+        out
+    }
+
+    fn sample_impl<R: RngCore>(
+        &self,
+        ld: &dyn LogDensity,
+        theta0: &[f64],
+        warmup: usize,
+        iters: usize,
+        rng: &mut R,
+        pool: &mut StatePool,
     ) -> RawDraws {
         let dim = ld.dim();
         let t_start = std::time::Instant::now();
@@ -101,9 +202,9 @@ impl Nuts {
             }
             let h0 = hamiltonian(&current, &inv_mass);
 
-            let mut minus = current.clone();
-            let mut plus = current.clone();
-            let mut sample = current.clone();
+            let mut minus = pool.take_copy(&current);
+            let mut plus = pool.take_copy(&current);
+            let mut sample = pool.take_copy(&current);
             // All weights are normalized relative to the initial energy:
             // the starting state has weight exp(h0 − h0) = 1.
             let mut log_w = 0.0;
@@ -116,37 +217,59 @@ impl Nuts {
                 let go_right = rng.bernoulli(0.5);
                 let sub = if go_right {
                     build_tree(
-                        ld, &plus, 1.0, depth, eps, h0, &inv_mass, rng, &mut n_grad,
+                        ld, &plus, 1.0, depth, eps, h0, &inv_mass, rng, &mut n_grad, pool,
                     )
                 } else {
                     build_tree(
-                        ld, &minus, -1.0, depth, eps, h0, &inv_mass, rng, &mut n_grad,
+                        ld, &minus, -1.0, depth, eps, h0, &inv_mass, rng, &mut n_grad, pool,
                     )
                 };
-                alpha_sum += sub.alpha_sum;
-                n_leaves += sub.n_leaves;
-                if sub.turning_or_diverged {
-                    if sub.alpha_sum == 0.0 && sub.n_leaves <= 1.0 {
+                let Tree {
+                    minus: sm,
+                    plus: sp,
+                    sample: ss,
+                    log_w: sw,
+                    alpha_sum: sa,
+                    n_leaves: sn,
+                    turning_or_diverged: st,
+                    diverged: sdiv,
+                } = sub;
+                alpha_sum += sa;
+                n_leaves += sn;
+                if st {
+                    // a divergence anywhere in the subtree marks the whole
+                    // transition divergent (Stan's diagnostic semantics)
+                    if sdiv {
                         divergences += 1;
                     }
+                    pool.put(sm);
+                    pool.put(sp);
+                    pool.put(ss);
                     break;
                 }
                 // multinomial merge: accept subtree sample with prob w'/(w+w')
-                let log_sum = log_add(log_w, sub.log_w);
-                if rng.uniform_pos().ln() < sub.log_w - log_sum {
-                    sample = sub.sample.clone();
+                let log_sum = log_add(log_w, sw);
+                if rng.uniform_pos().ln() < sw - log_sum {
+                    pool.put(std::mem::replace(&mut sample, ss));
+                } else {
+                    pool.put(ss);
                 }
                 log_w = log_sum;
                 if go_right {
-                    plus = sub.plus;
+                    pool.put(std::mem::replace(&mut plus, sp));
+                    pool.put(sm);
                 } else {
-                    minus = sub.minus;
+                    pool.put(std::mem::replace(&mut minus, sm));
+                    pool.put(sp);
                 }
                 turning = is_turning(&minus, &plus, &inv_mass);
                 depth += 1;
             }
 
-            current = sample.clone();
+            current.copy_from(&sample);
+            pool.put(minus);
+            pool.put(plus);
+            pool.put(sample);
             let accept_stat = if n_leaves > 0.0 {
                 alpha_sum / n_leaves
             } else {
@@ -200,25 +323,28 @@ fn log_add(a: f64, b: f64) -> f64 {
     crate::util::math::log_add_exp(a, b)
 }
 
-fn leapfrog(ld: &dyn LogDensity, s: &State, dir: f64, eps: f64, inv_mass: &[f64]) -> State {
+/// One leapfrog step from `s` into the pooled state `out` — all buffer
+/// writes in place, gradient via `logp_grad_into`.
+fn leapfrog_into(
+    ld: &dyn LogDensity,
+    s: &State,
+    dir: f64,
+    eps: f64,
+    inv_mass: &[f64],
+    out: &mut State,
+) {
     let dim = s.theta.len();
     let e = dir * eps;
-    let mut p = s.p.clone();
-    let mut theta = s.theta.clone();
+    out.theta.copy_from_slice(&s.theta);
+    out.p.copy_from_slice(&s.p);
     for i in 0..dim {
-        p[i] += 0.5 * e * s.grad[i];
-        theta[i] += e * p[i] * inv_mass[i];
+        out.p[i] += 0.5 * e * s.grad[i];
+        out.theta[i] += e * out.p[i] * inv_mass[i];
     }
-    // tree states own their (stored) buffers, so this allocation is
-    // inherent to NUTS's tree construction; `logp_grad_into` writes into
-    // it in place, keeping the gradient *engine* allocation-free (the
-    // fully allocation-free leapfrog loop lives in static HMC)
-    let mut grad = vec![0.0; dim];
-    let lp = ld.logp_grad_into(&theta, &mut grad);
+    out.lp = ld.logp_grad_into(&out.theta, &mut out.grad);
     for i in 0..dim {
-        p[i] += 0.5 * e * grad[i];
+        out.p[i] += 0.5 * e * out.grad[i];
     }
-    State { theta, p, grad, lp }
 }
 
 fn is_turning(minus: &State, plus: &State, inv_mass: &[f64]) -> bool {
@@ -243,52 +369,82 @@ fn build_tree<R: RngCore>(
     inv_mass: &[f64],
     rng: &mut R,
     n_grad: &mut u64,
+    pool: &mut StatePool,
 ) -> Tree {
     if depth == 0 {
-        let s = leapfrog(ld, start, dir, eps, inv_mass);
+        let mut s = pool.take();
+        leapfrog_into(ld, start, dir, eps, inv_mass, &mut s);
         *n_grad += 1;
         let h = hamiltonian(&s, inv_mass);
         let dh = h0 - h;
         let diverged = !dh.is_finite() || dh < -1000.0;
         let alpha = if dh.is_finite() { dh.exp().min(1.0) } else { 0.0 };
+        let minus = pool.take_copy(&s);
+        let plus = pool.take_copy(&s);
         return Tree {
-            minus: s.clone(),
-            plus: s.clone(),
+            minus,
+            plus,
             sample: s,
             log_w: if diverged { f64::NEG_INFINITY } else { dh },
             alpha_sum: alpha,
             n_leaves: 1.0,
             turning_or_diverged: diverged,
+            diverged,
         };
     }
-    let first = build_tree(ld, start, dir, depth - 1, eps, h0, inv_mass, rng, n_grad);
+    let first = build_tree(ld, start, dir, depth - 1, eps, h0, inv_mass, rng, n_grad, pool);
     if first.turning_or_diverged {
         return first;
     }
-    let cont = if dir > 0.0 { &first.plus } else { &first.minus };
-    let second = build_tree(ld, cont, dir, depth - 1, eps, h0, inv_mass, rng, n_grad);
-    let log_w = log_add(first.log_w, second.log_w);
-    let sample = if !second.turning_or_diverged
-        && rng.uniform_pos().ln() < second.log_w - log_w
-    {
-        second.sample.clone()
-    } else {
-        first.sample.clone()
+    let second = {
+        let cont = if dir > 0.0 { &first.plus } else { &first.minus };
+        build_tree(ld, cont, dir, depth - 1, eps, h0, inv_mass, rng, n_grad, pool)
     };
+    let Tree {
+        minus: m1,
+        plus: p1,
+        sample: s1,
+        log_w: w1,
+        alpha_sum: a1,
+        n_leaves: n1,
+        ..
+    } = first;
+    let Tree {
+        minus: m2,
+        plus: p2,
+        sample: s2,
+        log_w: w2,
+        alpha_sum: a2,
+        n_leaves: n2,
+        turning_or_diverged: t2,
+        diverged: d2,
+    } = second;
+    let log_w = log_add(w1, w2);
+    let pick_second = !t2 && rng.uniform_pos().ln() < w2 - log_w;
+    let (sample, dead) = if pick_second { (s2, s1) } else { (s1, s2) };
+    pool.put(dead);
+    // of the four tree ends only the two outer ones survive the merge
     let (minus, plus) = if dir > 0.0 {
-        (first.minus, second.plus.clone())
+        pool.put(p1);
+        pool.put(m2);
+        (m1, p2)
     } else {
-        (second.minus.clone(), first.plus)
+        pool.put(m1);
+        pool.put(p2);
+        (m2, p1)
     };
-    let turning = second.turning_or_diverged || is_turning(&minus, &plus, inv_mass);
+    let turning = t2 || is_turning(&minus, &plus, inv_mass);
     Tree {
         minus,
         plus,
         sample,
         log_w,
-        alpha_sum: first.alpha_sum + second.alpha_sum,
-        n_leaves: first.n_leaves + second.n_leaves,
+        alpha_sum: a1 + a2,
+        n_leaves: n1 + n2,
         turning_or_diverged: turning,
+        // `first` cannot carry a divergence here (it would have returned
+        // early above), so the merged flag is second's alone
+        diverged: d2,
     }
 }
 
@@ -360,5 +516,48 @@ mod tests {
         let x: Vec<f64> = out.thetas.iter().map(|t| t[0]).collect();
         assert!((stats::variance(&x) - 25.0).abs() < 6.0, "{}", stats::variance(&x));
         assert!(out.stats.n_grad_evals > 0);
+    }
+
+    #[test]
+    fn tree_state_pool_is_bounded_and_recycled() {
+        // The pool's total allocation is a function of tree depth, not of
+        // iteration count: after warm-up every take() hits the free list.
+        let ld = std_normal_density(3);
+        let mut rng = Xoshiro256pp::seed_from_u64(21);
+        let nuts = Nuts::default();
+        let mut pool = StatePool::new(3);
+        let out = nuts.sample_impl(&ld, &[0.1, 0.2, -0.3], 200, 800, &mut rng, &mut pool);
+        assert_eq!(out.thetas.len(), 800);
+        assert!(
+            pool.allocated() <= 8 * (nuts.max_depth + 2),
+            "pool allocated {} states over 1000 iterations",
+            pool.allocated()
+        );
+        // every taken state came back
+        assert_eq!(pool.outstanding(), 0);
+    }
+
+    #[test]
+    fn state_pool_reuses_buffers() {
+        let mut pool = StatePool::new(2);
+        let a = pool.take();
+        let ptr = a.theta.as_ptr();
+        pool.put(a);
+        let b = pool.take();
+        assert_eq!(b.theta.as_ptr(), ptr, "free-listed state must be reused");
+        assert_eq!(pool.allocated(), 1);
+        let src = State {
+            theta: vec![1.0, 2.0],
+            p: vec![3.0, 4.0],
+            grad: vec![5.0, 6.0],
+            lp: -7.0,
+        };
+        let mut c = pool.take_copy(&src);
+        assert_eq!(c.theta, vec![1.0, 2.0]);
+        assert_eq!(c.lp, -7.0);
+        c.copy_from(&b);
+        pool.put(b);
+        pool.put(c);
+        assert_eq!(pool.outstanding(), 0);
     }
 }

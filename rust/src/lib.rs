@@ -6,8 +6,10 @@
 //!
 //! - **L3 (this crate)** — the probabilistic-programming runtime: tilde-DSL
 //!   models, `VarName` addressing, untyped→typed trace specialization
-//!   (`varinfo`), execution contexts, samplers (MH/HMC/NUTS/Gibbs), chains
-//!   and probability queries, plus the benchmark coordinator.
+//!   (`varinfo`), execution contexts, three inference families (MCMC:
+//!   MH/HMC/NUTS/Gibbs; SMC: particle filters + Particle-Gibbs; VI: ADVI
+//!   over the fused gradient path), chains and probability queries, plus
+//!   the benchmark coordinator.
 //! - **L2 (python/compile, build-time)** — each benchmark model's
 //!   unconstrained log-joint and gradient written in JAX, AOT-lowered to
 //!   HLO text artifacts.
@@ -37,6 +39,7 @@ pub mod util;
 pub mod value;
 pub mod varinfo;
 pub mod varname;
+pub mod vi;
 
 pub use value::Value;
 pub use varname::{Sym, VarName};
@@ -58,6 +61,7 @@ pub mod prelude {
     };
     pub use crate::util::rng::{Rng, Xoshiro256pp};
     pub use crate::value::Value;
+    pub use crate::vi::{Advi, ViFamily};
     pub use crate::varinfo::{TypedVarInfo, UntypedVarInfo};
     pub use crate::varname::{Sym, VarName};
     pub use crate::{

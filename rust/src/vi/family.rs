@@ -1,0 +1,435 @@
+//! Variational families over the unconstrained space.
+//!
+//! Both families are Gaussians in the unconstrained coordinates of a
+//! [`TypedVarInfo`](crate::varinfo::TypedVarInfo) layout — exactly Stan's
+//! ADVI design (Kucukelbir et al. 2017): the constraint bijectors already
+//! map ℝⁿ to the model's support, so a Gaussian q(θ) plus the existing
+//! `invlink` machinery yields a valid approximation of any continuous
+//! posterior, with the log-Jacobian terms accounted for by the model's
+//! own log-density evaluation (the fused executors add them to logp).
+//!
+//! - **Mean-field**: q = N(μ, diag(σ²)), σ_i = exp(ω_i). 2n parameters.
+//! - **Full-rank**: q = N(μ, LLᵀ) with L lower-triangular, diagonal
+//!   parameterized as L_ii = exp(ω_i) (always positive — unlike Stan's raw
+//!   Cholesky this keeps the entropy term well-defined for every parameter
+//!   vector). n + n + n(n−1)/2 parameters.
+//!
+//! The entropy is analytic for both: H = Σ ω_i + ½·n·ln(2πe), because
+//! ln|det L| = Σ ω_i under the log-diagonal parameterization.
+
+use rand_core::RngCore;
+
+use crate::util::rng::Rng;
+
+/// ln(2πe) — the per-dimension entropy constant of a unit Gaussian.
+const LN_2PI_E: f64 = 2.837_877_066_409_345_3;
+
+/// Which Gaussian family an [`Advi`](super::Advi) run fits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ViFamily {
+    /// Diagonal covariance: cheap, exact marginal means on Gaussian
+    /// targets, underestimates correlated variances.
+    #[default]
+    MeanField,
+    /// Dense lower-triangular Cholesky factor: captures posterior
+    /// correlations at O(n²) parameter cost.
+    FullRank,
+}
+
+impl ViFamily {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ViFamily::MeanField => "meanfield",
+            ViFamily::FullRank => "fullrank",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "meanfield" | "mean-field" | "mf" => ViFamily::MeanField,
+            "fullrank" | "full-rank" | "fr" => ViFamily::FullRank,
+            _ => return None,
+        })
+    }
+}
+
+/// Index of the strictly-lower-triangular entry (i, j), i > j, in the
+/// row-major packed `off_diag` vector.
+#[inline]
+fn tri_index(i: usize, j: usize) -> usize {
+    debug_assert!(i > j);
+    i * (i - 1) / 2 + j
+}
+
+/// A Gaussian variational approximation with its parameters flattened as
+/// `[μ…, ω…, off_diag…]` — one contiguous vector so a single optimizer
+/// instance steps every parameter.
+#[derive(Clone, Debug)]
+pub struct VarApprox {
+    pub family: ViFamily,
+    pub dim: usize,
+    /// Flat parameter vector: μ (dim), ω = log-diagonal (dim), then the
+    /// strictly-lower-triangular entries of L row-major (full-rank only).
+    pub params: Vec<f64>,
+}
+
+impl VarApprox {
+    /// Fresh approximation centered at `mu0` with isotropic scale
+    /// `init_scale` (L = init_scale · I).
+    pub fn new(family: ViFamily, mu0: &[f64], init_scale: f64) -> Self {
+        let dim = mu0.len();
+        let n_off = match family {
+            ViFamily::MeanField => 0,
+            ViFamily::FullRank => dim * (dim - 1) / 2,
+        };
+        let mut params = Vec::with_capacity(2 * dim + n_off);
+        params.extend_from_slice(mu0);
+        params.resize(2 * dim, init_scale.ln());
+        params.resize(2 * dim + n_off, 0.0);
+        Self { family, dim, params }
+    }
+
+    /// Total number of variational parameters.
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn mu(&self) -> &[f64] {
+        &self.params[..self.dim]
+    }
+
+    /// ω = log of the scale diagonal (mean-field: log σ; full-rank: log L_ii).
+    pub fn omega(&self) -> &[f64] {
+        &self.params[self.dim..2 * self.dim]
+    }
+
+    fn off_diag(&self) -> &[f64] {
+        &self.params[2 * self.dim..]
+    }
+
+    /// Marginal standard deviations of q (mean-field: exp ω; full-rank:
+    /// row norms of L).
+    pub fn stddevs(&self) -> Vec<f64> {
+        let omega = self.omega();
+        match self.family {
+            ViFamily::MeanField => omega.iter().map(|w| w.exp()).collect(),
+            ViFamily::FullRank => {
+                let off = self.off_diag();
+                (0..self.dim)
+                    .map(|i| {
+                        let mut s = omega[i].exp().powi(2);
+                        for j in 0..i {
+                            s += off[tri_index(i, j)].powi(2);
+                        }
+                        s.sqrt()
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Analytic entropy H[q] = Σ ω_i + ½·n·ln(2πe).
+    pub fn entropy(&self) -> f64 {
+        self.omega().iter().sum::<f64>() + 0.5 * self.dim as f64 * LN_2PI_E
+    }
+
+    /// Fill `eta` with a standard-normal base draw.
+    pub fn sample_eta<R: RngCore>(&self, rng: &mut R, eta: &mut [f64]) {
+        debug_assert_eq!(eta.len(), self.dim);
+        for e in eta.iter_mut() {
+            *e = rng.normal();
+        }
+    }
+
+    /// Reparameterization z = μ + L·η into `z`.
+    pub fn transform(&self, eta: &[f64], z: &mut [f64]) {
+        debug_assert_eq!(eta.len(), self.dim);
+        debug_assert_eq!(z.len(), self.dim);
+        let (mu, omega) = (self.mu(), self.omega());
+        match self.family {
+            ViFamily::MeanField => {
+                for i in 0..self.dim {
+                    z[i] = mu[i] + omega[i].exp() * eta[i];
+                }
+            }
+            ViFamily::FullRank => {
+                let off = self.off_diag();
+                for i in 0..self.dim {
+                    let mut acc = mu[i] + omega[i].exp() * eta[i];
+                    for j in 0..i {
+                        acc += off[tri_index(i, j)] * eta[j];
+                    }
+                    z[i] = acc;
+                }
+            }
+        }
+    }
+
+    /// One posterior draw z ~ q into `z` (scratch `eta` reused).
+    pub fn draw<R: RngCore>(&self, rng: &mut R, eta: &mut [f64], z: &mut [f64]) {
+        self.sample_eta(rng, eta);
+        self.transform(eta, z);
+    }
+
+    /// log q(z) for the draw produced from base noise `eta` (cheap form:
+    /// −½‖η‖² − Σ ω − ½·n·ln 2π).
+    pub fn logq_of_eta(&self, eta: &[f64]) -> f64 {
+        let sq: f64 = eta.iter().map(|e| e * e).sum();
+        -0.5 * sq - self.omega().iter().sum::<f64>()
+            - 0.5 * self.dim as f64 * crate::util::math::LN_2PI
+    }
+
+    /// Accumulate one Monte-Carlo term of the reparameterized ELBO
+    /// gradient into `grad` (same layout as `params`).
+    ///
+    /// `grad_logp` is ∇_z log p(z) at z = μ + L·η. With `stl` false this
+    /// is the standard ADVI estimator — the analytic entropy gradient
+    /// (+1 on every ω, once per *step*) is added by the caller via
+    /// [`add_entropy_grad`](Self::add_entropy_grad). With `stl` true
+    /// (sticking the landing, Roeder et al. 2017) the path derivative of
+    /// −log q with the variational parameters held fixed replaces the
+    /// analytic entropy: the estimator gains ∇_z log q(z) = −L⁻ᵀη inside
+    /// the bracket and the caller must *not* add the entropy gradient.
+    /// `scratch` must have length `dim` (used by the full-rank STL solve).
+    pub fn accumulate_grad(
+        &self,
+        eta: &[f64],
+        grad_logp: &[f64],
+        stl: bool,
+        scratch: &mut [f64],
+        grad: &mut [f64],
+    ) {
+        debug_assert_eq!(grad.len(), self.n_params());
+        debug_assert_eq!(scratch.len(), self.dim);
+        let omega_off = self.dim;
+        let tri_off = 2 * self.dim;
+        let omega = self.omega();
+
+        // bracket[i] = ∇_z log p(z)_i, plus the STL path term +L⁻ᵀη|_i
+        // (= −∇_z log q(z)_i) when sticking the landing.
+        // scratch holds the bracket.
+        match (self.family, stl) {
+            (_, false) => scratch.copy_from_slice(grad_logp),
+            (ViFamily::MeanField, true) => {
+                for i in 0..self.dim {
+                    scratch[i] = grad_logp[i] + eta[i] / omega[i].exp();
+                }
+            }
+            (ViFamily::FullRank, true) => {
+                // solve Lᵀ x = η by back substitution: x = L⁻ᵀη
+                let off = self.off_diag();
+                for i in (0..self.dim).rev() {
+                    let mut acc = eta[i];
+                    for k in i + 1..self.dim {
+                        acc -= off[tri_index(k, i)] * scratch[k];
+                    }
+                    scratch[i] = acc / omega[i].exp();
+                }
+                for i in 0..self.dim {
+                    scratch[i] += grad_logp[i];
+                }
+            }
+        }
+
+        for i in 0..self.dim {
+            grad[i] += scratch[i];
+            // dz_i/dω_i = exp(ω_i)·η_i
+            grad[omega_off + i] += scratch[i] * omega[i].exp() * eta[i];
+        }
+        if self.family == ViFamily::FullRank {
+            for i in 1..self.dim {
+                for j in 0..i {
+                    // dz_i/dL_ij = η_j
+                    grad[tri_off + tri_index(i, j)] += scratch[i] * eta[j];
+                }
+            }
+        }
+    }
+
+    /// Add the analytic entropy gradient (∂H/∂ω_i = 1) — call once per
+    /// optimization step for the standard (non-STL) estimator.
+    pub fn add_entropy_grad(&self, grad: &mut [f64]) {
+        for g in grad[self.dim..2 * self.dim].iter_mut() {
+            *g += 1.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+    use crate::util::stats;
+
+    #[test]
+    fn meanfield_transform_and_entropy() {
+        let q = VarApprox::new(ViFamily::MeanField, &[1.0, -2.0], 0.5);
+        assert_eq!(q.n_params(), 4);
+        let mut z = [0.0; 2];
+        q.transform(&[2.0, -1.0], &mut z);
+        assert!((z[0] - (1.0 + 0.5 * 2.0)).abs() < 1e-12);
+        assert!((z[1] - (-2.0 - 0.5)).abs() < 1e-12);
+        // H = Σ ln σ + ½·n·ln(2πe)
+        let want = 2.0 * 0.5f64.ln() + LN_2PI_E;
+        assert!((q.entropy() - want).abs() < 1e-12);
+        assert_eq!(q.stddevs(), vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn fullrank_transform_matches_manual_cholesky() {
+        let mut q = VarApprox::new(ViFamily::FullRank, &[0.0, 0.0, 0.0], 1.0);
+        assert_eq!(q.n_params(), 3 + 3 + 3);
+        // L = [[1,0,0],[0.5,2,0],[−0.3,0.7,0.25]]
+        q.params[3] = 1.0f64.ln();
+        q.params[4] = 2.0f64.ln();
+        q.params[5] = 0.25f64.ln();
+        q.params[6] = 0.5; // (1,0)
+        q.params[7] = -0.3; // (2,0)
+        q.params[8] = 0.7; // (2,1)
+        let eta = [1.0, -1.0, 2.0];
+        let mut z = [0.0; 3];
+        q.transform(&eta, &mut z);
+        assert!((z[0] - 1.0).abs() < 1e-12);
+        assert!((z[1] - (0.5 - 2.0)).abs() < 1e-12);
+        assert!((z[2] - (-0.3 - 0.7 + 0.5)).abs() < 1e-12);
+        // marginal sds are the L row norms
+        let sd = q.stddevs();
+        assert!((sd[0] - 1.0).abs() < 1e-12);
+        assert!((sd[1] - (0.25f64 + 4.0).sqrt()).abs() < 1e-12);
+        assert!((sd[2] - (0.09f64 + 0.49 + 0.0625).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn logq_matches_density_of_draws() {
+        // For q = N(μ, σ²) in 1D, logq(η) must equal the Normal logpdf at z.
+        let q = VarApprox::new(ViFamily::MeanField, &[0.7], 0.3);
+        let eta = [1.4];
+        let mut z = [0.0];
+        q.transform(&eta, &mut z);
+        let want = crate::dist::Normal::new(0.7, 0.3).logpdf(z[0]);
+        assert!((q.logq_of_eta(&eta) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn draw_moments_match_parameters() {
+        let mut q = VarApprox::new(ViFamily::FullRank, &[1.0, -1.0], 1.0);
+        // L = [[0.5, 0], [0.8, 0.6]] → var(z0)=0.25, var(z1)=1.0, cov=0.4
+        q.params[2] = 0.5f64.ln();
+        q.params[3] = 0.6f64.ln();
+        q.params[4] = 0.8;
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let (mut eta, mut z) = (vec![0.0; 2], vec![0.0; 2]);
+        let mut z0 = Vec::new();
+        let mut z1 = Vec::new();
+        for _ in 0..40_000 {
+            q.draw(&mut rng, &mut eta, &mut z);
+            z0.push(z[0]);
+            z1.push(z[1]);
+        }
+        assert!((stats::mean(&z0) - 1.0).abs() < 0.02);
+        assert!((stats::mean(&z1) + 1.0).abs() < 0.02);
+        assert!((stats::variance(&z0) - 0.25).abs() < 0.01);
+        assert!((stats::variance(&z1) - 1.0).abs() < 0.04);
+        let cov = z0
+            .iter()
+            .zip(&z1)
+            .map(|(a, b)| (a - stats::mean(&z0)) * (b - stats::mean(&z1)))
+            .sum::<f64>()
+            / (z0.len() - 1) as f64;
+        assert!((cov - 0.4).abs() < 0.03, "{cov}");
+    }
+
+    /// Finite-difference check of the full ELBO gradient on a quadratic
+    /// target where E_q[log p] is available in closed form.
+    #[test]
+    fn elbo_gradient_matches_finite_difference_quadratic() {
+        // target: log p(z) = −½ Σ a_i (z_i − c_i)², a = (1, 4), c = (0.3, −0.6)
+        let a = [1.0, 4.0];
+        let c = [0.3, -0.6];
+        // closed-form ELBO: −½ Σ a_i ((μ_i−c_i)² + Var_i) + H(q)
+        let elbo = |q: &VarApprox| -> f64 {
+            let sd = q.stddevs();
+            let mu = q.mu();
+            let mut e = q.entropy();
+            for i in 0..2 {
+                e -= 0.5 * a[i] * ((mu[i] - c[i]).powi(2) + sd[i] * sd[i]);
+            }
+            e
+        };
+        for family in [ViFamily::MeanField, ViFamily::FullRank] {
+            let mut q = VarApprox::new(family, &[0.9, -0.1], 0.7);
+            if family == ViFamily::FullRank {
+                q.params[4] = 0.4; // non-trivial off-diagonal
+            }
+            // Monte-Carlo gradient with common random numbers, many samples
+            let mut rng = Xoshiro256pp::seed_from_u64(5);
+            let n = 60_000;
+            let mut grad = vec![0.0; q.n_params()];
+            let (mut eta, mut z, mut scratch) = (vec![0.0; 2], vec![0.0; 2], vec![0.0; 2]);
+            for _ in 0..n {
+                q.draw(&mut rng, &mut eta, &mut z);
+                let glp: Vec<f64> = (0..2).map(|i| -a[i] * (z[i] - c[i])).collect();
+                q.accumulate_grad(&eta, &glp, false, &mut scratch, &mut grad);
+            }
+            for g in grad.iter_mut() {
+                *g /= n as f64;
+            }
+            q.add_entropy_grad(&mut grad);
+            // finite differences of the closed-form ELBO
+            for k in 0..q.n_params() {
+                let h = 1e-5;
+                let mut qp = q.clone();
+                qp.params[k] += h;
+                let mut qm = q.clone();
+                qm.params[k] -= h;
+                let fd = (elbo(&qp) - elbo(&qm)) / (2.0 * h);
+                assert!(
+                    (grad[k] - fd).abs() < 0.05 * (1.0 + fd.abs()),
+                    "{family:?} param {k}: MC {} vs FD {fd}",
+                    grad[k]
+                );
+            }
+        }
+    }
+
+    /// STL and standard estimators agree in expectation (same target).
+    #[test]
+    fn stl_estimator_agrees_in_expectation() {
+        let a = [2.0, 0.5];
+        for family in [ViFamily::MeanField, ViFamily::FullRank] {
+            let mut q = VarApprox::new(family, &[0.2, 0.4], 0.8);
+            if family == ViFamily::FullRank {
+                q.params[4] = -0.3;
+            }
+            let n = 80_000;
+            let run = |stl: bool, seed: u64| -> Vec<f64> {
+                let mut rng = Xoshiro256pp::seed_from_u64(seed);
+                let mut grad = vec![0.0; q.n_params()];
+                let (mut eta, mut z, mut scratch) =
+                    (vec![0.0; 2], vec![0.0; 2], vec![0.0; 2]);
+                for _ in 0..n {
+                    q.draw(&mut rng, &mut eta, &mut z);
+                    let glp: Vec<f64> = (0..2).map(|i| -a[i] * z[i]).collect();
+                    q.accumulate_grad(&eta, &glp, stl, &mut scratch, &mut grad);
+                }
+                for g in grad.iter_mut() {
+                    *g /= n as f64;
+                }
+                if !stl {
+                    q.add_entropy_grad(&mut grad);
+                }
+                grad
+            };
+            let std_grad = run(false, 11);
+            let stl_grad = run(true, 11);
+            for k in 0..std_grad.len() {
+                assert!(
+                    (std_grad[k] - stl_grad[k]).abs() < 0.06 * (1.0 + std_grad[k].abs()),
+                    "{family:?} param {k}: std {} vs stl {}",
+                    std_grad[k],
+                    stl_grad[k]
+                );
+            }
+        }
+    }
+}
