@@ -912,18 +912,24 @@ pub fn table1_cells_to_json(cells: &[Cell], cfg: &Table1Config) -> String {
 /// trajectory plus a NUTS reference run at matched model so the JSON
 /// carries the wall-clock and accuracy trade of variational inference —
 /// the workload class neither the Table-1 HMC harness nor `bench smc`
-/// covers.
+/// covers. With `--minibatch B`, tall models additionally get a
+/// minibatched row per family whose accuracy is measured against the
+/// full-data fit (full-vs-minibatch: secs/iter, iters-to-converge,
+/// posterior agreement).
 #[derive(Clone, Debug)]
 pub struct ViRow {
     pub model: String,
     pub family: ViFamily,
     /// Unconstrained dimension.
     pub dim: usize,
+    /// Minibatch size this row fitted with (0 = full-data gradients).
+    pub minibatch: usize,
     /// Best evaluated ELBO and its Monte-Carlo standard error.
     pub elbo: f64,
     pub elbo_se: f64,
     pub converged: bool,
-    /// Optimizer iterations actually run (≤ configured max).
+    /// Optimizer iterations actually run (≤ configured max) — the
+    /// iters-to-converge figure when `converged` is set.
     pub iters: usize,
     /// η chosen by the Stan-style ladder search.
     pub eta: f64,
@@ -931,7 +937,8 @@ pub struct ViRow {
     pub wall_secs: f64,
     /// (iteration, ELBO) at every evaluation point.
     pub elbo_trace: Vec<(usize, f64)>,
-    /// NUTS reference: wall seconds at matched model.
+    /// NUTS reference: wall seconds at matched model (NaN when the model
+    /// is too tall for an honest full-data NUTS reference).
     pub nuts_wall_secs: f64,
     /// nuts_wall_secs / wall_secs.
     pub speedup_vs_nuts: f64,
@@ -939,6 +946,10 @@ pub struct ViRow {
     pub max_mean_err_vs_nuts: f64,
     /// Same for per-column standard deviations.
     pub max_sd_err_vs_nuts: f64,
+    /// Minibatch rows only: max posterior-mean / sd error vs the
+    /// full-data fit of the same family (NaN on full rows).
+    pub max_mean_err_vs_full: f64,
+    pub max_sd_err_vs_full: f64,
     pub seed: u64,
 }
 
@@ -954,6 +965,10 @@ pub struct ViBenchConfig {
     pub draws: usize,
     pub nuts_warmup: usize,
     pub nuts_iters: usize,
+    /// Minibatch size B: models with more than B observation sites get an
+    /// extra minibatched row per family (models at or below B would be a
+    /// full-data fit in disguise and are skipped).
+    pub minibatch: Option<usize>,
     /// Base ADVI configuration (`family` is overridden per row).
     pub advi: Advi,
 }
@@ -970,6 +985,7 @@ impl Default for ViBenchConfig {
             draws: 2000,
             nuts_warmup: 500,
             nuts_iters: 1000,
+            minibatch: None,
             advi: Advi {
                 max_iters: 1000,
                 eval_every: 25,
@@ -981,10 +997,33 @@ impl Default for ViBenchConfig {
     }
 }
 
-/// Run ADVI × family against a NUTS reference on each configured model.
+/// NUTS at full data stops being an honest, *fast* reference somewhere in
+/// the thousands of observations; above this cap the VI rows carry NaN
+/// reference fields — the tall-data regime is exactly where full-N NUTS
+/// is unaffordable, and minibatch accuracy is tracked against the
+/// full-data fit instead.
+const NUTS_REFERENCE_OBS_CAP: usize = 4096;
+
+/// Max per-column posterior mean / sd discrepancy of `chain` vs `reference`
+/// (relative, 1-regularized).
+fn chain_errs(chain: &crate::chain::Chain, reference: &crate::chain::Chain) -> (f64, f64) {
+    let mut max_mean_err = 0.0f64;
+    let mut max_sd_err = 0.0f64;
+    for col in reference.names() {
+        let (rm, rs) = (reference.mean(col).unwrap(), reference.std(col).unwrap());
+        let (vm, vs) = (chain.mean(col).unwrap(), chain.std(col).unwrap());
+        max_mean_err = max_mean_err.max((vm - rm).abs() / (1.0 + rm.abs()));
+        max_sd_err = max_sd_err.max((vs - rs).abs() / (1.0 + rs.abs()));
+    }
+    (max_mean_err, max_sd_err)
+}
+
+/// Run ADVI × family (full-data, plus minibatched on tall models) against
+/// a NUTS reference on each configured model.
 pub fn run_vi_bench(cfg: &ViBenchConfig) -> Vec<ViRow> {
-    use crate::inference::{sample_chain, Nuts, SamplerKind};
-    use crate::model::init_typed;
+    use crate::inference::{raw_to_chain, sample_chain, Nuts, SamplerKind};
+    use crate::model::{count_obs_sites, init_typed};
+    use crate::vi::MinibatchTarget;
 
     let mut rows = Vec::with_capacity(cfg.models.len() * cfg.families.len());
     for name in &cfg.models {
@@ -998,20 +1037,68 @@ pub fn run_vi_bench(cfg: &ViBenchConfig) -> Vec<ViRow> {
         let tvi = init_typed(model, &mut rng);
         let theta0: Vec<f64> = tvi.unconstrained.iter().map(|x| x * 0.1).collect();
         let ld = NativeDensity::fused(model, &tvi);
+        let n_obs = count_obs_sites(model, &tvi);
 
-        // NUTS reference on the same fused density
-        eprintln!("bench: {name} / nuts reference");
-        let nuts = sample_chain(
-            &ld,
-            &tvi,
-            &SamplerKind::Nuts(Nuts {
-                step_size: bm.step_size,
-                ..Nuts::default()
-            }),
-            cfg.nuts_warmup,
-            cfg.nuts_iters,
-            cfg.seed,
-        );
+        // NUTS reference on the same fused density (tall models skip it)
+        let nuts = if n_obs <= NUTS_REFERENCE_OBS_CAP {
+            eprintln!("bench: {name} / nuts reference");
+            Some(sample_chain(
+                &ld,
+                &tvi,
+                &SamplerKind::Nuts(Nuts {
+                    step_size: bm.step_size,
+                    ..Nuts::default()
+                }),
+                cfg.nuts_warmup,
+                cfg.nuts_iters,
+                cfg.seed,
+            ))
+        } else {
+            eprintln!("bench: {name}: skipping NUTS reference ({n_obs} observations)");
+            None
+        };
+
+        let make_row = |family: ViFamily,
+                        fit: &crate::vi::ViFit,
+                        chain: &crate::chain::Chain,
+                        full_chain: Option<&crate::chain::Chain>|
+         -> ViRow {
+            let (nuts_mean_err, nuts_sd_err) = match &nuts {
+                Some(n) => chain_errs(chain, n),
+                None => (f64::NAN, f64::NAN),
+            };
+            let (full_mean_err, full_sd_err) = match full_chain {
+                Some(f) => chain_errs(chain, f),
+                None => (f64::NAN, f64::NAN),
+            };
+            ViRow {
+                model: name.clone(),
+                family,
+                dim: tvi.dim(),
+                minibatch: fit.minibatch.unwrap_or(0),
+                elbo: fit.elbo,
+                elbo_se: fit.elbo_se,
+                converged: fit.converged,
+                iters: fit.iters,
+                eta: fit.eta,
+                // main-loop time only: the η ladder search is a one-off
+                // setup cost and would overstate the per-iteration figure
+                secs_per_iter: fit.opt_wall_secs / fit.iters.max(1) as f64,
+                wall_secs: fit.wall_secs,
+                elbo_trace: fit.elbo_trace.clone(),
+                nuts_wall_secs: nuts
+                    .as_ref()
+                    .map_or(f64::NAN, |n| n.stats.wall_secs),
+                speedup_vs_nuts: nuts
+                    .as_ref()
+                    .map_or(f64::NAN, |n| n.stats.wall_secs / fit.wall_secs),
+                max_mean_err_vs_nuts: nuts_mean_err,
+                max_sd_err_vs_nuts: nuts_sd_err,
+                max_mean_err_vs_full: full_mean_err,
+                max_sd_err_vs_full: full_sd_err,
+                seed: cfg.seed,
+            }
+        };
 
         for &family in &cfg.families {
             eprintln!("bench: {name} / advi×{}", family.label());
@@ -1024,35 +1111,21 @@ pub fn run_vi_bench(cfg: &ViBenchConfig) -> Vec<ViRow> {
             let raw = fit.sample_raw(&ld, cfg.draws, &mut vi_rng);
             // constrained-space chain of approximation draws, through the
             // same conversion path as the `sample_chain` driver
-            let chain = crate::inference::raw_to_chain(&raw, &tvi);
-            let mut max_mean_err = 0.0f64;
-            let mut max_sd_err = 0.0f64;
-            for col in nuts.names() {
-                let (rm, rs) = (nuts.mean(col).unwrap(), nuts.std(col).unwrap());
-                let (vm, vs) = (chain.mean(col).unwrap(), chain.std(col).unwrap());
-                max_mean_err = max_mean_err.max((vm - rm).abs() / (1.0 + rm.abs()));
-                max_sd_err = max_sd_err.max((vs - rs).abs() / (1.0 + rs.abs()));
+            let chain = raw_to_chain(&raw, &tvi);
+            rows.push(make_row(family, &fit, &chain, None));
+
+            // full-vs-minibatch comparison on tall models
+            if let Some(b) = cfg.minibatch {
+                if n_obs > b {
+                    eprintln!("bench: {name} / advi×{}×minibatch-{b}", family.label());
+                    let target = MinibatchTarget::new(model, &tvi, b, Backend::ReverseFused);
+                    let mut mb_rng = Xoshiro256pp::seed_from_u64(cfg.seed ^ 0xB16B);
+                    let mb_fit = advi.fit_minibatch(&target, &theta0, &mut mb_rng);
+                    let mb_raw = mb_fit.sample_raw(&ld, cfg.draws, &mut mb_rng);
+                    let mb_chain = raw_to_chain(&mb_raw, &tvi);
+                    rows.push(make_row(family, &mb_fit, &mb_chain, Some(&chain)));
+                }
             }
-            rows.push(ViRow {
-                model: name.clone(),
-                family,
-                dim: tvi.dim(),
-                elbo: fit.elbo,
-                elbo_se: fit.elbo_se,
-                converged: fit.converged,
-                iters: fit.iters,
-                eta: fit.eta,
-                // main-loop time only: the η ladder search is a one-off
-                // setup cost and would overstate the per-iteration figure
-                secs_per_iter: fit.opt_wall_secs / fit.iters.max(1) as f64,
-                wall_secs: fit.wall_secs,
-                elbo_trace: fit.elbo_trace,
-                nuts_wall_secs: nuts.stats.wall_secs,
-                speedup_vs_nuts: nuts.stats.wall_secs / fit.wall_secs,
-                max_mean_err_vs_nuts: max_mean_err,
-                max_sd_err_vs_nuts: max_sd_err,
-                seed: cfg.seed,
-            });
         }
     }
     rows
@@ -1063,28 +1136,75 @@ pub fn render_vi_table(rows: &[ViRow]) -> String {
     let mut out = String::new();
     let _ = writeln!(
         out,
-        "vi — ADVI fit per model × family vs a NUTS reference (errors are vs the NUTS posterior)\n"
+        "vi — ADVI fit per model × family vs a NUTS reference (errors are vs the NUTS posterior;\n\
+         minibatch rows additionally report the error vs the full-data fit)\n"
     );
     let _ = writeln!(
         out,
-        "{:<16} {:>10} {:>5} {:>12} {:>5} {:>6} {:>10} {:>8} {:>10} {:>9}",
-        "model", "family", "dim", "ELBO", "conv", "iters", "wall (s)", "×nuts", "mean-err", "sd-err"
+        "{:<16} {:>10} {:>5} {:>6} {:>12} {:>5} {:>6} {:>11} {:>10} {:>8} {:>10} {:>9} {:>9}",
+        "model", "family", "dim", "batch", "ELBO", "conv", "iters", "secs/iter", "wall (s)",
+        "×nuts", "mean-err", "sd-err", "vs-full"
     );
     for r in rows {
         let _ = writeln!(
             out,
-            "{:<16} {:>10} {:>5} {:>12.3} {:>5} {:>6} {:>10.3} {:>8.1} {:>10.4} {:>9.4}",
+            "{:<16} {:>10} {:>5} {:>6} {:>12.3} {:>5} {:>6} {:>11.5} {:>10.3} {:>8} {:>10} {:>9} {:>9}",
             r.model,
             r.family.label(),
             r.dim,
+            if r.minibatch == 0 {
+                "full".to_string()
+            } else {
+                format!("{}", r.minibatch)
+            },
             r.elbo,
             if r.converged { "yes" } else { "NO" },
             r.iters,
+            r.secs_per_iter,
             r.wall_secs,
-            r.speedup_vs_nuts,
-            r.max_mean_err_vs_nuts,
-            r.max_sd_err_vs_nuts,
+            if r.speedup_vs_nuts.is_finite() {
+                format!("{:.1}", r.speedup_vs_nuts)
+            } else {
+                "-".into()
+            },
+            if r.max_mean_err_vs_nuts.is_finite() {
+                format!("{:.4}", r.max_mean_err_vs_nuts)
+            } else {
+                "-".into()
+            },
+            if r.max_sd_err_vs_nuts.is_finite() {
+                format!("{:.4}", r.max_sd_err_vs_nuts)
+            } else {
+                "-".into()
+            },
+            if r.max_mean_err_vs_full.is_finite() {
+                format!("{:.4}", r.max_mean_err_vs_full)
+            } else {
+                "-".into()
+            },
         );
+    }
+    // headline full-vs-minibatch per-iteration speedups
+    let mut wrote_header = false;
+    for r in rows.iter().filter(|r| r.minibatch > 0) {
+        if let Some(full) = rows
+            .iter()
+            .find(|f| f.minibatch == 0 && f.model == r.model && f.family == r.family)
+        {
+            if !wrote_header {
+                let _ = writeln!(out, "\nminibatch speedups (full / minibatch secs per iteration):");
+                wrote_header = true;
+            }
+            let _ = writeln!(
+                out,
+                "  {:<16} {:<10} B={:<6} {:.1}×  (mean-err vs full fit: {:.4})",
+                r.model,
+                r.family.label(),
+                r.minibatch,
+                full.secs_per_iter / r.secs_per_iter,
+                r.max_mean_err_vs_full,
+            );
+        }
     }
     out
 }
@@ -1108,14 +1228,17 @@ pub fn vi_rows_to_json(rows: &[ViRow], cfg: &ViBenchConfig) -> String {
         trace.push(']');
         let _ = write!(
             out,
-            "    {{\"model\": \"{}\", \"family\": \"{}\", \"dim\": {}, \"elbo\": {}, \
+            "    {{\"model\": \"{}\", \"family\": \"{}\", \"dim\": {}, \"minibatch\": {}, \
+             \"elbo\": {}, \
              \"elbo_se\": {}, \"converged\": {}, \"iters\": {}, \"eta\": {}, \
              \"secs_per_iter\": {}, \"wall_secs\": {}, \"nuts_wall_secs\": {}, \
              \"speedup_vs_nuts\": {}, \"max_mean_err_vs_nuts\": {}, \
-             \"max_sd_err_vs_nuts\": {}, \"seed\": {}, \"elbo_trace\": {}}}",
+             \"max_sd_err_vs_nuts\": {}, \"max_mean_err_vs_full\": {}, \
+             \"max_sd_err_vs_full\": {}, \"seed\": {}, \"elbo_trace\": {}}}",
             r.model,
             r.family.label(),
             r.dim,
+            r.minibatch,
             json_num(r.elbo),
             json_num(r.elbo_se),
             r.converged,
@@ -1127,6 +1250,8 @@ pub fn vi_rows_to_json(rows: &[ViRow], cfg: &ViBenchConfig) -> String {
             json_num(r.speedup_vs_nuts),
             json_num(r.max_mean_err_vs_nuts),
             json_num(r.max_sd_err_vs_nuts),
+            json_num(r.max_mean_err_vs_full),
+            json_num(r.max_sd_err_vs_full),
             r.seed,
             trace,
         );
@@ -1345,6 +1470,52 @@ mod tests {
         assert!(json.contains("\"elbo_trace\": [["));
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert!(!json.contains(",\n  ]"));
+    }
+
+    #[test]
+    fn vi_bench_emits_minibatch_rows_on_tall_models() {
+        let cfg = ViBenchConfig {
+            models: vec!["logreg_tall".into()],
+            families: vec![ViFamily::MeanField],
+            seed: 9,
+            draws: 200,
+            minibatch: Some(512),
+            advi: Advi {
+                max_iters: 60,
+                eval_every: 20,
+                grad_samples: 2,
+                elbo_samples: 20,
+                adapt_iters: 10,
+                ..Advi::default()
+            },
+            ..ViBenchConfig::default()
+        };
+        let rows = run_vi_bench(&cfg);
+        // one full row + one minibatch row for the single family
+        assert_eq!(rows.len(), 2);
+        let (full, mb) = (&rows[0], &rows[1]);
+        assert_eq!(full.minibatch, 0);
+        assert_eq!(mb.minibatch, 512);
+        // tall model: the full-N NUTS reference is skipped, accuracy is
+        // tracked against the full-data fit instead
+        assert!(full.nuts_wall_secs.is_nan() && mb.speedup_vs_nuts.is_nan());
+        assert!(full.max_mean_err_vs_full.is_nan());
+        assert!(mb.max_mean_err_vs_full.is_finite());
+        // a B=512 step touches ~2.5% of the 20k rows: strictly cheaper
+        // per iteration, even with the periodic full-data ELBO checks
+        assert!(
+            mb.secs_per_iter < full.secs_per_iter,
+            "minibatch {} vs full {} secs/iter",
+            mb.secs_per_iter,
+            full.secs_per_iter
+        );
+        let json = vi_rows_to_json(&rows, &cfg);
+        assert!(json.contains("\"minibatch\": 512"));
+        assert!(json.contains("\"minibatch\": 0"));
+        assert!(json.contains("\"max_mean_err_vs_full\": "));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        let table = render_vi_table(&rows);
+        assert!(table.contains("minibatch speedups"));
     }
 
     #[test]

@@ -142,6 +142,8 @@ impl Chain {
     }
 
     /// Formatted summary table: mean, std, 2.5%/50%/97.5% quantiles, ESS.
+    /// Degenerate columns render finite numbers: a single-draw or
+    /// constant column has sd 0 and ESS = draw count, not `NaN`.
     pub fn summary(&self) -> String {
         let mut out = String::new();
         let w = self.names.iter().map(|n| n.len()).max().unwrap_or(5).max(5);
@@ -152,12 +154,16 @@ impl Chain {
         );
         for name in &self.names {
             let c = self.column(name).unwrap();
+            // sample sd of a single draw is undefined (NaN); the spread
+            // of the summarized draws is genuinely 0
+            let sd = stats::std(&c);
+            let sd = if sd.is_finite() { sd } else { 0.0 };
             let _ = writeln!(
                 out,
                 "{:<w$} {:>10.4} {:>10.4} {:>10.4} {:>10.4} {:>10.4} {:>8.1}",
                 name,
                 stats::mean(&c),
-                stats::std(&c),
+                sd,
                 stats::quantile(&c, 0.025),
                 stats::quantile(&c, 0.5),
                 stats::quantile(&c, 0.975),
@@ -349,6 +355,37 @@ mod tests {
         let c = demo_chain(9, 0.0);
         let s = c.summary();
         assert!(s.contains("b[0]") && s.contains("b[1]") && s.contains("ess"));
+    }
+
+    #[test]
+    fn summary_of_degenerate_columns_is_finite() {
+        // a constant column and a single-draw chain both used to render
+        // NaN cells (std / ESS); summaries must stay finite
+        let mut c = Chain::new(vec!["a".into(), "k".into()]);
+        for _ in 0..50 {
+            c.push(vec![1.25, 0.1], -1.0);
+        }
+        let s = c.summary();
+        assert!(!s.contains("NaN"), "degenerate summary has NaN:\n{s}");
+        assert_eq!(c.ess("k").unwrap(), 50.0);
+        let mut single = Chain::new(vec!["x".into()]);
+        single.push(vec![2.0], -0.5);
+        let s = single.summary();
+        assert!(!s.contains("NaN"), "single-draw summary has NaN:\n{s}");
+    }
+
+    #[test]
+    fn rhat_of_degenerate_multichain_is_one() {
+        let mk = || {
+            let mut c = Chain::new(vec!["k".into()]);
+            for _ in 0..100 {
+                c.push(vec![0.1], 0.0);
+            }
+            c
+        };
+        let mc = MultiChain::new(vec![mk(), mk()]);
+        assert_eq!(mc.rhat("k").unwrap(), 1.0);
+        assert_eq!(mc.rhat_classic("k").unwrap(), 1.0);
     }
 
     #[test]

@@ -9,11 +9,18 @@
 //! - [`Context::Prior`] — parameter terms only.
 //! - [`Context::MiniBatch`] — log-joint with the likelihood scaled by
 //!   `scale` (= N/batch), so stochastic-VI gradients are unbiased.
+//! - [`Context::Subsample`] — log-joint with the likelihood *restricted*
+//!   to an observation-index window and scaled: the tall-data estimator
+//!   (priors at weight 1 + a random batch of observations at N/B).
+//! - [`Context::ObsWindow`] — particle replay: windowed likelihood, no
+//!   prior terms.
 //!
-//! Rather than four types dispatching at compile time (Julia's design), a
-//! context here is a pair of weights applied to the prior- and
-//! likelihood-side accumulators — semantically identical, and the weights
-//! constant-fold on the typed path.
+//! Rather than distinct types dispatching at compile time (Julia's
+//! design), a context here is a pair of weights applied to the prior- and
+//! likelihood-side accumulators plus an observation-index window —
+//! semantically identical, and the weights constant-fold on the typed
+//! path. `Subsample` generalizes `MiniBatch` (full window) and the
+//! likelihood half of `ObsWindow` (scale 1, but with priors kept).
 
 use crate::ad::Scalar;
 
@@ -27,8 +34,15 @@ pub enum Context {
     /// Only parameter (prior) terms (`PriorContext`).
     Prior,
     /// Log-joint with scaled likelihood (`MiniBatchContext`): the paper's
-    /// mechanism for stochastic-gradient VI.
+    /// mechanism for stochastic-gradient VI. Equivalent to
+    /// [`Context::Subsample`] with the full observation window.
     MiniBatch { scale: f64 },
+    /// Log-joint with the likelihood restricted to observe statements with
+    /// visit index in `[lo, hi)` and scaled by `scale` (= N/B): priors at
+    /// weight 1 + a minibatch of observations — the unbiased estimator
+    /// stochastic VI needs on tall-data models. Out-of-window observations
+    /// contribute nothing (and cannot trigger early rejection).
+    Subsample { lo: usize, hi: usize, scale: f64 },
     /// Replay-with-regenerate particle mode (SMC / Particle-Gibbs): score
     /// only the observe statements with visit index in `[lo, hi)`, drop
     /// all prior-side terms (the bootstrap proposal *is* the prior, so
@@ -48,22 +62,25 @@ impl Context {
         }
     }
 
-    /// Weight applied to likelihood-side (observe) terms.
+    /// Weight applied to likelihood-side (observe) terms inside the
+    /// observation window.
     #[inline]
     pub fn lik_weight(&self) -> f64 {
         match self {
             Context::Prior => 0.0,
             Context::MiniBatch { scale } => *scale,
+            Context::Subsample { scale, .. } => *scale,
             _ => 1.0,
         }
     }
 
     /// The observation-index window scored by this context:
-    /// `[0, usize::MAX)` for every non-particle context.
+    /// `[0, usize::MAX)` for every non-windowed context.
     #[inline]
     pub fn obs_window(&self) -> (usize, usize) {
         match self {
             Context::ObsWindow { lo, hi } => (*lo, *hi),
+            Context::Subsample { lo, hi, .. } => (*lo, *hi),
             _ => (0, usize::MAX),
         }
     }
@@ -74,25 +91,40 @@ impl Context {
 /// Calling [`Accumulator::reject`] pins the total at −∞ (the `@logpdf() =
 /// -Inf; return` idiom); subsequent accumulation is ignored and model code
 /// should return promptly (the `tilde!` macros insert the check).
+///
+/// The accumulator also owns the context's **observation-site counter**:
+/// executors route observe statements through [`Accumulator::add_obs`]
+/// (or [`Accumulator::note_obs`] on the fused path), which counts sites
+/// in model visit order and drops terms outside the context's window —
+/// so `Context::Subsample` works identically on every executor.
 #[derive(Clone, Copy, Debug)]
 pub struct Accumulator<T: Scalar> {
     logp: T,
     rejected: bool,
     prior_w: f64,
     lik_w: f64,
+    obs_lo: usize,
+    obs_hi: usize,
+    obs_seen: usize,
 }
 
 impl<T: Scalar> Accumulator<T> {
     pub fn new(ctx: Context) -> Self {
+        let (obs_lo, obs_hi) = ctx.obs_window();
         Self {
             logp: T::constant(0.0),
             rejected: false,
             prior_w: ctx.prior_weight(),
             lik_w: ctx.lik_weight(),
+            obs_lo,
+            obs_hi,
+            obs_seen: 0,
         }
     }
 
-    /// Add a prior-side term (weighted by the context).
+    /// Add a prior-side term (weighted by the context). A −∞ prior term
+    /// rejects even at weight 0: particle replay relies on zero-weighted
+    /// proposal priors still vetoing impossible draws.
     #[inline]
     pub fn add_prior(&mut self, lp: T) {
         if self.rejected {
@@ -107,19 +139,65 @@ impl<T: Scalar> Accumulator<T> {
         }
     }
 
-    /// Add a likelihood-side term (weighted by the context).
+    /// Add a likelihood-side term at an explicit weight. A zero weight
+    /// skips the term entirely — including the −∞ rejection check, so a
+    /// prior-only evaluation (or an out-of-window observation) is never
+    /// poisoned by an impossible observation.
     #[inline]
-    pub fn add_lik(&mut self, lp: T) {
-        if self.rejected {
+    pub fn add_lik_weighted(&mut self, lp: T, w: f64) {
+        if self.rejected || w == 0.0 {
             return;
         }
         if lp.value() == f64::NEG_INFINITY {
             self.reject();
             return;
         }
-        if self.lik_w != 0.0 {
-            self.logp = self.logp + lp * self.lik_w;
+        self.logp = self.logp + lp * w;
+    }
+
+    /// Add a likelihood-side term (weighted by the context), without
+    /// observation-site counting — the replay executors do their own
+    /// windowing and route pre-windowed terms here.
+    #[inline]
+    pub fn add_lik(&mut self, lp: T) {
+        self.add_lik_weighted(lp, self.lik_w);
+    }
+
+    /// Count one observation site (model visit order) and return the
+    /// weight its term carries: `lik_weight()` inside the context's
+    /// window, 0.0 outside. Fused executors call this *before* evaluating
+    /// the density kernel so out-of-window observations cost nothing.
+    #[inline]
+    pub fn note_obs(&mut self) -> f64 {
+        let i = self.obs_seen;
+        self.obs_seen += 1;
+        if i >= self.obs_lo && i < self.obs_hi {
+            self.lik_w
+        } else {
+            0.0
         }
+    }
+
+    /// Skip `n` observation sites without scoring them (they still count
+    /// toward the window indices) — the hook window-aware model bodies
+    /// use to jump over out-of-window blocks.
+    #[inline]
+    pub fn skip_obs(&mut self, n: usize) {
+        self.obs_seen += n;
+    }
+
+    /// Count + window + weight + accumulate one observation term: the
+    /// one-call form the non-fused executors use.
+    #[inline]
+    pub fn add_obs(&mut self, lp: T) {
+        let w = self.note_obs();
+        self.add_lik_weighted(lp, w);
+    }
+
+    /// Observation sites counted so far (visited or skipped).
+    #[inline]
+    pub fn obs_seen(&self) -> usize {
+        self.obs_seen
     }
 
     /// Early rejection: pin the accumulator at −∞.
@@ -199,6 +277,28 @@ mod tests {
     }
 
     #[test]
+    fn zero_weight_neg_inf_likelihood_does_not_reject() {
+        // regression: a prior-only evaluation must not be poisoned by an
+        // impossible observation — the zero-weighted term is skipped
+        // before the −∞ check
+        let mut a = Accumulator::<f64>::new(Context::Prior);
+        a.add_prior(-1.0);
+        a.add_lik(f64::NEG_INFINITY);
+        a.add_obs(f64::NEG_INFINITY);
+        assert!(!a.rejected());
+        assert_eq!(a.total(), -1.0);
+    }
+
+    #[test]
+    fn zero_weight_neg_inf_prior_still_rejects() {
+        // particle replay routes zero-weighted proposal priors through
+        // add_prior precisely so impossible draws veto the particle
+        let mut a = Accumulator::<f64>::new(Context::Likelihood);
+        a.add_prior(f64::NEG_INFINITY);
+        assert!(a.rejected());
+    }
+
+    #[test]
     fn weights_expose_paper_semantics() {
         assert_eq!(Context::Default.prior_weight(), 1.0);
         assert_eq!(Context::Default.lik_weight(), 1.0);
@@ -214,5 +314,51 @@ mod tests {
         assert_eq!(ctx.lik_weight(), 1.0);
         assert_eq!(ctx.obs_window(), (3, 7));
         assert_eq!(Context::Default.obs_window(), (0, usize::MAX));
+    }
+
+    #[test]
+    fn subsample_keeps_priors_and_windows_scaled_likelihood() {
+        let ctx = Context::Subsample { lo: 1, hi: 3, scale: 4.0 };
+        assert_eq!(ctx.prior_weight(), 1.0);
+        assert_eq!(ctx.lik_weight(), 4.0);
+        assert_eq!(ctx.obs_window(), (1, 3));
+        let mut a = Accumulator::<f64>::new(ctx);
+        a.add_prior(-1.0);
+        a.add_obs(-10.0); // site 0: out of window
+        a.add_obs(-2.0); // site 1: scored × 4
+        a.add_obs(-3.0); // site 2: scored × 4
+        a.add_obs(-10.0); // site 3: out of window
+        assert_eq!(a.obs_seen(), 4);
+        assert_eq!(a.total(), -1.0 - 4.0 * 5.0);
+    }
+
+    #[test]
+    fn skip_obs_advances_window_indices() {
+        let ctx = Context::Subsample { lo: 2, hi: 4, scale: 2.0 };
+        let mut a = Accumulator::<f64>::new(ctx);
+        a.skip_obs(2); // sites 0-1 jumped without evaluation
+        a.add_obs(-1.0); // site 2: scored
+        a.add_obs(-2.0); // site 3: scored
+        a.skip_obs(5);
+        assert_eq!(a.obs_seen(), 9);
+        assert_eq!(a.total(), -6.0);
+        // out-of-window −∞ observations never poison the run
+        let mut b = Accumulator::<f64>::new(ctx);
+        b.add_obs(f64::NEG_INFINITY);
+        assert!(!b.rejected());
+    }
+
+    #[test]
+    fn minibatch_matches_full_window_subsample() {
+        let mb = Context::MiniBatch { scale: 3.0 };
+        let ss = Context::Subsample { lo: 0, hi: usize::MAX, scale: 3.0 };
+        let mut a = Accumulator::<f64>::new(mb);
+        let mut b = Accumulator::<f64>::new(ss);
+        for acc in [&mut a, &mut b] {
+            acc.add_prior(-1.5);
+            acc.add_obs(-2.0);
+            acc.add_obs(-0.5);
+        }
+        assert_eq!(a.total(), b.total());
     }
 }

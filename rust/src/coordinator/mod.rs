@@ -10,7 +10,6 @@ use crate::bench::{
     SmcPath, Table1Config, ViBenchConfig,
 };
 use crate::chain::{Chain, MultiChain};
-use crate::context::Context;
 use crate::gradient::{Backend, LogDensity, NativeDensity};
 use crate::inference::{sample_chain, sample_smc_chain, Hmc, Nuts, RwMh, SamplerKind, Smc};
 use crate::model::init_typed;
@@ -34,11 +33,11 @@ pub fn usage() -> String {
             ("info", "show runtime/platform information"),
             (
                 "sample",
-                "run inference: --model NAME [--sampler hmc|nuts|mh|smc|advi|advi-fullrank] [--backend fused|xla|tape|forward|stan] [--iters N] [--warmup N] [--chains C] [--seed S]  (smc: iters = particles; advi: iters = posterior draws; default backend: fused)",
+                "run inference: --model NAME [--sampler hmc|nuts|mh|smc|advi|advi-fullrank] [--backend fused|xla|tape|forward|stan] [--iters N] [--warmup N] [--chains C] [--seed S] [--minibatch B]  (smc: iters = particles; advi: iters = posterior draws, --minibatch B fits on Subsample-windowed minibatch gradients; default backend: fused)",
             ),
             (
                 "bench",
-                "bench table1 [--models a,b] [--backends x,y] [--iters N] [--reps R] [--out FILE.json] | bench smc [--models a,b] [--particles N] [--threads T] [--path typed|boxed|both] [--full] [--out FILE.json] | bench grad [--models a,b] [--engines fused,tape,forward] [--full] [--out FILE.json] | bench vi [--models a,b] [--families meanfield,fullrank] [--draws N] [--max-iters N] [--stl] [--full] [--out FILE.json]",
+                "bench table1 [--models a,b] [--backends x,y] [--iters N] [--reps R] [--out FILE.json] | bench smc [--models a,b] [--particles N] [--threads T] [--path typed|boxed|both] [--full] [--out FILE.json] | bench grad [--models a,b] [--engines fused,tape,forward] [--full] [--out FILE.json] | bench vi [--models a,b] [--families meanfield,fullrank] [--draws N] [--max-iters N] [--minibatch B] [--stl] [--full] [--out FILE.json]",
             ),
             ("query", "evaluate a probability query string (paper §3.5)"),
         ],
@@ -90,6 +89,15 @@ fn cmd_list() -> i32 {
             if artifact_exists(name) { "yes" } else { "NO (make artifacts)" }
         );
     }
+    println!("extra workload models:");
+    for name in crate::models::EXTRA_MODELS {
+        // the reduced build: listing should not generate a 100k-row workload
+        let bm = crate::models::build_small(name, 0);
+        println!(
+            "  {name:<16} dim={:<6} (tall data; --sampler advi --minibatch)",
+            bm.theta_dim
+        );
+    }
     0
 }
 
@@ -124,9 +132,16 @@ fn cmd_sample(args: &Args) -> i32 {
     let warmup = args.get_parse_or("warmup", 500usize).unwrap_or(500);
     let n_chains = args.get_parse_or("chains", 2usize).unwrap_or(2);
     let seed = args.get_parse_or("seed", 42u64).unwrap_or(42);
+    let minibatch = match args.get_parse::<usize>("minibatch") {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
 
     let mc = match sample_model(
-        &model_name, &sampler, &backend, iters, warmup, n_chains, seed,
+        &model_name, &sampler, &backend, iters, warmup, n_chains, seed, minibatch,
     ) {
         Ok(mc) => mc,
         Err(e) => {
@@ -162,6 +177,10 @@ fn parse_density(s: &str) -> Result<DensityKind, String> {
 }
 
 /// Build the requested density and sample `n_chains` chains in parallel.
+/// `minibatch = Some(B)` is ADVI-only: the fit runs on seeded
+/// `Context::Subsample` minibatch gradients (B observations per step,
+/// scaled N/B) over a native backend.
+#[allow(clippy::too_many_arguments)]
 pub fn sample_model(
     model_name: &str,
     sampler: &str,
@@ -170,8 +189,9 @@ pub fn sample_model(
     warmup: usize,
     n_chains: usize,
     seed: u64,
+    minibatch: Option<usize>,
 ) -> Result<MultiChain, String> {
-    if !ALL_MODELS.contains(&model_name) {
+    if !crate::models::is_known(model_name) {
         return Err(format!("unknown model {model_name:?}"));
     }
     let bm = Arc::new(build(model_name, seed));
@@ -180,6 +200,9 @@ pub fn sample_model(
     // per chain; `iters` is interpreted as the particle count and the
     // per-chain evidence lands in `stats.log_evidence`.
     if sampler == "smc" {
+        if minibatch.is_some() {
+            return Err("--minibatch only applies to the advi samplers".into());
+        }
         let n_particles = iters.max(2);
         let bmc = Arc::clone(&bm);
         let chains: Vec<Chain> = parallel_map(
@@ -215,6 +238,41 @@ pub fn sample_model(
         other => return Err(format!("unknown sampler {other:?}")),
     };
     let density = parse_density(backend)?;
+
+    // ADVI minibatch mode: fit on Subsample-windowed gradients (needs the
+    // model, not just a density, to re-window per step), then draw the
+    // chain from the fitted approximation against the full-data density.
+    if let Some(b) = minibatch {
+        let advi = match &kind {
+            SamplerKind::Advi(a) => a.clone(),
+            _ => return Err("--minibatch only applies to the advi samplers".into()),
+        };
+        let native = match density {
+            DensityKind::Native(be) => be,
+            _ => return Err("--minibatch needs a native backend (fused|tape|forward)".into()),
+        };
+        let bmc = Arc::clone(&bm);
+        let tvic = Arc::clone(&tvi);
+        let chains: Vec<Chain> = parallel_map(
+            default_threads().min(n_chains),
+            n_chains,
+            move |i| -> Chain {
+                let target =
+                    crate::vi::MinibatchTarget::new(bmc.model.as_ref(), &tvic, b, native);
+                let mut rng = Xoshiro256pp::seed_from_u64(seed + 1000 * i as u64);
+                let theta0 = tvic.unconstrained.clone();
+                let fit = advi.fit_minibatch(&target, &theta0, &mut rng);
+                if fit.eta_search_failed {
+                    eprintln!("warning: chain {i}: η ladder search failed; fit ran at the smallest candidate rate");
+                }
+                let full = target.full();
+                let raw = fit.sample_raw(&full, iters, &mut rng);
+                crate::inference::raw_to_chain(&raw, &tvic)
+            },
+        );
+        return Ok(MultiChain::new(chains));
+    }
+
     let chains: Vec<Chain> = parallel_map(
         default_threads().min(n_chains),
         n_chains,
@@ -381,6 +439,13 @@ fn cmd_bench(args: &Args) -> i32 {
             cfg.advi.max_iters = args
                 .get_parse_or("max-iters", cfg.advi.max_iters)
                 .unwrap_or(cfg.advi.max_iters);
+            cfg.minibatch = match args.get_parse::<usize>("minibatch") {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            };
             cfg.advi.stl = args.flag("stl");
             cfg.small = !args.flag("full");
             let rows = run_vi_bench(&cfg);
@@ -508,7 +573,7 @@ mod tests {
     #[test]
     fn sample_model_smc_carries_evidence() {
         // iters = particle count for the SMC sampler
-        let mc = sample_model("hier_poisson", "smc", "stan", 64, 0, 2, 11).unwrap();
+        let mc = sample_model("hier_poisson", "smc", "stan", 64, 0, 2, 11, None).unwrap();
         assert_eq!(mc.chains.len(), 2);
         assert_eq!(mc.chains[0].len(), 64);
         assert!(mc.chains[0].stats.log_evidence.is_finite());
@@ -523,7 +588,7 @@ mod tests {
     #[test]
     fn sample_model_fused_backend_runs() {
         // the default native backend: arena-fused reverse AD
-        let mc = sample_model("hier_poisson", "hmc", "fused", 50, 50, 1, 9).unwrap();
+        let mc = sample_model("hier_poisson", "hmc", "fused", 50, 50, 1, 9, None).unwrap();
         assert_eq!(mc.chains.len(), 1);
         assert_eq!(mc.chains[0].len(), 50);
         assert!(mc.chains[0].stats.n_grad_evals > 0);
@@ -532,7 +597,7 @@ mod tests {
     #[test]
     fn sample_model_advi_draws_from_fitted_approximation() {
         // iters = posterior-draw count; stats.log_evidence carries the ELBO
-        let mc = sample_model("gauss_unknown", "advi", "fused", 500, 0, 1, 21).unwrap();
+        let mc = sample_model("gauss_unknown", "advi", "fused", 500, 0, 1, 21, None).unwrap();
         assert_eq!(mc.chains.len(), 1);
         assert_eq!(mc.chains[0].len(), 500);
         assert!(mc.chains[0].stats.log_evidence.is_finite());
@@ -543,13 +608,30 @@ mod tests {
 
     #[test]
     fn sample_model_rejects_unknown_backend_and_sampler() {
-        assert!(sample_model("gauss_unknown", "hmc", "frobnicate", 10, 10, 1, 1).is_err());
-        assert!(sample_model("gauss_unknown", "slice", "fused", 10, 10, 1, 1).is_err());
+        assert!(sample_model("gauss_unknown", "hmc", "frobnicate", 10, 10, 1, 1, None).is_err());
+        assert!(sample_model("gauss_unknown", "slice", "fused", 10, 10, 1, 1, None).is_err());
+        // minibatch is an ADVI-only, native-backend-only mode
+        assert!(sample_model("gauss_unknown", "hmc", "fused", 10, 10, 1, 1, Some(64)).is_err());
+        assert!(sample_model("hier_poisson", "smc", "stan", 16, 0, 1, 1, Some(64)).is_err());
+        assert!(sample_model("gauss_unknown", "advi", "stan", 10, 0, 1, 1, Some(64)).is_err());
+    }
+
+    #[test]
+    fn sample_model_advi_minibatch_runs_on_the_tall_model() {
+        // logreg_tall (full build: N=100k) with B=512: every step is a
+        // genuine ~0.5% subsample; the chain comes back in constrained
+        // space with the full-data ELBO in stats.log_evidence
+        let mc =
+            sample_model("logreg_tall", "advi", "fused", 200, 0, 1, 23, Some(512)).unwrap();
+        assert_eq!(mc.chains.len(), 1);
+        assert_eq!(mc.chains[0].len(), 200);
+        assert!(mc.chains[0].stats.log_evidence.is_finite());
+        assert!(mc.chains[0].logp.iter().all(|l| l.is_finite()));
     }
 
     #[test]
     fn sample_model_small_run() {
-        let mc = sample_model("hier_poisson", "hmc", "stan", 100, 100, 2, 9).unwrap();
+        let mc = sample_model("hier_poisson", "hmc", "stan", 100, 100, 2, 9, None).unwrap();
         assert_eq!(mc.chains.len(), 2);
         assert_eq!(mc.chains[0].len(), 100);
         // a0 should be near 1 (ground truth) — loose check

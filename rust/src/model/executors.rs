@@ -86,19 +86,19 @@ impl<'a, R: RngCore> TildeApi<f64> for SampleExecutor<'a, R> {
     }
 
     fn observe(&mut self, dist: &ScalarDist<f64>, obs: f64) {
-        self.acc.add_lik(dist.logpdf(obs));
+        self.acc.add_obs(dist.logpdf(obs));
     }
 
     fn observe_int(&mut self, dist: &DiscreteDist<f64>, obs: i64) {
-        self.acc.add_lik(dist.logpmf(obs));
+        self.acc.add_obs(dist.logpmf(obs));
     }
 
     fn observe_vec(&mut self, dist: &VecDist<f64>, obs: &[f64]) {
-        self.acc.add_lik(dist.logpdf(obs));
+        self.acc.add_obs(dist.logpdf(obs));
     }
 
     fn add_obs_logp(&mut self, lp: f64) {
-        self.acc.add_lik(lp);
+        self.acc.add_obs(lp);
     }
 
     fn add_prior_logp(&mut self, lp: f64) {
@@ -115,6 +115,10 @@ impl<'a, R: RngCore> TildeApi<f64> for SampleExecutor<'a, R> {
 
     fn context(&self) -> Context {
         self.ctx
+    }
+
+    fn skip_obs(&mut self, n: usize) {
+        self.acc.skip_obs(n);
     }
 }
 
@@ -197,6 +201,12 @@ impl<'a, T: Scalar> TypedExecutor<'a, T> {
         self.acc.total()
     }
 
+    /// Observation sites counted this run (visited or skipped) — the `N`
+    /// a `Context::Subsample` window indexes into.
+    pub fn obs_count(&self) -> usize {
+        self.acc.obs_seen()
+    }
+
     #[inline]
     fn next_slot(&mut self, vn: &VarName) -> &'a crate::varinfo::Slot {
         cursor_next_slot(self.tvi, &mut self.cursor, vn)
@@ -230,20 +240,27 @@ impl<'a, T: Scalar> TildeApi<T> for TypedExecutor<'a, T> {
     }
 
     fn observe(&mut self, dist: &ScalarDist<T>, obs: f64) {
-        self.acc.add_lik(dist.logpdf(T::constant(obs)));
+        // window first: out-of-window sites skip the density evaluation
+        if self.acc.note_obs() != 0.0 {
+            self.acc.add_lik(dist.logpdf(T::constant(obs)));
+        }
     }
 
     fn observe_int(&mut self, dist: &DiscreteDist<T>, obs: i64) {
-        self.acc.add_lik(dist.logpmf(obs));
+        if self.acc.note_obs() != 0.0 {
+            self.acc.add_lik(dist.logpmf(obs));
+        }
     }
 
     fn observe_vec(&mut self, dist: &VecDist<T>, obs: &[f64]) {
-        let obs_t: Vec<T> = obs.iter().map(|&o| T::constant(o)).collect();
-        self.acc.add_lik(dist.logpdf(&obs_t));
+        if self.acc.note_obs() != 0.0 {
+            let obs_t: Vec<T> = obs.iter().map(|&o| T::constant(o)).collect();
+            self.acc.add_lik(dist.logpdf(&obs_t));
+        }
     }
 
     fn add_obs_logp(&mut self, lp: T) {
-        self.acc.add_lik(lp);
+        self.acc.add_obs(lp);
     }
 
     fn add_prior_logp(&mut self, lp: T) {
@@ -260,6 +277,10 @@ impl<'a, T: Scalar> TildeApi<T> for TypedExecutor<'a, T> {
 
     fn context(&self) -> Context {
         self.ctx
+    }
+
+    fn skip_obs(&mut self, n: usize) {
+        self.acc.skip_obs(n);
     }
 }
 
@@ -549,6 +570,14 @@ impl<'a, R: RngCore> TildeApi<f64> for TypedReplayExecutor<'a, R> {
     fn context(&self) -> Context {
         self.ctx
     }
+
+    fn skip_obs(&mut self, n: usize) {
+        // advance through note_obs so crossing the window end still stamps
+        // the scored prefix LOCKED
+        for _ in 0..n {
+            let _ = self.note_obs();
+        }
+    }
 }
 
 /// Evaluates the log-density from a flat unconstrained slice **through the
@@ -634,20 +663,26 @@ impl<'a, T: Scalar> TildeApi<T> for UntypedFlatExecutor<'a, T> {
     }
 
     fn observe(&mut self, dist: &ScalarDist<T>, obs: f64) {
-        self.acc.add_lik(dist.logpdf(T::constant(obs)));
+        if self.acc.note_obs() != 0.0 {
+            self.acc.add_lik(dist.logpdf(T::constant(obs)));
+        }
     }
 
     fn observe_int(&mut self, dist: &DiscreteDist<T>, obs: i64) {
-        self.acc.add_lik(dist.logpmf(obs));
+        if self.acc.note_obs() != 0.0 {
+            self.acc.add_lik(dist.logpmf(obs));
+        }
     }
 
     fn observe_vec(&mut self, dist: &VecDist<T>, obs: &[f64]) {
-        let obs_t: Vec<T> = obs.iter().map(|&o| T::constant(o)).collect();
-        self.acc.add_lik(dist.logpdf(&obs_t));
+        if self.acc.note_obs() != 0.0 {
+            let obs_t: Vec<T> = obs.iter().map(|&o| T::constant(o)).collect();
+            self.acc.add_lik(dist.logpdf(&obs_t));
+        }
     }
 
     fn add_obs_logp(&mut self, lp: T) {
-        self.acc.add_lik(lp);
+        self.acc.add_obs(lp);
     }
 
     fn add_prior_logp(&mut self, lp: T) {
@@ -664,6 +699,10 @@ impl<'a, T: Scalar> TildeApi<T> for UntypedFlatExecutor<'a, T> {
 
     fn context(&self) -> Context {
         self.ctx
+    }
+
+    fn skip_obs(&mut self, n: usize) {
+        self.acc.skip_obs(n);
     }
 }
 
@@ -833,11 +872,15 @@ fn seed_assume_vec(
 /// and the parked scratch. The two executor types differ only in how a
 /// tilde statement resolves to an `(offset, domain)` — cursor walk over
 /// the frozen layout vs hash lookup in the boxed trace.
+///
+/// Observation windowing (`Context::Subsample`/`ObsWindow`) is resolved
+/// **before** the density kernel runs: an out-of-window observe costs no
+/// `logpdf_adj` evaluation, no arena nodes and no seeds — which is what
+/// makes minibatched evaluation of a tall likelihood O(batch), not O(N).
 struct FusedCore {
     acc: Accumulator<f64>,
     ctx: Context,
     prior_w: f64,
-    lik_w: f64,
     stmts: usize,
     scratch: FusedScratch,
 }
@@ -848,7 +891,6 @@ impl FusedCore {
             acc: Accumulator::new(ctx),
             ctx,
             prior_w: ctx.prior_weight(),
-            lik_w: ctx.lik_weight(),
             stmts: 0,
             scratch: take_fused_scratch(),
         }
@@ -877,13 +919,15 @@ impl FusedCore {
         }
     }
 
-    /// Likelihood-side analogue of [`Self::prior_seed_weight`].
+    /// Accumulate a likelihood-side term at the window-resolved weight
+    /// `w` (from [`Accumulator::note_obs`]); returns the weight its seeds
+    /// carry (0.0 when the run was already/just rejected).
     #[inline]
-    fn lik_seed_weight(&mut self, lp: f64) -> f64 {
+    fn lik_seed_weight(&mut self, lp: f64, w: f64) -> f64 {
         let pre = self.acc.rejected();
-        self.acc.add_lik(lp);
+        self.acc.add_lik_weighted(lp, w);
         if !pre && !self.acc.rejected() {
-            self.lik_w
+            w
         } else {
             0.0
         }
@@ -937,8 +981,12 @@ impl FusedCore {
 
     fn observe(&mut self, dist: &ScalarDist<AVar>, obs: f64) {
         self.stmts += 1;
+        let cw = self.acc.note_obs();
+        if cw == 0.0 {
+            return; // out-of-window / zero-weight: no kernel, no seeds
+        }
         let adj = dist.logpdf_adj(obs);
-        let w = self.lik_seed_weight(adj.lp);
+        let w = self.lik_seed_weight(adj.lp, cw);
         if w != 0.0 {
             seed_params_scalar(dist, &adj, w);
         }
@@ -946,8 +994,12 @@ impl FusedCore {
 
     fn observe_int(&mut self, dist: &DiscreteDist<AVar>, obs: i64) {
         self.stmts += 1;
+        let cw = self.acc.note_obs();
+        if cw == 0.0 {
+            return;
+        }
         let (lp, dp) = dist.logpmf_adj(obs);
-        let w = self.lik_seed_weight(lp);
+        let w = self.lik_seed_weight(lp, cw);
         if w != 0.0 {
             if let Some(p) = dist.param_var() {
                 arena::seed(p.idx(), dp * w);
@@ -957,10 +1009,14 @@ impl FusedCore {
 
     fn observe_vec(&mut self, dist: &VecDist<AVar>, obs: &[f64]) {
         self.stmts += 1;
+        let cw = self.acc.note_obs();
+        if cw == 0.0 {
+            return;
+        }
         self.scratch.dx.clear();
         self.scratch.dx.resize(obs.len(), 0.0);
         let adj = dist.logpdf_adj(obs, &mut self.scratch.dx);
-        let w = self.lik_seed_weight(adj.lp);
+        let w = self.lik_seed_weight(adj.lp, cw);
         if w != 0.0 {
             let (ps, np) = dist.param_vars();
             arena::with_tape(|t| {
@@ -973,8 +1029,14 @@ impl FusedCore {
 
     fn add_obs_logp(&mut self, lp: AVar) {
         self.stmts += 1;
-        let w = self.lik_seed_weight(lp.value());
-        arena::seed(lp.idx(), w);
+        let cw = self.acc.note_obs();
+        if cw == 0.0 {
+            return;
+        }
+        let w = self.lik_seed_weight(lp.value(), cw);
+        if w != 0.0 {
+            arena::seed(lp.idx(), w);
+        }
     }
 
     fn add_prior_logp(&mut self, lp: AVar) {
@@ -1086,6 +1148,10 @@ impl<'a> TildeApi<AVar> for TypedFusedExecutor<'a> {
     fn context(&self) -> Context {
         self.core.ctx
     }
+
+    fn skip_obs(&mut self, n: usize) {
+        self.core.acc.skip_obs(n);
+    }
 }
 
 /// The fused engine **through the boxed trace**: hash-addressed offsets
@@ -1176,5 +1242,9 @@ impl<'a> TildeApi<AVar> for UntypedFusedExecutor<'a> {
 
     fn context(&self) -> Context {
         self.core.ctx
+    }
+
+    fn skip_obs(&mut self, n: usize) {
+        self.core.acc.skip_obs(n);
     }
 }

@@ -72,6 +72,17 @@ pub trait TildeApi<T: Scalar> {
     /// The execution context (models may inspect e.g. minibatch scale).
     fn context(&self) -> Context;
 
+    /// Skip `n` observation sites without scoring them. Window-aware
+    /// model bodies (tall-data models) call this to jump over
+    /// out-of-window likelihood blocks without evaluating them — the
+    /// sites still count toward the context's observation indices, so
+    /// `Context::Subsample`/`ObsWindow` semantics stay identical to a
+    /// body that visits every site. Executors that do not count
+    /// observation sites may ignore it.
+    fn skip_obs(&mut self, n: usize) {
+        let _ = n;
+    }
+
     /// iid continuous observations under one distribution.
     fn observe_iid(&mut self, dist: &ScalarDist<T>, obs: &[f64]) {
         for &o in obs {
@@ -144,6 +155,16 @@ pub fn init_typed<R: rand_core::RngCore>(
 ) -> crate::varinfo::TypedVarInfo {
     let vi = init_trace(model, rng);
     crate::varinfo::TypedVarInfo::from_untyped(&vi)
+}
+
+/// Count the model's observation sites (one plain evaluation over the
+/// typed layout at its stored unconstrained point). This is the `N` of a
+/// tall-data likelihood — what `Context::Subsample` windows index into.
+pub fn count_obs_sites(model: &dyn Model, tvi: &crate::varinfo::TypedVarInfo) -> usize {
+    let mut exec =
+        executors::TypedExecutor::<f64>::new(tvi, &tvi.unconstrained, Context::Default);
+    model.eval_f64(&mut exec);
+    exec.obs_count()
 }
 
 /// Log-density (+ optionally gradient) of the model at unconstrained θ

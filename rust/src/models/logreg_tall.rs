@@ -1,0 +1,160 @@
+//! Tall logistic regression: the deep-PPL / millions-of-users regime
+//! (Baudart et al., *Extending Stan for Deep Probabilistic Programming*).
+//! N ≈ 100,000 observations — the workload where full-data sweeps are the
+//! bottleneck and stochastic VI over `Context::Subsample` minibatches is
+//! the intended estimator.
+//!
+//! The body is **window-aware**: it reads the context's observation
+//! window and iterates only the in-window rows, bracketing the loop with
+//! `skip_obs` so the observation-site indices stay identical to a body
+//! that visits every row. Under `Context::Subsample { lo, hi, .. }` an
+//! evaluation therefore costs O(batch) — and on the fused gradient path
+//! the out-of-window rows contribute **zero arena nodes**, because their
+//! logit chains are never built. Under any full-window context the model
+//! is statement-for-statement the same likelihood as `models::logreg`.
+
+use crate::prelude::*;
+use crate::runtime::DataInput;
+
+use super::BenchModel;
+
+model! {
+    /// `w ~ IsoNormal(0,1,D); y[i] ~ BernoulliLogit(x_i · w)`, N tall.
+    /// `x` is row-major (n × d).
+    pub LogRegTall {
+        x: Vec<f64>,
+        y: Vec<i64>,
+        d: usize,
+    }
+    fn body<T>(this, api) {
+        let d = this.d;
+        let n = this.y.len();
+        let w = tilde_vec!(api, w ~ IsoNormal(c(0.0), c(1.0), d));
+        check_reject!(api);
+        // visit only the context's observation window; the skipped blocks
+        // still count as sites, so window indices match a full visit
+        let (lo, hi) = api.context().obs_window();
+        let lo = lo.min(n);
+        let hi = hi.min(n);
+        api.skip_obs(lo);
+        for i in lo..hi {
+            let row = &this.x[i * d..(i + 1) * d];
+            let mut logit = c::<T>(0.0);
+            for j in 0..d {
+                logit = logit + w[j] * row[j];
+            }
+            // log σ(s·logit) with s = ±1 — fused, avoids building a dist
+            let s = if this.y[i] == 1 { logit } else { -logit };
+            api.add_obs_logp(s.log_sigmoid());
+        }
+        api.skip_obs(n - hi);
+    }
+}
+
+/// Full tall workload: N=100,000, D=16.
+pub fn logreg_tall(seed: u64) -> BenchModel {
+    logreg_tall_n(seed, 100_000, 16)
+}
+
+/// Reduced tall workload for tests and the default (small) bench runs —
+/// still tall enough that minibatching at B=512 is a real subsample.
+pub fn logreg_tall_small(seed: u64) -> BenchModel {
+    logreg_tall_n(seed, 20_000, 10)
+}
+
+pub fn logreg_tall_n(seed: u64, n: usize, d: usize) -> BenchModel {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0xA7A1);
+    // true weights: sparse-ish signal (same recipe as models::logreg)
+    let w_true: Vec<f64> = (0..d)
+        .map(|j| if j % 7 == 0 { rng.normal() } else { 0.1 * rng.normal() })
+        .collect();
+    let mut x = Vec::with_capacity(n * d);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut logit = 0.0;
+        for j in 0..d {
+            let v = rng.normal();
+            logit += v * w_true[j];
+            x.push(v);
+        }
+        y.push(rng.bernoulli(crate::util::math::sigmoid(logit)) as i64);
+    }
+    let yf: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+    let data = vec![
+        DataInput::f64(x.clone(), &[n, d]),
+        DataInput::f64(yf, &[n]),
+    ];
+    BenchModel {
+        name: "logreg_tall",
+        theta_dim: d,
+        step_size: 0.01,
+        model: Box::new(LogRegTall { x, y, d }),
+        data,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::context::Context;
+    use crate::model::{count_obs_sites, init_typed, typed_logp};
+    use crate::models::logreg::LogReg;
+
+    /// The window-aware body must agree with the plain (full-visit) logreg
+    /// body under every context — `skip_obs` keeps the site indices equal.
+    #[test]
+    fn window_aware_body_matches_full_visit_body() {
+        let bm = logreg_tall_n(5, 120, 4);
+        let tall = bm.model.as_ref();
+        let plain = LogReg {
+            x: match &bm.data[0] {
+                DataInput::F64 { data, .. } => data.clone(),
+                _ => unreachable!(),
+            },
+            y: match &bm.data[1] {
+                DataInput::F64 { data, .. } => data.iter().map(|&v| v as i64).collect(),
+                _ => unreachable!(),
+            },
+            d: 4,
+        };
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let tvi = init_typed(tall, &mut rng);
+        assert_eq!(count_obs_sites(tall, &tvi), 120);
+        let theta: Vec<f64> = (0..4).map(|i| 0.2 * i as f64 - 0.3).collect();
+        for ctx in [
+            Context::Default,
+            Context::Prior,
+            Context::Likelihood,
+            Context::MiniBatch { scale: 3.0 },
+            Context::Subsample { lo: 10, hi: 42, scale: 3.75 },
+            Context::Subsample { lo: 0, hi: 0, scale: 1.0 },
+        ] {
+            let a = typed_logp(tall, &tvi, &theta, ctx);
+            let b = typed_logp(&plain, &tvi, &theta, ctx);
+            assert!((a - b).abs() < 1e-9, "{ctx:?}: tall {a} vs plain {b}");
+        }
+    }
+
+    /// Subsample logp equals the manual prior + scaled window sum.
+    #[test]
+    fn subsample_window_matches_manual_sum() {
+        let bm = logreg_tall_n(7, 60, 3);
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let tvi = init_typed(bm.model.as_ref(), &mut rng);
+        let theta = [0.1, -0.4, 0.3];
+        let prior = typed_logp(bm.model.as_ref(), &tvi, &theta, Context::Prior);
+        let full_lik = typed_logp(bm.model.as_ref(), &tvi, &theta, Context::Likelihood);
+        // windows tile the data: scaled windows must average to the
+        // full likelihood
+        let scale = 4.0;
+        let mut acc = 0.0;
+        for k in 0..4 {
+            let ctx = Context::Subsample { lo: k * 15, hi: (k + 1) * 15, scale };
+            acc += typed_logp(bm.model.as_ref(), &tvi, &theta, ctx) - prior;
+        }
+        assert!(
+            (acc / scale - full_lik).abs() < 1e-9,
+            "tiled windows {acc} vs full {full_lik}"
+        );
+    }
+}

@@ -15,6 +15,7 @@ pub mod hier_poisson;
 pub mod hmm;
 pub mod lda;
 pub mod logreg;
+pub mod logreg_tall;
 pub mod naive_bayes;
 pub mod sto_vol;
 
@@ -45,6 +46,16 @@ pub const ALL_MODELS: [&str; 8] = [
     "lda",
 ];
 
+/// Workload models beyond Table 1 (not part of the paper's benchmark
+/// grid): currently the tall-data logistic regression driving the
+/// minibatched-VI workload.
+pub const EXTRA_MODELS: [&str; 1] = ["logreg_tall"];
+
+/// Whether `name` is a buildable workload model (Table 1 or extra).
+pub fn is_known(name: &str) -> bool {
+    ALL_MODELS.contains(&name) || EXTRA_MODELS.contains(&name)
+}
+
 /// Build a benchmark model with its synthetic Table-1 workload.
 pub fn build(name: &str, seed: u64) -> BenchModel {
     match name {
@@ -52,11 +63,14 @@ pub fn build(name: &str, seed: u64) -> BenchModel {
         "gauss_unknown" => gauss::gauss_unknown(seed),
         "naive_bayes" => naive_bayes::naive_bayes(seed),
         "logreg" => logreg::logreg(seed),
+        "logreg_tall" => logreg_tall::logreg_tall(seed),
         "hier_poisson" => hier_poisson::hier_poisson(seed),
         "sto_volatility" => sto_vol::sto_volatility(seed),
         "hmm_semisup" => hmm::hmm_semisup(seed),
         "lda" => lda::lda(seed),
-        other => panic!("unknown benchmark model {other:?} (known: {ALL_MODELS:?})"),
+        other => panic!(
+            "unknown benchmark model {other:?} (known: {ALL_MODELS:?} + {EXTRA_MODELS:?})"
+        ),
     }
 }
 
@@ -68,6 +82,7 @@ pub fn build_small(name: &str, seed: u64) -> BenchModel {
         "gauss_unknown" => gauss::gauss_unknown_n(seed, 200),
         "naive_bayes" => naive_bayes::naive_bayes_n(seed, 50),
         "logreg" => logreg::logreg_n(seed, 200, 10),
+        "logreg_tall" => logreg_tall::logreg_tall_small(seed),
         "hier_poisson" => hier_poisson::hier_poisson(seed),
         "sto_volatility" => sto_vol::sto_volatility_t(seed, 50),
         "hmm_semisup" => hmm::hmm_semisup_t(seed, 30, 10),
@@ -110,6 +125,26 @@ mod tests {
             );
             assert!(lp.is_finite(), "{name}: logp {lp}");
         }
+    }
+
+    #[test]
+    fn extra_models_build_and_are_known() {
+        assert!(is_known("logreg"));
+        assert!(is_known("logreg_tall"));
+        assert!(!is_known("frobnicate"));
+        let bm = build_small("logreg_tall", 3);
+        assert_eq!(bm.name, "logreg_tall");
+        assert_eq!(bm.theta_dim, 10);
+        assert_eq!(bm.model.as_ref().name(), "LogRegTall");
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let tvi = init_typed(bm.model.as_ref(), &mut rng);
+        let lp = typed_logp(
+            bm.model.as_ref(),
+            &tvi,
+            &tvi.unconstrained,
+            Context::Default,
+        );
+        assert!(lp.is_finite(), "logreg_tall logp {lp}");
     }
 
     #[test]

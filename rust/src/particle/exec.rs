@@ -254,6 +254,14 @@ impl<'a, R: RngCore> TildeApi<f64> for ReplayExecutor<'a, R> {
     fn context(&self) -> Context {
         self.ctx
     }
+
+    fn skip_obs(&mut self, n: usize) {
+        // advance through note_obs so crossing the window end still stamps
+        // the scored prefix LOCKED
+        for _ in 0..n {
+            let _ = self.note_obs();
+        }
+    }
 }
 
 #[cfg(test)]

@@ -256,19 +256,19 @@ impl<'a> TildeApi<f64> for FixedValuesExecutor<'a> {
     }
 
     fn observe(&mut self, dist: &ScalarDist<f64>, obs: f64) {
-        self.acc.add_lik(dist.logpdf(obs));
+        self.acc.add_obs(dist.logpdf(obs));
     }
 
     fn observe_int(&mut self, dist: &DiscreteDist<f64>, obs: i64) {
-        self.acc.add_lik(dist.logpmf(obs));
+        self.acc.add_obs(dist.logpmf(obs));
     }
 
     fn observe_vec(&mut self, dist: &VecDist<f64>, obs: &[f64]) {
-        self.acc.add_lik(dist.logpdf(obs));
+        self.acc.add_obs(dist.logpdf(obs));
     }
 
     fn add_obs_logp(&mut self, lp: f64) {
-        self.acc.add_lik(lp);
+        self.acc.add_obs(lp);
     }
 
     fn add_prior_logp(&mut self, lp: f64) {
@@ -285,6 +285,10 @@ impl<'a> TildeApi<f64> for FixedValuesExecutor<'a> {
 
     fn context(&self) -> Context {
         self.ctx
+    }
+
+    fn skip_obs(&mut self, n: usize) {
+        self.acc.skip_obs(n);
     }
 }
 

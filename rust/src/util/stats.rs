@@ -115,15 +115,22 @@ pub fn autocovariance(xs: &[f64], k: usize) -> f64 {
 }
 
 /// Effective sample size of a single chain via Geyer's initial monotone
-/// positive sequence estimator.
+/// positive sequence estimator. Zero-variance (degenerate) chains carry
+/// exactly `n` independent observations of their one value, so the draw
+/// count is returned — the autocorrelation ratios would be 0/0 at exact
+/// zero variance and numerically meaningless just above it (mean-sum
+/// rounding leaves a tiny spurious c₀).
 pub fn ess(xs: &[f64]) -> f64 {
     let n = xs.len();
     if n < 4 {
         return n as f64;
     }
+    if xs.iter().all(|&x| x == xs[0]) {
+        return n as f64; // constant chain (exact, before any rounding)
+    }
     let c0 = autocovariance(xs, 0);
-    if c0 <= 0.0 {
-        return n as f64; // constant chain
+    if c0.is_nan() || c0 <= 0.0 {
+        return n as f64; // zero/negative/NaN variance
     }
     let max_lag = (n - 2).min(n / 2);
     // Sum of adjacent-pair autocorrelations, truncated at first negative
@@ -146,8 +153,17 @@ pub fn ess(xs: &[f64]) -> f64 {
 }
 
 /// Split-R̂ across `chains` (each a slice of equal length): Gelman–Rubin
-/// potential scale reduction with chain splitting.
+/// potential scale reduction with chain splitting. A zero-variance
+/// (degenerate) parameter is perfectly mixed by definition: R̂ = 1 — the
+/// between/within ratio would otherwise be rounding noise over rounding
+/// noise.
 pub fn split_rhat(chains: &[&[f64]]) -> f64 {
+    // Degenerate column: every draw of every chain is the same value.
+    if let Some(&first) = chains.first().and_then(|c| c.first()) {
+        if chains.iter().all(|c| c.iter().all(|&x| x == first)) {
+            return 1.0;
+        }
+    }
     // Split each chain in half → 2m sequences.
     let mut seqs: Vec<&[f64]> = Vec::with_capacity(chains.len() * 2);
     for c in chains {
@@ -270,6 +286,29 @@ mod tests {
             e > expect * 0.5 && e < expect * 2.0,
             "ESS {e}, expected ≈ {expect}"
         );
+    }
+
+    #[test]
+    fn ess_of_degenerate_chain_is_the_draw_count() {
+        // regression: 0.1 is not exactly representable, so the running
+        // mean of a constant chain picks up rounding noise and the old
+        // estimator produced a garbage (near-1 or NaN) ESS from 0/0-ish
+        // autocorrelation ratios
+        let xs = vec![0.1; 2000];
+        assert_eq!(ess(&xs), 2000.0);
+        let ys = vec![-3.7; 5];
+        assert_eq!(ess(&ys), 5.0);
+    }
+
+    #[test]
+    fn rhat_of_degenerate_chains_is_one() {
+        let a = vec![0.1; 100];
+        let b = vec![0.1; 100];
+        assert_eq!(split_rhat(&[&a, &b]), 1.0);
+        assert_eq!(rank_normalized_split_rhat(&[&a, &b]), 1.0);
+        // even when the chains are too short to split
+        let c = [2.5, 2.5];
+        assert_eq!(split_rhat(&[&c]), 1.0);
     }
 
     #[test]

@@ -25,6 +25,18 @@
 //! fitted approximation into the ordinary [`RawDraws`]/`Chain` pipeline,
 //! so diagnostics, `query` posterior predictives and `stanlike`
 //! comparisons run unchanged over a VI fit.
+//!
+//! **Minibatching (tall data).** [`Advi::fit_minibatch`] runs the same
+//! driver over a [`MinibatchTarget`]: the model's observation sites are
+//! partitioned into `⌈N/B⌉` blocks, each gradient step re-windows the
+//! native density with [`Context::Subsample`] onto one seeded-uniform
+//! block (priors at weight 1, block likelihood scaled by the block
+//! count), and the fused executors skip out-of-window observations
+//! before their kernels run — so a step costs O(B), not O(N), while the
+//! gradient stays exactly unbiased (the block average over all blocks
+//! *is* the full-data gradient). The η ladder scores candidates with the
+//! same subsampling-corrected ELBO estimator; convergence and
+//! best-params tracking use periodic **full-data** ELBO checks.
 
 pub mod family;
 pub mod optimizer;
@@ -35,8 +47,11 @@ pub use optimizer::{Optimizer, OptimizerKind, ETA_CANDIDATES};
 use rand_core::RngCore;
 
 use crate::chain::SamplerStats;
-use crate::gradient::LogDensity;
+use crate::context::Context;
+use crate::gradient::{Backend, LogDensity, NativeDensity};
 use crate::inference::RawDraws;
+use crate::model::Model;
+use crate::varinfo::TypedVarInfo;
 
 /// ADVI configuration. Defaults mirror Stan's `variational` mode scaled
 /// for the fused gradient path (more MC samples per step, fewer, denser
@@ -86,6 +101,77 @@ impl Default for Advi {
     }
 }
 
+/// A minibatch-able VI target: model + typed layout + native engine, from
+/// which per-block [`Context::Subsample`] densities are built each step.
+///
+/// Blocks partition the `n_obs` observation sites (model visit order)
+/// into `⌈N/B⌉` contiguous windows; sampling a block uniformly and
+/// scaling its likelihood by the block count is an exactly unbiased
+/// estimator of the full-data log-joint gradient.
+pub struct MinibatchTarget<'a> {
+    pub model: &'a dyn Model,
+    pub tvi: &'a TypedVarInfo,
+    pub backend: Backend,
+    /// Total observation sites (N), counted by one model evaluation.
+    pub n_obs: usize,
+    /// Batch size (B), clamped to `[1, n_obs]`.
+    pub batch: usize,
+}
+
+impl<'a> MinibatchTarget<'a> {
+    pub fn new(
+        model: &'a dyn Model,
+        tvi: &'a TypedVarInfo,
+        batch: usize,
+        backend: Backend,
+    ) -> Self {
+        let n_obs = crate::model::count_obs_sites(model, tvi);
+        Self {
+            model,
+            tvi,
+            backend,
+            n_obs,
+            batch: batch.clamp(1, n_obs.max(1)),
+        }
+    }
+
+    /// Number of minibatch blocks, ⌈N/B⌉ (≥ 1).
+    pub fn n_blocks(&self) -> usize {
+        self.n_obs.div_ceil(self.batch).max(1)
+    }
+
+    /// The full-data density (used for posterior draws and the periodic
+    /// full ELBO checks).
+    pub fn full(&self) -> NativeDensity<'a> {
+        NativeDensity::new(self.model, self.tvi, self.backend)
+    }
+
+    /// The subsampled density of block `k`: priors at weight 1, the
+    /// block's observations scaled by the block count.
+    pub fn block(&self, k: usize) -> NativeDensity<'a> {
+        let n_blocks = self.n_blocks();
+        debug_assert!(k < n_blocks);
+        let lo = k * self.batch;
+        let hi = (lo + self.batch).min(self.n_obs);
+        NativeDensity {
+            model: self.model,
+            tvi: self.tvi,
+            ctx: Context::Subsample {
+                lo,
+                hi,
+                scale: n_blocks as f64,
+            },
+            backend: self.backend,
+        }
+    }
+}
+
+/// Seeded-uniform block index in `[0, k)`.
+#[inline]
+fn draw_block<R: RngCore>(rng: &mut R, k: usize) -> usize {
+    (rng.next_u64() % k.max(1) as u64) as usize
+}
+
 /// A fitted variational approximation plus its optimization telemetry.
 #[derive(Clone, Debug)]
 pub struct ViFit {
@@ -102,6 +188,14 @@ pub struct ViFit {
     pub iters: usize,
     /// η chosen (configured or found by the ladder search).
     pub eta: f64,
+    /// The η ladder search failed outright: every candidate diverged or
+    /// produced a non-finite trial ELBO, and the fit fell back to the
+    /// smallest candidate rate. A fit that starts this way deserves
+    /// scrutiny (bad initialization, unstable model) — surfaced here
+    /// instead of silently fitting at an arbitrary rate.
+    pub eta_search_failed: bool,
+    /// Minibatch size the fit ran with (`None` = full-data gradients).
+    pub minibatch: Option<usize>,
     /// Gradient evaluations spent (fit only; excludes ELBO evaluations).
     pub n_grad_evals: u64,
     /// Plain log-density evaluations spent on ELBO monitoring.
@@ -177,6 +271,31 @@ impl Advi {
     /// `Clone` so the η ladder search can replay the same noise stream
     /// for every candidate (common random numbers).
     pub fn fit<R: RngCore + Clone>(&self, ld: &dyn LogDensity, theta0: &[f64], rng: &mut R) -> ViFit {
+        self.fit_impl(ld, None, theta0, rng)
+    }
+
+    /// Minibatched fit over a [`MinibatchTarget`]: every gradient step
+    /// resamples one observation block (seeded) and steps on the
+    /// [`Context::Subsample`]-scaled reparameterized gradient; the η
+    /// ladder scores candidates with the subsampling-corrected ELBO and
+    /// the convergence monitor keeps its periodic full-data checks.
+    pub fn fit_minibatch<R: RngCore + Clone>(
+        &self,
+        target: &MinibatchTarget,
+        theta0: &[f64],
+        rng: &mut R,
+    ) -> ViFit {
+        let full = target.full();
+        self.fit_impl(&full, Some(target), theta0, rng)
+    }
+
+    fn fit_impl<R: RngCore + Clone>(
+        &self,
+        ld: &dyn LogDensity,
+        mb: Option<&MinibatchTarget>,
+        theta0: &[f64],
+        rng: &mut R,
+    ) -> ViFit {
         let dim = ld.dim();
         assert_eq!(theta0.len(), dim, "theta0 does not match the density dimension");
         let t_start = std::time::Instant::now();
@@ -193,10 +312,12 @@ impl Advi {
         };
 
         // ---------------------------------------------------- η search
+        let mut eta_search_failed = false;
         let eta = match self.eta {
             Some(e) => e,
             None => {
-                let mut best = (f64::NEG_INFINITY, *ETA_CANDIDATES.last().unwrap());
+                let fallback = ETA_CANDIDATES.iter().copied().fold(f64::INFINITY, f64::min);
+                let mut best: Option<(f64, f64)> = None; // (elbo, eta)
                 for &cand in &ETA_CANDIDATES {
                     // common random numbers: every candidate replays the
                     // same stream from the search entry point
@@ -207,6 +328,7 @@ impl Advi {
                     for _ in 0..self.adapt_iters {
                         let stepped = self.grad_step(
                             ld,
+                            mb,
                             &mut q,
                             &mut opt,
                             &mut probe_rng,
@@ -221,20 +343,36 @@ impl Advi {
                     if diverged {
                         continue;
                     }
+                    // trial score: the subsampling-corrected ELBO when
+                    // minibatching (cheap), the plain estimator otherwise
                     let trial_samples = self.elbo_samples / 2 + 1;
                     let (elbo, _se) = self.estimate_elbo(
                         ld,
+                        mb,
                         &q,
                         trial_samples,
                         &mut probe_rng,
                         &mut scratch,
                         &mut n_logp,
                     );
-                    if elbo.is_finite() && elbo > best.0 {
-                        best = (elbo, cand);
+                    let improves = match best {
+                        Some((b, _)) => elbo > b,
+                        None => true,
+                    };
+                    if elbo.is_finite() && improves {
+                        best = Some((elbo, cand));
                     }
                 }
-                best.1
+                match best {
+                    Some((_, eta)) => eta,
+                    None => {
+                        // every candidate diverged or scored non-finite:
+                        // fall back to the *smallest* (safest) rate and
+                        // say so in the fit diagnostics
+                        eta_search_failed = true;
+                        fallback
+                    }
+                }
             }
         };
 
@@ -254,7 +392,7 @@ impl Advi {
 
         for it in 1..=self.max_iters {
             iters_run = it;
-            if !self.grad_step(ld, &mut q, &mut opt, rng, &mut scratch, &mut n_grad) {
+            if !self.grad_step(ld, mb, &mut q, &mut opt, rng, &mut scratch, &mut n_grad) {
                 rejected_steps += 1;
             }
             if q.params.iter().any(|p| !p.is_finite()) {
@@ -266,8 +404,18 @@ impl Advi {
                 break;
             }
             if it % self.eval_every == 0 || it == self.max_iters {
-                let (elbo, se) =
-                    self.estimate_elbo(ld, &q, self.elbo_samples, rng, &mut scratch, &mut n_logp);
+                // convergence + best-params tracking always run on the
+                // full-data ELBO (mb = None), so a minibatched fit cannot
+                // converge onto subsampling noise
+                let (elbo, se) = self.estimate_elbo(
+                    ld,
+                    None,
+                    &q,
+                    self.elbo_samples,
+                    rng,
+                    &mut scratch,
+                    &mut n_logp,
+                );
                 trace.push((it, elbo));
                 if elbo.is_finite() && elbo > best.0 {
                     best = (elbo, se);
@@ -307,6 +455,8 @@ impl Advi {
             converged,
             iters: iters_run,
             eta,
+            eta_search_failed,
+            minibatch: mb.map(|t| t.batch),
             n_grad_evals: n_grad,
             n_logp_evals: n_logp,
             rejected_steps,
@@ -315,17 +465,27 @@ impl Advi {
         }
     }
 
-    /// One stochastic-ascent step. Returns `false` when every MC draw was
-    /// rejected (non-finite logp or gradient) and no update was applied.
+    /// One stochastic-ascent step. With a minibatch target, one seeded
+    /// block is drawn for the whole step and every MC sample differentiates
+    /// the block's [`Context::Subsample`] density. Returns `false` when
+    /// every MC draw was rejected (non-finite logp or gradient) and no
+    /// update was applied.
+    #[allow(clippy::too_many_arguments)]
     fn grad_step<R: RngCore>(
         &self,
-        ld: &dyn LogDensity,
+        full: &dyn LogDensity,
+        mb: Option<&MinibatchTarget>,
         q: &mut VarApprox,
         opt: &mut Optimizer,
         rng: &mut R,
         s: &mut FitScratch,
         n_grad: &mut u64,
     ) -> bool {
+        let block_ld = mb.map(|t| t.block(draw_block(rng, t.n_blocks())));
+        let ld: &dyn LogDensity = match &block_ld {
+            Some(b) => b,
+            None => full,
+        };
         s.grad.fill(0.0);
         let mut used = 0usize;
         for _ in 0..self.grad_samples.max(1) {
@@ -353,9 +513,15 @@ impl Advi {
     /// Monte-Carlo ELBO estimate with its standard error: the entropy is
     /// analytic, so only E_q[log p] is sampled. Draws go through the
     /// fit's scratch buffers — monitoring stays allocation-free too.
+    /// With a minibatch target the estimator is subsampling-corrected:
+    /// each MC sample scores one seeded block's `Subsample` density, an
+    /// unbiased (over z *and* block) estimate of E_q[log p] whose extra
+    /// variance shows up honestly in the reported SE.
+    #[allow(clippy::too_many_arguments)]
     fn estimate_elbo<R: RngCore>(
         &self,
         ld: &dyn LogDensity,
+        mb: Option<&MinibatchTarget>,
         q: &VarApprox,
         n_samples: usize,
         rng: &mut R,
@@ -366,7 +532,11 @@ impl Advi {
         let mut acc = crate::util::stats::RunningStats::new();
         for _ in 0..n {
             q.draw(rng, &mut s.eta, &mut s.z);
-            acc.push(ld.logp(&s.z));
+            let lp = match mb {
+                Some(t) => t.block(draw_block(rng, t.n_blocks())).logp(&s.z),
+                None => ld.logp(&s.z),
+            };
+            acc.push(lp);
             *n_logp += 1;
         }
         let mean = acc.mean();
@@ -500,6 +670,31 @@ mod tests {
         assert!(stats::mean(&x0).abs() < 0.1);
         assert!((stats::variance(&x0) - 1.0).abs() < 0.2);
         assert!(raw.logps.iter().all(|l| l.is_finite()));
+    }
+
+    #[test]
+    fn eta_ladder_failure_falls_back_to_smallest_and_is_surfaced() {
+        // a target that is −∞ everywhere: every ladder candidate rejects
+        // every draw, so the search cannot score any candidate
+        let ld = FnDensity {
+            dim: 1,
+            f: |_: &[f64]| f64::NEG_INFINITY,
+            g: |_: &[f64]| (f64::NEG_INFINITY, vec![0.0]),
+        };
+        let mut rng = Xoshiro256pp::seed_from_u64(6);
+        let advi = Advi {
+            max_iters: 10,
+            ..Advi::default()
+        };
+        let fit = advi.fit(&ld, &[0.0], &mut rng);
+        assert!(fit.eta_search_failed, "failed search must be surfaced");
+        let smallest = ETA_CANDIDATES.iter().copied().fold(f64::INFINITY, f64::min);
+        assert_eq!(fit.eta, smallest, "fallback must be the smallest η");
+        assert!(fit.approx.params.iter().all(|p| p.is_finite()));
+        // a healthy fit does not set the flag
+        let ok = Advi::default().fit(&std_normal_density(1), &[0.0], &mut rng);
+        assert!(!ok.eta_search_failed);
+        assert!(ok.minibatch.is_none());
     }
 
     #[test]

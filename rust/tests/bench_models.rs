@@ -113,6 +113,6 @@ fn coordinator_cli_surface() {
         1
     );
     // bad sampler
-    let err = coordinator::sample_model("hier_poisson", "warp", "stan", 1, 1, 1, 0);
+    let err = coordinator::sample_model("hier_poisson", "warp", "stan", 1, 1, 1, 0, None);
     assert!(err.is_err());
 }

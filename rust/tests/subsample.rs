@@ -1,0 +1,401 @@
+//! Context-weight semantics across the executor stack, the
+//! `Context::Subsample` tall-data estimator, and minibatched ADVI.
+//!
+//! - Table-driven equality of logp + gradients across all four flat
+//!   monomorphizations (typed, untyped, typed-fused, untyped-fused) for
+//!   every context, including windowed subsampling.
+//! - Minibatch unbiasedness: the block average of `Subsample`-scaled
+//!   gradients equals the full-data gradient exactly.
+//! - Fused-path cost: out-of-window observations allocate **zero** arena
+//!   nodes on a window-aware body.
+//! - The ISSUE acceptance run: minibatched ADVI on a tall logistic
+//!   regression reaches the full-data fit's posterior means within 5% at
+//!   strictly lower wall-clock per iteration.
+//! - Regression: prior-only evaluations are not poisoned by impossible
+//!   observations (zero-weight −∞ likelihood terms).
+
+use dynamicppl::ad::arena;
+use dynamicppl::context::Context;
+use dynamicppl::gradient::Backend;
+use dynamicppl::model::count_obs_sites;
+use dynamicppl::models::logreg::{logreg_n, LogReg};
+use dynamicppl::models::logreg_tall::logreg_tall_n;
+use dynamicppl::prelude::*;
+use dynamicppl::runtime::DataInput;
+use dynamicppl::vi::MinibatchTarget;
+
+fn assert_grad_close(name: &str, got: &[f64], want: &[f64], rel: f64) {
+    assert_eq!(got.len(), want.len(), "{name}: gradient length");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        let scale = 1.0 + b.abs();
+        assert!(((a - b) / scale).abs() < rel, "{name} grad[{i}]: {a} vs {b}");
+    }
+}
+
+model! {
+    /// Context fixture: scalar + vector assumes, distribution observes,
+    /// a raw likelihood site and a raw prior term — every accumulator
+    /// path a context weight can touch.
+    pub CtxFixture {
+        y: Vec<f64>,
+    }
+    fn body<T>(this, api) {
+        let s = tilde!(api, s ~ InverseGamma(c(2.0), c(3.0)));
+        check_reject!(api);
+        let sd = s.sqrt();
+        let w = tilde_vec!(api, w ~ IsoNormal(c(0.0), c(1.0), 3));
+        for (i, &yi) in this.y.iter().enumerate() {
+            let mu = w[i % 3] * 0.5 + s * 0.1;
+            obs!(api, yi => Normal(mu, sd));
+        }
+        // raw likelihood site (counts as one more observation window slot)
+        api.add_obs_logp((w[0] - w[1]) * (w[0] - w[1]) * (-0.25));
+        // raw prior-side term (never windowed)
+        api.add_prior_logp(w[2] * w[2] * (-0.05));
+    }
+}
+
+/// All four flat monomorphizations must agree on logp and gradient under
+/// every context, including windowed subsampling.
+#[test]
+fn context_weights_agree_across_all_four_executor_paths() {
+    let m = CtxFixture {
+        y: vec![0.3, -0.8, 1.1, 0.4, -0.2, 0.9],
+    };
+    let mut rng = Xoshiro256pp::seed_from_u64(3);
+    let vi = init_trace(&m, &mut rng);
+    let tvi = TypedVarInfo::from_untyped(&vi);
+    let dim = tvi.dim();
+    assert_eq!(count_obs_sites(&m, &tvi), 7, "6 dist observes + 1 raw site");
+    let theta: Vec<f64> = (0..dim).map(|i| 0.11 * (i as f64) - 0.2).collect();
+
+    let contexts = [
+        Context::Default,
+        Context::Prior,
+        Context::Likelihood,
+        Context::MiniBatch { scale: 2.5 },
+        Context::Subsample { lo: 0, hi: usize::MAX, scale: 2.5 },
+        Context::Subsample { lo: 1, hi: 4, scale: 7.0 / 3.0 },
+        Context::Subsample { lo: 5, hi: 7, scale: 3.5 },
+        Context::Subsample { lo: 0, hi: 0, scale: 1.0 },
+    ];
+    for ctx in contexts {
+        let lp_typed = typed_logp(&m, &tvi, &theta, ctx);
+        let lp_untyped = untyped_logp(&m, &vi, &theta, ctx);
+        let (lp_tf, g_tf) = typed_grad_fused(&m, &tvi, &theta, ctx);
+        let (lp_uf, g_uf) = untyped_grad_fused(&m, &vi, &theta, ctx);
+        let (lp_fwd, g_fwd) = typed_grad_forward(&m, &tvi, &theta, ctx);
+        let (lp_rev, g_rev) = typed_grad_reverse(&m, &tvi, &theta, ctx);
+        for (label, lp) in [
+            ("untyped", lp_untyped),
+            ("typed-fused", lp_tf),
+            ("untyped-fused", lp_uf),
+            ("typed-forward", lp_fwd),
+            ("typed-reverse", lp_rev),
+        ] {
+            assert!(
+                (lp - lp_typed).abs() < 1e-9,
+                "{ctx:?} {label}: logp {lp} vs typed {lp_typed}"
+            );
+        }
+        assert_grad_close(&format!("{ctx:?} typed-fused vs forward"), &g_tf, &g_fwd, 1e-8);
+        assert_grad_close(&format!("{ctx:?} untyped-fused vs forward"), &g_uf, &g_fwd, 1e-8);
+        assert_grad_close(&format!("{ctx:?} reverse vs forward"), &g_rev, &g_fwd, 1e-8);
+    }
+
+    // MiniBatch ≡ Subsample with the full window, term for term
+    let mb = typed_logp(&m, &tvi, &theta, Context::MiniBatch { scale: 2.5 });
+    let ss = typed_logp(
+        &m,
+        &tvi,
+        &theta,
+        Context::Subsample { lo: 0, hi: usize::MAX, scale: 2.5 },
+    );
+    assert!((mb - ss).abs() < 1e-12, "{mb} vs {ss}");
+
+    // windowed semantics decompose: prior + scale · (windowed likelihood)
+    let prior = typed_logp(&m, &tvi, &theta, Context::Prior);
+    let site = |i: usize| {
+        typed_logp(
+            &m,
+            &tvi,
+            &theta,
+            Context::Subsample { lo: i, hi: i + 1, scale: 1.0 },
+        ) - prior
+    };
+    let want = prior + 2.0 * (site(1) + site(2) + site(3));
+    let got = typed_logp(
+        &m,
+        &tvi,
+        &theta,
+        Context::Subsample { lo: 1, hi: 4, scale: 2.0 },
+    );
+    assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+    // tiling every site at scale 1 recovers the full likelihood
+    let lik = typed_logp(&m, &tvi, &theta, Context::Likelihood);
+    let tiled: f64 = (0..7).map(site).sum();
+    assert!((tiled - lik).abs() < 1e-9, "{tiled} vs {lik}");
+}
+
+/// The expected subsampled gradient over all blocks equals the full-data
+/// gradient at a fixed point — exactly, not just in distribution. Checked
+/// on the *plain* (non-window-aware) logreg body, so the windowing here is
+/// entirely executor-side.
+#[test]
+fn minibatch_gradient_is_exactly_unbiased_over_blocks() {
+    for (n, batch) in [(48usize, 16usize), (50, 16)] {
+        let bm = logreg_n(11, n, 5);
+        let m = bm.model.as_ref();
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let tvi = init_typed(m, &mut rng);
+        let theta: Vec<f64> = (0..5).map(|i| 0.15 * (i as f64) - 0.3).collect();
+        let (lp_full, g_full) = typed_grad_fused(m, &tvi, &theta, Context::Default);
+        assert!(lp_full.is_finite());
+
+        let n_blocks = n.div_ceil(batch);
+        let mut g_avg = vec![0.0; 5];
+        let mut lp_avg = 0.0;
+        for k in 0..n_blocks {
+            let ctx = Context::Subsample {
+                lo: k * batch,
+                hi: ((k + 1) * batch).min(n),
+                scale: n_blocks as f64,
+            };
+            let (lp_k, g_k) = typed_grad_fused(m, &tvi, &theta, ctx);
+            lp_avg += lp_k / n_blocks as f64;
+            for (a, b) in g_avg.iter_mut().zip(&g_k) {
+                *a += b / n_blocks as f64;
+            }
+        }
+        assert!(
+            (lp_avg - lp_full).abs() < 1e-9,
+            "n={n}: E[subsampled logp] {lp_avg} vs full {lp_full}"
+        );
+        assert_grad_close(&format!("n={n} E[grad] vs full"), &g_avg, &g_full, 1e-10);
+    }
+}
+
+/// Window-aware and full-visit bodies produce identical Subsample
+/// gradients — `skip_obs` keeps the site indices aligned.
+#[test]
+fn window_aware_body_matches_plain_body_gradients() {
+    let bm = logreg_tall_n(13, 96, 4);
+    let tall = bm.model.as_ref();
+    let plain = LogReg {
+        x: match &bm.data[0] {
+            DataInput::F64 { data, .. } => data.clone(),
+            _ => unreachable!(),
+        },
+        y: match &bm.data[1] {
+            DataInput::F64 { data, .. } => data.iter().map(|&v| v as i64).collect(),
+            _ => unreachable!(),
+        },
+        d: 4,
+    };
+    let mut rng = Xoshiro256pp::seed_from_u64(13);
+    let tvi = init_typed(tall, &mut rng);
+    let theta = [0.2, -0.1, 0.4, -0.3];
+    for ctx in [
+        Context::Default,
+        Context::Subsample { lo: 10, hi: 42, scale: 3.0 },
+        Context::Subsample { lo: 80, hi: 96, scale: 6.0 },
+    ] {
+        let (lp_a, g_a) = typed_grad_fused(tall, &tvi, &theta, ctx);
+        let (lp_b, g_b) = typed_grad_fused(&plain, &tvi, &theta, ctx);
+        assert!((lp_a - lp_b).abs() < 1e-9, "{ctx:?}: {lp_a} vs {lp_b}");
+        assert_grad_close(&format!("{ctx:?} tall vs plain"), &g_a, &g_b, 1e-10);
+    }
+}
+
+/// ISSUE acceptance: fused-path evaluation under `Subsample` allocates
+/// zero arena nodes for out-of-window observations (window-aware body).
+#[test]
+fn subsample_fused_path_allocates_zero_nodes_out_of_window() {
+    let n = 256;
+    let bm = logreg_tall_n(9, n, 4);
+    let m = bm.model.as_ref();
+    let mut rng = Xoshiro256pp::seed_from_u64(9);
+    let tvi = init_typed(m, &mut rng);
+    let theta = [0.1, -0.2, 0.3, -0.1];
+    let mut grad = vec![0.0; 4];
+
+    // empty window: likelihood contributes nothing — not a single node
+    let lp = typed_grad_fused_into(
+        m,
+        &tvi,
+        &theta,
+        Context::Subsample { lo: 0, hi: 0, scale: 1.0 },
+        &mut grad,
+    );
+    assert_eq!(
+        arena::last_stats().nodes,
+        0,
+        "empty window must build zero arena nodes"
+    );
+    let prior_ref = typed_logp(m, &tvi, &theta, Context::Prior);
+    assert!((lp - prior_ref).abs() < 1e-12, "{lp} vs prior {prior_ref}");
+    // IsoNormal(0,1) prior over Real coordinates: ∇ = −θ
+    for (g, t) in grad.iter().zip(&theta) {
+        assert!((g + t).abs() < 1e-12, "prior grad {g} vs {}", -t);
+    }
+
+    // a 16-row window costs ~16 rows of nodes; the full pass costs ~256
+    let _ = typed_grad_fused_into(
+        m,
+        &tvi,
+        &theta,
+        Context::Subsample { lo: 32, hi: 48, scale: 16.0 },
+        &mut grad,
+    );
+    let nodes_window = arena::last_stats().nodes;
+    assert!(nodes_window > 0);
+    let _ = typed_grad_fused_into(m, &tvi, &theta, Context::Default, &mut grad);
+    let nodes_full = arena::last_stats().nodes;
+    assert!(
+        nodes_full > 8 * nodes_window,
+        "full pass {nodes_full} nodes vs 16/256 window {nodes_window}"
+    );
+}
+
+/// Regression (prior-poisoning): an impossible observation must not
+/// reject a prior-only evaluation on any executor path.
+#[test]
+fn impossible_observation_does_not_poison_prior_evaluations() {
+    model! {
+        pub ImpossibleObs { dummy: f64, }
+        fn body<T>(this, api) {
+            let _ = this.dummy;
+            let m = tilde!(api, m ~ Normal(c(0.0), c(1.0)));
+            let _ = m;
+            // y = −1 is outside Exponential support: logpdf = −∞
+            obs!(api, -1.0 => Exponential(c(1.0)));
+        }
+    }
+    let m = ImpossibleObs { dummy: 0.0 };
+    let mut rng = Xoshiro256pp::seed_from_u64(2);
+    let vi = init_trace(&m, &mut rng);
+    let tvi = TypedVarInfo::from_untyped(&vi);
+    let theta = [0.4];
+    let prior_lp = Normal::new(0.0, 1.0).logpdf(0.4);
+
+    // the joint is genuinely impossible…
+    assert_eq!(
+        typed_logp(&m, &tvi, &theta, Context::Default),
+        f64::NEG_INFINITY
+    );
+    // …but prior-only evaluations must stay finite on every path
+    let lp_typed = typed_logp(&m, &tvi, &theta, Context::Prior);
+    assert!((lp_typed - prior_lp).abs() < 1e-12, "{lp_typed}");
+    let lp_untyped = untyped_logp(&m, &vi, &theta, Context::Prior);
+    assert!((lp_untyped - prior_lp).abs() < 1e-12, "{lp_untyped}");
+    for (label, (lp, g)) in [
+        ("typed-fused", typed_grad_fused(&m, &tvi, &theta, Context::Prior)),
+        ("untyped-fused", untyped_grad_fused(&m, &vi, &theta, Context::Prior)),
+        ("typed-forward", typed_grad_forward(&m, &tvi, &theta, Context::Prior)),
+        ("typed-reverse", typed_grad_reverse(&m, &tvi, &theta, Context::Prior)),
+    ] {
+        assert!(
+            (lp - prior_lp).abs() < 1e-12,
+            "{label}: prior logp {lp} vs {prior_lp}"
+        );
+        assert!((g[0] + 0.4).abs() < 1e-9, "{label}: prior grad {}", g[0]);
+    }
+    // out-of-window impossible observations are equally harmless
+    let lp_win = typed_logp(
+        &m,
+        &tvi,
+        &theta,
+        Context::Subsample { lo: 1, hi: 2, scale: 1.0 },
+    );
+    assert!((lp_win - prior_lp).abs() < 1e-12, "{lp_win}");
+}
+
+/// ISSUE acceptance: on a tall logistic regression, minibatched ADVI
+/// reaches the full-data fit's posterior means within 5% at strictly
+/// lower wall-clock per iteration.
+#[test]
+fn minibatch_advi_matches_full_data_fit_on_tall_logreg() {
+    let bm = logreg_tall_n(21, 4000, 4);
+    let m = bm.model.as_ref();
+    let mut rng = Xoshiro256pp::seed_from_u64(21);
+    let tvi = init_typed(m, &mut rng);
+    let theta0: Vec<f64> = tvi.unconstrained.iter().map(|x| x * 0.1).collect();
+    let ld = dynamicppl::gradient::NativeDensity::fused(m, &tvi);
+    let advi = Advi {
+        family: ViFamily::MeanField,
+        max_iters: 2500,
+        eval_every: 100,
+        grad_samples: 4,
+        elbo_samples: 100,
+        tol_rel: 0.003,
+        ..Advi::default()
+    };
+
+    let mut full_rng = Xoshiro256pp::seed_from_u64(22);
+    let full = advi.fit(&ld, &theta0, &mut full_rng);
+    assert!(full.elbo.is_finite());
+    assert!(full.minibatch.is_none());
+
+    let target = MinibatchTarget::new(m, &tvi, 256, Backend::ReverseFused);
+    assert_eq!(target.n_obs, 4000);
+    assert_eq!(target.n_blocks(), 4000 / 256 + 1);
+    let mut mb_rng = Xoshiro256pp::seed_from_u64(23);
+    let mb = advi.fit_minibatch(&target, &theta0, &mut mb_rng);
+    assert!(mb.elbo.is_finite());
+    assert_eq!(mb.minibatch, Some(256));
+    assert!(!mb.eta_search_failed);
+
+    // posterior means within 5% of the full-data fit (w is Real-domain,
+    // so μ of q is the posterior-mean estimate directly)
+    for i in 0..4 {
+        let (a, b) = (mb.approx.mu()[i], full.approx.mu()[i]);
+        assert!(
+            (a - b).abs() < 0.05 * (1.0 + b.abs()),
+            "mu[{i}]: minibatch {a} vs full {b}"
+        );
+    }
+    // the two ELBOs agree to a few nats (same family, same target)
+    assert!(
+        (mb.elbo - full.elbo).abs() < 0.01 * full.elbo.abs() + 5.0,
+        "elbo: minibatch {} vs full {}",
+        mb.elbo,
+        full.elbo
+    );
+    // strictly lower wall-clock per iteration: each minibatch step
+    // touches 256 of 4000 rows
+    let full_spi = full.opt_wall_secs / full.iters.max(1) as f64;
+    let mb_spi = mb.opt_wall_secs / mb.iters.max(1) as f64;
+    assert!(
+        mb_spi < full_spi,
+        "secs/iter: minibatch {mb_spi} vs full {full_spi}"
+    );
+}
+
+/// Seeded minibatch fits are bit-deterministic (block resampling included).
+#[test]
+fn minibatch_fit_is_bit_deterministic() {
+    let bm = logreg_tall_n(5, 600, 3);
+    let m = bm.model.as_ref();
+    let mut rng = Xoshiro256pp::seed_from_u64(5);
+    let tvi = init_typed(m, &mut rng);
+    let theta0 = vec![0.0; 3];
+    let advi = Advi {
+        max_iters: 120,
+        eval_every: 40,
+        grad_samples: 2,
+        elbo_samples: 20,
+        adapt_iters: 10,
+        ..Advi::default()
+    };
+    let target = MinibatchTarget::new(m, &tvi, 64, Backend::ReverseFused);
+    let run = || {
+        let mut r = Xoshiro256pp::seed_from_u64(77);
+        advi.fit_minibatch(&target, &theta0, &mut r)
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.eta, b.eta);
+    assert_eq!(a.elbo.to_bits(), b.elbo.to_bits());
+    for (x, y) in a.approx.params.iter().zip(&b.approx.params) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}
