@@ -211,11 +211,16 @@ pub fn seed(node: u32, w: f64) {
 pub fn backward_into(grad: &mut [f64], tilde_stmts: usize) {
     with_tape(|t| {
         t.backward_into(grad);
-        LAST_STATS.set(FusedStats {
+        let stats = FusedStats {
             nodes: t.n_fused_nodes(),
             seeds: t.n_seeds(),
             tilde_stmts,
-        });
+        };
+        LAST_STATS.set(stats);
+        use crate::obs::metrics::{add, inc, Counter};
+        inc(Counter::ArenaEvals);
+        add(Counter::ArenaNodes, stats.nodes as u64);
+        add(Counter::ArenaSeeds, stats.seeds as u64);
     });
 }
 

@@ -1261,6 +1261,57 @@ pub fn vi_rows_to_json(rows: &[ViRow], cfg: &ViBenchConfig) -> String {
     out
 }
 
+/// One `(model, label, secs)` measurement inside a bench-history row —
+/// the minimal shape all four bench families share, so a plotting script
+/// can track any benchmark over time from one file.
+#[derive(Clone, Debug)]
+pub struct HistoryEntry {
+    pub model: String,
+    /// Backend / engine / replay-path / family label of the measurement.
+    pub label: String,
+    /// The row's headline seconds figure (per-gradient, per-iteration or
+    /// wall-clock — whichever the bench family reports).
+    pub secs: f64,
+}
+
+/// Serialize one `bench --history` row: a single-line JSON object (no
+/// embedded newlines) ready to append to `BENCH_HISTORY.jsonl`,
+/// timestamped at call time.
+pub fn history_line(bench: &str, seed: u64, entries: &[HistoryEntry]) -> String {
+    let unix_secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut out = format!(
+        "{{\"unix_secs\": {unix_secs}, \"bench\": \"{bench}\", \"seed\": {seed}, \"entries\": ["
+    );
+    for (i, e) in entries.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        let _ = write!(
+            out,
+            "{{\"model\": \"{}\", \"label\": \"{}\", \"secs\": {}}}",
+            e.model,
+            e.label,
+            json_num(e.secs)
+        );
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Append one history row (newline-terminated) to `path`, creating the
+/// file on first use.
+pub fn append_history(path: &str, line: &str) -> std::io::Result<()> {
+    use std::io::Write as _;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)?;
+    writeln!(f, "{line}")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1286,6 +1337,32 @@ mod tests {
             Some(BenchBackend::TypedXlaFused)
         );
         assert_eq!(BenchBackend::parse("nope"), None);
+    }
+
+    #[test]
+    fn history_line_is_single_line_json() {
+        let entries = vec![
+            HistoryEntry {
+                model: "gauss_unknown".into(),
+                label: "fused".into(),
+                secs: 1.25e-7,
+            },
+            HistoryEntry {
+                model: "hier_poisson".into(),
+                label: "tape".into(),
+                secs: f64::NAN,
+            },
+        ];
+        let line = history_line("grad", 42, &entries);
+        assert!(!line.contains('\n'), "JSONL rows must be single-line");
+        assert!(line.starts_with("{\"unix_secs\": "));
+        assert!(line.contains("\"bench\": \"grad\""));
+        assert!(line.contains("\"seed\": 42"));
+        assert!(line.contains("\"model\": \"gauss_unknown\""));
+        assert!(line.contains("\"secs\": null"), "non-finite must serialize as null");
+        assert!(!line.contains("NaN"));
+        assert_eq!(line.matches('{').count(), line.matches('}').count());
+        assert_eq!(line.matches('[').count(), line.matches(']').count());
     }
 
     #[test]

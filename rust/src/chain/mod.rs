@@ -17,6 +17,19 @@ pub struct SamplerStats {
     pub step_size: f64,
     pub n_grad_evals: u64,
     pub wall_secs: f64,
+    /// Wall-clock spent in warmup/adaptation iterations.
+    pub warmup_secs: f64,
+    /// Wall-clock spent in post-warmup sampling iterations.
+    pub sampling_secs: f64,
+    /// NUTS trajectories stopped by the max tree depth (post-warmup).
+    pub max_treedepth_hits: usize,
+    /// The ADVI η ladder found no finite candidate (fit may be bad).
+    pub eta_search_failed: bool,
+    /// Per-iteration Hamiltonian energies (post-warmup, HMC/NUTS only;
+    /// recorded only while telemetry is enabled) — the E-BFMI input.
+    pub energies: Vec<f64>,
+    /// Telemetry counters drained from the chain's worker thread.
+    pub metrics: crate::obs::metrics::MetricsSnapshot,
     /// log-marginal-likelihood estimate: particle samplers store their
     /// unbiased SMC estimate, VI chains the converged ELBO (a lower
     /// bound); `NaN` for samplers that do not estimate evidence.
@@ -31,6 +44,12 @@ impl Default for SamplerStats {
             step_size: 0.0,
             n_grad_evals: 0,
             wall_secs: 0.0,
+            warmup_secs: 0.0,
+            sampling_secs: 0.0,
+            max_treedepth_hits: 0,
+            eta_search_failed: false,
+            energies: Vec::new(),
+            metrics: crate::obs::metrics::MetricsSnapshot::default(),
             log_evidence: f64::NAN,
         }
     }
@@ -168,6 +187,13 @@ impl Chain {
                 stats::quantile(&c, 0.5),
                 stats::quantile(&c, 0.975),
                 stats::ess(&c),
+            );
+        }
+        if self.stats.wall_secs > 0.0 {
+            let _ = writeln!(
+                out,
+                "wall: {:.2}s (warmup {:.2}s + sampling {:.2}s)",
+                self.stats.wall_secs, self.stats.warmup_secs, self.stats.sampling_secs
             );
         }
         out
@@ -355,6 +381,18 @@ mod tests {
         let c = demo_chain(9, 0.0);
         let s = c.summary();
         assert!(s.contains("b[0]") && s.contains("b[1]") && s.contains("ess"));
+    }
+
+    #[test]
+    fn summary_includes_wall_clock_split() {
+        let mut c = demo_chain(12, 0.0);
+        let s = c.summary();
+        assert!(!s.contains("wall:"), "no timing line without wall_secs");
+        c.stats.wall_secs = 2.0;
+        c.stats.warmup_secs = 0.5;
+        c.stats.sampling_secs = 1.5;
+        let s = c.summary();
+        assert!(s.contains("wall: 2.00s (warmup 0.50s + sampling 1.50s)"), "{s}");
     }
 
     #[test]

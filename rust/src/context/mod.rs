@@ -49,6 +49,12 @@ pub enum Context {
     /// they cancel in the importance weight). The executor counts observe
     /// statements in model visit order; see `crate::particle`.
     ObsWindow { lo: usize, hi: usize },
+    /// Instrumented log-joint (weights identical to [`Context::Default`]):
+    /// every flat executor additionally records one `obs::profile` row per
+    /// tilde statement — wall-clock, the site's own logp contribution, and
+    /// −∞-rejection attribution. The contextual-dispatch showcase; see
+    /// `crate::obs::profile`.
+    Profile,
 }
 
 impl Context {
@@ -305,6 +311,10 @@ mod tests {
         assert_eq!(Context::Likelihood.prior_weight(), 0.0);
         assert_eq!(Context::Prior.lik_weight(), 0.0);
         assert_eq!(Context::MiniBatch { scale: 5.0 }.lik_weight(), 5.0);
+        // Profile is Default plus instrumentation: same weights, full window
+        assert_eq!(Context::Profile.prior_weight(), 1.0);
+        assert_eq!(Context::Profile.lik_weight(), 1.0);
+        assert_eq!(Context::Profile.obs_window(), (0, usize::MAX));
     }
 
     #[test]

@@ -4,16 +4,17 @@
 use std::sync::Arc;
 
 use crate::bench::{
-    grad_rows_to_json, render_grad_table, render_smc_table, render_table1, render_vi_table,
-    run_grad_bench, run_smc_bench, run_table1, run_vi_bench, smc_rows_to_json,
-    table1_cells_to_json, vi_rows_to_json, BenchBackend, GradBenchConfig, SmcBenchConfig,
-    SmcPath, Table1Config, ViBenchConfig,
+    append_history, grad_rows_to_json, history_line, render_grad_table, render_smc_table,
+    render_table1, render_vi_table, run_grad_bench, run_smc_bench, run_table1, run_vi_bench,
+    smc_rows_to_json, table1_cells_to_json, vi_rows_to_json, BenchBackend, GradBenchConfig,
+    HistoryEntry, SmcBenchConfig, SmcPath, Table1Config, ViBenchConfig,
 };
 use crate::chain::{Chain, MultiChain};
 use crate::gradient::{Backend, LogDensity, NativeDensity};
 use crate::inference::{sample_chain, sample_smc_chain, Hmc, Nuts, RwMh, SamplerKind, Smc};
 use crate::model::init_typed;
 use crate::models::{build, ALL_MODELS};
+use crate::obs::report::RunReport;
 use crate::query::{eval_query, Bindings, ModelRegistry, Query};
 use crate::runtime::{artifact_exists, artifacts_dir, XlaDensity};
 use crate::stanlike::stanlike_density;
@@ -33,11 +34,11 @@ pub fn usage() -> String {
             ("info", "show runtime/platform information"),
             (
                 "sample",
-                "run inference: --model NAME [--sampler hmc|nuts|mh|smc|advi|advi-fullrank] [--backend fused|xla|tape|forward|stan] [--iters N] [--warmup N] [--chains C] [--seed S] [--minibatch B]  (smc: iters = particles; advi: iters = posterior draws, --minibatch B fits on Subsample-windowed minibatch gradients; default backend: fused)",
+                "run inference: --model NAME [--sampler hmc|nuts|mh|smc|advi|advi-fullrank] [--backend fused|xla|tape|forward|stan] [--iters N] [--warmup N] [--chains C] [--seed S] [--minibatch B] [--profile] [--quiet] [--json] [--metrics-out FILE]  (smc: iters = particles; advi: iters = posterior draws, --minibatch B fits on Subsample-windowed minibatch gradients; default backend: fused; diagnostics always land in METRICS.json, --json echoes them to stdout, --profile adds per-tilde-site timing rows)",
             ),
             (
                 "bench",
-                "bench table1 [--models a,b] [--backends x,y] [--iters N] [--reps R] [--out FILE.json] | bench smc [--models a,b] [--particles N] [--threads T] [--path typed|boxed|both] [--full] [--out FILE.json] | bench grad [--models a,b] [--engines fused,tape,forward] [--full] [--out FILE.json] | bench vi [--models a,b] [--families meanfield,fullrank] [--draws N] [--max-iters N] [--minibatch B] [--stl] [--full] [--out FILE.json]",
+                "bench table1 [--models a,b] [--backends x,y] [--iters N] [--reps R] [--out FILE.json] | bench smc [--models a,b] [--particles N] [--threads T] [--path typed|boxed|both] [--full] [--out FILE.json] | bench grad [--models a,b] [--engines fused,tape,forward] [--full] [--out FILE.json] | bench vi [--models a,b] [--families meanfield,fullrank] [--draws N] [--max-iters N] [--minibatch B] [--stl] [--full] [--out FILE.json]  (any target: --history appends one JSONL row to BENCH_HISTORY.jsonl)",
             ),
             ("query", "evaluate a probability query string (paper §3.5)"),
         ],
@@ -149,8 +150,43 @@ fn cmd_sample(args: &Args) -> i32 {
             return 1;
         }
     };
-    report_chains(&mc);
-    0
+
+    // optional per-tilde-site profile: one instrumented Context::Profile
+    // pass through each of the four flat executor monomorphizations
+    let profile = if args.flag("profile") && crate::models::is_known(&model_name) {
+        let bm = build(&model_name, seed);
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let tvi = init_typed(bm.model.as_ref(), &mut rng);
+        let theta = tvi.unconstrained.clone();
+        crate::obs::profile::profile_model(bm.model.as_ref(), &tvi, &theta, seed)
+    } else {
+        Vec::new()
+    };
+
+    // one reporting path for humans and machines: the same RunReport
+    // renders the console summary, the --json echo and METRICS.json
+    let report = RunReport::from_chains(&model_name, &sampler, &mc, profile);
+    let quiet = args.flag("quiet");
+    if !quiet {
+        println!("{}", report.render_human(&mc));
+    }
+    let payload = report.to_json();
+    if args.flag("json") {
+        println!("{payload}");
+    }
+    let metrics_path = args.get_or("metrics-out", "METRICS.json").to_string();
+    match std::fs::write(&metrics_path, &payload) {
+        Ok(()) => {
+            if !quiet {
+                println!("wrote {metrics_path}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("failed to write {metrics_path}: {e}");
+            1
+        }
+    }
 }
 
 /// How a CLI `--backend` string maps to a [`LogDensity`] implementation.
@@ -261,13 +297,16 @@ pub fn sample_model(
                     crate::vi::MinibatchTarget::new(bmc.model.as_ref(), &tvic, b, native);
                 let mut rng = Xoshiro256pp::seed_from_u64(seed + 1000 * i as u64);
                 let theta0 = tvic.unconstrained.clone();
+                // scope the telemetry shard to this chain's fit (an η
+                // search failure is surfaced through stats.eta_search_failed
+                // and becomes a RunReport warning — no ad-hoc stderr line)
+                let _ = crate::obs::metrics::take_local();
                 let fit = advi.fit_minibatch(&target, &theta0, &mut rng);
-                if fit.eta_search_failed {
-                    eprintln!("warning: chain {i}: η ladder search failed; fit ran at the smallest candidate rate");
-                }
                 let full = target.full();
                 let raw = fit.sample_raw(&full, iters, &mut rng);
-                crate::inference::raw_to_chain(&raw, &tvic)
+                let mut chain = crate::inference::raw_to_chain(&raw, &tvic);
+                chain.stats.metrics = crate::obs::metrics::take_local();
+                chain
             },
         );
         return Ok(MultiChain::new(chains));
@@ -291,24 +330,20 @@ pub fn sample_model(
     Ok(MultiChain::new(chains))
 }
 
-fn report_chains(mc: &MultiChain) {
-    let c0 = &mc.chains[0];
-    println!("{}", c0.summary());
-    println!("chains: {}", mc.chains.len());
-    for (i, c) in mc.chains.iter().enumerate() {
-        println!(
-            "  chain {i}: accept={:.2} divergences={} grad_evals={} wall={:.2}s",
-            c.stats.accept_rate, c.stats.divergences, c.stats.n_grad_evals, c.stats.wall_secs
-        );
-    }
-    // R-hat on the first few columns
-    for name in c0.names().iter().take(5) {
-        if let Some(r) = mc.rhat(name) {
-            println!("  R̂[{name}] = {r:.3}");
+/// `bench --history` tail: append one timestamped JSONL row to
+/// `BENCH_HISTORY.jsonl` so successive bench runs accumulate a
+/// machine-readable performance trail.
+fn bench_history(bench: &str, seed: u64, entries: Vec<HistoryEntry>) -> i32 {
+    let line = history_line(bench, seed, &entries);
+    match append_history("BENCH_HISTORY.jsonl", &line) {
+        Ok(()) => {
+            println!("appended BENCH_HISTORY.jsonl");
+            0
         }
-    }
-    if let Some(lz) = mc.log_evidence() {
-        println!("  log-evidence (pooled) = {lz:.4}");
+        Err(e) => {
+            eprintln!("failed to append BENCH_HISTORY.jsonl: {e}");
+            1
+        }
     }
 }
 
@@ -335,6 +370,20 @@ fn cmd_bench(args: &Args) -> i32 {
             cfg.max_run_iters = args.get_parse::<usize>("max-run").ok().flatten();
             let cells = run_table1(&cfg);
             println!("{}", render_table1(&cells, &cfg));
+            if args.flag("history") {
+                let entries = cells
+                    .iter()
+                    .map(|c| HistoryEntry {
+                        model: c.model.clone(),
+                        label: c.backend.label().to_string(),
+                        secs: c.mean,
+                    })
+                    .collect();
+                let rc = bench_history("table1", cfg.seed, entries);
+                if rc != 0 {
+                    return rc;
+                }
+            }
             // machine-readable Table-1 cells alongside the console table
             let out_path = args.get_or("out", "BENCH_TABLE1.json").to_string();
             let json = table1_cells_to_json(&cells, &cfg);
@@ -374,6 +423,20 @@ fn cmd_bench(args: &Args) -> i32 {
             }
             let rows = run_smc_bench(&cfg);
             println!("{}", render_smc_table(&rows));
+            if args.flag("history") {
+                let entries = rows
+                    .iter()
+                    .map(|r| HistoryEntry {
+                        model: r.model.clone(),
+                        label: r.path.label().to_string(),
+                        secs: r.wall_secs,
+                    })
+                    .collect();
+                let rc = bench_history("smc", cfg.seed, entries);
+                if rc != 0 {
+                    return rc;
+                }
+            }
             let out_path = args.get_or("out", "BENCH_SMC.json").to_string();
             let json = smc_rows_to_json(&rows);
             match std::fs::write(&out_path, &json) {
@@ -407,6 +470,20 @@ fn cmd_bench(args: &Args) -> i32 {
             cfg.small = !args.flag("full");
             let rows = run_grad_bench(&cfg);
             println!("{}", render_grad_table(&rows));
+            if args.flag("history") {
+                let entries = rows
+                    .iter()
+                    .map(|r| HistoryEntry {
+                        model: r.model.clone(),
+                        label: r.engine.label().to_string(),
+                        secs: r.secs_per_grad,
+                    })
+                    .collect();
+                let rc = bench_history("grad", cfg.seed, entries);
+                if rc != 0 {
+                    return rc;
+                }
+            }
             let out_path = args.get_or("out", "BENCH_GRAD.json").to_string();
             let json = grad_rows_to_json(&rows, &cfg);
             match std::fs::write(&out_path, &json) {
@@ -450,6 +527,24 @@ fn cmd_bench(args: &Args) -> i32 {
             cfg.small = !args.flag("full");
             let rows = run_vi_bench(&cfg);
             println!("{}", render_vi_table(&rows));
+            if args.flag("history") {
+                let entries = rows
+                    .iter()
+                    .map(|r| HistoryEntry {
+                        model: r.model.clone(),
+                        label: if r.minibatch > 0 {
+                            format!("{}-mb{}", r.family.label(), r.minibatch)
+                        } else {
+                            r.family.label().to_string()
+                        },
+                        secs: r.secs_per_iter,
+                    })
+                    .collect();
+                let rc = bench_history("vi", cfg.seed, entries);
+                if rc != 0 {
+                    return rc;
+                }
+            }
             let out_path = args.get_or("out", "BENCH_VI.json").to_string();
             let json = vi_rows_to_json(&rows, &cfg);
             match std::fs::write(&out_path, &json) {

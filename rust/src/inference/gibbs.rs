@@ -214,6 +214,7 @@ impl Gibbs {
         let mut accepts = 0.0;
         let mut proposals = 0.0;
         let mut n_grad = 0u64;
+        let mut warmup_secs = 0.0;
 
         for it in 0..warmup + iters {
             // continuous blocks
@@ -381,8 +382,12 @@ impl Gibbs {
                 rows.push(tvi.row());
                 logps.push(lp);
             }
+            if it + 1 == warmup {
+                warmup_secs = t_start.elapsed().as_secs_f64();
+            }
         }
 
+        let wall_secs = t_start.elapsed().as_secs_f64();
         GibbsDraws {
             rows,
             logps,
@@ -395,7 +400,9 @@ impl Gibbs {
                 divergences: 0,
                 step_size: 0.0,
                 n_grad_evals: n_grad,
-                wall_secs: t_start.elapsed().as_secs_f64(),
+                wall_secs,
+                warmup_secs,
+                sampling_secs: wall_secs - warmup_secs,
                 ..SamplerStats::default()
             },
         }

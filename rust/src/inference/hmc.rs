@@ -5,6 +5,7 @@ use rand_core::RngCore;
 
 use crate::chain::SamplerStats;
 use crate::gradient::LogDensity;
+use crate::obs::metrics::{self, Counter};
 use crate::util::rng::Rng;
 
 use super::adapt::{DualAveraging, WelfordVar};
@@ -99,6 +100,11 @@ impl Hmc {
         let mut logps = Vec::with_capacity(iters);
         let mut accepts = 0.0f64;
         let mut divergences = 0usize;
+        let mut n_leap: u64 = 0;
+        let mut warmup_secs = 0.0;
+        // per-iteration Hamiltonians (E-BFMI input); recorded only while
+        // telemetry is live so the disabled path allocates nothing
+        let mut energies: Vec<f64> = Vec::new();
 
         // scratch buffers reused across iterations (no allocation in the
         // hot loop — see EXPERIMENTS.md §Perf)
@@ -136,6 +142,7 @@ impl Hmc {
                 }
                 let l = ld.logp_grad_into(&theta_prop, &mut grad_prop);
                 n_grad += 1;
+                n_leap += 1;
                 lp_prop = l;
                 if !l.is_finite() {
                     diverged = true;
@@ -180,16 +187,25 @@ impl Hmc {
                         inv_mass = mass_est.variance();
                     }
                 }
-                if it + 1 == warmup && self.adapt_step_size {
-                    eps = da.finalized();
+                if it + 1 == warmup {
+                    if self.adapt_step_size {
+                        eps = da.finalized();
+                    }
+                    warmup_secs = t_start.elapsed().as_secs_f64();
                 }
             } else {
                 accepts += accept_prob;
+                if metrics::enabled() {
+                    energies.push(h0);
+                }
                 thetas.push(theta.clone());
                 logps.push(lp);
             }
         }
 
+        metrics::add(Counter::LeapfrogSteps, n_leap);
+        metrics::add(Counter::Divergences, divergences as u64);
+        let wall_secs = t_start.elapsed().as_secs_f64();
         RawDraws {
             thetas,
             logps,
@@ -198,7 +214,10 @@ impl Hmc {
                 divergences,
                 step_size: eps,
                 n_grad_evals: n_grad,
-                wall_secs: t_start.elapsed().as_secs_f64(),
+                wall_secs,
+                warmup_secs,
+                sampling_secs: wall_secs - warmup_secs,
+                energies,
                 ..SamplerStats::default()
             },
         }
@@ -237,6 +256,8 @@ impl<'a> HmcFusedXla<'a> {
         let mut theta_prop = vec![0.0; dim];
         let mut grad_prop = vec![0.0; dim];
         let mut n_traj = 0u64;
+        let mut warmup_secs = 0.0;
+        let mut energies: Vec<f64> = Vec::new();
 
         for it in 0..warmup + iters {
             for pi in p.iter_mut() {
@@ -268,11 +289,20 @@ impl<'a> HmcFusedXla<'a> {
             }
             if it >= warmup {
                 accepts += accept_prob;
+                if metrics::enabled() {
+                    energies.push(h0);
+                }
                 thetas.push(theta.clone());
                 logps.push(lp);
             }
+            if it + 1 == warmup {
+                warmup_secs = t_start.elapsed().as_secs_f64();
+            }
         }
 
+        metrics::add(Counter::LeapfrogSteps, n_traj * 4);
+        metrics::add(Counter::Divergences, divergences as u64);
+        let wall_secs = t_start.elapsed().as_secs_f64();
         RawDraws {
             thetas,
             logps,
@@ -281,7 +311,10 @@ impl<'a> HmcFusedXla<'a> {
                 divergences,
                 step_size: self.step_size,
                 n_grad_evals: n_traj * 4,
-                wall_secs: t_start.elapsed().as_secs_f64(),
+                wall_secs,
+                warmup_secs,
+                sampling_secs: wall_secs - warmup_secs,
+                energies,
                 ..SamplerStats::default()
             },
         }

@@ -54,6 +54,7 @@ impl RwMh {
         let mut thetas = Vec::with_capacity(iters);
         let mut logps = Vec::with_capacity(iters);
         let mut accepts = 0usize;
+        let mut warmup_secs = 0.0;
         let mut prop = vec![0.0; dim];
 
         for it in 0..warmup + iters {
@@ -73,6 +74,9 @@ impl RwMh {
                     let eta = (it as f64 + 10.0).powf(-0.6);
                     scale = (scale.ln() + eta * (acc - 0.234)).exp();
                 }
+                if it + 1 == warmup {
+                    warmup_secs = t_start.elapsed().as_secs_f64();
+                }
             } else {
                 if accepted {
                     accepts += 1;
@@ -82,6 +86,7 @@ impl RwMh {
             }
         }
 
+        let wall_secs = t_start.elapsed().as_secs_f64();
         RawDraws {
             thetas,
             logps,
@@ -94,7 +99,9 @@ impl RwMh {
                 divergences: 0,
                 step_size: scale,
                 n_grad_evals: 0,
-                wall_secs: t_start.elapsed().as_secs_f64(),
+                wall_secs,
+                warmup_secs,
+                sampling_secs: wall_secs - warmup_secs,
                 ..SamplerStats::default()
             },
         }

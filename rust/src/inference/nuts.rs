@@ -13,6 +13,7 @@ use rand_core::RngCore;
 
 use crate::chain::SamplerStats;
 use crate::gradient::LogDensity;
+use crate::obs::metrics::{self, Counter};
 use crate::util::rng::Rng;
 
 use super::adapt::{DualAveraging, WelfordVar};
@@ -194,7 +195,12 @@ impl Nuts {
         let mut thetas = Vec::with_capacity(iters);
         let mut logps = Vec::with_capacity(iters);
         let mut divergences = 0usize;
+        let mut max_treedepth_hits = 0usize;
         let mut accept_stat_sum = 0.0;
+        let mut warmup_secs = 0.0;
+        // per-iteration Hamiltonians (E-BFMI input); recorded only while
+        // telemetry is live so the disabled path allocates nothing
+        let mut energies: Vec<f64> = Vec::new();
 
         for it in 0..warmup + iters {
             for i in 0..dim {
@@ -266,6 +272,11 @@ impl Nuts {
                 depth += 1;
             }
 
+            // the loop ran out of depth while still willing to extend:
+            // Stan's "maximum treedepth" saturation diagnostic (a subtree
+            // break leaves depth strictly below the cap, so no false hit)
+            let saturated = depth == self.max_depth && !turning;
+
             current.copy_from(&sample);
             pool.put(minus);
             pool.put(plus);
@@ -287,13 +298,26 @@ impl Nuts {
                 }
                 if it + 1 == warmup {
                     eps = da.finalized();
+                    warmup_secs = t_start.elapsed().as_secs_f64();
                 }
             } else {
+                if saturated {
+                    max_treedepth_hits += 1;
+                }
+                if metrics::enabled() {
+                    energies.push(h0);
+                }
                 thetas.push(current.theta.clone());
                 logps.push(current.lp);
             }
         }
 
+        // every grad eval beyond the init point and the ε probe is one
+        // leapfrog step of some tree leaf
+        metrics::add(Counter::LeapfrogSteps, n_grad - 1 - probe_evals);
+        metrics::add(Counter::Divergences, divergences as u64);
+        metrics::add(Counter::MaxTreedepthHits, max_treedepth_hits as u64);
+        let wall_secs = t_start.elapsed().as_secs_f64();
         RawDraws {
             thetas,
             logps,
@@ -302,7 +326,11 @@ impl Nuts {
                 divergences,
                 step_size: eps,
                 n_grad_evals: n_grad,
-                wall_secs: t_start.elapsed().as_secs_f64(),
+                wall_secs,
+                warmup_secs,
+                sampling_secs: wall_secs - warmup_secs,
+                max_treedepth_hits,
+                energies,
                 ..SamplerStats::default()
             },
         }

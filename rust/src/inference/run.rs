@@ -41,6 +41,9 @@ pub fn sample_chain(
 ) -> Chain {
     let mut rng = Xoshiro256pp::seed_from_u64(seed);
     let theta0 = tvi.unconstrained.clone();
+    // scope the telemetry shard to this chain run: drop whatever earlier
+    // activity left on this thread, then drain what the sampler counted
+    let _ = crate::obs::metrics::take_local();
     let raw = match kind {
         SamplerKind::Hmc(h) => h.sample(ld, &theta0, warmup, iters, &mut rng),
         SamplerKind::Nuts(n) => n.sample(ld, &theta0, warmup, iters, &mut rng),
@@ -51,7 +54,9 @@ pub fn sample_chain(
              use inference::sample_smc_chain(model, &smc, seed)"
         ),
     };
-    raw_to_chain(&raw, tvi)
+    let mut chain = raw_to_chain(&raw, tvi);
+    chain.stats.metrics = crate::obs::metrics::take_local();
+    chain
 }
 
 /// Convert unconstrained [`RawDraws`] to a constrained-space [`Chain`]
@@ -82,7 +87,10 @@ where
 /// draws whose `stats.log_evidence` carries the marginal-likelihood
 /// estimate (see [`crate::inference::smc`]).
 pub fn sample_smc_chain(model: &dyn Model, smc: &Smc, seed: u64) -> Chain {
-    smc.sample_chain(model, seed)
+    let _ = crate::obs::metrics::take_local();
+    let mut chain = smc.sample_chain(model, seed);
+    chain.stats.metrics = crate::obs::metrics::take_local();
+    chain
 }
 
 /// Sample from the prior by repeated fresh model runs (one trace rebuild

@@ -33,6 +33,7 @@ use std::collections::HashMap;
 
 use crate::chain::{Chain, SamplerStats};
 use crate::context::Context;
+use crate::obs::metrics::{self, Counter};
 use crate::model::executors::{ReplayScope, TypedReplayExecutor};
 use crate::model::{sample_run, Model};
 use crate::particle::{
@@ -200,7 +201,10 @@ impl Smc {
         // the sweep stays boxed
         let mut state = if self.use_typed {
             match TypedCloud::promote(&boxed) {
-                Some((cloud, template)) => SmcCloud::Typed { cloud, template },
+                Some((cloud, template)) => {
+                    metrics::inc(Counter::TypedPromotions);
+                    SmcCloud::Typed { cloud, template }
+                }
                 None => SmcCloud::Boxed(boxed),
             }
         } else {
@@ -227,6 +231,7 @@ impl Smc {
                             // step through the boxed path (same RNG streams
                             // → identical to an all-boxed run)
                             demotions += 1;
+                            metrics::inc(Counter::TypedDemotions);
                             let mut b = cloud.demote(&template, None);
                             b.advance(model, seed, self.threads)
                                 .expect("boxed replay cannot mismatch");
@@ -246,6 +251,7 @@ impl Smc {
                 && state.maybe_resample(self.resampler, self.ess_threshold, &mut master)
             {
                 resamples += 1;
+                metrics::inc(Counter::ResampleEvents);
             }
         }
         SmcResult {
@@ -316,9 +322,12 @@ impl Smc {
                 .push(row.clone(), *lp);
         }
         let mut chain = chain.expect("SMC produced an empty cloud");
+        let wall_secs = result.wall_secs + t0.elapsed().as_secs_f64();
         chain.stats = SamplerStats {
             accept_rate: 1.0,
-            wall_secs: result.wall_secs + t0.elapsed().as_secs_f64(),
+            wall_secs,
+            // SMC has no warmup phase: the whole pass is "sampling"
+            sampling_secs: wall_secs,
             log_evidence: result.log_evidence,
             ..SamplerStats::default()
         };

@@ -31,6 +31,7 @@ pub mod inference;
 #[macro_use]
 pub mod model;
 pub mod models;
+pub mod obs;
 pub mod particle;
 pub mod query;
 pub mod runtime;

@@ -6,6 +6,7 @@ use crate::ad::arena::{self, AVar};
 use crate::ad::Scalar;
 use crate::context::{Accumulator, Context};
 use crate::dist::{bijector, DiscreteDist, Domain, ScalarAdj, ScalarDist, VecDist};
+use crate::obs::profile;
 use crate::value::Value;
 use crate::varinfo::{flags, TypedVarInfo, UntypedVarInfo};
 use crate::varname::VarName;
@@ -215,47 +216,65 @@ impl<'a, T: Scalar> TypedExecutor<'a, T> {
 
 impl<'a, T: Scalar> TildeApi<T> for TypedExecutor<'a, T> {
     fn assume(&mut self, vn: VarName, dist: &ScalarDist<T>) -> T {
+        let prof = profile::begin(self.ctx);
         let slot = self.next_slot(&vn);
         let y = &self.theta[slot.unc_offset..slot.unc_offset + slot.unc_len];
         let mut out = [T::constant(0.0)];
         let ladj = bijector::invlink_slice(&slot.domain, y, &mut out);
-        self.acc.add_prior(dist.logpdf(out[0]) + ladj);
+        let lp = dist.logpdf(out[0]) + ladj;
+        self.acc.add_prior(lp);
+        profile::end_assume(prof, &vn, lp.value(), self.acc.rejected());
         out[0]
     }
 
     fn assume_vec(&mut self, vn: VarName, dist: &VecDist<T>) -> Vec<T> {
+        let prof = profile::begin(self.ctx);
         let slot = self.next_slot(&vn);
         let y = &self.theta[slot.unc_offset..slot.unc_offset + slot.unc_len];
         let mut out = vec![T::constant(0.0); slot.cons_len];
         let ladj = bijector::invlink_slice(&slot.domain, y, &mut out);
-        self.acc.add_prior(dist.logpdf(&out) + ladj);
+        let lp = dist.logpdf(&out) + ladj;
+        self.acc.add_prior(lp);
+        profile::end_assume(prof, &vn, lp.value(), self.acc.rejected());
         out
     }
 
     fn assume_int(&mut self, vn: VarName, dist: &DiscreteDist<T>) -> i64 {
+        let prof = profile::begin(self.ctx);
         let slot = self.next_slot(&vn);
         let k = self.tvi.discrete[slot.disc_offset];
-        self.acc.add_prior(dist.logpmf(k));
+        let lp = dist.logpmf(k);
+        self.acc.add_prior(lp);
+        profile::end_assume(prof, &vn, lp.value(), self.acc.rejected());
         k
     }
 
     fn observe(&mut self, dist: &ScalarDist<T>, obs: f64) {
+        let prof = profile::begin(self.ctx);
         // window first: out-of-window sites skip the density evaluation
         if self.acc.note_obs() != 0.0 {
-            self.acc.add_lik(dist.logpdf(T::constant(obs)));
+            let lp = dist.logpdf(T::constant(obs));
+            self.acc.add_lik(lp);
+            profile::end_observe(prof, lp.value(), self.acc.rejected());
         }
     }
 
     fn observe_int(&mut self, dist: &DiscreteDist<T>, obs: i64) {
+        let prof = profile::begin(self.ctx);
         if self.acc.note_obs() != 0.0 {
-            self.acc.add_lik(dist.logpmf(obs));
+            let lp = dist.logpmf(obs);
+            self.acc.add_lik(lp);
+            profile::end_observe(prof, lp.value(), self.acc.rejected());
         }
     }
 
     fn observe_vec(&mut self, dist: &VecDist<T>, obs: &[f64]) {
+        let prof = profile::begin(self.ctx);
         if self.acc.note_obs() != 0.0 {
             let obs_t: Vec<T> = obs.iter().map(|&o| T::constant(o)).collect();
-            self.acc.add_lik(dist.logpdf(&obs_t));
+            let lp = dist.logpdf(&obs_t);
+            self.acc.add_lik(lp);
+            profile::end_observe(prof, lp.value(), self.acc.rejected());
         }
     }
 
@@ -634,50 +653,68 @@ impl<'a, T: Scalar> UntypedFlatExecutor<'a, T> {
 
 impl<'a, T: Scalar> TildeApi<T> for UntypedFlatExecutor<'a, T> {
     fn assume(&mut self, vn: VarName, dist: &ScalarDist<T>) -> T {
+        let prof = profile::begin(self.ctx);
         let (off, domain) = self.lookup(&vn);
         let n = domain.unconstrained_dim();
         let mut out = Vec::with_capacity(1);
         let ladj = bijector::invlink(&domain, &self.theta[off..off + n], &mut out);
         let x = out[0];
-        self.acc.add_prior(dist.logpdf(x) + ladj);
+        let lp = dist.logpdf(x) + ladj;
+        self.acc.add_prior(lp);
+        profile::end_assume(prof, &vn, lp.value(), self.acc.rejected());
         x
     }
 
     fn assume_vec(&mut self, vn: VarName, dist: &VecDist<T>) -> Vec<T> {
+        let prof = profile::begin(self.ctx);
         let (off, domain) = self.lookup(&vn);
         let n = domain.unconstrained_dim();
         let mut out = Vec::with_capacity(domain.constrained_dim());
         let ladj = bijector::invlink(&domain, &self.theta[off..off + n], &mut out);
-        self.acc.add_prior(dist.logpdf(&out) + ladj);
+        let lp = dist.logpdf(&out) + ladj;
+        self.acc.add_prior(lp);
+        profile::end_assume(prof, &vn, lp.value(), self.acc.rejected());
         out
     }
 
     fn assume_int(&mut self, vn: VarName, dist: &DiscreteDist<T>) -> i64 {
+        let prof = profile::begin(self.ctx);
         let rec = self
             .vi
             .get(&vn)
             .unwrap_or_else(|| panic!("variable {vn} not in trace"));
         let k = rec.value.as_int().expect("discrete assume of non-integer");
-        self.acc.add_prior(dist.logpmf(k));
+        let lp = dist.logpmf(k);
+        self.acc.add_prior(lp);
+        profile::end_assume(prof, &vn, lp.value(), self.acc.rejected());
         k
     }
 
     fn observe(&mut self, dist: &ScalarDist<T>, obs: f64) {
+        let prof = profile::begin(self.ctx);
         if self.acc.note_obs() != 0.0 {
-            self.acc.add_lik(dist.logpdf(T::constant(obs)));
+            let lp = dist.logpdf(T::constant(obs));
+            self.acc.add_lik(lp);
+            profile::end_observe(prof, lp.value(), self.acc.rejected());
         }
     }
 
     fn observe_int(&mut self, dist: &DiscreteDist<T>, obs: i64) {
+        let prof = profile::begin(self.ctx);
         if self.acc.note_obs() != 0.0 {
-            self.acc.add_lik(dist.logpmf(obs));
+            let lp = dist.logpmf(obs);
+            self.acc.add_lik(lp);
+            profile::end_observe(prof, lp.value(), self.acc.rejected());
         }
     }
 
     fn observe_vec(&mut self, dist: &VecDist<T>, obs: &[f64]) {
+        let prof = profile::begin(self.ctx);
         if self.acc.note_obs() != 0.0 {
             let obs_t: Vec<T> = obs.iter().map(|&o| T::constant(o)).collect();
-            self.acc.add_lik(dist.logpdf(&obs_t));
+            let lp = dist.logpdf(&obs_t);
+            self.acc.add_lik(lp);
+            profile::end_observe(prof, lp.value(), self.acc.rejected());
         }
     }
 
@@ -939,13 +976,16 @@ impl FusedCore {
         off: usize,
         domain: &Domain,
         dist: &ScalarDist<AVar>,
+        vn: &VarName,
     ) -> AVar {
         self.stmts += 1;
+        let prof = profile::begin(self.ctx);
         let (x, lp, adj, link) = fused_assume_scalar(theta, off, domain, dist);
         let w = self.prior_seed_weight(lp);
         if w != 0.0 {
             seed_assume_scalar(&x, off, dist, &adj, &link, w);
         }
+        profile::end_assume(prof, vn, lp, self.acc.rejected());
         x
     }
 
@@ -955,20 +995,24 @@ impl FusedCore {
         off: usize,
         domain: &Domain,
         dist: &VecDist<AVar>,
+        vn: &VarName,
     ) -> Vec<AVar> {
         self.stmts += 1;
+        let prof = profile::begin(self.ctx);
         let (out, lp, adj, ladj) = fused_assume_vec(theta, off, domain, dist, &mut self.scratch);
         let w = self.prior_seed_weight(lp);
         if w != 0.0 {
             seed_assume_vec(&out, off, domain, &ladj, dist, &adj, &self.scratch.dx, w);
         }
+        profile::end_assume(prof, vn, lp, self.acc.rejected());
         out
     }
 
     /// Score a discrete assume whose value `k` the caller fetched from
     /// its trace representation.
-    fn assume_int(&mut self, k: i64, dist: &DiscreteDist<AVar>) -> i64 {
+    fn assume_int(&mut self, k: i64, dist: &DiscreteDist<AVar>, vn: &VarName) -> i64 {
         self.stmts += 1;
+        let prof = profile::begin(self.ctx);
         let (lp, dp) = dist.logpmf_adj(k);
         let w = self.prior_seed_weight(lp);
         if w != 0.0 {
@@ -976,11 +1020,13 @@ impl FusedCore {
                 arena::seed(p.idx(), dp * w);
             }
         }
+        profile::end_assume(prof, vn, lp, self.acc.rejected());
         k
     }
 
     fn observe(&mut self, dist: &ScalarDist<AVar>, obs: f64) {
         self.stmts += 1;
+        let prof = profile::begin(self.ctx);
         let cw = self.acc.note_obs();
         if cw == 0.0 {
             return; // out-of-window / zero-weight: no kernel, no seeds
@@ -990,10 +1036,12 @@ impl FusedCore {
         if w != 0.0 {
             seed_params_scalar(dist, &adj, w);
         }
+        profile::end_observe(prof, adj.lp, self.acc.rejected());
     }
 
     fn observe_int(&mut self, dist: &DiscreteDist<AVar>, obs: i64) {
         self.stmts += 1;
+        let prof = profile::begin(self.ctx);
         let cw = self.acc.note_obs();
         if cw == 0.0 {
             return;
@@ -1005,10 +1053,12 @@ impl FusedCore {
                 arena::seed(p.idx(), dp * w);
             }
         }
+        profile::end_observe(prof, lp, self.acc.rejected());
     }
 
     fn observe_vec(&mut self, dist: &VecDist<AVar>, obs: &[f64]) {
         self.stmts += 1;
+        let prof = profile::begin(self.ctx);
         let cw = self.acc.note_obs();
         if cw == 0.0 {
             return;
@@ -1025,6 +1075,7 @@ impl FusedCore {
                 }
             });
         }
+        profile::end_observe(prof, adj.lp, self.acc.rejected());
     }
 
     fn add_obs_logp(&mut self, lp: AVar) {
@@ -1102,19 +1153,19 @@ impl<'a> TildeApi<AVar> for TypedFusedExecutor<'a> {
     fn assume(&mut self, vn: VarName, dist: &ScalarDist<AVar>) -> AVar {
         let slot = self.next_slot(&vn);
         self.core
-            .assume_scalar(self.theta, slot.unc_offset, &slot.domain, dist)
+            .assume_scalar(self.theta, slot.unc_offset, &slot.domain, dist, &vn)
     }
 
     fn assume_vec(&mut self, vn: VarName, dist: &VecDist<AVar>) -> Vec<AVar> {
         let slot = self.next_slot(&vn);
         self.core
-            .assume_vec(self.theta, slot.unc_offset, &slot.domain, dist)
+            .assume_vec(self.theta, slot.unc_offset, &slot.domain, dist, &vn)
     }
 
     fn assume_int(&mut self, vn: VarName, dist: &DiscreteDist<AVar>) -> i64 {
         let slot = self.next_slot(&vn);
         let k = self.tvi.discrete[slot.disc_offset];
-        self.core.assume_int(k, dist)
+        self.core.assume_int(k, dist, &vn)
     }
 
     fn observe(&mut self, dist: &ScalarDist<AVar>, obs: f64) {
@@ -1195,12 +1246,12 @@ impl<'a> UntypedFusedExecutor<'a> {
 impl<'a> TildeApi<AVar> for UntypedFusedExecutor<'a> {
     fn assume(&mut self, vn: VarName, dist: &ScalarDist<AVar>) -> AVar {
         let (off, domain) = self.lookup(&vn);
-        self.core.assume_scalar(self.theta, off, &domain, dist)
+        self.core.assume_scalar(self.theta, off, &domain, dist, &vn)
     }
 
     fn assume_vec(&mut self, vn: VarName, dist: &VecDist<AVar>) -> Vec<AVar> {
         let (off, domain) = self.lookup(&vn);
-        self.core.assume_vec(self.theta, off, &domain, dist)
+        self.core.assume_vec(self.theta, off, &domain, dist, &vn)
     }
 
     fn assume_int(&mut self, vn: VarName, dist: &DiscreteDist<AVar>) -> i64 {
@@ -1209,7 +1260,7 @@ impl<'a> TildeApi<AVar> for UntypedFusedExecutor<'a> {
             .get(&vn)
             .unwrap_or_else(|| panic!("variable {vn} not in trace"));
         let k = rec.value.as_int().expect("discrete assume of non-integer");
-        self.core.assume_int(k, dist)
+        self.core.assume_int(k, dist, &vn)
     }
 
     fn observe(&mut self, dist: &ScalarDist<AVar>, obs: f64) {

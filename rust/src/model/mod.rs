@@ -34,6 +34,7 @@ use crate::ad::reverse::TVar;
 use crate::ad::Scalar;
 use crate::context::Context;
 use crate::dist::{DiscreteDist, ScalarDist, VecDist};
+use crate::obs::metrics::{self, Counter};
 use crate::varname::VarName;
 
 /// The tilde-statement interface models are written against.
@@ -175,6 +176,7 @@ pub fn typed_logp(
     theta: &[f64],
     ctx: Context,
 ) -> f64 {
+    metrics::inc(Counter::LogpEvals);
     let mut exec = executors::TypedExecutor::<f64>::new(tvi, theta, ctx);
     model.eval_f64(&mut exec);
     exec.logp()
@@ -187,6 +189,7 @@ pub fn typed_grad_forward(
     theta: &[f64],
     ctx: Context,
 ) -> (f64, Vec<f64>) {
+    metrics::inc(Counter::GradEvals);
     crate::ad::forward::grad_forward(
         |duals| {
             let mut exec = executors::TypedExecutor::<Dual>::new_generic(tvi, duals, ctx);
@@ -209,11 +212,13 @@ pub fn typed_grad_fused_into(
     ctx: Context,
     grad: &mut [f64],
 ) -> f64 {
+    metrics::inc(Counter::GradEvals);
     crate::ad::arena::begin(theta.len());
     let mut exec = executors::TypedFusedExecutor::new(tvi, theta, ctx);
     model.eval_arena(&mut exec);
     let (lp, stmts) = exec.finish();
     if !lp.is_finite() {
+        metrics::inc(Counter::RejectedEvals);
         grad.fill(0.0);
         return lp;
     }
@@ -240,6 +245,7 @@ pub fn typed_grad_reverse(
     theta: &[f64],
     ctx: Context,
 ) -> (f64, Vec<f64>) {
+    metrics::inc(Counter::GradEvals);
     crate::ad::reverse::grad_reverse(
         |tvars| {
             let mut exec = executors::TypedExecutor::<TVar>::new_generic(tvi, tvars, ctx);
@@ -258,6 +264,7 @@ pub fn untyped_logp(
     theta: &[f64],
     ctx: Context,
 ) -> f64 {
+    metrics::inc(Counter::LogpEvals);
     let mut exec = executors::UntypedFlatExecutor::<f64>::new(vi, theta, ctx);
     model.eval_f64(&mut exec);
     exec.logp()
@@ -270,6 +277,7 @@ pub fn untyped_grad_forward(
     theta: &[f64],
     ctx: Context,
 ) -> (f64, Vec<f64>) {
+    metrics::inc(Counter::GradEvals);
     crate::ad::forward::grad_forward(
         |duals| {
             let mut exec = executors::UntypedFlatExecutor::<Dual>::new_generic(vi, duals, ctx);
@@ -289,11 +297,13 @@ pub fn untyped_grad_fused_into(
     ctx: Context,
     grad: &mut [f64],
 ) -> f64 {
+    metrics::inc(Counter::GradEvals);
     crate::ad::arena::begin(theta.len());
     let mut exec = executors::UntypedFusedExecutor::new(vi, theta, ctx);
     model.eval_arena(&mut exec);
     let (lp, stmts) = exec.finish();
     if !lp.is_finite() {
+        metrics::inc(Counter::RejectedEvals);
         grad.fill(0.0);
         return lp;
     }
@@ -320,6 +330,7 @@ pub fn untyped_grad_reverse(
     theta: &[f64],
     ctx: Context,
 ) -> (f64, Vec<f64>) {
+    metrics::inc(Counter::GradEvals);
     crate::ad::reverse::grad_reverse(
         |tvars| {
             let mut exec = executors::UntypedFlatExecutor::<TVar>::new_generic(vi, tvars, ctx);

@@ -1,0 +1,237 @@
+//! Thread-local sharded metrics registry.
+//!
+//! Counters live in a fixed-size per-thread array indexed by the
+//! [`Counter`] enum — no hashing, no locking, no allocation on the hot
+//! path. Instrumented code calls [`inc`]/[`add`]; the chain drivers drain
+//! the calling thread's shard with [`take_local`] at chain join and attach
+//! the snapshot to `SamplerStats.metrics`, so per-chain counts survive the
+//! thread-pool boundary without any cross-thread synchronization.
+//!
+//! Cost model: with the `telemetry` cargo feature off (`cfg!` folds the
+//! guard to a constant) every call compiles to nothing; with the feature
+//! on but the runtime guard off ([`set_enabled`]`(false)`) a call is one
+//! predictable thread-local bool read. Either way nothing here touches an
+//! RNG stream or allocates, so seeded draws are bit-identical with
+//! telemetry on, off, or compiled out.
+//!
+//! Attribution caveat: shards are per thread. Work an algorithm fans out
+//! to *inner* pool threads (e.g. SMC particle propagation with
+//! `threads > 1`) lands in those threads' shards and is not merged into
+//! the driving chain's snapshot.
+
+use std::cell::{Cell, RefCell};
+
+/// The fixed metric catalog. Every counter is a monotone `u64` within one
+/// chain run; derived rates (e.g. arena nodes **per** eval) are computed
+/// at reporting time from the raw sums.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// Plain log-density evaluations through the model entry points.
+    LogpEvals,
+    /// Gradient evaluations (any engine) through the model entry points.
+    GradEvals,
+    /// Evaluations rejected early (−∞ / non-finite log-density).
+    RejectedEvals,
+    /// Arena-fused backward passes.
+    ArenaEvals,
+    /// Arena tape nodes summed over fused backward passes.
+    ArenaNodes,
+    /// Analytic-adjoint seeds summed over fused backward passes.
+    ArenaSeeds,
+    /// Leapfrog steps taken by HMC/NUTS trajectories.
+    LeapfrogSteps,
+    /// Divergent transitions (post-warmup).
+    Divergences,
+    /// NUTS trajectories stopped by the max tree depth (post-warmup).
+    MaxTreedepthHits,
+    /// ESS-triggered particle resampling events.
+    ResampleEvents,
+    /// SMC promotions of the particle cloud to the typed fast path.
+    TypedPromotions,
+    /// SMC demotions back to the boxed path (dynamic structure change).
+    TypedDemotions,
+    /// Minibatch windows drawn by subsampled VI gradient steps.
+    MinibatchWindows,
+    /// η candidates tried by the ADVI step-size ladder search.
+    EtaTrials,
+}
+
+/// Number of counters in the catalog.
+pub const N_COUNTERS: usize = 14;
+
+/// Every counter, in [`Counter`] discriminant order.
+pub const ALL_COUNTERS: [Counter; N_COUNTERS] = [
+    Counter::LogpEvals,
+    Counter::GradEvals,
+    Counter::RejectedEvals,
+    Counter::ArenaEvals,
+    Counter::ArenaNodes,
+    Counter::ArenaSeeds,
+    Counter::LeapfrogSteps,
+    Counter::Divergences,
+    Counter::MaxTreedepthHits,
+    Counter::ResampleEvents,
+    Counter::TypedPromotions,
+    Counter::TypedDemotions,
+    Counter::MinibatchWindows,
+    Counter::EtaTrials,
+];
+
+impl Counter {
+    /// Stable snake_case key — the field name in `METRICS.json`.
+    pub fn key(&self) -> &'static str {
+        match self {
+            Counter::LogpEvals => "logp_evals",
+            Counter::GradEvals => "grad_evals",
+            Counter::RejectedEvals => "rejected_evals",
+            Counter::ArenaEvals => "arena_evals",
+            Counter::ArenaNodes => "arena_nodes",
+            Counter::ArenaSeeds => "arena_seeds",
+            Counter::LeapfrogSteps => "leapfrog_steps",
+            Counter::Divergences => "divergences",
+            Counter::MaxTreedepthHits => "max_treedepth_hits",
+            Counter::ResampleEvents => "resample_events",
+            Counter::TypedPromotions => "typed_promotions",
+            Counter::TypedDemotions => "typed_demotions",
+            Counter::MinibatchWindows => "minibatch_windows",
+            Counter::EtaTrials => "eta_trials",
+        }
+    }
+}
+
+/// An immutable copy of one thread's counter shard — what a chain run
+/// hands back through `SamplerStats.metrics`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    counts: [u64; N_COUNTERS],
+}
+
+impl MetricsSnapshot {
+    pub fn get(&self, c: Counter) -> u64 {
+        self.counts[c as usize]
+    }
+
+    /// All counters are zero (telemetry off, or nothing instrumented ran).
+    pub fn is_empty(&self) -> bool {
+        self.counts.iter().all(|&c| c == 0)
+    }
+
+    /// Element-wise sum — aggregating per-chain snapshots into a run total.
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+    }
+
+    /// Arena tape nodes per fused backward pass (NaN when none ran).
+    pub fn arena_nodes_per_eval(&self) -> f64 {
+        let evals = self.get(Counter::ArenaEvals);
+        if evals == 0 {
+            f64::NAN
+        } else {
+            self.get(Counter::ArenaNodes) as f64 / evals as f64
+        }
+    }
+}
+
+thread_local! {
+    static ENABLED: Cell<bool> = const { Cell::new(true) };
+    static SHARD: RefCell<MetricsSnapshot> = RefCell::new(MetricsSnapshot::default());
+}
+
+/// Whether telemetry is live on this thread: the compile-time `telemetry`
+/// feature AND the runtime guard. `cfg!` keeps both sides type-checked
+/// while folding the whole call to `false` when the feature is off.
+#[inline]
+pub fn enabled() -> bool {
+    cfg!(feature = "telemetry") && ENABLED.with(|e| e.get())
+}
+
+/// Runtime guard for the calling thread (worker threads start enabled).
+pub fn set_enabled(on: bool) {
+    ENABLED.with(|e| e.set(on));
+}
+
+/// Bump a counter by one.
+#[inline]
+pub fn inc(c: Counter) {
+    add(c, 1);
+}
+
+/// Bump a counter by `n`.
+#[inline]
+pub fn add(c: Counter, n: u64) {
+    if !enabled() {
+        return;
+    }
+    SHARD.with(|s| s.borrow_mut().counts[c as usize] += n);
+}
+
+/// Snapshot-and-reset the calling thread's shard: the drain the chain
+/// drivers perform at chain join, scoping counts to one chain run.
+pub fn take_local() -> MetricsSnapshot {
+    if !cfg!(feature = "telemetry") {
+        return MetricsSnapshot::default();
+    }
+    SHARD.with(|s| std::mem::take(&mut *s.borrow_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_is_consistent() {
+        assert_eq!(ALL_COUNTERS.len(), N_COUNTERS);
+        for (i, c) in ALL_COUNTERS.iter().enumerate() {
+            assert_eq!(*c as usize, i, "discriminant order broken at {c:?}");
+            assert!(!c.key().is_empty());
+        }
+        // keys are unique
+        for (i, a) in ALL_COUNTERS.iter().enumerate() {
+            for b in &ALL_COUNTERS[i + 1..] {
+                assert_ne!(a.key(), b.key());
+            }
+        }
+    }
+
+    #[test]
+    fn add_take_roundtrip() {
+        let _ = take_local(); // isolate from other tests on this thread
+        set_enabled(true);
+        inc(Counter::LogpEvals);
+        add(Counter::ArenaNodes, 40);
+        add(Counter::ArenaEvals, 10);
+        let snap = take_local();
+        assert_eq!(snap.get(Counter::LogpEvals), 1);
+        assert_eq!(snap.get(Counter::ArenaNodes), 40);
+        assert_eq!(snap.arena_nodes_per_eval(), 4.0);
+        assert!(!snap.is_empty());
+        // drained: the next snapshot is empty
+        assert!(take_local().is_empty());
+    }
+
+    #[test]
+    fn runtime_guard_blocks_counting() {
+        let _ = take_local();
+        set_enabled(false);
+        inc(Counter::GradEvals);
+        add(Counter::LeapfrogSteps, 100);
+        assert!(take_local().is_empty());
+        set_enabled(true);
+    }
+
+    #[test]
+    fn merge_sums_elementwise() {
+        let _ = take_local();
+        set_enabled(true);
+        inc(Counter::Divergences);
+        let mut a = take_local();
+        add(Counter::Divergences, 2);
+        inc(Counter::EtaTrials);
+        let b = take_local();
+        a.merge(&b);
+        assert_eq!(a.get(Counter::Divergences), 3);
+        assert_eq!(a.get(Counter::EtaTrials), 1);
+    }
+}

@@ -1,0 +1,30 @@
+//! Structured telemetry for the sampler stack (the observability layer).
+//!
+//! Three pieces, threaded through every inference path:
+//!
+//! - [`metrics`] — a thread-local sharded counter registry (logp/grad
+//!   evals, arena nodes+seeds, leapfrog steps, divergences, treedepth
+//!   hits, resampling events, typed promotions/demotions, minibatch
+//!   windows, η-ladder trials). Chain drivers drain the shard at chain
+//!   join into `SamplerStats.metrics`.
+//! - [`profile`] — per-tilde-site profiling under [`Context::Profile`]:
+//!   wall-clock, logp contribution, and −∞-rejection attribution keyed by
+//!   varname, across all four flat executor monomorphizations.
+//! - [`report`] — Stan-parity post-run diagnostics (divergences,
+//!   treedepth saturation, E-BFMI, low ESS / high R̂, VI η-search
+//!   failure) rendered human and exported as `METRICS.json`.
+//!
+//! Cost discipline: everything is gated on the `telemetry` cargo feature
+//! (default-on; `cfg!` folds calls to no-ops when off) plus a per-thread
+//! runtime guard ([`metrics::set_enabled`]). Nothing here touches an RNG
+//! stream, so seeded draws are bit-identical with telemetry on or off.
+//!
+//! [`Context::Profile`]: crate::context::Context::Profile
+
+pub mod metrics;
+pub mod profile;
+pub mod report;
+
+pub use metrics::{Counter, MetricsSnapshot};
+pub use profile::{profile_model, SiteProfile};
+pub use report::{RunReport, Warning};

@@ -1,0 +1,202 @@
+//! Per-tilde-site profiling — the contextual-dispatch showcase.
+//!
+//! Running a model under [`Context::Profile`] makes every flat executor
+//! (typed, untyped, typed-fused, untyped-fused) record one row per tilde
+//! statement into a thread-local collector: wall-clock nanoseconds, the
+//! site's own log-density contribution, and whether the site triggered a
+//! −∞ rejection. Assume sites are keyed by their `VarName`; observe sites
+//! by visit index (`obs[k]`). Under every other context the executors'
+//! instrumentation is a single enum compare — the hot paths never reach
+//! the collector.
+//!
+//! [`profile_model`] is the canonical driver: one instrumented evaluation
+//! through each of the four flat executor monomorphizations, rows tagged
+//! with the path that produced them.
+
+use std::cell::{Cell, RefCell};
+use std::time::Instant;
+
+use crate::context::Context;
+use crate::varname::VarName;
+
+/// One profiled tilde site (aggregated over repeated visits).
+#[derive(Clone, Debug)]
+pub struct SiteProfile {
+    /// Executor path that recorded the row (`typed`, `untyped`,
+    /// `typed+fused`, `untyped+fused`).
+    pub path: &'static str,
+    /// Site key: the assume's `VarName`, or `obs[k]` by visit index.
+    pub site: String,
+    /// Times the site was visited.
+    pub calls: u64,
+    /// Total wall-clock nanoseconds across visits.
+    pub nanos: u64,
+    /// Total log-density contribution across visits.
+    pub logp: f64,
+    /// Visits that left the run rejected (−∞ attribution).
+    pub rejections: u64,
+}
+
+/// Open timing guard for one tilde statement; `None` outside
+/// [`Context::Profile`] so the instrumentation costs one compare.
+pub struct SiteTimer {
+    t0: Instant,
+}
+
+thread_local! {
+    static ROWS: RefCell<Vec<SiteProfile>> = const { RefCell::new(Vec::new()) };
+    static PATH: Cell<&'static str> = const { Cell::new("") };
+    static OBS_IDX: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Start a profiling pass: tag subsequent rows with `path` and restart
+/// the observe-site index.
+pub fn begin_pass(path: &'static str) {
+    PATH.with(|p| p.set(path));
+    OBS_IDX.with(|i| i.set(0));
+}
+
+/// Start timing one tilde statement. Returns `None` (and does nothing)
+/// unless the evaluation runs under [`Context::Profile`] with the
+/// `telemetry` feature compiled in.
+#[inline]
+pub fn begin(ctx: Context) -> Option<SiteTimer> {
+    if cfg!(feature = "telemetry") && ctx == Context::Profile {
+        Some(SiteTimer { t0: Instant::now() })
+    } else {
+        None
+    }
+}
+
+/// Close an assume-site timing, keyed by the variable name.
+#[inline]
+pub fn end_assume(t: Option<SiteTimer>, vn: &VarName, logp: f64, rejected: bool) {
+    if let Some(t) = t {
+        record(vn.to_string(), t.t0.elapsed().as_nanos() as u64, logp, rejected);
+    }
+}
+
+/// Close an observe-site timing, keyed by visit index.
+#[inline]
+pub fn end_observe(t: Option<SiteTimer>, logp: f64, rejected: bool) {
+    if let Some(t) = t {
+        let idx = OBS_IDX.with(|i| {
+            let k = i.get();
+            i.set(k + 1);
+            k
+        });
+        record(format!("obs[{idx}]"), t.t0.elapsed().as_nanos() as u64, logp, rejected);
+    }
+}
+
+fn record(site: String, nanos: u64, logp: f64, rejected: bool) {
+    let path = PATH.with(|p| p.get());
+    ROWS.with(|rows| {
+        let mut rows = rows.borrow_mut();
+        if let Some(r) = rows.iter_mut().find(|r| r.path == path && r.site == site) {
+            r.calls += 1;
+            r.nanos += nanos;
+            r.logp += logp;
+            r.rejections += u64::from(rejected);
+        } else {
+            rows.push(SiteProfile {
+                path,
+                site,
+                calls: 1,
+                nanos,
+                logp,
+                rejections: u64::from(rejected),
+            });
+        }
+    });
+}
+
+/// Drain the calling thread's collected rows.
+pub fn take_rows() -> Vec<SiteProfile> {
+    ROWS.with(|rows| std::mem::take(&mut *rows.borrow_mut()))
+}
+
+/// One instrumented evaluation through each of the four flat executor
+/// monomorphizations at the same unconstrained point: typed and untyped
+/// plain log-density, typed and untyped arena-fused gradient. The untyped
+/// passes rebuild a boxed trace from the model's prior (`seed`) purely for
+/// its structure; they are skipped if its layout disagrees with `theta`
+/// (dynamic structure change since specialization).
+pub fn profile_model(
+    model: &dyn crate::model::Model,
+    tvi: &crate::varinfo::TypedVarInfo,
+    theta: &[f64],
+    seed: u64,
+) -> Vec<SiteProfile> {
+    let _ = take_rows(); // isolate from any prior collection on this thread
+    let mut grad = vec![0.0; theta.len()];
+
+    begin_pass("typed");
+    let _ = crate::model::typed_logp(model, tvi, theta, Context::Profile);
+    begin_pass("typed+fused");
+    let _ = crate::model::typed_grad_fused_into(model, tvi, theta, Context::Profile, &mut grad);
+
+    let mut rng = crate::util::rng::Xoshiro256pp::seed_from_u64(seed);
+    let uvi = crate::model::init_trace(model, &mut rng);
+    if uvi.num_unconstrained() == theta.len() {
+        begin_pass("untyped");
+        let _ = crate::model::untyped_logp(model, &uvi, theta, Context::Profile);
+        begin_pass("untyped+fused");
+        let _ =
+            crate::model::untyped_grad_fused_into(model, &uvi, theta, Context::Profile, &mut grad);
+    }
+    take_rows()
+}
+
+/// Render profile rows as an aligned human-readable table.
+pub fn render_profile(rows: &[SiteProfile]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<14} {:<16} {:>6} {:>12} {:>12} {:>6}",
+        "path", "site", "calls", "ns total", "logp", "rej"
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{:<14} {:<16} {:>6} {:>12} {:>12.4} {:>6}",
+            r.path, r.site, r.calls, r.nanos, r.logp, r.rejections
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn non_profile_contexts_record_nothing() {
+        let _ = take_rows();
+        assert!(begin(Context::Default).is_none());
+        assert!(begin(Context::Likelihood).is_none());
+        end_assume(None, &crate::varname::VarName::new("x"), -1.0, false);
+        end_observe(None, -2.0, false);
+        assert!(take_rows().is_empty());
+    }
+
+    #[test]
+    fn profile_rows_aggregate_by_site() {
+        let _ = take_rows();
+        begin_pass("typed");
+        let vn = crate::varname::VarName::new("mu");
+        end_assume(begin(Context::Profile), &vn, -0.5, false);
+        end_assume(begin(Context::Profile), &vn, -0.25, true);
+        end_observe(begin(Context::Profile), -2.0, false);
+        let rows = take_rows();
+        assert_eq!(rows.len(), 2);
+        let mu = rows.iter().find(|r| r.site == "mu").unwrap();
+        assert_eq!(mu.calls, 2);
+        assert_eq!(mu.rejections, 1);
+        assert!((mu.logp + 0.75).abs() < 1e-12);
+        assert!(rows.iter().any(|r| r.site == "obs[0]"));
+        // drained
+        assert!(take_rows().is_empty());
+    }
+}

@@ -1,0 +1,499 @@
+//! Stan-parity post-run diagnostics: structured warnings, a human report,
+//! and the machine-readable `METRICS.json` payload.
+//!
+//! [`RunReport::from_chains`] folds a [`MultiChain`] (plus optional
+//! per-site profile rows) into one structure; [`RunReport::render_human`]
+//! and [`RunReport::to_json`] render that same structure, so the human and
+//! machine outputs can never drift apart.
+
+use std::fmt::Write as _;
+
+use crate::chain::MultiChain;
+
+use super::metrics::{Counter, MetricsSnapshot, ALL_COUNTERS};
+use super::profile::SiteProfile;
+
+/// E-BFMI warning threshold (Betancourt 2016; Stan warns below 0.3).
+pub const EBFMI_WARN: f64 = 0.3;
+/// Bulk-ESS warning threshold (Stan's rule of thumb: 100 per chain set).
+pub const ESS_WARN: f64 = 100.0;
+/// Split-R̂ warning threshold (Vehtari et al. 2021).
+pub const RHAT_WARN: f64 = 1.01;
+
+/// Energy–Bayesian-fraction-of-missing-information of one chain's
+/// per-iteration Hamiltonian series: Σ(E_i − E_{i−1})² / Σ(E_i − Ē)².
+/// `NaN` when fewer than two energies were recorded (non-HMC samplers,
+/// or telemetry disabled).
+pub fn ebfmi(energies: &[f64]) -> f64 {
+    if energies.len() < 2 {
+        return f64::NAN;
+    }
+    let n = energies.len() as f64;
+    let mean = energies.iter().sum::<f64>() / n;
+    let num: f64 = energies.windows(2).map(|w| (w[1] - w[0]).powi(2)).sum();
+    let den: f64 = energies.iter().map(|e| (e - mean).powi(2)).sum();
+    if den == 0.0 {
+        f64::NAN
+    } else {
+        num / den
+    }
+}
+
+/// One post-run diagnostic warning.
+#[derive(Clone, Debug)]
+pub enum Warning {
+    /// Post-warmup divergent transitions (chain-indexed location).
+    Divergences { chain: usize, count: usize },
+    /// NUTS trajectories stopped by the maximum tree depth.
+    TreedepthSaturation { chain: usize, count: usize },
+    /// E-BFMI below [`EBFMI_WARN`]: heavy-tailed energy marginal.
+    LowEbfmi { chain: usize, ebfmi: f64 },
+    /// Effective sample size below [`ESS_WARN`].
+    LowEss { param: String, ess: f64 },
+    /// Split-R̂ above [`RHAT_WARN`].
+    HighRhat { param: String, rhat: f64 },
+    /// The ADVI η ladder found no finite candidate.
+    EtaSearchFailed { chain: usize },
+}
+
+impl Warning {
+    /// Stable machine key for the warning class.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Warning::Divergences { .. } => "divergences",
+            Warning::TreedepthSaturation { .. } => "max_treedepth",
+            Warning::LowEbfmi { .. } => "low_ebfmi",
+            Warning::LowEss { .. } => "low_ess",
+            Warning::HighRhat { .. } => "high_rhat",
+            Warning::EtaSearchFailed { .. } => "eta_search_failed",
+        }
+    }
+
+    /// Stan-flavored human message.
+    pub fn message(&self) -> String {
+        match self {
+            Warning::Divergences { chain, count } => format!(
+                "chain {chain}: {count} post-warmup divergent transition(s) — \
+                 the posterior may have high curvature; consider a smaller \
+                 step size or a reparameterization"
+            ),
+            Warning::TreedepthSaturation { chain, count } => format!(
+                "chain {chain}: {count} transition(s) hit the maximum tree \
+                 depth — increase max_depth or reparameterize"
+            ),
+            Warning::LowEbfmi { chain, ebfmi } => format!(
+                "chain {chain}: E-BFMI = {ebfmi:.3} < {EBFMI_WARN} — momentum \
+                 resampling is exploring the energy marginal poorly"
+            ),
+            Warning::LowEss { param, ess } => format!(
+                "parameter {param}: ESS = {ess:.1} < {ESS_WARN} — estimates \
+                 may be unreliable; run longer chains"
+            ),
+            Warning::HighRhat { param, rhat } => format!(
+                "parameter {param}: split-R\u{302} = {rhat:.3} > {RHAT_WARN} — \
+                 chains have not mixed"
+            ),
+            Warning::EtaSearchFailed { chain } => format!(
+                "chain {chain}: ADVI η ladder search failed — fit used the \
+                 smallest candidate step size and may not have converged"
+            ),
+        }
+    }
+}
+
+/// Per-chain sampler diagnostics.
+#[derive(Clone, Debug)]
+pub struct ChainReport {
+    pub chain: usize,
+    pub accept_rate: f64,
+    pub step_size: f64,
+    pub divergences: usize,
+    pub max_treedepth_hits: usize,
+    pub n_grad_evals: u64,
+    pub wall_secs: f64,
+    pub warmup_secs: f64,
+    pub sampling_secs: f64,
+    /// `NaN` when the sampler recorded no energies.
+    pub ebfmi: f64,
+    pub eta_search_failed: bool,
+    pub metrics: MetricsSnapshot,
+}
+
+/// Per-parameter convergence diagnostics.
+#[derive(Clone, Debug)]
+pub struct ParamDiag {
+    pub name: String,
+    pub rhat: f64,
+    /// Total ESS summed over chains.
+    pub ess: f64,
+}
+
+/// The complete post-run report: one structure behind both the human
+/// rendering and `METRICS.json`.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub model: String,
+    pub sampler: String,
+    pub chains: Vec<ChainReport>,
+    pub params: Vec<ParamDiag>,
+    pub log_evidence: Option<f64>,
+    pub warnings: Vec<Warning>,
+    pub profile: Vec<SiteProfile>,
+}
+
+impl RunReport {
+    /// Build the report from sampled chains (+ optional profile rows).
+    pub fn from_chains(
+        model: &str,
+        sampler: &str,
+        mc: &MultiChain,
+        profile: Vec<SiteProfile>,
+    ) -> Self {
+        let mut chains = Vec::with_capacity(mc.chains.len());
+        let mut warnings = Vec::new();
+        for (i, c) in mc.chains.iter().enumerate() {
+            let s = &c.stats;
+            let e = ebfmi(&s.energies);
+            if s.divergences > 0 {
+                warnings.push(Warning::Divergences {
+                    chain: i,
+                    count: s.divergences,
+                });
+            }
+            if s.max_treedepth_hits > 0 {
+                warnings.push(Warning::TreedepthSaturation {
+                    chain: i,
+                    count: s.max_treedepth_hits,
+                });
+            }
+            if e.is_finite() && e < EBFMI_WARN {
+                warnings.push(Warning::LowEbfmi { chain: i, ebfmi: e });
+            }
+            if s.eta_search_failed {
+                warnings.push(Warning::EtaSearchFailed { chain: i });
+            }
+            chains.push(ChainReport {
+                chain: i,
+                accept_rate: s.accept_rate,
+                step_size: s.step_size,
+                divergences: s.divergences,
+                max_treedepth_hits: s.max_treedepth_hits,
+                n_grad_evals: s.n_grad_evals,
+                wall_secs: s.wall_secs,
+                warmup_secs: s.warmup_secs,
+                sampling_secs: s.sampling_secs,
+                ebfmi: e,
+                eta_search_failed: s.eta_search_failed,
+                metrics: s.metrics.clone(),
+            });
+        }
+
+        let mut params = Vec::new();
+        for name in mc.chains[0].names() {
+            let rhat = mc.rhat(name).unwrap_or(f64::NAN);
+            let ess = mc.ess(name).unwrap_or(f64::NAN);
+            if rhat.is_finite() && rhat > RHAT_WARN {
+                warnings.push(Warning::HighRhat {
+                    param: name.clone(),
+                    rhat,
+                });
+            }
+            if ess.is_finite() && ess < ESS_WARN {
+                warnings.push(Warning::LowEss {
+                    param: name.clone(),
+                    ess,
+                });
+            }
+            params.push(ParamDiag {
+                name: name.clone(),
+                rhat,
+                ess,
+            });
+        }
+
+        Self {
+            model: model.to_string(),
+            sampler: sampler.to_string(),
+            chains,
+            params,
+            log_evidence: mc.log_evidence(),
+            warnings,
+            profile,
+        }
+    }
+
+    /// Human rendering: summary table, per-chain line, diagnostics,
+    /// warnings — the coordinator's default output.
+    pub fn render_human(&self, mc: &MultiChain) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", mc.chains[0].summary());
+        let _ = writeln!(
+            out,
+            "model: {}  sampler: {}  chains: {}",
+            self.model,
+            self.sampler,
+            self.chains.len()
+        );
+        for c in &self.chains {
+            let _ = writeln!(
+                out,
+                "  chain {}: accept={:.2} divergences={} treedepth_hits={} grad_evals={} \
+                 wall={:.2}s (warmup {:.2}s + sampling {:.2}s){}",
+                c.chain,
+                c.accept_rate,
+                c.divergences,
+                c.max_treedepth_hits,
+                c.n_grad_evals,
+                c.wall_secs,
+                c.warmup_secs,
+                c.sampling_secs,
+                if c.ebfmi.is_finite() {
+                    format!(" ebfmi={:.2}", c.ebfmi)
+                } else {
+                    String::new()
+                },
+            );
+            if !c.metrics.is_empty() {
+                let m = &c.metrics;
+                let _ = writeln!(
+                    out,
+                    "    metrics: logp_evals={} grad_evals={} leapfrog_steps={} \
+                     arena_nodes/eval={:.1} rejected_evals={}",
+                    m.get(Counter::LogpEvals),
+                    m.get(Counter::GradEvals),
+                    m.get(Counter::LeapfrogSteps),
+                    if m.arena_nodes_per_eval().is_finite() {
+                        m.arena_nodes_per_eval()
+                    } else {
+                        0.0
+                    },
+                    m.get(Counter::RejectedEvals),
+                );
+            }
+        }
+        for p in self.params.iter().take(8) {
+            if p.rhat.is_finite() {
+                let _ = writeln!(out, "  R\u{302}({}) = {:.4}  ESS = {:.1}", p.name, p.rhat, p.ess);
+            }
+        }
+        if let Some(lz) = self.log_evidence {
+            let _ = writeln!(out, "  log Z\u{302} = {lz:.4}");
+        }
+        if !self.profile.is_empty() {
+            let _ = writeln!(out, "\nper-site profile:");
+            out.push_str(&super::profile::render_profile(&self.profile));
+        }
+        if self.warnings.is_empty() {
+            let _ = writeln!(out, "\nno diagnostic warnings.");
+        } else {
+            let _ = writeln!(out, "\nwarnings:");
+            for w in &self.warnings {
+                let _ = writeln!(out, "  [{}] {}", w.kind(), w.message());
+            }
+        }
+        out
+    }
+
+    /// The `METRICS.json` payload (hand-rolled — no serde in the offline
+    /// dependency set; non-finite numbers map to `null`).
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        let _ = write!(
+            out,
+            "{{\n  \"model\": \"{}\",\n  \"sampler\": \"{}\",\n  \"n_chains\": {},\n  \"chains\": [\n",
+            jstr(&self.model),
+            jstr(&self.sampler),
+            self.chains.len()
+        );
+        for (i, c) in self.chains.iter().enumerate() {
+            let _ = write!(
+                out,
+                "    {{\"chain\": {}, \"accept_rate\": {}, \"step_size\": {}, \
+                 \"divergences\": {}, \"max_treedepth_hits\": {}, \"n_grad_evals\": {}, \
+                 \"wall_secs\": {}, \"warmup_secs\": {}, \"sampling_secs\": {}, \
+                 \"ebfmi\": {}, \"eta_search_failed\": {}, \"metrics\": {{",
+                c.chain,
+                jnum(c.accept_rate),
+                jnum(c.step_size),
+                c.divergences,
+                c.max_treedepth_hits,
+                c.n_grad_evals,
+                jnum(c.wall_secs),
+                jnum(c.warmup_secs),
+                jnum(c.sampling_secs),
+                jnum(c.ebfmi),
+                c.eta_search_failed,
+            );
+            for (j, counter) in ALL_COUNTERS.iter().enumerate() {
+                if j > 0 {
+                    out.push_str(", ");
+                }
+                let _ = write!(out, "\"{}\": {}", counter.key(), c.metrics.get(*counter));
+            }
+            let _ = write!(
+                out,
+                ", \"arena_nodes_per_eval\": {}}}}}",
+                jnum(c.metrics.arena_nodes_per_eval())
+            );
+            out.push_str(if i + 1 < self.chains.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("  ],\n  \"params\": [\n");
+        for (i, p) in self.params.iter().enumerate() {
+            let _ = write!(
+                out,
+                "    {{\"name\": \"{}\", \"rhat\": {}, \"ess\": {}}}",
+                jstr(&p.name),
+                jnum(p.rhat),
+                jnum(p.ess)
+            );
+            out.push_str(if i + 1 < self.params.len() { ",\n" } else { "\n" });
+        }
+        let _ = write!(
+            out,
+            "  ],\n  \"log_evidence\": {},\n  \"profile\": [\n",
+            self.log_evidence.map_or("null".to_string(), jnum)
+        );
+        for (i, r) in self.profile.iter().enumerate() {
+            let _ = write!(
+                out,
+                "    {{\"path\": \"{}\", \"site\": \"{}\", \"calls\": {}, \
+                 \"nanos\": {}, \"logp\": {}, \"rejections\": {}}}",
+                jstr(r.path),
+                jstr(&r.site),
+                r.calls,
+                r.nanos,
+                jnum(r.logp),
+                r.rejections
+            );
+            out.push_str(if i + 1 < self.profile.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("  ],\n  \"warnings\": [\n");
+        for (i, w) in self.warnings.iter().enumerate() {
+            let _ = write!(
+                out,
+                "    {{\"kind\": \"{}\", \"message\": \"{}\"}}",
+                w.kind(),
+                jstr(&w.message())
+            );
+            out.push_str(if i + 1 < self.warnings.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+fn jnum(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Minimal JSON string escape (quotes, backslashes, newlines).
+fn jstr(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chain::Chain;
+
+    fn chain_with(f: impl Fn(&mut Chain)) -> Chain {
+        let mut c = Chain::new(vec!["x".into()]);
+        let mut v = 0.13;
+        for _ in 0..400 {
+            // a deterministic low-autocorrelation series: ESS is healthy
+            v = (v * 997.0).sin();
+            c.push(vec![v], -v * v);
+        }
+        f(&mut c);
+        c
+    }
+
+    #[test]
+    fn ebfmi_matches_definition() {
+        assert!(ebfmi(&[]).is_nan());
+        assert!(ebfmi(&[1.0]).is_nan());
+        // constant energies: zero denominator
+        assert!(ebfmi(&[2.0, 2.0, 2.0]).is_nan());
+        let e = [1.0, 2.0, 4.0];
+        // mean 7/3; num = 1 + 4 = 5; den = (−4/3)² + (−1/3)² + (5/3)²
+        let den = (16.0 + 1.0 + 25.0) / 9.0;
+        assert!((ebfmi(&e) - 5.0 / den).abs() < 1e-12);
+    }
+
+    #[test]
+    fn warnings_fire_on_bad_chains() {
+        let a = chain_with(|c| {
+            c.stats.divergences = 3;
+            c.stats.max_treedepth_hits = 2;
+            c.stats.eta_search_failed = true;
+            // oscillating energy: high E-BFMI (no warning); low E-BFMI
+            // needs a slowly-drifting series instead
+            c.stats.energies = (0..100).map(|i| (i as f64) * 0.1).collect();
+        });
+        let b = chain_with(|_| {});
+        let mc = MultiChain::new(vec![a, b]);
+        let rep = RunReport::from_chains("demo", "nuts", &mc, Vec::new());
+        let kinds: Vec<&str> = rep.warnings.iter().map(|w| w.kind()).collect();
+        assert!(kinds.contains(&"divergences"), "{kinds:?}");
+        assert!(kinds.contains(&"max_treedepth"), "{kinds:?}");
+        assert!(kinds.contains(&"eta_search_failed"), "{kinds:?}");
+        // the linear-drift energy series has tiny squared jumps relative
+        // to its variance → E-BFMI far below 0.3
+        assert!(kinds.contains(&"low_ebfmi"), "{kinds:?}");
+        assert!(rep.chains[0].ebfmi < EBFMI_WARN);
+        assert!(rep.chains[1].ebfmi.is_nan());
+    }
+
+    #[test]
+    fn clean_chains_report_no_warnings() {
+        let mc = MultiChain::new(vec![chain_with(|_| {}), chain_with(|_| {})]);
+        let rep = RunReport::from_chains("demo", "hmc", &mc, Vec::new());
+        assert!(rep.warnings.is_empty(), "{:?}", rep.warnings);
+        let human = rep.render_human(&mc);
+        assert!(human.contains("no diagnostic warnings"));
+        assert!(human.contains("warmup"));
+    }
+
+    #[test]
+    fn json_payload_is_balanced_and_keyed() {
+        let a = chain_with(|c| {
+            c.stats.divergences = 1;
+            c.stats.warmup_secs = 0.5;
+            c.stats.sampling_secs = 1.5;
+        });
+        let mc = MultiChain::new(vec![a]);
+        let profile = vec![SiteProfile {
+            path: "typed",
+            site: "mu".into(),
+            calls: 1,
+            nanos: 42,
+            logp: -0.5,
+            rejections: 0,
+        }];
+        let rep = RunReport::from_chains("demo", "nuts", &mc, profile);
+        let json = rep.to_json();
+        for key in [
+            "\"divergences\"",
+            "\"grad_evals\"",
+            "\"typed_promotions\"",
+            "\"arena_nodes\"",
+            "\"arena_nodes_per_eval\"",
+            "\"warmup_secs\"",
+            "\"sampling_secs\"",
+            "\"ebfmi\"",
+            "\"profile\"",
+            "\"site\": \"mu\"",
+            "\"kind\": \"divergences\"",
+        ] {
+            assert!(json.contains(key), "missing {key} in:\n{json}");
+        }
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+        assert!(!json.contains(",\n  ]"));
+        assert!(!json.contains("NaN"));
+    }
+}

@@ -51,6 +51,7 @@ use crate::context::Context;
 use crate::gradient::{Backend, LogDensity, NativeDensity};
 use crate::inference::RawDraws;
 use crate::model::Model;
+use crate::obs::metrics::{self, Counter};
 use crate::varinfo::TypedVarInfo;
 
 /// ADVI configuration. Defaults mirror Stan's `variational` mode scaled
@@ -232,11 +233,15 @@ impl ViFit {
             logps,
             stats: SamplerStats {
                 accept_rate: 1.0,
-                divergences: 0,
                 step_size: self.eta,
                 n_grad_evals: self.n_grad_evals,
                 wall_secs: self.wall_secs,
+                // the optimization *is* ADVI's warmup; posterior draws
+                // from the fitted q are effectively free and untimed
+                warmup_secs: self.wall_secs,
+                eta_search_failed: self.eta_search_failed,
                 log_evidence: self.elbo,
+                ..SamplerStats::default()
             },
         }
     }
@@ -319,6 +324,7 @@ impl Advi {
                 let fallback = ETA_CANDIDATES.iter().copied().fold(f64::INFINITY, f64::min);
                 let mut best: Option<(f64, f64)> = None; // (elbo, eta)
                 for &cand in &ETA_CANDIDATES {
+                    metrics::inc(Counter::EtaTrials);
                     // common random numbers: every candidate replays the
                     // same stream from the search entry point
                     let mut probe_rng = rng.clone();
@@ -481,7 +487,10 @@ impl Advi {
         s: &mut FitScratch,
         n_grad: &mut u64,
     ) -> bool {
-        let block_ld = mb.map(|t| t.block(draw_block(rng, t.n_blocks())));
+        let block_ld = mb.map(|t| {
+            metrics::inc(Counter::MinibatchWindows);
+            t.block(draw_block(rng, t.n_blocks()))
+        });
         let ld: &dyn LogDensity = match &block_ld {
             Some(b) => b,
             None => full,

@@ -1,0 +1,295 @@
+//! Observability integration tests: seeded runs must trigger each
+//! Stan-parity warning deterministically, telemetry must be free when
+//! disabled (bit-identical draws, no arena growth), and the structured
+//! counters must survive the trip from sampler to `METRICS.json`.
+
+use dynamicppl::chain::{Chain, MultiChain};
+use dynamicppl::gradient::NativeDensity;
+use dynamicppl::inference::{sample_chain, sample_smc_chain, Hmc, Nuts, SamplerKind, Smc};
+use dynamicppl::model::init_typed;
+use dynamicppl::models::gauss::gauss_unknown_n;
+use dynamicppl::obs::metrics::{self, Counter};
+use dynamicppl::obs::profile::profile_model;
+use dynamicppl::obs::report::RunReport;
+use dynamicppl::prelude::*;
+
+fn warning_kinds(rep: &RunReport) -> Vec<&'static str> {
+    rep.warnings.iter().map(|w| w.kind()).collect()
+}
+
+#[test]
+fn oversized_steps_trigger_the_divergence_warning() {
+    // a fixed ε = 5 on a 500-observation posterior explodes every
+    // trajectory: the divergence counter and its warning must fire
+    let bm = gauss_unknown_n(1, 500);
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+    let tvi = init_typed(bm.model.as_ref(), &mut rng);
+    let ld = NativeDensity::fused(bm.model.as_ref(), &tvi);
+    let chain = sample_chain(&ld, &tvi, &SamplerKind::Hmc(Hmc::paper(5.0)), 0, 50, 3);
+    assert!(chain.stats.divergences > 0, "no divergences at ε = 5");
+    assert_eq!(
+        chain.stats.metrics.get(Counter::Divergences),
+        chain.stats.divergences as u64,
+        "counter must agree with the sampler stat"
+    );
+    assert!(chain.stats.metrics.get(Counter::GradEvals) > 0);
+    assert!(chain.stats.metrics.get(Counter::LeapfrogSteps) > 0);
+    let mc = MultiChain::new(vec![chain]);
+    let rep = RunReport::from_chains("gauss_unknown", "hmc", &mc, Vec::new());
+    assert!(
+        warning_kinds(&rep).contains(&"divergences"),
+        "{:?}",
+        rep.warnings
+    );
+}
+
+#[test]
+fn shallow_trees_trigger_the_treedepth_warning() {
+    // a tiny fixed ε cannot U-turn within two doublings: every post-warmup
+    // transition saturates max_depth
+    let bm = gauss_unknown_n(2, 100);
+    let mut rng = Xoshiro256pp::seed_from_u64(2);
+    let tvi = init_typed(bm.model.as_ref(), &mut rng);
+    let ld = NativeDensity::fused(bm.model.as_ref(), &tvi);
+    let nuts = Nuts {
+        step_size: 1e-4,
+        max_depth: 2,
+        init_step_size: false,
+        ..Nuts::default()
+    };
+    let chain = sample_chain(&ld, &tvi, &SamplerKind::Nuts(nuts), 0, 30, 5);
+    assert!(chain.stats.max_treedepth_hits > 0, "no treedepth saturation");
+    assert_eq!(
+        chain.stats.metrics.get(Counter::MaxTreedepthHits),
+        chain.stats.max_treedepth_hits as u64
+    );
+    let mc = MultiChain::new(vec![chain]);
+    let rep = RunReport::from_chains("gauss_unknown", "nuts", &mc, Vec::new());
+    assert!(
+        warning_kinds(&rep).contains(&"max_treedepth"),
+        "{:?}",
+        rep.warnings
+    );
+}
+
+#[test]
+fn degenerate_chains_trigger_ess_and_rhat_warnings() {
+    // two slow linear ramps with separated means: autocorrelation ≈ 1
+    // (tiny ESS) and disjoint chain supports (huge split-R̂)
+    let mut a = Chain::new(vec!["x".into()]);
+    let mut b = Chain::new(vec!["x".into()]);
+    for i in 0..400 {
+        a.push(vec![(i as f64) * 0.001], 0.0);
+        b.push(vec![5.0 + (i as f64) * 0.001], 0.0);
+    }
+    let mc = MultiChain::new(vec![a, b]);
+    let rep = RunReport::from_chains("demo", "mh", &mc, Vec::new());
+    let kinds = warning_kinds(&rep);
+    assert!(kinds.contains(&"high_rhat"), "{kinds:?}");
+    assert!(kinds.contains(&"low_ess"), "{kinds:?}");
+}
+
+#[test]
+fn draws_are_bit_identical_with_telemetry_disabled() {
+    // the runtime kill switch must change *nothing* about the sampled
+    // stream — counters and energies only appear while it is on
+    let bm = gauss_unknown_n(3, 200);
+    let mut rng = Xoshiro256pp::seed_from_u64(9);
+    let tvi = init_typed(bm.model.as_ref(), &mut rng);
+    let ld = NativeDensity::fused(bm.model.as_ref(), &tvi);
+    let run = || sample_chain(&ld, &tvi, &SamplerKind::Nuts(Nuts::default()), 200, 300, 7);
+
+    let on = run();
+    assert!(!on.stats.metrics.is_empty(), "telemetry on but no counters");
+    assert!(!on.stats.energies.is_empty(), "telemetry on but no energies");
+
+    metrics::set_enabled(false);
+    let off = run();
+    metrics::set_enabled(true);
+    assert!(off.stats.metrics.is_empty(), "counters leaked while disabled");
+    assert!(off.stats.energies.is_empty(), "energies leaked while disabled");
+
+    assert_eq!(on.len(), off.len());
+    for (ra, rb) in on.rows().iter().zip(off.rows().iter()) {
+        for (x, y) in ra.iter().zip(rb.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "draws differ with telemetry off");
+        }
+    }
+    for (x, y) in on.logp.iter().zip(&off.logp) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}
+
+#[test]
+fn disabled_telemetry_adds_no_arena_allocation() {
+    // with the runtime guard off, repeated fused gradients must leave the
+    // arena tape at steady-state capacity (the PR-3 zero-alloc guarantee)
+    let bm = gauss_unknown_n(4, 100);
+    let mut rng = Xoshiro256pp::seed_from_u64(4);
+    let tvi = init_typed(bm.model.as_ref(), &mut rng);
+    let theta = tvi.unconstrained.clone();
+    let mut grad = vec![0.0; theta.len()];
+    metrics::set_enabled(false);
+    for _ in 0..3 {
+        let _ = dynamicppl::model::typed_grad_fused_into(
+            bm.model.as_ref(),
+            &tvi,
+            &theta,
+            dynamicppl::context::Context::Default,
+            &mut grad,
+        );
+    }
+    let cap = dynamicppl::ad::arena::capacity_bytes();
+    for _ in 0..50 {
+        let _ = dynamicppl::model::typed_grad_fused_into(
+            bm.model.as_ref(),
+            &tvi,
+            &theta,
+            dynamicppl::context::Context::Default,
+            &mut grad,
+        );
+    }
+    assert_eq!(
+        dynamicppl::ad::arena::capacity_bytes(),
+        cap,
+        "arena grew during disabled-telemetry gradient evaluations"
+    );
+    metrics::set_enabled(true);
+    assert!(metrics::take_local().is_empty());
+}
+
+#[test]
+fn smc_metrics_record_promotion_and_resampling() {
+    model! {
+        pub ObsSmc { y: Vec<f64>, }
+        fn body<T>(this, api) {
+            let m = tilde!(api, m ~ Normal(c(0.0), c(1.0)));
+            for &yi in &this.y {
+                obs!(api, yi => Normal(m, c(0.5)));
+            }
+        }
+    }
+    let m = ObsSmc {
+        y: vec![0.3, -0.2, 0.4, 0.1],
+    };
+    let smc = Smc {
+        n_particles: 64,
+        ess_threshold: 1.0, // resample every step
+        ..Smc::default()
+    };
+    let chain = sample_smc_chain(&m, &smc, 17);
+    let snap = &chain.stats.metrics;
+    assert_eq!(snap.get(Counter::TypedPromotions), 1, "static model must promote");
+    assert_eq!(snap.get(Counter::TypedDemotions), 0);
+    assert!(snap.get(Counter::ResampleEvents) >= 1, "threshold 1.0 must resample");
+    // the promotion/demotion counters must survive into METRICS.json
+    let mc = MultiChain::new(vec![chain]);
+    let rep = RunReport::from_chains("obs_smc", "smc", &mc, Vec::new());
+    let json = rep.to_json();
+    assert!(json.contains("\"typed_promotions\": 1"), "{json}");
+    assert!(json.contains("\"resample_events\""));
+    assert!(json.contains("\"log_evidence\""));
+}
+
+#[test]
+fn advi_metrics_count_eta_trials() {
+    let bm = gauss_unknown_n(5, 100);
+    let mut rng = Xoshiro256pp::seed_from_u64(5);
+    let tvi = init_typed(bm.model.as_ref(), &mut rng);
+    let ld = NativeDensity::fused(bm.model.as_ref(), &tvi);
+    let chain = sample_chain(
+        &ld,
+        &tvi,
+        &SamplerKind::Advi(dynamicppl::vi::Advi::default()),
+        0,
+        200,
+        21,
+    );
+    let snap = &chain.stats.metrics;
+    assert_eq!(
+        snap.get(Counter::EtaTrials),
+        dynamicppl::vi::ETA_CANDIDATES.len() as u64,
+        "the default fit runs the full η ladder once"
+    );
+    assert!(snap.get(Counter::GradEvals) > 0);
+    assert!(snap.get(Counter::ArenaEvals) > 0, "fused fit must hit the arena");
+    assert!(snap.arena_nodes_per_eval().is_finite());
+}
+
+#[test]
+fn profile_model_attributes_sites_across_all_four_paths() {
+    model! {
+        pub ObsProf { y: Vec<f64>, }
+        fn body<T>(this, api) {
+            let mu = tilde!(api, mu ~ Normal(c(0.0), c(1.0)));
+            for &yi in &this.y {
+                obs!(api, yi => Normal(mu, c(1.0)));
+            }
+        }
+    }
+    let m = ObsProf { y: vec![0.5, -0.5] };
+    let mut rng = Xoshiro256pp::seed_from_u64(11);
+    let tvi = init_typed(&m, &mut rng);
+    let theta = tvi.unconstrained.clone();
+    let rows = profile_model(&m, &tvi, &theta, 11);
+    for path in ["typed", "typed+fused", "untyped", "untyped+fused"] {
+        let mu = rows
+            .iter()
+            .find(|r| r.path == path && r.site == "mu")
+            .unwrap_or_else(|| panic!("no mu row for path {path}"));
+        assert_eq!(mu.calls, 1);
+        assert!(mu.logp.is_finite());
+        assert!(
+            rows.iter().any(|r| r.path == path && r.site == "obs[0]"),
+            "no obs[0] row for path {path}"
+        );
+        assert!(rows.iter().any(|r| r.path == path && r.site == "obs[1]"));
+    }
+    // every path scores the same joint at the same point
+    let mut totals = std::collections::HashMap::new();
+    for r in &rows {
+        *totals.entry(r.path).or_insert(0.0) += r.logp;
+    }
+    let t = totals["typed"];
+    for p in ["typed+fused", "untyped", "untyped+fused"] {
+        assert!((totals[p] - t).abs() < 1e-9, "{p} disagrees: {} vs {t}", totals[p]);
+    }
+}
+
+#[test]
+fn metrics_json_reports_the_acceptance_keys() {
+    // the acceptance-criteria keys for a NUTS run: per-chain divergences,
+    // grad-eval counts, arena nodes/eval, promotion counters, wall split
+    let bm = gauss_unknown_n(6, 100);
+    let mut rng = Xoshiro256pp::seed_from_u64(6);
+    let tvi = init_typed(bm.model.as_ref(), &mut rng);
+    let ld = NativeDensity::fused(bm.model.as_ref(), &tvi);
+    let chain = sample_chain(&ld, &tvi, &SamplerKind::Nuts(Nuts::default()), 100, 200, 13);
+    let theta = tvi.unconstrained.clone();
+    let profile = profile_model(bm.model.as_ref(), &tvi, &theta, 6);
+    assert!(!profile.is_empty());
+    let mc = MultiChain::new(vec![chain]);
+    let rep = RunReport::from_chains("gauss_unknown", "nuts", &mc, profile);
+    let json = rep.to_json();
+    for key in [
+        "\"divergences\"",
+        "\"grad_evals\"",
+        "\"leapfrog_steps\"",
+        "\"arena_nodes\"",
+        "\"arena_nodes_per_eval\"",
+        "\"typed_promotions\"",
+        "\"warmup_secs\"",
+        "\"sampling_secs\"",
+        "\"ebfmi\"",
+        "\"profile\"",
+        "\"warnings\"",
+    ] {
+        assert!(json.contains(key), "missing {key}");
+    }
+    assert_eq!(json.matches('{').count(), json.matches('}').count());
+    assert!(!json.contains("NaN"));
+    // the human rendering comes from the same structure
+    let human = rep.render_human(&mc);
+    assert!(human.contains("metrics:"));
+    assert!(human.contains("per-site profile:"));
+}
