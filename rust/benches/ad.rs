@@ -106,6 +106,21 @@ fn main() {
         let stat = pick("static").unwrap();
         let fused = pick("fused").unwrap();
         ratios.push((name, tape / stat, tape / fused, fused / stat));
+
+        // (3) node-throughput tripwire: one fused gradient (forward walk
+        // + backward sweep with the contiguous diagonal-run fast path)
+        // must process its tape nodes + seeds well above dispatch-bound
+        // speeds. The floor is deliberately loose — it catches a gross
+        // backward-sweep regression, not benchmark noise.
+        let stats = dynamicppl::ad::arena::last_stats();
+        let nodes_per_sec = (stats.nodes + stats.seeds).max(1) as f64 / fused;
+        assert!(
+            nodes_per_sec > 1e6,
+            "{name}: arena node throughput regressed to {nodes_per_sec:.0} nodes/s \
+             ({} nodes + {} seeds at {fused:.2e}s per gradient)",
+            stats.nodes,
+            stats.seeds
+        );
     }
 
     println!("{}", render_table("gradient cost per evaluation", &rows));

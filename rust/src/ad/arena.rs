@@ -124,6 +124,16 @@ impl ArenaTape {
 
     /// Reverse sweep: zero the (reused) adjoint buffer, apply seeds, and
     /// propagate to the leaves, writing `∂total/∂input_i` into `grad`.
+    ///
+    /// Runs of unary nodes whose parents ascend in lockstep with the node
+    /// index ("diagonal links" — the shape per-coordinate vector kernels
+    /// emit: node `r+j` reads parent `base+j`) propagate through a
+    /// contiguous inner loop with no index indirection, which the
+    /// auto-vectorizer can turn into masked SIMD. The fast path requires
+    /// every parent to sit *below* the run, so each target is written
+    /// exactly once and the result is bit-identical to the scalar sweep;
+    /// unary chains (`parents[j] == j−1`) fail that test immediately and
+    /// stay on the generic path at no extra scan cost.
     pub fn backward_into(&mut self, grad: &mut [f64]) {
         assert_eq!(grad.len(), self.n_inputs);
         let n = self.n_nodes();
@@ -132,13 +142,50 @@ impl ArenaTape {
         for &(p, w) in &self.seeds {
             self.adj[p as usize] += w;
         }
-        for i in (self.n_inputs..n).rev() {
+        let mut i = n;
+        while i > self.n_inputs {
+            i -= 1;
+            let lo = self.bounds[i] as usize;
+            let hi = self.bounds[i + 1] as usize;
+            if hi - lo == 1 {
+                let p_i = self.parents[lo] as usize;
+                // extend the diagonal run downward; `r − 1 > p_i` keeps
+                // every parent strictly below the run start
+                let mut r = i;
+                while r > self.n_inputs && r - 1 > p_i {
+                    let j = r - 1;
+                    let jl = self.bounds[j] as usize;
+                    if (self.bounds[j + 1] as usize) - jl != 1
+                        || self.parents[jl] as usize + (i - j) != p_i
+                    {
+                        break;
+                    }
+                    r = j;
+                }
+                let len = i + 1 - r;
+                if len >= 4 {
+                    let plo = self.bounds[r] as usize;
+                    let base = p_i + 1 - len;
+                    // base + len == p_i + 1 ≤ r: targets and sources are
+                    // disjoint, each target written once
+                    let (head, tail) = self.adj.split_at_mut(r);
+                    let src = &tail[..len];
+                    let dst = &mut head[base..base + len];
+                    let par = &self.partials[plo..plo + len];
+                    for j in 0..len {
+                        let a = src[j];
+                        if a != 0.0 {
+                            dst[j] += a * par[j];
+                        }
+                    }
+                    i = r;
+                    continue;
+                }
+            }
             let a = self.adj[i];
             if a == 0.0 {
                 continue;
             }
-            let lo = self.bounds[i] as usize;
-            let hi = self.bounds[i + 1] as usize;
             for k in lo..hi {
                 self.adj[self.parents[k] as usize] += a * self.partials[k];
             }
@@ -491,6 +538,32 @@ mod tests {
         assert_eq!(last_stats().nodes, 1);
         assert_eq!(last_stats().seeds, 1);
         assert_eq!(last_stats().tilde_stmts, 1);
+    }
+
+    #[test]
+    fn diagonal_runs_match_generic_sweep() {
+        // the per-coordinate vector-kernel shape: a run of unary nodes
+        // whose parents are the consecutive leaves below — exercises the
+        // contiguous fast path, including the zero-adjoint mask (node 3 is
+        // unseeded and its ∞ partial must NOT leak a NaN into the grad)
+        begin(8);
+        let nodes: Vec<u32> = (0..8u32)
+            .map(|j| {
+                let d = if j == 3 { f64::INFINITY } else { (j + 1) as f64 * 0.5 };
+                with_tape(|t| t.push1(j, d))
+            })
+            .collect();
+        for (j, &nd) in nodes.iter().enumerate() {
+            if j != 3 {
+                seed(nd, 2.0);
+            }
+        }
+        let mut grad = vec![0.0; 8];
+        backward_into(&mut grad, 1);
+        for j in 0..8 {
+            let want = if j == 3 { 0.0 } else { 2.0 * (j + 1) as f64 * 0.5 };
+            assert_eq!(grad[j], want, "grad[{j}]");
+        }
     }
 
     #[test]

@@ -1,0 +1,617 @@
+//! Lane-batched arena AD: one tape walk, K gradient lanes.
+//!
+//! [`BatchTape`] is the K-lane generalization of [`super::arena::ArenaTape`]:
+//! the node *topology* (bounds/parents) is recorded once — every lane shares
+//! the same tilde program and typed layout — while node **values**, edge
+//! **partials** and **adjoints** are stored lane-strided
+//! (`vals[node * K + lane]`), so both the forward walk and the backward
+//! sweep run contiguous K-wide inner loops that the compiler can
+//! auto-vectorize. Bookkeeping (node pushes, bounds, dispatch) is paid once
+//! per node instead of once per node per lane — that amortization is the
+//! whole speedup; the per-lane arithmetic is **exactly** the sequential
+//! arena arithmetic, in the same order, so each lane's value and gradient
+//! are bit-identical to a sequential [`super::arena::AVar`] evaluation of
+//! that lane alone.
+//!
+//! [`BVar`] is the tracked scalar: like `AVar` it carries a node index
+//! (`NONE` for constants) plus a cached primal, but the cached primal is
+//! **lane 0's** value — `value()` and comparisons (used by glue-code
+//! branches such as `Scalar::sigmoid`) resolve against lane 0. Lanes whose
+//! control flow would diverge from lane 0 inside glue-code branches are a
+//! documented hazard (the fused executors never branch; the stable-branch
+//! cutoffs in the `Scalar` defaults sit far outside normal data), the same
+//! class of hazard as a dynamic structure change, and the samplers that
+//! feed lanes (chains, particles, ELBO draws) keep lanes near one another
+//! only statistically — correctness of each lane's arithmetic never depends
+//! on the branch agreeing, only branch *selection* does.
+//!
+//! Per-lane rejection (−∞ log-density) is handled by masking at the output:
+//! a rejected lane's seeds are still recorded (weights of 0 are skipped per
+//! lane, mirroring the sequential tape's zero-weight seed drop), and the
+//! caller zeroes that lane's gradient exactly as the sequential path does
+//! after a non-finite lp.
+
+use std::cell::RefCell;
+
+use super::arena::NONE;
+use super::Scalar;
+use crate::util::math;
+
+/// K-lane SoA tape. Topology is shared across lanes; values/partials/
+/// adjoints are lane-strided.
+#[derive(Default)]
+pub struct BatchTape {
+    /// `n_nodes + 1` prefix offsets into `parents` (edge index space).
+    bounds: Vec<u32>,
+    parents: Vec<u32>,
+    /// Edge partials, lane-strided: `partials[edge * lanes + lane]`.
+    partials: Vec<f64>,
+    /// Node values, lane-strided: `vals[node * lanes + lane]`.
+    vals: Vec<f64>,
+    /// Seed nodes (density-term gradient contributions).
+    seed_nodes: Vec<u32>,
+    /// Seed weights, lane-strided: `seed_w[seed * lanes + lane]`.
+    seed_w: Vec<f64>,
+    /// Reused lane-strided adjoint buffer.
+    adj: Vec<f64>,
+    n_inputs: usize,
+    lanes: usize,
+}
+
+impl BatchTape {
+    #[inline]
+    pub fn n_nodes(&self) -> usize {
+        self.bounds.len().saturating_sub(1)
+    }
+
+    #[inline]
+    pub fn n_fused_nodes(&self) -> usize {
+        self.n_nodes() - self.n_inputs
+    }
+
+    #[inline]
+    pub fn n_seeds(&self) -> usize {
+        self.seed_nodes.len()
+    }
+
+    #[inline]
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Clear for a fresh K-lane evaluation. `theta_t` holds the input
+    /// leaves coordinate-major (`theta_t[i * lanes + lane]`); allocations
+    /// are retained across evaluations.
+    pub fn reset(&mut self, theta_t: &[f64], n_inputs: usize, lanes: usize) {
+        assert!(lanes > 0);
+        assert_eq!(theta_t.len(), n_inputs * lanes);
+        self.bounds.clear();
+        self.parents.clear();
+        self.partials.clear();
+        self.vals.clear();
+        self.seed_nodes.clear();
+        self.seed_w.clear();
+        self.bounds.resize(n_inputs + 1, 0);
+        self.vals.extend_from_slice(theta_t);
+        self.n_inputs = n_inputs;
+        self.lanes = lanes;
+    }
+
+    /// Lane values of node `i`.
+    #[inline]
+    pub fn node_vals(&self, i: u32) -> &[f64] {
+        let k = self.lanes;
+        &self.vals[i as usize * k..i as usize * k + k]
+    }
+
+    /// Read the lane values of a [`BVar`] (constants broadcast) into `out`.
+    #[inline]
+    pub fn read_lanes(&self, x: BVar, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.lanes);
+        if x.idx == NONE {
+            out.fill(x.cv);
+        } else {
+            out.copy_from_slice(self.node_vals(x.idx));
+        }
+    }
+
+    /// Push a unary node: `vals`/`ds` are the K per-lane values/partials.
+    #[inline]
+    pub fn push1_lanes(&mut self, p: u32, vals: &[f64], ds: &[f64]) -> u32 {
+        debug_assert_eq!(vals.len(), self.lanes);
+        debug_assert_eq!(ds.len(), self.lanes);
+        let idx = self.n_nodes() as u32;
+        self.parents.push(p);
+        self.partials.extend_from_slice(ds);
+        self.vals.extend_from_slice(vals);
+        self.bounds.push(self.parents.len() as u32);
+        idx
+    }
+
+    /// Push a value-only node (no parents, no partials). The batched
+    /// replay executors use these to carry per-lane sampled values through
+    /// model glue arithmetic; the node contributes nothing to a backward
+    /// sweep (its edge range is empty).
+    #[inline]
+    pub fn push0_lanes(&mut self, vals: &[f64]) -> u32 {
+        debug_assert_eq!(vals.len(), self.lanes);
+        let idx = self.n_nodes() as u32;
+        self.vals.extend_from_slice(vals);
+        self.bounds.push(self.parents.len() as u32);
+        idx
+    }
+
+    /// Push a binary node; `da`/`db` are per-lane partials.
+    #[inline]
+    pub fn push2_lanes(&mut self, pa: u32, da: &[f64], pb: u32, db: &[f64], vals: &[f64]) -> u32 {
+        let idx = self.n_nodes() as u32;
+        self.parents.push(pa);
+        self.parents.push(pb);
+        self.partials.extend_from_slice(da);
+        self.partials.extend_from_slice(db);
+        self.vals.extend_from_slice(vals);
+        self.bounds.push(self.parents.len() as u32);
+        idx
+    }
+
+    /// Record per-lane gradient seeds for `node`. Constants are dropped
+    /// whole; zero weights are skipped lane-by-lane at application time,
+    /// mirroring the sequential tape's zero-weight drop.
+    #[inline]
+    pub fn seed_lanes(&mut self, node: u32, ws: &[f64]) {
+        debug_assert_eq!(ws.len(), self.lanes);
+        if node != NONE && ws.iter().any(|&w| w != 0.0) {
+            self.seed_nodes.push(node);
+            self.seed_w.extend_from_slice(ws);
+        }
+    }
+
+    /// K-lane reverse sweep: `grad` is coordinate-major
+    /// (`grad[i * lanes + lane]`), length `n_inputs * lanes`. Per lane this
+    /// performs exactly the sequential sweep's adds in the sequential
+    /// sweep's node order.
+    pub fn backward_into(&mut self, grad: &mut [f64]) {
+        let k = self.lanes;
+        assert_eq!(grad.len(), self.n_inputs * k);
+        let n = self.n_nodes();
+        self.adj.clear();
+        self.adj.resize(n * k, 0.0);
+        for (s, &p) in self.seed_nodes.iter().enumerate() {
+            let base = p as usize * k;
+            for l in 0..k {
+                let w = self.seed_w[s * k + l];
+                if w != 0.0 {
+                    self.adj[base + l] += w;
+                }
+            }
+        }
+        for i in (self.n_inputs..n).rev() {
+            let abase = i * k;
+            if self.adj[abase..abase + k].iter().all(|&a| a == 0.0) {
+                continue; // nothing to propagate on any lane
+            }
+            let lo = self.bounds[i] as usize;
+            let hi = self.bounds[i + 1] as usize;
+            for e in lo..hi {
+                let pbase = self.parents[e] as usize * k;
+                let dbase = e * k;
+                for l in 0..k {
+                    let a = self.adj[abase + l];
+                    if a != 0.0 {
+                        self.adj[pbase + l] += a * self.partials[dbase + l];
+                    }
+                }
+            }
+        }
+        grad.copy_from_slice(&self.adj[..self.n_inputs * k]);
+    }
+
+    /// Retained capacity in bytes (allocation-regression probes).
+    pub fn capacity_bytes(&self) -> usize {
+        self.bounds.capacity() * 4
+            + self.parents.capacity() * 4
+            + self.partials.capacity() * 8
+            + self.vals.capacity() * 8
+            + self.seed_nodes.capacity() * 4
+            + self.seed_w.capacity() * 8
+            + self.adj.capacity() * 8
+    }
+}
+
+thread_local! {
+    static BATCH_TAPE: RefCell<BatchTape> = RefCell::new(BatchTape::default());
+}
+
+/// Run `f` with mutable access to the thread-local batch tape.
+#[inline]
+pub fn with_tape<R>(f: impl FnOnce(&mut BatchTape) -> R) -> R {
+    BATCH_TAPE.with(|t| f(&mut t.borrow_mut()))
+}
+
+/// Start a fresh K-lane evaluation with coordinate-major leaf values.
+pub fn begin(theta_t: &[f64], n_inputs: usize, lanes: usize) {
+    with_tape(|t| t.reset(theta_t, n_inputs, lanes));
+}
+
+/// K-lane backward pass into a coordinate-major gradient buffer.
+pub fn backward_into(grad: &mut [f64]) {
+    with_tape(|t| t.backward_into(grad));
+}
+
+/// A tracked K-lane scalar. `idx == NONE` means a *uniform* constant (every
+/// lane holds `cv`); tracked variables cache lane 0's primal in `cv` so
+/// `value()`/comparisons need no tape access.
+#[derive(Clone, Copy, Debug)]
+pub struct BVar {
+    idx: u32,
+    cv: f64,
+}
+
+impl BVar {
+    /// The `i`-th input leaf; `cv0` is lane 0's value.
+    #[inline]
+    pub fn leaf(i: u32, cv0: f64) -> Self {
+        BVar { idx: i, cv: cv0 }
+    }
+
+    /// Wrap an existing tape node (fused executors).
+    #[inline]
+    pub fn from_node(idx: u32, cv0: f64) -> Self {
+        BVar { idx, cv: cv0 }
+    }
+
+    #[inline]
+    pub fn idx(&self) -> u32 {
+        self.idx
+    }
+}
+
+/// Scratch buffers for one op: K values + up to 2×K partials. Kept in a
+/// thread-local so ops allocate nothing at steady state.
+struct OpScratch {
+    av: Vec<f64>,
+    bv: Vec<f64>,
+    v: Vec<f64>,
+    da: Vec<f64>,
+    db: Vec<f64>,
+}
+
+thread_local! {
+    static OP_SCRATCH: RefCell<OpScratch> = RefCell::new(OpScratch {
+        av: Vec::new(),
+        bv: Vec::new(),
+        v: Vec::new(),
+        da: Vec::new(),
+        db: Vec::new(),
+    });
+}
+
+/// Apply a unary op lane-wise: `f(x) -> (value, dvalue/dx)`. Constant
+/// operands collapse to a constant, exactly like `AVar::unary`.
+#[inline]
+fn bvar_unary(x: BVar, f: impl Fn(f64) -> (f64, f64)) -> BVar {
+    if x.idx == NONE {
+        return BVar {
+            idx: NONE,
+            cv: f(x.cv).0,
+        };
+    }
+    OP_SCRATCH.with(|s| {
+        let s = &mut *s.borrow_mut();
+        with_tape(|t| {
+            let k = t.lanes();
+            s.v.resize(k, 0.0);
+            s.da.resize(k, 0.0);
+            {
+                let xs = t.node_vals(x.idx);
+                for l in 0..k {
+                    let (v, d) = f(xs[l]);
+                    s.v[l] = v;
+                    s.da[l] = d;
+                }
+            }
+            let idx = t.push1_lanes(x.idx, &s.v, &s.da);
+            BVar { idx, cv: s.v[0] }
+        })
+    })
+}
+
+/// Apply a binary op lane-wise: `f(a, b) -> (value, dv/da, dv/db)`, with
+/// the same constant-collapsing rules as `AVar::binary` (const ∘ const →
+/// const; one const operand → unary node on the tracked operand).
+#[inline]
+fn bvar_binary(a: BVar, b: BVar, f: impl Fn(f64, f64) -> (f64, f64, f64)) -> BVar {
+    if a.idx == NONE && b.idx == NONE {
+        return BVar {
+            idx: NONE,
+            cv: f(a.cv, b.cv).0,
+        };
+    }
+    OP_SCRATCH.with(|s| {
+        let s = &mut *s.borrow_mut();
+        with_tape(|t| {
+            let k = t.lanes();
+            s.v.resize(k, 0.0);
+            s.da.resize(k, 0.0);
+            s.db.resize(k, 0.0);
+            s.av.resize(k, 0.0);
+            s.bv.resize(k, 0.0);
+            t.read_lanes(a, &mut s.av);
+            t.read_lanes(b, &mut s.bv);
+            for l in 0..k {
+                let (v, da, db) = f(s.av[l], s.bv[l]);
+                s.v[l] = v;
+                s.da[l] = da;
+                s.db[l] = db;
+            }
+            let idx = match (a.idx, b.idx) {
+                (NONE, bi) => t.push1_lanes(bi, &s.v, &s.db),
+                (ai, NONE) => t.push1_lanes(ai, &s.v, &s.da),
+                (ai, bi) => t.push2_lanes(ai, &s.da, bi, &s.db, &s.v),
+            };
+            BVar { idx, cv: s.v[0] }
+        })
+    })
+}
+
+macro_rules! impl_bvar_binop {
+    ($trait:ident, $fn:ident, |$a:ident, $b:ident| $v:expr, $da:expr, $db:expr) => {
+        impl std::ops::$trait for BVar {
+            type Output = BVar;
+            #[inline]
+            fn $fn(self, rhs: BVar) -> BVar {
+                bvar_binary(self, rhs, |$a, $b| {
+                    let _ = (&$a, &$b);
+                    ($v, $da, $db)
+                })
+            }
+        }
+        impl std::ops::$trait<f64> for BVar {
+            type Output = BVar;
+            #[inline]
+            fn $fn(self, rhs: f64) -> BVar {
+                bvar_binary(self, BVar::constant(rhs), |$a, $b| {
+                    let _ = (&$a, &$b);
+                    ($v, $da, $db)
+                })
+            }
+        }
+        impl std::ops::$trait<BVar> for f64 {
+            type Output = BVar;
+            #[inline]
+            fn $fn(self, rhs: BVar) -> BVar {
+                bvar_binary(BVar::constant(self), rhs, |$a, $b| {
+                    let _ = (&$a, &$b);
+                    ($v, $da, $db)
+                })
+            }
+        }
+    };
+}
+
+impl_bvar_binop!(Add, add, |a, b| a + b, 1.0, 1.0);
+impl_bvar_binop!(Sub, sub, |a, b| a - b, 1.0, -1.0);
+impl_bvar_binop!(Mul, mul, |a, b| a * b, b, a);
+impl_bvar_binop!(Div, div, |a, b| a / b, 1.0 / b, -a / (b * b));
+
+impl std::ops::Neg for BVar {
+    type Output = BVar;
+    #[inline]
+    fn neg(self) -> BVar {
+        bvar_unary(self, |x| (-x, -1.0))
+    }
+}
+
+impl PartialEq for BVar {
+    fn eq(&self, other: &Self) -> bool {
+        self.cv == other.cv
+    }
+}
+
+impl PartialOrd for BVar {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        self.cv.partial_cmp(&other.cv)
+    }
+}
+
+impl Scalar for BVar {
+    #[inline]
+    fn constant(x: f64) -> Self {
+        BVar { idx: NONE, cv: x }
+    }
+    /// Lane 0's primal (see the module docs for the branch caveat).
+    #[inline]
+    fn value(&self) -> f64 {
+        self.cv
+    }
+    #[inline]
+    fn ln(self) -> Self {
+        bvar_unary(self, |x| (x.ln(), 1.0 / x))
+    }
+    #[inline]
+    fn exp(self) -> Self {
+        bvar_unary(self, |x| {
+            let e = x.exp();
+            (e, e)
+        })
+    }
+    #[inline]
+    fn sqrt(self) -> Self {
+        bvar_unary(self, |x| {
+            let s = x.sqrt();
+            (s, 0.5 / s)
+        })
+    }
+    #[inline]
+    fn powi(self, n: i32) -> Self {
+        bvar_unary(self, |x| (x.powi(n), n as f64 * x.powi(n - 1)))
+    }
+    #[inline]
+    fn powf(self, e: f64) -> Self {
+        bvar_unary(self, |x| (x.powf(e), e * x.powf(e - 1.0)))
+    }
+    /// Unlike `AVar::abs` (which branches on the sign and returns `self`
+    /// untouched when positive), the batched form always pushes one node
+    /// with a per-lane ±1 partial so that lanes with different signs stay
+    /// individually correct. The ±1 multiply is exact, so per-lane values
+    /// and adjoint flow match the sequential result bit-for-bit.
+    #[inline]
+    fn abs(self) -> Self {
+        bvar_unary(self, |x| (x.abs(), if x >= 0.0 { 1.0 } else { -1.0 }))
+    }
+    #[inline]
+    fn ln_1p(self) -> Self {
+        bvar_unary(self, |x| (x.ln_1p(), 1.0 / (1.0 + x)))
+    }
+    #[inline]
+    fn tanh(self) -> Self {
+        bvar_unary(self, |x| {
+            let t = x.tanh();
+            (t, 1.0 - t * t)
+        })
+    }
+    #[inline]
+    fn sin(self) -> Self {
+        bvar_unary(self, |x| (x.sin(), x.cos()))
+    }
+    #[inline]
+    fn cos(self) -> Self {
+        bvar_unary(self, |x| (x.cos(), -x.sin()))
+    }
+    #[inline]
+    fn lgamma(self) -> Self {
+        bvar_unary(self, |x| (math::lgamma(x), math::digamma(x)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ad::arena::{self, AVar};
+
+    /// Sequential-arena gradient of `f` at `x` — the bit-identity oracle.
+    fn arena_grad(f: impl Fn(&[AVar]) -> AVar, x: &[f64]) -> (f64, Vec<f64>) {
+        let mut g = vec![0.0; x.len()];
+        let v = arena::grad_fused_into(&f, x, &mut g);
+        (v, g)
+    }
+
+    /// Batched gradient of `f` across lanes whose inputs are the rows of
+    /// `xs`, returned per lane.
+    fn batch_grad(f: impl Fn(&[BVar]) -> BVar, xs: &[Vec<f64>]) -> Vec<(f64, Vec<f64>)> {
+        let k = xs.len();
+        let dim = xs[0].len();
+        let mut theta_t = vec![0.0; dim * k];
+        for (l, x) in xs.iter().enumerate() {
+            for i in 0..dim {
+                theta_t[i * k + l] = x[i];
+            }
+        }
+        begin(&theta_t, dim, k);
+        let leaves: Vec<BVar> = (0..dim)
+            .map(|i| BVar::leaf(i as u32, theta_t[i * k]))
+            .collect();
+        let out = f(&leaves);
+        let ones = vec![1.0; k];
+        with_tape(|t| t.seed_lanes(out.idx(), &ones));
+        let mut grad_t = vec![0.0; dim * k];
+        backward_into(&mut grad_t);
+        let mut outv = vec![0.0; k];
+        with_tape(|t| t.read_lanes(out, &mut outv));
+        (0..k)
+            .map(|l| {
+                let g = (0..dim).map(|i| grad_t[i * k + l]).collect();
+                (outv[l], g)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn lanes_are_bit_identical_to_sequential_arena() {
+        let lanes: Vec<Vec<f64>> = vec![
+            vec![0.5, 1.5, 0.3],
+            vec![-0.2, 2.0, 1.1],
+            vec![3.0, 0.25, -0.7],
+            vec![1.0, 1.0, 1.0],
+        ];
+        let batched = batch_grad(
+            |x| {
+                let t = x[0] * x[1] + Scalar::exp(x[2]) * 0.5;
+                Scalar::ln(t * t + 1.0) - x[1] / 3.0 + Scalar::tanh(x[0])
+            },
+            &lanes,
+        );
+        for (l, x) in lanes.iter().enumerate() {
+            let (v, g) = arena_grad(
+                |x| {
+                    let t = x[0] * x[1] + Scalar::exp(x[2]) * 0.5;
+                    Scalar::ln(t * t + 1.0) - x[1] / 3.0 + Scalar::tanh(x[0])
+                },
+                x,
+            );
+            assert_eq!(v.to_bits(), batched[l].0.to_bits(), "lane {l} value");
+            for i in 0..x.len() {
+                assert_eq!(
+                    g[i].to_bits(),
+                    batched[l].1[i].to_bits(),
+                    "lane {l} grad[{i}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn constant_collapsing_matches_arena() {
+        let lanes = vec![vec![2.0], vec![-1.5]];
+        let batched = batch_grad(
+            |x| {
+                let c = BVar::constant(10.0);
+                let d = c * 2.0 + 1.0; // pure-constant chain: no nodes
+                x[0] * d
+            },
+            &lanes,
+        );
+        assert_eq!(batched[0].0, 42.0);
+        assert_eq!(batched[1].1[0], 21.0);
+        // leaves + exactly one fused node, like the sequential arena
+        with_tape(|t| assert_eq!(t.n_fused_nodes(), 1));
+    }
+
+    #[test]
+    fn zero_weight_seed_lanes_are_skipped() {
+        let theta_t = vec![1.0, 2.0]; // 1 input × 2 lanes
+        begin(&theta_t, 1, 2);
+        let x = BVar::leaf(0, theta_t[0]);
+        let y = x * x;
+        // lane 1 rejected: weight 0 must not touch its adjoint
+        with_tape(|t| t.seed_lanes(y.idx(), &[1.0, 0.0]));
+        let mut grad_t = vec![0.0; 2];
+        backward_into(&mut grad_t);
+        assert_eq!(grad_t, vec![2.0, 0.0]);
+    }
+
+    #[test]
+    fn capacity_is_stable_across_evaluations() {
+        let run = || {
+            let theta_t = vec![0.5, 1.5, 2.5, -0.5]; // 2 inputs × 2 lanes
+            begin(&theta_t, 2, 2);
+            let a = BVar::leaf(0, theta_t[0]);
+            let b = BVar::leaf(1, theta_t[2]);
+            let y = Scalar::ln(a * a + Scalar::exp(b));
+            with_tape(|t| t.seed_lanes(y.idx(), &[1.0, 1.0]));
+            let mut grad_t = vec![0.0; 4];
+            backward_into(&mut grad_t);
+            grad_t
+        };
+        let _ = run();
+        let cap = with_tape(|t| t.capacity_bytes());
+        for _ in 0..10 {
+            let _ = run();
+        }
+        assert_eq!(
+            with_tape(|t| t.capacity_bytes()),
+            cap,
+            "steady-state batch tape must not grow"
+        );
+    }
+}

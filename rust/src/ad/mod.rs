@@ -14,6 +14,9 @@
 //!   retained capacity, variable-arity fused nodes (one per tilde
 //!   statement via analytic `logpdf_adj` kernels) and seed-based density
 //!   accumulation — the Stan-style repaired native path
+//! - [`batch::BVar`] — the K-lane form of the arena: one shared node
+//!   topology, lane-strided values/partials/adjoints, so K chains /
+//!   particles / ELBO draws share a single tape walk
 //! - `f64` — plain evaluation
 //!
 //! The AOT alternative (the paper's "Julia compiler specializes the typed
@@ -21,6 +24,7 @@
 //! `Scalar` — see `crate::gradient`.
 
 pub mod arena;
+pub mod batch;
 pub mod forward;
 pub mod reverse;
 

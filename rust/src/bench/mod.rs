@@ -837,6 +837,224 @@ pub fn grad_rows_to_json(rows: &[GradRow], cfg: &GradBenchConfig) -> String {
     out
 }
 
+/// One `bench batch` measurement: the lane-batched fused engine at lane
+/// count K, normalized to seconds per *lane gradient*.
+#[derive(Clone, Debug)]
+pub struct BatchRow {
+    pub model: String,
+    /// Unconstrained dimension (per lane).
+    pub dim: usize,
+    /// Lane count K of this measurement.
+    pub lanes: usize,
+    /// Mean wall-clock seconds per lane gradient (one batched evaluation
+    /// costs `lanes × secs_per_grad`).
+    pub secs_per_grad: f64,
+    /// Per-gradient speedup vs this model's K = 1 batched row (NaN when
+    /// K = 1 was not in the sweep).
+    pub speedup_vs_k1: f64,
+    /// Per-gradient speedup vs the sequential scalar fused engine — the
+    /// path K independent chains would otherwise each take.
+    pub speedup_vs_seq: f64,
+    pub seed: u64,
+}
+
+/// `bench batch` configuration.
+#[derive(Clone, Debug)]
+pub struct BatchBenchConfig {
+    pub models: Vec<String>,
+    /// Lane counts to sweep (a `1` entry is the batched-engine baseline
+    /// the `vs-K1` column normalizes against).
+    pub lane_counts: Vec<usize>,
+    pub seed: u64,
+    /// Use the reduced workloads (default) or the full Table-1 sizes.
+    pub small: bool,
+    /// Target seconds per timed measurement (per rep).
+    pub target_secs: f64,
+    pub reps: usize,
+}
+
+impl Default for BatchBenchConfig {
+    fn default() -> Self {
+        Self {
+            // continuous-θ workloads across the shape spectrum: scalar
+            // glue (gauss_unknown), vector kernels (logreg), tall data
+            // (logreg_tall), long scalar loops (sto_volatility)
+            models: ["gauss_unknown", "logreg", "logreg_tall", "sto_volatility"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            lane_counts: vec![1, 4, 16, 64],
+            seed: 42,
+            small: true,
+            target_secs: 5e-3,
+            reps: 5,
+        }
+    }
+}
+
+/// Run the lane-count sweep over the batched fused engine.
+pub fn run_batch_bench(cfg: &BatchBenchConfig) -> Vec<BatchRow> {
+    use crate::model::batched::typed_grad_batch_into;
+    use crate::model::{init_typed, typed_grad_fused_into};
+
+    let mut rows = Vec::new();
+    for name in &cfg.models {
+        let bm = if cfg.small {
+            crate::models::build_small(name, cfg.seed)
+        } else {
+            build(name, cfg.seed)
+        };
+        let model = bm.model.as_ref();
+        let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+        let tvi = init_typed(model, &mut rng);
+        let base: Vec<f64> = tvi.unconstrained.iter().map(|x| x * 0.3).collect();
+        let dim = base.len();
+        let mut grad = vec![0.0; dim];
+
+        // the sequential comparator: the scalar fused engine each of K
+        // independent chains would run (also the bitwise reference)
+        let lp_seq = typed_grad_fused_into(model, &tvi, &base, Context::Default, &mut grad);
+        assert!(lp_seq.is_finite(), "{name}: fused logp {lp_seq}");
+        eprintln!("bench: {name} / batch seq-baseline");
+        let seq_secs = crate::util::timing::bench_micro(
+            &format!("{name}/seq"),
+            cfg.target_secs,
+            cfg.reps,
+            || {
+                std::hint::black_box(typed_grad_fused_into(
+                    model,
+                    &tvi,
+                    &base,
+                    Context::Default,
+                    &mut grad,
+                ));
+            },
+        )
+        .mean();
+
+        let mut per_k: Vec<(usize, f64)> = Vec::new();
+        for &k in &cfg.lane_counts {
+            eprintln!("bench: {name} / batch×K{k}");
+            // lane 0 carries the sequential θ; later lanes are nudged so
+            // the lane loops cannot collapse to a broadcast
+            let mut thetas = vec![0.0; dim * k];
+            for l in 0..k {
+                for j in 0..dim {
+                    thetas[l * dim + j] = base[j] + 1e-3 * l as f64;
+                }
+            }
+            let mut lps = vec![0.0; k];
+            let mut grads = vec![0.0; dim * k];
+            typed_grad_batch_into(model, &tvi, &thetas, k, Context::Default, &mut lps, &mut grads);
+            assert!(
+                lps.iter().all(|lp| lp.is_finite()),
+                "{name}: K{k} rejected a lane: {lps:?}"
+            );
+            assert_eq!(
+                lps[0].to_bits(),
+                lp_seq.to_bits(),
+                "{name}: lane 0 must be bitwise the sequential evaluation"
+            );
+            let m = crate::util::timing::bench_micro(
+                &format!("{name}/K{k}"),
+                cfg.target_secs,
+                cfg.reps,
+                || {
+                    typed_grad_batch_into(
+                        model,
+                        &tvi,
+                        std::hint::black_box(&thetas),
+                        k,
+                        Context::Default,
+                        &mut lps,
+                        &mut grads,
+                    );
+                },
+            );
+            per_k.push((k, m.mean() / k as f64));
+        }
+
+        let k1_secs = per_k.iter().find(|&&(k, _)| k == 1).map(|&(_, s)| s);
+        for (k, secs) in per_k {
+            rows.push(BatchRow {
+                model: name.clone(),
+                dim,
+                lanes: k,
+                secs_per_grad: secs,
+                speedup_vs_k1: match k1_secs {
+                    Some(s1) => s1 / secs,
+                    None => f64::NAN,
+                },
+                speedup_vs_seq: seq_secs / secs,
+                seed: cfg.seed,
+            });
+        }
+    }
+    rows
+}
+
+/// Human-readable lane-sweep table.
+pub fn render_batch_table(rows: &[BatchRow]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "batch — one fused logp∇ pass over K lanes, normalized per lane gradient\n"
+    );
+    let _ = writeln!(
+        out,
+        "{:<16} {:>5} {:>5} {:>12} {:>8} {:>8}",
+        "model", "dim", "K", "µs/grad", "vs-K1", "vs-seq"
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{:<16} {:>5} {:>5} {:>12.2} {:>8} {:>8}",
+            r.model,
+            r.dim,
+            r.lanes,
+            r.secs_per_grad * 1e6,
+            if r.speedup_vs_k1.is_finite() {
+                format!("{:.1}×", r.speedup_vs_k1)
+            } else {
+                "-".into()
+            },
+            if r.speedup_vs_seq.is_finite() {
+                format!("{:.1}×", r.speedup_vs_seq)
+            } else {
+                "-".into()
+            },
+        );
+    }
+    out
+}
+
+/// Serialize batch rows as the coordinator's `BENCH_BATCH.json` payload.
+pub fn batch_rows_to_json(rows: &[BatchRow], cfg: &BatchBenchConfig) -> String {
+    let mut out = String::new();
+    let _ = write!(
+        out,
+        "{{\n  \"bench\": \"batch\",\n  \"seed\": {},\n  \"small\": {},\n  \"rows\": [\n",
+        cfg.seed, cfg.small
+    );
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"model\": \"{}\", \"dim\": {}, \"lanes\": {}, \"secs_per_grad\": {}, \
+             \"speedup_vs_k1\": {}, \"speedup_vs_seq\": {}, \"seed\": {}}}",
+            r.model,
+            r.dim,
+            r.lanes,
+            json_num(r.secs_per_grad),
+            json_num(r.speedup_vs_k1),
+            json_num(r.speedup_vs_seq),
+            r.seed,
+        );
+        out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
 fn json_num(x: f64) -> String {
     if x.is_finite() {
         format!("{x}")
@@ -1337,6 +1555,26 @@ mod tests {
             Some(BenchBackend::TypedXlaFused)
         );
         assert_eq!(BenchBackend::parse("nope"), None);
+    }
+
+    #[test]
+    fn batch_bench_rows_and_json_shape() {
+        let cfg = BatchBenchConfig {
+            models: vec!["gauss_unknown".into()],
+            lane_counts: vec![1, 2],
+            target_secs: 1e-4,
+            reps: 1,
+            ..BatchBenchConfig::default()
+        };
+        let rows = run_batch_bench(&cfg);
+        assert_eq!(rows.len(), 2);
+        // the K = 1 row is its own baseline
+        assert!((rows[0].speedup_vs_k1 - 1.0).abs() < 1e-12, "{rows:?}");
+        assert!(rows.iter().all(|r| r.secs_per_grad > 0.0));
+        let json = batch_rows_to_json(&rows, &cfg);
+        assert!(json.contains("\"bench\": \"batch\""));
+        assert!(json.contains("\"lanes\": 2"));
+        assert!(render_batch_table(&rows).contains("vs-K1"));
     }
 
     #[test]

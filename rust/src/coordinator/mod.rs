@@ -4,14 +4,17 @@
 use std::sync::Arc;
 
 use crate::bench::{
-    append_history, grad_rows_to_json, history_line, render_grad_table, render_smc_table,
-    render_table1, render_vi_table, run_grad_bench, run_smc_bench, run_table1, run_vi_bench,
-    smc_rows_to_json, table1_cells_to_json, vi_rows_to_json, BenchBackend, GradBenchConfig,
+    append_history, batch_rows_to_json, grad_rows_to_json, history_line, render_batch_table,
+    render_grad_table, render_smc_table, render_table1, render_vi_table, run_batch_bench,
+    run_grad_bench, run_smc_bench, run_table1, run_vi_bench, smc_rows_to_json,
+    table1_cells_to_json, vi_rows_to_json, BatchBenchConfig, BenchBackend, GradBenchConfig,
     HistoryEntry, SmcBenchConfig, SmcPath, Table1Config, ViBenchConfig,
 };
 use crate::chain::{Chain, MultiChain};
 use crate::gradient::{Backend, LogDensity, NativeDensity};
-use crate::inference::{sample_chain, sample_smc_chain, Hmc, Nuts, RwMh, SamplerKind, Smc};
+use crate::inference::{
+    sample_chain, sample_chains_batched, sample_smc_chain, Hmc, Nuts, RwMh, SamplerKind, Smc,
+};
 use crate::model::init_typed;
 use crate::models::{build, ALL_MODELS};
 use crate::obs::report::RunReport;
@@ -34,11 +37,11 @@ pub fn usage() -> String {
             ("info", "show runtime/platform information"),
             (
                 "sample",
-                "run inference: --model NAME [--sampler hmc|nuts|mh|smc|advi|advi-fullrank] [--backend fused|xla|tape|forward|stan] [--iters N] [--warmup N] [--chains C] [--seed S] [--minibatch B] [--profile] [--quiet] [--json] [--metrics-out FILE]  (smc: iters = particles; advi: iters = posterior draws, --minibatch B fits on Subsample-windowed minibatch gradients; default backend: fused; diagnostics always land in METRICS.json, --json echoes them to stdout, --profile adds per-tilde-site timing rows)",
+                "run inference: --model NAME [--sampler hmc|nuts|mh|smc|advi|advi-fullrank] [--backend fused|xla|tape|forward|stan] [--iters N] [--warmup N] [--chains C] [--lanes K] [--seed S] [--minibatch B] [--profile] [--quiet] [--json] [--metrics-out FILE]  (smc: iters = particles; advi: iters = posterior draws, --minibatch B fits on Subsample-windowed minibatch gradients; --lanes K replaces --chains with K lane-batched HMC/NUTS chains driven through one fused logp∇ pass per rendezvous; default backend: fused; diagnostics always land in METRICS.json, --json echoes them to stdout, --profile adds per-tilde-site timing rows)",
             ),
             (
                 "bench",
-                "bench table1 [--models a,b] [--backends x,y] [--iters N] [--reps R] [--out FILE.json] | bench smc [--models a,b] [--particles N] [--threads T] [--path typed|boxed|both] [--full] [--out FILE.json] | bench grad [--models a,b] [--engines fused,tape,forward] [--full] [--out FILE.json] | bench vi [--models a,b] [--families meanfield,fullrank] [--draws N] [--max-iters N] [--minibatch B] [--stl] [--full] [--out FILE.json]  (any target: --history appends one JSONL row to BENCH_HISTORY.jsonl)",
+                "bench table1 [--models a,b] [--backends x,y] [--iters N] [--reps R] [--out FILE.json] | bench smc [--models a,b] [--particles N] [--threads T] [--path typed|boxed|both] [--full] [--out FILE.json] | bench grad [--models a,b] [--engines fused,tape,forward] [--full] [--out FILE.json] | bench vi [--models a,b] [--families meanfield,fullrank] [--draws N] [--max-iters N] [--minibatch B] [--stl] [--full] [--out FILE.json] | bench batch [--models a,b] [--lanes 1,4,16,64] [--assert-speedup R] [--full] [--out FILE.json]  (any target: --history appends one JSONL row to BENCH_HISTORY.jsonl)",
             ),
             ("query", "evaluate a probability query string (paper §3.5)"),
         ],
@@ -132,6 +135,7 @@ fn cmd_sample(args: &Args) -> i32 {
     let iters = args.get_parse_or("iters", 1000usize).unwrap_or(1000);
     let warmup = args.get_parse_or("warmup", 500usize).unwrap_or(500);
     let n_chains = args.get_parse_or("chains", 2usize).unwrap_or(2);
+    let lanes = args.get_parse_or("lanes", 1usize).unwrap_or(1);
     let seed = args.get_parse_or("seed", 42u64).unwrap_or(42);
     let minibatch = match args.get_parse::<usize>("minibatch") {
         Ok(b) => b,
@@ -142,7 +146,7 @@ fn cmd_sample(args: &Args) -> i32 {
     };
 
     let mc = match sample_model(
-        &model_name, &sampler, &backend, iters, warmup, n_chains, seed, minibatch,
+        &model_name, &sampler, &backend, iters, warmup, n_chains, seed, minibatch, lanes,
     ) {
         Ok(mc) => mc,
         Err(e) => {
@@ -215,7 +219,9 @@ fn parse_density(s: &str) -> Result<DensityKind, String> {
 /// Build the requested density and sample `n_chains` chains in parallel.
 /// `minibatch = Some(B)` is ADVI-only: the fit runs on seeded
 /// `Context::Subsample` minibatch gradients (B observations per step,
-/// scaled N/B) over a native backend.
+/// scaled N/B) over a native backend. `lanes > 1` is HMC/NUTS-only:
+/// it replaces `n_chains` with `lanes` lane-batched chains advanced
+/// through one batched fused logp∇ pass per gang rendezvous.
 #[allow(clippy::too_many_arguments)]
 pub fn sample_model(
     model_name: &str,
@@ -226,6 +232,7 @@ pub fn sample_model(
     n_chains: usize,
     seed: u64,
     minibatch: Option<usize>,
+    lanes: usize,
 ) -> Result<MultiChain, String> {
     if !crate::models::is_known(model_name) {
         return Err(format!("unknown model {model_name:?}"));
@@ -238,6 +245,9 @@ pub fn sample_model(
     if sampler == "smc" {
         if minibatch.is_some() {
             return Err("--minibatch only applies to the advi samplers".into());
+        }
+        if lanes > 1 {
+            return Err("--lanes only applies to the hmc/nuts samplers".into());
         }
         let n_particles = iters.max(2);
         let bmc = Arc::clone(&bm);
@@ -274,6 +284,24 @@ pub fn sample_model(
         other => return Err(format!("unknown sampler {other:?}")),
     };
     let density = parse_density(backend)?;
+
+    // lane-batched chain gang: `lanes` chains advance in lockstep, one
+    // batched fused logp∇ pass per rendezvous (lanes retire
+    // independently, so finished chains never block the gang)
+    if lanes > 1 {
+        if !matches!(kind, SamplerKind::Hmc(_) | SamplerKind::Nuts(_)) {
+            return Err("--lanes only applies to the hmc/nuts samplers".into());
+        }
+        if minibatch.is_some() {
+            return Err("--minibatch only applies to the advi samplers".into());
+        }
+        let b = match density {
+            DensityKind::Native(b) => b,
+            _ => return Err("--lanes needs a native backend (fused|tape|forward)".into()),
+        };
+        let ld = NativeDensity::new(bm.model.as_ref(), &tvi, b);
+        return Ok(sample_chains_batched(&ld, &tvi, &kind, warmup, iters, seed, lanes));
+    }
 
     // ADVI minibatch mode: fit on Subsample-windowed gradients (needs the
     // model, not just a density, to re-window per step), then draw the
@@ -497,6 +525,76 @@ fn cmd_bench(args: &Args) -> i32 {
                 }
             }
         }
+        "batch" => {
+            let mut cfg = BatchBenchConfig::default();
+            if let Some(models) = args.get("models") {
+                cfg.models = models.split(',').map(|s| s.trim().to_string()).collect();
+            }
+            if let Some(lanes) = args.get("lanes") {
+                cfg.lane_counts = lanes
+                    .split(',')
+                    .map(|s| {
+                        s.trim()
+                            .parse::<usize>()
+                            .unwrap_or_else(|e| panic!("bad lane count {s:?}: {e}"))
+                    })
+                    .collect();
+            }
+            cfg.seed = args.get_parse_or("seed", cfg.seed).unwrap_or(cfg.seed);
+            cfg.reps = args.get_parse_or("reps", cfg.reps).unwrap_or(cfg.reps);
+            cfg.small = !args.flag("full");
+            let min_speedup = match args.get_parse::<f64>("assert-speedup") {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            };
+            let rows = run_batch_bench(&cfg);
+            println!("{}", render_batch_table(&rows));
+            // CI tripwire: the lane sweep must actually pay off — every
+            // model's best K > 1 row must beat the K = 1 row by ≥ R×
+            if let Some(min) = min_speedup {
+                for model in &cfg.models {
+                    let best = rows
+                        .iter()
+                        .filter(|r| r.model == *model && r.lanes > 1)
+                        .map(|r| r.speedup_vs_k1)
+                        .fold(f64::NAN, f64::max);
+                    if best.is_nan() || best < min {
+                        eprintln!("assert-speedup: {model}: best vs-K1 {best:.2}x < {min:.2}x");
+                        return 1;
+                    }
+                    println!("assert-speedup: {model}: best vs-K1 {best:.2}x >= {min:.2}x");
+                }
+            }
+            if args.flag("history") {
+                let entries = rows
+                    .iter()
+                    .map(|r| HistoryEntry {
+                        model: r.model.clone(),
+                        label: format!("K{}", r.lanes),
+                        secs: r.secs_per_grad,
+                    })
+                    .collect();
+                let rc = bench_history("batch", cfg.seed, entries);
+                if rc != 0 {
+                    return rc;
+                }
+            }
+            let out_path = args.get_or("out", "BENCH_BATCH.json").to_string();
+            let json = batch_rows_to_json(&rows, &cfg);
+            match std::fs::write(&out_path, &json) {
+                Ok(()) => {
+                    println!("wrote {out_path}");
+                    0
+                }
+                Err(e) => {
+                    eprintln!("failed to write {out_path}: {e}");
+                    1
+                }
+            }
+        }
         "vi" => {
             let mut cfg = ViBenchConfig::default();
             if let Some(models) = args.get("models") {
@@ -559,7 +657,7 @@ fn cmd_bench(args: &Args) -> i32 {
             }
         }
         other => {
-            eprintln!("unknown bench target {other:?} (try: table1, smc, grad, vi)");
+            eprintln!("unknown bench target {other:?} (try: table1, smc, grad, vi, batch)");
             2
         }
     }
@@ -668,7 +766,7 @@ mod tests {
     #[test]
     fn sample_model_smc_carries_evidence() {
         // iters = particle count for the SMC sampler
-        let mc = sample_model("hier_poisson", "smc", "stan", 64, 0, 2, 11, None).unwrap();
+        let mc = sample_model("hier_poisson", "smc", "stan", 64, 0, 2, 11, None, 1).unwrap();
         assert_eq!(mc.chains.len(), 2);
         assert_eq!(mc.chains[0].len(), 64);
         assert!(mc.chains[0].stats.log_evidence.is_finite());
@@ -683,16 +781,28 @@ mod tests {
     #[test]
     fn sample_model_fused_backend_runs() {
         // the default native backend: arena-fused reverse AD
-        let mc = sample_model("hier_poisson", "hmc", "fused", 50, 50, 1, 9, None).unwrap();
+        let mc = sample_model("hier_poisson", "hmc", "fused", 50, 50, 1, 9, None, 1).unwrap();
         assert_eq!(mc.chains.len(), 1);
         assert_eq!(mc.chains[0].len(), 50);
         assert!(mc.chains[0].stats.n_grad_evals > 0);
     }
 
     #[test]
+    fn sample_model_lane_batched_gang() {
+        // --lanes K: the chain count comes from the lane count
+        let mc = sample_model("gauss_unknown", "nuts", "fused", 40, 40, 1, 17, None, 4).unwrap();
+        assert_eq!(mc.chains.len(), 4);
+        assert!(mc.chains.iter().all(|c| c.len() == 40));
+        // lanes > 1 is an hmc/nuts-over-native-backend mode
+        assert!(sample_model("gauss_unknown", "mh", "fused", 10, 10, 1, 1, None, 4).is_err());
+        assert!(sample_model("gauss_unknown", "nuts", "stan", 10, 10, 1, 1, None, 4).is_err());
+        assert!(sample_model("hier_poisson", "smc", "stan", 16, 0, 1, 1, None, 4).is_err());
+    }
+
+    #[test]
     fn sample_model_advi_draws_from_fitted_approximation() {
         // iters = posterior-draw count; stats.log_evidence carries the ELBO
-        let mc = sample_model("gauss_unknown", "advi", "fused", 500, 0, 1, 21, None).unwrap();
+        let mc = sample_model("gauss_unknown", "advi", "fused", 500, 0, 1, 21, None, 1).unwrap();
         assert_eq!(mc.chains.len(), 1);
         assert_eq!(mc.chains[0].len(), 500);
         assert!(mc.chains[0].stats.log_evidence.is_finite());
@@ -703,12 +813,12 @@ mod tests {
 
     #[test]
     fn sample_model_rejects_unknown_backend_and_sampler() {
-        assert!(sample_model("gauss_unknown", "hmc", "frobnicate", 10, 10, 1, 1, None).is_err());
-        assert!(sample_model("gauss_unknown", "slice", "fused", 10, 10, 1, 1, None).is_err());
+        assert!(sample_model("gauss_unknown", "hmc", "frobnicate", 10, 10, 1, 1, None, 1).is_err());
+        assert!(sample_model("gauss_unknown", "slice", "fused", 10, 10, 1, 1, None, 1).is_err());
         // minibatch is an ADVI-only, native-backend-only mode
-        assert!(sample_model("gauss_unknown", "hmc", "fused", 10, 10, 1, 1, Some(64)).is_err());
-        assert!(sample_model("hier_poisson", "smc", "stan", 16, 0, 1, 1, Some(64)).is_err());
-        assert!(sample_model("gauss_unknown", "advi", "stan", 10, 0, 1, 1, Some(64)).is_err());
+        assert!(sample_model("gauss_unknown", "hmc", "fused", 10, 10, 1, 1, Some(64), 1).is_err());
+        assert!(sample_model("hier_poisson", "smc", "stan", 16, 0, 1, 1, Some(64), 1).is_err());
+        assert!(sample_model("gauss_unknown", "advi", "stan", 10, 0, 1, 1, Some(64), 1).is_err());
     }
 
     #[test]
@@ -717,7 +827,7 @@ mod tests {
         // genuine ~0.5% subsample; the chain comes back in constrained
         // space with the full-data ELBO in stats.log_evidence
         let mc =
-            sample_model("logreg_tall", "advi", "fused", 200, 0, 1, 23, Some(512)).unwrap();
+            sample_model("logreg_tall", "advi", "fused", 200, 0, 1, 23, Some(512), 1).unwrap();
         assert_eq!(mc.chains.len(), 1);
         assert_eq!(mc.chains[0].len(), 200);
         assert!(mc.chains[0].stats.log_evidence.is_finite());
@@ -726,7 +836,7 @@ mod tests {
 
     #[test]
     fn sample_model_small_run() {
-        let mc = sample_model("hier_poisson", "hmc", "stan", 100, 100, 2, 9, None).unwrap();
+        let mc = sample_model("hier_poisson", "hmc", "stan", 100, 100, 2, 9, None, 1).unwrap();
         assert_eq!(mc.chains.len(), 2);
         assert_eq!(mc.chains[0].len(), 100);
         // a0 should be near 1 (ground truth) — loose check

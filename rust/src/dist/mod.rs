@@ -388,6 +388,24 @@ impl<T: Scalar> ScalarDist<T> {
         }
     }
 
+    /// Rebuild this distribution with plain-`f64` parameters `p`, in
+    /// [`param_vars`](Self::param_vars) order. The lane-batched executors
+    /// use this to evaluate one lane's fused kernel: read each tracked
+    /// parameter's lane value, rebuild, call [`logpdf_adj`](Self::logpdf_adj)
+    /// — identical arithmetic to the sequential fused path.
+    pub fn with_f64_params(&self, p: &[f64; MAX_DIST_PARAMS]) -> ScalarDist<f64> {
+        match self {
+            ScalarDist::Normal(_) => ScalarDist::Normal(Normal::new(p[0], p[1])),
+            ScalarDist::InverseGamma(_) => ScalarDist::InverseGamma(InverseGamma::new(p[0], p[1])),
+            ScalarDist::Gamma(_) => ScalarDist::Gamma(Gamma::new(p[0], p[1])),
+            ScalarDist::Beta(_) => ScalarDist::Beta(Beta::new(p[0], p[1])),
+            ScalarDist::Exponential(_) => ScalarDist::Exponential(Exponential::new(p[0])),
+            ScalarDist::Uniform(_) => ScalarDist::Uniform(Uniform::new(p[0], p[1])),
+            ScalarDist::Cauchy(_) => ScalarDist::Cauchy(Cauchy::new(p[0], p[1])),
+            ScalarDist::HalfCauchy(_) => ScalarDist::HalfCauchy(HalfCauchy::new(p[0])),
+        }
+    }
+
     /// Fused analytic adjoint: logpdf value + partials w.r.t. `x` and each
     /// parameter, all in one pass over primal values. Mirrors the guard
     /// branches of the generic `logpdf` exactly (out-of-support → −∞ with
@@ -622,6 +640,16 @@ impl<T: Scalar> VecDist<T> {
         }
     }
 
+    /// Rebuild with plain-`f64` parameters in [`param_vars`](Self::param_vars)
+    /// order; data-side structure (lengths, Dirichlet α) carries over. See
+    /// [`ScalarDist::with_f64_params`].
+    pub fn with_f64_params(&self, p: &[f64; MAX_DIST_PARAMS]) -> VecDist<f64> {
+        match self {
+            VecDist::IsoNormal(d) => VecDist::IsoNormal(IsoNormal::new(p[0], p[1], d.n)),
+            VecDist::Dirichlet(d) => VecDist::Dirichlet(d.clone()),
+        }
+    }
+
     /// Fused analytic adjoint of a vector log-density: per-component
     /// partials go into `d_x` (overwritten, `len()` entries), parameter
     /// partials into the returned [`ScalarAdj::d_p`]. Guard branches
@@ -804,6 +832,18 @@ impl<T: Scalar> DiscreteDist<T> {
             DiscreteDist::BernoulliLogit(d) => Some(d.logit),
             DiscreteDist::Poisson(d) => Some(d.rate),
             DiscreteDist::Categorical(_) => None,
+        }
+    }
+
+    /// Rebuild with a plain-`f64` parameter (see [`param_var`](Self::param_var));
+    /// Categorical probs are data and carry over. See
+    /// [`ScalarDist::with_f64_params`].
+    pub fn with_f64_param(&self, p: f64) -> DiscreteDist<f64> {
+        match self {
+            DiscreteDist::Bernoulli(_) => DiscreteDist::Bernoulli(Bernoulli::new(p)),
+            DiscreteDist::BernoulliLogit(_) => DiscreteDist::BernoulliLogit(BernoulliLogit::new(p)),
+            DiscreteDist::Poisson(_) => DiscreteDist::Poisson(Poisson::new(p)),
+            DiscreteDist::Categorical(d) => DiscreteDist::Categorical(d.clone()),
         }
     }
 

@@ -39,6 +39,26 @@ pub trait LogDensity: Sync {
         grad.copy_from_slice(&g);
         lp
     }
+
+    /// Value and gradient for K states at once. `thetas`/`grads` are
+    /// lane-major (`[l * dim .. (l+1) * dim]` is lane `l`); `lps` gets the
+    /// per-lane log-densities. The default loops [`LogDensity::logp_grad_into`]
+    /// per lane; the arena-fused native engine overrides it with one
+    /// lane-batched tape walk ([`crate::model::batched`]). Each lane's
+    /// result is bit-identical either way, so callers may batch or not
+    /// purely on performance grounds.
+    fn logp_grad_batch_into(&self, thetas: &[f64], lps: &mut [f64], grads: &mut [f64]) {
+        let dim = self.dim();
+        let lanes = lps.len();
+        assert_eq!(thetas.len(), dim * lanes);
+        assert_eq!(grads.len(), dim * lanes);
+        for l in 0..lanes {
+            lps[l] = self.logp_grad_into(
+                &thetas[l * dim..(l + 1) * dim],
+                &mut grads[l * dim..(l + 1) * dim],
+            );
+        }
+    }
 }
 
 /// Which Rust AD engine a native density uses.
@@ -137,6 +157,30 @@ impl<'a> LogDensity for NativeDensity<'a> {
                 let (lp, g) = self.logp_grad(theta);
                 grad.copy_from_slice(&g);
                 lp
+            }
+        }
+    }
+
+    fn logp_grad_batch_into(&self, thetas: &[f64], lps: &mut [f64], grads: &mut [f64]) {
+        match self.backend {
+            // fused: one K-lane tape walk, bit-identical per lane
+            Backend::ReverseFused => crate::model::batched::typed_grad_batch_into(
+                self.model,
+                self.tvi,
+                thetas,
+                lps.len(),
+                self.ctx,
+                lps,
+                grads,
+            ),
+            _ => {
+                let dim = self.tvi.dim();
+                for l in 0..lps.len() {
+                    lps[l] = self.logp_grad_into(
+                        &thetas[l * dim..(l + 1) * dim],
+                        &mut grads[l * dim..(l + 1) * dim],
+                    );
+                }
             }
         }
     }

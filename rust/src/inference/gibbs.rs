@@ -13,7 +13,8 @@ use crate::chain::SamplerStats;
 use crate::context::Context;
 use crate::dist::{bijector, Domain};
 use crate::model::{
-    init_trace, typed_grad_forward, typed_grad_fused, typed_grad_reverse, typed_logp, Model,
+    init_trace, typed_grad_forward, typed_grad_fused_masked_into, typed_grad_reverse, typed_logp,
+    Model,
 };
 use crate::particle::Resampler;
 use crate::util::rng::Rng;
@@ -114,7 +115,12 @@ impl GibbsBlock {
 pub enum GibbsGrad {
     Forward,
     Reverse,
-    /// Arena-fused reverse mode (`Backend::ReverseFused`).
+    /// Arena-fused reverse mode (`Backend::ReverseFused`) with the
+    /// block's conditional density masked at kernel-emission time:
+    /// out-of-block sites still contribute their exact full-joint lp,
+    /// but their values enter the tape as constants, so they (and glue
+    /// downstream of them) cost zero arena nodes. In-block gradient
+    /// entries are bitwise equal to the unmasked fused gradient.
     Fused,
 }
 
@@ -157,7 +163,7 @@ impl Gibbs {
         assert!(lp.is_finite(), "Gibbs initialized at zero-probability point");
 
         // Resolve blocks to coordinate index sets / discrete slots.
-        let mut cont_blocks: Vec<(usize, Vec<usize>)> = Vec::new(); // (block idx, θ coords)
+        let mut cont_blocks: Vec<(usize, Vec<usize>, Vec<bool>)> = Vec::new(); // (block idx, θ coords, slot mask)
         let mut disc_blocks: Vec<(usize, Vec<usize>)> = Vec::new(); // (block idx, slot idx)
         let mut pg_blocks: Vec<(usize, Vec<usize>)> = Vec::new(); // (block idx, slot idx)
         for (bi, block) in self.blocks.iter().enumerate() {
@@ -187,7 +193,13 @@ impl Gibbs {
                 BlockSampler::ParticleGibbs { .. } => pg_blocks.push((bi, all_slots)),
                 _ => {
                     assert!(slots.is_empty(), "continuous sampler over discrete vars");
-                    cont_blocks.push((bi, coords));
+                    // per-slot mask for the fused conditional gradient:
+                    // `true` = in this block (tracked on the tape)
+                    let mut mask = vec![false; tvi.slots().len()];
+                    for &si in &all_slots {
+                        mask[si] = true;
+                    }
+                    cont_blocks.push((bi, coords, mask));
                 }
             }
         }
@@ -218,7 +230,7 @@ impl Gibbs {
 
         for it in 0..warmup + iters {
             // continuous blocks
-            for (bi, coords) in &cont_blocks {
+            for (bi, coords, mask) in &cont_blocks {
                 match self.blocks[*bi].sampler {
                     BlockSampler::RwMh { scale } => {
                         let mut prop = theta.clone();
@@ -245,8 +257,22 @@ impl Gibbs {
                                 GibbsGrad::Reverse => {
                                     typed_grad_reverse(model, &tvi, th, Context::Default)
                                 }
+                                // full-joint fused kernels with out-of-block
+                                // sites masked to constants before emission —
+                                // same lp and same in-block gradient entries
+                                // as the unmasked pass, near-zero tape for
+                                // everything this block does not move
                                 GibbsGrad::Fused => {
-                                    typed_grad_fused(model, &tvi, th, Context::Default)
+                                    let mut g = vec![0.0; th.len()];
+                                    let lp = typed_grad_fused_masked_into(
+                                        model,
+                                        &tvi,
+                                        th,
+                                        Context::Default,
+                                        mask,
+                                        &mut g,
+                                    );
+                                    (lp, g)
                                 }
                             }
                         };
@@ -524,6 +550,73 @@ mod tests {
             (v_base - v_pg).abs() < 0.25 * (1.0 + v_base),
             "var: baseline {v_base} vs PG {v_pg}"
         );
+    }
+
+    #[test]
+    fn masked_fused_gradient_matches_full_joint_on_block_coords() {
+        use crate::model::{typed_grad_fused, typed_grad_fused_masked_into};
+        let mut rng = Xoshiro256pp::seed_from_u64(41);
+        let y: Vec<f64> = (0..50).map(|_| 1.0 + 0.5 * rng.normal()).collect();
+        let m = GaussUnknown { y };
+        let tvi = init_typed(&m, &mut rng);
+        let theta: Vec<f64> = tvi.unconstrained.iter().map(|x| x * 0.7 + 0.1).collect();
+
+        // block = {m}: the var site (and all glue hanging off it) is masked
+        let mask: Vec<bool> = tvi.slots().iter().map(|s| s.vn == VarName::new("m")).collect();
+        assert_eq!(mask.iter().filter(|&&b| b).count(), 1);
+        let mut g_mask = vec![0.0; theta.len()];
+        let lp_mask = typed_grad_fused_masked_into(
+            &m,
+            &tvi,
+            &theta,
+            Context::Default,
+            &mask,
+            &mut g_mask,
+        );
+        let nodes_masked = crate::ad::arena::last_stats().nodes;
+
+        let (lp_full, g_full) = typed_grad_fused(&m, &tvi, &theta, Context::Default);
+        let nodes_full = crate::ad::arena::last_stats().nodes;
+
+        // the masked pass still scores the full joint — bitwise
+        assert_eq!(lp_full.to_bits(), lp_mask.to_bits());
+        // in-block gradient entries are bitwise identical; masked
+        // coordinates come back exactly zero
+        for (si, slot) in tvi.slots().iter().enumerate() {
+            for c in slot.unc_offset..slot.unc_offset + slot.unc_len {
+                if mask[si] {
+                    assert_eq!(g_full[c].to_bits(), g_mask[c].to_bits(), "coord {c}");
+                } else {
+                    assert_eq!(g_mask[c], 0.0, "masked coord {c}");
+                }
+            }
+        }
+        // the whole point: out-of-block sites cost zero arena nodes
+        // (var's invlink node and the (var*2).sqrt()/var.sqrt() glue gone)
+        assert!(
+            nodes_masked < nodes_full,
+            "masked tape not smaller: {nodes_masked} vs {nodes_full}"
+        );
+        assert_eq!(nodes_masked, 0, "GaussUnknown's m-block tape should be all seeds");
+    }
+
+    #[test]
+    fn gibbs_fused_grad_mixes_like_forward() {
+        let mut rng = Xoshiro256pp::seed_from_u64(27);
+        let y: Vec<f64> = (0..200).map(|_| 1.5 + 0.7 * rng.normal()).collect();
+        let m = GaussUnknown { y };
+        let tvi = init_typed(&m, &mut rng);
+        let gibbs = Gibbs {
+            blocks: vec![
+                GibbsBlock::rwmh(&["var"], 0.3),
+                GibbsBlock::hmc(&["m"], 0.05, 8),
+            ],
+            grad: GibbsGrad::Fused,
+        };
+        let out = gibbs.sample(&m, &tvi, 1000, 4000, &mut rng);
+        let means: Vec<f64> = out.rows.iter().map(|r| r[1]).collect();
+        assert!((stats::mean(&means) - 1.5).abs() < 0.1, "{}", stats::mean(&means));
+        assert!(out.logps.iter().all(|lp| lp.is_finite()));
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Multi-chain lane gang: K chains share one batched gradient pass.
+//!
+//! Each chain keeps its own sampler state — RNG stream, step size,
+//! adaptation schedule, trajectory — and runs unmodified on its own
+//! thread. The only shared piece is the gradient: a [`LaneDensity`]
+//! handed to each chain routes `logp_grad_into` through a [`LaneGang`]
+//! rendezvous, where the *last* chain to arrive packs every waiting
+//! chain's θ into one lane-major buffer and runs a single
+//! [`LogDensity::logp_grad_batch_into`] call (one K-lane tape walk on the
+//! fused engine) while the rest block on a condvar.
+//!
+//! Because the batched engine is bit-identical per lane and every chain
+//! consumes only its own RNG stream, the draws are bit-identical to
+//! running the chains sequentially with the same seeds — batching changes
+//! wall-clock, never results.
+//!
+//! Chains retire independently: NUTS trajectories take different numbers
+//! of leapfrogs, and warmup lengths differ per config, so a chain that
+//! finishes calls [`LaneGang::leave`] and the gang shrinks — later
+//! rendezvous simply batch fewer lanes (down to plain sequential calls
+//! when one chain remains). The rendezvous never times out: a missing
+//! lane is always either about to submit or about to leave.
+
+use std::sync::{Condvar, Mutex};
+
+use crate::gradient::LogDensity;
+
+struct GangState {
+    /// Lanes still sampling (submitters the rendezvous waits for).
+    active: usize,
+    /// Lanes currently parked in this round.
+    submitted: usize,
+    /// Round counter: bumped once per batched evaluation so parked lanes
+    /// know their results are ready.
+    generation: u64,
+    /// Which lane slots hold a pending θ this round.
+    present: Vec<bool>,
+    /// Per-lane slots, lane-major (`[lane * dim ..]`); each slot is
+    /// written only by its own lane, so slots survive across rounds
+    /// without handshakes.
+    thetas: Vec<f64>,
+    lps: Vec<f64>,
+    grads: Vec<f64>,
+    /// Contiguous pack buffers for the batched call (submitted lanes
+    /// only, in ascending lane order).
+    pack_thetas: Vec<f64>,
+    pack_lps: Vec<f64>,
+    pack_grads: Vec<f64>,
+}
+
+/// Rendezvous point for K lane threads sharing one [`LogDensity`].
+pub struct LaneGang<'a> {
+    ld: &'a dyn LogDensity,
+    dim: usize,
+    state: Mutex<GangState>,
+    cv: Condvar,
+}
+
+impl<'a> LaneGang<'a> {
+    pub fn new(ld: &'a dyn LogDensity, lanes: usize) -> Self {
+        assert!(lanes > 0);
+        let dim = ld.dim();
+        Self {
+            ld,
+            dim,
+            state: Mutex::new(GangState {
+                active: lanes,
+                submitted: 0,
+                generation: 0,
+                present: vec![false; lanes],
+                thetas: vec![0.0; lanes * dim],
+                lps: vec![0.0; lanes],
+                grads: vec![0.0; lanes * dim],
+                pack_thetas: vec![0.0; lanes * dim],
+                pack_lps: vec![0.0; lanes],
+                pack_grads: vec![0.0; lanes * dim],
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Plain log-density needs no gang: it is cheap relative to gradients
+    /// and appears off the leapfrog hot loop (initialization, divergence
+    /// checks), where waiting on a rendezvous would deadlock against
+    /// lanes that never make the matching call.
+    pub fn logp(&self, theta: &[f64]) -> f64 {
+        self.ld.logp(theta)
+    }
+
+    /// Submit this lane's θ and block until the round's batched gradient
+    /// evaluation has run (the last arriver runs it in-lock).
+    pub fn logp_grad_into(&self, lane: usize, theta: &[f64], grad: &mut [f64]) -> f64 {
+        let dim = self.dim;
+        let mut st = self.state.lock().expect("lane gang poisoned");
+        debug_assert!(!st.present[lane], "lane {lane} double-submitted");
+        st.thetas[lane * dim..(lane + 1) * dim].copy_from_slice(theta);
+        st.present[lane] = true;
+        st.submitted += 1;
+        let gen = st.generation;
+        if st.submitted == st.active {
+            self.run_round(&mut st);
+            self.cv.notify_all();
+        } else {
+            while st.generation == gen {
+                st = self.cv.wait(st).expect("lane gang poisoned");
+            }
+        }
+        grad.copy_from_slice(&st.grads[lane * dim..(lane + 1) * dim]);
+        st.lps[lane]
+    }
+
+    /// This lane is done sampling; if everyone else is already parked,
+    /// run their round on the way out.
+    pub fn leave(&self, lane: usize) {
+        let mut st = self.state.lock().expect("lane gang poisoned");
+        debug_assert!(!st.present[lane], "lane {lane} left mid-round");
+        st.active -= 1;
+        if st.active > 0 && st.submitted == st.active {
+            self.run_round(&mut st);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Pack the submitted lanes contiguously, run one batched gradient
+    /// call, scatter results back to the per-lane slots.
+    fn run_round(&self, st: &mut GangState) {
+        let dim = self.dim;
+        let k = st.submitted;
+        debug_assert!(k > 0);
+        let members: Vec<usize> = (0..st.present.len()).filter(|&l| st.present[l]).collect();
+        debug_assert_eq!(members.len(), k);
+        for (i, &l) in members.iter().enumerate() {
+            st.pack_thetas[i * dim..(i + 1) * dim]
+                .copy_from_slice(&st.thetas[l * dim..(l + 1) * dim]);
+        }
+        self.ld.logp_grad_batch_into(
+            &st.pack_thetas[..k * dim],
+            &mut st.pack_lps[..k],
+            &mut st.pack_grads[..k * dim],
+        );
+        for (i, &l) in members.iter().enumerate() {
+            st.lps[l] = st.pack_lps[i];
+            st.grads[l * dim..(l + 1) * dim]
+                .copy_from_slice(&st.pack_grads[i * dim..(i + 1) * dim]);
+            st.present[l] = false;
+        }
+        st.submitted = 0;
+        st.generation += 1;
+    }
+}
+
+/// One lane's view of the gang — a [`LogDensity`] a stock sampler can
+/// drive without knowing it shares gradient passes with K−1 siblings.
+pub struct LaneDensity<'g, 'a> {
+    gang: &'g LaneGang<'a>,
+    lane: usize,
+}
+
+impl<'g, 'a> LaneDensity<'g, 'a> {
+    pub fn new(gang: &'g LaneGang<'a>, lane: usize) -> Self {
+        Self { gang, lane }
+    }
+}
+
+impl<'g, 'a> LogDensity for LaneDensity<'g, 'a> {
+    fn dim(&self) -> usize {
+        self.gang.dim()
+    }
+
+    fn logp(&self, theta: &[f64]) -> f64 {
+        self.gang.logp(theta)
+    }
+
+    fn logp_grad(&self, theta: &[f64]) -> (f64, Vec<f64>) {
+        let mut g = vec![0.0; self.gang.dim()];
+        let lp = self.gang.logp_grad_into(self.lane, theta, &mut g);
+        (lp, g)
+    }
+
+    fn logp_grad_into(&self, theta: &[f64], grad: &mut [f64]) -> f64 {
+        self.gang.logp_grad_into(self.lane, theta, grad)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gradient::std_normal_density;
+
+    #[test]
+    fn gang_matches_direct_evaluation_across_threads() {
+        let ld = std_normal_density(3);
+        let gang = LaneGang::new(&ld, 4);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|l| {
+                    let gang = &gang;
+                    s.spawn(move || {
+                        let lane = LaneDensity::new(gang, l);
+                        let base = l as f64;
+                        let mut g = vec![0.0; 3];
+                        // different call counts per lane: lane l does l+1
+                        // rounds before leaving — the gang must shrink
+                        for r in 0..=l {
+                            let th = [base + r as f64, -base, 0.5 * base];
+                            let lp = lane.logp_grad_into(&th, &mut g);
+                            let (elp, eg) = ld.logp_grad(&th);
+                            assert_eq!(lp.to_bits(), elp.to_bits());
+                            assert_eq!(g, eg);
+                        }
+                        gang.leave(l);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+    }
+}

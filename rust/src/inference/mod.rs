@@ -8,6 +8,7 @@
 pub mod adapt;
 pub mod gibbs;
 pub mod hmc;
+pub mod lanes;
 pub mod mh;
 pub mod nuts;
 pub mod run;
@@ -17,7 +18,11 @@ pub use gibbs::{BlockSampler, Gibbs, GibbsBlock};
 pub use hmc::Hmc;
 pub use mh::RwMh;
 pub use nuts::Nuts;
-pub use run::{raw_to_chain, sample_chain, sample_chains, sample_smc_chain, SamplerKind};
+pub use lanes::{LaneDensity, LaneGang};
+pub use run::{
+    raw_to_chain, sample_chain, sample_chains, sample_chains_batched, sample_smc_chain,
+    SamplerKind,
+};
 pub use smc::{csmc_sweep, Csmc, Smc, SmcCloud, SmcResult};
 
 use crate::chain::SamplerStats;

@@ -82,6 +82,46 @@ where
     MultiChain::new(parallel_map(threads, n_chains, make))
 }
 
+/// Run `lanes` chains whose gradient passes are fused into K-lane batched
+/// evaluations through a [`super::lanes::LaneGang`]: every chain keeps its
+/// own RNG stream (`seed + lane`), step size and adaptation, so each
+/// chain's draws are bit-identical to [`sample_chain`] with the same seed
+/// — only wall-clock changes. Gradient-driven samplers only (HMC/NUTS);
+/// chains retire from the gang independently as they finish.
+pub fn sample_chains_batched(
+    ld: &dyn LogDensity,
+    tvi: &TypedVarInfo,
+    kind: &SamplerKind,
+    warmup: usize,
+    iters: usize,
+    seed: u64,
+    lanes: usize,
+) -> MultiChain {
+    assert!(
+        matches!(kind, SamplerKind::Hmc(_) | SamplerKind::Nuts(_)),
+        "lane-batched chains need a gradient-driven sampler (HMC/NUTS)"
+    );
+    let gang = super::lanes::LaneGang::new(ld, lanes);
+    let chains = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..lanes)
+            .map(|l| {
+                let gang = &gang;
+                s.spawn(move || {
+                    let lane_ld = super::lanes::LaneDensity::new(gang, l);
+                    let chain = sample_chain(&lane_ld, tvi, kind, warmup, iters, seed + l as u64);
+                    gang.leave(l);
+                    chain
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("lane chain thread panicked"))
+            .collect()
+    });
+    MultiChain::new(chains)
+}
+
 /// Run one SMC "chain": a full particle-filter pass over the model's
 /// observations, returned as an equal-weight chain of `n_particles`
 /// draws whose `stats.log_evidence` carries the marginal-likelihood

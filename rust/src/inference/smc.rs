@@ -61,6 +61,12 @@ pub struct Smc {
     /// layout holds (default). `false` forces the boxed `ReplayExecutor`
     /// path — the benchmark baseline and a debugging escape hatch.
     pub use_typed: bool,
+    /// Propagate the whole typed cloud in one lane-batched replay per
+    /// observation step (default; continuous models only). A step the
+    /// batched walk cannot replicate bit-for-bit — a lane rejection or a
+    /// structure change — re-runs through the per-particle path with the
+    /// same seeds, so results never depend on this flag.
+    pub use_batched: bool,
 }
 
 impl Default for Smc {
@@ -71,6 +77,7 @@ impl Default for Smc {
             ess_threshold: 0.5,
             threads: 1,
             use_typed: true,
+            use_batched: true,
         }
     }
 }
@@ -221,6 +228,17 @@ impl Smc {
         for t in 0..n_obs {
             state = match state {
                 SmcCloud::Typed { mut cloud, template } => {
+                    // one K-lane replay for the whole population; `None`
+                    // (lane rejection / structure change) falls through to
+                    // the per-particle path, which re-runs the *same* step
+                    // with the same seeds — bitwise-equal either way
+                    let batched = self.use_batched
+                        && cloud.particles[0].state.discrete.is_empty()
+                        && cloud.advance_batched(model, seed).is_some();
+                    if batched {
+                        typed_steps += 1;
+                        SmcCloud::Typed { cloud, template }
+                    } else {
                     match cloud.advance(model, seed, self.threads) {
                         Ok(_) => {
                             typed_steps += 1;
@@ -237,6 +255,7 @@ impl Smc {
                                 .expect("boxed replay cannot mismatch");
                             SmcCloud::Boxed(b)
                         }
+                    }
                     }
                 }
                 SmcCloud::Boxed(mut b) => {
@@ -550,6 +569,33 @@ mod tests {
         for i in 0..256 {
             assert_eq!(lt[i].to_bits(), lb[i].to_bits());
             assert_eq!(typed.cloud.value_of(i, &vn), boxed.cloud.value_of(i, &vn));
+        }
+    }
+
+    #[test]
+    fn batched_and_per_particle_smc_agree_bitwise() {
+        // the lane-batched cloud replay must be invisible in the results:
+        // same seeds, bitwise-equal evidence, weights and values
+        let m = demo_model();
+        let batched = Smc {
+            n_particles: 128,
+            ..Smc::default()
+        }
+        .run(&m, 77);
+        let plain = Smc {
+            n_particles: 128,
+            use_batched: false,
+            ..Smc::default()
+        }
+        .run(&m, 77);
+        assert!(batched.cloud.is_typed() && plain.cloud.is_typed());
+        assert_eq!(batched.log_evidence.to_bits(), plain.log_evidence.to_bits());
+        assert_eq!(batched.resamples, plain.resamples);
+        let (lb, lp) = (batched.cloud.log_weights(), plain.cloud.log_weights());
+        let vn = VarName::new("m");
+        for i in 0..128 {
+            assert_eq!(lb[i].to_bits(), lp[i].to_bits());
+            assert_eq!(batched.cloud.value_of(i, &vn), plain.cloud.value_of(i, &vn));
         }
     }
 

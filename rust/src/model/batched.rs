@@ -1,0 +1,1085 @@
+//! Lane-batched executors: one tilde walk, K evaluation lanes.
+//!
+//! The per-statement bookkeeping of the fused path — cursor stepping,
+//! dispatch into the distribution enum, node/seed pushes — is identical
+//! for every chain, particle or ELBO draw evaluated at the same typed
+//! layout. These executors pay it **once** and run each statement's
+//! arithmetic across all K lanes in contiguous inner loops over
+//! coordinate-major buffers (`theta_t[coord * K + lane]`):
+//!
+//! - [`BatchedFusedExecutor`] — the gradient path. Walks the tilde program
+//!   exactly like [`super::executors::TypedFusedExecutor`], but evaluates
+//!   each distribution's fused `logpdf_adj` kernel per lane (parameters
+//!   rebuilt from the lane's values via `with_f64_params` — the same
+//!   closed-form f64 arithmetic the sequential kernel runs) and records
+//!   lane-strided seeds on the [`crate::ad::batch::BatchTape`]. Per-lane
+//!   accumulators keep rejection independent: a lane that hits −∞ stops
+//!   accumulating and its seed weights drop to zero, while the other lanes
+//!   proceed untouched; [`typed_grad_batch_into`] masks the rejected
+//!   lane's gradient at the output exactly as the sequential path does.
+//! - [`BatchedReplayExecutor`] — the SMC path. Replays/regenerates a whole
+//!   particle cloud over a [`BatchVarInfo`] in one walk, one RNG per lane
+//!   (so each lane consumes exactly the draw stream its sequential replay
+//!   would). Anything the one-walk-many-lanes shape cannot express
+//!   bit-identically — a layout mismatch, a discrete assume (one `i64`
+//!   return can't carry K diverging values), or any lane rejecting
+//!   mid-walk (the sequential body early-returns, leaving later slots
+//!   undrawn) — demotes: the run reports `None`, the gathered buffers are
+//!   discarded, and the caller redoes the step on the per-particle path.
+//!
+//! Branches in model glue code resolve against lane 0's primal (the
+//! [`BVar`] caveat); the tilde statements themselves never branch on lane
+//! values, so per-lane results stay bit-identical to sequential runs.
+//! Per-site `obs::profile` rows remain a sequential-path feature — the
+//! batched executors skip profiling hooks rather than attribute one row to
+//! K lanes.
+
+use rand_core::RngCore;
+
+use crate::ad::batch::{self, BVar};
+use crate::ad::Scalar;
+use crate::context::{Accumulator, Context};
+use crate::dist::{bijector, DiscreteDist, Domain, ScalarDist, VecDist};
+use crate::obs::metrics::{self, Counter};
+use crate::varinfo::{flags, BatchVarInfo, TypedVarInfo};
+use crate::varname::VarName;
+
+use super::executors::{cursor_next_slot, ReplayScope};
+use super::{Model, TildeApi};
+
+/// Accumulate a prior-side term on one lane; returns the weight the lane's
+/// seeds carry (0.0 when the term is dropped — context weight zero, or the
+/// lane was already/just rejected). Mirrors `FusedCore::prior_seed_weight`.
+#[inline]
+fn prior_seed_weight(acc: &mut Accumulator<f64>, lp: f64, prior_w: f64) -> f64 {
+    let pre = acc.rejected();
+    acc.add_prior(lp);
+    if !pre && !acc.rejected() {
+        prior_w
+    } else {
+        0.0
+    }
+}
+
+/// Accumulate a likelihood-side term on one lane at the window-resolved
+/// weight `w`; returns the weight the lane's seeds carry. Mirrors
+/// `FusedCore::lik_seed_weight`.
+#[inline]
+fn lik_seed_weight(acc: &mut Accumulator<f64>, lp: f64, w: f64) -> f64 {
+    let pre = acc.rejected();
+    acc.add_lik_weighted(lp, w);
+    if !pre && !acc.rejected() {
+        w
+    } else {
+        0.0
+    }
+}
+
+/// `ws[l] = d[l] * w[l]`, with `w == 0` forced to an exact 0.0: a lane
+/// whose statement weight dropped to zero must contribute *no* seed —
+/// exactly as the sequential path, which never pushes the seed — even when
+/// its (unused) partial is NaN/∞ and the product would not be 0.
+#[inline]
+fn weighted_into(ws: &mut [f64], ds: &[f64], w: &[f64]) {
+    for l in 0..ws.len() {
+        ws[l] = if w[l] == 0.0 { 0.0 } else { ds[l] * w[l] };
+    }
+}
+
+/// Reused lane-strided buffers for the batched fused core, parked in a
+/// thread-local between evaluations so the steady-state gradient path
+/// allocates nothing.
+#[derive(Default)]
+struct BatchScratch {
+    /// Per-lane values of the statement's distribution parameters.
+    p0: Vec<f64>,
+    p1: Vec<f64>,
+    /// Per-lane constrained value / dx_dy of a scalar assume.
+    xv: Vec<f64>,
+    dv: Vec<f64>,
+    /// Per-lane kernel outputs (SoA mirror of `ScalarAdj`/`ScalarLink`).
+    lp: Vec<f64>,
+    d_x: Vec<f64>,
+    dp0: Vec<f64>,
+    dp1: Vec<f64>,
+    ladj: Vec<f64>,
+    dladj: Vec<f64>,
+    /// Per-lane statement seed weights and a weight-product buffer.
+    w: Vec<f64>,
+    ws: Vec<f64>,
+    /// One lane's constrained vector / per-component density partials.
+    xl: Vec<f64>,
+    dxl: Vec<f64>,
+    /// Component-major lane matrices for vector statements
+    /// (`xm[comp * K + lane]`).
+    xm: Vec<f64>,
+    dxm: Vec<f64>,
+    /// Simplex invlink leaves.
+    yv: Vec<BVar>,
+}
+
+thread_local! {
+    static BATCH_SCRATCH: std::cell::RefCell<BatchScratch> =
+        std::cell::RefCell::new(BatchScratch::default());
+}
+
+fn take_batch_scratch() -> BatchScratch {
+    BATCH_SCRATCH.with(|s| std::mem::take(&mut s.borrow_mut()))
+}
+
+fn park_batch_scratch(scratch: BatchScratch) {
+    BATCH_SCRATCH.with(|s| *s.borrow_mut() = scratch);
+}
+
+/// The K-lane mirror of `FusedCore`: one accumulator per lane, statement
+/// kernels evaluated lane-by-lane over rebuilt f64 distributions, seeds
+/// recorded lane-strided in the sequential path's seed order.
+struct BatchedCore {
+    accs: Vec<Accumulator<f64>>,
+    ctx: Context,
+    prior_w: f64,
+    lanes: usize,
+    s: BatchScratch,
+}
+
+impl BatchedCore {
+    fn new(ctx: Context, lanes: usize) -> Self {
+        Self {
+            accs: (0..lanes).map(|_| Accumulator::new(ctx)).collect(),
+            ctx,
+            prior_w: ctx.prior_weight(),
+            lanes,
+            s: take_batch_scratch(),
+        }
+    }
+
+    /// Per-lane final log-densities; parks the scratch for the next run.
+    fn finish_into(self, lps: &mut [f64]) {
+        debug_assert_eq!(lps.len(), self.lanes);
+        for (lp, acc) in lps.iter_mut().zip(&self.accs) {
+            *lp = acc.total();
+        }
+        park_batch_scratch(self.s);
+    }
+
+    #[inline]
+    fn all_rejected(&self) -> bool {
+        self.accs.iter().all(|a| a.rejected())
+    }
+
+    #[inline]
+    fn reject_all(&mut self) {
+        for a in &mut self.accs {
+            a.reject();
+        }
+    }
+
+    /// Advance every lane's observation counter; the window weight is
+    /// lane-independent (same context), so return the shared value.
+    #[inline]
+    fn note_obs_all(&mut self) -> f64 {
+        let mut cw = 0.0;
+        for a in &mut self.accs {
+            cw = a.note_obs();
+        }
+        cw
+    }
+
+    /// Read the K lane values of both parameter slots of a statement.
+    fn read_params(s: &mut BatchScratch, ps: &[BVar], lanes: usize) {
+        s.p0.resize(lanes, 0.0);
+        s.p1.resize(lanes, 0.0);
+        batch::with_tape(|t| {
+            t.read_lanes(ps[0], &mut s.p0);
+            t.read_lanes(ps[1], &mut s.p1);
+        });
+    }
+
+    fn assume_scalar(
+        &mut self,
+        theta_t: &[f64],
+        off: usize,
+        domain: &Domain,
+        dist: &ScalarDist<BVar>,
+    ) -> BVar {
+        let BatchedCore {
+            ref mut accs,
+            ref mut s,
+            prior_w,
+            lanes: k,
+            ..
+        } = *self;
+        let (ps, np) = dist.param_vars();
+        Self::read_params(s, &ps, k);
+        s.xv.resize(k, 0.0);
+        s.dv.resize(k, 0.0);
+        s.lp.resize(k, 0.0);
+        s.d_x.resize(k, 0.0);
+        s.dp0.resize(k, 0.0);
+        s.dp1.resize(k, 0.0);
+        s.dladj.resize(k, 0.0);
+        // per-lane invlink + kernel: the same closed-form f64 arithmetic
+        // the sequential fused path runs, lane by lane
+        for l in 0..k {
+            let link = bijector::invlink_scalar_adj(domain, theta_t[off * k + l]);
+            let dl = dist.with_f64_params(&[s.p0[l], s.p1[l]]);
+            let adj = dl.logpdf_adj(link.x);
+            s.xv[l] = link.x;
+            s.dv[l] = link.dx_dy;
+            s.lp[l] = adj.lp + link.ladj;
+            s.d_x[l] = adj.d_x;
+            s.dp0[l] = adj.d_p[0];
+            s.dp1[l] = adj.d_p[1];
+            s.dladj[l] = link.dladj_dy;
+        }
+        let x = if matches!(domain, Domain::Real) {
+            BVar::leaf(off as u32, s.xv[0])
+        } else {
+            let idx = batch::with_tape(|t| t.push1_lanes(off as u32, &s.xv, &s.dv));
+            BVar::from_node(idx, s.xv[0])
+        };
+        s.w.resize(k, 0.0);
+        for l in 0..k {
+            s.w[l] = prior_seed_weight(&mut accs[l], s.lp[l], prior_w);
+        }
+        // seed groups in the sequential path's order: d_x, dladj, params
+        s.ws.resize(k, 0.0);
+        batch::with_tape(|t| {
+            weighted_into(&mut s.ws, &s.d_x, &s.w);
+            t.seed_lanes(x.idx(), &s.ws);
+            weighted_into(&mut s.ws, &s.dladj, &s.w);
+            t.seed_lanes(off as u32, &s.ws);
+            if np >= 1 {
+                weighted_into(&mut s.ws, &s.dp0, &s.w);
+                t.seed_lanes(ps[0].idx(), &s.ws);
+            }
+            if np >= 2 {
+                weighted_into(&mut s.ws, &s.dp1, &s.w);
+                t.seed_lanes(ps[1].idx(), &s.ws);
+            }
+        });
+        x
+    }
+
+    fn assume_vec(
+        &mut self,
+        theta_t: &[f64],
+        off: usize,
+        domain: &Domain,
+        dist: &VecDist<BVar>,
+    ) -> Vec<BVar> {
+        let BatchedCore {
+            ref mut accs,
+            ref mut s,
+            prior_w,
+            lanes: k,
+            ..
+        } = *self;
+        let n = domain.constrained_dim();
+        let (ps, np) = dist.param_vars();
+        Self::read_params(s, &ps, k);
+        s.xm.resize(n * k, 0.0);
+        s.ladj.clear();
+        s.ladj.resize(k, 0.0);
+        // value nodes + per-lane ladj, mirroring `fused_assume_vec`
+        let (out, ladj_node) = match domain {
+            Domain::RealVec(_) => {
+                for i in 0..n {
+                    for l in 0..k {
+                        s.xm[i * k + l] = theta_t[(off + i) * k + l];
+                    }
+                }
+                let out: Vec<BVar> = (0..n)
+                    .map(|i| BVar::leaf((off + i) as u32, s.xm[i * k]))
+                    .collect();
+                (out, BVar::constant(0.0))
+            }
+            Domain::PositiveVec(_) => {
+                let mut out = Vec::with_capacity(n);
+                s.xv.resize(k, 0.0);
+                for i in 0..n {
+                    for l in 0..k {
+                        let y = theta_t[(off + i) * k + l];
+                        let x = y.exp();
+                        s.ladj[l] += y;
+                        s.xv[l] = x;
+                        s.xm[i * k + l] = x;
+                    }
+                    // value = dx/dy = exp(y), as in the sequential push
+                    let idx = batch::with_tape(|t| t.push1_lanes((off + i) as u32, &s.xv, &s.xv));
+                    out.push(BVar::from_node(idx, s.xv[0]));
+                }
+                (out, BVar::constant(0.0))
+            }
+            Domain::Simplex(_) => {
+                let m = domain.unconstrained_dim();
+                s.yv.clear();
+                s.yv.extend(
+                    (0..m).map(|i| BVar::leaf((off + i) as u32, theta_t[(off + i) * k])),
+                );
+                let mut out = vec![BVar::constant(0.0); n];
+                // generic stick-breaking over BVar: node-for-node the
+                // sequential AVar structure, per-lane identical arithmetic
+                let ladj = bijector::invlink_slice(domain, &s.yv, &mut out);
+                s.xv.resize(k, 0.0);
+                batch::with_tape(|t| {
+                    for (i, x) in out.iter().enumerate() {
+                        t.read_lanes(*x, &mut s.xv);
+                        s.xm[i * k..i * k + k].copy_from_slice(&s.xv);
+                    }
+                    t.read_lanes(ladj, &mut s.ladj);
+                });
+                (out, ladj)
+            }
+            other => panic!("vector assume over scalar/discrete domain {other:?}"),
+        };
+        // per-lane density kernel
+        s.dxm.resize(n * k, 0.0);
+        s.lp.resize(k, 0.0);
+        s.dp0.resize(k, 0.0);
+        s.dp1.resize(k, 0.0);
+        for l in 0..k {
+            s.xl.clear();
+            s.xl.extend((0..n).map(|i| s.xm[i * k + l]));
+            s.dxl.clear();
+            s.dxl.resize(n, 0.0);
+            let dl = dist.with_f64_params(&[s.p0[l], s.p1[l]]);
+            let adj = dl.logpdf_adj(&s.xl, &mut s.dxl);
+            for i in 0..n {
+                s.dxm[i * k + l] = s.dxl[i];
+            }
+            s.lp[l] = adj.lp + s.ladj[l];
+            s.dp0[l] = adj.d_p[0];
+            s.dp1[l] = adj.d_p[1];
+        }
+        s.w.resize(k, 0.0);
+        for l in 0..k {
+            s.w[l] = prior_seed_weight(&mut accs[l], s.lp[l], prior_w);
+        }
+        // seeds in the sequential `seed_assume_vec` order:
+        // components, ladj (domain-dependent), params
+        s.ws.resize(k, 0.0);
+        batch::with_tape(|t| {
+            for (i, x) in out.iter().enumerate() {
+                weighted_into(&mut s.ws, &s.dxm[i * k..i * k + k], &s.w);
+                t.seed_lanes(x.idx(), &s.ws);
+            }
+            match domain {
+                Domain::PositiveVec(nn) => {
+                    for i in 0..*nn {
+                        t.seed_lanes((off + i) as u32, &s.w);
+                    }
+                }
+                Domain::Simplex(_) => t.seed_lanes(ladj_node.idx(), &s.w),
+                _ => {}
+            }
+            if np >= 1 {
+                weighted_into(&mut s.ws, &s.dp0, &s.w);
+                t.seed_lanes(ps[0].idx(), &s.ws);
+            }
+            if np >= 2 {
+                weighted_into(&mut s.ws, &s.dp1, &s.w);
+                t.seed_lanes(ps[1].idx(), &s.ws);
+            }
+        });
+        out
+    }
+
+    /// Score a discrete assume whose (lane-uniform) value `kval` the
+    /// caller fetched from the shared typed trace.
+    fn assume_int(&mut self, kval: i64, dist: &DiscreteDist<BVar>) -> i64 {
+        let BatchedCore {
+            ref mut accs,
+            ref mut s,
+            prior_w,
+            lanes: k,
+            ..
+        } = *self;
+        let pv = dist.param_var();
+        s.p0.resize(k, 0.0);
+        batch::with_tape(|t| t.read_lanes(pv.unwrap_or_else(|| BVar::constant(0.0)), &mut s.p0));
+        s.lp.resize(k, 0.0);
+        s.dp0.resize(k, 0.0);
+        for l in 0..k {
+            let (lp, dp) = dist.with_f64_param(s.p0[l]).logpmf_adj(kval);
+            s.lp[l] = lp;
+            s.dp0[l] = dp;
+        }
+        s.w.resize(k, 0.0);
+        for l in 0..k {
+            s.w[l] = prior_seed_weight(&mut accs[l], s.lp[l], prior_w);
+        }
+        if let Some(p) = pv {
+            s.ws.resize(k, 0.0);
+            weighted_into(&mut s.ws, &s.dp0, &s.w);
+            batch::with_tape(|t| t.seed_lanes(p.idx(), &s.ws));
+        }
+        kval
+    }
+
+    fn observe(&mut self, dist: &ScalarDist<BVar>, obs: f64) {
+        let cw = self.note_obs_all();
+        if cw == 0.0 {
+            return; // out-of-window / zero-weight: no kernel, no seeds
+        }
+        let BatchedCore {
+            ref mut accs,
+            ref mut s,
+            lanes: k,
+            ..
+        } = *self;
+        let (ps, np) = dist.param_vars();
+        Self::read_params(s, &ps, k);
+        s.lp.resize(k, 0.0);
+        s.dp0.resize(k, 0.0);
+        s.dp1.resize(k, 0.0);
+        for l in 0..k {
+            let adj = dist.with_f64_params(&[s.p0[l], s.p1[l]]).logpdf_adj(obs);
+            s.lp[l] = adj.lp;
+            s.dp0[l] = adj.d_p[0];
+            s.dp1[l] = adj.d_p[1];
+        }
+        s.w.resize(k, 0.0);
+        for l in 0..k {
+            s.w[l] = lik_seed_weight(&mut accs[l], s.lp[l], cw);
+        }
+        s.ws.resize(k, 0.0);
+        batch::with_tape(|t| {
+            if np >= 1 {
+                weighted_into(&mut s.ws, &s.dp0, &s.w);
+                t.seed_lanes(ps[0].idx(), &s.ws);
+            }
+            if np >= 2 {
+                weighted_into(&mut s.ws, &s.dp1, &s.w);
+                t.seed_lanes(ps[1].idx(), &s.ws);
+            }
+        });
+    }
+
+    fn observe_int(&mut self, dist: &DiscreteDist<BVar>, obs: i64) {
+        let cw = self.note_obs_all();
+        if cw == 0.0 {
+            return;
+        }
+        let BatchedCore {
+            ref mut accs,
+            ref mut s,
+            lanes: k,
+            ..
+        } = *self;
+        let pv = dist.param_var();
+        s.p0.resize(k, 0.0);
+        batch::with_tape(|t| t.read_lanes(pv.unwrap_or_else(|| BVar::constant(0.0)), &mut s.p0));
+        s.lp.resize(k, 0.0);
+        s.dp0.resize(k, 0.0);
+        for l in 0..k {
+            let (lp, dp) = dist.with_f64_param(s.p0[l]).logpmf_adj(obs);
+            s.lp[l] = lp;
+            s.dp0[l] = dp;
+        }
+        s.w.resize(k, 0.0);
+        for l in 0..k {
+            s.w[l] = lik_seed_weight(&mut accs[l], s.lp[l], cw);
+        }
+        if let Some(p) = pv {
+            s.ws.resize(k, 0.0);
+            weighted_into(&mut s.ws, &s.dp0, &s.w);
+            batch::with_tape(|t| t.seed_lanes(p.idx(), &s.ws));
+        }
+    }
+
+    fn observe_vec(&mut self, dist: &VecDist<BVar>, obs: &[f64]) {
+        let cw = self.note_obs_all();
+        if cw == 0.0 {
+            return;
+        }
+        let BatchedCore {
+            ref mut accs,
+            ref mut s,
+            lanes: k,
+            ..
+        } = *self;
+        let (ps, np) = dist.param_vars();
+        Self::read_params(s, &ps, k);
+        s.lp.resize(k, 0.0);
+        s.dp0.resize(k, 0.0);
+        s.dp1.resize(k, 0.0);
+        for l in 0..k {
+            s.dxl.clear();
+            s.dxl.resize(obs.len(), 0.0);
+            let adj = dist
+                .with_f64_params(&[s.p0[l], s.p1[l]])
+                .logpdf_adj(obs, &mut s.dxl);
+            s.lp[l] = adj.lp;
+            s.dp0[l] = adj.d_p[0];
+            s.dp1[l] = adj.d_p[1];
+        }
+        s.w.resize(k, 0.0);
+        for l in 0..k {
+            s.w[l] = lik_seed_weight(&mut accs[l], s.lp[l], cw);
+        }
+        s.ws.resize(k, 0.0);
+        batch::with_tape(|t| {
+            if np >= 1 {
+                weighted_into(&mut s.ws, &s.dp0, &s.w);
+                t.seed_lanes(ps[0].idx(), &s.ws);
+            }
+            if np >= 2 {
+                weighted_into(&mut s.ws, &s.dp1, &s.w);
+                t.seed_lanes(ps[1].idx(), &s.ws);
+            }
+        });
+    }
+
+    fn add_obs_logp(&mut self, lp: BVar) {
+        let cw = self.note_obs_all();
+        if cw == 0.0 {
+            return;
+        }
+        let BatchedCore {
+            ref mut accs,
+            ref mut s,
+            lanes: k,
+            ..
+        } = *self;
+        s.lp.resize(k, 0.0);
+        batch::with_tape(|t| t.read_lanes(lp, &mut s.lp));
+        s.w.resize(k, 0.0);
+        for l in 0..k {
+            s.w[l] = lik_seed_weight(&mut accs[l], s.lp[l], cw);
+        }
+        batch::with_tape(|t| t.seed_lanes(lp.idx(), &s.w));
+    }
+
+    fn add_prior_logp(&mut self, lp: BVar) {
+        let BatchedCore {
+            ref mut accs,
+            ref mut s,
+            prior_w,
+            lanes: k,
+            ..
+        } = *self;
+        s.lp.resize(k, 0.0);
+        batch::with_tape(|t| t.read_lanes(lp, &mut s.lp));
+        s.w.resize(k, 0.0);
+        for l in 0..k {
+            s.w[l] = prior_seed_weight(&mut accs[l], s.lp[l], prior_w);
+        }
+        batch::with_tape(|t| t.seed_lanes(lp.idx(), &s.w));
+    }
+}
+
+/// Evaluates per-lane log-densities and lane-strided gradient seeds from a
+/// coordinate-major unconstrained buffer over one frozen [`TypedVarInfo`]
+/// layout — the K-lane form of
+/// [`super::executors::TypedFusedExecutor`]. Cursor semantics are
+/// identical (a dynamic structure change panics the same way); discrete
+/// sites read the shared trace's lane-uniform conditioned value.
+pub struct BatchedFusedExecutor<'a> {
+    tvi: &'a TypedVarInfo,
+    theta_t: &'a [f64],
+    cursor: usize,
+    core: BatchedCore,
+}
+
+impl<'a> BatchedFusedExecutor<'a> {
+    /// `theta_t` is coordinate-major: `theta_t[coord * lanes + lane]`.
+    pub fn new(tvi: &'a TypedVarInfo, theta_t: &'a [f64], lanes: usize, ctx: Context) -> Self {
+        debug_assert_eq!(theta_t.len(), tvi.dim() * lanes);
+        Self {
+            tvi,
+            theta_t,
+            cursor: 0,
+            core: BatchedCore::new(ctx, lanes),
+        }
+    }
+
+    /// Per-lane final log-densities.
+    pub fn finish_into(self, lps: &mut [f64]) {
+        self.core.finish_into(lps);
+    }
+
+    #[inline]
+    fn next_slot(&mut self, vn: &VarName) -> &'a crate::varinfo::Slot {
+        cursor_next_slot(self.tvi, &mut self.cursor, vn)
+    }
+}
+
+impl<'a> TildeApi<BVar> for BatchedFusedExecutor<'a> {
+    fn assume(&mut self, vn: VarName, dist: &ScalarDist<BVar>) -> BVar {
+        let slot = self.next_slot(&vn);
+        self.core
+            .assume_scalar(self.theta_t, slot.unc_offset, &slot.domain, dist)
+    }
+
+    fn assume_vec(&mut self, vn: VarName, dist: &VecDist<BVar>) -> Vec<BVar> {
+        let slot = self.next_slot(&vn);
+        self.core
+            .assume_vec(self.theta_t, slot.unc_offset, &slot.domain, dist)
+    }
+
+    fn assume_int(&mut self, vn: VarName, dist: &DiscreteDist<BVar>) -> i64 {
+        let slot = self.next_slot(&vn);
+        let k = self.tvi.discrete[slot.disc_offset];
+        self.core.assume_int(k, dist)
+    }
+
+    fn observe(&mut self, dist: &ScalarDist<BVar>, obs: f64) {
+        self.core.observe(dist, obs);
+    }
+
+    fn observe_int(&mut self, dist: &DiscreteDist<BVar>, obs: i64) {
+        self.core.observe_int(dist, obs);
+    }
+
+    fn observe_vec(&mut self, dist: &VecDist<BVar>, obs: &[f64]) {
+        self.core.observe_vec(dist, obs);
+    }
+
+    fn add_obs_logp(&mut self, lp: BVar) {
+        self.core.add_obs_logp(lp);
+    }
+
+    fn add_prior_logp(&mut self, lp: BVar) {
+        self.core.add_prior_logp(lp);
+    }
+
+    fn reject(&mut self) {
+        // a model-level reject applies to the program, hence to all lanes
+        self.core.reject_all();
+    }
+
+    fn rejected(&self) -> bool {
+        // the body may only early-return once *every* lane is done
+        self.core.all_rejected()
+    }
+
+    fn context(&self) -> Context {
+        self.core.ctx
+    }
+
+    fn skip_obs(&mut self, n: usize) {
+        for a in &mut self.core.accs {
+            a.skip_obs(n);
+        }
+    }
+}
+
+thread_local! {
+    /// Transpose scratch for [`typed_grad_batch_into`] (lane-major ↔
+    /// coordinate-major).
+    static XPOSE: std::cell::RefCell<(Vec<f64>, Vec<f64>)> =
+        std::cell::RefCell::new((Vec::new(), Vec::new()));
+}
+
+/// K-lane arena-fused gradient through the typed layout, written into
+/// caller-owned buffers — the lane-batched `logp_grad_into`.
+///
+/// `thetas` and `grads` are **lane-major** (`[l * dim .. (l+1) * dim]` is
+/// lane `l`), matching how samplers hold per-chain/per-draw states; the
+/// transpose to the tape's coordinate-major layout happens here, into
+/// retained thread-local scratch. Each lane's value and gradient are
+/// bit-identical to a sequential [`super::typed_grad_fused_into`] call at
+/// that lane's θ; a lane whose evaluation rejects (or goes non-finite)
+/// gets its gradient zeroed without disturbing the other lanes.
+pub fn typed_grad_batch_into(
+    model: &dyn Model,
+    tvi: &TypedVarInfo,
+    thetas: &[f64],
+    lanes: usize,
+    ctx: Context,
+    lps: &mut [f64],
+    grads: &mut [f64],
+) {
+    let dim = tvi.dim();
+    assert!(lanes > 0);
+    assert_eq!(thetas.len(), dim * lanes);
+    assert_eq!(lps.len(), lanes);
+    assert_eq!(grads.len(), dim * lanes);
+    metrics::add(Counter::GradEvals, lanes as u64);
+    metrics::inc(Counter::BatchedEvals);
+    metrics::add(Counter::BatchedLanes, lanes as u64);
+    XPOSE.with(|x| {
+        let (theta_t, grad_t) = &mut *x.borrow_mut();
+        theta_t.resize(dim * lanes, 0.0);
+        for l in 0..lanes {
+            for i in 0..dim {
+                theta_t[i * lanes + l] = thetas[l * dim + i];
+            }
+        }
+        batch::begin(theta_t, dim, lanes);
+        let mut exec = BatchedFusedExecutor::new(tvi, theta_t, lanes, ctx);
+        model.eval_batch(&mut exec);
+        exec.finish_into(lps);
+        if lps.iter().all(|lp| !lp.is_finite()) {
+            // every lane rejected: mirror the sequential early-out
+            metrics::add(Counter::RejectedEvals, lanes as u64);
+            grads.fill(0.0);
+            return;
+        }
+        grad_t.resize(dim * lanes, 0.0);
+        batch::backward_into(grad_t);
+        for l in 0..lanes {
+            let g = &mut grads[l * dim..(l + 1) * dim];
+            if !lps[l].is_finite() {
+                metrics::inc(Counter::RejectedEvals);
+                g.fill(0.0);
+            } else {
+                for i in 0..dim {
+                    g[i] = grad_t[i * lanes + l];
+                }
+            }
+        }
+    });
+}
+
+/// Outcome of one batched replay: per-lane incremental log-weights plus
+/// the shared observation count (lanes walk the same tilde program, so the
+/// visit count cannot differ across lanes).
+#[derive(Clone, Debug)]
+pub struct BatchedReplayReport {
+    pub deltas: Vec<f64>,
+    pub obs_total: usize,
+}
+
+/// Replay-with-regenerate for a whole particle cloud in one walk over a
+/// [`BatchVarInfo`] — the K-lane mirror of
+/// [`super::executors::TypedReplayExecutor`]. Each lane has its own RNG
+/// (freshly seeded per step by the cloud, so a demoted step replays
+/// identically on the sequential path), its own accumulator, and its own
+/// RESAMPLE/LOCKED flags; the cursor, the observation counter and the
+/// layout check are shared.
+///
+/// Returns `None` (demote) from [`BatchedReplayExecutor::run`] when the
+/// walk cannot be bit-identical to K sequential replays: layout mismatch,
+/// a discrete assume, or any lane rejecting mid-walk. The caller discards
+/// the gathered buffers and redoes the step per particle.
+pub struct BatchedReplayExecutor<'a, R: RngCore> {
+    rngs: &'a mut [R],
+    bvi: &'a mut BatchVarInfo,
+    accs: Vec<Accumulator<f64>>,
+    ctx: Context,
+    scope: ReplayScope<'a>,
+    lo: usize,
+    hi: usize,
+    cursor: usize,
+    obs_seen: usize,
+    ok: bool,
+    locking_done: bool,
+    // lane scratch
+    p0: Vec<f64>,
+    p1: Vec<f64>,
+    vbuf: Vec<f64>,
+    xlb: Vec<f64>,
+    xmb: Vec<f64>,
+}
+
+impl<'a, R: RngCore> BatchedReplayExecutor<'a, R> {
+    pub fn new(
+        rngs: &'a mut [R],
+        bvi: &'a mut BatchVarInfo,
+        ctx: Context,
+        scope: ReplayScope<'a>,
+    ) -> Self {
+        let (lo, hi) = ctx.obs_window();
+        let k = bvi.lanes();
+        debug_assert_eq!(rngs.len(), k);
+        Self {
+            rngs,
+            bvi,
+            accs: (0..k).map(|_| Accumulator::new(ctx)).collect(),
+            ctx,
+            scope,
+            lo,
+            hi,
+            cursor: 0,
+            obs_seen: 0,
+            ok: true,
+            locking_done: hi == 0 || hi == usize::MAX,
+        }
+    }
+
+    /// Run `model` once across all lanes; `None` demotes the step to the
+    /// per-particle path (the batch buffers are then discarded unused).
+    pub fn run(
+        model: &dyn Model,
+        rngs: &'a mut [R],
+        bvi: &'a mut BatchVarInfo,
+        ctx: Context,
+        scope: ReplayScope<'a>,
+    ) -> Option<BatchedReplayReport> {
+        batch::begin(&[], 0, bvi.lanes());
+        let mut exec = BatchedReplayExecutor::new(rngs, bvi, ctx, scope);
+        model.eval_batch(&mut exec);
+        exec.finalize()
+    }
+
+    fn finalize(mut self) -> Option<BatchedReplayReport> {
+        // rejected lanes already demoted, so unvisited slots here always
+        // mean a structure change
+        if !self.ok || self.cursor != self.bvi.slots().len() {
+            return None;
+        }
+        if !self.locking_done {
+            for i in 0..self.cursor {
+                for l in 0..self.bvi.lanes() {
+                    self.bvi.flag_slot(i, l, flags::LOCKED);
+                }
+            }
+        }
+        Some(BatchedReplayReport {
+            deltas: self.accs.iter().map(|a| a.total()).collect(),
+            obs_total: self.obs_seen,
+        })
+    }
+
+    #[inline]
+    fn next_slot(&mut self, vn: &VarName, domain: &Domain) -> Option<usize> {
+        if !self.ok {
+            return None;
+        }
+        let i = self.cursor;
+        let ok = match self.bvi.slots().get(i) {
+            Some(s) => s.vn == *vn && s.domain.compatible(domain),
+            None => false,
+        };
+        if ok {
+            self.cursor += 1;
+            Some(i)
+        } else {
+            self.ok = false;
+            None
+        }
+    }
+
+    #[inline]
+    fn note_obs(&mut self) -> bool {
+        let i = self.obs_seen;
+        self.obs_seen += 1;
+        if self.obs_seen == self.hi && !self.locking_done {
+            for s in 0..self.cursor {
+                for l in 0..self.bvi.lanes() {
+                    self.bvi.flag_slot(s, l, flags::LOCKED);
+                }
+            }
+            self.locking_done = true;
+        }
+        i >= self.lo && i < self.hi
+    }
+
+    #[inline]
+    fn score_assume(&mut self, si: usize, l: usize, lp: f64) {
+        let in_window = self.obs_seen >= self.lo && self.obs_seen < self.hi;
+        let proposed = match self.scope {
+            ReplayScope::Unscoped => true,
+            ReplayScope::Mask(m) => m[si],
+            ReplayScope::Eval => false,
+        };
+        if in_window && !proposed {
+            self.accs[l].add_lik(lp);
+        } else {
+            self.accs[l].add_prior(lp);
+        }
+    }
+
+    /// A sequential replay's body early-returns on rejection, leaving
+    /// later RESAMPLE slots undrawn — a shape one shared walk cannot
+    /// reproduce per lane. Any lane rejecting therefore demotes the step.
+    #[inline]
+    fn demote_if_rejected(&mut self) {
+        if self.accs.iter().any(|a| a.rejected()) {
+            self.ok = false;
+        }
+    }
+
+    fn read_params(&mut self, ps: &[BVar]) {
+        let k = self.bvi.lanes();
+        self.p0.resize(k, 0.0);
+        self.p1.resize(k, 0.0);
+        batch::with_tape(|t| {
+            t.read_lanes(ps[0], &mut self.p0);
+            t.read_lanes(ps[1], &mut self.p1);
+        });
+    }
+}
+
+impl<'a, R: RngCore> TildeApi<BVar> for BatchedReplayExecutor<'a, R> {
+    fn assume(&mut self, vn: VarName, dist: &ScalarDist<BVar>) -> BVar {
+        let domain = dist.domain();
+        let si = match self.next_slot(&vn, &domain) {
+            Some(i) => i,
+            None => return BVar::constant(0.0),
+        };
+        let (ps, _np) = dist.param_vars();
+        self.read_params(&ps);
+        let k = self.bvi.lanes();
+        let co = self.bvi.slots()[si].cons_offset;
+        self.vbuf.resize(k, 0.0);
+        for l in 0..k {
+            let dl = dist.with_f64_params(&[self.p0[l], self.p1[l]]);
+            let x = if self.bvi.is_slot_flagged(si, l, flags::RESAMPLE) {
+                let x = dl.sample(&mut self.rngs[l]);
+                // the lane's own domain: Interval bounds may be lane-varying
+                self.bvi.write_slot_f64_lane(si, l, x, &dl.domain());
+                self.bvi.clear_slot_flag(si, l, flags::RESAMPLE);
+                x
+            } else {
+                self.bvi.cons(co, l)
+            };
+            self.vbuf[l] = x;
+            let lp = dl.logpdf(x);
+            self.score_assume(si, l, lp);
+        }
+        self.demote_if_rejected();
+        let idx = batch::with_tape(|t| t.push0_lanes(&self.vbuf));
+        BVar::from_node(idx, self.vbuf[0])
+    }
+
+    fn assume_vec(&mut self, vn: VarName, dist: &VecDist<BVar>) -> Vec<BVar> {
+        let domain = dist.domain();
+        let si = match self.next_slot(&vn, &domain) {
+            Some(i) => i,
+            None => return vec![BVar::constant(0.0); domain.constrained_dim()],
+        };
+        let (ps, _np) = dist.param_vars();
+        self.read_params(&ps);
+        let k = self.bvi.lanes();
+        let (co, cl) = {
+            let s = &self.bvi.slots()[si];
+            (s.cons_offset, s.cons_len)
+        };
+        self.xmb.resize(cl * k, 0.0);
+        for l in 0..k {
+            let dl = dist.with_f64_params(&[self.p0[l], self.p1[l]]);
+            if self.bvi.is_slot_flagged(si, l, flags::RESAMPLE) {
+                let xs = dl.sample(&mut self.rngs[l]);
+                self.bvi.write_slot_vec_lane(si, l, &xs, &dl.domain());
+                self.bvi.clear_slot_flag(si, l, flags::RESAMPLE);
+                for (i, &x) in xs.iter().enumerate() {
+                    self.xmb[i * k + l] = x;
+                }
+            } else {
+                for i in 0..cl {
+                    self.xmb[i * k + l] = self.bvi.cons(co + i, l);
+                }
+            }
+            self.xlb.clear();
+            self.xlb.extend((0..cl).map(|i| self.xmb[i * k + l]));
+            let lp = dl.logpdf(&self.xlb);
+            self.score_assume(si, l, lp);
+        }
+        self.demote_if_rejected();
+        (0..cl)
+            .map(|i| {
+                let idx = batch::with_tape(|t| t.push0_lanes(&self.xmb[i * k..i * k + k]));
+                BVar::from_node(idx, self.xmb[i * k])
+            })
+            .collect()
+    }
+
+    fn assume_int(&mut self, _vn: VarName, _dist: &DiscreteDist<BVar>) -> i64 {
+        // one i64 return cannot carry K diverging lane values — demote
+        self.ok = false;
+        0
+    }
+
+    fn observe(&mut self, dist: &ScalarDist<BVar>, obs: f64) {
+        if !self.ok {
+            return;
+        }
+        if self.note_obs() {
+            let (ps, _np) = dist.param_vars();
+            self.read_params(&ps);
+            for l in 0..self.bvi.lanes() {
+                let lp = dist.with_f64_params(&[self.p0[l], self.p1[l]]).logpdf(obs);
+                self.accs[l].add_lik(lp);
+            }
+            self.demote_if_rejected();
+        }
+    }
+
+    fn observe_int(&mut self, dist: &DiscreteDist<BVar>, obs: i64) {
+        if !self.ok {
+            return;
+        }
+        if self.note_obs() {
+            let pv = dist.param_var();
+            let k = self.bvi.lanes();
+            self.p0.resize(k, 0.0);
+            batch::with_tape(|t| {
+                t.read_lanes(pv.unwrap_or_else(|| BVar::constant(0.0)), &mut self.p0)
+            });
+            for l in 0..k {
+                let lp = dist.with_f64_param(self.p0[l]).logpmf(obs);
+                self.accs[l].add_lik(lp);
+            }
+            self.demote_if_rejected();
+        }
+    }
+
+    fn observe_vec(&mut self, dist: &VecDist<BVar>, obs: &[f64]) {
+        if !self.ok {
+            return;
+        }
+        if self.note_obs() {
+            let (ps, _np) = dist.param_vars();
+            self.read_params(&ps);
+            for l in 0..self.bvi.lanes() {
+                let lp = dist.with_f64_params(&[self.p0[l], self.p1[l]]).logpdf(obs);
+                self.accs[l].add_lik(lp);
+            }
+            self.demote_if_rejected();
+        }
+    }
+
+    fn add_obs_logp(&mut self, lp: BVar) {
+        if !self.ok {
+            return;
+        }
+        if self.note_obs() {
+            let k = self.bvi.lanes();
+            self.vbuf.resize(k, 0.0);
+            batch::with_tape(|t| t.read_lanes(lp, &mut self.vbuf));
+            for l in 0..k {
+                self.accs[l].add_lik(self.vbuf[l]);
+            }
+            self.demote_if_rejected();
+        }
+    }
+
+    fn add_prior_logp(&mut self, lp: BVar) {
+        if !self.ok {
+            return;
+        }
+        let k = self.bvi.lanes();
+        self.vbuf.resize(k, 0.0);
+        batch::with_tape(|t| t.read_lanes(lp, &mut self.vbuf));
+        for l in 0..k {
+            self.accs[l].add_prior(self.vbuf[l]);
+        }
+        self.demote_if_rejected();
+    }
+
+    fn reject(&mut self) {
+        for a in &mut self.accs {
+            a.reject();
+        }
+        self.ok = false;
+    }
+
+    fn rejected(&self) -> bool {
+        // demotion short-circuits the rest of the body: the run's buffers
+        // are discarded either way
+        !self.ok
+    }
+
+    fn context(&self) -> Context {
+        self.ctx
+    }
+
+    fn skip_obs(&mut self, n: usize) {
+        for _ in 0..n {
+            let _ = self.note_obs();
+        }
+    }
+}

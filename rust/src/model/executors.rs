@@ -127,7 +127,7 @@ impl<'a, R: RngCore> TildeApi<f64> for SampleExecutor<'a, R> {
 /// must be slot `i` of the frozen layout (checked with `debug_assert`);
 /// exhausting the layout is a dynamic structure change.
 #[inline]
-fn cursor_next_slot<'a>(
+pub(crate) fn cursor_next_slot<'a>(
     tvi: &'a TypedVarInfo,
     cursor: &mut usize,
     vn: &VarName,
@@ -1008,6 +1008,92 @@ impl FusedCore {
         out
     }
 
+    /// [`Self::assume_scalar`] with the site's own value held fixed — the
+    /// Gibbs out-of-block path. Identical lp arithmetic (the returned
+    /// total stays bitwise equal to the unmasked walk), but the
+    /// constrained value enters the tape as a constant: no invlink node,
+    /// no `d_x`/`dladj` seeds, and any glue downstream of the value
+    /// constant-collapses — the site costs zero arena nodes. Parameter
+    /// partials are still seeded: an out-of-block density may depend on
+    /// in-block variables through its parameters.
+    fn assume_scalar_masked(
+        &mut self,
+        theta: &[f64],
+        off: usize,
+        domain: &Domain,
+        dist: &ScalarDist<AVar>,
+        vn: &VarName,
+    ) -> AVar {
+        self.stmts += 1;
+        let prof = profile::begin(self.ctx);
+        let link = bijector::invlink_scalar_adj(domain, theta[off]);
+        let adj = dist.logpdf_adj(link.x);
+        let lp = adj.lp + link.ladj;
+        let w = self.prior_seed_weight(lp);
+        if w != 0.0 {
+            seed_params_scalar(dist, &adj, w);
+        }
+        profile::end_assume(prof, vn, lp, self.acc.rejected());
+        AVar::constant(link.x)
+    }
+
+    /// [`Self::assume_vec`] with the site held fixed (Gibbs out-of-block):
+    /// same per-component invlink/ladj arithmetic as the tracked path, but
+    /// run on plain `f64` and returned as constants — zero arena nodes.
+    /// Parameter partials are still seeded.
+    fn assume_vec_masked(
+        &mut self,
+        theta: &[f64],
+        off: usize,
+        domain: &Domain,
+        dist: &VecDist<AVar>,
+        vn: &VarName,
+    ) -> Vec<AVar> {
+        self.stmts += 1;
+        let prof = profile::begin(self.ctx);
+        let n = domain.constrained_dim();
+        self.scratch.dx.clear();
+        self.scratch.dx.resize(n, 0.0);
+        self.scratch.xs.clear();
+        let (lp, adj) = match domain {
+            Domain::RealVec(_) => {
+                self.scratch.xs.extend_from_slice(&theta[off..off + n]);
+                let adj = dist.logpdf_adj(&self.scratch.xs, &mut self.scratch.dx);
+                (adj.lp, adj)
+            }
+            Domain::PositiveVec(_) => {
+                let mut ladj = 0.0;
+                for i in 0..n {
+                    let y = theta[off + i];
+                    ladj += y;
+                    self.scratch.xs.push(y.exp());
+                }
+                let adj = dist.logpdf_adj(&self.scratch.xs, &mut self.scratch.dx);
+                (adj.lp + ladj, adj)
+            }
+            Domain::Simplex(_) => {
+                let m = domain.unconstrained_dim();
+                self.scratch.xs.resize(n, 0.0);
+                let ladj =
+                    bijector::invlink_slice(domain, &theta[off..off + m], &mut self.scratch.xs);
+                let adj = dist.logpdf_adj(&self.scratch.xs, &mut self.scratch.dx);
+                (adj.lp + ladj, adj)
+            }
+            other => panic!("vector assume over scalar/discrete domain {other:?}"),
+        };
+        let w = self.prior_seed_weight(lp);
+        if w != 0.0 {
+            let (ps, np) = dist.param_vars();
+            arena::with_tape(|t| {
+                for (p, d) in ps.iter().zip(adj.d_p).take(np) {
+                    t.seed(p.idx(), d * w);
+                }
+            });
+        }
+        profile::end_assume(prof, vn, lp, self.acc.rejected());
+        self.scratch.xs.iter().map(|&x| AVar::constant(x)).collect()
+    }
+
     /// Score a discrete assume whose value `k` the caller fetched from
     /// its trace representation.
     fn assume_int(&mut self, k: i64, dist: &DiscreteDist<AVar>, vn: &VarName) -> i64 {
@@ -1125,6 +1211,9 @@ pub struct TypedFusedExecutor<'a> {
     theta: &'a [f64],
     cursor: usize,
     core: FusedCore,
+    /// Per-slot site mask (Gibbs conditional path): `false` slots are
+    /// scored exactly but held constant on the tape. `None` = all tracked.
+    mask: Option<&'a [bool]>,
 }
 
 impl<'a> TypedFusedExecutor<'a> {
@@ -1135,6 +1224,26 @@ impl<'a> TypedFusedExecutor<'a> {
             theta,
             cursor: 0,
             core: FusedCore::new(ctx),
+            mask: None,
+        }
+    }
+
+    /// [`Self::new`] with a per-slot site mask — see
+    /// [`crate::model::typed_grad_fused_masked_into`].
+    pub fn new_masked(
+        tvi: &'a TypedVarInfo,
+        theta: &'a [f64],
+        ctx: Context,
+        mask: &'a [bool],
+    ) -> Self {
+        debug_assert_eq!(theta.len(), tvi.dim());
+        debug_assert_eq!(mask.len(), tvi.slots().len());
+        Self {
+            tvi,
+            theta,
+            cursor: 0,
+            core: FusedCore::new(ctx),
+            mask: Some(mask),
         }
     }
 
@@ -1151,15 +1260,27 @@ impl<'a> TypedFusedExecutor<'a> {
 
 impl<'a> TildeApi<AVar> for TypedFusedExecutor<'a> {
     fn assume(&mut self, vn: VarName, dist: &ScalarDist<AVar>) -> AVar {
+        let si = self.cursor;
         let slot = self.next_slot(&vn);
-        self.core
-            .assume_scalar(self.theta, slot.unc_offset, &slot.domain, dist, &vn)
+        if self.mask.is_some_and(|m| !m[si]) {
+            self.core
+                .assume_scalar_masked(self.theta, slot.unc_offset, &slot.domain, dist, &vn)
+        } else {
+            self.core
+                .assume_scalar(self.theta, slot.unc_offset, &slot.domain, dist, &vn)
+        }
     }
 
     fn assume_vec(&mut self, vn: VarName, dist: &VecDist<AVar>) -> Vec<AVar> {
+        let si = self.cursor;
         let slot = self.next_slot(&vn);
-        self.core
-            .assume_vec(self.theta, slot.unc_offset, &slot.domain, dist, &vn)
+        if self.mask.is_some_and(|m| !m[si]) {
+            self.core
+                .assume_vec_masked(self.theta, slot.unc_offset, &slot.domain, dist, &vn)
+        } else {
+            self.core
+                .assume_vec(self.theta, slot.unc_offset, &slot.domain, dist, &vn)
+        }
     }
 
     fn assume_int(&mut self, vn: VarName, dist: &DiscreteDist<AVar>) -> i64 {

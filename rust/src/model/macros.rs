@@ -97,6 +97,12 @@ macro_rules! model {
             ) {
                 self.eval_generic(api)
             }
+            fn eval_batch(
+                &self,
+                api: &mut dyn $crate::model::TildeApi<$crate::ad::batch::BVar>,
+            ) {
+                self.eval_generic(api)
+            }
         }
     };
 }

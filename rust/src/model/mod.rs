@@ -2,8 +2,8 @@
 //!
 //! A model is written **once**, generically over the AD scalar type, as a
 //! sequence of tilde statements against the [`TildeApi`]. The [`Model`]
-//! trait exposes four monomorphized entry points (`f64`, forward dual,
-//! reverse tape, arena-fused) so model objects stay `dyn`-safe while the
+//! trait exposes five monomorphized entry points (`f64`, forward dual,
+//! reverse tape, arena-fused, lane-batched) so model objects stay `dyn`-safe while the
 //! body compiles to specialized code per scalar type — the Rust rendering
 //! of Julia's compile-on-first-call specialization.
 //!
@@ -24,6 +24,7 @@
 //!   `logpdf_adj` kernel and records gradient *seeds* instead of taping
 //!   every scalar op (`Backend::ReverseFused`, the native default).
 
+pub mod batched;
 pub mod executors;
 #[macro_use]
 pub mod macros;
@@ -121,6 +122,10 @@ pub trait Model: Send + Sync {
     /// Evaluate with arena-fused reverse variables (the Stan-style native
     /// gradient fast path; see [`crate::ad::arena`]).
     fn eval_arena(&self, api: &mut dyn TildeApi<AVar>);
+    /// Evaluate with K-lane batched arena variables: one tilde walk scores
+    /// K chains / particles / ELBO draws at once (see [`crate::ad::batch`]
+    /// and [`batched`]).
+    fn eval_batch(&self, api: &mut dyn TildeApi<crate::ad::batch::BVar>);
 }
 
 /// Run the model under a [`executors::SampleExecutor`], drawing any missing
@@ -236,6 +241,38 @@ pub fn typed_grad_fused(
     let mut grad = vec![0.0; theta.len()];
     let lp = typed_grad_fused_into(model, tvi, theta, ctx, &mut grad);
     (lp, grad)
+}
+
+/// [`typed_grad_fused_into`] with a per-slot site mask — the Gibbs
+/// conditional-density gradient. `mask[si] == false` holds slot `si`'s
+/// value fixed: the site still contributes its exact log-density (the
+/// returned value is the full joint, bitwise equal to the unmasked
+/// pass), but its own coordinates enter the tape as constants, so the
+/// site and any glue downstream of it emit **zero** arena nodes and the
+/// backward sweep only touches the in-block subgraph. Masked sites still
+/// seed their parameter partials — an out-of-block density may depend on
+/// in-block variables through its parameters. Gradient entries for
+/// masked coordinates come back 0.
+pub fn typed_grad_fused_masked_into(
+    model: &dyn Model,
+    tvi: &crate::varinfo::TypedVarInfo,
+    theta: &[f64],
+    ctx: Context,
+    mask: &[bool],
+    grad: &mut [f64],
+) -> f64 {
+    metrics::inc(Counter::GradEvals);
+    crate::ad::arena::begin(theta.len());
+    let mut exec = executors::TypedFusedExecutor::new_masked(tvi, theta, ctx, mask);
+    model.eval_arena(&mut exec);
+    let (lp, stmts) = exec.finish();
+    if !lp.is_finite() {
+        metrics::inc(Counter::RejectedEvals);
+        grad.fill(0.0);
+        return lp;
+    }
+    crate::ad::arena::backward_into(grad, stmts);
+    lp
 }
 
 /// Gradient via the reverse tape through the typed layout (one pass).

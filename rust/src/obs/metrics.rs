@@ -54,10 +54,14 @@ pub enum Counter {
     MinibatchWindows,
     /// η candidates tried by the ADVI step-size ladder search.
     EtaTrials,
+    /// Lane-batched evaluations (one tilde walk scoring K lanes).
+    BatchedEvals,
+    /// Lanes summed over batched evaluations (`lanes / evals` = mean K).
+    BatchedLanes,
 }
 
 /// Number of counters in the catalog.
-pub const N_COUNTERS: usize = 14;
+pub const N_COUNTERS: usize = 16;
 
 /// Every counter, in [`Counter`] discriminant order.
 pub const ALL_COUNTERS: [Counter; N_COUNTERS] = [
@@ -75,6 +79,8 @@ pub const ALL_COUNTERS: [Counter; N_COUNTERS] = [
     Counter::TypedDemotions,
     Counter::MinibatchWindows,
     Counter::EtaTrials,
+    Counter::BatchedEvals,
+    Counter::BatchedLanes,
 ];
 
 impl Counter {
@@ -95,6 +101,8 @@ impl Counter {
             Counter::TypedDemotions => "typed_demotions",
             Counter::MinibatchWindows => "minibatch_windows",
             Counter::EtaTrials => "eta_trials",
+            Counter::BatchedEvals => "batched_evals",
+            Counter::BatchedLanes => "batched_lanes",
         }
     }
 }

@@ -425,7 +425,15 @@ impl<S: ParticleState> ParticleCloud<S> {
             }
             return Err(LayoutMismatch);
         }
-        // serial reduction (index order → deterministic)
+        Ok(self.reduce_step())
+    }
+
+    /// Serial post-propagation reduction (index order → deterministic):
+    /// fold each particle's `delta` into its weight, renormalize, update
+    /// the evidence estimate and advance the step counter. Shared between
+    /// [`ParticleCloud::advance`] and the lane-batched advance so both
+    /// produce bit-identical weights from identical deltas.
+    fn reduce_step(&mut self) -> f64 {
         let logw_new: Vec<f64> = self
             .particles
             .iter()
@@ -445,7 +453,7 @@ impl<S: ParticleState> ParticleCloud<S> {
             }
         }
         self.step += 1;
-        Ok(lz_step)
+        lz_step
     }
 
     /// Fork a new generation from ancestors drawn by `resampler`; children
@@ -708,6 +716,54 @@ impl TypedCloud {
             scope: Some(mask),
             snapshots: Vec::new(),
         })
+    }
+
+    /// Lane-batched advance: gather the whole cloud into one
+    /// [`crate::varinfo::BatchVarInfo`] and replay every particle in a
+    /// single tilde walk
+    /// ([`crate::model::batched::BatchedReplayExecutor`]), paying the
+    /// per-statement bookkeeping once for all N particles. Each lane's RNG
+    /// is seeded from the same `(seed, step, index)` stream as
+    /// [`ParticleCloud::advance`] and the reduction is shared, so a
+    /// batched step is bit-identical to a sequential one.
+    ///
+    /// Returns `None` when the walk cannot be expressed batched (layout
+    /// mismatch, a discrete assume, or any particle rejecting mid-step) —
+    /// the gathered buffers are discarded, the cloud is **untouched**, and
+    /// the caller redoes the same step with [`ParticleCloud::advance`]
+    /// (same seed ⇒ same result; a true structure change then surfaces as
+    /// [`LayoutMismatch`] there).
+    pub fn advance_batched(&mut self, model: &dyn Model, seed: u64) -> Option<f64> {
+        assert!(self.step < self.n_obs, "cloud already consumed all observations");
+        let step_for_seed = self.step + 1; // 0 is the init run
+        let mut rngs: Vec<Xoshiro256pp> = (0..self.len())
+            .map(|i| Xoshiro256pp::seed_from_u64(particle_seed(seed, step_for_seed, i)))
+            .collect();
+        let states: Vec<&TypedVarInfo> = self.particles.iter().map(|p| &p.state).collect();
+        let mut bvi = crate::varinfo::BatchVarInfo::gather(&self.particles[0].state, &states);
+        drop(states);
+        let replay_scope = match self.scope.as_ref() {
+            Some(mask) => ReplayScope::Mask(&mask[..]),
+            None => ReplayScope::Unscoped,
+        };
+        let report = crate::model::batched::BatchedReplayExecutor::run(
+            model,
+            &mut rngs,
+            &mut bvi,
+            Context::ObsWindow { lo: self.step, hi: self.step + 1 },
+            replay_scope,
+        )?;
+        crate::obs::metrics::inc(crate::obs::metrics::Counter::BatchedEvals);
+        crate::obs::metrics::add(
+            crate::obs::metrics::Counter::BatchedLanes,
+            self.len() as u64,
+        );
+        for (l, p) in self.particles.iter_mut().enumerate() {
+            bvi.scatter_lane(l, &mut p.state);
+            p.delta = report.deltas[l];
+            p.layout_ok = true;
+        }
+        Some(self.reduce_step())
     }
 
     /// Demote to the boxed representation mid-sweep (dynamic structure

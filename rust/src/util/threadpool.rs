@@ -2,10 +2,63 @@
 //! parallel. Built on std::thread + channels (no tokio/rayon in the vendored
 //! dependency set). Work items are boxed closures; results are collected in
 //! submission order.
+//!
+//! **Nested-parallelism budget.** Every parallel helper here draws its
+//! extra workers from one process-wide budget of `cores − 1` slots (the
+//! caller thread is always the `+1`). An outer parallel section that has
+//! claimed the budget leaves nothing for sections nested inside its jobs
+//! — those degrade to serial loops instead of oversubscribing the machine
+//! with `threads²` runnable threads. Results never depend on how many
+//! workers a section actually got (work is indexed, reductions are
+//! serial), so the budget changes wall-clock only. When inner work has a
+//! batchable K-lane axis, prefer lane-batching
+//! ([`crate::model::batched`]) over nested thread fan-out: one SIMD-able
+//! kernel walk beats contended threads that the budget would serialize
+//! anyway.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread;
+
+/// The shared extra-worker budget (capacity `cores − 1`, lazily init).
+fn budget() -> &'static AtomicUsize {
+    static B: OnceLock<AtomicUsize> = OnceLock::new();
+    B.get_or_init(|| AtomicUsize::new(default_threads().saturating_sub(1)))
+}
+
+/// Claim up to `want` extra workers from the shared budget; returns how
+/// many were actually granted (possibly 0 → run serial). Never blocks.
+fn acquire_workers(want: usize) -> usize {
+    let b = budget();
+    let mut cur = b.load(Ordering::Relaxed);
+    loop {
+        let take = want.min(cur);
+        if take == 0 {
+            return 0;
+        }
+        match b.compare_exchange_weak(cur, cur - take, Ordering::AcqRel, Ordering::Relaxed) {
+            Ok(_) => return take,
+            Err(c) => cur = c,
+        }
+    }
+}
+
+/// Return workers to the budget (panic-safe via [`BudgetGuard`]).
+fn release_workers(n: usize) {
+    if n > 0 {
+        budget().fetch_add(n, Ordering::AcqRel);
+    }
+}
+
+/// RAII release so a panicking job cannot leak budget slots.
+struct BudgetGuard(usize);
+
+impl Drop for BudgetGuard {
+    fn drop(&mut self) {
+        release_workers(self.0);
+    }
+}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -81,6 +134,13 @@ where
     if threads == 1 {
         return (0..n).map(make_job).collect();
     }
+    // the caller blocks collecting results, so the pool itself holds the
+    // `+1` caller slot and only `threads − 1` come from the shared budget
+    let grant = BudgetGuard(acquire_workers(threads - 1));
+    let threads = 1 + grant.0;
+    if threads == 1 {
+        return (0..n).map(make_job).collect();
+    }
     let make_job = Arc::new(make_job);
     let (tx, rx) = mpsc::channel::<(usize, thread::Result<T>)>();
     let pool = ThreadPool::new(threads);
@@ -123,6 +183,12 @@ where
         return;
     }
     let threads = threads.max(1).min(n);
+    let grant = if threads > 1 {
+        BudgetGuard(acquire_workers(threads - 1))
+    } else {
+        BudgetGuard(0)
+    };
+    let threads = 1 + grant.0;
     if threads == 1 {
         for (i, item) in items.iter_mut().enumerate() {
             f(i, item);
@@ -130,14 +196,23 @@ where
         return;
     }
     let chunk = (n + threads - 1) / threads;
+    // the caller thread takes the first chunk itself, so the section uses
+    // exactly `grant + 1` runnable threads
     thread::scope(|scope| {
-        for (ci, items_chunk) in items.chunks_mut(chunk).enumerate() {
+        let mut chunks = items.chunks_mut(chunk).enumerate();
+        let first = chunks.next();
+        for (ci, items_chunk) in chunks {
             let f = &f;
             scope.spawn(move || {
                 for (j, item) in items_chunk.iter_mut().enumerate() {
                     f(ci * chunk + j, item);
                 }
             });
+        }
+        if let Some((_, items_chunk)) = first {
+            for (j, item) in items_chunk.iter_mut().enumerate() {
+                f(j, item);
+            }
         }
     });
 }
@@ -202,6 +277,30 @@ mod tests {
         let mut items = vec![0usize; 8];
         parallel_for_each_mut(3, &mut items, |i, x| *x = i + offset);
         assert_eq!(items[7], 107);
+    }
+
+    #[test]
+    fn nested_parallel_sections_degrade_to_serial_not_oversubscribe() {
+        // the outer section drains the budget; inner sections get 0 extra
+        // workers and fall back to serial loops — same results, no thread²
+        let out = parallel_map(4, 8, |i| {
+            let inner = parallel_map(4, 4, move |j| i * 10 + j);
+            inner.iter().sum::<usize>()
+        });
+        let want: Vec<usize> = (0..8).map(|i| 4 * (i * 10) + 6).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn worker_budget_never_overcommits() {
+        let cap = default_threads().saturating_sub(1);
+        let a = acquire_workers(usize::MAX);
+        let b = acquire_workers(usize::MAX);
+        // outstanding grants can never exceed the whole budget, no matter
+        // what other tests hold concurrently
+        assert!(a + b <= cap, "{a} + {b} > {cap}");
+        assert_eq!(acquire_workers(0), 0);
+        release_workers(a + b);
     }
 
     #[test]

@@ -1,0 +1,246 @@
+//! K-lane SoA trace storage: one `TypedVarInfo` layout, K value lanes.
+//!
+//! [`BatchVarInfo`] holds the per-particle (or per-chain / per-draw) state
+//! of K traces that share one typed layout, transposed to
+//! **coordinate-major** order: `unconstrained[coord * K + lane]`. A lane-
+//! batched executor walking the tilde program then touches each site's K
+//! values as one contiguous run — the auto-vectorizable inner loop the
+//! lane-batched engine is built around — instead of K strided loads from K
+//! separate `TypedVarInfo`s.
+//!
+//! Gather/scatter between a batch and individual traces is plain copying;
+//! it never mutates the sources, so a batched pass that fails mid-walk
+//! (dynamic structure change, per-lane rejection) leaves every particle
+//! untouched and the caller can redo the step on the sequential path.
+
+use crate::dist::{bijector, Domain};
+
+use super::typed::{Slot, TypedVarInfo};
+
+/// K lanes of per-trace state over one shared typed layout,
+/// coordinate-major (SoA across lanes).
+#[derive(Clone, Debug)]
+pub struct BatchVarInfo {
+    template: TypedVarInfo,
+    lanes: usize,
+    /// `unconstrained[coord * lanes + lane]`.
+    pub unconstrained: Vec<f64>,
+    /// `constrained[coord * lanes + lane]`.
+    pub constrained: Vec<f64>,
+    /// `discrete[idx * lanes + lane]`.
+    pub discrete: Vec<i64>,
+    /// `slot_flags[slot * lanes + lane]`.
+    pub slot_flags: Vec<u8>,
+    /// Per-lane log-density.
+    pub logp: Vec<f64>,
+}
+
+impl BatchVarInfo {
+    /// Gather `states` (all sharing `template`'s layout) into one batch.
+    pub fn gather(template: &TypedVarInfo, states: &[&TypedVarInfo]) -> Self {
+        let k = states.len();
+        assert!(k > 0, "a batch needs at least one lane");
+        let dim = template.unconstrained.len();
+        let n_cons = template.constrained.len();
+        let n_disc = template.discrete.len();
+        let n_slots = template.slots().len();
+        let mut out = BatchVarInfo {
+            template: template.fork(),
+            lanes: k,
+            unconstrained: vec![0.0; dim * k],
+            constrained: vec![0.0; n_cons * k],
+            discrete: vec![0; n_disc * k],
+            slot_flags: vec![0; n_slots * k],
+            logp: vec![0.0; k],
+        };
+        for (l, s) in states.iter().enumerate() {
+            debug_assert!(s.shares_layout(template), "lane {l} layout mismatch");
+            out.load_lane(l, s);
+        }
+        out
+    }
+
+    /// Overwrite lane `l` from one trace (transposing into SoA order).
+    pub fn load_lane(&mut self, l: usize, src: &TypedVarInfo) {
+        let k = self.lanes;
+        for (i, &v) in src.unconstrained.iter().enumerate() {
+            self.unconstrained[i * k + l] = v;
+        }
+        for (i, &v) in src.constrained.iter().enumerate() {
+            self.constrained[i * k + l] = v;
+        }
+        for (i, &v) in src.discrete.iter().enumerate() {
+            self.discrete[i * k + l] = v;
+        }
+        for (i, &v) in src.slot_flags.iter().enumerate() {
+            self.slot_flags[i * k + l] = v;
+        }
+        self.logp[l] = src.logp;
+    }
+
+    /// Copy lane `l` back into an individual trace (same layout).
+    pub fn scatter_lane(&self, l: usize, dst: &mut TypedVarInfo) {
+        let k = self.lanes;
+        for (i, v) in dst.unconstrained.iter_mut().enumerate() {
+            *v = self.unconstrained[i * k + l];
+        }
+        for (i, v) in dst.constrained.iter_mut().enumerate() {
+            *v = self.constrained[i * k + l];
+        }
+        for (i, v) in dst.discrete.iter_mut().enumerate() {
+            *v = self.discrete[i * k + l];
+        }
+        for (i, v) in dst.slot_flags.iter_mut().enumerate() {
+            *v = self.slot_flags[i * k + l];
+        }
+        dst.logp = self.logp[l];
+    }
+
+    #[inline]
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Unconstrained dimension of one lane.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.template.dim()
+    }
+
+    #[inline]
+    pub fn slots(&self) -> &[Slot] {
+        self.template.slots()
+    }
+
+    /// The layout template the lanes share.
+    #[inline]
+    pub fn template(&self) -> &TypedVarInfo {
+        &self.template
+    }
+
+    /// Constrained value at flat offset `off`, lane `l`.
+    #[inline]
+    pub fn cons(&self, off: usize, l: usize) -> f64 {
+        self.constrained[off * self.lanes + l]
+    }
+
+    /// Discrete value at flat offset `off`, lane `l`.
+    #[inline]
+    pub fn disc(&self, off: usize, l: usize) -> i64 {
+        self.discrete[off * self.lanes + l]
+    }
+
+    #[inline]
+    pub fn is_slot_flagged(&self, slot: usize, l: usize, flag: u8) -> bool {
+        self.slot_flags[slot * self.lanes + l] & flag != 0
+    }
+
+    #[inline]
+    pub fn flag_slot(&mut self, slot: usize, l: usize, flag: u8) {
+        self.slot_flags[slot * self.lanes + l] |= flag;
+    }
+
+    #[inline]
+    pub fn clear_slot_flag(&mut self, slot: usize, l: usize, flag: u8) {
+        self.slot_flags[slot * self.lanes + l] &= !flag;
+    }
+
+    /// Lane form of [`TypedVarInfo::write_slot_f64`]: write a freshly drawn
+    /// scalar into slot `i` of lane `l` (constrained value + link image).
+    pub fn write_slot_f64_lane(&mut self, i: usize, l: usize, x: f64, domain: &Domain) {
+        let k = self.lanes;
+        let (co, uo, ul) = {
+            let s = &self.slots()[i];
+            (s.cons_offset, s.unc_offset, s.unc_len)
+        };
+        self.constrained[co * k + l] = x;
+        let mut tmp = [0.0f64; 1];
+        debug_assert_eq!(ul, 1, "scalar slot");
+        bijector::link_slice(domain, &[x], &mut tmp);
+        self.unconstrained[uo * k + l] = tmp[0];
+    }
+
+    /// Lane form of [`TypedVarInfo::write_slot_vec`].
+    pub fn write_slot_vec_lane(&mut self, i: usize, l: usize, xs: &[f64], domain: &Domain) {
+        let k = self.lanes;
+        let (co, cl, uo, ul) = {
+            let s = &self.slots()[i];
+            (s.cons_offset, s.cons_len, s.unc_offset, s.unc_len)
+        };
+        debug_assert_eq!(xs.len(), cl);
+        for (j, &x) in xs.iter().enumerate() {
+            self.constrained[(co + j) * k + l] = x;
+        }
+        let mut tmp = vec![0.0f64; ul];
+        bijector::link_slice(domain, xs, &mut tmp);
+        for (j, &y) in tmp.iter().enumerate() {
+            self.unconstrained[(uo + j) * k + l] = y;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{Gamma, IsoNormal, ScalarDist, VecDist};
+    use crate::value::Value;
+    use crate::varinfo::{flags, UntypedVarInfo};
+    use crate::varname::VarName;
+
+    fn demo_typed(seed_val: f64) -> TypedVarInfo {
+        let mut vi = UntypedVarInfo::new();
+        vi.insert(
+            VarName::new("s"),
+            Value::F64(seed_val),
+            ScalarDist::Gamma(Gamma::new(2.0, 3.0)).boxed(),
+        );
+        vi.insert(
+            VarName::new("w"),
+            Value::Vec(vec![0.1 * seed_val, -0.2, 0.3]),
+            VecDist::IsoNormal(IsoNormal::new(0.0, 1.0, 3)).boxed(),
+        );
+        TypedVarInfo::from_untyped(&vi)
+    }
+
+    #[test]
+    fn gather_scatter_roundtrips() {
+        let a = demo_typed(2.0);
+        let mut b = a.fork();
+        let domain = b.slots()[0].domain.clone();
+        b.write_slot_f64(0, 5.0, &domain);
+        b.flag_slot(1, flags::RESAMPLE);
+        b.logp = -7.0;
+        let batch = BatchVarInfo::gather(&a, &[&a, &b]);
+        assert_eq!(batch.lanes(), 2);
+        assert_eq!(batch.cons(0, 0), 2.0);
+        assert_eq!(batch.cons(0, 1), 5.0);
+        assert!(batch.is_slot_flagged(1, 1, flags::RESAMPLE));
+        assert!(!batch.is_slot_flagged(1, 0, flags::RESAMPLE));
+        let mut out = a.fork();
+        batch.scatter_lane(1, &mut out);
+        assert_eq!(out.constrained, b.constrained);
+        assert_eq!(out.unconstrained, b.unconstrained);
+        assert_eq!(out.slot_flags, b.slot_flags);
+        assert_eq!(out.logp, -7.0);
+    }
+
+    #[test]
+    fn lane_writes_match_typed_writes() {
+        let a = demo_typed(2.0);
+        let mut batch = BatchVarInfo::gather(&a, &[&a, &a]);
+        let mut seq = a.fork();
+        let d0 = a.slots()[0].domain.clone();
+        let d1 = a.slots()[1].domain.clone();
+        seq.write_slot_f64(0, 4.0, &d0);
+        seq.write_slot_vec(1, &[1.0, 2.0, -0.5], &d1);
+        batch.write_slot_f64_lane(0, 1, 4.0, &d0);
+        batch.write_slot_vec_lane(1, 1, &[1.0, 2.0, -0.5], &d1);
+        let mut out = a.fork();
+        batch.scatter_lane(1, &mut out);
+        assert_eq!(out.unconstrained, seq.unconstrained);
+        assert_eq!(out.constrained, seq.constrained);
+        // lane 0 untouched
+        batch.scatter_lane(0, &mut out);
+        assert_eq!(out.constrained, a.constrained);
+    }
+}

@@ -11,9 +11,11 @@
 //! fixes the parameter layout that the AOT-compiled XLA log-density
 //! artifact (the "generated machine code" of this reproduction) consumes.
 
+pub mod batch;
 pub mod typed;
 pub mod untyped;
 
+pub use batch::BatchVarInfo;
 pub use typed::{Slot, TraceSnapshot, TypedVarInfo};
 pub use untyped::{UntypedVarInfo, VarRecord};
 

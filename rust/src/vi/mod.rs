@@ -62,6 +62,13 @@ pub struct Advi {
     pub family: ViFamily,
     /// Monte-Carlo samples per gradient step (Stan: `grad_samples`).
     pub grad_samples: usize,
+    /// Lane count for batched gradient evaluation: each step's
+    /// `grad_samples` draws are evaluated in chunks of `lanes` through one
+    /// [`LogDensity::logp_grad_batch_into`] call (one K-lane tape walk on
+    /// the fused engine). 1 = sequential. All base noise is drawn before
+    /// the evaluations, and the batched engine is bit-identical per lane,
+    /// so the fit does not depend on this knob — only wall-clock does.
+    pub lanes: usize,
     /// Monte-Carlo samples per ELBO evaluation (Stan: `elbo_samples`).
     pub elbo_samples: usize,
     /// Maximum optimizer iterations.
@@ -89,6 +96,7 @@ impl Default for Advi {
         Self {
             family: ViFamily::MeanField,
             grad_samples: 4,
+            lanes: 4,
             elbo_samples: 100,
             max_iters: 2000,
             eval_every: 50,
@@ -255,6 +263,13 @@ struct FitScratch {
     glp: Vec<f64>,
     bracket: Vec<f64>,
     grad: Vec<f64>,
+    /// Lane-major buffers for batched gradient steps (`lanes > 1`): all
+    /// `grad_samples` base draws, states, log-densities and gradients of
+    /// one step, sized once per fit.
+    betas: Vec<f64>,
+    bzs: Vec<f64>,
+    blps: Vec<f64>,
+    bglps: Vec<f64>,
 }
 
 impl Advi {
@@ -308,12 +323,17 @@ impl Advi {
         let mut n_logp: u64 = 0;
 
         let q0 = VarApprox::new(self.family, theta0, self.init_scale);
+        let gs = self.grad_samples.max(1);
         let mut scratch = FitScratch {
             eta: vec![0.0; dim],
             z: vec![0.0; dim],
             glp: vec![0.0; dim],
             bracket: vec![0.0; dim],
             grad: vec![0.0; q0.n_params()],
+            betas: vec![0.0; gs * dim],
+            bzs: vec![0.0; gs * dim],
+            blps: vec![0.0; gs],
+            bglps: vec![0.0; gs * dim],
         };
 
         // ---------------------------------------------------- η search
@@ -497,15 +517,57 @@ impl Advi {
         };
         s.grad.fill(0.0);
         let mut used = 0usize;
-        for _ in 0..self.grad_samples.max(1) {
-            q.draw(rng, &mut s.eta, &mut s.z);
-            let lp = ld.logp_grad_into(&s.z, &mut s.glp);
-            *n_grad += 1;
-            if !lp.is_finite() || s.glp.iter().any(|g| !g.is_finite()) {
-                continue;
+        let samples = self.grad_samples.max(1);
+        let k = self.lanes.clamp(1, samples);
+        if k > 1 {
+            // batched: draw all base noise first (gradient evaluations
+            // consume no randomness, so the η stream matches the
+            // sequential loop exactly), evaluate in K-lane chunks, then
+            // accumulate in draw order — bit-identical to the loop below
+            let dim = q.dim;
+            for i in 0..samples {
+                let (eta, z) = (
+                    &mut s.betas[i * dim..(i + 1) * dim],
+                    &mut s.bzs[i * dim..(i + 1) * dim],
+                );
+                q.draw(rng, eta, z);
             }
-            q.accumulate_grad(&s.eta, &s.glp, self.stl, &mut s.bracket, &mut s.grad);
-            used += 1;
+            let mut lo = 0usize;
+            while lo < samples {
+                let hi = (lo + k).min(samples);
+                ld.logp_grad_batch_into(
+                    &s.bzs[lo * dim..hi * dim],
+                    &mut s.blps[lo..hi],
+                    &mut s.bglps[lo * dim..hi * dim],
+                );
+                *n_grad += (hi - lo) as u64;
+                lo = hi;
+            }
+            for i in 0..samples {
+                let glp = &s.bglps[i * dim..(i + 1) * dim];
+                if !s.blps[i].is_finite() || glp.iter().any(|g| !g.is_finite()) {
+                    continue;
+                }
+                q.accumulate_grad(
+                    &s.betas[i * dim..(i + 1) * dim],
+                    glp,
+                    self.stl,
+                    &mut s.bracket,
+                    &mut s.grad,
+                );
+                used += 1;
+            }
+        } else {
+            for _ in 0..samples {
+                q.draw(rng, &mut s.eta, &mut s.z);
+                let lp = ld.logp_grad_into(&s.z, &mut s.glp);
+                *n_grad += 1;
+                if !lp.is_finite() || s.glp.iter().any(|g| !g.is_finite()) {
+                    continue;
+                }
+                q.accumulate_grad(&s.eta, &s.glp, self.stl, &mut s.bracket, &mut s.grad);
+                used += 1;
+            }
         }
         if used == 0 {
             return false;
@@ -665,6 +727,32 @@ mod tests {
         }
         assert_eq!(a.elbo.to_bits(), b.elbo.to_bits());
         assert_eq!(a.elbo_trace.len(), b.elbo_trace.len());
+    }
+
+    #[test]
+    fn lane_batched_fit_is_bitwise_equal_to_sequential() {
+        // batching the per-step MC gradient draws must not change the fit:
+        // same η stream, same accumulation order, bit-equal parameters
+        let ld = std_normal_density(3);
+        let run = |lanes: usize| {
+            let advi = Advi {
+                grad_samples: 8,
+                lanes,
+                max_iters: 200,
+                ..Advi::default()
+            };
+            let mut rng = Xoshiro256pp::seed_from_u64(11);
+            advi.fit(&ld, &[0.4, -0.2, 0.1], &mut rng)
+        };
+        let seq = run(1);
+        for lanes in [3, 8] {
+            let bat = run(lanes);
+            assert_eq!(seq.eta, bat.eta);
+            assert_eq!(seq.elbo.to_bits(), bat.elbo.to_bits());
+            for (x, y) in seq.approx.params.iter().zip(&bat.approx.params) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
     }
 
     #[test]
