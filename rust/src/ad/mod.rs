@@ -26,6 +26,7 @@
 pub mod arena;
 pub mod batch;
 pub mod forward;
+pub mod record;
 pub mod reverse;
 
 use crate::util::math;
@@ -110,6 +111,24 @@ pub trait Scalar:
         }
         hi + (lo - hi).exp().ln_1p()
     }
+
+    /// Stable log-sum-exp over a slice. Overridable so recording scalars
+    /// ([`record::RVar`]) can capture the reduction as one opcode instead
+    /// of baking the running maximum in as a constant.
+    fn log_sum_exp_slice(xs: &[Self]) -> Self {
+        let m = xs
+            .iter()
+            .cloned()
+            .fold(f64::NEG_INFINITY, |a, b| a.max(b.value()));
+        if m == f64::NEG_INFINITY {
+            return Self::constant(f64::NEG_INFINITY);
+        }
+        let mut s = Self::constant(0.0);
+        for &x in xs {
+            s = s + (x - m).exp();
+        }
+        s.ln() + m
+    }
 }
 
 impl Scalar for f64 {
@@ -169,18 +188,7 @@ impl Scalar for f64 {
 
 /// Stable log-sum-exp over a slice of scalars.
 pub fn log_sum_exp_t<T: Scalar>(xs: &[T]) -> T {
-    let m = xs
-        .iter()
-        .cloned()
-        .fold(f64::NEG_INFINITY, |a, b| a.max(b.value()));
-    if m == f64::NEG_INFINITY {
-        return T::constant(f64::NEG_INFINITY);
-    }
-    let mut s = T::constant(0.0);
-    for &x in xs {
-        s = s + (x - m).exp();
-    }
-    s.ln() + m
+    T::log_sum_exp_slice(xs)
 }
 
 /// Gradient of `f` at `x` by central finite differences — test oracle only.

@@ -1,0 +1,390 @@
+//! Structure-recording scalar for the static-model compiler.
+//!
+//! [`RVar`] is a [`Scalar`] whose arithmetic does no differentiation at
+//! all: each operation appends an opcode to a thread-local recording and
+//! carries its `f64` primal forward so data-dependent branches (stable
+//! log1p_exp regions, bijector domains, rejection checks) resolve exactly
+//! as they would under plain `f64` evaluation. Running a model body once
+//! with `T = RVar` therefore yields a flat, varname-free program — the
+//! [`StaticProgram`](crate::model::compiled::StaticProgram) — that the
+//! compiled executor can replay against fresh parameter values without
+//! ever re-entering the model body.
+//!
+//! Two properties matter for bit-identical replay:
+//!
+//! - **Constant folding mirrors the arena.** An operation whose inputs are
+//!   all constants emits no opcode and computes its value through the very
+//!   same `f64` expressions the arena scalar would use for a constant
+//!   node, so the recorded primal stream matches the dynamic executor's
+//!   bit for bit.
+//! - **Composites stay composite.** The stable compound kernels
+//!   (`log1p_exp`, `sigmoid`, `log_add_exp`, `log_sum_exp_slice`, `abs`)
+//!   are captured as single opcodes rather than their expanded branch
+//!   bodies, because the branch decisions depend on the primal value:
+//!   replay re-takes the branch at the *replayed* value, exactly like the
+//!   generic default methods do.
+
+use std::cell::RefCell;
+
+use crate::ad::Scalar;
+use crate::util::math;
+
+/// Register id meaning "no register": the value is a compile-time
+/// constant of the recording (mirrors `arena::NONE` for tape nodes).
+pub const REG_NONE: u32 = u32::MAX;
+
+/// An operand of a recorded operation: either a register written by an
+/// earlier opcode or an `f64` constant baked into the program.
+#[derive(Clone, Copy, Debug)]
+pub enum Src {
+    Reg(u32),
+    Const(f64),
+}
+
+impl PartialEq for Src {
+    fn eq(&self, other: &Self) -> bool {
+        // bitwise on constants: structural comparison between two
+        // recordings must not conflate 0.0/−0.0 or miscompare NaN
+        match (self, other) {
+            (Src::Reg(a), Src::Reg(b)) => a == b,
+            (Src::Const(a), Src::Const(b)) => a.to_bits() == b.to_bits(),
+            _ => false,
+        }
+    }
+}
+
+/// A recorded scalar operation. Unary opcodes take a register directly
+/// (a constant input would have been folded); binary opcodes take [`Src`]
+/// operands so reg⊗const mixes need no materialized constant registers.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    Add(Src, Src),
+    Sub(Src, Src),
+    Mul(Src, Src),
+    Div(Src, Src),
+    Neg(u32),
+    Ln(u32),
+    Exp(u32),
+    Sqrt(u32),
+    Ln1p(u32),
+    Tanh(u32),
+    Sin(u32),
+    Cos(u32),
+    Lgamma(u32),
+    Powi(u32, i32),
+    Powf(u32, f64),
+    // composite stable kernels, replayed with value-dependent branches
+    Abs(u32),
+    Log1pExp(u32),
+    LogSigmoid(u32),
+    Sigmoid(u32),
+    LogAddExp(Src, Src),
+    Lse(Vec<Src>),
+}
+
+/// One recorded statement: `regs[out] = op(...)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ROp {
+    pub out: u32,
+    pub op: Op,
+}
+
+#[derive(Default)]
+struct Recorder {
+    ops: Vec<ROp>,
+    n_regs: u32,
+    active: bool,
+}
+
+thread_local! {
+    static RECORDER: RefCell<Recorder> = RefCell::new(Recorder::default());
+}
+
+/// Start a recording on this thread. Panics if one is already active.
+pub fn begin() {
+    RECORDER.with(|r| {
+        let mut r = r.borrow_mut();
+        assert!(!r.active, "nested RVar recordings are not supported");
+        r.ops.clear();
+        r.n_regs = 0;
+        r.active = true;
+    });
+}
+
+/// Finish the recording, returning the opcode stream and register count.
+pub fn end() -> (Vec<ROp>, u32) {
+    RECORDER.with(|r| {
+        let mut r = r.borrow_mut();
+        assert!(r.active, "no RVar recording active");
+        r.active = false;
+        (std::mem::take(&mut r.ops), r.n_regs)
+    })
+}
+
+/// Number of opcodes recorded so far — the structure recorder marks this
+/// before/after each tilde site to delimit the glue-arithmetic runs.
+pub fn len() -> usize {
+    RECORDER.with(|r| {
+        let r = r.borrow();
+        assert!(r.active, "no RVar recording active");
+        r.ops.len()
+    })
+}
+
+/// Allocate a fresh register without emitting an opcode — used by the
+/// recording executor for assume-site outputs, which the replay writes
+/// directly from the fused transform kernels.
+pub fn alloc_reg() -> u32 {
+    RECORDER.with(|r| {
+        let mut r = r.borrow_mut();
+        assert!(r.active, "no RVar recording active");
+        let id = r.n_regs;
+        r.n_regs += 1;
+        id
+    })
+}
+
+fn push(op: Op) -> u32 {
+    RECORDER.with(|r| {
+        let mut r = r.borrow_mut();
+        assert!(r.active, "RVar arithmetic outside an active recording");
+        let out = r.n_regs;
+        r.n_regs += 1;
+        r.ops.push(ROp { out, op });
+        out
+    })
+}
+
+/// The recording scalar: a register id (or [`REG_NONE`] for constants)
+/// plus the primal value carried forward for branch resolution.
+#[derive(Clone, Copy, Debug)]
+pub struct RVar {
+    reg: u32,
+    val: f64,
+}
+
+impl RVar {
+    /// A value seated in an externally allocated register (assume-site
+    /// outputs written by the replay's transform kernels).
+    pub fn from_reg(reg: u32, val: f64) -> Self {
+        RVar { reg, val }
+    }
+
+    pub fn reg(&self) -> u32 {
+        self.reg
+    }
+
+    /// This value as an operand of a later opcode.
+    pub fn src(&self) -> Src {
+        if self.reg == REG_NONE {
+            Src::Const(self.val)
+        } else {
+            Src::Reg(self.reg)
+        }
+    }
+}
+
+fn binary(a: RVar, b: RVar, v: f64, mk: impl FnOnce(Src, Src) -> Op) -> RVar {
+    if a.reg == REG_NONE && b.reg == REG_NONE {
+        return RVar { reg: REG_NONE, val: v };
+    }
+    RVar {
+        reg: push(mk(a.src(), b.src())),
+        val: v,
+    }
+}
+
+fn unary(a: RVar, v: f64, mk: impl FnOnce(u32) -> Op) -> RVar {
+    if a.reg == REG_NONE {
+        return RVar { reg: REG_NONE, val: v };
+    }
+    RVar {
+        reg: push(mk(a.reg)),
+        val: v,
+    }
+}
+
+macro_rules! rvar_binop {
+    ($trait:ident, $method:ident, $op:ident, $fop:tt) => {
+        impl std::ops::$trait for RVar {
+            type Output = RVar;
+            fn $method(self, rhs: RVar) -> RVar {
+                binary(self, rhs, self.val $fop rhs.val, Op::$op)
+            }
+        }
+        impl std::ops::$trait<f64> for RVar {
+            type Output = RVar;
+            fn $method(self, rhs: f64) -> RVar {
+                binary(self, RVar::constant(rhs), self.val $fop rhs, Op::$op)
+            }
+        }
+    };
+}
+
+rvar_binop!(Add, add, Add, +);
+rvar_binop!(Sub, sub, Sub, -);
+rvar_binop!(Mul, mul, Mul, *);
+rvar_binop!(Div, div, Div, /);
+
+impl std::ops::Neg for RVar {
+    type Output = RVar;
+    fn neg(self) -> RVar {
+        unary(self, -self.val, Op::Neg)
+    }
+}
+
+impl PartialEq for RVar {
+    fn eq(&self, other: &Self) -> bool {
+        self.val == other.val
+    }
+}
+
+impl PartialOrd for RVar {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        self.val.partial_cmp(&other.val)
+    }
+}
+
+impl Scalar for RVar {
+    fn constant(x: f64) -> Self {
+        RVar {
+            reg: REG_NONE,
+            val: x,
+        }
+    }
+    fn value(&self) -> f64 {
+        self.val
+    }
+    fn ln(self) -> Self {
+        unary(self, self.val.ln(), Op::Ln)
+    }
+    fn exp(self) -> Self {
+        unary(self, self.val.exp(), Op::Exp)
+    }
+    fn sqrt(self) -> Self {
+        unary(self, self.val.sqrt(), Op::Sqrt)
+    }
+    fn powi(self, n: i32) -> Self {
+        if self.reg == REG_NONE {
+            return Self::constant(self.val.powi(n));
+        }
+        RVar {
+            reg: push(Op::Powi(self.reg, n)),
+            val: self.val.powi(n),
+        }
+    }
+    fn powf(self, e: f64) -> Self {
+        if self.reg == REG_NONE {
+            return Self::constant(self.val.powf(e));
+        }
+        RVar {
+            reg: push(Op::Powf(self.reg, e)),
+            val: self.val.powf(e),
+        }
+    }
+    fn abs(self) -> Self {
+        unary(self, self.val.abs(), Op::Abs)
+    }
+    fn ln_1p(self) -> Self {
+        unary(self, self.val.ln_1p(), Op::Ln1p)
+    }
+    fn tanh(self) -> Self {
+        unary(self, self.val.tanh(), Op::Tanh)
+    }
+    fn sin(self) -> Self {
+        unary(self, self.val.sin(), Op::Sin)
+    }
+    fn cos(self) -> Self {
+        unary(self, self.val.cos(), Op::Cos)
+    }
+    fn lgamma(self) -> Self {
+        unary(self, math::lgamma(self.val), Op::Lgamma)
+    }
+
+    // The stable composites are captured whole (see module docs): the
+    // value is computed by the f64 instance of the same default body, so
+    // constant folding stays bit-identical to the arena's constant path.
+    fn log1p_exp(self) -> Self {
+        unary(self, <f64 as Scalar>::log1p_exp(self.val), Op::Log1pExp)
+    }
+    fn log_sigmoid(self) -> Self {
+        unary(self, <f64 as Scalar>::log_sigmoid(self.val), Op::LogSigmoid)
+    }
+    fn sigmoid(self) -> Self {
+        unary(self, <f64 as Scalar>::sigmoid(self.val), Op::Sigmoid)
+    }
+    fn log_add_exp(self, other: Self) -> Self {
+        let v = <f64 as Scalar>::log_add_exp(self.val, other.val);
+        binary(self, other, v, Op::LogAddExp)
+    }
+    fn log_sum_exp_slice(xs: &[Self]) -> Self {
+        // value computed exactly like the generic default (same fold, same
+        // accumulation order); the reduction itself becomes one opcode so
+        // the running maximum is re-resolved at replay values
+        let m = xs.iter().fold(f64::NEG_INFINITY, |a, b| a.max(b.val));
+        let v = if m == f64::NEG_INFINITY {
+            f64::NEG_INFINITY
+        } else {
+            let mut s = 0.0f64;
+            for x in xs {
+                s += (x.val - m).exp();
+            }
+            s.ln() + m
+        };
+        if xs.iter().all(|x| x.reg == REG_NONE) {
+            return Self::constant(v);
+        }
+        RVar {
+            reg: push(Op::Lse(xs.iter().map(|x| x.src()).collect())),
+            val: v,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_fold_without_opcodes() {
+        begin();
+        let a = RVar::constant(2.0);
+        let b = RVar::constant(3.0);
+        let c = (a * b + 1.0).ln();
+        let (ops, n_regs) = end();
+        assert!(ops.is_empty());
+        assert_eq!(n_regs, 0);
+        assert_eq!(c.value().to_bits(), 7.0f64.ln().to_bits());
+    }
+
+    #[test]
+    fn registers_chain_and_values_track_f64() {
+        begin();
+        let x = RVar::from_reg(alloc_reg(), 0.5);
+        let y = (x * 2.0 + 1.0).exp().ln_1p();
+        let (ops, n_regs) = end();
+        assert_eq!(ops.len(), 4);
+        assert_eq!(n_regs, 5);
+        let want = (0.5f64 * 2.0 + 1.0).exp().ln_1p();
+        assert_eq!(y.value().to_bits(), want.to_bits());
+        assert!(matches!(ops[0].op, Op::Mul(Src::Reg(0), Src::Const(c)) if c == 2.0));
+    }
+
+    #[test]
+    fn composites_record_one_opcode() {
+        begin();
+        let x = RVar::from_reg(alloc_reg(), -0.3);
+        let s = x.log_sigmoid();
+        let l = RVar::log_sum_exp_slice(&[x, s, RVar::constant(0.1)]);
+        let (ops, _) = end();
+        assert_eq!(ops.len(), 2);
+        assert!(matches!(ops[0].op, Op::LogSigmoid(0)));
+        assert!(matches!(&ops[1].op, Op::Lse(srcs) if srcs.len() == 3));
+        let sf = <f64 as Scalar>::log_sigmoid(-0.3);
+        assert_eq!(s.value().to_bits(), sf.to_bits());
+        assert_eq!(
+            l.value().to_bits(),
+            <f64 as Scalar>::log_sum_exp_slice(&[-0.3, sf, 0.1]).to_bits()
+        );
+    }
+}

@@ -219,7 +219,10 @@ pub fn run_cell(
             time_hmc(&ld, &theta0, bm.step_size, cfg.iters, run_iters, cfg.reps, cfg.seed)
         }
         BenchBackend::TypedFused => {
-            let ld = NativeDensity::fused(bm.model.as_ref(), &tvi);
+            // pin the dynamic fused walk: `fused()` auto-promotes static
+            // models to the compiled replay, which `bench static` measures
+            // separately — this cell stays the dynamic-engine baseline
+            let ld = NativeDensity::fused_dynamic(bm.model.as_ref(), &tvi);
             time_hmc(&ld, &theta0, bm.step_size, cfg.iters, run_iters, cfg.reps, cfg.seed)
         }
         BenchBackend::TypedForward => {
@@ -1055,6 +1058,245 @@ pub fn batch_rows_to_json(rows: &[BatchRow], cfg: &BatchBenchConfig) -> String {
     out
 }
 
+/// One `bench static` row: the compiled static-structure replay vs the
+/// dynamic fused walk of the same density — the quantity the
+/// structure compiler exists to improve, isolated per model.
+#[derive(Clone, Debug)]
+pub struct StaticRow {
+    pub model: String,
+    /// Unconstrained dimension.
+    pub dim: usize,
+    /// The recorder promoted this model: two structurally identical
+    /// recordings plus a bitwise cross-check against the dynamic walk.
+    pub promoted: bool,
+    /// Observe plates the compiler formed, and the total data rows they
+    /// route through the row-batched kernels.
+    pub n_plates: usize,
+    pub plate_rows: usize,
+    /// Mean wall-clock seconds per gradient, dynamic fused walk.
+    pub secs_dynamic: f64,
+    /// Mean wall-clock seconds per gradient, compiled replay (NaN when
+    /// the model did not promote).
+    pub secs_compiled: f64,
+    /// `secs_dynamic / secs_compiled` (NaN when the model did not promote).
+    pub speedup: f64,
+    pub seed: u64,
+}
+
+/// `bench static` configuration.
+#[derive(Clone, Debug)]
+pub struct StaticBenchConfig {
+    pub models: Vec<String>,
+    pub seed: u64,
+    /// Use the reduced workloads (default) or the full Table-1 sizes.
+    pub small: bool,
+    /// Target seconds per timed measurement (per rep).
+    pub target_secs: f64,
+    pub reps: usize,
+}
+
+impl Default for StaticBenchConfig {
+    fn default() -> Self {
+        // every Table-1 model plus the tall flagship where plate grouping
+        // and hash-free replay have the most data rows to amortize over
+        let mut models: Vec<String> =
+            crate::models::ALL_MODELS.iter().map(|s| s.to_string()).collect();
+        models.push("logreg_tall".into());
+        Self {
+            models,
+            seed: 42,
+            small: true,
+            target_secs: 5e-3,
+            reps: 5,
+        }
+    }
+}
+
+/// Run the compiled-vs-dynamic comparison and collect rows.
+pub fn run_static_bench(cfg: &StaticBenchConfig) -> Vec<StaticRow> {
+    use crate::model::{compiled, init_typed, typed_grad_fused_into};
+
+    let mut rows = Vec::new();
+    for name in &cfg.models {
+        let bm = if cfg.small {
+            crate::models::build_small(name, cfg.seed)
+        } else {
+            build(name, cfg.seed)
+        };
+        let model = bm.model.as_ref();
+        let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+        let tvi = init_typed(model, &mut rng);
+        let theta: Vec<f64> = tvi.unconstrained.iter().map(|x| x * 0.3).collect();
+        let dim = theta.len();
+        let mut grad = vec![0.0; dim];
+
+        let lp_dyn = typed_grad_fused_into(model, &tvi, &theta, Context::Default, &mut grad);
+        assert!(lp_dyn.is_finite(), "{name}: fused logp {lp_dyn}");
+        let g_dyn = grad.clone();
+        eprintln!("bench: {name} / static dynamic-baseline");
+        let secs_dynamic = crate::util::timing::bench_micro(
+            &format!("{name}/dynamic"),
+            cfg.target_secs,
+            cfg.reps,
+            || {
+                std::hint::black_box(typed_grad_fused_into(
+                    model,
+                    &tvi,
+                    &theta,
+                    Context::Default,
+                    &mut grad,
+                ));
+            },
+        )
+        .mean();
+
+        let prog = compiled::try_compile(model, &tvi);
+        let (n_plates, plate_rows, secs_compiled) = match &prog {
+            Some(p) => {
+                // end-to-end bitwise check at the bench point (the compiler
+                // already cross-validated at its own probe point)
+                let lp_c = p.logp_grad_into(&tvi, &theta, Context::Default, &mut grad);
+                assert_eq!(
+                    lp_c.to_bits(),
+                    lp_dyn.to_bits(),
+                    "{name}: compiled logp diverges from the dynamic walk"
+                );
+                for (j, (a, b)) in grad.iter().zip(&g_dyn).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{name}: compiled grad[{j}] diverges from the dynamic walk"
+                    );
+                }
+                eprintln!("bench: {name} / static compiled-replay");
+                let secs = crate::util::timing::bench_micro(
+                    &format!("{name}/compiled"),
+                    cfg.target_secs,
+                    cfg.reps,
+                    || {
+                        std::hint::black_box(p.logp_grad_into(
+                            &tvi,
+                            &theta,
+                            Context::Default,
+                            &mut grad,
+                        ));
+                    },
+                )
+                .mean();
+                (p.n_plates(), p.plate_rows(), secs)
+            }
+            None => {
+                eprintln!("bench: {name}: did not promote (structure is not static)");
+                (0, 0, f64::NAN)
+            }
+        };
+
+        rows.push(StaticRow {
+            model: name.clone(),
+            dim,
+            promoted: prog.is_some(),
+            n_plates,
+            plate_rows,
+            secs_dynamic,
+            secs_compiled,
+            speedup: secs_dynamic / secs_compiled,
+            seed: cfg.seed,
+        });
+    }
+    rows
+}
+
+/// Human-readable compiled-vs-dynamic table.
+pub fn render_static_table(rows: &[StaticRow]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "static — compiled structure replay vs the dynamic fused walk, one gradient per side\n"
+    );
+    let _ = writeln!(
+        out,
+        "{:<16} {:>5} {:>9} {:>7} {:>10} {:>12} {:>12} {:>8}",
+        "model", "dim", "promoted", "plates", "plate-rows", "µs/dynamic", "µs/compiled", "speedup"
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{:<16} {:>5} {:>9} {:>7} {:>10} {:>12.2} {:>12} {:>8}",
+            r.model,
+            r.dim,
+            if r.promoted { "yes" } else { "NO" },
+            r.n_plates,
+            r.plate_rows,
+            r.secs_dynamic * 1e6,
+            if r.secs_compiled.is_finite() {
+                format!("{:.2}", r.secs_compiled * 1e6)
+            } else {
+                "-".into()
+            },
+            if r.speedup.is_finite() {
+                format!("{:.2}×", r.speedup)
+            } else {
+                "-".into()
+            },
+        );
+    }
+    out
+}
+
+/// Serialize static rows as the coordinator's `BENCH_STATIC.json` payload.
+pub fn static_rows_to_json(rows: &[StaticRow], cfg: &StaticBenchConfig) -> String {
+    let mut out = String::new();
+    let _ = write!(
+        out,
+        "{{\n  \"bench\": \"static\",\n  \"seed\": {},\n  \"small\": {},\n  \"rows\": [\n",
+        cfg.seed, cfg.small
+    );
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"model\": \"{}\", \"dim\": {}, \"promoted\": {}, \"n_plates\": {}, \
+             \"plate_rows\": {}, \"secs_dynamic\": {}, \"secs_compiled\": {}, \
+             \"speedup\": {}, \"seed\": {}}}",
+            r.model,
+            r.dim,
+            r.promoted,
+            r.n_plates,
+            r.plate_rows,
+            json_num(r.secs_dynamic),
+            json_num(r.secs_compiled),
+            json_num(r.speedup),
+            r.seed,
+        );
+        out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// The `--assert-speedup` gate: every promoted model must be at least
+/// break-even against the dynamic walk, and the tall flagship
+/// (`logreg_tall`) must reach `min_tall` and must have promoted at all.
+/// Returns one message per violation (empty = gate passed).
+pub fn check_static_speedups(rows: &[StaticRow], min_tall: f64) -> Vec<String> {
+    let mut bad = Vec::new();
+    for r in rows {
+        if !r.promoted {
+            if r.model == "logreg_tall" {
+                bad.push(format!("{}: did not promote to the compiled executor", r.model));
+            }
+            continue;
+        }
+        let floor = if r.model == "logreg_tall" { min_tall } else { 1.0 };
+        if !(r.speedup >= floor) {
+            bad.push(format!(
+                "{}: compiled speedup {:.2}× below required {:.2}×",
+                r.model, r.speedup, floor
+            ));
+        }
+    }
+    bad
+}
+
 fn json_num(x: f64) -> String {
     if x.is_finite() {
         format!("{x}")
@@ -1575,6 +1817,60 @@ mod tests {
         assert!(json.contains("\"bench\": \"batch\""));
         assert!(json.contains("\"lanes\": 2"));
         assert!(render_batch_table(&rows).contains("vs-K1"));
+    }
+
+    #[test]
+    fn static_bench_rows_and_json_shape() {
+        let cfg = StaticBenchConfig {
+            models: vec!["gauss_unknown".into(), "hier_poisson".into()],
+            target_secs: 1e-4,
+            reps: 1,
+            ..StaticBenchConfig::default()
+        };
+        let rows = run_static_bench(&cfg);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.promoted, "{}: static structure should promote", r.model);
+            assert!(r.secs_dynamic > 0.0 && r.secs_compiled > 0.0);
+            assert!(r.speedup.is_finite());
+        }
+        // hier_poisson: one Poisson plate per group, 5 rows each
+        let hp = rows.iter().find(|r| r.model == "hier_poisson").unwrap();
+        assert_eq!(hp.n_plates, 10);
+        assert_eq!(hp.plate_rows, 50);
+        let json = static_rows_to_json(&rows, &cfg);
+        assert!(json.contains("\"bench\": \"static\""));
+        assert!(json.contains("\"promoted\": true"));
+        assert!(json.contains("\"plate_rows\": 50"));
+        assert!(render_static_table(&rows).contains("speedup"));
+    }
+
+    #[test]
+    fn static_speedup_gate_flags_violations() {
+        let mk = |model: &str, promoted: bool, speedup: f64| StaticRow {
+            model: model.into(),
+            dim: 3,
+            promoted,
+            n_plates: 0,
+            plate_rows: 0,
+            secs_dynamic: 1.0,
+            secs_compiled: 1.0 / speedup,
+            speedup,
+            seed: 42,
+        };
+        // passing run: flagship over its bar, the rest at break-even
+        let rows = vec![mk("logreg_tall", true, 1.5), mk("gauss_unknown", true, 1.01)];
+        assert!(check_static_speedups(&rows, 1.3).is_empty());
+        // flagship under its bar AND a regressed static model
+        let rows = vec![mk("logreg_tall", true, 1.1), mk("gauss_unknown", true, 0.9)];
+        let bad = check_static_speedups(&rows, 1.3);
+        assert_eq!(bad.len(), 2, "{bad:?}");
+        // non-promoted flagship is itself a violation; other models may
+        // legitimately stay dynamic
+        let rows = vec![mk("logreg_tall", false, f64::NAN), mk("lda", false, f64::NAN)];
+        let bad = check_static_speedups(&rows, 1.3);
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        assert!(bad[0].contains("logreg_tall"));
     }
 
     #[test]

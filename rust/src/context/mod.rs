@@ -21,8 +21,44 @@
 //! semantically identical, and the weights constant-fold on the typed
 //! path. `Subsample` generalizes `MiniBatch` (full window) and the
 //! likelihood half of `ObsWindow` (scale 1, but with priors kept).
+//!
+//! [`Context::SubsampleIdx`] extends `Subsample` to **non-contiguous**
+//! observation-index sets (importance-sampled or without-replacement
+//! minibatches). Because `Context` must stay `Copy` (it is embedded in
+//! every density and cloned per evaluation), the index set itself lives in
+//! a process-global registry and the context carries only a [`SubsetId`]
+//! handle — see [`register_subset`].
+
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::ad::Scalar;
+
+/// Copyable handle to a registered observation-index set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SubsetId(u32);
+
+static SUBSETS: OnceLock<Mutex<Vec<Arc<[u32]>>>> = OnceLock::new();
+
+fn subset_registry() -> &'static Mutex<Vec<Arc<[u32]>>> {
+    SUBSETS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Register an observation-index set for [`Context::SubsampleIdx`]. The
+/// indices are sorted and deduplicated; the returned handle is `Copy` and
+/// valid for the life of the process. Registration is intended for
+/// per-fit (not per-step) sets — entries are never reclaimed.
+pub fn register_subset(mut idx: Vec<u32>) -> SubsetId {
+    idx.sort_unstable();
+    idx.dedup();
+    let mut reg = subset_registry().lock().expect("subset registry poisoned");
+    reg.push(idx.into());
+    SubsetId((reg.len() - 1) as u32)
+}
+
+/// The sorted, deduplicated indices behind a handle.
+pub fn subset_indices(id: SubsetId) -> Arc<[u32]> {
+    subset_registry().lock().expect("subset registry poisoned")[id.0 as usize].clone()
+}
 
 /// Which log-density terms a model execution accumulates.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -43,6 +79,13 @@ pub enum Context {
     /// stochastic VI needs on tall-data models. Out-of-window observations
     /// contribute nothing (and cannot trigger early rejection).
     Subsample { lo: usize, hi: usize, scale: f64 },
+    /// Log-joint with the likelihood restricted to an arbitrary
+    /// (non-contiguous) set of observation visit indices, scaled by
+    /// `scale`: the without-replacement / importance-sampled minibatch
+    /// estimator. The set is registered once via [`register_subset`]; the
+    /// accumulator walks it with a lazy cursor, so membership tests are
+    /// O(1) amortized over a model pass.
+    SubsampleIdx { set: SubsetId, scale: f64 },
     /// Replay-with-regenerate particle mode (SMC / Particle-Gibbs): score
     /// only the observe statements with visit index in `[lo, hi)`, drop
     /// all prior-side terms (the bootstrap proposal *is* the prior, so
@@ -76,12 +119,16 @@ impl Context {
             Context::Prior => 0.0,
             Context::MiniBatch { scale } => *scale,
             Context::Subsample { scale, .. } => *scale,
+            Context::SubsampleIdx { scale, .. } => *scale,
             _ => 1.0,
         }
     }
 
     /// The observation-index window scored by this context:
-    /// `[0, usize::MAX)` for every non-windowed context.
+    /// `[0, usize::MAX)` for every non-windowed context. A
+    /// [`Context::SubsampleIdx`] set is *not* a contiguous window: it
+    /// reports the full range, so window-aware model bodies visit every
+    /// site and the accumulator's cursor does the membership filtering.
     #[inline]
     pub fn obs_window(&self) -> (usize, usize) {
         match self {
@@ -103,7 +150,7 @@ impl Context {
 /// (or [`Accumulator::note_obs`] on the fused path), which counts sites
 /// in model visit order and drops terms outside the context's window —
 /// so `Context::Subsample` works identically on every executor.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct Accumulator<T: Scalar> {
     logp: T,
     rejected: bool,
@@ -112,11 +159,21 @@ pub struct Accumulator<T: Scalar> {
     obs_lo: usize,
     obs_hi: usize,
     obs_seen: usize,
+    /// Non-contiguous index set ([`Context::SubsampleIdx`]), sorted and
+    /// deduplicated, with a lazy cursor: `obs_seen` only ever increases,
+    /// so each `note_obs` advances `idx_pos` monotonically — O(|set|)
+    /// total cursor work per model pass.
+    idx_set: Option<Arc<[u32]>>,
+    idx_pos: usize,
 }
 
 impl<T: Scalar> Accumulator<T> {
     pub fn new(ctx: Context) -> Self {
         let (obs_lo, obs_hi) = ctx.obs_window();
+        let idx_set = match ctx {
+            Context::SubsampleIdx { set, .. } => Some(subset_indices(set)),
+            _ => None,
+        };
         Self {
             logp: T::constant(0.0),
             rejected: false,
@@ -125,6 +182,8 @@ impl<T: Scalar> Accumulator<T> {
             obs_lo,
             obs_hi,
             obs_seen: 0,
+            idx_set,
+            idx_pos: 0,
         }
     }
 
@@ -177,6 +236,18 @@ impl<T: Scalar> Accumulator<T> {
     pub fn note_obs(&mut self) -> f64 {
         let i = self.obs_seen;
         self.obs_seen += 1;
+        if let Some(set) = &self.idx_set {
+            // lazy cursor: skip_obs only advances obs_seen, so catch the
+            // cursor up to the current site before the membership test
+            while self.idx_pos < set.len() && (set[self.idx_pos] as usize) < i {
+                self.idx_pos += 1;
+            }
+            if self.idx_pos < set.len() && set[self.idx_pos] as usize == i {
+                self.idx_pos += 1;
+                return self.lik_w;
+            }
+            return 0.0;
+        }
         if i >= self.obs_lo && i < self.obs_hi {
             self.lik_w
         } else {
@@ -356,6 +427,59 @@ mod tests {
         let mut b = Accumulator::<f64>::new(ctx);
         b.add_obs(f64::NEG_INFINITY);
         assert!(!b.rejected());
+    }
+
+    #[test]
+    fn subsample_idx_scores_exactly_the_set() {
+        let set = register_subset(vec![1, 3, 3, 0]); // dedup + sort → {0, 1, 3}
+        let ctx = Context::SubsampleIdx { set, scale: 2.0 };
+        assert_eq!(ctx.prior_weight(), 1.0);
+        assert_eq!(ctx.lik_weight(), 2.0);
+        assert_eq!(ctx.obs_window(), (0, usize::MAX));
+        let mut a = Accumulator::<f64>::new(ctx);
+        a.add_prior(-1.0);
+        a.add_obs(-1.0); // site 0: in set, × 2
+        a.add_obs(-10.0); // site 1: in set, × 2
+        a.add_obs(-100.0); // site 2: out of set
+        a.add_obs(-2.0); // site 3: in set, × 2
+        a.add_obs(-100.0); // site 4: out of set
+        assert_eq!(a.obs_seen(), 5);
+        assert_eq!(a.total(), -1.0 - 2.0 * 13.0);
+        // out-of-set −∞ observations never poison the run
+        let mut b = Accumulator::<f64>::new(ctx);
+        b.add_obs(-1.0);
+        b.add_obs(-1.0);
+        b.add_obs(f64::NEG_INFINITY);
+        assert!(!b.rejected());
+    }
+
+    #[test]
+    fn subsample_idx_cursor_survives_skip_obs() {
+        let set = register_subset(vec![2, 5]);
+        let ctx = Context::SubsampleIdx { set, scale: 3.0 };
+        let mut a = Accumulator::<f64>::new(ctx);
+        a.skip_obs(2); // jump past sites 0-1 without touching the cursor
+        a.add_obs(-1.0); // site 2: in set
+        a.skip_obs(2); // sites 3-4
+        a.add_obs(-2.0); // site 5: in set
+        a.add_obs(-50.0); // site 6: out of set
+        assert_eq!(a.obs_seen(), 7);
+        assert_eq!(a.total(), -9.0);
+        // skipping over in-set sites drops their terms, same as a
+        // contiguous window jumped by skip_obs
+        let mut b = Accumulator::<f64>::new(ctx);
+        b.skip_obs(6);
+        b.add_obs(-50.0); // site 6: out of set
+        assert_eq!(b.total(), 0.0);
+    }
+
+    #[test]
+    fn subset_registry_roundtrips_sorted_unique() {
+        let id = register_subset(vec![9, 4, 4, 7]);
+        assert_eq!(&*subset_indices(id), &[4, 7, 9]);
+        let id2 = register_subset(Vec::new());
+        assert!(subset_indices(id2).is_empty());
+        assert_ne!(id, id2);
     }
 
     #[test]

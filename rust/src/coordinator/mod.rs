@@ -4,11 +4,12 @@
 use std::sync::Arc;
 
 use crate::bench::{
-    append_history, batch_rows_to_json, grad_rows_to_json, history_line, render_batch_table,
-    render_grad_table, render_smc_table, render_table1, render_vi_table, run_batch_bench,
-    run_grad_bench, run_smc_bench, run_table1, run_vi_bench, smc_rows_to_json,
-    table1_cells_to_json, vi_rows_to_json, BatchBenchConfig, BenchBackend, GradBenchConfig,
-    HistoryEntry, SmcBenchConfig, SmcPath, Table1Config, ViBenchConfig,
+    append_history, batch_rows_to_json, check_static_speedups, grad_rows_to_json, history_line,
+    render_batch_table, render_grad_table, render_smc_table, render_static_table, render_table1,
+    render_vi_table, run_batch_bench, run_grad_bench, run_smc_bench, run_static_bench, run_table1,
+    run_vi_bench, smc_rows_to_json, static_rows_to_json, table1_cells_to_json, vi_rows_to_json,
+    BatchBenchConfig, BenchBackend, GradBenchConfig, HistoryEntry, SmcBenchConfig, SmcPath,
+    StaticBenchConfig, Table1Config, ViBenchConfig,
 };
 use crate::chain::{Chain, MultiChain};
 use crate::gradient::{Backend, LogDensity, NativeDensity};
@@ -41,7 +42,7 @@ pub fn usage() -> String {
             ),
             (
                 "bench",
-                "bench table1 [--models a,b] [--backends x,y] [--iters N] [--reps R] [--out FILE.json] | bench smc [--models a,b] [--particles N] [--threads T] [--path typed|boxed|both] [--full] [--out FILE.json] | bench grad [--models a,b] [--engines fused,tape,forward] [--full] [--out FILE.json] | bench vi [--models a,b] [--families meanfield,fullrank] [--draws N] [--max-iters N] [--minibatch B] [--stl] [--full] [--out FILE.json] | bench batch [--models a,b] [--lanes 1,4,16,64] [--assert-speedup R] [--full] [--out FILE.json]  (any target: --history appends one JSONL row to BENCH_HISTORY.jsonl)",
+                "bench table1 [--models a,b] [--backends x,y] [--iters N] [--reps R] [--out FILE.json] | bench smc [--models a,b] [--particles N] [--threads T] [--path typed|boxed|both] [--full] [--out FILE.json] | bench grad [--models a,b] [--engines fused,tape,forward] [--full] [--out FILE.json] | bench vi [--models a,b] [--families meanfield,fullrank] [--draws N] [--max-iters N] [--minibatch B] [--stl] [--full] [--out FILE.json] | bench batch [--models a,b] [--lanes 1,4,16,64] [--assert-speedup R] [--full] [--out FILE.json] | bench static [--models a,b] [--assert-speedup R] [--full] [--out FILE.json]  (static: compiled structure replay vs the dynamic fused walk; --assert-speedup R requires >= Rx on logreg_tall and break-even on every other promoted model; any target: --history appends one JSONL row to BENCH_HISTORY.jsonl)",
             ),
             ("query", "evaluate a probability query string (paper §3.5)"),
         ],
@@ -656,8 +657,72 @@ fn cmd_bench(args: &Args) -> i32 {
                 }
             }
         }
+        "static" => {
+            let mut cfg = StaticBenchConfig::default();
+            if let Some(models) = args.get("models") {
+                cfg.models = models.split(',').map(|s| s.trim().to_string()).collect();
+            }
+            cfg.seed = args.get_parse_or("seed", cfg.seed).unwrap_or(cfg.seed);
+            cfg.reps = args.get_parse_or("reps", cfg.reps).unwrap_or(cfg.reps);
+            cfg.small = !args.flag("full");
+            let min_speedup = match args.get_parse::<f64>("assert-speedup") {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            };
+            let rows = run_static_bench(&cfg);
+            println!("{}", render_static_table(&rows));
+            // CI tripwire: the compiled replay must pay for itself —
+            // ≥ R× on the tall flagship, break-even on every other
+            // model that promoted
+            if let Some(min) = min_speedup {
+                let bad = check_static_speedups(&rows, min);
+                for msg in &bad {
+                    eprintln!("assert-speedup: {msg}");
+                }
+                if !bad.is_empty() {
+                    return 1;
+                }
+                println!("assert-speedup: compiled replay meets the gate (tall >= {min:.2}x, rest >= 1.00x)");
+            }
+            if args.flag("history") {
+                let mut entries = Vec::with_capacity(rows.len() * 2);
+                for r in &rows {
+                    entries.push(HistoryEntry {
+                        model: r.model.clone(),
+                        label: "dynamic".into(),
+                        secs: r.secs_dynamic,
+                    });
+                    entries.push(HistoryEntry {
+                        model: r.model.clone(),
+                        label: "compiled".into(),
+                        secs: r.secs_compiled,
+                    });
+                }
+                let rc = bench_history("static", cfg.seed, entries);
+                if rc != 0 {
+                    return rc;
+                }
+            }
+            let out_path = args.get_or("out", "BENCH_STATIC.json").to_string();
+            let json = static_rows_to_json(&rows, &cfg);
+            match std::fs::write(&out_path, &json) {
+                Ok(()) => {
+                    println!("wrote {out_path}");
+                    0
+                }
+                Err(e) => {
+                    eprintln!("failed to write {out_path}: {e}");
+                    1
+                }
+            }
+        }
         other => {
-            eprintln!("unknown bench target {other:?} (try: table1, smc, grad, vi, batch)");
+            eprintln!(
+                "unknown bench target {other:?} (try: table1, smc, grad, vi, batch, static)"
+            );
             2
         }
     }

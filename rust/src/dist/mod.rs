@@ -406,6 +406,22 @@ impl<T: Scalar> ScalarDist<T> {
         }
     }
 
+    /// Rebuild this distribution over any scalar type from parameters in
+    /// [`param_vars`](Self::param_vars) order — the compiled executor uses
+    /// this to re-seat a recorded site's template on live arena variables.
+    pub fn with_params<U: Scalar>(&self, p: &[U; MAX_DIST_PARAMS]) -> ScalarDist<U> {
+        match self {
+            ScalarDist::Normal(_) => ScalarDist::Normal(Normal::new(p[0], p[1])),
+            ScalarDist::InverseGamma(_) => ScalarDist::InverseGamma(InverseGamma::new(p[0], p[1])),
+            ScalarDist::Gamma(_) => ScalarDist::Gamma(Gamma::new(p[0], p[1])),
+            ScalarDist::Beta(_) => ScalarDist::Beta(Beta::new(p[0], p[1])),
+            ScalarDist::Exponential(_) => ScalarDist::Exponential(Exponential::new(p[0])),
+            ScalarDist::Uniform(_) => ScalarDist::Uniform(Uniform::new(p[0], p[1])),
+            ScalarDist::Cauchy(_) => ScalarDist::Cauchy(Cauchy::new(p[0], p[1])),
+            ScalarDist::HalfCauchy(_) => ScalarDist::HalfCauchy(HalfCauchy::new(p[0])),
+        }
+    }
+
     /// Fused analytic adjoint: logpdf value + partials w.r.t. `x` and each
     /// parameter, all in one pass over primal values. Mirrors the guard
     /// branches of the generic `logpdf` exactly (out-of-support → −∞ with
@@ -506,6 +522,157 @@ impl ScalarDist<f64> {
     /// Box into the dynamically-typed form stored in `UntypedVarInfo`.
     pub fn boxed(&self) -> AnyDist {
         AnyDist::Scalar(self.clone())
+    }
+
+    /// Row-batched fused adjoint for an observation *plate*: all rows share
+    /// this distribution's parameters, so pure-parameter subexpressions
+    /// (`ln`, `lgamma`, `digamma` of the parameters) are hoisted out of the
+    /// loop once. Every per-row operation is kept textually identical to
+    /// [`logpdf_adj`](Self::logpdf_adj) — same order, same divisions — so
+    /// each row's `lp`/`d_p` is **bitwise** equal to the sequential kernel.
+    /// `d_x` is not produced: plate rows are data, never parameters.
+    pub fn logpdf_adj_rows(
+        &self,
+        xs: &[f64],
+        lp: &mut [f64],
+        d_p: &mut [[f64; MAX_DIST_PARAMS]],
+    ) {
+        debug_assert_eq!(xs.len(), lp.len());
+        debug_assert_eq!(xs.len(), d_p.len());
+        match self {
+            ScalarDist::Normal(d) => {
+                let (m, s) = (d.mean, d.sd);
+                if s <= 0.0 {
+                    lp.fill(f64::NEG_INFINITY);
+                    d_p.fill([0.0; MAX_DIST_PARAMS]);
+                    return;
+                }
+                let s_ln = s.ln();
+                for ((&x, l), dp) in xs.iter().zip(lp.iter_mut()).zip(d_p.iter_mut()) {
+                    let z = (x - m) / s;
+                    *l = -0.5 * z * z - s_ln - 0.5 * math::LN_2PI;
+                    dp[0] = z / s;
+                    dp[1] = (z * z - 1.0) / s;
+                }
+            }
+            ScalarDist::InverseGamma(d) => {
+                let (a, b) = (d.shape, d.scale);
+                let b_ln = b.ln();
+                let head = a * b_ln - math::lgamma(a);
+                let a1 = a + 1.0;
+                let c0 = b_ln - math::digamma(a);
+                let a_over_b = a / b;
+                for ((&x, l), dp) in xs.iter().zip(lp.iter_mut()).zip(d_p.iter_mut()) {
+                    if x <= 0.0 {
+                        *l = f64::NEG_INFINITY;
+                        *dp = [0.0; MAX_DIST_PARAMS];
+                        continue;
+                    }
+                    let x_ln = x.ln();
+                    *l = head - a1 * x_ln - b / x;
+                    dp[0] = c0 - x_ln;
+                    dp[1] = a_over_b - 1.0 / x;
+                }
+            }
+            ScalarDist::Gamma(d) => {
+                let (a, r) = (d.shape, d.rate);
+                let r_ln = r.ln();
+                let head = a * r_ln - math::lgamma(a);
+                let am1 = a - 1.0;
+                let c0 = r_ln - math::digamma(a);
+                let a_over_r = a / r;
+                for ((&x, l), dp) in xs.iter().zip(lp.iter_mut()).zip(d_p.iter_mut()) {
+                    if x <= 0.0 {
+                        *l = f64::NEG_INFINITY;
+                        *dp = [0.0; MAX_DIST_PARAMS];
+                        continue;
+                    }
+                    let x_ln = x.ln();
+                    *l = head + am1 * x_ln - r * x;
+                    dp[0] = c0 + x_ln;
+                    dp[1] = a_over_r - x;
+                }
+            }
+            ScalarDist::Beta(d) => {
+                let (a, b) = (d.a, d.b);
+                let (am1, bm1) = (a - 1.0, b - 1.0);
+                let (lg_a, lg_b, lg_ab) = (math::lgamma(a), math::lgamma(b), math::lgamma(a + b));
+                let (dg_a, dg_b) = (math::digamma(a), math::digamma(b));
+                let dig_ab = math::digamma(a + b);
+                for ((&x, l), dp) in xs.iter().zip(lp.iter_mut()).zip(d_p.iter_mut()) {
+                    if x <= 0.0 || x >= 1.0 {
+                        *l = f64::NEG_INFINITY;
+                        *dp = [0.0; MAX_DIST_PARAMS];
+                        continue;
+                    }
+                    let x_ln = x.ln();
+                    let omx_ln = (1.0 - x).ln();
+                    *l = am1 * x_ln + bm1 * omx_ln - lg_a - lg_b + lg_ab;
+                    dp[0] = x_ln - dg_a + dig_ab;
+                    dp[1] = omx_ln - dg_b + dig_ab;
+                }
+            }
+            ScalarDist::Exponential(d) => {
+                let r = d.rate;
+                let r_ln = r.ln();
+                let inv_r = 1.0 / r;
+                for ((&x, l), dp) in xs.iter().zip(lp.iter_mut()).zip(d_p.iter_mut()) {
+                    if x < 0.0 {
+                        *l = f64::NEG_INFINITY;
+                        *dp = [0.0; MAX_DIST_PARAMS];
+                        continue;
+                    }
+                    *l = r_ln - r * x;
+                    dp[0] = inv_r - x;
+                    dp[1] = 0.0;
+                }
+            }
+            ScalarDist::Uniform(d) => {
+                let (lo, hi) = (d.lo, d.hi);
+                let w = hi - lo;
+                let lp_c = -w.ln();
+                let (dp0, dp1) = (1.0 / w, -1.0 / w);
+                for ((&x, l), dp) in xs.iter().zip(lp.iter_mut()).zip(d_p.iter_mut()) {
+                    if x < lo || x > hi {
+                        *l = f64::NEG_INFINITY;
+                        *dp = [0.0; MAX_DIST_PARAMS];
+                        continue;
+                    }
+                    *l = lp_c;
+                    dp[0] = dp0;
+                    dp[1] = dp1;
+                }
+            }
+            ScalarDist::Cauchy(d) => {
+                let (loc, s) = (d.loc, d.scale);
+                let head = -math::LN_PI - s.ln();
+                let neg_inv_s = -1.0 / s;
+                for ((&x, l), dp) in xs.iter().zip(lp.iter_mut()).zip(d_p.iter_mut()) {
+                    let z = (x - loc) / s;
+                    let den = s * (1.0 + z * z);
+                    *l = head - (z * z).ln_1p();
+                    dp[0] = 2.0 * z / den;
+                    dp[1] = neg_inv_s + 2.0 * z * z / den;
+                }
+            }
+            ScalarDist::HalfCauchy(d) => {
+                let s = d.scale;
+                let head = std::f64::consts::LN_2 - math::LN_PI - s.ln();
+                let neg_inv_s = -1.0 / s;
+                for ((&x, l), dp) in xs.iter().zip(lp.iter_mut()).zip(d_p.iter_mut()) {
+                    if x < 0.0 {
+                        *l = f64::NEG_INFINITY;
+                        *dp = [0.0; MAX_DIST_PARAMS];
+                        continue;
+                    }
+                    let z = x / s;
+                    let den = s * (1.0 + z * z);
+                    *l = head - (z * z).ln_1p();
+                    dp[0] = neg_inv_s + 2.0 * z * z / den;
+                    dp[1] = 0.0;
+                }
+            }
+        }
     }
 
     /// Draw one value (prior sampling / particle regeneration).
@@ -644,6 +811,16 @@ impl<T: Scalar> VecDist<T> {
     /// order; data-side structure (lengths, Dirichlet α) carries over. See
     /// [`ScalarDist::with_f64_params`].
     pub fn with_f64_params(&self, p: &[f64; MAX_DIST_PARAMS]) -> VecDist<f64> {
+        match self {
+            VecDist::IsoNormal(d) => VecDist::IsoNormal(IsoNormal::new(p[0], p[1], d.n)),
+            VecDist::Dirichlet(d) => VecDist::Dirichlet(d.clone()),
+        }
+    }
+
+    /// Rebuild over any scalar type from parameters in
+    /// [`param_vars`](Self::param_vars) order; data-side structure (lengths,
+    /// Dirichlet α) carries over. See [`ScalarDist::with_params`].
+    pub fn with_params<U: Scalar>(&self, p: &[U; MAX_DIST_PARAMS]) -> VecDist<U> {
         match self {
             VecDist::IsoNormal(d) => VecDist::IsoNormal(IsoNormal::new(p[0], p[1], d.n)),
             VecDist::Dirichlet(d) => VecDist::Dirichlet(d.clone()),
@@ -847,6 +1024,18 @@ impl<T: Scalar> DiscreteDist<T> {
         }
     }
 
+    /// Rebuild over any scalar type (see [`param_var`](Self::param_var));
+    /// the compiled executor uses this to re-seat a recorded site's
+    /// template on a live arena variable.
+    pub fn with_param<U: Scalar>(&self, p: U) -> DiscreteDist<U> {
+        match self {
+            DiscreteDist::Bernoulli(_) => DiscreteDist::Bernoulli(Bernoulli::new(p)),
+            DiscreteDist::BernoulliLogit(_) => DiscreteDist::BernoulliLogit(BernoulliLogit::new(p)),
+            DiscreteDist::Poisson(_) => DiscreteDist::Poisson(Poisson::new(p)),
+            DiscreteDist::Categorical(d) => DiscreteDist::Categorical(d.clone()),
+        }
+    }
+
     /// Fused analytic adjoint: `(logpmf, ∂logpmf/∂param)`. Out-of-support
     /// `k` gives `(−∞, 0)`, matching the generic `logpmf` guards.
     pub fn logpmf_adj(&self, k: i64) -> (f64, f64) {
@@ -885,6 +1074,60 @@ impl<T: Scalar> DiscreteDist<T> {
 impl DiscreteDist<f64> {
     pub fn boxed(&self) -> AnyDist {
         AnyDist::Discrete(self.clone())
+    }
+
+    /// Row-batched fused adjoint for a discrete observation plate: all rows
+    /// share this distribution's parameter, so pure-parameter subexpressions
+    /// are hoisted out of the loop once. Per-row arithmetic is textually
+    /// identical to [`logpmf_adj`](Self::logpmf_adj), so each row is
+    /// **bitwise** equal to the sequential kernel.
+    pub fn logpmf_adj_rows(&self, ks: &[i64], lp: &mut [f64], d_p: &mut [f64]) {
+        debug_assert_eq!(ks.len(), lp.len());
+        debug_assert_eq!(ks.len(), d_p.len());
+        match self {
+            DiscreteDist::Bernoulli(d) => {
+                let p = d.p;
+                let (lp1, dp1) = (p.ln(), 1.0 / p);
+                let (lp0, dp0) = ((1.0 - p).ln(), -1.0 / (1.0 - p));
+                for ((&k, l), dp) in ks.iter().zip(lp.iter_mut()).zip(d_p.iter_mut()) {
+                    (*l, *dp) = match k {
+                        1 => (lp1, dp1),
+                        0 => (lp0, dp0),
+                        _ => (f64::NEG_INFINITY, 0.0),
+                    };
+                }
+            }
+            DiscreteDist::BernoulliLogit(d) => {
+                let l0 = d.logit;
+                let (lp1, dp1) = (math::log_sigmoid(l0), math::sigmoid(-l0));
+                let (lp0, dp0) = (math::log_sigmoid(-l0), -math::sigmoid(l0));
+                for ((&k, l), dp) in ks.iter().zip(lp.iter_mut()).zip(d_p.iter_mut()) {
+                    (*l, *dp) = match k {
+                        1 => (lp1, dp1),
+                        0 => (lp0, dp0),
+                        _ => (f64::NEG_INFINITY, 0.0),
+                    };
+                }
+            }
+            DiscreteDist::Poisson(d) => {
+                let lam = d.rate;
+                let lam_ln = lam.ln();
+                for ((&k, l), dp) in ks.iter().zip(lp.iter_mut()).zip(d_p.iter_mut()) {
+                    if k < 0 {
+                        (*l, *dp) = (f64::NEG_INFINITY, 0.0);
+                        continue;
+                    }
+                    *l = lam_ln * (k as f64) - lam - math::ln_factorial(k as u64);
+                    *dp = k as f64 / lam - 1.0;
+                }
+            }
+            DiscreteDist::Categorical(d) => {
+                for ((&k, l), dp) in ks.iter().zip(lp.iter_mut()).zip(d_p.iter_mut()) {
+                    *l = d.logpmf::<f64>(k);
+                    *dp = 0.0;
+                }
+            }
+        }
     }
 
     pub fn sample<R: RngCore + ?Sized>(&self, rng: &mut R) -> i64 {
@@ -1273,6 +1516,74 @@ mod tests {
         let (lp, dp) = DiscreteDist::Poisson(Poisson::new(2.0)).logpmf_adj(-1);
         assert_eq!(lp, f64::NEG_INFINITY);
         assert_eq!(dp, 0.0);
+    }
+
+    /// The plate kernels must be *bitwise* equal to the sequential fused
+    /// adjoint per row — the compiled executor's bit-identity guarantee
+    /// rests on this.
+    #[test]
+    fn row_kernels_bitwise_match_sequential() {
+        let dists: Vec<ScalarDist<f64>> = vec![
+            ScalarDist::Normal(Normal::new(0.4, 1.7)),
+            ScalarDist::InverseGamma(InverseGamma::new(2.0, 3.0)),
+            ScalarDist::Gamma(Gamma::new(2.5, 1.4)),
+            ScalarDist::Beta(Beta::new(2.0, 3.5)),
+            ScalarDist::Exponential(Exponential::new(1.3)),
+            ScalarDist::Uniform(Uniform::new(-2.0, 5.0)),
+            ScalarDist::Cauchy(Cauchy::new(0.3, 2.1)),
+            ScalarDist::HalfCauchy(HalfCauchy::new(2.0)),
+        ];
+        // mix of in-support and out-of-support points (clamped to each
+        // support by the kernels' own guards, which is the point)
+        let xs = [0.9, 0.37, 2.2, -0.5, 0.04, 1.1, 7.3, 0.6];
+        let n = xs.len();
+        for dist in &dists {
+            let mut lp = vec![0.0; n];
+            let mut dp = vec![[0.0; MAX_DIST_PARAMS]; n];
+            dist.logpdf_adj_rows(&xs, &mut lp, &mut dp);
+            for i in 0..n {
+                let want = dist.logpdf_adj(xs[i]);
+                assert!(
+                    lp[i].to_bits() == want.lp.to_bits(),
+                    "{dist:?} row {i}: lp {} vs {}",
+                    lp[i],
+                    want.lp
+                );
+                for j in 0..MAX_DIST_PARAMS {
+                    assert!(
+                        dp[i][j].to_bits() == want.d_p[j].to_bits(),
+                        "{dist:?} row {i}: d_p[{j}] {} vs {}",
+                        dp[i][j],
+                        want.d_p[j]
+                    );
+                }
+            }
+        }
+        // degenerate Normal: whole plate rejects
+        let bad = ScalarDist::Normal(Normal::new(0.0, 0.0));
+        let mut lp = vec![0.0; n];
+        let mut dp = vec![[1.0; MAX_DIST_PARAMS]; n];
+        bad.logpdf_adj_rows(&xs, &mut lp, &mut dp);
+        assert!(lp.iter().all(|&l| l == f64::NEG_INFINITY));
+        assert!(dp.iter().all(|d| d == &[0.0; MAX_DIST_PARAMS]));
+
+        let ddists: Vec<DiscreteDist<f64>> = vec![
+            DiscreteDist::Bernoulli(Bernoulli::new(0.3)),
+            DiscreteDist::BernoulliLogit(BernoulliLogit::new(0.7)),
+            DiscreteDist::Poisson(Poisson::new(2.5)),
+            DiscreteDist::Categorical(Categorical::from_probs(&[0.2, 0.8])),
+        ];
+        let ks = [0i64, 1, 3, -1, 2, 0, 1, 5];
+        for dist in &ddists {
+            let mut lp = vec![0.0; ks.len()];
+            let mut dp = vec![0.0; ks.len()];
+            dist.logpmf_adj_rows(&ks, &mut lp, &mut dp);
+            for i in 0..ks.len() {
+                let (wl, wd) = dist.logpmf_adj(ks[i]);
+                assert!(lp[i].to_bits() == wl.to_bits(), "{dist:?} row {i}");
+                assert!(dp[i].to_bits() == wd.to_bits(), "{dist:?} row {i}");
+            }
+        }
     }
 
     #[test]

@@ -15,12 +15,16 @@
 //! - [`FnDensity`] — closures; used for the hand-coded Stan-baseline
 //!   models in [`crate::stanlike`] and for tests.
 
+use std::sync::OnceLock;
+
 use crate::context::Context;
+use crate::model::compiled::{self, StaticProgram};
 use crate::model::{
     typed_grad_forward, typed_grad_fused, typed_grad_fused_into, typed_grad_reverse, typed_logp,
     untyped_grad_forward, untyped_grad_fused, untyped_grad_fused_into, untyped_grad_reverse,
     untyped_logp, Model,
 };
+use crate::obs::metrics::{self, Counter};
 use crate::varinfo::{TypedVarInfo, UntypedVarInfo};
 
 /// A differentiable target density over unconstrained ℝⁿ.
@@ -107,11 +111,21 @@ impl std::str::FromStr for Backend {
 }
 
 /// Model + typed trace + Rust AD.
+///
+/// With [`Backend::ReverseFused`], the first full-window `logp_grad_into`
+/// attempts a one-time static-structure compilation of the model
+/// ([`crate::model::compiled`]). On promotion, subsequent full-window
+/// evaluations replay the compiled program — skipping the model body
+/// entirely — while windowed/profiled contexts and discrete-trace changes
+/// demote transparently (and bit-identically) to the dynamic fused walk.
 pub struct NativeDensity<'a> {
     pub model: &'a dyn Model,
     pub tvi: &'a TypedVarInfo,
     pub ctx: Context,
     pub backend: Backend,
+    /// Lazily-compiled static program. `None` inside the cell records a
+    /// declined compilation (dynamic model, or [`Self::fused_dynamic`]).
+    compiled: OnceLock<Option<StaticProgram>>,
 }
 
 impl<'a> NativeDensity<'a> {
@@ -121,12 +135,54 @@ impl<'a> NativeDensity<'a> {
             tvi,
             ctx: Context::Default,
             backend,
+            compiled: OnceLock::new(),
         }
     }
 
-    /// The default native configuration: arena-fused reverse mode.
+    /// The default native configuration: arena-fused reverse mode, with
+    /// static-structure compilation attempted on first use.
     pub fn fused(model: &'a dyn Model, tvi: &'a TypedVarInfo) -> Self {
         Self::new(model, tvi, Backend::ReverseFused)
+    }
+
+    /// Arena-fused reverse mode with static compilation disabled: every
+    /// evaluation walks the model body. The baseline the compiled path is
+    /// benchmarked (and bitwise-verified) against.
+    pub fn fused_dynamic(model: &'a dyn Model, tvi: &'a TypedVarInfo) -> Self {
+        let d = Self::fused(model, tvi);
+        let _ = d.compiled.set(None);
+        d
+    }
+
+    /// The promoted program, if compilation has run and succeeded.
+    pub fn compiled_program(&self) -> Option<&StaticProgram> {
+        self.compiled.get().and_then(|p| p.as_ref())
+    }
+
+    /// Resolve the program to serve `ctx`, compiling on first demand.
+    /// Returns `None` (→ dynamic walk) for non-servable contexts and
+    /// discrete-trace mismatches, counting a demotion whenever a promoted
+    /// program had to step aside.
+    fn compiled_for(&self, ctx: Context) -> Option<&StaticProgram> {
+        if self.backend != Backend::ReverseFused {
+            return None;
+        }
+        if !compiled::servable(ctx) {
+            if self.compiled_program().is_some() {
+                metrics::inc(Counter::StaticDemotions);
+            }
+            return None;
+        }
+        let prog = self
+            .compiled
+            .get_or_init(|| compiled::try_compile(self.model, self.tvi))
+            .as_ref()?;
+        if prog.matches_discrete(self.tvi) {
+            Some(prog)
+        } else {
+            metrics::inc(Counter::StaticDemotions);
+            None
+        }
     }
 }
 
@@ -151,6 +207,9 @@ impl<'a> LogDensity for NativeDensity<'a> {
         match self.backend {
             // fused: straight into the caller's buffer, zero allocation
             Backend::ReverseFused => {
+                if let Some(prog) = self.compiled_for(self.ctx) {
+                    return prog.logp_grad_into(self.tvi, theta, self.ctx, grad);
+                }
                 typed_grad_fused_into(self.model, self.tvi, theta, self.ctx, grad)
             }
             _ => {
@@ -164,15 +223,32 @@ impl<'a> LogDensity for NativeDensity<'a> {
     fn logp_grad_batch_into(&self, thetas: &[f64], lps: &mut [f64], grads: &mut [f64]) {
         match self.backend {
             // fused: one K-lane tape walk, bit-identical per lane
-            Backend::ReverseFused => crate::model::batched::typed_grad_batch_into(
-                self.model,
-                self.tvi,
-                thetas,
-                lps.len(),
-                self.ctx,
-                lps,
-                grads,
-            ),
+            Backend::ReverseFused => {
+                if let Some(prog) = self.compiled_for(self.ctx) {
+                    let dim = self.tvi.dim();
+                    let lanes = lps.len();
+                    for l in 0..lanes {
+                        lps[l] = prog.logp_grad_into(
+                            self.tvi,
+                            &thetas[l * dim..(l + 1) * dim],
+                            self.ctx,
+                            &mut grads[l * dim..(l + 1) * dim],
+                        );
+                    }
+                    metrics::inc(Counter::BatchedEvals);
+                    metrics::add(Counter::BatchedLanes, lanes as u64);
+                    return;
+                }
+                crate::model::batched::typed_grad_batch_into(
+                    self.model,
+                    self.tvi,
+                    thetas,
+                    lps.len(),
+                    self.ctx,
+                    lps,
+                    grads,
+                )
+            }
             _ => {
                 let dim = self.tvi.dim();
                 for l in 0..lps.len() {

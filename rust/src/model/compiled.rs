@@ -1,0 +1,1490 @@
+//! Static-structure compiler: record the tilde walk once, replay it as a
+//! flat plate-vectorized density program.
+//!
+//! The dynamic fused path ([`super::typed_grad_fused_into`]) re-executes
+//! the model *body* on every gradient: every tilde macro re-hashes its
+//! `VarName`, re-matches its distribution constructor, and every scalar of
+//! glue arithmetic re-dispatches through [`AVar`] operator calls. For a
+//! model whose structure never changes between evaluations, all of that
+//! discovery work is pure overhead. This module removes it:
+//!
+//! 1. **Record** — run the body once with `T =`[`crate::ad::record::RVar`]
+//!    under the full-data [`Context::Default`]: every tilde statement
+//!    becomes an [`Item`] (slot-indexed, varname-free) and every scalar of
+//!    glue arithmetic becomes a register opcode ([`crate::ad::record::Op`]).
+//! 2. **Verify** — record a second time at a perturbed point (θ ± 0.125
+//!    per coordinate). Only if both recordings are *structurally
+//!    identical* (same opcodes, same items, bitwise-equal embedded
+//!    constants) is the model's walk considered static. Data-dependent
+//!    branching on θ produces different recordings and the model stays on
+//!    the dynamic path — transparently, with no behavioural change.
+//! 3. **Compile** — single-use `Mul`/`Add` glue chains (dot products,
+//!    linear predictors) are fused into one variable-arity tape node per
+//!    chain ([`EOp::FusedAdd`]), and runs of consecutive observe sites
+//!    sharing one distribution family and parameter slots are grouped
+//!    into *plates* served by the row-batched `logpdf_adj_rows` /
+//!    `logpmf_adj_rows` kernels in [`crate::dist`].
+//! 4. **Cross-validate** — before the program is ever served, its
+//!    log-density and gradient at the recording point are compared
+//!    **bitwise** against the dynamic fused executor. Any divergence
+//!    aborts the promotion.
+//!
+//! Replay then never re-enters the model body: assumes are a flat
+//! slot-indexed kernel list with no varname hashing, observes are plate
+//! kernels, and glue is an opcode interpreter over a register file. Every
+//! per-statement decision (seed weights, observation windows, rejection)
+//! reuses the same accumulator arithmetic as the dynamic executors, so
+//! log-density and gradient stay bit-identical.
+//!
+//! ## Context policy (what is served, what demotes)
+//!
+//! A promoted program serves [`Context::Default`], [`Context::Likelihood`],
+//! [`Context::Prior`] and [`Context::MiniBatch`] — the contexts whose
+//! observation window covers every site, where the recorded walk is the
+//! walk ([`servable`]). The rest route back to the dynamic executors:
+//!
+//! - `Subsample` / `ObsWindow`: window-aware model bodies `skip_obs` over
+//!   out-of-window blocks, making the dynamic walk O(batch); the recorded
+//!   program visits every site, so replaying it would be O(N). Demoting is
+//!   both the correctness-preserving and the *faster* choice.
+//! - `Profile`: per-site attribution needs the model body's varnames.
+//! - Gibbs site-masked gradients ([`super::typed_grad_fused_masked_into`])
+//!   never route through the compiled path — the mask is per-evaluation
+//!   state the recording does not capture.
+//! - A changed discrete sub-trace (Gibbs moves on an `assume_int` site)
+//!   is detected by [`StaticProgram::matches_discrete`] and demotes until
+//!   the density is re-compiled against the new snapshot.
+
+use std::cell::RefCell;
+
+use crate::ad::arena::{self, AVar};
+use crate::ad::record::{self, Op, ROp, RVar, Src};
+use crate::ad::Scalar;
+use crate::context::{Accumulator, Context};
+use crate::dist::{bijector, DiscreteDist, ScalarDist, VecDist, MAX_DIST_PARAMS};
+use crate::obs::metrics::{self, Counter};
+use crate::varinfo::TypedVarInfo;
+use crate::varname::VarName;
+
+use super::executors::{
+    cursor_next_slot, fused_assume_scalar, fused_assume_vec, park_fused_scratch,
+    seed_assume_scalar, seed_assume_vec, seed_params_scalar, take_fused_scratch, FusedScratch,
+};
+use super::{count_obs_sites, typed_grad_fused_into, Model, TildeApi};
+
+/// Whether a promoted program may serve this context. Exactly the contexts
+/// with a full observation window — see the module docs for why windowed
+/// and profiled contexts demote.
+pub fn servable(ctx: Context) -> bool {
+    matches!(
+        ctx,
+        Context::Default | Context::Likelihood | Context::Prior | Context::MiniBatch { .. }
+    )
+}
+
+// ------------------------------------------------------------- program IR
+
+/// One recorded tilde site, slot-indexed and varname-free. Distribution
+/// *families* are stored as `f64` templates (parameter values inside are
+/// recording-time leftovers, dead at replay); live parameters enter
+/// through the [`Src`] slots, resolved against the register file.
+enum Item {
+    AssumeScalar {
+        slot: usize,
+        out: u32,
+        dist: ScalarDist<f64>,
+        ps: [Src; MAX_DIST_PARAMS],
+        np: usize,
+    },
+    AssumeVec {
+        slot: usize,
+        out: Vec<u32>,
+        dist: VecDist<f64>,
+        ps: [Src; MAX_DIST_PARAMS],
+        np: usize,
+    },
+    AssumeInt {
+        slot: usize,
+        dist: DiscreteDist<f64>,
+        p: Src,
+    },
+    Observe {
+        dist: ScalarDist<f64>,
+        ps: [Src; MAX_DIST_PARAMS],
+        np: usize,
+        obs: f64,
+    },
+    ObserveInt {
+        dist: DiscreteDist<f64>,
+        p: Src,
+        obs: i64,
+    },
+    ObserveVec {
+        dist: VecDist<f64>,
+        ps: [Src; MAX_DIST_PARAMS],
+        np: usize,
+        obs: Vec<f64>,
+    },
+    ObsLogp {
+        lp: Src,
+    },
+    PriorLogp {
+        lp: Src,
+    },
+    SkipObs {
+        n: usize,
+    },
+    /// ≥ 2 consecutive scalar observes sharing family + parameter slots,
+    /// served by one row-batched `logpdf_adj_rows` kernel call.
+    PlateScalar {
+        dist: ScalarDist<f64>,
+        ps: [Src; MAX_DIST_PARAMS],
+        np: usize,
+        obs: Vec<f64>,
+    },
+    /// ≥ 2 consecutive discrete observes sharing family + parameter slot.
+    PlateInt {
+        dist: DiscreteDist<f64>,
+        p: Src,
+        obs: Vec<i64>,
+    },
+}
+
+/// A term of a fused add chain.
+enum FTerm {
+    /// A plain added operand.
+    Src(Src),
+    /// `reg * const` — a single-use `Mul` folded into its consuming `Add`
+    /// (the dot-product pattern `acc + w[j] * x[j]`).
+    MulRC(u32, f64),
+}
+
+/// An executable glue opcode: either one recorded scalar op replayed
+/// through the matching [`AVar`] operation, or a fused add chain that
+/// collapses a whole `Mul`/`Add` run into **one** variable-arity tape
+/// node (a 2d-node dot product becomes a single d-parent node).
+enum EOp {
+    Plain(ROp),
+    FusedAdd {
+        out: u32,
+        head: Src,
+        terms: Vec<FTerm>,
+    },
+}
+
+/// An item plus the index into the executable opcode stream up to which
+/// glue must run before it.
+struct RecItem {
+    glue_end: usize,
+    item: Item,
+}
+
+/// Raw output of one recording pass, before fusion and plate grouping.
+struct Recording {
+    ops: Vec<ROp>,
+    n_regs: u32,
+    items: Vec<RecItem>,
+    n_obs: usize,
+}
+
+/// A compiled, immutable density program. Built by [`try_compile`]; serves
+/// `logp_grad` evaluations without re-entering the model body.
+pub struct StaticProgram {
+    eops: Vec<EOp>,
+    items: Vec<RecItem>,
+    n_regs: usize,
+    /// Discrete sub-trace snapshot at compile time: a Gibbs move on a
+    /// discrete site invalidates the recorded `assume_int`/branching
+    /// values, so serving requires [`Self::matches_discrete`].
+    discrete: Vec<i64>,
+    n_obs: usize,
+    n_plates: usize,
+    plate_rows: usize,
+    dim: usize,
+}
+
+impl StaticProgram {
+    /// Number of observe plates the compiler formed.
+    pub fn n_plates(&self) -> usize {
+        self.n_plates
+    }
+
+    /// Total observation rows served through plate kernels.
+    pub fn plate_rows(&self) -> usize {
+        self.plate_rows
+    }
+
+    /// Observation sites counted at recording (visited + skipped).
+    pub fn n_obs(&self) -> usize {
+        self.n_obs
+    }
+
+    /// Unconstrained dimension the program was compiled for.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Whether the trace's discrete sub-trace still matches the compile
+    /// time snapshot (a mismatch demotes to the dynamic walk).
+    pub fn matches_discrete(&self, tvi: &TypedVarInfo) -> bool {
+        self.discrete == tvi.discrete
+    }
+
+    /// Compiled log-density + gradient — drop-in for
+    /// [`super::typed_grad_fused_into`], bit-identical by construction
+    /// (and cross-validated at promotion). The caller is responsible for
+    /// only passing [`servable`] contexts and a matching discrete trace.
+    pub fn logp_grad_into(
+        &self,
+        tvi: &TypedVarInfo,
+        theta: &[f64],
+        ctx: Context,
+        grad: &mut [f64],
+    ) -> f64 {
+        debug_assert!(servable(ctx), "compiled program served a non-servable context");
+        metrics::inc(Counter::GradEvals);
+        arena::begin(theta.len());
+        let (lp, stmts) = self.replay(tvi, theta, ctx);
+        if !lp.is_finite() {
+            metrics::inc(Counter::RejectedEvals);
+            grad.fill(0.0);
+            return lp;
+        }
+        arena::backward_into(grad, stmts);
+        lp
+    }
+
+    /// Run the program: glue opcodes through the interpreter, items
+    /// through the same fused kernels and accumulator arithmetic as the
+    /// dynamic executors. Returns `(logp, tilde statements)`.
+    fn replay(&self, tvi: &TypedVarInfo, theta: &[f64], ctx: Context) -> (f64, usize) {
+        debug_assert_eq!(theta.len(), self.dim);
+        let mut r = Replay {
+            tvi,
+            theta,
+            acc: Accumulator::new(ctx),
+            prior_w: ctx.prior_weight(),
+            lik_w: ctx.lik_weight(),
+            stmts: 0,
+            rs: take_replay_scratch(),
+            fs: take_fused_scratch(),
+        };
+        r.rs.regs.clear();
+        r.rs.regs.resize(self.n_regs, (arena::NONE, 0.0));
+        let mut cursor = 0usize;
+        for ri in &self.items {
+            for eop in &self.eops[cursor..ri.glue_end] {
+                r.exec_eop(eop);
+            }
+            cursor = ri.glue_end;
+            r.exec_item(&ri.item);
+            if r.acc.rejected() {
+                // −∞ is sticky and the caller zeroes the gradient on any
+                // non-finite value, so the remaining items cannot change
+                // the outcome — stop paying for them.
+                break;
+            }
+        }
+        let out = (r.acc.total(), r.stmts);
+        park_fused_scratch(r.fs);
+        park_replay_scratch(r.rs);
+        out
+    }
+}
+
+// ------------------------------------------------------------- recording
+
+/// [`TildeApi`] impl that captures the walk. Runs strictly under
+/// [`Context::Default`] (full data): window-aware bodies then visit every
+/// observation site, so the recorded obs-site count matches
+/// [`count_obs_sites`] and `skip_obs` blocks degenerate to zero-length
+/// jumps — the recorder never double- or under-counts sites.
+struct StructureRecorder<'a> {
+    tvi: &'a TypedVarInfo,
+    theta: &'a [f64],
+    cursor: usize,
+    acc: Accumulator<f64>,
+    items: Vec<RecItem>,
+}
+
+impl<'a> StructureRecorder<'a> {
+    fn push_item(&mut self, item: Item) {
+        self.items.push(RecItem {
+            glue_end: record::len(),
+            item,
+        });
+    }
+}
+
+impl<'a> TildeApi<RVar> for StructureRecorder<'a> {
+    fn assume(&mut self, vn: VarName, dist: &ScalarDist<RVar>) -> RVar {
+        let slot = cursor_next_slot(self.tvi, &mut self.cursor, &vn);
+        let si = self.cursor - 1;
+        let (ps, np) = dist.param_vars();
+        let tpl = dist.with_f64_params(&[ps[0].value(), ps[1].value()]);
+        // primal mirror of the fused kernel — rejection and branch
+        // decisions resolve exactly as they would dynamically
+        let link = bijector::invlink_scalar_adj(&slot.domain, self.theta[slot.unc_offset]);
+        let adj = tpl.logpdf_adj(link.x);
+        self.acc.add_prior(adj.lp + link.ladj);
+        let out = record::alloc_reg();
+        self.push_item(Item::AssumeScalar {
+            slot: si,
+            out,
+            dist: tpl,
+            ps: [ps[0].src(), ps[1].src()],
+            np,
+        });
+        RVar::from_reg(out, link.x)
+    }
+
+    fn assume_vec(&mut self, vn: VarName, dist: &VecDist<RVar>) -> Vec<RVar> {
+        let slot = cursor_next_slot(self.tvi, &mut self.cursor, &vn);
+        let si = self.cursor - 1;
+        let (ps, np) = dist.param_vars();
+        let tpl = dist.with_f64_params(&[ps[0].value(), ps[1].value()]);
+        let n = slot.domain.constrained_dim();
+        let off = slot.unc_offset;
+        let mut xs = vec![0.0; n];
+        let mut dx = vec![0.0; n];
+        let lp = match &slot.domain {
+            crate::dist::Domain::RealVec(_) => {
+                xs.copy_from_slice(&self.theta[off..off + n]);
+                tpl.logpdf_adj(&xs, &mut dx).lp
+            }
+            crate::dist::Domain::PositiveVec(_) => {
+                let mut ladj = 0.0;
+                for (i, x) in xs.iter_mut().enumerate() {
+                    let y = self.theta[off + i];
+                    ladj += y;
+                    *x = y.exp();
+                }
+                tpl.logpdf_adj(&xs, &mut dx).lp + ladj
+            }
+            crate::dist::Domain::Simplex(_) => {
+                let m = slot.domain.unconstrained_dim();
+                let ladj =
+                    bijector::invlink_slice(&slot.domain, &self.theta[off..off + m], &mut xs);
+                tpl.logpdf_adj(&xs, &mut dx).lp + ladj
+            }
+            other => panic!("vector assume over scalar/discrete domain {other:?}"),
+        };
+        self.acc.add_prior(lp);
+        let out: Vec<u32> = (0..n).map(|_| record::alloc_reg()).collect();
+        let vals: Vec<RVar> = out
+            .iter()
+            .zip(&xs)
+            .map(|(&r, &x)| RVar::from_reg(r, x))
+            .collect();
+        self.push_item(Item::AssumeVec {
+            slot: si,
+            out,
+            dist: tpl,
+            ps: [ps[0].src(), ps[1].src()],
+            np,
+        });
+        vals
+    }
+
+    fn assume_int(&mut self, vn: VarName, dist: &DiscreteDist<RVar>) -> i64 {
+        let slot = cursor_next_slot(self.tvi, &mut self.cursor, &vn);
+        let si = self.cursor - 1;
+        let k = self.tvi.discrete[slot.disc_offset];
+        let p = dist.param_var();
+        let tpl = dist.with_f64_param(p.map_or(0.0, |p| p.value()));
+        let (lp, _) = tpl.logpmf_adj(k);
+        self.acc.add_prior(lp);
+        self.push_item(Item::AssumeInt {
+            slot: si,
+            dist: tpl,
+            p: p.map_or(Src::Const(0.0), |p| p.src()),
+        });
+        k
+    }
+
+    fn observe(&mut self, dist: &ScalarDist<RVar>, obs: f64) {
+        let cw = self.acc.note_obs();
+        let (ps, np) = dist.param_vars();
+        let tpl = dist.with_f64_params(&[ps[0].value(), ps[1].value()]);
+        if cw != 0.0 {
+            self.acc.add_lik_weighted(tpl.logpdf_adj(obs).lp, cw);
+        }
+        self.push_item(Item::Observe {
+            dist: tpl,
+            ps: [ps[0].src(), ps[1].src()],
+            np,
+            obs,
+        });
+    }
+
+    fn observe_int(&mut self, dist: &DiscreteDist<RVar>, obs: i64) {
+        let cw = self.acc.note_obs();
+        let p = dist.param_var();
+        let tpl = dist.with_f64_param(p.map_or(0.0, |p| p.value()));
+        if cw != 0.0 {
+            self.acc.add_lik_weighted(tpl.logpmf_adj(obs).0, cw);
+        }
+        self.push_item(Item::ObserveInt {
+            dist: tpl,
+            p: p.map_or(Src::Const(0.0), |p| p.src()),
+            obs,
+        });
+    }
+
+    fn observe_vec(&mut self, dist: &VecDist<RVar>, obs: &[f64]) {
+        let cw = self.acc.note_obs();
+        let (ps, np) = dist.param_vars();
+        let tpl = dist.with_f64_params(&[ps[0].value(), ps[1].value()]);
+        if cw != 0.0 {
+            let mut dx = vec![0.0; obs.len()];
+            self.acc.add_lik_weighted(tpl.logpdf_adj(obs, &mut dx).lp, cw);
+        }
+        self.push_item(Item::ObserveVec {
+            dist: tpl,
+            ps: [ps[0].src(), ps[1].src()],
+            np,
+            obs: obs.to_vec(),
+        });
+    }
+
+    fn add_obs_logp(&mut self, lp: RVar) {
+        let cw = self.acc.note_obs();
+        self.acc.add_lik_weighted(lp.value(), cw);
+        self.push_item(Item::ObsLogp { lp: lp.src() });
+    }
+
+    fn add_prior_logp(&mut self, lp: RVar) {
+        self.acc.add_prior(lp.value());
+        self.push_item(Item::PriorLogp { lp: lp.src() });
+    }
+
+    fn reject(&mut self) {
+        self.acc.reject();
+    }
+
+    fn rejected(&self) -> bool {
+        self.acc.rejected()
+    }
+
+    fn context(&self) -> Context {
+        Context::Default
+    }
+
+    fn skip_obs(&mut self, n: usize) {
+        self.acc.skip_obs(n);
+        if n > 0 {
+            self.push_item(Item::SkipObs { n });
+        }
+    }
+}
+
+/// One recording pass at `theta`. `None` when the run rejected or went
+/// non-finite — a truncated or degenerate recording must never promote.
+fn record_run(model: &dyn Model, tvi: &TypedVarInfo, theta: &[f64]) -> Option<Recording> {
+    debug_assert_eq!(theta.len(), tvi.dim());
+    record::begin();
+    let mut rec = StructureRecorder {
+        tvi,
+        theta,
+        cursor: 0,
+        acc: Accumulator::new(Context::Default),
+        items: Vec::new(),
+    };
+    model.eval_record(&mut rec);
+    let (ops, n_regs) = record::end();
+    if rec.acc.rejected() || !rec.acc.total().is_finite() {
+        return None;
+    }
+    Some(Recording {
+        ops,
+        n_regs,
+        items: rec.items,
+        n_obs: rec.acc.obs_seen(),
+    })
+}
+
+// ------------------------------------------------- structural comparison
+
+fn f64_bits_eq(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits()
+}
+
+fn slice_bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| f64_bits_eq(*x, *y))
+}
+
+/// Family equality for scalar templates: parameter *values* are live data
+/// compared through the [`Src`] slots, so only the variant matters here.
+fn sdist_eq(a: &ScalarDist<f64>, b: &ScalarDist<f64>) -> bool {
+    std::mem::discriminant(a) == std::mem::discriminant(b)
+}
+
+fn vdist_eq(a: &VecDist<f64>, b: &VecDist<f64>) -> bool {
+    match (a, b) {
+        (VecDist::IsoNormal(x), VecDist::IsoNormal(y)) => x.n == y.n,
+        // Dirichlet α is data (never a parameter slot) — compare bitwise
+        (VecDist::Dirichlet(x), VecDist::Dirichlet(y)) => slice_bits_eq(&x.alpha, &y.alpha),
+        _ => false,
+    }
+}
+
+fn ddist_eq(a: &DiscreteDist<f64>, b: &DiscreteDist<f64>) -> bool {
+    match (a, b) {
+        // Categorical probs are data — compare bitwise
+        (DiscreteDist::Categorical(x), DiscreteDist::Categorical(y)) => {
+            slice_bits_eq(&x.probs, &y.probs)
+        }
+        _ => std::mem::discriminant(a) == std::mem::discriminant(b),
+    }
+}
+
+fn item_eq(a: &Item, b: &Item) -> bool {
+    match (a, b) {
+        (
+            Item::AssumeScalar {
+                slot: s1,
+                out: o1,
+                dist: d1,
+                ps: p1,
+                np: n1,
+            },
+            Item::AssumeScalar {
+                slot: s2,
+                out: o2,
+                dist: d2,
+                ps: p2,
+                np: n2,
+            },
+        ) => s1 == s2 && o1 == o2 && n1 == n2 && p1 == p2 && sdist_eq(d1, d2),
+        (
+            Item::AssumeVec {
+                slot: s1,
+                out: o1,
+                dist: d1,
+                ps: p1,
+                np: n1,
+            },
+            Item::AssumeVec {
+                slot: s2,
+                out: o2,
+                dist: d2,
+                ps: p2,
+                np: n2,
+            },
+        ) => s1 == s2 && o1 == o2 && n1 == n2 && p1 == p2 && vdist_eq(d1, d2),
+        (
+            Item::AssumeInt {
+                slot: s1,
+                dist: d1,
+                p: p1,
+            },
+            Item::AssumeInt {
+                slot: s2,
+                dist: d2,
+                p: p2,
+            },
+        ) => s1 == s2 && p1 == p2 && ddist_eq(d1, d2),
+        (
+            Item::Observe {
+                dist: d1,
+                ps: p1,
+                np: n1,
+                obs: o1,
+            },
+            Item::Observe {
+                dist: d2,
+                ps: p2,
+                np: n2,
+                obs: o2,
+            },
+        ) => n1 == n2 && p1 == p2 && f64_bits_eq(*o1, *o2) && sdist_eq(d1, d2),
+        (
+            Item::ObserveInt {
+                dist: d1,
+                p: p1,
+                obs: o1,
+            },
+            Item::ObserveInt {
+                dist: d2,
+                p: p2,
+                obs: o2,
+            },
+        ) => p1 == p2 && o1 == o2 && ddist_eq(d1, d2),
+        (
+            Item::ObserveVec {
+                dist: d1,
+                ps: p1,
+                np: n1,
+                obs: o1,
+            },
+            Item::ObserveVec {
+                dist: d2,
+                ps: p2,
+                np: n2,
+                obs: o2,
+            },
+        ) => n1 == n2 && p1 == p2 && slice_bits_eq(o1, o2) && vdist_eq(d1, d2),
+        (Item::ObsLogp { lp: a1 }, Item::ObsLogp { lp: a2 }) => a1 == a2,
+        (Item::PriorLogp { lp: a1 }, Item::PriorLogp { lp: a2 }) => a1 == a2,
+        (Item::SkipObs { n: n1 }, Item::SkipObs { n: n2 }) => n1 == n2,
+        (
+            Item::PlateScalar {
+                dist: d1,
+                ps: p1,
+                np: n1,
+                obs: o1,
+            },
+            Item::PlateScalar {
+                dist: d2,
+                ps: p2,
+                np: n2,
+                obs: o2,
+            },
+        ) => n1 == n2 && p1 == p2 && slice_bits_eq(o1, o2) && sdist_eq(d1, d2),
+        (
+            Item::PlateInt {
+                dist: d1,
+                p: p1,
+                obs: o1,
+            },
+            Item::PlateInt {
+                dist: d2,
+                p: p2,
+                obs: o2,
+            },
+        ) => p1 == p2 && o1 == o2 && ddist_eq(d1, d2),
+        _ => false,
+    }
+}
+
+/// Structural identity of two recordings — the promotion gate.
+fn recordings_match(a: &Recording, b: &Recording) -> bool {
+    a.n_regs == b.n_regs
+        && a.n_obs == b.n_obs
+        && a.ops == b.ops
+        && a.items.len() == b.items.len()
+        && a
+            .items
+            .iter()
+            .zip(&b.items)
+            .all(|(x, y)| x.glue_end == y.glue_end && item_eq(&x.item, &y.item))
+}
+
+// ----------------------------------------------------------- compilation
+
+fn visit_op_srcs(op: &Op, f: &mut dyn FnMut(&Src)) {
+    match op {
+        Op::Add(a, b) | Op::Sub(a, b) | Op::Mul(a, b) | Op::Div(a, b) | Op::LogAddExp(a, b) => {
+            f(a);
+            f(b);
+        }
+        Op::Neg(r)
+        | Op::Ln(r)
+        | Op::Exp(r)
+        | Op::Sqrt(r)
+        | Op::Ln1p(r)
+        | Op::Tanh(r)
+        | Op::Sin(r)
+        | Op::Cos(r)
+        | Op::Lgamma(r)
+        | Op::Abs(r)
+        | Op::Log1pExp(r)
+        | Op::LogSigmoid(r)
+        | Op::Sigmoid(r) => f(&Src::Reg(*r)),
+        Op::Powi(r, _) => f(&Src::Reg(*r)),
+        Op::Powf(r, _) => f(&Src::Reg(*r)),
+        Op::Lse(xs) => {
+            for s in xs {
+                f(s);
+            }
+        }
+    }
+}
+
+fn visit_item_srcs(item: &Item, f: &mut dyn FnMut(&Src)) {
+    match item {
+        Item::AssumeScalar { ps, np, .. }
+        | Item::AssumeVec { ps, np, .. }
+        | Item::Observe { ps, np, .. }
+        | Item::ObserveVec { ps, np, .. }
+        | Item::PlateScalar { ps, np, .. } => {
+            for s in &ps[..*np] {
+                f(s);
+            }
+        }
+        Item::AssumeInt { p, .. } | Item::ObserveInt { p, .. } | Item::PlateInt { p, .. } => f(p),
+        Item::ObsLogp { lp } | Item::PriorLogp { lp } => f(lp),
+        Item::SkipObs { .. } => {}
+    }
+}
+
+/// Per-register read counts across the whole recording (ops + items).
+/// Fusion folds an intermediate only when it is read exactly once — the
+/// guarantee that collapsing it cannot reorder gradient accumulation
+/// anywhere else.
+fn count_uses(rec: &Recording) -> Vec<u32> {
+    let mut uses = vec![0u32; rec.n_regs as usize];
+    let mut bump = |s: &Src| {
+        if let Src::Reg(r) = s {
+            uses[*r as usize] += 1;
+        }
+    };
+    for rop in &rec.ops {
+        visit_op_srcs(&rop.op, &mut bump);
+    }
+    for ri in &rec.items {
+        visit_item_srcs(&ri.item, &mut bump);
+    }
+    uses
+}
+
+/// Match one link of an add chain at `ops[i]`: an optional single-use
+/// `Mul(reg, const)` feeding the `Add` immediately after it, or a bare
+/// `Add`. Returns `(lhs, term, next index, out register)`. Only strictly
+/// consecutive opcodes are considered — an interleaved op between links
+/// breaks the chain, preserving the dynamic executor's gradient
+/// accumulation order for any shared leaves.
+fn parse_link(ops: &[ROp], i: usize, end: usize, uses: &[u32]) -> Option<(Src, FTerm, usize, u32)> {
+    if i >= end {
+        return None;
+    }
+    if i + 1 < end {
+        if let Op::Mul(a, b) = &ops[i].op {
+            let rc = match (a, b) {
+                (Src::Reg(r), Src::Const(c)) | (Src::Const(c), Src::Reg(r)) => Some((*r, *c)),
+                _ => None,
+            };
+            if let Some((r, c)) = rc {
+                if uses[ops[i].out as usize] == 1 {
+                    if let Op::Add(lhs, Src::Reg(m)) = &ops[i + 1].op {
+                        if *m == ops[i].out {
+                            return Some((*lhs, FTerm::MulRC(r, c), i + 2, ops[i + 1].out));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    if let Op::Add(lhs, t) = &ops[i].op {
+        return Some((*lhs, FTerm::Src(*t), i + 1, ops[i].out));
+    }
+    None
+}
+
+/// Grow an add chain from `ops[i]`: follow links while each intermediate
+/// sum is single-use and the next `Add` consumes it as its left operand.
+/// Chains of ≥ 2 adds fuse; shorter runs stay plain.
+fn try_chain(ops: &[ROp], i: usize, end: usize, uses: &[u32]) -> Option<(EOp, usize)> {
+    let (head, t1, mut next, mut out) = parse_link(ops, i, end, uses)?;
+    let mut terms = vec![t1];
+    loop {
+        if uses[out as usize] != 1 {
+            break;
+        }
+        match parse_link(ops, next, end, uses) {
+            Some((lhs, t, n2, o2)) if lhs == Src::Reg(out) => {
+                terms.push(t);
+                next = n2;
+                out = o2;
+            }
+            _ => break,
+        }
+    }
+    if terms.len() < 2 {
+        return None;
+    }
+    Some((EOp::FusedAdd { out, head, terms }, next))
+}
+
+/// Lower one glue range into executable opcodes, fusing add chains.
+fn fuse_range(ops: &[ROp], start: usize, end: usize, uses: &[u32], eops: &mut Vec<EOp>) {
+    let mut i = start;
+    while i < end {
+        if let Some((eop, next)) = try_chain(ops, i, end, uses) {
+            eops.push(eop);
+            i = next;
+        } else {
+            eops.push(EOp::Plain(ops[i].clone()));
+            i += 1;
+        }
+    }
+}
+
+/// Group runs of consecutive observe items that share one distribution
+/// family and parameter slots (and have no glue between them) into plate
+/// items. Returns `(items, n_plates, total plate rows)`.
+fn group_plates(items: Vec<RecItem>) -> (Vec<RecItem>, usize, usize) {
+    let mut out: Vec<RecItem> = Vec::with_capacity(items.len());
+    let mut n_plates = 0usize;
+    let mut plate_rows = 0usize;
+    let mut iter = items.into_iter().peekable();
+    while let Some(ri) = iter.next() {
+        let RecItem { glue_end, item } = ri;
+        match item {
+            Item::Observe { dist, ps, np, obs } => {
+                let mut rows = vec![obs];
+                while let Some(nx) = iter.peek() {
+                    let extend = nx.glue_end == glue_end
+                        && matches!(
+                            &nx.item,
+                            Item::Observe { dist: d2, ps: p2, np: n2, .. }
+                                if sdist_eq(&dist, d2) && ps == *p2 && np == *n2
+                        );
+                    if !extend {
+                        break;
+                    }
+                    if let Some(RecItem {
+                        item: Item::Observe { obs: o2, .. },
+                        ..
+                    }) = iter.next()
+                    {
+                        rows.push(o2);
+                    }
+                }
+                let item = if rows.len() >= 2 {
+                    n_plates += 1;
+                    plate_rows += rows.len();
+                    Item::PlateScalar {
+                        dist,
+                        ps,
+                        np,
+                        obs: rows,
+                    }
+                } else {
+                    Item::Observe { dist, ps, np, obs }
+                };
+                out.push(RecItem { glue_end, item });
+            }
+            Item::ObserveInt { dist, p, obs } => {
+                let mut rows = vec![obs];
+                while let Some(nx) = iter.peek() {
+                    let extend = nx.glue_end == glue_end
+                        && matches!(
+                            &nx.item,
+                            Item::ObserveInt { dist: d2, p: p2, .. }
+                                if ddist_eq(&dist, d2) && p == *p2
+                        );
+                    if !extend {
+                        break;
+                    }
+                    if let Some(RecItem {
+                        item: Item::ObserveInt { obs: o2, .. },
+                        ..
+                    }) = iter.next()
+                    {
+                        rows.push(o2);
+                    }
+                }
+                let item = if rows.len() >= 2 {
+                    n_plates += 1;
+                    plate_rows += rows.len();
+                    Item::PlateInt { dist, p, obs: rows }
+                } else {
+                    Item::ObserveInt { dist, p, obs }
+                };
+                out.push(RecItem { glue_end, item });
+            }
+            other => out.push(RecItem {
+                glue_end,
+                item: other,
+            }),
+        }
+    }
+    (out, n_plates, plate_rows)
+}
+
+/// Lower a verified recording into an executable program: fuse glue per
+/// inter-item range (opcodes after the last item can influence nothing
+/// and are dropped), then group observe plates.
+fn build_program(rec: Recording, tvi: &TypedVarInfo) -> StaticProgram {
+    let uses = count_uses(&rec);
+    let Recording {
+        ops,
+        n_regs,
+        items,
+        n_obs,
+    } = rec;
+    let mut eops = Vec::new();
+    let mut lowered = Vec::with_capacity(items.len());
+    let mut cursor = 0usize;
+    for ri in items {
+        fuse_range(&ops, cursor, ri.glue_end, &uses, &mut eops);
+        cursor = ri.glue_end;
+        lowered.push(RecItem {
+            glue_end: eops.len(),
+            item: ri.item,
+        });
+    }
+    let (items, n_plates, plate_rows) = group_plates(lowered);
+    StaticProgram {
+        eops,
+        items,
+        n_regs: n_regs as usize,
+        discrete: tvi.discrete.clone(),
+        n_obs,
+        n_plates,
+        plate_rows,
+        dim: tvi.dim(),
+    }
+}
+
+/// Attempt to compile `model` against its typed trace.
+///
+/// Records the walk twice — at the trace's stored unconstrained point and
+/// at a perturbed point (θ + 0.125, falling back to θ − 0.125 if the
+/// perturbation rejects) — and promotes only if the two recordings are
+/// structurally identical, the recorded obs-site count agrees with
+/// [`count_obs_sites`], and the compiled program reproduces the dynamic
+/// fused executor's log-density and gradient **bitwise** at the recording
+/// point. Any failure returns `None` and the model stays dynamic.
+pub fn try_compile(model: &dyn Model, tvi: &TypedVarInfo) -> Option<StaticProgram> {
+    let rec0 = record_run(model, tvi, &tvi.unconstrained)?;
+    let expected_obs = count_obs_sites(model, tvi);
+    if rec0.n_obs != expected_obs {
+        debug_assert_eq!(
+            rec0.n_obs, expected_obs,
+            "recorder obs-site count drifted from the plain typed walk"
+        );
+        return None;
+    }
+    let perturbed = |d: f64| -> Vec<f64> { tvi.unconstrained.iter().map(|x| x + d).collect() };
+    let rec1 = record_run(model, tvi, &perturbed(0.125))
+        .or_else(|| record_run(model, tvi, &perturbed(-0.125)))?;
+    if !recordings_match(&rec0, &rec1) {
+        return None;
+    }
+    let program = build_program(rec0, tvi);
+    // never serve an unvalidated program: bitwise lp + grad parity with
+    // the dynamic fused walk at the recording point, or no promotion
+    let mut gc = vec![0.0; tvi.dim()];
+    let mut gd = vec![0.0; tvi.dim()];
+    let lc = program.logp_grad_into(tvi, &tvi.unconstrained, Context::Default, &mut gc);
+    let ld = typed_grad_fused_into(model, tvi, &tvi.unconstrained, Context::Default, &mut gd);
+    if !f64_bits_eq(lc, ld) || !slice_bits_eq(&gc, &gd) {
+        return None;
+    }
+    metrics::inc(Counter::StaticPromotions);
+    Some(program)
+}
+
+// --------------------------------------------------------------- replay
+
+/// Reused replay buffers, parked thread-locally between evaluations so the
+/// steady-state compiled path allocates nothing.
+#[derive(Default)]
+struct ReplayScratch {
+    /// Register file: `(tape node index, value)` per recording register.
+    regs: Vec<(u32, f64)>,
+    /// Fused-add parent/partial assembly buffers.
+    parents: Vec<u32>,
+    partials: Vec<f64>,
+    /// Operand buffer for `Lse` replay.
+    avars: Vec<AVar>,
+    /// Plate kernel row outputs.
+    lp_rows: Vec<f64>,
+    dp_rows: Vec<[f64; MAX_DIST_PARAMS]>,
+    dpi_rows: Vec<f64>,
+}
+
+thread_local! {
+    static REPLAY_SCRATCH: RefCell<ReplayScratch> = RefCell::new(ReplayScratch::default());
+}
+
+fn take_replay_scratch() -> ReplayScratch {
+    REPLAY_SCRATCH.with(|s| std::mem::take(&mut s.borrow_mut()))
+}
+
+fn park_replay_scratch(s: ReplayScratch) {
+    REPLAY_SCRATCH.with(|c| *c.borrow_mut() = s)
+}
+
+fn push_fused_parent(
+    regs: &[(u32, f64)],
+    parents: &mut Vec<u32>,
+    partials: &mut Vec<f64>,
+    t: &FTerm,
+) {
+    let (idx, d) = match t {
+        FTerm::Src(Src::Reg(r)) => (regs[*r as usize].0, 1.0),
+        FTerm::Src(Src::Const(_)) => return,
+        FTerm::MulRC(r, c) => (regs[*r as usize].0, *c),
+    };
+    if idx != arena::NONE {
+        parents.push(idx);
+        partials.push(d);
+    }
+}
+
+/// One in-flight replay: the accumulator/seed-weight arithmetic is a
+/// verbatim copy of the dynamic `FusedCore`, and every item arm calls the
+/// same fused kernels (`fused_assume_*`, `logpdf_adj`, `seed_*`) the
+/// dynamic executors call — bit-identical totals by construction.
+struct Replay<'a> {
+    tvi: &'a TypedVarInfo,
+    theta: &'a [f64],
+    acc: Accumulator<f64>,
+    prior_w: f64,
+    lik_w: f64,
+    stmts: usize,
+    rs: ReplayScratch,
+    fs: FusedScratch,
+}
+
+impl<'a> Replay<'a> {
+    #[inline]
+    fn prior_seed_weight(&mut self, lp: f64) -> f64 {
+        let pre = self.acc.rejected();
+        self.acc.add_prior(lp);
+        if !pre && !self.acc.rejected() {
+            self.prior_w
+        } else {
+            0.0
+        }
+    }
+
+    #[inline]
+    fn lik_seed_weight(&mut self, lp: f64, w: f64) -> f64 {
+        let pre = self.acc.rejected();
+        self.acc.add_lik_weighted(lp, w);
+        if !pre && !self.acc.rejected() {
+            w
+        } else {
+            0.0
+        }
+    }
+
+    #[inline]
+    fn rsrc(&self, s: Src) -> (u32, f64) {
+        match s {
+            Src::Const(c) => (arena::NONE, c),
+            Src::Reg(r) => self.rs.regs[r as usize],
+        }
+    }
+
+    #[inline]
+    fn reg_avar(&self, r: u32) -> AVar {
+        let (idx, v) = self.rs.regs[r as usize];
+        if idx == arena::NONE {
+            AVar::constant(v)
+        } else {
+            AVar::from_node(idx, v)
+        }
+    }
+
+    #[inline]
+    fn avar(&self, s: Src) -> AVar {
+        match s {
+            Src::Const(c) => AVar::constant(c),
+            Src::Reg(r) => self.reg_avar(r),
+        }
+    }
+
+    fn exec_eop(&mut self, eop: &EOp) {
+        match eop {
+            EOp::Plain(rop) => self.exec_plain(rop),
+            EOp::FusedAdd { out, head, terms } => {
+                let (h_idx, h_val) = self.rsrc(*head);
+                let mut v = h_val;
+                for t in terms {
+                    v += match t {
+                        FTerm::Src(s) => self.rsrc(*s).1,
+                        FTerm::MulRC(r, c) => self.rs.regs[*r as usize].1 * c,
+                    };
+                }
+                // parent order [tₙ … t₂, head, t₁] reproduces the dynamic
+                // backward sweep's per-leaf accumulation order over the
+                // chain's interleaved Mul/Add nodes
+                self.rs.parents.clear();
+                self.rs.partials.clear();
+                for t in terms.iter().skip(1).rev() {
+                    push_fused_parent(&self.rs.regs, &mut self.rs.parents, &mut self.rs.partials, t);
+                }
+                if h_idx != arena::NONE {
+                    self.rs.parents.push(h_idx);
+                    self.rs.partials.push(1.0);
+                }
+                push_fused_parent(
+                    &self.rs.regs,
+                    &mut self.rs.parents,
+                    &mut self.rs.partials,
+                    &terms[0],
+                );
+                let idx = if self.rs.parents.is_empty() {
+                    arena::NONE
+                } else {
+                    arena::with_tape(|t| t.push(&self.rs.parents, &self.rs.partials))
+                };
+                self.rs.regs[*out as usize] = (idx, v);
+            }
+        }
+    }
+
+    /// Replay one plain opcode through the real [`AVar`] operation — the
+    /// identical arithmetic (and identical value-dependent branches, for
+    /// the composite kernels) the dynamic executor would run.
+    fn exec_plain(&mut self, rop: &ROp) {
+        let v = match &rop.op {
+            Op::Add(a, b) => self.avar(*a) + self.avar(*b),
+            Op::Sub(a, b) => self.avar(*a) - self.avar(*b),
+            Op::Mul(a, b) => self.avar(*a) * self.avar(*b),
+            Op::Div(a, b) => self.avar(*a) / self.avar(*b),
+            Op::Neg(r) => -self.reg_avar(*r),
+            Op::Ln(r) => self.reg_avar(*r).ln(),
+            Op::Exp(r) => self.reg_avar(*r).exp(),
+            Op::Sqrt(r) => self.reg_avar(*r).sqrt(),
+            Op::Ln1p(r) => self.reg_avar(*r).ln_1p(),
+            Op::Tanh(r) => self.reg_avar(*r).tanh(),
+            Op::Sin(r) => self.reg_avar(*r).sin(),
+            Op::Cos(r) => self.reg_avar(*r).cos(),
+            Op::Lgamma(r) => self.reg_avar(*r).lgamma(),
+            Op::Powi(r, n) => self.reg_avar(*r).powi(*n),
+            Op::Powf(r, e) => self.reg_avar(*r).powf(*e),
+            Op::Abs(r) => self.reg_avar(*r).abs(),
+            Op::Log1pExp(r) => self.reg_avar(*r).log1p_exp(),
+            Op::LogSigmoid(r) => self.reg_avar(*r).log_sigmoid(),
+            Op::Sigmoid(r) => self.reg_avar(*r).sigmoid(),
+            Op::LogAddExp(a, b) => self.avar(*a).log_add_exp(self.avar(*b)),
+            Op::Lse(srcs) => {
+                let mut buf = std::mem::take(&mut self.rs.avars);
+                buf.clear();
+                for s in srcs {
+                    buf.push(self.avar(*s));
+                }
+                let v = AVar::log_sum_exp_slice(&buf);
+                self.rs.avars = buf;
+                v
+            }
+        };
+        self.rs.regs[rop.out as usize] = (v.idx(), v.value());
+    }
+
+    fn exec_item(&mut self, item: &Item) {
+        match item {
+            Item::AssumeScalar {
+                slot,
+                out,
+                dist,
+                ps,
+                ..
+            } => {
+                self.stmts += 1;
+                let sl = &self.tvi.slots()[*slot];
+                let d = dist.with_params(&[self.avar(ps[0]), self.avar(ps[1])]);
+                let (x, lp, adj, link) =
+                    fused_assume_scalar(self.theta, sl.unc_offset, &sl.domain, &d);
+                let w = self.prior_seed_weight(lp);
+                if w != 0.0 {
+                    seed_assume_scalar(&x, sl.unc_offset, &d, &adj, &link, w);
+                }
+                self.rs.regs[*out as usize] = (x.idx(), x.value());
+            }
+            Item::AssumeVec {
+                slot,
+                out,
+                dist,
+                ps,
+                ..
+            } => {
+                self.stmts += 1;
+                let sl = &self.tvi.slots()[*slot];
+                let d = dist.with_params(&[self.avar(ps[0]), self.avar(ps[1])]);
+                let (xs, lp, adj, ladj) =
+                    fused_assume_vec(self.theta, sl.unc_offset, &sl.domain, &d, &mut self.fs);
+                let w = self.prior_seed_weight(lp);
+                if w != 0.0 {
+                    seed_assume_vec(
+                        &xs,
+                        sl.unc_offset,
+                        &sl.domain,
+                        &ladj,
+                        &d,
+                        &adj,
+                        &self.fs.dx,
+                        w,
+                    );
+                }
+                for (r, x) in out.iter().zip(&xs) {
+                    self.rs.regs[*r as usize] = (x.idx(), x.value());
+                }
+            }
+            Item::AssumeInt { slot, dist, p } => {
+                self.stmts += 1;
+                let sl = &self.tvi.slots()[*slot];
+                let k = self.tvi.discrete[sl.disc_offset];
+                let (pi, pv) = self.rsrc(*p);
+                let (lp, dp) = dist.with_f64_param(pv).logpmf_adj(k);
+                let w = self.prior_seed_weight(lp);
+                if w != 0.0 {
+                    arena::seed(pi, dp * w);
+                }
+            }
+            Item::Observe { dist, ps, obs, .. } => {
+                self.stmts += 1;
+                let cw = self.acc.note_obs();
+                if cw == 0.0 {
+                    return;
+                }
+                let d = dist.with_params(&[self.avar(ps[0]), self.avar(ps[1])]);
+                let adj = d.logpdf_adj(*obs);
+                let w = self.lik_seed_weight(adj.lp, cw);
+                if w != 0.0 {
+                    seed_params_scalar(&d, &adj, w);
+                }
+            }
+            Item::ObserveInt { dist, p, obs } => {
+                self.stmts += 1;
+                let cw = self.acc.note_obs();
+                if cw == 0.0 {
+                    return;
+                }
+                let (pi, pv) = self.rsrc(*p);
+                let (lp, dp) = dist.with_f64_param(pv).logpmf_adj(*obs);
+                let w = self.lik_seed_weight(lp, cw);
+                if w != 0.0 {
+                    arena::seed(pi, dp * w);
+                }
+            }
+            Item::ObserveVec { dist, ps, obs, .. } => {
+                self.stmts += 1;
+                let cw = self.acc.note_obs();
+                if cw == 0.0 {
+                    return;
+                }
+                self.fs.dx.clear();
+                self.fs.dx.resize(obs.len(), 0.0);
+                let d = dist.with_params(&[self.avar(ps[0]), self.avar(ps[1])]);
+                let adj = d.logpdf_adj(obs, &mut self.fs.dx);
+                let w = self.lik_seed_weight(adj.lp, cw);
+                if w != 0.0 {
+                    let (pvs, n) = d.param_vars();
+                    arena::with_tape(|t| {
+                        for (pv, dd) in pvs.iter().zip(adj.d_p).take(n) {
+                            t.seed(pv.idx(), dd * w);
+                        }
+                    });
+                }
+            }
+            Item::ObsLogp { lp } => {
+                self.stmts += 1;
+                let cw = self.acc.note_obs();
+                if cw == 0.0 {
+                    return;
+                }
+                let (idx, v) = self.rsrc(*lp);
+                let w = self.lik_seed_weight(v, cw);
+                if w != 0.0 {
+                    arena::seed(idx, w);
+                }
+            }
+            Item::PriorLogp { lp } => {
+                self.stmts += 1;
+                let (idx, v) = self.rsrc(*lp);
+                let w = self.prior_seed_weight(v);
+                arena::seed(idx, w);
+            }
+            Item::SkipObs { n } => {
+                self.acc.skip_obs(*n);
+            }
+            Item::PlateScalar { dist, ps, np, obs } => {
+                metrics::inc(Counter::PlateKernelCalls);
+                let n = obs.len();
+                self.rs.lp_rows.clear();
+                self.rs.lp_rows.resize(n, 0.0);
+                self.rs.dp_rows.clear();
+                self.rs.dp_rows.resize(n, [0.0; MAX_DIST_PARAMS]);
+                let p0 = self.rsrc(ps[0]);
+                let p1 = self.rsrc(ps[1]);
+                if self.lik_w != 0.0 {
+                    // one row-batched kernel call for the whole plate;
+                    // each row's lp/d_p is bitwise equal to the
+                    // sequential logpdf_adj the dynamic walk runs
+                    dist.with_f64_params(&[p0.1, p1.1]).logpdf_adj_rows(
+                        obs,
+                        &mut self.rs.lp_rows,
+                        &mut self.rs.dp_rows,
+                    );
+                }
+                let pis = [p0.0, p1.0];
+                for i in 0..n {
+                    self.stmts += 1;
+                    let cw = self.acc.note_obs();
+                    if cw == 0.0 {
+                        continue;
+                    }
+                    let w = self.lik_seed_weight(self.rs.lp_rows[i], cw);
+                    if w != 0.0 {
+                        let dp = self.rs.dp_rows[i];
+                        arena::with_tape(|t| {
+                            for (pi, d) in pis.iter().zip(dp).take(*np) {
+                                t.seed(*pi, d * w);
+                            }
+                        });
+                    }
+                }
+            }
+            Item::PlateInt { dist, p, obs } => {
+                metrics::inc(Counter::PlateKernelCalls);
+                let n = obs.len();
+                self.rs.lp_rows.clear();
+                self.rs.lp_rows.resize(n, 0.0);
+                self.rs.dpi_rows.clear();
+                self.rs.dpi_rows.resize(n, 0.0);
+                let (pi, pv) = self.rsrc(*p);
+                if self.lik_w != 0.0 {
+                    dist.with_f64_param(pv).logpmf_adj_rows(
+                        obs,
+                        &mut self.rs.lp_rows,
+                        &mut self.rs.dpi_rows,
+                    );
+                }
+                for i in 0..n {
+                    self.stmts += 1;
+                    let cw = self.acc.note_obs();
+                    if cw == 0.0 {
+                        continue;
+                    }
+                    let w = self.lik_seed_weight(self.rs.lp_rows[i], cw);
+                    if w != 0.0 {
+                        arena::seed(pi, self.rs.dpi_rows[i] * w);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init_typed;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn promoted(name: &str) -> (Box<dyn Model>, TypedVarInfo, StaticProgram) {
+        let bm = crate::models::build_small(name, 11);
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let tvi = init_typed(bm.model.as_ref(), &mut rng);
+        let prog = try_compile(bm.model.as_ref(), &tvi)
+            .unwrap_or_else(|| panic!("{name} should promote"));
+        (bm.model, tvi, prog)
+    }
+
+    fn assert_bitwise_match(model: &dyn Model, tvi: &TypedVarInfo, prog: &StaticProgram) {
+        let theta: Vec<f64> = tvi
+            .unconstrained
+            .iter()
+            .enumerate()
+            .map(|(i, x)| x + 0.03 * ((i % 7) as f64 - 3.0))
+            .collect();
+        for ctx in [Context::Default, Context::Likelihood, Context::Prior] {
+            let mut gc = vec![0.0; tvi.dim()];
+            let mut gd = vec![0.0; tvi.dim()];
+            let lc = prog.logp_grad_into(tvi, &theta, ctx, &mut gc);
+            let ld = typed_grad_fused_into(model, tvi, &theta, ctx, &mut gd);
+            assert_eq!(lc.to_bits(), ld.to_bits(), "{ctx:?}: logp bits");
+            for (i, (a, b)) in gc.iter().zip(&gd).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{ctx:?}: grad[{i}] {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn fuses_mul_add_chains() {
+        // regs 0,1 play assume outputs; the op stream is the dot-product
+        // pattern: m2 = r0*2, a3 = 0+m2, m4 = r1*3, a5 = a3+m4
+        let ops = vec![
+            ROp {
+                out: 2,
+                op: Op::Mul(Src::Reg(0), Src::Const(2.0)),
+            },
+            ROp {
+                out: 3,
+                op: Op::Add(Src::Const(0.0), Src::Reg(2)),
+            },
+            ROp {
+                out: 4,
+                op: Op::Mul(Src::Reg(1), Src::Const(3.0)),
+            },
+            ROp {
+                out: 5,
+                op: Op::Add(Src::Reg(3), Src::Reg(4)),
+            },
+        ];
+        let uses = vec![1, 1, 1, 1, 1, 1];
+        let (eop, next) = try_chain(&ops, 0, ops.len(), &uses).expect("chain fuses");
+        assert_eq!(next, 4);
+        match eop {
+            EOp::FusedAdd { out, head, terms } => {
+                assert_eq!(out, 5);
+                assert_eq!(head, Src::Const(0.0));
+                assert_eq!(terms.len(), 2);
+                assert!(matches!(terms[0], FTerm::MulRC(0, c) if c == 2.0));
+                assert!(matches!(terms[1], FTerm::MulRC(1, c) if c == 3.0));
+            }
+            EOp::Plain(_) => panic!("expected a fused add"),
+        }
+        // a multi-use intermediate must refuse to fuse past itself
+        let mut uses2 = uses.clone();
+        uses2[3] = 2;
+        assert!(try_chain(&ops, 0, ops.len(), &uses2).is_none());
+    }
+
+    #[test]
+    fn non_add_ops_stay_plain() {
+        let ops = vec![ROp {
+            out: 1,
+            op: Op::Exp(0),
+        }];
+        let uses = vec![1, 1];
+        let mut eops = Vec::new();
+        fuse_range(&ops, 0, 1, &uses, &mut eops);
+        assert_eq!(eops.len(), 1);
+        assert!(matches!(&eops[0], EOp::Plain(r) if matches!(r.op, Op::Exp(0))));
+    }
+
+    #[test]
+    fn logreg_tall_promotes_and_replays_bitwise() {
+        let (model, tvi, prog) = promoted("logreg_tall");
+        // per-row densities arrive via add_obs_logp with interleaved glue,
+        // so no distribution plates form — the win is the fused dot chain
+        assert_eq!(prog.n_plates(), 0);
+        assert_eq!(prog.n_obs(), count_obs_sites(model.as_ref(), &tvi));
+        assert_bitwise_match(model.as_ref(), &tvi, &prog);
+    }
+
+    #[test]
+    fn hier_poisson_forms_poisson_plates() {
+        let (model, tvi, prog) = promoted("hier_poisson");
+        // 10 groups × 5 consecutive Poisson observes sharing one rate
+        assert_eq!(prog.n_plates(), 10);
+        assert_eq!(prog.plate_rows(), 50);
+        assert_bitwise_match(model.as_ref(), &tvi, &prog);
+    }
+
+    #[test]
+    fn gauss_unknown_promotes_and_replays_bitwise() {
+        let (model, tvi, prog) = promoted("gauss_unknown");
+        // the manual iid loop folds every observation into one raw-logp
+        // site, so no distribution plates form — the win is the fused
+        // glue chain feeding that site
+        assert_eq!(prog.n_plates(), 0);
+        assert_eq!(prog.n_obs(), 1);
+        assert_bitwise_match(model.as_ref(), &tvi, &prog);
+    }
+
+    #[test]
+    fn servable_contexts_are_exactly_full_window() {
+        assert!(servable(Context::Default));
+        assert!(servable(Context::Likelihood));
+        assert!(servable(Context::Prior));
+        assert!(servable(Context::MiniBatch { scale: 2.0 }));
+        assert!(!servable(Context::Subsample {
+            lo: 0,
+            hi: 1,
+            scale: 1.0
+        }));
+        let set = crate::context::register_subset(vec![0]);
+        assert!(!servable(Context::SubsampleIdx { set, scale: 1.0 }));
+        assert!(!servable(Context::ObsWindow { lo: 0, hi: 1 }));
+        assert!(!servable(Context::Profile));
+    }
+}

@@ -749,11 +749,11 @@ impl<'a, T: Scalar> TildeApi<T> for UntypedFlatExecutor<'a, T> {
 /// between gradient evaluations so the steady-state `logp_grad_into` path
 /// allocates nothing.
 #[derive(Default)]
-struct FusedScratch {
+pub(crate) struct FusedScratch {
     /// Per-component ∂logpdf/∂x of the current vector statement.
-    dx: Vec<f64>,
+    pub(crate) dx: Vec<f64>,
     /// Constrained primal values of the current vector statement.
-    xs: Vec<f64>,
+    pub(crate) xs: Vec<f64>,
     /// Unconstrained coordinates as arena variables (simplex invlink).
     yv: Vec<AVar>,
 }
@@ -763,11 +763,11 @@ thread_local! {
         std::cell::RefCell::new(FusedScratch::default());
 }
 
-fn take_fused_scratch() -> FusedScratch {
+pub(crate) fn take_fused_scratch() -> FusedScratch {
     FUSED_SCRATCH.with(|s| std::mem::take(&mut s.borrow_mut()))
 }
 
-fn park_fused_scratch(scratch: FusedScratch) {
+pub(crate) fn park_fused_scratch(scratch: FusedScratch) {
     FUSED_SCRATCH.with(|s| *s.borrow_mut() = scratch);
 }
 
@@ -775,7 +775,7 @@ fn park_fused_scratch(scratch: FusedScratch) {
 /// evaluate the density's analytic adjoint, and attach the constrained
 /// value to the tape as **at most one** node (`Real` aliases the input
 /// leaf outright).
-fn fused_assume_scalar(
+pub(crate) fn fused_assume_scalar(
     theta: &[f64],
     off: usize,
     domain: &Domain,
@@ -794,7 +794,7 @@ fn fused_assume_scalar(
 
 /// Seed the gradient contributions of a fused scalar assume, scaled by the
 /// context's prior weight.
-fn seed_assume_scalar(
+pub(crate) fn seed_assume_scalar(
     x: &AVar,
     off: usize,
     dist: &ScalarDist<AVar>,
@@ -819,7 +819,7 @@ fn seed_assume_scalar(
 /// node. The density itself is always one analytic `logpdf_adj` kernel.
 /// Returns `(value, lp, param partials, ladj node — NONE-indexed when the
 /// ladj gradient is seeded directly on the leaves)`.
-fn fused_assume_vec(
+pub(crate) fn fused_assume_vec(
     theta: &[f64],
     off: usize,
     domain: &Domain,
@@ -874,7 +874,7 @@ fn fused_assume_vec(
 /// nodes, ladj partials on the leaves (diagonal links) or the ladj node
 /// (simplex), parameter partials on the parameter variables.
 #[allow(clippy::too_many_arguments)]
-fn seed_assume_vec(
+pub(crate) fn seed_assume_vec(
     out: &[AVar],
     off: usize,
     domain: &Domain,
@@ -1184,7 +1184,7 @@ impl FusedCore {
 }
 
 /// Seed a scalar density's parameter partials (observe statements).
-fn seed_params_scalar(dist: &ScalarDist<AVar>, adj: &ScalarAdj, w: f64) {
+pub(crate) fn seed_params_scalar(dist: &ScalarDist<AVar>, adj: &ScalarAdj, w: f64) {
     let (ps, np) = dist.param_vars();
     arena::with_tape(|t| {
         for (p, d) in ps.iter().zip(adj.d_p).take(np) {

@@ -103,6 +103,12 @@ macro_rules! model {
             ) {
                 self.eval_generic(api)
             }
+            fn eval_record(
+                &self,
+                api: &mut dyn $crate::model::TildeApi<$crate::ad::record::RVar>,
+            ) {
+                self.eval_generic(api)
+            }
         }
     };
 }

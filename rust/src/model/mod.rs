@@ -25,6 +25,7 @@
 //!   every scalar op (`Backend::ReverseFused`, the native default).
 
 pub mod batched;
+pub mod compiled;
 pub mod executors;
 #[macro_use]
 pub mod macros;
@@ -126,6 +127,10 @@ pub trait Model: Send + Sync {
     /// K chains / particles / ELBO draws at once (see [`crate::ad::batch`]
     /// and [`batched`]).
     fn eval_batch(&self, api: &mut dyn TildeApi<crate::ad::batch::BVar>);
+    /// Evaluate with structure-recording variables: one walk captures the
+    /// tilde sequence and glue arithmetic as a flat opcode program (see
+    /// [`crate::ad::record`] and [`compiled`]).
+    fn eval_record(&self, api: &mut dyn TildeApi<crate::ad::record::RVar>);
 }
 
 /// Run the model under a [`executors::SampleExecutor`], drawing any missing

@@ -58,10 +58,18 @@ pub enum Counter {
     BatchedEvals,
     /// Lanes summed over batched evaluations (`lanes / evals` = mean K).
     BatchedLanes,
+    /// Static-structure promotions: a recorded tilde walk proved stable
+    /// and the density is now served by the compiled executor.
+    StaticPromotions,
+    /// Evaluations a promoted density had to route back to the dynamic
+    /// walk (windowed/profiled context, discrete snapshot change).
+    StaticDemotions,
+    /// Row-batched plate kernel calls made by compiled replays.
+    PlateKernelCalls,
 }
 
 /// Number of counters in the catalog.
-pub const N_COUNTERS: usize = 16;
+pub const N_COUNTERS: usize = 19;
 
 /// Every counter, in [`Counter`] discriminant order.
 pub const ALL_COUNTERS: [Counter; N_COUNTERS] = [
@@ -81,6 +89,9 @@ pub const ALL_COUNTERS: [Counter; N_COUNTERS] = [
     Counter::EtaTrials,
     Counter::BatchedEvals,
     Counter::BatchedLanes,
+    Counter::StaticPromotions,
+    Counter::StaticDemotions,
+    Counter::PlateKernelCalls,
 ];
 
 impl Counter {
@@ -103,6 +114,9 @@ impl Counter {
             Counter::EtaTrials => "eta_trials",
             Counter::BatchedEvals => "batched_evals",
             Counter::BatchedLanes => "batched_lanes",
+            Counter::StaticPromotions => "static_promotions",
+            Counter::StaticDemotions => "static_demotions",
+            Counter::PlateKernelCalls => "plate_kernel_calls",
         }
     }
 }

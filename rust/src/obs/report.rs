@@ -269,6 +269,21 @@ impl RunReport {
                     },
                     m.get(Counter::RejectedEvals),
                 );
+                // executor family actually serving this chain's gradients
+                let family = if m.get(Counter::StaticPromotions) > 0 {
+                    "compiled-static"
+                } else if m.get(Counter::ArenaEvals) > 0 {
+                    "typed-fused"
+                } else {
+                    "dynamic"
+                };
+                let _ = writeln!(
+                    out,
+                    "    executor: {family} (promotions={} demotions={} plate_kernel_calls={})",
+                    m.get(Counter::StaticPromotions),
+                    m.get(Counter::StaticDemotions),
+                    m.get(Counter::PlateKernelCalls),
+                );
             }
         }
         for p in self.params.iter().take(8) {
@@ -456,6 +471,44 @@ mod tests {
         let human = rep.render_human(&mc);
         assert!(human.contains("no diagnostic warnings"));
         assert!(human.contains("warmup"));
+    }
+
+    #[test]
+    #[cfg(feature = "telemetry")]
+    fn human_report_names_the_executor_family() {
+        use super::super::metrics;
+        let a = chain_with(|c| {
+            let _ = metrics::take_local();
+            metrics::set_enabled(true);
+            metrics::inc(Counter::GradEvals);
+            metrics::inc(Counter::ArenaEvals);
+            metrics::inc(Counter::StaticPromotions);
+            metrics::inc(Counter::StaticDemotions);
+            metrics::add(Counter::PlateKernelCalls, 7);
+            c.stats.metrics = metrics::take_local();
+        });
+        let b = chain_with(|c| {
+            let _ = metrics::take_local();
+            metrics::set_enabled(true);
+            metrics::inc(Counter::GradEvals);
+            metrics::inc(Counter::ArenaEvals);
+            c.stats.metrics = metrics::take_local();
+        });
+        let mc = MultiChain::new(vec![a, b]);
+        let rep = RunReport::from_chains("demo", "nuts", &mc, Vec::new());
+        let human = rep.render_human(&mc);
+        assert!(human.contains("executor: compiled-static"), "{human}");
+        assert!(human.contains("executor: typed-fused"), "{human}");
+        assert!(human.contains("plate_kernel_calls=7"), "{human}");
+        // the JSON side carries the raw counters
+        let json = rep.to_json();
+        for key in [
+            "\"static_promotions\": 1",
+            "\"static_demotions\": 1",
+            "\"plate_kernel_calls\": 7",
+        ] {
+            assert!(json.contains(key), "missing {key} in:\n{json}");
+        }
     }
 
     #[test]

@@ -47,7 +47,7 @@ pub use optimizer::{Optimizer, OptimizerKind, ETA_CANDIDATES};
 use rand_core::RngCore;
 
 use crate::chain::SamplerStats;
-use crate::context::Context;
+use crate::context::{Context, SubsetId};
 use crate::gradient::{Backend, LogDensity, NativeDensity};
 use crate::inference::RawDraws;
 use crate::model::Model;
@@ -111,20 +111,33 @@ impl Default for Advi {
 }
 
 /// A minibatch-able VI target: model + typed layout + native engine, from
-/// which per-block [`Context::Subsample`] densities are built each step.
+/// which per-block subsampled densities are built each step.
 ///
-/// Blocks partition the `n_obs` observation sites (model visit order)
-/// into `⌈N/B⌉` contiguous windows; sampling a block uniformly and
-/// scaling its likelihood by the block count is an exactly unbiased
-/// estimator of the full-data log-joint gradient.
+/// Two block shapes:
+///
+/// - **Windowed** ([`MinibatchTarget::new`]): the `n_obs` observation
+///   sites (model visit order) are partitioned into `⌈N/B⌉` contiguous
+///   windows served through [`Context::Subsample`].
+/// - **Index sets** ([`MinibatchTarget::with_index_sets`]): caller-chosen,
+///   possibly non-contiguous site sets (strided, clustered,
+///   importance-grouped) served through [`Context::SubsampleIdx`].
+///
+/// Either way, sampling a block uniformly and scaling its likelihood by
+/// the block count is an exactly unbiased estimator of the full-data
+/// log-joint gradient — for index sets, provided the sets partition the
+/// observation sites.
 pub struct MinibatchTarget<'a> {
     pub model: &'a dyn Model,
     pub tvi: &'a TypedVarInfo,
     pub backend: Backend,
     /// Total observation sites (N), counted by one model evaluation.
     pub n_obs: usize,
-    /// Batch size (B), clamped to `[1, n_obs]`.
+    /// Batch size (B), clamped to `[1, n_obs]`. In index-set mode: the
+    /// largest set size (reporting only).
     pub batch: usize,
+    /// Pre-registered index sets — `Some` switches [`Self::block`] to
+    /// [`Context::SubsampleIdx`] mode.
+    idx_sets: Option<Vec<SubsetId>>,
 }
 
 impl<'a> MinibatchTarget<'a> {
@@ -141,12 +154,41 @@ impl<'a> MinibatchTarget<'a> {
             backend,
             n_obs,
             batch: batch.clamp(1, n_obs.max(1)),
+            idx_sets: None,
         }
     }
 
-    /// Number of minibatch blocks, ⌈N/B⌉ (≥ 1).
+    /// Non-contiguous minibatching: each `sets[k]` is a set of observation
+    /// visit indices (sorted/deduplicated on registration). The sets
+    /// should partition `[0, n_obs)` for an unbiased gradient estimator;
+    /// out-of-range indices never match a site and contribute nothing.
+    pub fn with_index_sets(
+        model: &'a dyn Model,
+        tvi: &'a TypedVarInfo,
+        sets: Vec<Vec<u32>>,
+        backend: Backend,
+    ) -> Self {
+        assert!(!sets.is_empty(), "index-set minibatching needs ≥ 1 set");
+        let n_obs = crate::model::count_obs_sites(model, tvi);
+        let batch = sets.iter().map(Vec::len).max().unwrap_or(0).max(1);
+        let ids = sets.into_iter().map(crate::context::register_subset).collect();
+        Self {
+            model,
+            tvi,
+            backend,
+            n_obs,
+            batch,
+            idx_sets: Some(ids),
+        }
+    }
+
+    /// Number of minibatch blocks: the set count in index-set mode, else
+    /// ⌈N/B⌉ (≥ 1).
     pub fn n_blocks(&self) -> usize {
-        self.n_obs.div_ceil(self.batch).max(1)
+        match &self.idx_sets {
+            Some(ids) => ids.len(),
+            None => self.n_obs.div_ceil(self.batch).max(1),
+        }
     }
 
     /// The full-data density (used for posterior draws and the periodic
@@ -160,18 +202,23 @@ impl<'a> MinibatchTarget<'a> {
     pub fn block(&self, k: usize) -> NativeDensity<'a> {
         let n_blocks = self.n_blocks();
         debug_assert!(k < n_blocks);
-        let lo = k * self.batch;
-        let hi = (lo + self.batch).min(self.n_obs);
-        NativeDensity {
-            model: self.model,
-            tvi: self.tvi,
-            ctx: Context::Subsample {
-                lo,
-                hi,
+        let mut ld = NativeDensity::new(self.model, self.tvi, self.backend);
+        ld.ctx = match &self.idx_sets {
+            Some(ids) => Context::SubsampleIdx {
+                set: ids[k],
                 scale: n_blocks as f64,
             },
-            backend: self.backend,
-        }
+            None => {
+                let lo = k * self.batch;
+                let hi = (lo + self.batch).min(self.n_obs);
+                Context::Subsample {
+                    lo,
+                    hi,
+                    scale: n_blocks as f64,
+                }
+            }
+        };
+        ld
     }
 }
 

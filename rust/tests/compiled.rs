@@ -1,0 +1,419 @@
+//! The static-structure compiler end to end: promotion on the benchmark
+//! models, bit-identical serving against the dynamic fused executors,
+//! transparent demotion (windowed contexts, θ-dependent branching,
+//! discrete-trace drift), plate grouping, masked-Gibbs isolation, and
+//! index-set minibatching.
+
+use dynamicppl::context::{register_subset, Context};
+use dynamicppl::gradient::{Backend, LogDensity, NativeDensity};
+use dynamicppl::inference::gibbs::GibbsGrad;
+use dynamicppl::inference::{sample_chain, Gibbs, GibbsBlock, Nuts, SamplerKind};
+use dynamicppl::model::compiled::try_compile;
+use dynamicppl::model::count_obs_sites;
+use dynamicppl::models::logreg::logreg_n;
+use dynamicppl::models::logreg_tall::logreg_tall_n;
+use dynamicppl::models::{build_small, ALL_MODELS};
+use dynamicppl::prelude::*;
+use dynamicppl::vi::MinibatchTarget;
+
+#[cfg(feature = "telemetry")]
+use dynamicppl::obs::metrics::{self, Counter};
+
+/// Table-1 models plus the tall flagship.
+fn bench_models() -> Vec<&'static str> {
+    ALL_MODELS.iter().copied().chain(["logreg_tall"]).collect()
+}
+
+fn assert_bits_eq(label: &str, lp_a: f64, lp_b: f64, g_a: &[f64], g_b: &[f64]) {
+    assert_eq!(
+        lp_a.to_bits(),
+        lp_b.to_bits(),
+        "{label}: logp {lp_a} vs {lp_b}"
+    );
+    assert_eq!(g_a.len(), g_b.len(), "{label}: gradient length");
+    for (i, (a, b)) in g_a.iter().zip(g_b).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{label} grad[{i}]: {a} vs {b}");
+    }
+}
+
+/// Compiled serving is bitwise identical to the dynamic fused walk on
+/// every benchmark model, across every servable context and several θ
+/// points — and the recorded program's site/dim bookkeeping matches the
+/// dynamic executors' own counts.
+#[test]
+fn compiled_replay_is_bitwise_identical_on_every_benchmark_model() {
+    let promoted_expected = ["gauss_unknown", "hier_poisson", "logreg_tall"];
+    for name in bench_models() {
+        let bm = build_small(name, 7);
+        let m = bm.model.as_ref();
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let tvi = init_typed(m, &mut rng);
+        let dim = tvi.dim();
+        let mut ld = NativeDensity::fused(m, &tvi);
+        let mut ld_dyn = NativeDensity::fused_dynamic(m, &tvi);
+        let contexts = [
+            Context::Default,
+            Context::Likelihood,
+            Context::Prior,
+            Context::MiniBatch { scale: 1.7 },
+        ];
+        for ctx in contexts {
+            ld.ctx = ctx;
+            ld_dyn.ctx = ctx;
+            for point in 0..3usize {
+                let theta: Vec<f64> = tvi
+                    .unconstrained
+                    .iter()
+                    .enumerate()
+                    .map(|(i, x)| x * 0.3 + 0.02 * (((i + point) % 5) as f64) - 0.04)
+                    .collect();
+                let mut g_c = vec![0.0; dim];
+                let mut g_d = vec![0.0; dim];
+                let lp_c = ld.logp_grad_into(&theta, &mut g_c);
+                let lp_d = ld_dyn.logp_grad_into(&theta, &mut g_d);
+                let label = format!("{name} {ctx:?} point {point}");
+                assert_bits_eq(&label, lp_c, lp_d, &g_c, &g_d);
+            }
+        }
+        if let Some(prog) = ld.compiled_program() {
+            assert_eq!(prog.n_obs(), count_obs_sites(m, &tvi), "{name}: n_obs");
+            assert_eq!(prog.dim(), dim, "{name}: dim");
+        } else {
+            assert!(
+                !promoted_expected.contains(&name),
+                "{name} must promote to the compiled replay"
+            );
+        }
+    }
+}
+
+/// Seeded NUTS produces draw-for-draw identical chains whether the
+/// density serves the compiled program or the dynamic walk.
+#[test]
+fn seeded_nuts_is_draw_for_draw_identical_compiled_vs_dynamic() {
+    for name in bench_models() {
+        let bm = build_small(name, 13);
+        let m = bm.model.as_ref();
+        let mut rng = Xoshiro256pp::seed_from_u64(13);
+        let tvi = init_typed(m, &mut rng);
+        let kind = SamplerKind::Nuts(Nuts {
+            step_size: bm.step_size,
+            ..Nuts::default()
+        });
+        let ld = NativeDensity::fused(m, &tvi);
+        let ld_dyn = NativeDensity::fused_dynamic(m, &tvi);
+        let a = sample_chain(&ld, &tvi, &kind, 40, 40, 29);
+        let b = sample_chain(&ld_dyn, &tvi, &kind, 40, 40, 29);
+        assert_eq!(a.len(), b.len(), "{name}: chain length");
+        for (la, lb) in a.logp.iter().zip(&b.logp) {
+            assert_eq!(la.to_bits(), lb.to_bits(), "{name}: logp trace diverged");
+        }
+        for (ra, rb) in a.rows().iter().zip(b.rows()) {
+            for (x, y) in ra.iter().zip(rb) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{name}: draws diverged");
+            }
+        }
+    }
+}
+
+model! {
+    /// θ-dependent structure: the observation's distribution family
+    /// follows the sampled sign of `m`, so the tilde walk is not static.
+    pub Branchy {
+        y: f64,
+    }
+    fn body<T>(this, api) {
+        let m = tilde!(api, m ~ Normal(c(0.0), c(1.0)));
+        if m > c::<T>(0.0) {
+            obs!(api, this.y => Normal(m, c(1.0)));
+        } else {
+            obs!(api, this.y => Exponential(c(1.5)));
+        }
+    }
+}
+
+/// A θ-dependent branch flips the recorded structure between the two
+/// recording passes: the compiler must refuse to promote, and the density
+/// keeps serving the dynamic walk bitwise.
+#[test]
+fn theta_dependent_branching_never_promotes() {
+    let m = Branchy { y: 0.5 };
+    let mut rng = Xoshiro256pp::seed_from_u64(3);
+    let mut tvi = init_typed(&m, &mut rng);
+    // park θ just below the branch point: the verification recording at
+    // θ + 0.125 takes the other arm
+    tvi.unconstrained[0] = -0.06;
+    assert!(try_compile(&m, &tvi).is_none(), "branchy model promoted");
+
+    let ld = NativeDensity::fused(&m, &tvi);
+    for theta0 in [-0.3, -0.06, 0.2] {
+        let theta = [theta0];
+        let mut g_c = vec![0.0; 1];
+        let mut g_d = vec![0.0; 1];
+        let lp_c = ld.logp_grad_into(&theta, &mut g_c);
+        let lp_d = typed_grad_fused_into(&m, &tvi, &theta, Context::Default, &mut g_d);
+        assert_bits_eq(&format!("branchy at {theta0}"), lp_c, lp_d, &g_c, &g_d);
+    }
+    assert!(
+        ld.compiled_program().is_none(),
+        "branchy density must stay dynamic"
+    );
+}
+
+/// Windowed contexts are served by transparent demotion to the dynamic
+/// executors — bitwise — and the telemetry counters record exactly one
+/// promotion plus one demotion per windowed evaluation. Promotion
+/// survives the excursion: back at `Default` the program serves again.
+#[test]
+fn windowed_contexts_demote_to_the_dynamic_walk_bitwise() {
+    let bm = build_small("hier_poisson", 17);
+    let m = bm.model.as_ref();
+    let mut rng = Xoshiro256pp::seed_from_u64(17);
+    let tvi = init_typed(m, &mut rng);
+    let dim = tvi.dim();
+    let theta: Vec<f64> = tvi.unconstrained.iter().map(|x| x * 0.3).collect();
+    let mut g_c = vec![0.0; dim];
+    let mut g_d = vec![0.0; dim];
+
+    #[cfg(feature = "telemetry")]
+    let _ = metrics::take_local();
+
+    let mut ld = NativeDensity::fused(m, &tvi);
+    let mut ld_dyn = NativeDensity::fused_dynamic(m, &tvi);
+    let lp_c = ld.logp_grad_into(&theta, &mut g_c);
+    let lp_d = ld_dyn.logp_grad_into(&theta, &mut g_d);
+    assert_bits_eq("hier_poisson Default", lp_c, lp_d, &g_c, &g_d);
+    assert!(ld.compiled_program().is_some(), "hier_poisson must promote");
+
+    let set = register_subset(vec![3, 7, 8, 22, 41]);
+    let windows = [
+        Context::Subsample {
+            lo: 5,
+            hi: 20,
+            scale: 2.5,
+        },
+        Context::SubsampleIdx { set, scale: 10.0 },
+    ];
+    for ctx in windows {
+        ld.ctx = ctx;
+        ld_dyn.ctx = ctx;
+        let lp_c = ld.logp_grad_into(&theta, &mut g_c);
+        let lp_d = ld_dyn.logp_grad_into(&theta, &mut g_d);
+        assert_bits_eq(&format!("{ctx:?}"), lp_c, lp_d, &g_c, &g_d);
+    }
+
+    ld.ctx = Context::Default;
+    ld_dyn.ctx = Context::Default;
+    let lp_c = ld.logp_grad_into(&theta, &mut g_c);
+    let lp_d = ld_dyn.logp_grad_into(&theta, &mut g_d);
+    assert_bits_eq("hier_poisson Default (after)", lp_c, lp_d, &g_c, &g_d);
+    assert!(ld.compiled_program().is_some());
+
+    #[cfg(feature = "telemetry")]
+    {
+        let snap = metrics::take_local();
+        assert_eq!(snap.get(Counter::StaticPromotions), 1, "one compile");
+        assert_eq!(
+            snap.get(Counter::StaticDemotions),
+            2,
+            "one demotion per windowed evaluation"
+        );
+    }
+}
+
+model! {
+    /// Discrete mixture: a Bernoulli indicator selects the observation
+    /// mean — static only for a fixed discrete trace.
+    pub MixFix {
+        y: f64,
+    }
+    fn body<T>(this, api) {
+        let s = tilde!(api, s ~ Normal(c(0.0), c(1.0)));
+        let z = tilde_int!(api, z ~ Bernoulli(c(0.3)));
+        let mu = if z == 1 { s + c(3.0) } else { s - c(3.0) };
+        obs!(api, this.y => Normal(mu, c(1.0)));
+    }
+}
+
+/// The compiled program pins the discrete trace it was recorded under: a
+/// Gibbs-style flip of `z` fails `matches_discrete`, and a density built
+/// on the flipped trace recompiles and agrees with the dynamic walk.
+#[test]
+fn discrete_trace_drift_demotes_the_snapshot() {
+    let m = MixFix { y: 2.0 };
+    let mut rng = Xoshiro256pp::seed_from_u64(5);
+    let tvi = init_typed(&m, &mut rng);
+    let theta = [0.4];
+    let prog = try_compile(&m, &tvi).expect("fixed discrete trace is static");
+    assert!(prog.matches_discrete(&tvi));
+
+    let mut g_c = vec![0.0; 1];
+    let mut g_d = vec![0.0; 1];
+    let lp_c = prog.logp_grad_into(&tvi, &theta, Context::Default, &mut g_c);
+    let lp_d = typed_grad_fused_into(&m, &tvi, &theta, Context::Default, &mut g_d);
+    assert_bits_eq("mix original trace", lp_c, lp_d, &g_c, &g_d);
+
+    // flip the indicator: the snapshot no longer matches…
+    let mut flipped = tvi.clone();
+    flipped.discrete[0] = 1 - flipped.discrete[0];
+    assert!(!prog.matches_discrete(&flipped));
+    // …and it must not: the flipped trace scores a different joint
+    let lp_flip = typed_grad_fused_into(&m, &flipped, &theta, Context::Default, &mut g_d);
+    assert_ne!(lp_d.to_bits(), lp_flip.to_bits());
+
+    // a density built on the flipped trace recompiles and agrees bitwise
+    let ld = NativeDensity::fused(&m, &flipped);
+    let lp_c2 = ld.logp_grad_into(&theta, &mut g_c);
+    let lp_d2 = typed_grad_fused_into(&m, &flipped, &theta, Context::Default, &mut g_d);
+    assert_bits_eq("mix flipped trace", lp_c2, lp_d2, &g_c, &g_d);
+    assert!(ld.compiled_program().is_some(), "flipped trace is static too");
+}
+
+/// A live compiled program must not leak into blocked Gibbs: the masked
+/// fused conditionals bypass the compiled replay, so seeded sweeps are
+/// bitwise identical with and without a promoted program in scope.
+#[test]
+fn masked_gibbs_is_unaffected_by_a_live_compiled_program() {
+    let bm = build_small("gauss_unknown", 23);
+    let m = bm.model.as_ref();
+    let mut rng = Xoshiro256pp::seed_from_u64(23);
+    let tvi = init_typed(m, &mut rng);
+    let gibbs = Gibbs {
+        blocks: vec![
+            GibbsBlock::rwmh(&["s"], 0.3),
+            GibbsBlock::hmc(&["m"], 0.02, 8),
+        ],
+        grad: GibbsGrad::Fused,
+    };
+
+    let mut r = Xoshiro256pp::seed_from_u64(91);
+    let base = gibbs.sample(m, &tvi, 20, 20, &mut r);
+
+    // promote a program for the same model and keep it hot across the run
+    let ld = NativeDensity::fused(m, &tvi);
+    let theta = tvi.unconstrained.clone();
+    let mut g = vec![0.0; tvi.dim()];
+    let lp = ld.logp_grad_into(&theta, &mut g);
+    assert!(lp.is_finite());
+    assert!(ld.compiled_program().is_some(), "gauss_unknown must promote");
+
+    let mut r = Xoshiro256pp::seed_from_u64(91);
+    let again = gibbs.sample(m, &tvi, 20, 20, &mut r);
+    let _ = ld.logp_grad_into(&theta, &mut g);
+
+    assert_eq!(base.logps.len(), again.logps.len());
+    for (a, b) in base.logps.iter().zip(&again.logps) {
+        assert_eq!(a.to_bits(), b.to_bits(), "Gibbs logp trace diverged");
+    }
+    for (ra, rb) in base.rows.iter().zip(&again.rows) {
+        for (x, y) in ra.iter().zip(rb) {
+            assert_eq!(x.to_bits(), y.to_bits(), "Gibbs draws diverged");
+        }
+    }
+}
+
+/// Plate grouping: consecutive observe sites sharing one distribution
+/// family and parameter slots collapse into row-batched plate kernels,
+/// counted per compiled gradient pass; interleaved raw-logp glue falls
+/// back to the flat per-site replay without losing promotion.
+#[test]
+fn plate_grouping_forms_row_batched_kernels() {
+    let bm = build_small("hier_poisson", 11);
+    let m = bm.model.as_ref();
+    let mut rng = Xoshiro256pp::seed_from_u64(11);
+    let tvi = init_typed(m, &mut rng);
+    let prog = try_compile(m, &tvi).expect("hier_poisson is static");
+    assert_eq!(prog.n_plates(), 10, "one plate per group");
+    assert_eq!(prog.plate_rows(), 50, "10 groups x 5 counts");
+    assert_eq!(prog.n_obs(), count_obs_sites(m, &tvi));
+
+    #[cfg(feature = "telemetry")]
+    {
+        let theta: Vec<f64> = tvi.unconstrained.iter().map(|x| x * 0.3).collect();
+        let mut g = vec![0.0; prog.dim()];
+        let _ = metrics::take_local();
+        let lp = prog.logp_grad_into(&tvi, &theta, Context::Default, &mut g);
+        assert!(lp.is_finite());
+        let snap = metrics::take_local();
+        assert_eq!(
+            snap.get(Counter::PlateKernelCalls),
+            10,
+            "one row-batched kernel call per plate per pass"
+        );
+    }
+
+    // tall flagship: per-row raw-logp glue defeats plate grouping, but
+    // the flat slot-indexed replay still promotes — and the window-aware
+    // body's `skip_obs` brackets must not double-count sites
+    let bm = logreg_tall_n(19, 64, 4);
+    let m = bm.model.as_ref();
+    let mut rng = Xoshiro256pp::seed_from_u64(19);
+    let tvi = init_typed(m, &mut rng);
+    let prog = try_compile(m, &tvi).expect("logreg_tall is static");
+    assert_eq!(prog.n_plates(), 0, "raw-logp rows do not plate");
+    assert_eq!(prog.n_obs(), count_obs_sites(m, &tvi));
+    assert_eq!(prog.n_obs(), 64, "one site per row, none double-counted");
+}
+
+/// Index-set minibatching: contiguous sets reproduce the equivalent
+/// `Subsample` windows bitwise, and a strided (genuinely non-contiguous)
+/// partition keeps the estimator exactly unbiased.
+#[test]
+fn index_set_minibatching_matches_windows_and_stays_unbiased() {
+    let bm = logreg_n(31, 48, 5);
+    let m = bm.model.as_ref();
+    let mut rng = Xoshiro256pp::seed_from_u64(31);
+    let tvi = init_typed(m, &mut rng);
+    let theta: Vec<f64> = (0..5).map(|i| 0.15 * (i as f64) - 0.3).collect();
+
+    // contiguous index sets ≡ the equivalent Subsample windows, bitwise
+    let sets: Vec<Vec<u32>> = (0..3u32)
+        .map(|k| (k * 16..(k + 1) * 16).collect())
+        .collect();
+    let target = MinibatchTarget::with_index_sets(m, &tvi, sets, Backend::ReverseFused);
+    assert_eq!(target.n_blocks(), 3);
+    for k in 0..3 {
+        let ld = target.block(k);
+        assert!(matches!(ld.ctx, Context::SubsampleIdx { .. }));
+        let mut g_i = vec![0.0; 5];
+        let lp_i = ld.logp_grad_into(&theta, &mut g_i);
+        let ctx = Context::Subsample {
+            lo: k * 16,
+            hi: (k + 1) * 16,
+            scale: 3.0,
+        };
+        let mut g_w = vec![0.0; 5];
+        let lp_w = typed_grad_fused_into(m, &tvi, &theta, ctx, &mut g_w);
+        assert_bits_eq(&format!("block {k} vs window"), lp_i, lp_w, &g_i, &g_w);
+    }
+
+    // strided partition: the block average recovers the full-data
+    // gradient exactly (the unbiasedness contract of windowed blocks)
+    let strided: Vec<Vec<u32>> = (0..3u32)
+        .map(|r| (0..48u32).filter(|i| i % 3 == r).collect())
+        .collect();
+    let target = MinibatchTarget::with_index_sets(m, &tvi, strided, Backend::ReverseFused);
+    assert_eq!(target.n_blocks(), 3);
+    let (lp_full, g_full) = typed_grad_fused(m, &tvi, &theta, Context::Default);
+    assert!(lp_full.is_finite());
+    let mut lp_avg = 0.0;
+    let mut g_avg = vec![0.0; 5];
+    for k in 0..3 {
+        let mut g = vec![0.0; 5];
+        let lp = target.block(k).logp_grad_into(&theta, &mut g);
+        lp_avg += lp / 3.0;
+        for (a, b) in g_avg.iter_mut().zip(&g) {
+            *a += b / 3.0;
+        }
+    }
+    assert!(
+        (lp_avg - lp_full).abs() < 1e-9,
+        "E[subsampled logp] {lp_avg} vs full {lp_full}"
+    );
+    for (i, (a, b)) in g_avg.iter().zip(&g_full).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-9 * (1.0 + b.abs()),
+            "E[grad][{i}]: {a} vs {b}"
+        );
+    }
+}
