@@ -1721,6 +1721,319 @@ pub fn vi_rows_to_json(rows: &[ViRow], cfg: &ViBenchConfig) -> String {
     out
 }
 
+// ================================================================= serve
+
+/// Configuration for the posterior-serving benchmark: cached-query
+/// latency on the conjugate Normal–Normal stream, streaming-update
+/// economics on the Kalman stream.
+pub struct ServeBenchConfig {
+    pub seed: u64,
+    /// Timed cached posterior-predictive queries.
+    pub n_queries: usize,
+    /// SMC particles (= posterior draws per artifact).
+    pub particles: usize,
+    /// Normal–Normal stream length.
+    pub t_init: usize,
+    /// Kalman stream length before the streaming update…
+    pub t_kalman: usize,
+    /// …and observations appended by it. Small on purpose: the whole
+    /// point of streaming is that the update pays for the appended steps,
+    /// not the history.
+    pub t_stream: usize,
+    pub threads: usize,
+}
+
+impl Default for ServeBenchConfig {
+    fn default() -> Self {
+        Self {
+            seed: 42,
+            n_queries: 400,
+            particles: 192,
+            t_init: 40,
+            t_kalman: 160,
+            t_stream: 2,
+            threads: 1,
+        }
+    }
+}
+
+/// One serving measurement (flat metric rows — the serving story is a
+/// handful of scalars, not a per-model matrix).
+pub struct ServeRow {
+    pub metric: String,
+    pub value: f64,
+    pub unit: String,
+}
+
+fn serve_row(metric: &str, value: f64, unit: &str) -> ServeRow {
+    ServeRow {
+        metric: metric.into(),
+        value,
+        unit: unit.into(),
+    }
+}
+
+/// Run the serving benchmark and collect metric rows.
+pub fn run_serve_bench(cfg: &ServeBenchConfig) -> Vec<ServeRow> {
+    use crate::serve::query::ServeQuery;
+    use crate::serve::update::UpdateKind;
+    use crate::serve::{
+        build_stream_model, kalman_oracle, simulate_kalman, FitSpec, ServeConfig, ServeHandle,
+    };
+    use crate::util::rng::Rng as _;
+    use std::time::Instant;
+
+    let mut rows = Vec::new();
+    let handle = ServeHandle::new(ServeConfig {
+        cache_capacity: 8,
+        threads: cfg.threads,
+        // the bench times the reweighting fast path; the rejuvenation
+        // sweep's correctness is the streaming tests' job
+        rejuvenation_moves: 0,
+        ..ServeConfig::default()
+    });
+    let spec = FitSpec::smc(cfg.particles, cfg.seed);
+
+    // ---- cached-query serving on the Normal–Normal stream
+    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+    let y0: Vec<f64> = (0..cfg.t_init).map(|_| 0.7 + rng.normal()).collect();
+    handle
+        .init_stream("normal_normal", y0)
+        .expect("init normal_normal stream");
+    // a rotating set of held-out records keeps the queries distinct
+    // without letting allocation noise into the timings
+    let y_new: Vec<Vec<f64>> = (0..8)
+        .map(|_| (0..5).map(|_| 0.7 + rng.normal()).collect())
+        .collect();
+
+    eprintln!("bench: serve / fit-per-query baseline");
+    let reps = 3usize;
+    let t0 = Instant::now();
+    for k in 0..reps {
+        // a stateless system refits for every question — drop the cache
+        // so each query pays the full inference cost
+        handle.invalidate("normal_normal");
+        let v = handle
+            .query(
+                "normal_normal",
+                &spec,
+                &ServeQuery::LogPredictive {
+                    y: y_new[k % y_new.len()].clone(),
+                },
+            )
+            .expect("fit-per-query");
+        assert!(v.is_finite(), "fit-per-query predictive {v}");
+    }
+    let fit_per_query = t0.elapsed().as_secs_f64() / reps as f64;
+
+    eprintln!("bench: serve / cached-query latency ({} queries)", cfg.n_queries);
+    // warm the artifact, then time queries that all hit it
+    let _ = handle
+        .query(
+            "normal_normal",
+            &spec,
+            &ServeQuery::LogPredictive { y: y_new[0].clone() },
+        )
+        .expect("warm fit");
+    let mut lat = Vec::with_capacity(cfg.n_queries);
+    let t_all = Instant::now();
+    for i in 0..cfg.n_queries {
+        let q = ServeQuery::LogPredictive {
+            y: y_new[i % y_new.len()].clone(),
+        };
+        let t = Instant::now();
+        let v = handle.query("normal_normal", &spec, &q).expect("cached query");
+        lat.push(t.elapsed().as_secs_f64());
+        std::hint::black_box(v);
+    }
+    let total = t_all.elapsed().as_secs_f64();
+    lat.sort_by(f64::total_cmp);
+    let pct = |p: usize| lat[((lat.len() - 1) * p) / 100];
+    let cached_mean = total / cfg.n_queries as f64;
+
+    // summary statistics are a column fold — the microsecond tier
+    let mut sum_lat = Vec::with_capacity(cfg.n_queries);
+    for _ in 0..cfg.n_queries {
+        let t = Instant::now();
+        let v = handle
+            .query("normal_normal", &spec, &ServeQuery::Mean { param: "m".into() })
+            .expect("summary query");
+        sum_lat.push(t.elapsed().as_secs_f64());
+        std::hint::black_box(v);
+    }
+    sum_lat.sort_by(f64::total_cmp);
+
+    // batched predictive: all queries in one sweep over the draw matrix
+    let batch: Vec<Vec<f64>> = (0..64).map(|i| y_new[i % y_new.len()].clone()).collect();
+    let t = Instant::now();
+    let vs = handle
+        .predictive_batch("normal_normal", &spec, &batch)
+        .expect("batched predictive");
+    let batch_per_query = t.elapsed().as_secs_f64() / vs.len() as f64;
+
+    let stats = handle.stats();
+    rows.push(serve_row("queries_per_sec", cfg.n_queries as f64 / total, "1/s"));
+    rows.push(serve_row("cached_query_p50", pct(50) * 1e6, "us"));
+    rows.push(serve_row("cached_query_p99", pct(99) * 1e6, "us"));
+    rows.push(serve_row("cached_query_mean", cached_mean * 1e6, "us"));
+    rows.push(serve_row("summary_query_p50", sum_lat[(sum_lat.len() - 1) / 2] * 1e6, "us"));
+    rows.push(serve_row("batched_query_mean", batch_per_query * 1e6, "us"));
+    rows.push(serve_row("fit_per_query", fit_per_query * 1e6, "us"));
+    rows.push(serve_row("cached_speedup", fit_per_query / cached_mean, "x"));
+    rows.push(serve_row("cache_hit_rate", stats.hit_rate, "frac"));
+
+    // ---- streaming update vs from-scratch refit on the Kalman stream
+    eprintln!("bench: serve / kalman streaming update");
+    let y = simulate_kalman(cfg.t_kalman + cfg.t_stream, cfg.seed ^ 0xD5);
+    let (y_init, y_tail) = y.split_at(cfg.t_kalman);
+    handle
+        .init_stream("kalman", y_init.to_vec())
+        .expect("init kalman stream");
+    let _ = handle.fit("kalman", &spec).expect("initial kalman fit");
+    let t = Instant::now();
+    let rep = handle
+        .update_stream("kalman", y_tail, &spec)
+        .expect("streaming update");
+    let update_secs = t.elapsed().as_secs_f64();
+
+    // the stateless baseline: refit the whole extended record from
+    // scratch and rebuild the servable artifact pieces
+    let smc = crate::inference::Smc {
+        n_particles: cfg.particles,
+        threads: cfg.threads,
+        ..crate::inference::Smc::default()
+    };
+    let full = build_stream_model("kalman", &y).expect("kalman model");
+    let refit_seed = cfg.seed ^ 0x51;
+    let t = Instant::now();
+    let refit = smc.run(full.as_ref(), refit_seed);
+    let refit_chain = smc.chain_from_result(full.as_ref(), &refit, refit_seed);
+    let refit_maps = crate::query::chain_param_maps(&refit_chain).expect("param maps");
+    let refit_secs = t.elapsed().as_secs_f64();
+    std::hint::black_box(refit_maps.len());
+
+    // accuracy at matched work: last-state posterior mean vs the exact
+    // RTS smoother (the filtering tail is what SMC estimates best; early
+    // states degenerate for streamed and batch clouds alike)
+    let (_, smoothed) = kalman_oracle(&y);
+    let last = format!("h[{}]", y.len() - 1);
+    let stream_mean = handle
+        .query("kalman", &spec, &ServeQuery::Mean { param: last.clone() })
+        .expect("streamed mean");
+    let refit_mean = refit_chain.mean(&last).expect("refit mean");
+    let truth = *smoothed.last().expect("smoother means");
+
+    rows.push(serve_row("stream_update_secs", update_secs, "s"));
+    rows.push(serve_row("refit_secs", refit_secs, "s"));
+    rows.push(serve_row("stream_speedup", refit_secs / update_secs, "x"));
+    rows.push(serve_row(
+        "stream_streamed",
+        if rep.kind == UpdateKind::Streamed { 1.0 } else { 0.0 },
+        "bool",
+    ));
+    rows.push(serve_row("stream_update_ess", rep.ess, "particles"));
+    rows.push(serve_row("stream_evidence_increment", rep.increment, "nats"));
+    rows.push(serve_row("stream_mean_err", (stream_mean - truth).abs(), "abs"));
+    rows.push(serve_row("refit_mean_err", (refit_mean - truth).abs(), "abs"));
+    rows
+}
+
+/// Human-readable serving table.
+pub fn render_serve_table(rows: &[ServeRow]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "serve — cached posterior queries vs fit-per-query, streaming update vs refit\n"
+    );
+    let _ = writeln!(out, "{:<26} {:>14} {:<9}", "metric", "value", "unit");
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{:<26} {:>14} {:<9}",
+            r.metric,
+            if r.value.is_finite() {
+                format!("{:.3}", r.value)
+            } else {
+                "-".into()
+            },
+            r.unit
+        );
+    }
+    out
+}
+
+/// Serialize serve rows as the coordinator's `BENCH_SERVE.json` payload.
+pub fn serve_rows_to_json(rows: &[ServeRow], cfg: &ServeBenchConfig) -> String {
+    let mut out = String::new();
+    let _ = write!(
+        out,
+        "{{\n  \"bench\": \"serve\",\n  \"seed\": {},\n  \"n_queries\": {},\n  \
+         \"particles\": {},\n  \"rows\": [\n",
+        cfg.seed, cfg.n_queries, cfg.particles
+    );
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"metric\": \"{}\", \"value\": {}, \"unit\": \"{}\"}}",
+            r.metric,
+            json_num(r.value),
+            r.unit
+        );
+        out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// The serve CI gate: cached queries must beat fit-per-query by
+/// `min_cached`×, the streaming update must beat the from-scratch refit
+/// by `min_stream`× *via the streamed path* (a fallback refit "winning"
+/// is a failure), the cache must actually be hitting, latencies must be
+/// finite, and both posteriors must sit on the exact smoother answer.
+/// Returns one message per violation (empty = gate passed).
+pub fn check_serve_gates(rows: &[ServeRow], min_cached: f64, min_stream: f64) -> Vec<String> {
+    let mut bad = Vec::new();
+    let need = |bad: &mut Vec<String>, name: &str| -> f64 {
+        match rows.iter().find(|r| r.metric == name) {
+            Some(r) => r.value,
+            None => {
+                bad.push(format!("missing metric row {name:?}"));
+                f64::NAN
+            }
+        }
+    };
+    let cached = need(&mut bad, "cached_speedup");
+    if !(cached >= min_cached) {
+        bad.push(format!(
+            "cached_speedup {cached:.1}x below required {min_cached:.1}x"
+        ));
+    }
+    let stream = need(&mut bad, "stream_speedup");
+    if !(stream >= min_stream) {
+        bad.push(format!(
+            "stream_speedup {stream:.2}x below required {min_stream:.2}x"
+        ));
+    }
+    if need(&mut bad, "stream_streamed") != 1.0 {
+        bad.push("streaming update fell back to a refit".into());
+    }
+    let hit = need(&mut bad, "cache_hit_rate");
+    if !(hit >= 0.5) {
+        bad.push(format!("cache_hit_rate {hit:.3} below 0.5"));
+    }
+    let p99 = need(&mut bad, "cached_query_p99");
+    if !p99.is_finite() {
+        bad.push("cached_query_p99 is not finite".into());
+    }
+    for name in ["stream_mean_err", "refit_mean_err"] {
+        let err = need(&mut bad, name);
+        if !(err <= 0.5) {
+            bad.push(format!("{name} {err:.3} exceeds 0.5 vs the exact smoother"));
+        }
+    }
+    bad
+}
+
 /// One `(model, label, secs)` measurement inside a bench-history row —
 /// the minimal shape all four bench families share, so a plotting script
 /// can track any benchmark over time from one file.

@@ -4,12 +4,13 @@
 use std::sync::Arc;
 
 use crate::bench::{
-    append_history, batch_rows_to_json, check_static_speedups, grad_rows_to_json, history_line,
-    render_batch_table, render_grad_table, render_smc_table, render_static_table, render_table1,
-    render_vi_table, run_batch_bench, run_grad_bench, run_smc_bench, run_static_bench, run_table1,
-    run_vi_bench, smc_rows_to_json, static_rows_to_json, table1_cells_to_json, vi_rows_to_json,
-    BatchBenchConfig, BenchBackend, GradBenchConfig, HistoryEntry, SmcBenchConfig, SmcPath,
-    StaticBenchConfig, Table1Config, ViBenchConfig,
+    append_history, batch_rows_to_json, check_serve_gates, check_static_speedups,
+    grad_rows_to_json, history_line, render_batch_table, render_grad_table, render_serve_table,
+    render_smc_table, render_static_table, render_table1, render_vi_table, run_batch_bench,
+    run_grad_bench, run_serve_bench, run_smc_bench, run_static_bench, run_table1, run_vi_bench,
+    serve_rows_to_json, smc_rows_to_json, static_rows_to_json, table1_cells_to_json,
+    vi_rows_to_json, BatchBenchConfig, BenchBackend, GradBenchConfig, HistoryEntry,
+    ServeBenchConfig, SmcBenchConfig, SmcPath, StaticBenchConfig, Table1Config, ViBenchConfig,
 };
 use crate::chain::{Chain, MultiChain};
 use crate::gradient::{Backend, LogDensity, NativeDensity};
@@ -42,9 +43,13 @@ pub fn usage() -> String {
             ),
             (
                 "bench",
-                "bench table1 [--models a,b] [--backends x,y] [--iters N] [--reps R] [--out FILE.json] | bench smc [--models a,b] [--particles N] [--threads T] [--path typed|boxed|both] [--full] [--out FILE.json] | bench grad [--models a,b] [--engines fused,tape,forward] [--full] [--out FILE.json] | bench vi [--models a,b] [--families meanfield,fullrank] [--draws N] [--max-iters N] [--minibatch B] [--stl] [--full] [--out FILE.json] | bench batch [--models a,b] [--lanes 1,4,16,64] [--assert-speedup R] [--full] [--out FILE.json] | bench static [--models a,b] [--assert-speedup R] [--full] [--out FILE.json]  (static: compiled structure replay vs the dynamic fused walk; --assert-speedup R requires >= Rx on logreg_tall and break-even on every other promoted model; any target: --history appends one JSONL row to BENCH_HISTORY.jsonl)",
+                "bench table1 [--models a,b] [--backends x,y] [--iters N] [--reps R] [--out FILE.json] | bench smc [--models a,b] [--particles N] [--threads T] [--path typed|boxed|both] [--full] [--out FILE.json] | bench grad [--models a,b] [--engines fused,tape,forward] [--full] [--out FILE.json] | bench vi [--models a,b] [--families meanfield,fullrank] [--draws N] [--max-iters N] [--minibatch B] [--stl] [--full] [--out FILE.json] | bench batch [--models a,b] [--lanes 1,4,16,64] [--assert-speedup R] [--full] [--out FILE.json] | bench static [--models a,b] [--assert-speedup R] [--full] [--out FILE.json] | bench serve [--queries N] [--particles N] [--seed S] [--assert-cached R] [--assert-stream R] [--out FILE.json]  (static: compiled structure replay vs the dynamic fused walk; --assert-speedup R requires >= Rx on logreg_tall and break-even on every other promoted model; serve: cached posterior queries vs fit-per-query + streaming SMC update vs from-scratch refit, --assert-cached/--assert-stream gate the two speedups; any target: --history appends one JSONL row to BENCH_HISTORY.jsonl)",
             ),
             ("query", "evaluate a probability query string (paper §3.5)"),
+            (
+                "serve",
+                "run the posterior-serving daemon: --addr HOST:PORT (default 127.0.0.1:8787) [--workers N] [--cache N] [--threads T]  (line-delimited JSON requests: init, fit, query, update, invalidate, stats, shutdown; see rust/src/serve/server.rs for the protocol)",
+            ),
         ],
     }
     .render()
@@ -73,6 +78,7 @@ pub fn run(argv: Vec<String>) -> i32 {
         "sample" => cmd_sample(&args),
         "bench" => cmd_bench(&args),
         "query" => cmd_query(&args),
+        "serve" => cmd_serve(&args),
         "help" | "--help" | "-h" => {
             print!("{}", usage());
             0
@@ -719,9 +725,100 @@ fn cmd_bench(args: &Args) -> i32 {
                 }
             }
         }
+        "serve" => {
+            let mut cfg = ServeBenchConfig::default();
+            cfg.seed = args.get_parse_or("seed", cfg.seed).unwrap_or(cfg.seed);
+            cfg.n_queries = args
+                .get_parse_or("queries", cfg.n_queries)
+                .unwrap_or(cfg.n_queries);
+            cfg.particles = args
+                .get_parse_or("particles", cfg.particles)
+                .unwrap_or(cfg.particles);
+            cfg.threads = args
+                .get_parse_or("threads", cfg.threads)
+                .unwrap_or(cfg.threads);
+            let min_cached = match args.get_parse::<f64>("assert-cached") {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            };
+            let min_stream = match args.get_parse::<f64>("assert-stream") {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            };
+            let rows = run_serve_bench(&cfg);
+            println!("{}", render_serve_table(&rows));
+            // CI tripwire: serving must beat refitting — cached queries
+            // ≥ R× faster than fit-per-query, streaming update ≥ R×
+            // faster than a from-scratch refit, and both still accurate
+            if min_cached.is_some() || min_stream.is_some() {
+                let bad = check_serve_gates(
+                    &rows,
+                    min_cached.unwrap_or(1.0),
+                    min_stream.unwrap_or(1.0),
+                );
+                for msg in &bad {
+                    eprintln!("assert-serve: {msg}");
+                }
+                if !bad.is_empty() {
+                    return 1;
+                }
+                println!(
+                    "assert-serve: gates met (cached >= {:.1}x, stream >= {:.1}x)",
+                    min_cached.unwrap_or(1.0),
+                    min_stream.unwrap_or(1.0)
+                );
+            }
+            if args.flag("history") {
+                let wanted = [
+                    ("fit_per_query", "normal_normal"),
+                    ("cached_query_mean", "normal_normal"),
+                    ("stream_update_secs", "kalman"),
+                    ("refit_secs", "kalman"),
+                ];
+                let mut entries = Vec::new();
+                for (metric, model) in wanted {
+                    if let Some(r) = rows.iter().find(|r| r.metric == metric) {
+                        // microsecond rows go into history in seconds,
+                        // like every other bench target
+                        let secs = if r.unit == "us" {
+                            r.value * 1e-6
+                        } else {
+                            r.value
+                        };
+                        entries.push(HistoryEntry {
+                            model: model.to_string(),
+                            label: metric.to_string(),
+                            secs,
+                        });
+                    }
+                }
+                let rc = bench_history("serve", cfg.seed, entries);
+                if rc != 0 {
+                    return rc;
+                }
+            }
+            let out_path = args.get_or("out", "BENCH_SERVE.json").to_string();
+            let json = serve_rows_to_json(&rows, &cfg);
+            match std::fs::write(&out_path, &json) {
+                Ok(()) => {
+                    println!("wrote {out_path}");
+                    0
+                }
+                Err(e) => {
+                    eprintln!("failed to write {out_path}: {e}");
+                    1
+                }
+            }
+        }
         other => {
             eprintln!(
-                "unknown bench target {other:?} (try: table1, smc, grad, vi, batch, static)"
+                "unknown bench target {other:?} (try: table1, smc, grad, vi, batch, static, serve)"
             );
             2
         }
@@ -809,6 +906,46 @@ fn cmd_query(args: &Args) -> i32 {
     }
 }
 
+fn cmd_serve(args: &Args) -> i32 {
+    let addr = args.get_or("addr", "127.0.0.1:8787").to_string();
+    let workers = args.get_parse_or("workers", 4usize).unwrap_or(4);
+    let mut cfg = crate::serve::ServeConfig::default();
+    cfg.cache_capacity = args
+        .get_parse_or("cache", cfg.cache_capacity)
+        .unwrap_or(cfg.cache_capacity);
+    cfg.threads = args
+        .get_parse_or("threads", cfg.threads)
+        .unwrap_or(cfg.threads);
+    let handle = std::sync::Arc::new(crate::serve::ServeHandle::new(cfg));
+    let server = match crate::serve::server::Server::bind(&addr, handle, workers) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("failed to bind {addr}: {e}");
+            return 1;
+        }
+    };
+    match server.local_addr() {
+        Ok(a) => println!(
+            "serving on {a} ({workers} workers; line-delimited JSON, \
+             {{\"op\":\"shutdown\"}} to stop)"
+        ),
+        Err(e) => {
+            eprintln!("failed to read bound address: {e}");
+            return 1;
+        }
+    }
+    match server.run() {
+        Ok(()) => {
+            println!("server drained");
+            0
+        }
+        Err(e) => {
+            eprintln!("server error: {e}");
+            1
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -816,7 +953,7 @@ mod tests {
     #[test]
     fn usage_mentions_all_commands() {
         let u = usage();
-        for c in ["list", "sample", "bench", "query", "info"] {
+        for c in ["list", "sample", "bench", "query", "info", "serve"] {
             assert!(u.contains(c), "{c}");
         }
     }

@@ -15,7 +15,7 @@
 //! - [`FnDensity`] — closures; used for the hand-coded Stan-baseline
 //!   models in [`crate::stanlike`] and for tests.
 
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
 use crate::context::Context;
 use crate::model::compiled::{self, StaticProgram};
@@ -125,8 +125,17 @@ pub struct NativeDensity<'a> {
     pub backend: Backend,
     /// Lazily-compiled static program. `None` inside the cell records a
     /// declined compilation (dynamic model, or [`Self::fused_dynamic`]).
-    compiled: OnceLock<Option<StaticProgram>>,
+    /// The cell sits behind an `Arc` so densities built over one model
+    /// artifact from many worker threads can share exactly one compile
+    /// ([`Self::fused_shared`]); `OnceLock::get_or_init` makes the first
+    /// concurrent evaluation race-safe — one thread records, everyone
+    /// else blocks and serves the same program.
+    compiled: CompiledCell,
 }
+
+/// The shareable compile cell: one static compilation per model artifact,
+/// however many per-thread [`NativeDensity`] views exist over it.
+pub type CompiledCell = Arc<OnceLock<Option<StaticProgram>>>;
 
 impl<'a> NativeDensity<'a> {
     pub fn new(model: &'a dyn Model, tvi: &'a TypedVarInfo, backend: Backend) -> Self {
@@ -135,7 +144,7 @@ impl<'a> NativeDensity<'a> {
             tvi,
             ctx: Context::Default,
             backend,
-            compiled: OnceLock::new(),
+            compiled: Arc::new(OnceLock::new()),
         }
     }
 
@@ -143,6 +152,28 @@ impl<'a> NativeDensity<'a> {
     /// static-structure compilation attempted on first use.
     pub fn fused(model: &'a dyn Model, tvi: &'a TypedVarInfo) -> Self {
         Self::new(model, tvi, Backend::ReverseFused)
+    }
+
+    /// A fresh compile cell for [`Self::fused_shared`].
+    pub fn shared_cell() -> CompiledCell {
+        Arc::new(OnceLock::new())
+    }
+
+    /// [`Self::fused`] over a caller-owned compile cell. Every density
+    /// built over the same cell — e.g. one per server worker thread, all
+    /// viewing one cached model artifact — shares a single static
+    /// compilation: exactly one `static_promotions` increment and one
+    /// recording walk regardless of how many threads hit their first
+    /// evaluation simultaneously, with every thread serving the identical
+    /// program (bitwise-identical results by construction).
+    pub fn fused_shared(model: &'a dyn Model, tvi: &'a TypedVarInfo, cell: CompiledCell) -> Self {
+        Self {
+            model,
+            tvi,
+            ctx: Context::Default,
+            backend: Backend::ReverseFused,
+            compiled: cell,
+        }
     }
 
     /// Arena-fused reverse mode with static compilation disabled: every

@@ -13,9 +13,10 @@ use crate::chain::SamplerStats;
 use crate::context::Context;
 use crate::dist::{bijector, Domain};
 use crate::model::{
-    init_trace, typed_grad_forward, typed_grad_fused_masked_into, typed_grad_reverse, typed_logp,
-    Model,
+    compiled, init_trace, typed_grad_forward, typed_grad_fused_masked_into, typed_grad_reverse,
+    typed_logp, typed_logp_fused, Model,
 };
+use crate::obs::metrics::{self, Counter};
 use crate::particle::Resampler;
 use crate::util::rng::Rng;
 use crate::value::Value;
@@ -159,7 +160,26 @@ impl Gibbs {
         let t_start = std::time::Instant::now();
         let mut tvi = tvi0.clone();
         let mut theta = tvi.unconstrained.clone();
-        let mut lp = typed_logp(model, &tvi, &theta, Context::Default);
+        // Full-joint evaluations ride the compiled static replay when the
+        // model proves structurally stable (one compile per run). The
+        // discrete-trace gate matters here: enumeration blocks mutate
+        // `tvi.discrete` mid-sweep, and any value off the compile-time
+        // snapshot demotes — to the *fused* dynamic walk, the arithmetic
+        // family the compiled program is bitwise-validated against, so a
+        // sweep never mixes lp families. Models that do not promote keep
+        // the historical plain-walk evaluation.
+        let prog = compiled::try_compile(model, &tvi);
+        let joint_lp = |tvi: &TypedVarInfo, theta: &[f64]| -> f64 {
+            match &prog {
+                Some(p) if p.matches_discrete(tvi) => p.logp(tvi, theta, Context::Default),
+                Some(_) => {
+                    metrics::inc(Counter::StaticDemotions);
+                    typed_logp_fused(model, tvi, theta, Context::Default)
+                }
+                None => typed_logp(model, tvi, theta, Context::Default),
+            }
+        };
+        let mut lp = joint_lp(&tvi, &theta);
         assert!(lp.is_finite(), "Gibbs initialized at zero-probability point");
 
         // Resolve blocks to coordinate index sets / discrete slots.
@@ -237,7 +257,7 @@ impl Gibbs {
                         for &c in coords {
                             prop[c] += scale * rng.normal();
                         }
-                        let lp_prop = typed_logp(model, &tvi, &prop, Context::Default);
+                        let lp_prop = joint_lp(&tvi, &prop);
                         proposals += 1.0;
                         if lp_prop.is_finite() && rng.uniform_pos().ln() < lp_prop - lp {
                             theta = prop;
@@ -376,7 +396,7 @@ impl Gibbs {
                             .copy_from_slice(&buf);
                     }
                 }
-                lp = typed_logp(model, &tvi, &theta, Context::Default);
+                lp = joint_lp(&tvi, &theta);
                 proposals += 1.0;
                 accepts += 1.0; // CSMC selection always yields a valid draw
             }
@@ -393,7 +413,7 @@ impl Gibbs {
                     let mut logw = Vec::with_capacity(support.len());
                     for &k in &support {
                         tvi.discrete[slot.disc_offset] = k;
-                        logw.push(typed_logp(model, &tvi, &theta, Context::Default));
+                        logw.push(joint_lp(&tvi, &theta));
                     }
                     let z = crate::util::math::log_sum_exp(&logw);
                     let probs: Vec<f64> = logw.iter().map(|&l| (l - z).exp()).collect();

@@ -206,7 +206,7 @@ impl Smc {
         // specialize after the first full run: every particle must share
         // one layout, otherwise the model is dynamic across particles and
         // the sweep stays boxed
-        let mut state = if self.use_typed {
+        let state = if self.use_typed {
             match TypedCloud::promote(&boxed) {
                 Some((cloud, template)) => {
                     metrics::inc(Counter::TypedPromotions);
@@ -217,15 +217,74 @@ impl Smc {
         } else {
             SmcCloud::Boxed(boxed)
         };
+        self.filter_from(model, state, seed, t0)
+    }
+
+    /// Continue a finished (or partially consumed) filter over a model
+    /// whose observation record has been **extended** — streaming Bayesian
+    /// updating. The cloud's particles, weights and accumulated
+    /// log-evidence carry over; the filter re-probes the model for its new
+    /// observation horizon and consumes only the appended steps, so each
+    /// step's cost is independent of how much history the cloud already
+    /// absorbed. New latent variables introduced by the extension (e.g.
+    /// fresh states of a state-space model) demote a typed cloud to the
+    /// boxed path exactly like a mid-sweep structure change; models whose
+    /// latent set is fixed stay typed. `SmcResult.log_evidence` is the
+    /// *total* running evidence (old value + the increment from the new
+    /// observations). Deterministic in `(cloud, seed)` — pass a distinct
+    /// seed per update batch so the fresh steps get fresh RNG streams.
+    pub fn resume(&self, model: &dyn Model, mut state: SmcCloud, seed: u64) -> SmcResult {
+        let t0 = Instant::now();
+        let n_obs_new = match &state {
+            SmcCloud::Typed { template, .. } => count_observes(model, template),
+            SmcCloud::Boxed(c) => count_observes(model, &c.particles[0].state),
+        };
+        match &mut state {
+            SmcCloud::Typed { cloud, .. } => {
+                assert!(
+                    n_obs_new >= cloud.step,
+                    "streaming update shrank the observation record ({} < {})",
+                    n_obs_new,
+                    cloud.step
+                );
+                cloud.n_obs = n_obs_new;
+            }
+            SmcCloud::Boxed(c) => {
+                assert!(
+                    n_obs_new >= c.step,
+                    "streaming update shrank the observation record ({} < {})",
+                    n_obs_new,
+                    c.step
+                );
+                c.n_obs = n_obs_new;
+            }
+        }
+        self.filter_from(model, state, seed, t0)
+    }
+
+    /// The shared filter loop: consume observation steps from the cloud's
+    /// current position to its horizon. Both [`Smc::run`] (from 0) and
+    /// [`Smc::resume`] (from wherever the cached cloud stopped) end here.
+    fn filter_from(
+        &self,
+        model: &dyn Model,
+        mut state: SmcCloud,
+        seed: u64,
+        t0: Instant,
+    ) -> SmcResult {
         // master stream: resampling decisions only (serial → deterministic)
         let mut master =
             Xoshiro256pp::seed_from_u64(particle_seed(seed, usize::MAX / 2, 0x5EED));
         let n_obs = state.n_obs();
-        let mut ess_trace = Vec::with_capacity(n_obs);
+        let from = match &state {
+            SmcCloud::Typed { cloud, .. } => cloud.step,
+            SmcCloud::Boxed(c) => c.step,
+        };
+        let mut ess_trace = Vec::with_capacity(n_obs - from);
         let mut resamples = 0usize;
         let mut typed_steps = 0usize;
         let mut demotions = 0usize;
-        for t in 0..n_obs {
+        for t in from..n_obs {
             state = match state {
                 SmcCloud::Typed { mut cloud, template } => {
                     // one K-lane replay for the whole population; `None`
@@ -290,6 +349,14 @@ impl Smc {
     /// `stats.log_evidence` carries the evidence estimate.
     pub fn sample_chain(&self, model: &dyn Model, seed: u64) -> Chain {
         let result = self.run(model, seed);
+        self.chain_from_result(model, &result, seed)
+    }
+
+    /// Convert a finished filter into an equal-weight [`Chain`] without
+    /// consuming the cloud — the serving runtime keeps the [`SmcResult`]
+    /// (for streaming updates) *and* drains draws from it. Same resample
+    /// + full-trace-scoring pass [`Smc::sample_chain`] performs.
+    pub fn chain_from_result(&self, model: &dyn Model, result: &SmcResult, seed: u64) -> Chain {
         let t0 = Instant::now();
         let mut master =
             Xoshiro256pp::seed_from_u64(particle_seed(seed, usize::MAX / 2, 0xCA1A));
@@ -297,6 +364,20 @@ impl Smc {
         let ancestors = self
             .resampler
             .ancestors(&weights, self.n_particles, &mut master);
+
+        // full-trace scoring of a typed cloud rides the compiled static
+        // replay when the model proves stable (one compile per chain; the
+        // particles share one layout, so a program compiled against any
+        // particle serves them all). Particles whose discrete sub-trace
+        // drifted from the compile snapshot demote per score — to the
+        // fused dynamic walk, the family the program is bitwise-validated
+        // against. Models that do not promote keep the replay walk.
+        let prog = match &result.cloud {
+            SmcCloud::Typed { cloud, .. } => {
+                crate::model::compiled::try_compile(model, &cloud.particles[0].state)
+            }
+            SmcCloud::Boxed(_) => None,
+        };
 
         // resampling duplicates ancestors heavily on peaked posteriors:
         // replay/convert each unique ancestor once, push its row k times
@@ -306,20 +387,43 @@ impl Smc {
             if !rows.contains_key(&a) {
                 let (names, row, lp) = match &result.cloud {
                     SmcCloud::Typed { cloud, .. } => {
-                        // full-joint evaluation directly over the flat
-                        // buffers (nothing flagged → pure replay; Default
-                        // context scores priors + likelihood, matching
-                        // `sample_run` bit for bit)
-                        let mut state = cloud.particles[a].state.clone();
-                        let mut rng0 = Xoshiro256pp::seed_from_u64(0);
-                        let rep = TypedReplayExecutor::run(
-                            model,
-                            &mut rng0,
-                            &mut state,
-                            Context::Default,
-                            ReplayScope::Unscoped,
-                        );
-                        (state.column_names(), state.row(), rep.delta_logw)
+                        let state = &cloud.particles[a].state;
+                        match &prog {
+                            Some(p) if p.matches_discrete(state) => {
+                                // flat compiled scoring straight off the
+                                // particle's buffers — `unconstrained` is
+                                // kept in sync by every replay write
+                                let lp = p.logp(state, &state.unconstrained, Context::Default);
+                                (state.column_names(), state.row(), lp)
+                            }
+                            Some(_) => {
+                                metrics::inc(Counter::StaticDemotions);
+                                let lp = crate::model::typed_logp_fused(
+                                    model,
+                                    state,
+                                    &state.unconstrained,
+                                    Context::Default,
+                                );
+                                (state.column_names(), state.row(), lp)
+                            }
+                            None => {
+                                // full-joint evaluation directly over the
+                                // flat buffers (nothing flagged → pure
+                                // replay; Default context scores priors +
+                                // likelihood, matching `sample_run` bit
+                                // for bit)
+                                let mut state = state.clone();
+                                let mut rng0 = Xoshiro256pp::seed_from_u64(0);
+                                let rep = TypedReplayExecutor::run(
+                                    model,
+                                    &mut rng0,
+                                    &mut state,
+                                    Context::Default,
+                                    ReplayScope::Unscoped,
+                                );
+                                (state.column_names(), state.row(), rep.delta_logw)
+                            }
+                        }
                     }
                     SmcCloud::Boxed(c) => {
                         let mut trace = c.particles[a].state.clone();

@@ -35,6 +35,7 @@ pub mod obs;
 pub mod particle;
 pub mod query;
 pub mod runtime;
+pub mod serve;
 pub mod stanlike;
 pub mod util;
 pub mod value;

@@ -254,6 +254,23 @@ impl StaticProgram {
         lp
     }
 
+    /// Compiled log-density only — the value side of
+    /// [`Self::logp_grad_into`] without the backward sweep. Bitwise equal
+    /// to [`super::typed_logp_fused`] (and to the value returned by
+    /// `logp_grad_into`) at any servable context, which lets full-joint
+    /// consumers (Gibbs proposals, SMC trace scoring) ride the flat
+    /// replay while staying bit-consistent with their dynamic fallback.
+    pub fn logp(&self, tvi: &TypedVarInfo, theta: &[f64], ctx: Context) -> f64 {
+        debug_assert!(servable(ctx), "compiled program served a non-servable context");
+        metrics::inc(Counter::LogpEvals);
+        arena::begin(theta.len());
+        let (lp, _stmts) = self.replay(tvi, theta, ctx);
+        if !lp.is_finite() {
+            metrics::inc(Counter::RejectedEvals);
+        }
+        lp
+    }
+
     /// Run the program: glue opcodes through the interpreter, items
     /// through the same fused kernels and accumulator arithmetic as the
     /// dynamic executors. Returns `(logp, tilde statements)`.

@@ -192,6 +192,30 @@ pub fn typed_logp(
     exec.logp()
 }
 
+/// Log-density through the typed layout on the **fused** arithmetic
+/// family (`TypedFusedExecutor` with the analytic `logpdf_adj` kernels),
+/// skipping the backward sweep. Bitwise equal to the value side of
+/// [`typed_grad_fused_into`] — and therefore to a compiled
+/// [`compiled::StaticProgram`] replay wherever one validated — which is
+/// what full-joint consumers (Gibbs, SMC trace scoring) need when they
+/// mix plain evaluations with compiled ones inside a single run.
+pub fn typed_logp_fused(
+    model: &dyn Model,
+    tvi: &crate::varinfo::TypedVarInfo,
+    theta: &[f64],
+    ctx: Context,
+) -> f64 {
+    metrics::inc(Counter::LogpEvals);
+    crate::ad::arena::begin(theta.len());
+    let mut exec = executors::TypedFusedExecutor::new(tvi, theta, ctx);
+    model.eval_arena(&mut exec);
+    let (lp, _stmts) = exec.finish();
+    if !lp.is_finite() {
+        metrics::inc(Counter::RejectedEvals);
+    }
+    lp
+}
+
 /// Gradient via forward duals through the typed layout (n passes).
 pub fn typed_grad_forward(
     model: &dyn Model,

@@ -66,10 +66,22 @@ pub enum Counter {
     StaticDemotions,
     /// Row-batched plate kernel calls made by compiled replays.
     PlateKernelCalls,
+    /// Posterior queries answered by the serving runtime.
+    ServeQueries,
+    /// Serving-cache lookups satisfied by a cached artifact.
+    ServeCacheHits,
+    /// Serving-cache lookups that required a fresh fit.
+    ServeCacheMisses,
+    /// Streaming Bayesian updates applied to a cached SMC cloud.
+    ServeStreamUpdates,
+    /// Streaming updates abandoned for a full refit (ESS collapse).
+    ServeEssRefits,
+    /// Refits warm-started from a cached posterior (draws or VI params).
+    ServeWarmStarts,
 }
 
 /// Number of counters in the catalog.
-pub const N_COUNTERS: usize = 19;
+pub const N_COUNTERS: usize = 25;
 
 /// Every counter, in [`Counter`] discriminant order.
 pub const ALL_COUNTERS: [Counter; N_COUNTERS] = [
@@ -92,6 +104,12 @@ pub const ALL_COUNTERS: [Counter; N_COUNTERS] = [
     Counter::StaticPromotions,
     Counter::StaticDemotions,
     Counter::PlateKernelCalls,
+    Counter::ServeQueries,
+    Counter::ServeCacheHits,
+    Counter::ServeCacheMisses,
+    Counter::ServeStreamUpdates,
+    Counter::ServeEssRefits,
+    Counter::ServeWarmStarts,
 ];
 
 impl Counter {
@@ -117,6 +135,12 @@ impl Counter {
             Counter::StaticPromotions => "static_promotions",
             Counter::StaticDemotions => "static_demotions",
             Counter::PlateKernelCalls => "plate_kernel_calls",
+            Counter::ServeQueries => "serve_queries",
+            Counter::ServeCacheHits => "serve_cache_hits",
+            Counter::ServeCacheMisses => "serve_cache_misses",
+            Counter::ServeStreamUpdates => "serve_stream_updates",
+            Counter::ServeEssRefits => "serve_ess_refits",
+            Counter::ServeWarmStarts => "serve_warm_starts",
         }
     }
 }

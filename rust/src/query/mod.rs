@@ -300,7 +300,15 @@ fn bindings_to_map(bs: &Bindings) -> Result<HashMap<VarName, Value>, String> {
     Ok(map)
 }
 
-fn run_fixed(model: &dyn Model, params: &HashMap<VarName, Value>, ctx: Context) -> Result<f64, String> {
+/// Evaluate the model's context-weighted log-density with every parameter
+/// pinned to `params` — the fixed-binding executor behind [`eval_query`],
+/// exposed for callers (the serving runtime) that precompute their own
+/// parameter maps instead of going through the query-string front end.
+pub fn run_fixed(
+    model: &dyn Model,
+    params: &HashMap<VarName, Value>,
+    ctx: Context,
+) -> Result<f64, String> {
     let mut exec = FixedValuesExecutor::new(params, ctx);
     model.eval_f64(&mut exec);
     if let Some(m) = exec.missing {
@@ -309,6 +317,59 @@ fn run_fixed(model: &dyn Model, params: &HashMap<VarName, Value>, ctx: Context) 
         ));
     }
     Ok(exec.acc.total())
+}
+
+/// Rebuild one parameter map per chain draw: columns are grouped back
+/// into scalar/vector values by symbol (`w[0]`, `w[1]` → `w = [·, ·]`),
+/// one `HashMap` per row, in row order. Posterior-predictive evaluation
+/// is then a [`run_fixed`] per map. Computing the grouping **once** per
+/// chain — rather than per query row — is what the serving runtime's
+/// microsecond-latency path relies on.
+pub fn chain_param_maps(
+    chain: &crate::chain::Chain,
+) -> Result<Vec<HashMap<VarName, Value>>, String> {
+    // group the column layout once: sym → sorted (idx, column) pairs
+    let mut by_sym: Vec<(String, Vec<(usize, usize)>)> = Vec::new();
+    let mut sym_index: HashMap<String, usize> = HashMap::new();
+    for (ci, name) in chain.names().iter().enumerate() {
+        let (sym, idx) = match name.split_once('[') {
+            Some((s, rest)) => {
+                let idx: usize = rest
+                    .trim_end_matches(']')
+                    .parse()
+                    .map_err(|_| format!("bad chain column {name}"))?;
+                (s.to_string(), idx)
+            }
+            None => (name.clone(), 0),
+        };
+        let si = *sym_index.entry(sym.clone()).or_insert_with(|| {
+            by_sym.push((sym, Vec::new()));
+            by_sym.len() - 1
+        });
+        by_sym[si].1.push((idx, ci));
+    }
+    for (_, elems) in by_sym.iter_mut() {
+        elems.sort_by_key(|(i, _)| *i);
+    }
+    let vector_syms: Vec<bool> = by_sym
+        .iter()
+        .map(|(sym, elems)| elems.len() > 1 || chain.names().contains(&format!("{sym}[0]")))
+        .collect();
+
+    let mut maps = Vec::with_capacity(chain.len());
+    for row in chain.rows() {
+        let mut params = HashMap::with_capacity(by_sym.len());
+        for ((sym, elems), &is_vec) in by_sym.iter().zip(&vector_syms) {
+            let value = if is_vec {
+                Value::Vec(elems.iter().map(|&(_, ci)| row[ci]).collect())
+            } else {
+                Value::F64(row[elems[0].1])
+            };
+            params.insert(VarName::new(sym), value);
+        }
+        maps.push(params);
+    }
+    Ok(maps)
 }
 
 /// Evaluate a query against the registry (and a chain for posterior
@@ -334,38 +395,10 @@ pub fn eval_query(
     if q.use_chain {
         // Posterior predictive: average the LHS likelihood over chain draws.
         let chain = chain.ok_or_else(|| "query says 'chain' but none was passed".to_string())?;
-        let mut log_terms = Vec::with_capacity(chain.len());
-        for row_idx in 0..chain.len() {
-            let mut params = HashMap::new();
-            // Group chain columns back into vector/scalar values by symbol.
-            let mut by_sym: HashMap<String, Vec<(usize, f64)>> = HashMap::new();
-            for (ci, name) in chain.names().iter().enumerate() {
-                let (sym, idx) = match name.split_once('[') {
-                    Some((s, rest)) => {
-                        let idx: usize = rest
-                            .trim_end_matches(']')
-                            .parse()
-                            .map_err(|_| format!("bad chain column {name}"))?;
-                        (s.to_string(), idx)
-                    }
-                    None => (name.clone(), 0),
-                };
-                by_sym
-                    .entry(sym)
-                    .or_default()
-                    .push((idx, chain.rows()[row_idx][ci]));
-            }
-            for (sym, mut elems) in by_sym {
-                elems.sort_by_key(|(i, _)| *i);
-                let vals: Vec<f64> = elems.iter().map(|(_, v)| *v).collect();
-                let value = if vals.len() == 1 && !chain.names().contains(&format!("{sym}[0]")) {
-                    Value::F64(vals[0])
-                } else {
-                    Value::Vec(vals)
-                };
-                params.insert(VarName::new(&sym), value);
-            }
-            log_terms.push(run_fixed(model.as_ref(), &params, Context::Likelihood)?);
+        let maps = chain_param_maps(chain)?;
+        let mut log_terms = Vec::with_capacity(maps.len());
+        for params in &maps {
+            log_terms.push(run_fixed(model.as_ref(), params, Context::Likelihood)?);
         }
         // log mean exp
         let lme = crate::util::math::log_sum_exp(&log_terms) - (log_terms.len() as f64).ln();

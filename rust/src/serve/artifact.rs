@@ -1,0 +1,281 @@
+//! Fitted-posterior artifacts and the LRU cache that serves them.
+//!
+//! A fit is expensive (seconds); a query against its draws is cheap
+//! (microseconds). The cache turns that asymmetry into a serving story:
+//! each artifact is fitted once per `(model, data-version, sampler-config)`
+//! key, wrapped in an `Arc`, and every concurrent query thread reads the
+//! same immutable draw matrix. Streaming updates insert a new version and
+//! invalidate the stale ones; capacity pressure evicts the least recently
+//! used artifact.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::chain::Chain;
+use crate::inference::smc::SmcResult;
+use crate::obs::metrics::{self, Counter};
+use crate::value::Value;
+use crate::varname::VarName;
+use crate::vi::ViFit;
+
+/// What a fitted posterior is cached under. `data_version` advances on
+/// every streaming update, so an artifact never silently serves stale
+/// data — a new version is a new key.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ArtifactKey {
+    pub model: String,
+    pub data_version: u64,
+    /// Sampler-config label (`FitSpec::label()`): same model + data under
+    /// a different sampler or budget is a different artifact.
+    pub sampler: String,
+}
+
+/// The sampler-specific state kept alongside the draws — whatever the
+/// *next* fit of the same stream can reuse.
+pub enum Posterior {
+    /// MCMC draws: the chain is the whole story (plus `warm_theta`).
+    Draws,
+    /// Variational fit: kept for warm-starting the next fit (`mu`, `eta`).
+    Vi(ViFit),
+    /// SMC cloud: kept for streaming updates. `Mutex<Option<..>>` so an
+    /// update can *take* the cloud (resuming consumes it) while queries
+    /// keep reading the immutable chain next to it.
+    Smc(Mutex<Option<SmcResult>>),
+}
+
+/// One fitted posterior, immutable once inserted (the SMC cloud's slot is
+/// the deliberate exception). Queries touch `chain` / `param_maps` only.
+pub struct Artifact {
+    pub key: ArtifactKey,
+    /// Equal-weight constrained-space draws.
+    pub chain: Chain,
+    /// One parameter map per draw, grouped once at fit time
+    /// ([`crate::query::chain_param_maps`]) — the reason a
+    /// posterior-predictive query is a plain replay per draw instead of a
+    /// per-query chain traversal.
+    pub param_maps: Vec<HashMap<VarName, Value>>,
+    pub posterior: Posterior,
+    /// Unconstrained warm-start point for the next fit of this stream
+    /// (NUTS: last draw; ADVI: variational mean).
+    pub warm_theta: Option<Vec<f64>>,
+    /// Wall-clock seconds the fit took — the denominator of every
+    /// "serving is N× cheaper" claim.
+    pub fit_secs: f64,
+}
+
+struct Entry {
+    artifact: Arc<Artifact>,
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<ArtifactKey, Entry>,
+    tick: u64,
+}
+
+/// Thread-safe LRU cache of fitted posteriors. All bookkeeping sits
+/// behind one mutex held for map operations only — fits and queries run
+/// outside it.
+pub struct ArtifactCache {
+    capacity: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl ArtifactCache {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity: capacity.max(1),
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                tick: 0,
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up an artifact, counting the hit/miss and refreshing LRU age.
+    pub fn get(&self, key: &ArtifactKey) -> Option<Arc<Artifact>> {
+        let mut inner = self.inner.lock().expect("artifact cache poisoned");
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.get_mut(key) {
+            Some(e) => {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                metrics::inc(Counter::ServeCacheHits);
+                Some(Arc::clone(&e.artifact))
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                metrics::inc(Counter::ServeCacheMisses);
+                None
+            }
+        }
+    }
+
+    /// Insert (or replace) an artifact, evicting the least recently used
+    /// entry while over capacity. Returns the shared handle.
+    pub fn insert(&self, artifact: Artifact) -> Arc<Artifact> {
+        let key = artifact.key.clone();
+        let artifact = Arc::new(artifact);
+        let mut inner = self.inner.lock().expect("artifact cache poisoned");
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.map.insert(
+            key,
+            Entry {
+                artifact: Arc::clone(&artifact),
+                last_used: tick,
+            },
+        );
+        while inner.map.len() > self.capacity {
+            let oldest = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty map has a minimum");
+            inner.map.remove(&oldest);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        artifact
+    }
+
+    /// Explicitly drop one artifact. Returns whether it existed.
+    pub fn invalidate(&self, key: &ArtifactKey) -> bool {
+        let mut inner = self.inner.lock().expect("artifact cache poisoned");
+        inner.map.remove(key).is_some()
+    }
+
+    /// Drop every artifact of `model` (all versions, all samplers).
+    /// Returns how many were removed.
+    pub fn invalidate_model(&self, model: &str) -> usize {
+        let mut inner = self.inner.lock().expect("artifact cache poisoned");
+        let before = inner.map.len();
+        inner.map.retain(|k, _| k.model != model);
+        before - inner.map.len()
+    }
+
+    /// Drop artifacts of `model` older than `keep_version` — the
+    /// streaming updater's cleanup after publishing a new version.
+    pub fn invalidate_stale(&self, model: &str, keep_version: u64) -> usize {
+        let mut inner = self.inner.lock().expect("artifact cache poisoned");
+        let before = inner.map.len();
+        inner
+            .map
+            .retain(|k, _| k.model != model || k.data_version >= keep_version);
+        before - inner.map.len()
+    }
+
+    /// The newest artifact of `model` whose sampler label starts with
+    /// `sampler_prefix` — the warm-start donor for the next fit. Does not
+    /// count as a hit or miss (it is not a serving lookup).
+    pub fn latest_for(&self, model: &str, sampler_prefix: &str) -> Option<Arc<Artifact>> {
+        let inner = self.inner.lock().expect("artifact cache poisoned");
+        inner
+            .map
+            .iter()
+            .filter(|(k, _)| k.model == model && k.sampler.starts_with(sampler_prefix))
+            .max_by_key(|(k, _)| k.data_version)
+            .map(|(_, e)| Arc::clone(&e.artifact))
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("artifact cache poisoned").map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// hits / (hits + misses); 1.0 when nothing was looked up yet.
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits() as f64;
+        let m = self.misses() as f64;
+        if h + m == 0.0 {
+            1.0
+        } else {
+            h / (h + m)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy(model: &str, version: u64) -> Artifact {
+        Artifact {
+            key: ArtifactKey {
+                model: model.into(),
+                data_version: version,
+                sampler: "smc-test".into(),
+            },
+            chain: Chain::new(vec!["m".into()]),
+            param_maps: Vec::new(),
+            posterior: Posterior::Draws,
+            warm_theta: None,
+            fit_secs: 0.0,
+        }
+    }
+
+    #[test]
+    fn lru_evicts_oldest_untouched_entry() {
+        let cache = ArtifactCache::new(2);
+        cache.insert(dummy("a", 1));
+        cache.insert(dummy("b", 1));
+        // touch `a` so `b` is the LRU victim
+        assert!(cache.get(&dummy("a", 1).key).is_some());
+        cache.insert(dummy("c", 1));
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(&dummy("a", 1).key).is_some());
+        assert!(cache.get(&dummy("b", 1).key).is_none());
+        assert!(cache.get(&dummy("c", 1).key).is_some());
+        assert_eq!(cache.evictions(), 1);
+    }
+
+    #[test]
+    fn invalidation_by_key_model_and_version() {
+        let cache = ArtifactCache::new(8);
+        cache.insert(dummy("a", 1));
+        cache.insert(dummy("a", 2));
+        cache.insert(dummy("b", 1));
+        assert!(cache.invalidate(&dummy("b", 1).key));
+        assert!(!cache.invalidate(&dummy("b", 1).key));
+        assert_eq!(cache.invalidate_stale("a", 2), 1);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.invalidate_model("a"), 1);
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn latest_for_picks_newest_version() {
+        let cache = ArtifactCache::new(8);
+        cache.insert(dummy("a", 1));
+        cache.insert(dummy("a", 3));
+        cache.insert(dummy("a", 2));
+        let got = cache.latest_for("a", "smc").expect("artifact");
+        assert_eq!(got.key.data_version, 3);
+        assert!(cache.latest_for("a", "nuts").is_none());
+        // warm-start lookups do not perturb serving hit-rate accounting
+        assert_eq!(cache.hits() + cache.misses(), 0);
+    }
+}

@@ -1,0 +1,629 @@
+//! The posterior-serving runtime: fit once, answer millions of queries,
+//! update streams in place.
+//!
+//! Classic PPL usage is batch-shaped — fit, summarize, exit — which
+//! throws the fitted posterior away and pays the full inference cost for
+//! every question. This module keeps fitted posteriors *resident*:
+//!
+//! - [`artifact`] — an LRU cache of fitted posteriors keyed by
+//!   `(model, data-version, sampler-config)`, each held behind an `Arc`
+//!   so concurrent query threads share one immutable draw matrix.
+//! - [`query`] — posterior-predictive / summary / quantile evaluation
+//!   against cached draws through the [`crate::query`] fixed-values
+//!   executor, with parameter maps precomputed at fit time so a query is
+//!   microseconds, not a refit.
+//! - [`update`] — streaming Bayesian updating: new observations resume
+//!   the cached SMC cloud ([`crate::inference::smc::Smc::resume`]) with a
+//!   resample–move rejuvenation sweep, falling back to a full refit when
+//!   the ESS collapses; NUTS/ADVI refits warm-start from the cached
+//!   posterior instead of a cold init.
+//! - [`server`] — a line-delimited JSON protocol over
+//!   `std::net::TcpListener` with a worker pool, plus the in-process
+//!   [`ServeHandle`] API that tests, the benchmark and the coordinator
+//!   drive directly.
+//!
+//! Every serving event feeds the [`crate::obs::metrics`] counters
+//! (`serve_queries`, `serve_cache_hits/misses`, `serve_stream_updates`,
+//! `serve_ess_refits`, `serve_warm_starts`), so METRICS.json and the
+//! bench report tell the cache story in numbers.
+
+pub mod artifact;
+pub mod query;
+pub mod server;
+pub mod update;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::gradient::NativeDensity;
+use crate::inference::smc::Smc;
+use crate::inference::{raw_to_chain, Nuts};
+use crate::model::macros::c;
+use crate::model::{init_typed, Model};
+use crate::obs::metrics::{self, Counter};
+use crate::util::rng::{Rng as _, Xoshiro256pp};
+use crate::vi::Advi;
+
+use artifact::{Artifact, ArtifactCache, ArtifactKey, Posterior};
+use query::ServeQuery;
+use update::{streaming_update, UpdateKind, UpdateOutcome};
+
+// ---------------------------------------------------------------- models
+
+crate::model! {
+    /// Conjugate Normal–Normal stream: `m ~ N(0, 1)`, `y_t ~ N(m, 1)` —
+    /// closed-form posterior and evidence, the correctness anchor of the
+    /// streaming tests. Its latent set is fixed, so streaming updates
+    /// keep the typed fast path.
+    pub StreamNormal {
+        y: Vec<f64>,
+    }
+    fn body<T>(this, api) {
+        let m = crate::tilde!(api, m ~ Normal(c(0.0), c(1.0)));
+        for &yi in &this.y {
+            crate::obs!(api, yi => Normal(m, c(1.0)));
+        }
+    }
+}
+
+crate::model! {
+    /// Linear-Gaussian state-space stream (Kalman-solvable):
+    /// `h_0 ~ N(0, 1)`, `h_t ~ N(φ h_{t−1}, q)`, `y_t ~ N(h_t, r)`.
+    /// Each appended observation introduces a fresh latent `h[t]`, so a
+    /// streaming update exercises the dynamic-structure path (typed cloud
+    /// demotes to boxed, exactly like a mid-sweep structure change).
+    pub StreamKalman {
+        y: Vec<f64>,
+        phi: f64,
+        q: f64,
+        r: f64,
+    }
+    fn body<T>(this, api) {
+        let mut h_prev = crate::tilde!(api, h[0] ~ Normal(c(0.0), c(1.0)));
+        crate::obs!(api, this.y[0] => Normal(h_prev, c(this.r)));
+        for t in 1..this.y.len() {
+            let h_t = crate::tilde!(api, h[t] ~ Normal(h_prev * this.phi, c(this.q)));
+            crate::obs!(api, this.y[t] => Normal(h_t, c(this.r)));
+            h_prev = h_t;
+        }
+    }
+}
+
+/// The serve-side Kalman hyperparameters (shared with the bench oracle).
+/// `q` and `r` are standard deviations, matching the model body.
+pub const KALMAN_PHI: f64 = 0.8;
+pub const KALMAN_Q: f64 = 0.6;
+pub const KALMAN_R: f64 = 0.5;
+
+/// Stream-model names the runtime can build from an observation vector.
+pub const STREAM_MODELS: [&str; 2] = ["normal_normal", "kalman"];
+
+/// Instantiate a stream model over `y`. Every servable model is a
+/// function of its observation record — that is what makes "append
+/// observations, rebuild, resume" a well-defined update.
+pub fn build_stream_model(name: &str, y: &[f64]) -> Result<Box<dyn Model>, String> {
+    if y.is_empty() {
+        return Err("stream has no observations".into());
+    }
+    match name {
+        "normal_normal" => Ok(Box::new(StreamNormal { y: y.to_vec() })),
+        "kalman" => Ok(Box::new(StreamKalman {
+            y: y.to_vec(),
+            phi: KALMAN_PHI,
+            q: KALMAN_Q,
+            r: KALMAN_R,
+        })),
+        other => Err(format!(
+            "unknown stream model {other:?} (known: {})",
+            STREAM_MODELS.join(", ")
+        )),
+    }
+}
+
+/// Simulate a ground-truth observation record from the Kalman stream's
+/// generative process (bench + test fixture).
+pub fn simulate_kalman(t: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut h = rng.normal();
+    let mut y = Vec::with_capacity(t);
+    y.push(h + KALMAN_R * rng.normal());
+    for _ in 1..t {
+        h = KALMAN_PHI * h + KALMAN_Q * rng.normal();
+        y.push(h + KALMAN_R * rng.normal());
+    }
+    y
+}
+
+/// Exact Kalman filter log-likelihood + RTS smoother means for the
+/// [`StreamKalman`] stream — the ground truth its SMC posterior (batch
+/// or streamed) is judged against.
+pub fn kalman_oracle(y: &[f64]) -> (f64, Vec<f64>) {
+    let t_len = y.len();
+    let (q2, r2) = (KALMAN_Q * KALMAN_Q, KALMAN_R * KALMAN_R);
+    let phi = KALMAN_PHI;
+    let mut mf = Vec::with_capacity(t_len); // filtered means
+    let mut pf = Vec::with_capacity(t_len); // filtered variances
+    let mut mp = Vec::with_capacity(t_len); // predicted means
+    let mut pp = Vec::with_capacity(t_len); // predicted variances
+    let mut ll = 0.0;
+    for t in 0..t_len {
+        let (m_pred, p_pred) = if t == 0 {
+            (0.0, 1.0)
+        } else {
+            (phi * mf[t - 1], phi * phi * pf[t - 1] + q2)
+        };
+        mp.push(m_pred);
+        pp.push(p_pred);
+        let s = p_pred + r2;
+        ll += crate::dist::Normal::new(m_pred, s.sqrt()).logpdf(y[t]);
+        let k = p_pred / s;
+        mf.push(m_pred + k * (y[t] - m_pred));
+        pf.push((1.0 - k) * p_pred);
+    }
+    // RTS smoother
+    let mut ms = vec![0.0; t_len];
+    ms[t_len - 1] = mf[t_len - 1];
+    for t in (0..t_len - 1).rev() {
+        let c = pf[t] * phi / pp[t + 1];
+        ms[t] = mf[t] + c * (ms[t + 1] - mp[t + 1]);
+    }
+    (ll, ms)
+}
+
+/// Sequential conjugate log-evidence of the [`StreamNormal`] stream —
+/// each term is one prefix's predictive density, so prefix differences
+/// are exactly the evidence increments a streaming update reports.
+pub fn conjugate_log_evidence(y: &[f64]) -> f64 {
+    let (mut mu, mut tau2) = (0.0f64, 1.0f64);
+    let mut lz = 0.0;
+    for &yt in y {
+        let pv = 1.0 + tau2;
+        lz += crate::dist::Normal::new(mu, pv.sqrt()).logpdf(yt);
+        let k = tau2 / pv;
+        mu += k * (yt - mu);
+        tau2 *= 1.0 - k;
+    }
+    lz
+}
+
+// ------------------------------------------------------------------ spec
+
+/// A sampler configuration request — part of the artifact cache key, so
+/// the same stream fitted under two budgets is two artifacts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FitSpec {
+    /// `"smc"` (streamable), `"nuts"` or `"advi"` (warm-startable).
+    pub sampler: String,
+    /// Posterior draws (NUTS/ADVI; SMC draws = `particles`).
+    pub draws: usize,
+    /// Warmup iterations (NUTS).
+    pub warmup: usize,
+    /// Particle count (SMC).
+    pub particles: usize,
+    pub seed: u64,
+}
+
+impl Default for FitSpec {
+    fn default() -> Self {
+        Self {
+            sampler: "smc".into(),
+            draws: 500,
+            warmup: 200,
+            particles: 256,
+            seed: 42,
+        }
+    }
+}
+
+impl FitSpec {
+    pub fn smc(particles: usize, seed: u64) -> Self {
+        Self {
+            sampler: "smc".into(),
+            particles,
+            seed,
+            ..Self::default()
+        }
+    }
+
+    /// The cache-key sampler label. Starts with the sampler name, so
+    /// warm-start donor lookups can prefix-match across budgets.
+    pub fn label(&self) -> String {
+        format!(
+            "{}-d{}-w{}-p{}-s{}",
+            self.sampler, self.draws, self.warmup, self.particles, self.seed
+        )
+    }
+}
+
+// ---------------------------------------------------------------- handle
+
+/// Runtime configuration for a [`ServeHandle`].
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Artifact-cache capacity (LRU beyond this).
+    pub cache_capacity: usize,
+    /// SMC propagation threads.
+    pub threads: usize,
+    /// Streaming updates refit from scratch when the resumed cloud's
+    /// ESS lands below `refit_ess_frac · N`.
+    pub refit_ess_frac: f64,
+    /// Resample–move particles re-drawn per streaming update (0 = off;
+    /// only applies when the resumed filter actually resampled).
+    pub rejuvenation_moves: usize,
+    /// Warm-start NUTS/ADVI refits from the cached posterior.
+    pub warm_start: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            cache_capacity: 32,
+            threads: 1,
+            refit_ess_frac: 0.1,
+            rejuvenation_moves: 1,
+            warm_start: true,
+        }
+    }
+}
+
+struct StreamState {
+    y: Vec<f64>,
+    version: u64,
+}
+
+/// Aggregate serving statistics (the `stats` protocol op and the bench
+/// report read these).
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    pub artifacts: usize,
+    pub queries: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub hit_rate: f64,
+    pub evictions: u64,
+    pub stream_updates: u64,
+    pub ess_refits: u64,
+    pub warm_starts: u64,
+}
+
+/// One streaming-update report as the handle returns it (protocol and
+/// bench serialize from this).
+pub struct UpdateReport {
+    pub kind: UpdateKind,
+    pub data_version: u64,
+    pub n_obs: usize,
+    pub log_evidence: f64,
+    pub increment: f64,
+    pub ess: f64,
+    pub rejuvenated: usize,
+    pub wall_secs: f64,
+}
+
+/// The in-process serving runtime: stream data registry + artifact cache
+/// + the fit/query/update entry points. `Arc<ServeHandle>` is what the
+/// TCP worker pool shares; tests and the bench call it directly.
+pub struct ServeHandle {
+    pub cfg: ServeConfig,
+    pub cache: ArtifactCache,
+    streams: Mutex<HashMap<String, StreamState>>,
+    queries: AtomicU64,
+    stream_updates: AtomicU64,
+    ess_refits: AtomicU64,
+    warm_starts: AtomicU64,
+}
+
+impl ServeHandle {
+    pub fn new(cfg: ServeConfig) -> Self {
+        let cache = ArtifactCache::new(cfg.cache_capacity);
+        Self {
+            cfg,
+            cache,
+            streams: Mutex::new(HashMap::new()),
+            queries: AtomicU64::new(0),
+            stream_updates: AtomicU64::new(0),
+            ess_refits: AtomicU64::new(0),
+            warm_starts: AtomicU64::new(0),
+        }
+    }
+
+    /// Seed (or reset) a stream's observation record. Resetting bumps the
+    /// data version and drops every cached artifact of the model.
+    pub fn init_stream(&self, model: &str, y: Vec<f64>) -> Result<u64, String> {
+        // validate the model name + data before registering anything
+        build_stream_model(model, &y)?;
+        let mut streams = self.streams.lock().expect("stream registry poisoned");
+        let version = match streams.get(model) {
+            Some(s) => s.version + 1,
+            None => 1,
+        };
+        streams.insert(model.to_string(), StreamState { y, version });
+        drop(streams);
+        self.cache.invalidate_model(model);
+        Ok(version)
+    }
+
+    /// Current observation record + data version of a stream.
+    pub fn stream_data(&self, model: &str) -> Result<(Vec<f64>, u64), String> {
+        let streams = self.streams.lock().expect("stream registry poisoned");
+        streams
+            .get(model)
+            .map(|s| (s.y.clone(), s.version))
+            .ok_or_else(|| format!("stream {model:?} has no data (send an init first)"))
+    }
+
+    /// Fit-or-fetch: returns the artifact for the stream's *current* data
+    /// under `spec`, fitting only on a cache miss. The bool is
+    /// "served from cache".
+    pub fn fit(&self, model: &str, spec: &FitSpec) -> Result<(Arc<Artifact>, bool), String> {
+        let (y, version) = self.stream_data(model)?;
+        let key = ArtifactKey {
+            model: model.to_string(),
+            data_version: version,
+            sampler: spec.label(),
+        };
+        if let Some(art) = self.cache.get(&key) {
+            return Ok((art, true));
+        }
+        // concurrent misses on the same key may fit twice; both fits are
+        // deterministic in the spec seed, so last-insert-wins is benign
+        let art = self.fit_artifact(key, &y, spec)?;
+        Ok((self.cache.insert(art), false))
+    }
+
+    /// Answer one query against the stream's cached posterior (fitting
+    /// it first if needed).
+    pub fn query(&self, model: &str, spec: &FitSpec, q: &ServeQuery) -> Result<f64, String> {
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        metrics::inc(Counter::ServeQueries);
+        let (art, _) = self.fit(model, spec)?;
+        match q {
+            ServeQuery::LogPredictive { y } => {
+                let m = build_stream_model(model, y)?;
+                query::log_predictive(&art, m.as_ref())
+            }
+            other => query::summary(&art, other),
+        }
+    }
+
+    /// Batched posterior-predictive: all of `ys` answered in one sweep
+    /// over the draw matrix (the concurrent-server batching path).
+    pub fn predictive_batch(
+        &self,
+        model: &str,
+        spec: &FitSpec,
+        ys: &[Vec<f64>],
+    ) -> Result<Vec<f64>, String> {
+        self.queries.fetch_add(ys.len() as u64, Ordering::Relaxed);
+        metrics::add(Counter::ServeQueries, ys.len() as u64);
+        let (art, _) = self.fit(model, spec)?;
+        let models = ys
+            .iter()
+            .map(|y| build_stream_model(model, y))
+            .collect::<Result<Vec<_>, _>>()?;
+        query::log_predictive_batch(&art, &models)
+    }
+
+    /// Append observations to a stream and update its posterior in place:
+    /// resume the cached SMC cloud over the new steps (full refit when no
+    /// SMC artifact is cached or the ESS collapses), publish the new
+    /// artifact under the bumped data version, and drop stale versions.
+    pub fn update_stream(
+        &self,
+        model: &str,
+        new_y: &[f64],
+        spec: &FitSpec,
+    ) -> Result<UpdateReport, String> {
+        if new_y.is_empty() {
+            return Err("update carries no observations".into());
+        }
+        if spec.sampler != "smc" {
+            return Err(format!(
+                "streaming updates need an SMC posterior (got {:?})",
+                spec.sampler
+            ));
+        }
+        // bump the record under the lock; fits below run outside it
+        let (y, old_version, version) = {
+            let mut streams = self.streams.lock().expect("stream registry poisoned");
+            let s = streams
+                .get_mut(model)
+                .ok_or_else(|| format!("stream {model:?} has no data (send an init first)"))?;
+            s.y.extend_from_slice(new_y);
+            let old_version = s.version;
+            s.version += 1;
+            (s.y.clone(), old_version, s.version)
+        };
+        let extended = build_stream_model(model, &y)?;
+        let smc = self.smc_config(spec);
+        // distinct seed per update batch: fresh RNG streams for the new
+        // steps, deterministic for a fixed (seed, version) sequence
+        let update_seed = spec.seed ^ version.wrapping_mul(0xA24B_AED4_963E_E407);
+
+        let prev_key = ArtifactKey {
+            model: model.to_string(),
+            data_version: old_version,
+            sampler: spec.label(),
+        };
+        let prev_cloud = self.cache.get(&prev_key).and_then(|art| {
+            match &art.posterior {
+                // take() the cloud: queries keep hitting the chain the
+                // artifact retains; the cloud itself moves on
+                Posterior::Smc(slot) => slot.lock().expect("cloud slot poisoned").take(),
+                _ => None,
+            }
+        });
+
+        let (outcome, fit_secs) = match prev_cloud {
+            Some(prev) => {
+                let t0 = Instant::now();
+                let out = streaming_update(
+                    &smc,
+                    extended.as_ref(),
+                    prev,
+                    update_seed,
+                    self.cfg.refit_ess_frac,
+                    self.cfg.rejuvenation_moves,
+                );
+                match out.kind {
+                    UpdateKind::Streamed => {
+                        self.stream_updates.fetch_add(1, Ordering::Relaxed);
+                    }
+                    UpdateKind::EssRefit => {
+                        self.ess_refits.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                let secs = t0.elapsed().as_secs_f64();
+                (out, secs)
+            }
+            None => {
+                // nothing cached to resume — full fit on the extended
+                // record (a miss, but it still counts as a refit: the
+                // stream paid batch cost for this update)
+                self.ess_refits.fetch_add(1, Ordering::Relaxed);
+                metrics::inc(Counter::ServeEssRefits);
+                let t0 = Instant::now();
+                let result = smc.run(extended.as_ref(), update_seed);
+                let increment = result.log_evidence;
+                (
+                    UpdateOutcome {
+                        kind: UpdateKind::EssRefit,
+                        increment,
+                        result,
+                        rejuvenated: 0,
+                        wall_secs: t0.elapsed().as_secs_f64(),
+                    },
+                    t0.elapsed().as_secs_f64(),
+                )
+            }
+        };
+
+        let report = UpdateReport {
+            kind: outcome.kind,
+            data_version: version,
+            n_obs: y.len(),
+            log_evidence: outcome.result.log_evidence,
+            increment: outcome.increment,
+            ess: outcome.result.cloud.ess(),
+            rejuvenated: outcome.rejuvenated,
+            wall_secs: outcome.wall_secs,
+        };
+
+        // publish the updated posterior under the new version…
+        let chain = smc.chain_from_result(extended.as_ref(), &outcome.result, update_seed);
+        let param_maps = crate::query::chain_param_maps(&chain)?;
+        self.cache.insert(Artifact {
+            key: ArtifactKey {
+                model: model.to_string(),
+                data_version: version,
+                sampler: spec.label(),
+            },
+            chain,
+            param_maps,
+            posterior: Posterior::Smc(Mutex::new(Some(outcome.result))),
+            warm_theta: None,
+            fit_secs,
+        });
+        // …and retire every stale version of this stream
+        self.cache.invalidate_stale(model, version);
+        Ok(report)
+    }
+
+    /// Drop every cached artifact of `model`. Returns how many.
+    pub fn invalidate(&self, model: &str) -> usize {
+        self.cache.invalidate_model(model)
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            artifacts: self.cache.len(),
+            queries: self.queries.load(Ordering::Relaxed),
+            cache_hits: self.cache.hits(),
+            cache_misses: self.cache.misses(),
+            hit_rate: self.cache.hit_rate(),
+            evictions: self.cache.evictions(),
+            stream_updates: self.stream_updates.load(Ordering::Relaxed),
+            ess_refits: self.ess_refits.load(Ordering::Relaxed),
+            warm_starts: self.warm_starts.load(Ordering::Relaxed),
+        }
+    }
+
+    fn smc_config(&self, spec: &FitSpec) -> Smc {
+        Smc {
+            n_particles: spec.particles,
+            threads: self.cfg.threads,
+            ..Smc::default()
+        }
+    }
+
+    /// Run the actual fit for a cache miss. NUTS/ADVI warm-start from the
+    /// newest cached artifact of the same stream + sampler family.
+    fn fit_artifact(&self, key: ArtifactKey, y: &[f64], spec: &FitSpec) -> Result<Artifact, String> {
+        let model = build_stream_model(&key.model, y)?;
+        let donor = if self.cfg.warm_start {
+            self.cache.latest_for(&key.model, &spec.sampler)
+        } else {
+            None
+        };
+        let t0 = Instant::now();
+        let (chain, posterior, warm_theta) = match spec.sampler.as_str() {
+            "smc" => {
+                let smc = self.smc_config(spec);
+                let result = smc.run(model.as_ref(), spec.seed);
+                let chain = smc.chain_from_result(model.as_ref(), &result, spec.seed);
+                (chain, Posterior::Smc(Mutex::new(Some(result))), None)
+            }
+            "nuts" => {
+                let mut rng = Xoshiro256pp::seed_from_u64(spec.seed);
+                let mut tvi = init_typed(model.as_ref(), &mut rng);
+                if let Some(w) = donor.as_ref().and_then(|a| a.warm_theta.clone()) {
+                    if w.len() == tvi.dim() {
+                        tvi.set_unconstrained(&w);
+                        self.warm_starts.fetch_add(1, Ordering::Relaxed);
+                        metrics::inc(Counter::ServeWarmStarts);
+                    }
+                }
+                let ld = NativeDensity::fused(model.as_ref(), &tvi);
+                let theta0 = tvi.unconstrained.clone();
+                let raw =
+                    Nuts::default().sample(&ld, &theta0, spec.warmup, spec.draws, &mut rng);
+                let warm = raw.thetas.last().cloned();
+                (raw_to_chain(&raw, &tvi), Posterior::Draws, warm)
+            }
+            "advi" => {
+                let mut rng = Xoshiro256pp::seed_from_u64(spec.seed);
+                let tvi = init_typed(model.as_ref(), &mut rng);
+                let ld = NativeDensity::fused(model.as_ref(), &tvi);
+                let mut advi = Advi::meanfield();
+                let theta0 = match donor.as_ref().map(|a| &a.posterior) {
+                    Some(Posterior::Vi(prev)) if prev.approx.mu().len() == tvi.dim() => {
+                        // reuse the converged mean *and* step size — skips
+                        // the η ladder search entirely
+                        advi.eta = Some(prev.eta);
+                        self.warm_starts.fetch_add(1, Ordering::Relaxed);
+                        metrics::inc(Counter::ServeWarmStarts);
+                        prev.approx.mu().to_vec()
+                    }
+                    _ => tvi.unconstrained.clone(),
+                };
+                let fit = advi.fit(&ld, &theta0, &mut rng);
+                let raw = fit.sample_raw(&ld, spec.draws, &mut rng);
+                let warm = Some(fit.approx.mu().to_vec());
+                let mut chain = raw_to_chain(&raw, &tvi);
+                chain.stats.log_evidence = fit.elbo;
+                (chain, Posterior::Vi(fit), warm)
+            }
+            other => return Err(format!("unknown sampler {other:?} (smc, nuts, advi)")),
+        };
+        let param_maps = crate::query::chain_param_maps(&chain)?;
+        Ok(Artifact {
+            key,
+            chain,
+            param_maps,
+            posterior,
+            warm_theta,
+            fit_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+}

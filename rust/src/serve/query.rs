@@ -1,0 +1,112 @@
+//! Query evaluation against a cached artifact: summary statistics and
+//! quantiles read straight off the draw matrix; posterior-predictive
+//! queries replay the likelihood under each precomputed parameter map
+//! ([`crate::query::run_fixed`]) and log-mean-exp the terms.
+//!
+//! Nothing here re-runs inference — that is the whole point. The
+//! expensive grouping work (chain columns → one parameter map per draw)
+//! happened once at fit time and lives in [`Artifact::param_maps`], so a
+//! summary query is an `O(draws)` fold and a predictive query is one
+//! fixed-values model replay per draw.
+
+use crate::context::Context;
+use crate::model::Model;
+use crate::query::run_fixed;
+use crate::util::math::log_sum_exp;
+
+use super::artifact::Artifact;
+
+/// One request against a fitted posterior.
+#[derive(Clone, Debug)]
+pub enum ServeQuery {
+    /// Posterior mean of a chain column (e.g. `"m"`, `"h[4]"`).
+    Mean { param: String },
+    /// Posterior standard deviation of a column.
+    Std { param: String },
+    /// Posterior quantile `q ∈ [0, 1]` of a column.
+    Quantile { param: String, q: f64 },
+    /// The fit's log-evidence estimate (SMC) / ELBO (ADVI).
+    Evidence,
+    /// Log posterior-predictive of fresh observations (the caller binds
+    /// them into a model instance; see `ServeHandle::query`).
+    LogPredictive { y: Vec<f64> },
+}
+
+impl ServeQuery {
+    /// Short label for protocol responses and bench rows.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServeQuery::Mean { .. } => "mean",
+            ServeQuery::Std { .. } => "std",
+            ServeQuery::Quantile { .. } => "quantile",
+            ServeQuery::Evidence => "evidence",
+            ServeQuery::LogPredictive { .. } => "predictive",
+        }
+    }
+}
+
+/// Answer a summary-statistic query from the artifact's draws.
+/// `LogPredictive` is not answerable here — it needs a model instance
+/// bound to the query's data; use [`log_predictive`].
+pub fn summary(artifact: &Artifact, q: &ServeQuery) -> Result<f64, String> {
+    match q {
+        ServeQuery::Mean { param } => artifact
+            .chain
+            .mean(param)
+            .ok_or_else(|| format!("unknown parameter {param:?}")),
+        ServeQuery::Std { param } => artifact
+            .chain
+            .std(param)
+            .ok_or_else(|| format!("unknown parameter {param:?}")),
+        ServeQuery::Quantile { param, q } => {
+            if !(0.0..=1.0).contains(q) {
+                return Err(format!("quantile {q} outside [0, 1]"));
+            }
+            artifact
+                .chain
+                .quantile(param, *q)
+                .ok_or_else(|| format!("unknown parameter {param:?}"))
+        }
+        ServeQuery::Evidence => Ok(artifact.chain.stats.log_evidence),
+        ServeQuery::LogPredictive { .. } => {
+            Err("predictive queries need a model instance; use log_predictive".into())
+        }
+    }
+}
+
+/// Log posterior-predictive of `model`'s observations under the
+/// artifact's draws: `log (1/S) Σ_s p(y_new | θ_s)`.
+pub fn log_predictive(artifact: &Artifact, model: &dyn Model) -> Result<f64, String> {
+    let mut terms = Vec::with_capacity(artifact.param_maps.len());
+    for params in &artifact.param_maps {
+        terms.push(run_fixed(model, params, Context::Likelihood)?);
+    }
+    if terms.is_empty() {
+        return Err("artifact has no draws".into());
+    }
+    Ok(log_sum_exp(&terms) - (terms.len() as f64).ln())
+}
+
+/// Batched predictive evaluation: answer every query in one sweep over
+/// the draw matrix (outer loop draws, inner loop queries), so each
+/// parameter map is touched once however many queries are in flight —
+/// the batching the concurrent server path funnels into.
+pub fn log_predictive_batch(
+    artifact: &Artifact,
+    models: &[Box<dyn Model>],
+) -> Result<Vec<f64>, String> {
+    let s = artifact.param_maps.len();
+    if s == 0 {
+        return Err("artifact has no draws".into());
+    }
+    let mut terms: Vec<Vec<f64>> = models.iter().map(|_| Vec::with_capacity(s)).collect();
+    for params in &artifact.param_maps {
+        for (qi, m) in models.iter().enumerate() {
+            terms[qi].push(run_fixed(m.as_ref(), params, Context::Likelihood)?);
+        }
+    }
+    Ok(terms
+        .iter()
+        .map(|t| log_sum_exp(t) - (s as f64).ln())
+        .collect())
+}

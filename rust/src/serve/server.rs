@@ -1,0 +1,273 @@
+//! The wire front end: line-delimited JSON over `std::net::TcpListener`,
+//! one request per line, one response line back, many requests per
+//! connection. Connections are handled by a fixed worker pool
+//! ([`crate::util::threadpool::ThreadPool`]); every worker shares one
+//! [`ServeHandle`] behind an `Arc`, so all connections hit the same
+//! artifact cache and stream registry.
+//!
+//! Protocol (all requests are single-line JSON objects with an `"op"`):
+//!
+//! ```text
+//! {"op":"init","model":"kalman","y":[…]}                → {"ok":true,"version":1}
+//! {"op":"fit","model":"kalman","sampler":"smc"}         → {"ok":true,"cached":false,…}
+//! {"op":"query","model":"kalman","kind":"mean","param":"h[9]"}
+//! {"op":"query","model":"kalman","kind":"predictive","y":[…]}
+//! {"op":"update","model":"kalman","y":[…]}              → {"ok":true,"kind":"streamed",…}
+//! {"op":"invalidate","model":"kalman"}                  → {"ok":true,"removed":2}
+//! {"op":"stats"}                                        → cache + counter snapshot
+//! {"op":"shutdown"}                                     → {"ok":true} and the server drains
+//! ```
+//!
+//! Errors come back as `{"ok":false,"error":"…"}` — a malformed line
+//! never kills the connection, let alone the server.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::util::json::{escape, Json};
+use crate::util::threadpool::ThreadPool;
+
+use super::query::ServeQuery;
+use super::{FitSpec, ServeHandle};
+
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn err_line(msg: &str) -> String {
+    format!("{{\"ok\": false, \"error\": \"{}\"}}", escape(msg))
+}
+
+/// Pull a [`FitSpec`] out of a request, defaulting every absent field.
+fn fit_spec(req: &Json) -> FitSpec {
+    let mut spec = FitSpec::default();
+    if let Some(s) = req.get("sampler").and_then(Json::as_str) {
+        spec.sampler = s.to_string();
+    }
+    if let Some(n) = req.get("draws").and_then(Json::as_u64) {
+        spec.draws = n as usize;
+    }
+    if let Some(n) = req.get("warmup").and_then(Json::as_u64) {
+        spec.warmup = n as usize;
+    }
+    if let Some(n) = req.get("particles").and_then(Json::as_u64) {
+        spec.particles = (n as usize).max(2);
+    }
+    if let Some(n) = req.get("seed").and_then(Json::as_u64) {
+        spec.seed = n;
+    }
+    spec
+}
+
+fn req_model(req: &Json) -> Result<&str, String> {
+    req.get("model")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "request is missing \"model\"".to_string())
+}
+
+fn req_obs(req: &Json) -> Result<Vec<f64>, String> {
+    req.get("y")
+        .and_then(Json::num_vec)
+        .ok_or_else(|| "request is missing a numeric \"y\" array".to_string())
+}
+
+/// Evaluate one parsed request against the handle. Returns the response
+/// line (no trailing newline) and whether this request asked the server
+/// to shut down. Public so tests and tools can speak the protocol
+/// without a socket.
+pub fn dispatch(handle: &ServeHandle, req: &Json) -> (String, bool) {
+    let op = match req.get("op").and_then(Json::as_str) {
+        Some(op) => op,
+        None => return (err_line("request is missing \"op\""), false),
+    };
+    let resp = match op {
+        "init" => req_model(req).and_then(|model| {
+            let y = req_obs(req)?;
+            let version = handle.init_stream(model, y)?;
+            Ok(format!("{{\"ok\": true, \"version\": {version}}}"))
+        }),
+        "fit" => req_model(req).and_then(|model| {
+            let spec = fit_spec(req);
+            let (art, cached) = handle.fit(model, &spec)?;
+            Ok(format!(
+                "{{\"ok\": true, \"cached\": {cached}, \"n_draws\": {}, \
+                 \"log_evidence\": {}, \"fit_secs\": {}}}",
+                art.chain.len(),
+                json_num(art.chain.stats.log_evidence),
+                json_num(art.fit_secs),
+            ))
+        }),
+        "query" => req_model(req).and_then(|model| {
+            let spec = fit_spec(req);
+            let q = parse_query(req)?;
+            let value = handle.query(model, &spec, &q)?;
+            Ok(format!(
+                "{{\"ok\": true, \"kind\": \"{}\", \"value\": {}}}",
+                q.kind(),
+                json_num(value)
+            ))
+        }),
+        "update" => req_model(req).and_then(|model| {
+            let spec = fit_spec(req);
+            let y = req_obs(req)?;
+            let rep = handle.update_stream(model, &y, &spec)?;
+            Ok(format!(
+                "{{\"ok\": true, \"kind\": \"{}\", \"version\": {}, \"n_obs\": {}, \
+                 \"log_evidence\": {}, \"increment\": {}, \"ess\": {}, \
+                 \"rejuvenated\": {}, \"wall_secs\": {}}}",
+                rep.kind.label(),
+                rep.data_version,
+                rep.n_obs,
+                json_num(rep.log_evidence),
+                json_num(rep.increment),
+                json_num(rep.ess),
+                rep.rejuvenated,
+                json_num(rep.wall_secs),
+            ))
+        }),
+        "invalidate" => req_model(req).map(|model| {
+            let removed = handle.invalidate(model);
+            format!("{{\"ok\": true, \"removed\": {removed}}}")
+        }),
+        "stats" => {
+            let s = handle.stats();
+            Ok(format!(
+                "{{\"ok\": true, \"artifacts\": {}, \"queries\": {}, \
+                 \"cache_hits\": {}, \"cache_misses\": {}, \"hit_rate\": {}, \
+                 \"evictions\": {}, \"stream_updates\": {}, \"ess_refits\": {}, \
+                 \"warm_starts\": {}}}",
+                s.artifacts,
+                s.queries,
+                s.cache_hits,
+                s.cache_misses,
+                json_num(s.hit_rate),
+                s.evictions,
+                s.stream_updates,
+                s.ess_refits,
+                s.warm_starts,
+            ))
+        }
+        "shutdown" => return ("{\"ok\": true}".to_string(), true),
+        other => Err(format!("unknown op {other:?}")),
+    };
+    match resp {
+        Ok(line) => (line, false),
+        Err(e) => (err_line(&e), false),
+    }
+}
+
+fn parse_query(req: &Json) -> Result<ServeQuery, String> {
+    let kind = req
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or("query is missing \"kind\"")?;
+    let param = || -> Result<String, String> {
+        req.get("param")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| format!("{kind} query is missing \"param\""))
+    };
+    match kind {
+        "mean" => Ok(ServeQuery::Mean { param: param()? }),
+        "std" => Ok(ServeQuery::Std { param: param()? }),
+        "quantile" => Ok(ServeQuery::Quantile {
+            param: param()?,
+            q: req
+                .get("q")
+                .and_then(Json::as_f64)
+                .ok_or("quantile query is missing \"q\"")?,
+        }),
+        "evidence" => Ok(ServeQuery::Evidence),
+        "predictive" => Ok(ServeQuery::LogPredictive { y: req_obs(req)? }),
+        other => Err(format!(
+            "unknown query kind {other:?} (mean, std, quantile, evidence, predictive)"
+        )),
+    }
+}
+
+/// One connection: read request lines until EOF or a shutdown op,
+/// answering each on its own line.
+fn handle_conn(stream: TcpStream, handle: &ServeHandle, stop: &AtomicBool, addr: SocketAddr) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (resp, shutdown) = match Json::parse(&line) {
+            Ok(req) => dispatch(handle, &req),
+            Err(e) => (err_line(&format!("bad request: {e}")), false),
+        };
+        if writer
+            .write_all(resp.as_bytes())
+            .and_then(|_| writer.write_all(b"\n"))
+            .and_then(|_| writer.flush())
+            .is_err()
+        {
+            break;
+        }
+        if shutdown {
+            stop.store(true, Ordering::SeqCst);
+            // the accept loop is blocked in accept(); poke it loose
+            let _ = TcpStream::connect(addr);
+            break;
+        }
+    }
+}
+
+/// The serving daemon: a bound listener plus the worker pool that drains
+/// it. `run` blocks until a client sends `{"op":"shutdown"}`.
+pub struct Server {
+    listener: TcpListener,
+    handle: Arc<ServeHandle>,
+    workers: usize,
+}
+
+impl Server {
+    /// Bind to `addr` (e.g. `"127.0.0.1:0"` for an ephemeral test port).
+    pub fn bind(addr: &str, handle: Arc<ServeHandle>, workers: usize) -> std::io::Result<Server> {
+        Ok(Server {
+            listener: TcpListener::bind(addr)?,
+            handle,
+            workers: workers.max(1),
+        })
+    }
+
+    pub fn local_addr(&self) -> std::io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Accept connections until a shutdown op arrives, then drain the
+    /// pool (dropping it joins the workers).
+    pub fn run(&self) -> std::io::Result<()> {
+        let pool = ThreadPool::new(self.workers);
+        let stop = Arc::new(AtomicBool::new(false));
+        let addr = self.listener.local_addr()?;
+        for conn in self.listener.incoming() {
+            if stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let conn = match conn {
+                Ok(c) => c,
+                Err(_) => continue,
+            };
+            let handle = Arc::clone(&self.handle);
+            let stop = Arc::clone(&stop);
+            pool.execute(move || handle_conn(conn, &handle, &stop, addr));
+        }
+        Ok(())
+    }
+}

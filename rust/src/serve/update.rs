@@ -1,0 +1,175 @@
+//! Streaming Bayesian updating: absorb new observations into a cached
+//! SMC posterior without refitting from scratch.
+//!
+//! The cheap path is [`Smc::resume`] — reweight/propagate the existing
+//! cloud through only the appended observation steps, so update cost is
+//! independent of how much history the posterior already absorbed. Two
+//! guard rails keep the cheap path honest:
+//!
+//! - **resample–move rejuvenation**: when the resumed filter had to
+//!   resample (weight degeneracy), the surviving particle set has lost
+//!   diversity. A conditional-SMC sweep ([`csmc_sweep`]) re-draws a few
+//!   particles from a kernel that leaves the posterior invariant —
+//!   the classic resample–move correction (Gilks & Berzuini 2001),
+//!   implemented with the Particle-Gibbs machinery the crate already has.
+//! - **ESS-collapse fallback**: if the updated cloud's effective sample
+//!   size still lands below `refit_ess_frac · N`, the cloud no longer
+//!   represents the posterior and the updater falls back to a full
+//!   from-scratch refit on the extended record.
+//!
+//! Everything is deterministic in `(cloud, seed)`: a fixed seed sequence
+//! replays bit-identically (the streaming-update tests pin this down).
+
+use std::time::Instant;
+
+use crate::inference::smc::{csmc_sweep, Csmc, Smc, SmcCloud, SmcResult};
+use crate::model::Model;
+use crate::obs::metrics::{self, Counter};
+use crate::particle::particle_seed;
+use crate::util::rng::Xoshiro256pp;
+use crate::varname::VarName;
+
+/// Which path an update took.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateKind {
+    /// Cloud reweighted through the appended steps (cheap path).
+    Streamed,
+    /// ESS collapsed after the resume; refitted from scratch.
+    EssRefit,
+}
+
+impl UpdateKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            UpdateKind::Streamed => "streamed",
+            UpdateKind::EssRefit => "ess-refit",
+        }
+    }
+}
+
+/// Outcome of one streaming update.
+pub struct UpdateOutcome {
+    pub kind: UpdateKind,
+    /// The posterior over the extended record (total running evidence).
+    pub result: SmcResult,
+    /// Evidence contributed by the new batch:
+    /// `log Ẑ(y_{1..t+k}) − log Ẑ(y_{1..t})`. Increments across a stream
+    /// of updates telescope to the batch-fit evidence.
+    pub increment: f64,
+    /// Particles re-drawn by the rejuvenation sweep.
+    pub rejuvenated: usize,
+    pub wall_secs: f64,
+}
+
+/// Absorb the appended observations of `model` (whose record extends the
+/// one `prev` was fitted on) into the cached cloud. Consumes `prev` —
+/// resuming mutates the cloud in place; on the fallback path the old
+/// cloud is discarded with the rest of the stale fit.
+pub fn streaming_update(
+    smc: &Smc,
+    model: &dyn Model,
+    prev: SmcResult,
+    seed: u64,
+    refit_ess_frac: f64,
+    rejuvenation_moves: usize,
+) -> UpdateOutcome {
+    let t0 = Instant::now();
+    let prev_evidence = prev.log_evidence;
+    let mut result = smc.resume(model, prev.cloud, seed);
+    let n = result.cloud.len() as f64;
+    if result.cloud.ess() < refit_ess_frac * n {
+        // the reweighted cloud no longer represents the posterior —
+        // refit the extended record from scratch (distinct seed stream
+        // so the refit is not a replay of the failed resume)
+        metrics::inc(Counter::ServeEssRefits);
+        let refit = smc.run(model, seed ^ 0x9E37_79B9_7F4A_7C15);
+        return UpdateOutcome {
+            kind: UpdateKind::EssRefit,
+            increment: refit.log_evidence - prev_evidence,
+            result: refit,
+            rejuvenated: 0,
+            wall_secs: t0.elapsed().as_secs_f64(),
+        };
+    }
+    metrics::inc(Counter::ServeStreamUpdates);
+    let rejuvenated = if rejuvenation_moves > 0 && result.resamples > 0 {
+        rejuvenate(smc, model, &mut result, seed, rejuvenation_moves)
+    } else {
+        0
+    };
+    UpdateOutcome {
+        kind: UpdateKind::Streamed,
+        increment: result.log_evidence - prev_evidence,
+        result,
+        rejuvenated,
+        wall_secs: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Resample–move: equalize the cloud's weights, then re-draw `moves`
+/// particles through a conditional-SMC sweep over the full latent scope.
+/// Leaves `log_evidence` untouched (the move kernel is posterior-
+/// invariant and evidence accumulation happened at propagation time).
+/// Returns how many particles were actually replaced.
+fn rejuvenate(
+    smc: &Smc,
+    model: &dyn Model,
+    result: &mut SmcResult,
+    seed: u64,
+    moves: usize,
+) -> usize {
+    let mut master = Xoshiro256pp::seed_from_u64(particle_seed(seed, usize::MAX / 2, 0x7E01));
+    let n_obs = result.cloud.n_obs();
+    // a small inner filter is enough for a move kernel; the validity of
+    // the sweep does not depend on its particle count
+    let csmc = Csmc::new((smc.n_particles / 16).max(8));
+    // the move targets the posterior, so it must replace an *unweighted*
+    // particle: force one resampling pass first (flag-clean at the final
+    // horizon — every site is already scored)
+    match &mut result.cloud {
+        SmcCloud::Typed { cloud, .. } => cloud.resample(smc.resampler, false, &mut master),
+        SmcCloud::Boxed(c) => c.resample(smc.resampler, false, &mut master),
+    }
+    metrics::inc(Counter::ResampleEvents);
+    let mut done = 0;
+    for k in 0..moves {
+        match &mut result.cloud {
+            SmcCloud::Typed { cloud, template } => {
+                let i = (master.next_u64() as usize) % cloud.particles.len();
+                let state = &cloud.particles[i].state;
+                let scope: Vec<VarName> = state.slots().iter().map(|s| s.vn.clone()).collect();
+                let reference = state.to_untyped(template);
+                let fresh = csmc_sweep(
+                    model,
+                    &reference,
+                    &scope,
+                    &csmc,
+                    particle_seed(seed, k, 0xC53C),
+                    Some(n_obs),
+                    Some(state),
+                );
+                if let Some(new_state) = state.refill_from_untyped(&fresh) {
+                    cloud.particles[i].state = new_state;
+                    done += 1;
+                }
+            }
+            SmcCloud::Boxed(c) => {
+                let i = (master.next_u64() as usize) % c.particles.len();
+                let reference = c.particles[i].state.clone();
+                let scope: Vec<VarName> =
+                    reference.records().iter().map(|r| r.vn.clone()).collect();
+                c.particles[i].state = csmc_sweep(
+                    model,
+                    &reference,
+                    &scope,
+                    &csmc,
+                    particle_seed(seed, k, 0xC53C),
+                    Some(n_obs),
+                    None,
+                );
+                done += 1;
+            }
+        }
+    }
+    done
+}

@@ -7,6 +7,7 @@
 
 pub mod cli;
 pub mod hash;
+pub mod json;
 pub mod math;
 pub mod memo;
 pub mod rng;

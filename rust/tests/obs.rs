@@ -257,6 +257,53 @@ fn profile_model_attributes_sites_across_all_four_paths() {
 }
 
 #[test]
+fn serve_counters_are_cataloged_and_reach_metrics_json() {
+    use dynamicppl::obs::metrics::ALL_COUNTERS;
+    use dynamicppl::serve::query::ServeQuery;
+    use dynamicppl::serve::{FitSpec, ServeConfig, ServeHandle};
+
+    // the serving counters are first-class catalog members
+    for (c, key) in [
+        (Counter::ServeQueries, "serve_queries"),
+        (Counter::ServeCacheHits, "serve_cache_hits"),
+        (Counter::ServeCacheMisses, "serve_cache_misses"),
+        (Counter::ServeStreamUpdates, "serve_stream_updates"),
+        (Counter::ServeEssRefits, "serve_ess_refits"),
+        (Counter::ServeWarmStarts, "serve_warm_starts"),
+    ] {
+        assert!(ALL_COUNTERS.contains(&c), "{key} missing from the catalog");
+        assert_eq!(c.key(), key);
+    }
+
+    // drive the real serving path and watch the counters move
+    let _ = metrics::take_local(); // isolate from other tests on this thread
+    let handle = ServeHandle::new(ServeConfig::default());
+    handle
+        .init_stream("normal_normal", vec![0.4, -0.1, 0.6, 0.2])
+        .unwrap();
+    let spec = FitSpec::smc(64, 3);
+    let q = ServeQuery::Mean { param: "m".into() };
+    handle.query("normal_normal", &spec, &q).unwrap(); // miss + fit
+    handle.query("normal_normal", &spec, &q).unwrap(); // hit
+    let snap = metrics::take_local();
+    assert_eq!(snap.get(Counter::ServeQueries), 2);
+    assert_eq!(snap.get(Counter::ServeCacheMisses), 1);
+    assert_eq!(snap.get(Counter::ServeCacheHits), 1);
+
+    // and they survive the trip into METRICS.json like every counter
+    let mut chain = Chain::new(vec!["x".into()]);
+    chain.push(vec![0.0], 0.0);
+    chain.stats.metrics = snap;
+    let mc = MultiChain::new(vec![chain]);
+    let rep = RunReport::from_chains("serve", "smc", &mc, Vec::new());
+    let json = rep.to_json();
+    assert!(json.contains("\"serve_queries\": 2"), "{json}");
+    assert!(json.contains("\"serve_cache_hits\": 1"), "{json}");
+    assert!(json.contains("\"serve_cache_misses\": 1"), "{json}");
+    assert!(json.contains("\"serve_stream_updates\": 0"), "{json}");
+}
+
+#[test]
 fn metrics_json_reports_the_acceptance_keys() {
     // the acceptance-criteria keys for a NUTS run: per-chain divergences,
     // grad-eval counts, arena nodes/eval, promotion counters, wall split

@@ -1,0 +1,467 @@
+//! Posterior-serving integration tests: the artifact cache must hit and
+//! evict correctly, cached queries must agree with closed-form conjugate
+//! answers, streaming updates must match from-scratch refits (posterior
+//! means within MC error, evidence increments telescoping to the batch
+//! value), the ESS-collapse fallback must fire, seeded update sequences
+//! must replay bit-identically, the TCP protocol must round-trip, and the
+//! shared compile cell must promote exactly once under concurrent first
+//! evaluations.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+
+use dynamicppl::gradient::{LogDensity, NativeDensity};
+use dynamicppl::model::init_typed;
+use dynamicppl::obs::metrics::{self, Counter};
+use dynamicppl::prelude::*;
+use dynamicppl::serve::query::ServeQuery;
+use dynamicppl::serve::server::{dispatch, Server};
+use dynamicppl::serve::update::UpdateKind;
+use dynamicppl::serve::{
+    conjugate_log_evidence, kalman_oracle, simulate_kalman, FitSpec, ServeConfig, ServeHandle,
+    StreamNormal,
+};
+use dynamicppl::util::json::Json;
+
+/// Closed-form posterior (mean, var) of the [`StreamNormal`] conjugate
+/// stream: prior `m ~ N(0, 1)`, likelihood `y_t ~ N(m, 1)`.
+fn conjugate_posterior(y: &[f64]) -> (f64, f64) {
+    let n = y.len() as f64;
+    (y.iter().sum::<f64>() / (n + 1.0), 1.0 / (n + 1.0))
+}
+
+fn normal_stream(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    (0..n).map(|_| 0.7 + rng.normal()).collect()
+}
+
+// ------------------------------------------------------------- the cache
+
+#[test]
+fn cache_hits_misses_evicts_and_invalidates() {
+    let handle = ServeHandle::new(ServeConfig {
+        cache_capacity: 2,
+        ..ServeConfig::default()
+    });
+    handle
+        .init_stream("normal_normal", normal_stream(8, 1))
+        .unwrap();
+    let spec = FitSpec::smc(32, 5);
+
+    let (_, cached) = handle.fit("normal_normal", &spec).unwrap();
+    assert!(!cached, "first fit must miss");
+    let (_, cached) = handle.fit("normal_normal", &spec).unwrap();
+    assert!(cached, "second fit must hit");
+
+    // distinct sampler configs are distinct artifacts; capacity 2 evicts
+    let spec2 = FitSpec::smc(32, 6);
+    let spec3 = FitSpec::smc(32, 7);
+    handle.fit("normal_normal", &spec2).unwrap();
+    handle.fit("normal_normal", &spec3).unwrap();
+    let stats = handle.stats();
+    assert!(stats.artifacts <= 2, "capacity 2 held {}", stats.artifacts);
+    assert!(stats.evictions >= 1, "third artifact must evict");
+    assert!(stats.cache_hits >= 1);
+    assert!(stats.cache_misses >= 3);
+
+    // explicit invalidation drops everything for the model…
+    assert!(handle.invalidate("normal_normal") >= 1);
+    assert_eq!(handle.stats().artifacts, 0);
+    // …and so does re-initializing the stream (data changed)
+    handle.fit("normal_normal", &spec).unwrap();
+    handle
+        .init_stream("normal_normal", normal_stream(8, 2))
+        .unwrap();
+    assert_eq!(handle.stats().artifacts, 0, "init must drop stale fits");
+}
+
+#[test]
+fn unknown_models_and_empty_streams_are_rejected() {
+    let handle = ServeHandle::new(ServeConfig::default());
+    assert!(handle.init_stream("nope", vec![1.0]).is_err());
+    assert!(handle.init_stream("kalman", vec![]).is_err());
+    assert!(handle
+        .fit("normal_normal", &FitSpec::default())
+        .is_err_and(|e| e.contains("init")));
+}
+
+// ----------------------------------------------------------- the queries
+
+#[test]
+fn cached_queries_agree_with_the_conjugate_posterior() {
+    let y = normal_stream(6, 3);
+    let (mu_n, v_n) = conjugate_posterior(&y);
+    let handle = ServeHandle::new(ServeConfig::default());
+    handle.init_stream("normal_normal", y.clone()).unwrap();
+    let spec = FitSpec::smc(2048, 11);
+    let q = |q: &ServeQuery| handle.query("normal_normal", &spec, q).unwrap();
+
+    let mean = q(&ServeQuery::Mean { param: "m".into() });
+    assert!((mean - mu_n).abs() < 0.1, "mean {mean} vs {mu_n}");
+    let std = q(&ServeQuery::Std { param: "m".into() });
+    assert!((std - v_n.sqrt()).abs() < 0.1, "std {std} vs {}", v_n.sqrt());
+    let med = q(&ServeQuery::Quantile {
+        param: "m".into(),
+        q: 0.5,
+    });
+    assert!((med - mu_n).abs() < 0.2, "median {med} vs {mu_n}");
+    let lz = q(&ServeQuery::Evidence);
+    let lz_exact = conjugate_log_evidence(&y);
+    assert!((lz - lz_exact).abs() < 0.5, "evidence {lz} vs {lz_exact}");
+
+    // posterior predictive of one held-out point: N(mu_n, 1 + v_n)
+    let y_star = 0.9;
+    let lp = q(&ServeQuery::LogPredictive { y: vec![y_star] });
+    let exact = dynamicppl::dist::Normal::new(mu_n, (1.0 + v_n).sqrt()).logpdf(y_star);
+    assert!((lp - exact).abs() < 0.15, "predictive {lp} vs {exact}");
+
+    // a bad quantile and a missing param surface as errors, not panics
+    assert!(handle
+        .query(
+            "normal_normal",
+            &spec,
+            &ServeQuery::Quantile {
+                param: "m".into(),
+                q: 1.5
+            }
+        )
+        .is_err());
+    assert!(handle
+        .query("normal_normal", &spec, &ServeQuery::Mean { param: "zz".into() })
+        .is_err());
+}
+
+#[test]
+fn batched_predictive_matches_one_by_one_queries() {
+    let handle = ServeHandle::new(ServeConfig::default());
+    handle
+        .init_stream("normal_normal", normal_stream(10, 4))
+        .unwrap();
+    let spec = FitSpec::smc(256, 13);
+    let ys: Vec<Vec<f64>> = vec![vec![0.2], vec![-0.4, 0.5], vec![1.1, 0.0, 0.3]];
+    let batch = handle.predictive_batch("normal_normal", &spec, &ys).unwrap();
+    assert_eq!(batch.len(), ys.len());
+    for (y, b) in ys.iter().zip(&batch) {
+        let one = handle
+            .query(
+                "normal_normal",
+                &spec,
+                &ServeQuery::LogPredictive { y: y.clone() },
+            )
+            .unwrap();
+        assert!(
+            (one - b).abs() < 1e-12,
+            "batch {b} vs single {one} for {y:?}"
+        );
+    }
+}
+
+// -------------------------------------------------------------- updates
+
+#[test]
+fn streaming_updates_agree_with_batch_refit_on_the_conjugate_stream() {
+    let all = normal_stream(24, 7);
+    let handle = ServeHandle::new(ServeConfig::default());
+    handle.init_stream("normal_normal", all[..12].to_vec()).unwrap();
+    let spec = FitSpec::smc(1024, 17);
+    let (first, _) = handle.fit("normal_normal", &spec).unwrap();
+    let z0 = first.chain.stats.log_evidence;
+
+    let mut increments = Vec::new();
+    let mut last_evidence = z0;
+    for batch in all[12..].chunks(4) {
+        let rep = handle.update_stream("normal_normal", batch, &spec).unwrap();
+        assert_eq!(rep.kind, UpdateKind::Streamed, "conjugate stream must stay cheap");
+        increments.push(rep.increment);
+        last_evidence = rep.log_evidence;
+    }
+
+    // increments telescope exactly to the final running evidence…
+    let total = z0 + increments.iter().sum::<f64>();
+    assert!(
+        (total - last_evidence).abs() < 1e-9,
+        "telescoping broke: {total} vs {last_evidence}"
+    );
+    // …which estimates the closed-form batch evidence of the full record
+    let lz_exact = conjugate_log_evidence(&all);
+    assert!(
+        (last_evidence - lz_exact).abs() < 1.0,
+        "evidence {last_evidence} vs exact {lz_exact}"
+    );
+
+    // streamed and refit posteriors agree with the conjugate mean
+    let (mu_n, _) = conjugate_posterior(&all);
+    let streamed = handle
+        .query("normal_normal", &spec, &ServeQuery::Mean { param: "m".into() })
+        .unwrap();
+    assert!((streamed - mu_n).abs() < 0.2, "streamed {streamed} vs {mu_n}");
+
+    let refit_handle = ServeHandle::new(ServeConfig::default());
+    refit_handle.init_stream("normal_normal", all.clone()).unwrap();
+    let refit = refit_handle
+        .query("normal_normal", &spec, &ServeQuery::Mean { param: "m".into() })
+        .unwrap();
+    assert!((refit - mu_n).abs() < 0.2, "refit {refit} vs {mu_n}");
+}
+
+#[test]
+fn streaming_updates_track_the_kalman_oracle() {
+    // the dynamic-structure path: each appended step introduces a fresh
+    // latent h[t], demoting the resumed cloud to boxed execution
+    let all = simulate_kalman(38, 23);
+    let (ll_exact, smoothed) = kalman_oracle(&all);
+    let handle = ServeHandle::new(ServeConfig::default());
+    handle.init_stream("kalman", all[..30].to_vec()).unwrap();
+    let spec = FitSpec::smc(512, 29);
+    handle.fit("kalman", &spec).unwrap();
+
+    let rep = handle.update_stream("kalman", &all[30..], &spec).unwrap();
+    assert_eq!(rep.kind, UpdateKind::Streamed);
+    assert_eq!(rep.n_obs, all.len());
+    assert!(
+        (rep.log_evidence - ll_exact).abs() < 2.0,
+        "evidence {} vs Kalman ll {ll_exact}",
+        rep.log_evidence
+    );
+
+    // the final-state posterior mean is a filtering estimate — the part
+    // of the path a particle filter estimates well
+    let last = format!("h[{}]", all.len() - 1);
+    let streamed = handle
+        .query("kalman", &spec, &ServeQuery::Mean { param: last.clone() })
+        .unwrap();
+    let oracle = smoothed[all.len() - 1];
+    assert!((streamed - oracle).abs() < 0.35, "streamed {streamed} vs {oracle}");
+
+    let refit_handle = ServeHandle::new(ServeConfig::default());
+    refit_handle.init_stream("kalman", all.clone()).unwrap();
+    let refit = refit_handle
+        .query("kalman", &spec, &ServeQuery::Mean { param: last })
+        .unwrap();
+    assert!((refit - oracle).abs() < 0.35, "refit {refit} vs {oracle}");
+}
+
+#[test]
+fn ess_collapse_falls_back_to_a_full_refit() {
+    // refit_ess_frac = 2 is unreachable (ESS ≤ N), so every streaming
+    // update must take the fallback
+    let handle = ServeHandle::new(ServeConfig {
+        refit_ess_frac: 2.0,
+        ..ServeConfig::default()
+    });
+    handle
+        .init_stream("normal_normal", normal_stream(10, 31))
+        .unwrap();
+    let spec = FitSpec::smc(128, 37);
+    handle.fit("normal_normal", &spec).unwrap();
+    let rep = handle
+        .update_stream("normal_normal", &[0.4, -0.2], &spec)
+        .unwrap();
+    assert_eq!(rep.kind, UpdateKind::EssRefit);
+    assert_eq!(rep.kind.label(), "ess-refit");
+    let stats = handle.stats();
+    assert_eq!(stats.ess_refits, 1);
+    assert_eq!(stats.stream_updates, 0);
+    // the refit artifact still answers queries
+    assert!(handle
+        .query("normal_normal", &spec, &ServeQuery::Mean { param: "m".into() })
+        .unwrap()
+        .is_finite());
+}
+
+#[test]
+fn updates_without_a_cached_cloud_pay_batch_cost() {
+    let handle = ServeHandle::new(ServeConfig::default());
+    handle
+        .init_stream("normal_normal", normal_stream(8, 41))
+        .unwrap();
+    // no fit first: nothing cached to resume
+    let spec = FitSpec::smc(64, 43);
+    let rep = handle
+        .update_stream("normal_normal", &[0.1], &spec)
+        .unwrap();
+    assert_eq!(rep.kind, UpdateKind::EssRefit);
+    assert_eq!(handle.stats().ess_refits, 1);
+    // non-SMC posteriors cannot stream
+    let nuts = FitSpec {
+        sampler: "nuts".into(),
+        ..FitSpec::default()
+    };
+    assert!(handle.update_stream("normal_normal", &[0.1], &nuts).is_err());
+}
+
+#[test]
+fn seeded_update_sequences_replay_bit_identically() {
+    let run = || {
+        let handle = ServeHandle::new(ServeConfig::default());
+        handle
+            .init_stream("normal_normal", normal_stream(12, 47))
+            .unwrap();
+        let spec = FitSpec::smc(256, 53);
+        handle.fit("normal_normal", &spec).unwrap();
+        let r1 = handle
+            .update_stream("normal_normal", &[0.5, -0.3, 0.8], &spec)
+            .unwrap();
+        let r2 = handle
+            .update_stream("normal_normal", &[0.2, 0.9], &spec)
+            .unwrap();
+        let mean = handle
+            .query("normal_normal", &spec, &ServeQuery::Mean { param: "m".into() })
+            .unwrap();
+        (
+            r1.increment.to_bits(),
+            r2.increment.to_bits(),
+            r2.log_evidence.to_bits(),
+            mean.to_bits(),
+        )
+    };
+    assert_eq!(run(), run(), "a seeded update sequence must be deterministic");
+}
+
+// --------------------------------------------------------- the protocol
+
+#[test]
+fn dispatch_answers_and_survives_bad_requests() {
+    let handle = ServeHandle::new(ServeConfig::default());
+    let send = |line: &str| dispatch(&handle, &Json::parse(line).unwrap()).0;
+
+    // errors come back as ok:false lines, never panics
+    for bad in [
+        "{\"kind\": \"mean\"}",                              // no op
+        "{\"op\": \"frobnicate\"}",                          // unknown op
+        "{\"op\": \"fit\"}",                                 // no model
+        "{\"op\": \"init\", \"model\": \"nope\", \"y\": [1]}", // unknown model
+        "{\"op\": \"query\", \"model\": \"normal_normal\", \"kind\": \"huh\"}",
+    ] {
+        let resp = Json::parse(&send(bad)).unwrap();
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false), "{bad}");
+        assert!(resp.get("error").and_then(Json::as_str).is_some(), "{bad}");
+    }
+
+    let ok = send(
+        "{\"op\": \"init\", \"model\": \"normal_normal\", \"y\": [0.3, -0.2, 0.5, 0.1]}",
+    );
+    let resp = Json::parse(&ok).unwrap();
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(resp.get("version").and_then(Json::as_u64), Some(1));
+
+    let resp = Json::parse(&send(
+        "{\"op\": \"query\", \"model\": \"normal_normal\", \"kind\": \"mean\", \
+         \"param\": \"m\", \"particles\": 64, \"seed\": 3}",
+    ))
+    .unwrap();
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+    assert!(resp.get("value").and_then(Json::as_f64).unwrap().is_finite());
+
+    let (_, shutdown) = dispatch(&handle, &Json::parse("{\"op\": \"stats\"}").unwrap());
+    assert!(!shutdown);
+    let (_, shutdown) = dispatch(&handle, &Json::parse("{\"op\": \"shutdown\"}").unwrap());
+    assert!(shutdown);
+}
+
+#[test]
+fn tcp_server_round_trips_the_protocol() {
+    let handle = Arc::new(ServeHandle::new(ServeConfig::default()));
+    let server = Server::bind("127.0.0.1:0", Arc::clone(&handle), 2).unwrap();
+    let addr = server.local_addr().unwrap();
+    let daemon = std::thread::spawn(move || server.run());
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut ask = |line: &str| -> Json {
+        writer.write_all(line.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        Json::parse(resp.trim()).unwrap_or_else(|e| panic!("bad response {resp:?}: {e}"))
+    };
+
+    let resp = ask("{\"op\": \"init\", \"model\": \"normal_normal\", \"y\": [0.4, 0.1, -0.3, 0.7]}");
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+
+    let resp = ask(
+        "{\"op\": \"fit\", \"model\": \"normal_normal\", \"particles\": 64, \"seed\": 9}",
+    );
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(resp.get("cached").and_then(Json::as_bool), Some(false));
+
+    let resp = ask(
+        "{\"op\": \"query\", \"model\": \"normal_normal\", \"kind\": \"quantile\", \
+         \"param\": \"m\", \"q\": 0.5, \"particles\": 64, \"seed\": 9}",
+    );
+    assert!(resp.get("value").and_then(Json::as_f64).unwrap().is_finite());
+
+    let resp = ask(
+        "{\"op\": \"update\", \"model\": \"normal_normal\", \"y\": [0.2, 0.6], \
+         \"particles\": 64, \"seed\": 9}",
+    );
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(resp.get("n_obs").and_then(Json::as_u64), Some(6));
+
+    let resp = ask("{\"op\": \"stats\"}");
+    assert!(resp.get("queries").and_then(Json::as_u64).unwrap() >= 1);
+
+    let resp = ask("{\"op\": \"shutdown\"}");
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+    daemon.join().unwrap().unwrap();
+
+    // the in-process view agrees with what the wire reported
+    assert!(handle.stats().stream_updates + handle.stats().ess_refits >= 1);
+}
+
+// ------------------------------------------- shared-cell compile safety
+
+#[test]
+fn concurrent_first_evaluations_compile_exactly_once() {
+    // eight threads race their first fused evaluation over one shared
+    // compile cell (the server-worker pattern): exactly one static
+    // promotion, every thread serving bitwise-identical results
+    let model = StreamNormal {
+        y: vec![0.3, -0.5, 0.8, 0.1, 0.4],
+    };
+    let mut rng = Xoshiro256pp::seed_from_u64(61);
+    let tvi = init_typed(&model, &mut rng);
+    let theta = tvi.unconstrained.clone();
+    let cell = NativeDensity::shared_cell();
+    let n_threads = 8;
+    let barrier = Barrier::new(n_threads);
+
+    let results: Vec<(u64, Vec<u64>, u64)> = std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for _ in 0..n_threads {
+            let cell = Arc::clone(&cell);
+            let (model, tvi, theta, barrier) = (&model, &tvi, &theta, &barrier);
+            joins.push(s.spawn(move || {
+                let _ = metrics::take_local(); // fresh shard
+                let ld = NativeDensity::fused_shared(model, tvi, cell);
+                let mut grad = vec![0.0; tvi.dim()];
+                barrier.wait(); // line up the first evaluations
+                let lp = ld.logp_grad_into(&theta, &mut grad);
+                let promotions = metrics::take_local().get(Counter::StaticPromotions);
+                (
+                    lp.to_bits(),
+                    grad.iter().map(|g| g.to_bits()).collect(),
+                    promotions,
+                )
+            }));
+        }
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+
+    let total_promotions: u64 = results.iter().map(|r| r.2).sum();
+    assert_eq!(
+        total_promotions, 1,
+        "one shared cell must compile exactly once across all threads"
+    );
+    let (lp0, g0, _) = &results[0];
+    for (lp, g, _) in &results[1..] {
+        assert_eq!(lp, lp0, "log-density drifted across threads");
+        assert_eq!(g, g0, "gradient drifted across threads");
+    }
+    // the cell is filled: a later density serves the program with no walk
+    let ld = NativeDensity::fused_shared(&model, &tvi, cell);
+    assert!(ld.compiled_program().is_some(), "promotion did not stick");
+}
