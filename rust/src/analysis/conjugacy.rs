@@ -1,0 +1,791 @@
+//! Conjugacy detection over the recorded tilde program.
+//!
+//! A parent site is *certified conjugate* when every recorded use of its
+//! value is a recognized child position of one conjugate family and the
+//! glue between the parent's output register and that position is affine
+//! (or identity / pure-scale, family-dependent). The certificate is purely
+//! structural; the actual coefficients (the `a`, `b` of `a·x + b` glue,
+//! the prior parameters, and every child's other-position value) are
+//! extracted *numerically* at draw time by replaying the recording's
+//! register file at two probe values of the parent — so hyperparameters
+//! that are themselves functions of other sites stay exact under Gibbs.
+//!
+//! Recognized families:
+//!
+//! | parent prior        | child                             | glue on parent      |
+//! |---------------------|-----------------------------------|---------------------|
+//! | `Normal`            | `Normal` mean                     | affine `a·x + b`    |
+//! | `InverseGamma`      | `Normal` sd                       | `sqrt(a·x)` (pure)  |
+//! | `Gamma`             | `Poisson` rate                    | pure scale `a·x`    |
+//! | `Beta`              | `Bernoulli` p                     | identity            |
+//! | `Dirichlet`         | `add_obs_logp(w[k].ln())` terms   | `ln(w[k])` only     |
+//!
+//! Children may be observations (scalar, plate, int) *or* latent assume
+//! sites — a latent child contributes its current trace value to the
+//! conditional, which is exactly Gibbs. Any unrecognized dependent use
+//! (non-affine glue, a dependent `ObsLogp`, a dependent position of the
+//! wrong kind) kills the certificate and the site stays on the generic
+//! samplers.
+
+use std::collections::BTreeSet;
+
+use crate::ad::record::{Op, Src};
+use crate::dist::{bijector, DiscreteDist, Normal, ScalarDist, VecDist};
+use crate::model::compiled::{visit_item_srcs, visit_op_srcs, Item, Recording};
+use crate::obs::metrics::{self, Counter};
+use crate::util::rng::Rng;
+use crate::varinfo::TypedVarInfo;
+
+use super::graph::{DepMap, SiteGraph};
+
+/// The five recognized conjugate parent/child families.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ConjugateFamily {
+    NormalNormal,
+    NormalInverseGamma,
+    GammaPoisson,
+    BetaBernoulli,
+    DirichletCategorical,
+}
+
+impl ConjugateFamily {
+    pub fn key(&self) -> &'static str {
+        match self {
+            ConjugateFamily::NormalNormal => "normal-normal",
+            ConjugateFamily::NormalInverseGamma => "normal-inverse-gamma",
+            ConjugateFamily::GammaPoisson => "gamma-poisson",
+            ConjugateFamily::BetaBernoulli => "beta-bernoulli",
+            ConjugateFamily::DirichletCategorical => "dirichlet-categorical",
+        }
+    }
+}
+
+/// One recognized child term of a certificate.
+#[derive(Clone, Debug)]
+pub(crate) enum Child {
+    /// A recording item (observe / plate / latent assume). For latent
+    /// children the value is read from the live trace at draw time.
+    Item {
+        item: usize,
+        latent_slot: Option<usize>,
+    },
+    /// Dirichlet only: one observed draw of category `k` recorded as
+    /// `add_obs_logp(w[k].ln())`.
+    Category { k: usize },
+}
+
+/// A certified conjugate site: the proof that its full conditional is
+/// available in closed form given the current values of every other site.
+#[derive(Clone, Debug)]
+pub struct ConjugacyCert {
+    /// Site index into the [`SiteGraph`].
+    pub site: usize,
+    /// Slot index into `TypedVarInfo::slots()`.
+    pub slot: usize,
+    /// Recording item index of the parent's assume.
+    pub(crate) item: usize,
+    /// Full varname of the parent site.
+    pub name: String,
+    pub family: ConjugateFamily,
+    /// Number of recognized child terms (plate rows count individually).
+    pub n_children: usize,
+    pub(crate) children: Vec<Child>,
+}
+
+// ------------------------------------------------------- classification
+
+/// Affinity of a register's value in the parent's output `x`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Aff {
+    /// Does not depend on `x`.
+    Indep,
+    /// `a·x + b`; `pure` means `b = 0` (built via `Mul`/`Div`/`Neg` only).
+    Lin { pure: bool },
+    /// `c·sqrt(a·x)` with pure inner scale — the `sd = sqrt(a·v)` shape.
+    SqrtLin,
+    /// Any other dependent shape.
+    Bad,
+}
+
+fn src_cls(cls: &[Aff], dep: &DepMap, site: usize, s: &Src) -> Aff {
+    match s {
+        Src::Const(_) => Aff::Indep,
+        Src::Reg(r) => {
+            if dep.reg_depends(*r, site) {
+                cls[*r as usize]
+            } else {
+                Aff::Indep
+            }
+        }
+    }
+}
+
+/// One pass over the opcode stream classifying every register's shape in
+/// the parent's output. Registers independent of the parent stay `Indep`;
+/// SSA ordering guarantees inputs are classified before use.
+fn classify(rec: &Recording, dep: &DepMap, site: usize, x_reg: u32) -> Vec<Aff> {
+    let mut cls = vec![Aff::Indep; rec.n_regs as usize];
+    cls[x_reg as usize] = Aff::Lin { pure: true };
+    for rop in &rec.ops {
+        if !dep.reg_depends(rop.out, site) {
+            continue;
+        }
+        let c = |s: &Src| src_cls(&cls, dep, site, s);
+        let out_cls = match &rop.op {
+            Op::Add(a, b) | Op::Sub(a, b) => match (c(a), c(b)) {
+                (Aff::Lin { pure: p1 }, Aff::Lin { pure: p2 }) => Aff::Lin { pure: p1 && p2 },
+                (Aff::Lin { .. }, Aff::Indep) | (Aff::Indep, Aff::Lin { .. }) => {
+                    Aff::Lin { pure: false }
+                }
+                _ => Aff::Bad,
+            },
+            Op::Mul(a, b) => match (c(a), c(b)) {
+                (Aff::Lin { pure }, Aff::Indep) | (Aff::Indep, Aff::Lin { pure }) => {
+                    Aff::Lin { pure }
+                }
+                (Aff::SqrtLin, Aff::Indep) | (Aff::Indep, Aff::SqrtLin) => Aff::SqrtLin,
+                _ => Aff::Bad,
+            },
+            Op::Div(a, b) => match (c(a), c(b)) {
+                (Aff::Lin { pure }, Aff::Indep) => Aff::Lin { pure },
+                (Aff::SqrtLin, Aff::Indep) => Aff::SqrtLin,
+                _ => Aff::Bad,
+            },
+            Op::Neg(r) => match src_cls(&cls, dep, site, &Src::Reg(*r)) {
+                Aff::Lin { pure } => Aff::Lin { pure },
+                _ => Aff::Bad,
+            },
+            Op::Sqrt(r) => match src_cls(&cls, dep, site, &Src::Reg(*r)) {
+                Aff::Lin { pure: true } => Aff::SqrtLin,
+                _ => Aff::Bad,
+            },
+            _ => Aff::Bad,
+        };
+        cls[rop.out as usize] = out_cls;
+    }
+    cls
+}
+
+// ----------------------------------------------------------- detection
+
+/// Scan every site for a certifiable conjugate pattern.
+pub(crate) fn detect(rec: &Recording, dep: &DepMap, graph: &SiteGraph) -> Vec<ConjugacyCert> {
+    let mut certs = Vec::new();
+    for (si, site) in graph.sites.iter().enumerate() {
+        let cert = match &rec.items[site.item].item {
+            Item::AssumeScalar { out, dist, .. } => {
+                let family = match dist {
+                    ScalarDist::Normal(_) => Some(ConjugateFamily::NormalNormal),
+                    ScalarDist::InverseGamma(_) => Some(ConjugateFamily::NormalInverseGamma),
+                    ScalarDist::Gamma(_) => Some(ConjugateFamily::GammaPoisson),
+                    ScalarDist::Beta(_) => Some(ConjugateFamily::BetaBernoulli),
+                    _ => None,
+                };
+                family.and_then(|f| scalar_cert(rec, dep, si, site.item, site.slot, *out, f))
+                    .map(|mut c| {
+                        c.name = site.name.clone();
+                        c
+                    })
+            }
+            Item::AssumeVec {
+                out,
+                dist: VecDist::Dirichlet(_),
+                ..
+            } => dirichlet_cert(rec, dep, si, site.item, site.slot, out).map(|mut c| {
+                c.name = site.name.clone();
+                c
+            }),
+            _ => None,
+        };
+        if let Some(c) = cert {
+            certs.push(c);
+        }
+    }
+    certs
+}
+
+fn rows_of(item: &Item) -> usize {
+    match item {
+        Item::PlateScalar { obs, .. } => obs.len(),
+        Item::PlateInt { obs, .. } => obs.len(),
+        _ => 1,
+    }
+}
+
+fn scalar_cert(
+    rec: &Recording,
+    dep: &DepMap,
+    si: usize,
+    parent_item: usize,
+    slot: usize,
+    x_reg: u32,
+    family: ConjugateFamily,
+) -> Option<ConjugacyCert> {
+    let cls = classify(rec, dep, si, x_reg);
+    let c = |s: &Src| src_cls(&cls, dep, si, s);
+    let mut children: Vec<Child> = Vec::new();
+    let mut n_children = 0usize;
+    for (ii, ri) in rec.items.iter().enumerate() {
+        if ii == parent_item {
+            continue;
+        }
+        let mut involved = false;
+        visit_item_srcs(&ri.item, &mut |s| involved |= dep.src_depends(s, si));
+        if !involved {
+            continue;
+        }
+        let child = match (family, &ri.item) {
+            // Normal parent feeding a Normal child's mean (affine), sd free
+            (
+                ConjugateFamily::NormalNormal,
+                Item::Observe {
+                    dist: ScalarDist::Normal(_),
+                    ps,
+                    ..
+                },
+            )
+            | (
+                ConjugateFamily::NormalNormal,
+                Item::PlateScalar {
+                    dist: ScalarDist::Normal(_),
+                    ps,
+                    ..
+                },
+            ) if matches!(c(&ps[0]), Aff::Lin { .. }) && c(&ps[1]) == Aff::Indep => Some(Child::Item {
+                item: ii,
+                latent_slot: None,
+            }),
+            (
+                ConjugateFamily::NormalNormal,
+                Item::AssumeScalar {
+                    dist: ScalarDist::Normal(_),
+                    ps,
+                    slot: cslot,
+                    ..
+                },
+            ) if matches!(c(&ps[0]), Aff::Lin { .. }) && c(&ps[1]) == Aff::Indep => Some(Child::Item {
+                item: ii,
+                latent_slot: Some(*cslot),
+            }),
+            // InverseGamma parent feeding a Normal child's sd as sqrt(a·x)
+            (
+                ConjugateFamily::NormalInverseGamma,
+                Item::Observe {
+                    dist: ScalarDist::Normal(_),
+                    ps,
+                    ..
+                },
+            )
+            | (
+                ConjugateFamily::NormalInverseGamma,
+                Item::PlateScalar {
+                    dist: ScalarDist::Normal(_),
+                    ps,
+                    ..
+                },
+            ) if c(&ps[1]) == Aff::SqrtLin && c(&ps[0]) == Aff::Indep => Some(Child::Item {
+                item: ii,
+                latent_slot: None,
+            }),
+            (
+                ConjugateFamily::NormalInverseGamma,
+                Item::AssumeScalar {
+                    dist: ScalarDist::Normal(_),
+                    ps,
+                    slot: cslot,
+                    ..
+                },
+            ) if c(&ps[1]) == Aff::SqrtLin && c(&ps[0]) == Aff::Indep => Some(Child::Item {
+                item: ii,
+                latent_slot: Some(*cslot),
+            }),
+            // Gamma parent feeding a Poisson rate as a pure scale a·x
+            (
+                ConjugateFamily::GammaPoisson,
+                Item::ObserveInt {
+                    dist: DiscreteDist::Poisson(_),
+                    p,
+                    ..
+                },
+            )
+            | (
+                ConjugateFamily::GammaPoisson,
+                Item::PlateInt {
+                    dist: DiscreteDist::Poisson(_),
+                    p,
+                    ..
+                },
+            ) if c(p) == (Aff::Lin { pure: true }) => Some(Child::Item {
+                item: ii,
+                latent_slot: None,
+            }),
+            (
+                ConjugateFamily::GammaPoisson,
+                Item::AssumeInt {
+                    dist: DiscreteDist::Poisson(_),
+                    p,
+                    slot: cslot,
+                },
+            ) if c(p) == (Aff::Lin { pure: true }) => Some(Child::Item {
+                item: ii,
+                latent_slot: Some(*cslot),
+            }),
+            // Beta parent feeding a Bernoulli p — identity only
+            (
+                ConjugateFamily::BetaBernoulli,
+                Item::ObserveInt {
+                    dist: DiscreteDist::Bernoulli(_),
+                    p: Src::Reg(r),
+                    ..
+                },
+            )
+            | (
+                ConjugateFamily::BetaBernoulli,
+                Item::PlateInt {
+                    dist: DiscreteDist::Bernoulli(_),
+                    p: Src::Reg(r),
+                    ..
+                },
+            ) if *r == x_reg => Some(Child::Item {
+                item: ii,
+                latent_slot: None,
+            }),
+            (
+                ConjugateFamily::BetaBernoulli,
+                Item::AssumeInt {
+                    dist: DiscreteDist::Bernoulli(_),
+                    p: Src::Reg(r),
+                    slot: cslot,
+                },
+            ) if *r == x_reg => Some(Child::Item {
+                item: ii,
+                latent_slot: Some(*cslot),
+            }),
+            _ => None,
+        };
+        match child {
+            Some(ch) => {
+                n_children += rows_of(&ri.item);
+                children.push(ch);
+            }
+            // an unrecognized dependent use — no certificate
+            None => return None,
+        }
+    }
+    if children.is_empty() {
+        return None;
+    }
+    Some(ConjugacyCert {
+        site: si,
+        slot,
+        item: parent_item,
+        name: String::new(),
+        family,
+        n_children,
+        children,
+    })
+}
+
+fn dirichlet_cert(
+    rec: &Recording,
+    dep: &DepMap,
+    si: usize,
+    parent_item: usize,
+    slot: usize,
+    out: &[u32],
+) -> Option<ConjugacyCert> {
+    // Every dependent opcode must be `Ln(w[k])`; record which category
+    // each such register logs.
+    let mut ln_of: std::collections::HashMap<u32, usize> = std::collections::HashMap::new();
+    for rop in &rec.ops {
+        let mut involved = false;
+        visit_op_srcs(&rop.op, &mut |s| involved |= dep.src_depends(s, si));
+        if !involved {
+            continue;
+        }
+        match &rop.op {
+            Op::Ln(r) => match out.iter().position(|&w| w == *r) {
+                Some(k) => {
+                    ln_of.insert(rop.out, k);
+                }
+                None => return None,
+            },
+            _ => return None,
+        }
+    }
+    let mut children = Vec::new();
+    for (ii, ri) in rec.items.iter().enumerate() {
+        if ii == parent_item {
+            continue;
+        }
+        let mut involved = false;
+        visit_item_srcs(&ri.item, &mut |s| involved |= dep.src_depends(s, si));
+        if !involved {
+            continue;
+        }
+        match &ri.item {
+            Item::ObsLogp { lp: Src::Reg(r) } => match ln_of.get(r) {
+                Some(&k) => children.push(Child::Category { k }),
+                None => return None,
+            },
+            _ => return None,
+        }
+    }
+    if children.is_empty() {
+        return None;
+    }
+    Some(ConjugacyCert {
+        site: si,
+        slot,
+        item: parent_item,
+        name: String::new(),
+        family: ConjugateFamily::DirichletCategorical,
+        n_children: children.len(),
+        children,
+    })
+}
+
+// ------------------------------------------------------- replay / draw
+
+fn src_val(regs: &[f64], s: &Src) -> f64 {
+    match s {
+        Src::Reg(r) => regs[*r as usize],
+        Src::Const(c) => *c,
+    }
+}
+
+fn eval_op(regs: &[f64], op: &Op) -> f64 {
+    use crate::util::math;
+    match op {
+        Op::Add(a, b) => src_val(regs, a) + src_val(regs, b),
+        Op::Sub(a, b) => src_val(regs, a) - src_val(regs, b),
+        Op::Mul(a, b) => src_val(regs, a) * src_val(regs, b),
+        Op::Div(a, b) => src_val(regs, a) / src_val(regs, b),
+        Op::Neg(r) => -regs[*r as usize],
+        Op::Ln(r) => regs[*r as usize].ln(),
+        Op::Exp(r) => regs[*r as usize].exp(),
+        Op::Sqrt(r) => regs[*r as usize].sqrt(),
+        Op::Ln1p(r) => regs[*r as usize].ln_1p(),
+        Op::Tanh(r) => regs[*r as usize].tanh(),
+        Op::Sin(r) => regs[*r as usize].sin(),
+        Op::Cos(r) => regs[*r as usize].cos(),
+        Op::Lgamma(r) => math::lgamma(regs[*r as usize]),
+        Op::Powi(r, i) => regs[*r as usize].powi(*i),
+        Op::Powf(r, p) => regs[*r as usize].powf(*p),
+        Op::Abs(r) => regs[*r as usize].abs(),
+        Op::Log1pExp(r) => math::log1p_exp(regs[*r as usize]),
+        Op::LogSigmoid(r) => math::log_sigmoid(regs[*r as usize]),
+        Op::Sigmoid(r) => math::sigmoid(regs[*r as usize]),
+        Op::LogAddExp(a, b) => math::log_add_exp(src_val(regs, a), src_val(regs, b)),
+        Op::Lse(xs) => {
+            let vals: Vec<f64> = xs.iter().map(|s| src_val(regs, s)).collect();
+            math::log_sum_exp(&vals)
+        }
+    }
+}
+
+/// Replay the recording's register file at `theta`, optionally overriding
+/// one scalar slot's *constrained* value (the conjugacy probe). Assume
+/// registers are seeded through the slot bijectors — the same primal
+/// arithmetic the recorder itself ran — and glue opcodes are interpreted
+/// in order.
+pub(crate) fn eval_regs(
+    rec: &Recording,
+    tvi: &TypedVarInfo,
+    theta: &[f64],
+    override_slot: Option<(usize, f64)>,
+    regs: &mut Vec<f64>,
+) {
+    regs.clear();
+    regs.resize(rec.n_regs as usize, 0.0);
+    let slots = tvi.slots();
+    let mut cursor = 0usize;
+    let mut buf: Vec<f64> = Vec::new();
+    for ri in &rec.items {
+        while cursor < ri.glue_end {
+            let rop = &rec.ops[cursor];
+            regs[rop.out as usize] = eval_op(regs, &rop.op);
+            cursor += 1;
+        }
+        match &ri.item {
+            Item::AssumeScalar { slot, out, .. } => {
+                let s = &slots[*slot];
+                let x = match override_slot {
+                    Some((os, v)) if os == *slot => v,
+                    _ => bijector::invlink_scalar_adj(&s.domain, theta[s.unc_offset]).x,
+                };
+                regs[*out as usize] = x;
+            }
+            Item::AssumeVec { slot, out, .. } => {
+                let s = &slots[*slot];
+                buf.clear();
+                buf.resize(s.cons_len, 0.0);
+                bijector::invlink_slice(
+                    &s.domain,
+                    &theta[s.unc_offset..s.unc_offset + s.unc_len],
+                    &mut buf,
+                );
+                for (&r, &x) in out.iter().zip(buf.iter()) {
+                    regs[r as usize] = x;
+                }
+            }
+            _ => {}
+        }
+    }
+    while cursor < rec.ops.len() {
+        let rop = &rec.ops[cursor];
+        regs[rop.out as usize] = eval_op(regs, &rop.op);
+        cursor += 1;
+    }
+}
+
+/// A child term's value rows plus its parameter sources, resolved for the
+/// accumulation loops below.
+fn child_rows<'a>(
+    rec: &'a Recording,
+    tvi: &TypedVarInfo,
+    theta: &[f64],
+    ch: &Child,
+) -> (Vec<f64>, &'a [Src; crate::dist::MAX_DIST_PARAMS], Option<&'a Src>) {
+    static ZERO_PS: [Src; crate::dist::MAX_DIST_PARAMS] =
+        [Src::Const(0.0), Src::Const(0.0)];
+    let slots = tvi.slots();
+    match ch {
+        Child::Item { item, latent_slot } => match &rec.items[*item].item {
+            Item::Observe { ps, obs, .. } => (vec![*obs], ps, None),
+            Item::PlateScalar { ps, obs, .. } => (obs.clone(), ps, None),
+            Item::AssumeScalar { ps, .. } => {
+                let s = &slots[latent_slot.expect("latent scalar child without slot")];
+                let x = bijector::invlink_scalar_adj(&s.domain, theta[s.unc_offset]).x;
+                (vec![x], ps, None)
+            }
+            Item::ObserveInt { p, obs, .. } => (vec![*obs as f64], &ZERO_PS, Some(p)),
+            Item::PlateInt { p, obs, .. } => {
+                (obs.iter().map(|&k| k as f64).collect(), &ZERO_PS, Some(p))
+            }
+            Item::AssumeInt { p, .. } => {
+                let s = &slots[latent_slot.expect("latent int child without slot")];
+                (vec![tvi.discrete[s.disc_offset] as f64], &ZERO_PS, Some(p))
+            }
+            other => unreachable!("unexpected conjugate child item {:?}", std::mem::discriminant(other)),
+        },
+        Child::Category { .. } => unreachable!("category child has no rows"),
+    }
+}
+
+/// Closed-form posterior parameters of a certified scalar site given the
+/// current trace, extracted by two-point probing of the register file.
+/// Returned as `(p1, p2)` with family-dependent meaning: Normal →
+/// `(mean, sd)`, InverseGamma → `(shape, scale)`, Gamma → `(shape, rate)`,
+/// Beta → `(a, b)`.
+pub(crate) fn scalar_posterior(
+    rec: &Recording,
+    cert: &ConjugacyCert,
+    tvi: &TypedVarInfo,
+    theta: &[f64],
+) -> (f64, f64) {
+    let (x0, x1) = match cert.family {
+        ConjugateFamily::NormalNormal => (0.0, 1.0),
+        ConjugateFamily::NormalInverseGamma | ConjugateFamily::GammaPoisson => (1.0, 2.0),
+        ConjugateFamily::BetaBernoulli => (0.25, 0.5),
+        ConjugateFamily::DirichletCategorical => unreachable!("scalar posterior on Dirichlet"),
+    };
+    let mut r0 = Vec::new();
+    let mut r1 = Vec::new();
+    eval_regs(rec, tvi, theta, Some((cert.slot, x0)), &mut r0);
+    eval_regs(rec, tvi, theta, Some((cert.slot, x1)), &mut r1);
+    let Item::AssumeScalar { ps, .. } = &rec.items[cert.item].item else {
+        unreachable!("scalar cert over non-scalar parent")
+    };
+    let h0 = src_val(&r0, &ps[0]);
+    let h1 = src_val(&r0, &ps[1]);
+    match cert.family {
+        ConjugateFamily::NormalNormal => {
+            let (mu0, sd0) = (h0, h1);
+            let mut prec = 1.0 / (sd0 * sd0);
+            let mut num = mu0 * prec;
+            for ch in &cert.children {
+                let (rows, ps, _) = child_rows(rec, tvi, theta, ch);
+                let m0 = src_val(&r0, &ps[0]);
+                let m1 = src_val(&r1, &ps[0]);
+                let a = (m1 - m0) / (x1 - x0);
+                let b = m0 - a * x0;
+                let sd = src_val(&r0, &ps[1]);
+                let w = a / (sd * sd);
+                for y in rows {
+                    prec += a * w;
+                    num += w * (y - b);
+                }
+            }
+            let var = 1.0 / prec;
+            (num * var, var.sqrt())
+        }
+        ConjugateFamily::NormalInverseGamma => {
+            let (mut shape, mut scale) = (h0, h1);
+            for ch in &cert.children {
+                let (rows, ps, _) = child_rows(rec, tvi, theta, ch);
+                let s_probe = src_val(&r0, &ps[1]);
+                // sd(x) = sqrt(a·x)  ⇒  a = sd(x0)² / x0
+                let a = s_probe * s_probe / x0;
+                let mu = src_val(&r0, &ps[0]);
+                for y in rows {
+                    shape += 0.5;
+                    scale += (y - mu) * (y - mu) / (2.0 * a);
+                }
+            }
+            (shape, scale)
+        }
+        ConjugateFamily::GammaPoisson => {
+            let (mut shape, mut rate) = (h0, h1);
+            for ch in &cert.children {
+                let (rows, _, p) = child_rows(rec, tvi, theta, ch);
+                let p = p.expect("Poisson child without rate src");
+                // rate(x) = a·x (pure)  ⇒  a = rate(x0) / x0
+                let a = src_val(&r0, p) / x0;
+                for k in rows {
+                    shape += k;
+                    rate += a;
+                }
+            }
+            (shape, rate)
+        }
+        ConjugateFamily::BetaBernoulli => {
+            let (mut a, mut b) = (h0, h1);
+            for ch in &cert.children {
+                let (rows, _, _) = child_rows(rec, tvi, theta, ch);
+                for k in rows {
+                    if k >= 0.5 {
+                        a += 1.0;
+                    } else {
+                        b += 1.0;
+                    }
+                }
+            }
+            (a, b)
+        }
+        ConjugateFamily::DirichletCategorical => unreachable!(),
+    }
+}
+
+/// Draw the certified site from its exact full conditional and write the
+/// new value back into `theta` (through the slot's link bijector).
+pub(crate) fn draw(
+    rec: &Recording,
+    cert: &ConjugacyCert,
+    tvi: &TypedVarInfo,
+    theta: &mut [f64],
+    rng: &mut dyn Rng,
+) {
+    let slots = tvi.slots();
+    let pslot = &slots[cert.slot];
+    let mut buf: Vec<f64> = Vec::new();
+    if cert.family == ConjugateFamily::DirichletCategorical {
+        let Item::AssumeVec {
+            dist: VecDist::Dirichlet(d),
+            ..
+        } = &rec.items[cert.item].item
+        else {
+            unreachable!("Dirichlet cert over non-Dirichlet parent")
+        };
+        let mut alpha = d.alpha.clone();
+        for ch in &cert.children {
+            if let Child::Category { k } = ch {
+                alpha[*k] += 1.0;
+            }
+        }
+        let mut xs = vec![0.0; alpha.len()];
+        rng.dirichlet_into(&alpha, &mut xs);
+        // keep the draw strictly interior so the link stays finite
+        let mut total = 0.0;
+        for x in xs.iter_mut() {
+            *x = x.max(1e-12);
+            total += *x;
+        }
+        for x in xs.iter_mut() {
+            *x /= total;
+        }
+        bijector::link(&pslot.domain, &xs, &mut buf);
+        theta[pslot.unc_offset..pslot.unc_offset + pslot.unc_len].copy_from_slice(&buf);
+        metrics::inc(Counter::ConjugateDraws);
+        return;
+    }
+    let (p1, p2) = scalar_posterior(rec, cert, tvi, theta);
+    let x_new = match cert.family {
+        ConjugateFamily::NormalNormal => p1 + p2 * rng.normal(),
+        ConjugateFamily::NormalInverseGamma => (p2 / rng.gamma(p1)).max(1e-300),
+        ConjugateFamily::GammaPoisson => (rng.gamma(p1) / p2).max(1e-300),
+        ConjugateFamily::BetaBernoulli => rng.beta(p1, p2).clamp(1e-12, 1.0 - 1e-12),
+        ConjugateFamily::DirichletCategorical => unreachable!(),
+    };
+    bijector::link(&pslot.domain, &[x_new], &mut buf);
+    theta[pslot.unc_offset..pslot.unc_offset + pslot.unc_len].copy_from_slice(&buf);
+    metrics::inc(Counter::ConjugateDraws);
+}
+
+/// Exact per-observation collapsed log-weights `log p(y_t | y_{1:t-1})`
+/// for a single-site Normal–Normal model: the parent is marginalized in
+/// closed form by sequential conjugate updating. Only certified when the
+/// parent is the model's *only* site and every observation term is one of
+/// its recognized children — then the sum of the returned weights is the
+/// model's exact log-evidence (the Rao-Blackwellized, zero-variance form
+/// of the SMC estimate).
+pub(crate) fn collapsed_logweights(
+    rec: &Recording,
+    cert: &ConjugacyCert,
+    tvi: &TypedVarInfo,
+    graph: &SiteGraph,
+) -> Option<Vec<f64>> {
+    if cert.family != ConjugateFamily::NormalNormal || graph.sites.len() != 1 {
+        return None;
+    }
+    let mut child_items = BTreeSet::new();
+    for ch in &cert.children {
+        match ch {
+            Child::Item {
+                item,
+                latent_slot: None,
+            } => {
+                child_items.insert(*item);
+            }
+            _ => return None,
+        }
+    }
+    for (ii, ri) in rec.items.iter().enumerate() {
+        if super::graph::is_obs_item(&ri.item) && !child_items.contains(&ii) {
+            return None;
+        }
+    }
+    let theta = &tvi.unconstrained;
+    let (x0, x1) = (0.0, 1.0);
+    let mut r0 = Vec::new();
+    let mut r1 = Vec::new();
+    eval_regs(rec, tvi, theta, Some((cert.slot, x0)), &mut r0);
+    eval_regs(rec, tvi, theta, Some((cert.slot, x1)), &mut r1);
+    let Item::AssumeScalar { ps, .. } = &rec.items[cert.item].item else {
+        return None;
+    };
+    let mut mu = src_val(&r0, &ps[0]);
+    let sd0 = src_val(&r0, &ps[1]);
+    let mut var = sd0 * sd0;
+    let mut out = Vec::with_capacity(cert.n_children);
+    for ch in &cert.children {
+        let (rows, cps, _) = child_rows(rec, tvi, theta, ch);
+        let m0 = src_val(&r0, &cps[0]);
+        let m1 = src_val(&r1, &cps[0]);
+        let a = (m1 - m0) / (x1 - x0);
+        let b = m0 - a * x0;
+        let sd = src_val(&r0, &cps[1]);
+        let s2 = sd * sd;
+        for y in rows {
+            // predictive: y ~ N(a·mu + b, a²·var + sd²)
+            let pvar = a * a * var + s2;
+            out.push(Normal::new(a * mu + b, pvar.sqrt()).logpdf(y));
+            // posterior update
+            let prec = 1.0 / var + a * a / s2;
+            let num = mu / var + a * (y - b) / s2;
+            var = 1.0 / prec;
+            mu = num * var;
+        }
+    }
+    Some(out)
+}

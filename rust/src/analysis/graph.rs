@@ -1,0 +1,440 @@
+//! Site-dependency graph over the recorded tilde program.
+//!
+//! The PR-8 recorder ([`crate::model::compiled`]) already resolves every
+//! tilde site to a slot and every scalar of glue arithmetic to a register
+//! opcode. This module runs one forward dataflow pass over that IR and
+//! produces, per parameter site: its **parent sites** (sites whose value
+//! flows into one of its distribution parameters), its **children**, its
+//! **Markov blanket** (parents ∪ children ∪ co-parents), whether it has
+//! any dataflow path to an observation, and which observation **plates**
+//! it feeds. No model re-execution happens — the analysis is purely over
+//! the recording.
+
+use crate::ad::record::Src;
+use crate::model::compiled::{visit_item_srcs, visit_op_srcs, Item, Recording};
+use crate::dist::{DiscreteDist, ScalarDist, VecDist};
+use crate::varinfo::TypedVarInfo;
+
+use std::collections::BTreeSet;
+
+/// Human-readable family tag for a scalar distribution template.
+pub(crate) fn sdist_name(d: &ScalarDist<f64>) -> &'static str {
+    match d {
+        ScalarDist::Normal(_) => "Normal",
+        ScalarDist::InverseGamma(_) => "InverseGamma",
+        ScalarDist::Gamma(_) => "Gamma",
+        ScalarDist::Beta(_) => "Beta",
+        ScalarDist::Exponential(_) => "Exponential",
+        ScalarDist::Uniform(_) => "Uniform",
+        ScalarDist::Cauchy(_) => "Cauchy",
+        ScalarDist::HalfCauchy(_) => "HalfCauchy",
+    }
+}
+
+pub(crate) fn vdist_name(d: &VecDist<f64>) -> &'static str {
+    match d {
+        VecDist::IsoNormal(_) => "IsoNormal",
+        VecDist::Dirichlet(_) => "Dirichlet",
+    }
+}
+
+pub(crate) fn ddist_name(d: &DiscreteDist<f64>) -> &'static str {
+    match d {
+        DiscreteDist::Bernoulli(_) => "Bernoulli",
+        DiscreteDist::BernoulliLogit(_) => "BernoulliLogit",
+        DiscreteDist::Poisson(_) => "Poisson",
+        DiscreteDist::Categorical(_) => "Categorical",
+    }
+}
+
+fn item_family(item: &Item) -> &'static str {
+    match item {
+        Item::AssumeScalar { dist, .. } | Item::Observe { dist, .. } | Item::PlateScalar { dist, .. } => {
+            sdist_name(dist)
+        }
+        Item::AssumeVec { dist, .. } | Item::ObserveVec { dist, .. } => vdist_name(dist),
+        Item::AssumeInt { dist, .. } | Item::ObserveInt { dist, .. } | Item::PlateInt { dist, .. } => {
+            ddist_name(dist)
+        }
+        Item::ObsLogp { .. } => "logp",
+        Item::PriorLogp { .. } => "logp",
+        Item::SkipObs { .. } => "skip",
+    }
+}
+
+/// Per-register parameter-site dependence, as a flat bitset (one row of
+/// `words` × `u64` per register). Registers are SSA — each is written
+/// exactly once, and only by opcodes/items that precede its uses — so a
+/// single in-order pass computes the full transitive dependence.
+pub(crate) struct DepMap {
+    pub(crate) n_sites: usize,
+    words: usize,
+    bits: Vec<u64>,
+    /// Item index → site index, for assume items.
+    pub(crate) site_of_item: Vec<Option<usize>>,
+}
+
+impl DepMap {
+    fn row(&self, r: u32) -> &[u64] {
+        let w = self.words;
+        &self.bits[r as usize * w..r as usize * w + w]
+    }
+
+    pub(crate) fn reg_depends(&self, r: u32, site: usize) -> bool {
+        self.row(r)[site / 64] >> (site % 64) & 1 == 1
+    }
+
+    pub(crate) fn src_depends(&self, s: &Src, site: usize) -> bool {
+        match s {
+            Src::Reg(r) => self.reg_depends(*r, site),
+            Src::Const(_) => false,
+        }
+    }
+
+    /// Append every site the register depends on to `out`.
+    fn reg_sites_into(&self, r: u32, out: &mut BTreeSet<usize>) {
+        for (wi, &w) in self.row(r).iter().enumerate() {
+            let mut bits = w;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                out.insert(wi * 64 + b);
+                bits &= bits - 1;
+            }
+        }
+    }
+
+    pub(crate) fn src_sites_into(&self, s: &Src, out: &mut BTreeSet<usize>) {
+        if let Src::Reg(r) = s {
+            self.reg_sites_into(*r, out);
+        }
+    }
+
+    /// All sites any of the item's parameter sources depends on.
+    pub(crate) fn item_sites(&self, item: &Item) -> BTreeSet<usize> {
+        let mut set = BTreeSet::new();
+        visit_item_srcs(item, &mut |s| self.src_sites_into(s, &mut set));
+        set
+    }
+}
+
+/// One parameter site (a recorded assume), with its graph neighborhood.
+#[derive(Clone, Debug)]
+pub struct SiteInfo {
+    /// Full varname (e.g. `h[3]`).
+    pub name: String,
+    /// Base symbol (e.g. `h`) — the dedup key for per-plate site families.
+    pub sym: String,
+    /// Index into `TypedVarInfo::slots()`.
+    pub slot: usize,
+    /// Index of the recording item that declared this site.
+    pub item: usize,
+    pub is_discrete: bool,
+    pub is_vec: bool,
+    /// Prior distribution family name.
+    pub family: &'static str,
+    /// Sites whose value feeds this site's distribution parameters.
+    pub parents: Vec<usize>,
+    /// Sites whose distribution parameters this site feeds.
+    pub children: Vec<usize>,
+    /// Markov blanket: parents ∪ children ∪ co-parents of shared terms.
+    pub blanket: Vec<usize>,
+    /// Whether any directed dataflow path reaches an observation term.
+    pub observed_reachable: bool,
+    /// Number of observation terms (items) this site feeds directly.
+    pub n_obs_terms: usize,
+    /// Observation plates (indices into [`SiteGraph::plates`]) fed.
+    pub plates: Vec<usize>,
+}
+
+/// A run of ≥ 2 consecutive observation rows sharing one distribution
+/// family and parameter sources — the same grouping rule the compiler's
+/// plate vectorizer uses.
+#[derive(Clone, Debug)]
+pub struct PlateInfo {
+    pub rows: usize,
+    pub family: &'static str,
+    /// Parameter sites feeding the plate's distribution parameters.
+    pub sites: Vec<usize>,
+    /// Whether every observed value in the plate is bitwise identical.
+    pub constant_data: bool,
+}
+
+/// The model's site-dependency graph.
+#[derive(Clone, Debug)]
+pub struct SiteGraph {
+    pub sites: Vec<SiteInfo>,
+    pub plates: Vec<PlateInfo>,
+    /// Observation-carrying items in the recording (plates count as one).
+    pub n_obs_items: usize,
+}
+
+impl SiteGraph {
+    pub fn site_by_name(&self, name: &str) -> Option<&SiteInfo> {
+        self.sites.iter().find(|s| s.name == name)
+    }
+}
+
+pub(crate) fn is_obs_item(item: &Item) -> bool {
+    matches!(
+        item,
+        Item::Observe { .. }
+            | Item::ObserveInt { .. }
+            | Item::ObserveVec { .. }
+            | Item::ObsLogp { .. }
+            | Item::PlateScalar { .. }
+            | Item::PlateInt { .. }
+    )
+}
+
+/// Build the site graph plus the internal register dependence map.
+pub(crate) fn build(rec: &Recording, tvi: &TypedVarInfo) -> (SiteGraph, DepMap) {
+    let slots = tvi.slots();
+
+    // 1. Enumerate sites (assume items) in walk order.
+    let mut sites: Vec<SiteInfo> = Vec::new();
+    let mut site_of_item: Vec<Option<usize>> = vec![None; rec.items.len()];
+    for (ii, ri) in rec.items.iter().enumerate() {
+        let (slot, is_discrete, is_vec) = match &ri.item {
+            Item::AssumeScalar { slot, .. } => (*slot, false, false),
+            Item::AssumeVec { slot, .. } => (*slot, false, true),
+            Item::AssumeInt { slot, .. } => (*slot, true, false),
+            _ => continue,
+        };
+        site_of_item[ii] = Some(sites.len());
+        let s = &slots[slot];
+        sites.push(SiteInfo {
+            name: format!("{}", s.vn),
+            sym: s.vn.sym().as_str(),
+            slot,
+            item: ii,
+            is_discrete,
+            is_vec,
+            family: item_family(&ri.item),
+            parents: Vec::new(),
+            children: Vec::new(),
+            blanket: Vec::new(),
+            observed_reachable: false,
+            n_obs_terms: 0,
+            plates: Vec::new(),
+        });
+    }
+    let n_sites = sites.len();
+    let words = (n_sites + 63) / 64;
+    let words = words.max(1);
+
+    // 2. Forward dataflow: seed assume output registers with their site
+    //    bit, then fold opcode inputs in recording order (SSA order).
+    let mut bits = vec![0u64; rec.n_regs as usize * words];
+    let set_bit = |bits: &mut [u64], r: u32, site: usize| {
+        bits[r as usize * words + site / 64] |= 1u64 << (site % 64);
+    };
+    for (ii, ri) in rec.items.iter().enumerate() {
+        let Some(site) = site_of_item[ii] else { continue };
+        match &ri.item {
+            Item::AssumeScalar { out, .. } => set_bit(&mut bits, *out, site),
+            Item::AssumeVec { out, .. } => {
+                for &r in out {
+                    set_bit(&mut bits, r, site);
+                }
+            }
+            // discrete sites produce no register; their influence on the
+            // walk (branching) is structural, not dataflow
+            Item::AssumeInt { .. } => {}
+            _ => unreachable!(),
+        }
+    }
+    let mut acc = vec![0u64; words];
+    for rop in &rec.ops {
+        acc.iter_mut().for_each(|w| *w = 0);
+        visit_op_srcs(&rop.op, &mut |s| {
+            if let Src::Reg(r) = s {
+                let row = &bits[*r as usize * words..*r as usize * words + words];
+                for (a, w) in acc.iter_mut().zip(row) {
+                    *a |= *w;
+                }
+            }
+        });
+        let out = rop.out as usize * words;
+        for (i, a) in acc.iter().enumerate() {
+            bits[out + i] |= *a;
+        }
+    }
+    let dep = DepMap {
+        n_sites,
+        words,
+        bits,
+        site_of_item,
+    };
+
+    // 3. Parent edges + observation terms + blanket links.
+    let mut parents: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); n_sites];
+    let mut children: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); n_sites];
+    let mut blanket: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); n_sites];
+    let mut feeds_obs = vec![false; n_sites];
+    let mut n_obs_items = 0usize;
+    for (ii, ri) in rec.items.iter().enumerate() {
+        if let Some(site) = dep.site_of_item[ii] {
+            let ps = dep.item_sites(&ri.item);
+            for &p in &ps {
+                parents[site].insert(p);
+                children[p].insert(site);
+            }
+            // co-parents of this site share its conditional
+            for &p in &ps {
+                for &q in &ps {
+                    if p != q {
+                        blanket[p].insert(q);
+                    }
+                }
+            }
+        } else if is_obs_item(&ri.item) {
+            n_obs_items += 1;
+            let ps = dep.item_sites(&ri.item);
+            for &p in &ps {
+                feeds_obs[p] = true;
+                sites[p].n_obs_terms += 1;
+                for &q in &ps {
+                    if p != q {
+                        blanket[p].insert(q);
+                    }
+                }
+            }
+        }
+    }
+
+    // 4. Observation reachability: a site is identified if it feeds an
+    //    observation directly or through a chain of child priors.
+    let mut reach = feeds_obs;
+    let mut queue: Vec<usize> = (0..n_sites).filter(|&s| reach[s]).collect();
+    while let Some(s) = queue.pop() {
+        for &p in &parents[s] {
+            if !reach[p] {
+                reach[p] = true;
+                queue.push(p);
+            }
+        }
+    }
+
+    // 5. Plates: maximal runs of ≥ 2 consecutive scalar/int observes with
+    //    the same family + parameter sources, plus explicit plate items.
+    let mut plates: Vec<PlateInfo> = Vec::new();
+    let mut plate_members: Vec<(usize, BTreeSet<usize>)> = Vec::new();
+    let items = &rec.items;
+    let mut i = 0usize;
+    while i < items.len() {
+        match &items[i].item {
+            Item::Observe { dist, ps, np, obs } => {
+                let mut j = i + 1;
+                let mut constant = true;
+                while j < items.len() {
+                    if let Item::Observe {
+                        dist: d2,
+                        ps: p2,
+                        np: n2,
+                        obs: o2,
+                    } = &items[j].item
+                    {
+                        if std::mem::discriminant(dist) == std::mem::discriminant(d2)
+                            && ps == p2
+                            && np == n2
+                        {
+                            constant &= obs.to_bits() == o2.to_bits();
+                            j += 1;
+                            continue;
+                        }
+                    }
+                    break;
+                }
+                if j - i >= 2 {
+                    plate_members.push((plates.len(), dep.item_sites(&items[i].item)));
+                    plates.push(PlateInfo {
+                        rows: j - i,
+                        family: sdist_name(dist),
+                        sites: Vec::new(),
+                        constant_data: constant,
+                    });
+                }
+                i = j;
+            }
+            Item::ObserveInt { dist, p, obs } => {
+                let mut j = i + 1;
+                let mut constant = true;
+                while j < items.len() {
+                    if let Item::ObserveInt {
+                        dist: d2,
+                        p: p2,
+                        obs: o2,
+                    } = &items[j].item
+                    {
+                        if std::mem::discriminant(dist) == std::mem::discriminant(d2) && p == p2 {
+                            constant &= obs == o2;
+                            j += 1;
+                            continue;
+                        }
+                    }
+                    break;
+                }
+                if j - i >= 2 {
+                    plate_members.push((plates.len(), dep.item_sites(&items[i].item)));
+                    plates.push(PlateInfo {
+                        rows: j - i,
+                        family: ddist_name(dist),
+                        sites: Vec::new(),
+                        constant_data: constant,
+                    });
+                }
+                i = j;
+            }
+            Item::PlateScalar { dist, obs, .. } => {
+                let constant = obs.windows(2).all(|w| w[0].to_bits() == w[1].to_bits());
+                plate_members.push((plates.len(), dep.item_sites(&items[i].item)));
+                plates.push(PlateInfo {
+                    rows: obs.len(),
+                    family: sdist_name(dist),
+                    sites: Vec::new(),
+                    constant_data: constant,
+                });
+                i += 1;
+            }
+            Item::PlateInt { dist, obs, .. } => {
+                let constant = obs.windows(2).all(|w| w[0] == w[1]);
+                plate_members.push((plates.len(), dep.item_sites(&items[i].item)));
+                plates.push(PlateInfo {
+                    rows: obs.len(),
+                    family: ddist_name(dist),
+                    sites: Vec::new(),
+                    constant_data: constant,
+                });
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    for (pi, members) in plate_members {
+        for &s in &members {
+            plates[pi].sites.push(s);
+            sites[s].plates.push(pi);
+        }
+    }
+
+    // 6. Finalize per-site vectors.
+    for (si, site) in sites.iter_mut().enumerate() {
+        site.parents = parents[si].iter().copied().collect();
+        site.children = children[si].iter().copied().collect();
+        let mut b = blanket[si].clone();
+        b.extend(parents[si].iter().copied());
+        b.extend(children[si].iter().copied());
+        b.remove(&si);
+        site.blanket = b.into_iter().collect();
+        site.observed_reachable = reach[si];
+    }
+
+    (
+        SiteGraph {
+            sites,
+            plates,
+            n_obs_items,
+        },
+        dep,
+    )
+}

@@ -1,0 +1,463 @@
+//! Stan-pedantic-parity model lints over the site-dependency graph.
+//!
+//! Every lint is structural — it reads the recorded tilde program and the
+//! dependency graph, never sampler output — so `dppl lint` runs in one
+//! model walk. The recording pass is *lenient*
+//! ([`crate::model::compiled::record_for_analysis`]): a model whose
+//! density is non-finite at the init point is precisely the kind of
+//! defect the linter exists to surface, so only a rejected (truncated)
+//! walk refuses analysis.
+//!
+//! | code                   | severity | fires when                                      |
+//! |------------------------|----------|--------------------------------------------------|
+//! | `domain-mismatch`      | error    | a parameter feeds a distribution position whose  |
+//! |                        |          | support its declared domain does not guarantee   |
+//! | `dead-parameter`       | warning  | a continuous parameter has no dataflow path to   |
+//! |                        |          | any observation (posterior = prior)              |
+//! | `centered-funnel`      | warning  | a Normal/IsoNormal site's scale depends on       |
+//! |                        |          | another parameter (centered hierarchical prior)  |
+//! | `constant-data-plate`  | warning  | an observation plate's values are all identical  |
+//! | `discrete-no-gradient` | warning  | a discrete site exists (invisible to HMC/NUTS)   |
+
+use std::collections::BTreeMap;
+
+use crate::ad::record::Src;
+use crate::dist::{DiscreteDist, Domain, ScalarDist, VecDist};
+use crate::model::compiled::{self, visit_item_srcs, Item, Recording};
+use crate::model::Model;
+use crate::obs::metrics::{self, Counter};
+use crate::util::json::escape;
+use crate::varinfo::TypedVarInfo;
+
+use super::graph::{self, DepMap, SiteGraph};
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+impl Severity {
+    pub fn key(&self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        }
+    }
+}
+
+/// One deduplicated lint finding. Sites that differ only by index (e.g.
+/// `h[0]` … `h[499]`) collapse to one finding on the base symbol with
+/// `count` occurrences.
+#[derive(Clone, Debug)]
+pub struct LintFinding {
+    pub code: &'static str,
+    pub severity: Severity,
+    /// Base site symbol (or `plate[i]` for plate-level findings).
+    pub site: String,
+    pub message: String,
+    pub hint: Option<String>,
+    /// Number of concrete sites/rows collapsed into this finding.
+    pub count: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct LintReport {
+    pub findings: Vec<LintFinding>,
+    pub n_sites: usize,
+    pub n_obs_items: usize,
+}
+
+impl LintReport {
+    pub fn n_errors(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Error).count()
+    }
+
+    pub fn n_warnings(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Warning).count()
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.n_errors() > 0
+    }
+
+    pub fn has_code(&self, code: &str) -> bool {
+        self.findings.iter().any(|f| f.code == code)
+    }
+
+    /// Machine-readable report, same hand-rolled JSON style as
+    /// `obs::report`.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{");
+        s.push_str(&format!("\"n_sites\":{},", self.n_sites));
+        s.push_str(&format!("\"n_obs_items\":{},", self.n_obs_items));
+        s.push_str(&format!("\"errors\":{},", self.n_errors()));
+        s.push_str(&format!("\"warnings\":{},", self.n_warnings()));
+        s.push_str("\"findings\":[");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"code\":\"{}\",\"severity\":\"{}\",\"site\":\"{}\",\"count\":{},\"message\":\"{}\"",
+                f.code,
+                f.severity.key(),
+                escape(&f.site),
+                f.count,
+                escape(&f.message)
+            ));
+            match &f.hint {
+                Some(h) => s.push_str(&format!(",\"hint\":\"{}\"}}", escape(h))),
+                None => s.push_str(",\"hint\":null}"),
+            }
+        }
+        s.push_str("]}");
+        s
+    }
+
+    /// Human-readable one-line-per-finding rendering for the CLI.
+    pub fn render(&self) -> String {
+        if self.findings.is_empty() {
+            return format!(
+                "no findings ({} sites, {} observation terms)\n",
+                self.n_sites, self.n_obs_items
+            );
+        }
+        let mut s = String::new();
+        for f in &self.findings {
+            let mult = if f.count > 1 {
+                format!(" (x{})", f.count)
+            } else {
+                String::new()
+            };
+            s.push_str(&format!(
+                "{}: [{}] {}{}: {}\n",
+                f.severity.key(),
+                f.code,
+                f.site,
+                mult,
+                f.message
+            ));
+            if let Some(h) = &f.hint {
+                s.push_str(&format!("    hint: {h}\n"));
+            }
+        }
+        s
+    }
+}
+
+/// What a distribution position requires of the value it is fed.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Req {
+    Positive,
+    UnitInterval,
+}
+
+impl Req {
+    fn describe(&self) -> &'static str {
+        match self {
+            Req::Positive => "a positive value",
+            Req::UnitInterval => "a value in [0, 1]",
+        }
+    }
+}
+
+/// Per-position support requirements of an item's distribution. Positions
+/// without constraints (means, logits, bounds) are `None`.
+fn item_reqs(item: &Item) -> [(Option<Req>, &'static str); 2] {
+    let none = (None, "");
+    match item {
+        Item::AssumeScalar { dist, .. }
+        | Item::Observe { dist, .. }
+        | Item::PlateScalar { dist, .. } => match dist {
+            ScalarDist::Normal(_) => [none, (Some(Req::Positive), "sd")],
+            ScalarDist::InverseGamma(_) => {
+                [(Some(Req::Positive), "shape"), (Some(Req::Positive), "scale")]
+            }
+            ScalarDist::Gamma(_) => [(Some(Req::Positive), "shape"), (Some(Req::Positive), "rate")],
+            ScalarDist::Beta(_) => [(Some(Req::Positive), "a"), (Some(Req::Positive), "b")],
+            ScalarDist::Exponential(_) => [(Some(Req::Positive), "rate"), none],
+            ScalarDist::Uniform(_) => [none, none],
+            ScalarDist::Cauchy(_) => [none, (Some(Req::Positive), "scale")],
+            ScalarDist::HalfCauchy(_) => [(Some(Req::Positive), "scale"), none],
+        },
+        Item::AssumeVec { dist, .. } | Item::ObserveVec { dist, .. } => match dist {
+            VecDist::IsoNormal(_) => [none, (Some(Req::Positive), "sd")],
+            VecDist::Dirichlet(_) => [none, none],
+        },
+        Item::AssumeInt { dist, .. } | Item::ObserveInt { dist, .. } | Item::PlateInt { dist, .. } => {
+            match dist {
+                DiscreteDist::Bernoulli(_) => [(Some(Req::UnitInterval), "p"), none],
+                DiscreteDist::Poisson(_) => [(Some(Req::Positive), "rate"), none],
+                DiscreteDist::BernoulliLogit(_) | DiscreteDist::Categorical(_) => [none, none],
+            }
+        }
+        _ => [none, none],
+    }
+}
+
+/// Scalar-component domain of a register seeded directly by an assume.
+#[derive(Clone, Copy)]
+enum RegDomain {
+    Real,
+    Positive,
+    Interval(f64, f64),
+    SimplexComp,
+}
+
+impl RegDomain {
+    fn guarantees(&self, req: Req) -> bool {
+        match req {
+            Req::Positive => match self {
+                RegDomain::Positive | RegDomain::SimplexComp => true,
+                RegDomain::Interval(lo, _) => *lo >= 0.0,
+                RegDomain::Real => false,
+            },
+            Req::UnitInterval => match self {
+                RegDomain::SimplexComp => true,
+                RegDomain::Interval(lo, hi) => *lo >= 0.0 && *hi <= 1.0,
+                RegDomain::Positive | RegDomain::Real => false,
+            },
+        }
+    }
+
+    fn describe(&self) -> String {
+        match self {
+            RegDomain::Real => "unconstrained (Real)".into(),
+            RegDomain::Positive => "positive".into(),
+            RegDomain::Interval(lo, hi) => format!("in [{lo}, {hi}]"),
+            RegDomain::SimplexComp => "a simplex component".into(),
+        }
+    }
+}
+
+/// Lint a model: lenient-record the walk, build the graph, run the rules.
+/// `None` when the walk rejected (nothing to analyze).
+pub fn lint_model(model: &dyn Model, tvi: &TypedVarInfo) -> Option<LintReport> {
+    let rec = compiled::record_for_analysis(model, tvi)?;
+    let (g, dep) = graph::build(&rec, tvi);
+    Some(lint_recording(&rec, tvi, &g, &dep))
+}
+
+pub(crate) fn lint_recording(
+    rec: &Recording,
+    tvi: &TypedVarInfo,
+    g: &SiteGraph,
+    dep: &DepMap,
+) -> LintReport {
+    let slots = tvi.slots();
+    // dedup accumulator: (code, key) → finding
+    let mut acc: BTreeMap<(&'static str, String), LintFinding> = BTreeMap::new();
+    let mut push = |code: &'static str,
+                    severity: Severity,
+                    key: String,
+                    message: String,
+                    hint: Option<String>| {
+        acc.entry((code, key.clone()))
+            .and_modify(|f| f.count += 1)
+            .or_insert(LintFinding {
+                code,
+                severity,
+                site: key,
+                message,
+                hint,
+                count: 1,
+            });
+    };
+
+    // ---- dead-parameter: continuous sites with no path to an observation
+    if g.n_obs_items > 0 {
+        for site in &g.sites {
+            if site.is_discrete || site.observed_reachable {
+                continue;
+            }
+            push(
+                "dead-parameter",
+                Severity::Warning,
+                site.sym.clone(),
+                format!(
+                    "parameter `{}` has no dataflow path to any observation; its posterior \
+                     equals its prior (unidentifiable or dead code)",
+                    site.name
+                ),
+                Some("remove the parameter or connect it to the likelihood".into()),
+            );
+        }
+    }
+
+    // ---- discrete-no-gradient
+    for site in &g.sites {
+        if site.is_discrete {
+            push(
+                "discrete-no-gradient",
+                Severity::Warning,
+                site.sym.clone(),
+                format!(
+                    "discrete parameter `{}` is invisible to gradient-based samplers \
+                     (HMC/NUTS never resample it)",
+                    site.name
+                ),
+                Some(
+                    "sample it with a Gibbs `enumerate` block or Particle Gibbs, or \
+                     marginalize it out"
+                        .into(),
+                ),
+            );
+        }
+    }
+
+    // ---- per-register origin domains (identity feeds only)
+    let mut origin: Vec<Option<RegDomain>> = vec![None; rec.n_regs as usize];
+    for ri in &rec.items {
+        match &ri.item {
+            Item::AssumeScalar { slot, out, .. } => {
+                let d = match &slots[*slot].domain {
+                    Domain::Real => RegDomain::Real,
+                    Domain::Positive => RegDomain::Positive,
+                    Domain::Interval(lo, hi) => RegDomain::Interval(*lo, *hi),
+                    _ => continue,
+                };
+                origin[*out as usize] = Some(d);
+            }
+            Item::AssumeVec { slot, out, .. } => {
+                let d = match &slots[*slot].domain {
+                    Domain::RealVec(_) => RegDomain::Real,
+                    Domain::PositiveVec(_) => RegDomain::Positive,
+                    Domain::Simplex(_) => RegDomain::SimplexComp,
+                    _ => continue,
+                };
+                for &r in out {
+                    origin[r as usize] = Some(d);
+                }
+            }
+            _ => {}
+        }
+    }
+    // reg → owning site name, for messages
+    let site_of_reg = |r: u32| -> Option<&str> {
+        for site in &g.sites {
+            match &rec.items[site.item].item {
+                Item::AssumeScalar { out, .. } if *out == r => return Some(&site.name),
+                Item::AssumeVec { out, .. } if out.contains(&r) => return Some(&site.name),
+                _ => {}
+            }
+        }
+        None
+    };
+
+    // ---- domain-mismatch: a parameter's register fed *directly* (identity
+    // glue) into a position whose support its domain does not guarantee.
+    // Restricting to identity feeds keeps this rule exact: transformed
+    // feeds (exp(x), x².. ) change support and are not flagged.
+    for ri in &rec.items {
+        let reqs = item_reqs(&ri.item);
+        let mut pos = 0usize;
+        visit_item_srcs(&ri.item, &mut |s| {
+            if let (Src::Reg(r), (Some(req), pname)) = (s, &reqs[pos.min(1)]) {
+                if let Some(d) = origin[*r as usize] {
+                    if !d.guarantees(*req) {
+                        let owner = site_of_reg(*r).unwrap_or("<glue>").to_string();
+                        push(
+                            "domain-mismatch",
+                            Severity::Error,
+                            owner.clone(),
+                            format!(
+                                "parameter `{}` is {} but feeds the {} of a {} — requires {}",
+                                owner,
+                                d.describe(),
+                                pname,
+                                graph_item_family(&ri.item),
+                                req.describe()
+                            ),
+                            Some(format!(
+                                "declare `{owner}` with a prior matching the required support \
+                                 (or transform it explicitly)"
+                            )),
+                        );
+                    }
+                }
+            }
+            pos += 1;
+        });
+    }
+
+    // ---- centered-funnel: Normal/IsoNormal site whose scale depends on
+    // another parameter — the classic centered hierarchical geometry.
+    for site in &g.sites {
+        let ri = &rec.items[site.item];
+        let scale_src = match &ri.item {
+            Item::AssumeScalar {
+                dist: ScalarDist::Normal(_),
+                ps,
+                ..
+            } => Some(&ps[1]),
+            Item::AssumeVec {
+                dist: VecDist::IsoNormal(_),
+                ps,
+                ..
+            } => Some(&ps[1]),
+            _ => None,
+        };
+        let Some(src) = scale_src else { continue };
+        let mut dep_sites = std::collections::BTreeSet::new();
+        dep.src_sites_into(src, &mut dep_sites);
+        dep_sites.retain(|&s| !g.sites[s].is_discrete);
+        if dep_sites.is_empty() {
+            continue;
+        }
+        let parent = &g.sites[*dep_sites.iter().next().unwrap()];
+        push(
+            "centered-funnel",
+            Severity::Warning,
+            site.sym.clone(),
+            format!(
+                "`{}` is centered on parameter-dependent scale (depends on `{}`): \
+                 the funnel geometry this creates is hard for HMC/NUTS",
+                site.name, parent.name
+            ),
+            Some(format!(
+                "non-center it: `{0}_raw ~ Normal(0, 1); {0} = loc + scale * {0}_raw`",
+                site.sym
+            )),
+        );
+    }
+
+    // ---- constant-data-plate
+    for (pi, plate) in g.plates.iter().enumerate() {
+        if plate.rows >= 2 && plate.constant_data {
+            push(
+                "constant-data-plate",
+                Severity::Warning,
+                format!("plate[{pi}]"),
+                format!(
+                    "observation plate of {} {} rows holds bitwise-identical values — \
+                     likely a data-loading bug",
+                    plate.rows, plate.family
+                ),
+                Some("check the observed data column actually varies".into()),
+            );
+        }
+    }
+
+    let mut findings: Vec<LintFinding> = acc.into_values().collect();
+    findings.sort_by_key(|f| (f.severity != Severity::Error, f.code, f.site.clone()));
+    metrics::add(Counter::LintWarnings, findings.len() as u64);
+    LintReport {
+        findings,
+        n_sites: g.sites.len(),
+        n_obs_items: g.n_obs_items,
+    }
+}
+
+fn graph_item_family(item: &Item) -> &'static str {
+    match item {
+        Item::AssumeScalar { dist, .. }
+        | Item::Observe { dist, .. }
+        | Item::PlateScalar { dist, .. } => graph::sdist_name(dist),
+        Item::AssumeVec { dist, .. } | Item::ObserveVec { dist, .. } => graph::vdist_name(dist),
+        Item::AssumeInt { dist, .. } | Item::ObserveInt { dist, .. } | Item::PlateInt { dist, .. } => {
+            graph::ddist_name(dist)
+        }
+        _ => "term",
+    }
+}

@@ -1,0 +1,91 @@
+//! Static model analysis over the recorded tilde program.
+//!
+//! The SlicStan half that PR 8's structure compiler left open: given the
+//! slot-resolved recording of one model walk, build the
+//! [site-dependency graph](graph::SiteGraph), certify
+//! [conjugate parent/child pairs](conjugacy::ConjugacyCert) for
+//! Rao-Blackwellized Gibbs/SMC, and run the
+//! [Stan-pedantic-parity lints](lint) behind `dppl lint`. Everything here
+//! is a pure function of the recording — no sampler runs, no model
+//! re-execution beyond the (verified) recording passes themselves.
+
+pub mod conjugacy;
+pub mod graph;
+pub mod lint;
+
+pub use conjugacy::{ConjugacyCert, ConjugateFamily};
+pub use graph::{PlateInfo, SiteGraph, SiteInfo};
+pub use lint::{lint_model, LintFinding, LintReport, Severity};
+
+use crate::model::compiled::{self, Recording};
+use crate::model::Model;
+use crate::util::rng::Rng;
+use crate::varinfo::TypedVarInfo;
+
+use graph::DepMap;
+
+/// The full static analysis of one model: dependency graph + conjugacy
+/// certificates, plus the private recording the draw path replays.
+pub struct ModelAnalysis {
+    pub graph: SiteGraph,
+    pub certs: Vec<ConjugacyCert>,
+    rec: Recording,
+    #[allow(dead_code)]
+    dep: DepMap,
+}
+
+/// Analyze a model against its typed trace.
+///
+/// Uses the *strict* double-record gate
+/// ([`compiled::record_verified`]): the walk is recorded at θ and at a
+/// perturbed θ ± 0.125, and analysis proceeds only when both recordings
+/// are structurally identical — a conjugacy certificate must never be
+/// issued against a θ-dependent walk. Models with discrete sites keep
+/// their graph but receive no certificates: a Gibbs move on a discrete
+/// site can change the walk in ways the continuous perturbation gate
+/// cannot see.
+pub fn analyze(model: &dyn Model, tvi: &TypedVarInfo) -> Option<ModelAnalysis> {
+    let rec = compiled::record_verified(model, tvi)?;
+    let (g, dep) = graph::build(&rec, tvi);
+    let certs = if g.sites.iter().any(|s| s.is_discrete) {
+        Vec::new()
+    } else {
+        conjugacy::detect(&rec, &dep, &g)
+    };
+    Some(ModelAnalysis {
+        graph: g,
+        certs,
+        rec,
+        dep,
+    })
+}
+
+impl ModelAnalysis {
+    /// The certificate covering `slot`, if one was issued.
+    pub fn cert_for_slot(&self, slot: usize) -> Option<&ConjugacyCert> {
+        self.certs.iter().find(|c| c.slot == slot)
+    }
+
+    /// Draw `cert`'s site from its exact closed-form full conditional
+    /// given the current `theta` / discrete trace, writing the new value
+    /// back into `theta` through the slot's link bijector. Bitwise
+    /// deterministic for a fixed rng stream.
+    pub fn draw_conjugate(
+        &self,
+        cert: &ConjugacyCert,
+        tvi: &TypedVarInfo,
+        theta: &mut [f64],
+        rng: &mut dyn Rng,
+    ) {
+        conjugacy::draw(&self.rec, cert, tvi, theta, rng);
+    }
+
+    /// Exact per-observation collapsed log-weights for a single-site
+    /// Normal–Normal model (see [`conjugacy`] module docs); `None` when
+    /// the model does not qualify. The sum is the model's exact
+    /// log-evidence.
+    pub fn collapsed_logweights(&self, tvi: &TypedVarInfo) -> Option<Vec<f64>> {
+        let cert = self.certs.first()?;
+        conjugacy::collapsed_logweights(&self.rec, cert, tvi, &self.graph)
+    }
+}

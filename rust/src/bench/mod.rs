@@ -1305,6 +1305,221 @@ fn json_num(x: f64) -> String {
     }
 }
 
+/// One `bench conjugate` row: the same one-RwMh-block-per-site Gibbs
+/// sampler run twice — analyzer collapse off (plain MH-within-Gibbs) vs
+/// on (exact closed-form conditional draws) — scored by the slowest
+/// coordinate's effective samples per second.
+#[derive(Clone, Debug)]
+pub struct ConjugateRow {
+    pub model: String,
+    pub dim: usize,
+    /// Conjugacy certificates the analyzer issued (0 = nothing collapses
+    /// and the two arms are the same sampler).
+    pub n_certs: usize,
+    pub iters: usize,
+    pub secs_mh: f64,
+    pub secs_collapsed: f64,
+    /// Minimum per-coordinate ESS across the constrained draw matrix.
+    pub ess_mh: f64,
+    pub ess_collapsed: f64,
+    pub ess_rate_mh: f64,
+    pub ess_rate_collapsed: f64,
+    /// `ess_rate_collapsed / ess_rate_mh` — the Rao-Blackwellization win.
+    pub speedup: f64,
+    pub seed: u64,
+}
+
+/// Config for `bench conjugate` (`BENCH_CONJUGATE.json`).
+pub struct ConjugateBenchConfig {
+    pub models: Vec<String>,
+    pub seed: u64,
+    pub small: bool,
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for ConjugateBenchConfig {
+    fn default() -> Self {
+        Self {
+            models: vec!["conjugate_hier".to_string()],
+            seed: 42,
+            small: true,
+            warmup: 500,
+            iters: 4000,
+        }
+    }
+}
+
+/// Run the Rao-Blackwellized-Gibbs benchmark: for each model, build one
+/// RwMh Gibbs block per site symbol and run the sampler with `collapse`
+/// off and on from the same seed. Both arms see identical block layouts,
+/// so the only difference is the analyzer's conjugate upgrade.
+pub fn run_conjugate_bench(cfg: &ConjugateBenchConfig) -> Vec<ConjugateRow> {
+    use crate::inference::gibbs::{GibbsDraws, GibbsGrad};
+    use crate::inference::{Gibbs, GibbsBlock};
+
+    let mut out = Vec::new();
+    for name in &cfg.models {
+        let bm = if cfg.small {
+            crate::models::build_small(name, cfg.seed)
+        } else {
+            build(name, cfg.seed)
+        };
+        let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+        let tvi = crate::model::init_typed(bm.model.as_ref(), &mut rng);
+        // one RwMh block per continuous site symbol, in visit order
+        let mut syms: Vec<String> = Vec::new();
+        for s in tvi.slots() {
+            if s.unc_len == 0 {
+                continue;
+            }
+            let sym = s.vn.sym().as_str();
+            if !syms.contains(&sym) {
+                syms.push(sym);
+            }
+        }
+        let blocks: Vec<GibbsBlock> = syms
+            .iter()
+            .map(|s| GibbsBlock::rwmh(&[s.as_str()], 0.25))
+            .collect();
+        let n_certs =
+            crate::analysis::analyze(bm.model.as_ref(), &tvi).map_or(0, |a| a.certs.len());
+        let run = |collapse: bool| {
+            let gibbs = Gibbs {
+                blocks: blocks.clone(),
+                grad: GibbsGrad::Forward,
+                collapse,
+            };
+            let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed ^ 0xC011);
+            gibbs.sample(bm.model.as_ref(), &tvi, cfg.warmup, cfg.iters, &mut rng)
+        };
+        eprintln!(
+            "bench conjugate: {name} (dim {}, {} certs) baseline MH…",
+            bm.theta_dim, n_certs
+        );
+        let mh = run(false);
+        eprintln!("bench conjugate: {name} collapsed…");
+        let col = run(true);
+        let min_ess = |d: &GibbsDraws| {
+            let dim = d.rows.first().map_or(0, Vec::len);
+            let mut lo = f64::INFINITY;
+            for j in 0..dim {
+                let series: Vec<f64> = d.rows.iter().map(|r| r[j]).collect();
+                lo = lo.min(crate::util::stats::ess(&series));
+            }
+            if lo.is_finite() {
+                lo
+            } else {
+                0.0
+            }
+        };
+        let (ess_mh, ess_col) = (min_ess(&mh), min_ess(&col));
+        let secs_mh = mh.stats.sampling_secs.max(1e-12);
+        let secs_col = col.stats.sampling_secs.max(1e-12);
+        let rate_mh = ess_mh / secs_mh;
+        let rate_col = ess_col / secs_col;
+        out.push(ConjugateRow {
+            model: name.clone(),
+            dim: bm.theta_dim,
+            n_certs,
+            iters: cfg.iters,
+            secs_mh,
+            secs_collapsed: secs_col,
+            ess_mh,
+            ess_collapsed: ess_col,
+            ess_rate_mh: rate_mh,
+            ess_rate_collapsed: rate_col,
+            speedup: if rate_mh > 0.0 {
+                rate_col / rate_mh
+            } else {
+                f64::NAN
+            },
+            seed: cfg.seed,
+        });
+    }
+    out
+}
+
+/// Render the conjugate-bench comparison table.
+pub fn render_conjugate_table(rows: &[ConjugateRow]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<16} {:>4} {:>6} {:>12} {:>12} {:>12} {:>12} {:>9}",
+        "model", "dim", "certs", "mh secs", "coll secs", "mh ess/s", "coll ess/s", "speedup"
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{:<16} {:>4} {:>6} {:>12.4} {:>12.4} {:>12.1} {:>12.1} {:>8.2}x",
+            r.model,
+            r.dim,
+            r.n_certs,
+            r.secs_mh,
+            r.secs_collapsed,
+            r.ess_rate_mh,
+            r.ess_rate_collapsed,
+            r.speedup
+        );
+    }
+    out
+}
+
+/// Serialize conjugate rows as the coordinator's `BENCH_CONJUGATE.json`
+/// payload.
+pub fn conjugate_rows_to_json(rows: &[ConjugateRow], cfg: &ConjugateBenchConfig) -> String {
+    let mut out = String::new();
+    let _ = write!(
+        out,
+        "{{\n  \"bench\": \"conjugate\",\n  \"seed\": {},\n  \"small\": {},\n  \"warmup\": {},\n  \"iters\": {},\n  \"rows\": [\n",
+        cfg.seed, cfg.small, cfg.warmup, cfg.iters
+    );
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"model\": \"{}\", \"dim\": {}, \"n_certs\": {}, \"iters\": {}, \
+             \"secs_mh\": {}, \"secs_collapsed\": {}, \"ess_mh\": {}, \"ess_collapsed\": {}, \
+             \"ess_rate_mh\": {}, \"ess_rate_collapsed\": {}, \"speedup\": {}, \"seed\": {}}}",
+            r.model,
+            r.dim,
+            r.n_certs,
+            r.iters,
+            json_num(r.secs_mh),
+            json_num(r.secs_collapsed),
+            json_num(r.ess_mh),
+            json_num(r.ess_collapsed),
+            json_num(r.ess_rate_mh),
+            json_num(r.ess_rate_collapsed),
+            json_num(r.speedup),
+            r.seed,
+        );
+        out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// The `--assert-speedup` gate for `bench conjugate`: every model must
+/// certify (≥ 1 conjugacy certificate) and the collapsed arm's ESS/sec
+/// must reach `min` times the MH baseline's. Returns one message per
+/// violation (empty = gate passed).
+pub fn check_conjugate_speedups(rows: &[ConjugateRow], min: f64) -> Vec<String> {
+    let mut bad = Vec::new();
+    for r in rows {
+        if r.n_certs == 0 {
+            bad.push(format!("{}: analyzer issued no conjugacy certificates", r.model));
+            continue;
+        }
+        if !(r.speedup >= min) {
+            bad.push(format!(
+                "{}: collapsed ESS/sec speedup {:.2}× below required {:.2}×",
+                r.model, r.speedup, min
+            ));
+        }
+    }
+    bad
+}
+
 /// Serialize SMC rows as the coordinator's `BENCH_SMC.json` payload
 /// (hand-rolled writer — no serde in the offline dependency set).
 pub fn smc_rows_to_json(rows: &[SmcRow]) -> String {

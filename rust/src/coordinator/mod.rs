@@ -4,13 +4,15 @@
 use std::sync::Arc;
 
 use crate::bench::{
-    append_history, batch_rows_to_json, check_serve_gates, check_static_speedups,
-    grad_rows_to_json, history_line, render_batch_table, render_grad_table, render_serve_table,
+    append_history, batch_rows_to_json, check_conjugate_speedups, check_serve_gates,
+    check_static_speedups, conjugate_rows_to_json, grad_rows_to_json, history_line,
+    render_batch_table, render_conjugate_table, render_grad_table, render_serve_table,
     render_smc_table, render_static_table, render_table1, render_vi_table, run_batch_bench,
-    run_grad_bench, run_serve_bench, run_smc_bench, run_static_bench, run_table1, run_vi_bench,
-    serve_rows_to_json, smc_rows_to_json, static_rows_to_json, table1_cells_to_json,
-    vi_rows_to_json, BatchBenchConfig, BenchBackend, GradBenchConfig, HistoryEntry,
-    ServeBenchConfig, SmcBenchConfig, SmcPath, StaticBenchConfig, Table1Config, ViBenchConfig,
+    run_conjugate_bench, run_grad_bench, run_serve_bench, run_smc_bench, run_static_bench,
+    run_table1, run_vi_bench, serve_rows_to_json, smc_rows_to_json, static_rows_to_json,
+    table1_cells_to_json, vi_rows_to_json, BatchBenchConfig, BenchBackend, ConjugateBenchConfig,
+    GradBenchConfig, HistoryEntry, ServeBenchConfig, SmcBenchConfig, SmcPath, StaticBenchConfig,
+    Table1Config, ViBenchConfig,
 };
 use crate::chain::{Chain, MultiChain};
 use crate::gradient::{Backend, LogDensity, NativeDensity};
@@ -43,7 +45,11 @@ pub fn usage() -> String {
             ),
             (
                 "bench",
-                "bench table1 [--models a,b] [--backends x,y] [--iters N] [--reps R] [--out FILE.json] | bench smc [--models a,b] [--particles N] [--threads T] [--path typed|boxed|both] [--full] [--out FILE.json] | bench grad [--models a,b] [--engines fused,tape,forward] [--full] [--out FILE.json] | bench vi [--models a,b] [--families meanfield,fullrank] [--draws N] [--max-iters N] [--minibatch B] [--stl] [--full] [--out FILE.json] | bench batch [--models a,b] [--lanes 1,4,16,64] [--assert-speedup R] [--full] [--out FILE.json] | bench static [--models a,b] [--assert-speedup R] [--full] [--out FILE.json] | bench serve [--queries N] [--particles N] [--seed S] [--assert-cached R] [--assert-stream R] [--out FILE.json]  (static: compiled structure replay vs the dynamic fused walk; --assert-speedup R requires >= Rx on logreg_tall and break-even on every other promoted model; serve: cached posterior queries vs fit-per-query + streaming SMC update vs from-scratch refit, --assert-cached/--assert-stream gate the two speedups; any target: --history appends one JSONL row to BENCH_HISTORY.jsonl)",
+                "bench table1 [--models a,b] [--backends x,y] [--iters N] [--reps R] [--out FILE.json] | bench smc [--models a,b] [--particles N] [--threads T] [--path typed|boxed|both] [--full] [--out FILE.json] | bench grad [--models a,b] [--engines fused,tape,forward] [--full] [--out FILE.json] | bench vi [--models a,b] [--families meanfield,fullrank] [--draws N] [--max-iters N] [--minibatch B] [--stl] [--full] [--out FILE.json] | bench batch [--models a,b] [--lanes 1,4,16,64] [--assert-speedup R] [--full] [--out FILE.json] | bench static [--models a,b] [--assert-speedup R] [--full] [--out FILE.json] | bench serve [--queries N] [--particles N] [--seed S] [--assert-cached R] [--assert-stream R] [--out FILE.json] | bench conjugate [--models a,b] [--warmup N] [--iters N] [--assert-speedup R] [--full] [--out FILE.json]  (static: compiled structure replay vs the dynamic fused walk; --assert-speedup R requires >= Rx on logreg_tall and break-even on every other promoted model; serve: cached posterior queries vs fit-per-query + streaming SMC update vs from-scratch refit, --assert-cached/--assert-stream gate the two speedups; conjugate: analyzer-collapsed exact Gibbs draws vs MH-within-Gibbs, --assert-speedup R gates the ESS/sec ratio; any target: --history appends one JSONL row to BENCH_HISTORY.jsonl)",
+            ),
+            (
+                "lint",
+                "static-analysis pedantic pass (Stan's `pedantic` mode analogue): --model NAME or --all [--full] [--seed S] [--json] [--out FILE.json]  (dependency-graph lints: dead parameters, domain/support mismatches, centered funnels with a non-centering hint, constant-data observation plates, never-resampled discrete sites; exit 1 when any finding is an error)",
             ),
             ("query", "evaluate a probability query string (paper §3.5)"),
             (
@@ -77,6 +83,7 @@ pub fn run(argv: Vec<String>) -> i32 {
         "info" => cmd_info(),
         "sample" => cmd_sample(&args),
         "bench" => cmd_bench(&args),
+        "lint" => cmd_lint(&args),
         "query" => cmd_query(&args),
         "serve" => cmd_serve(&args),
         "help" | "--help" | "-h" => {
@@ -176,7 +183,25 @@ fn cmd_sample(args: &Args) -> i32 {
 
     // one reporting path for humans and machines: the same RunReport
     // renders the console summary, the --json echo and METRICS.json
-    let report = RunReport::from_chains(&model_name, &sampler, &mc, profile);
+    let mut report = RunReport::from_chains(&model_name, &sampler, &mc, profile);
+
+    // the pedantic static-analysis pass rides along on every run: lint
+    // findings land in the same warnings array as the convergence
+    // diagnostics (small build — structure is what the linter reads)
+    {
+        let bm = crate::models::build_small(&model_name, seed);
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let tvi = init_typed(bm.model.as_ref(), &mut rng);
+        if let Some(lint) = crate::analysis::lint_model(bm.model.as_ref(), &tvi) {
+            for f in &lint.findings {
+                report.warnings.push(crate::obs::report::Warning::Lint {
+                    code: f.code.to_string(),
+                    site: f.site.clone(),
+                    message: f.message.clone(),
+                });
+            }
+        }
+    }
     let quiet = args.flag("quiet");
     if !quiet {
         println!("{}", report.render_human(&mc));
@@ -197,6 +222,77 @@ fn cmd_sample(args: &Args) -> i32 {
             eprintln!("failed to write {metrics_path}: {e}");
             1
         }
+    }
+}
+
+/// `dppl lint`: the static-analysis pedantic pass over one model or the
+/// whole Table-1 zoo. Exit code 1 when any finding is an error (or a
+/// model's structure cannot be recorded), 2 on usage problems, 0
+/// otherwise — warnings alone do not fail the lint.
+fn cmd_lint(args: &Args) -> i32 {
+    let models: Vec<String> = if args.flag("all") {
+        ALL_MODELS.iter().map(|s| s.to_string()).collect()
+    } else {
+        match args.get("model") {
+            Some(m) => vec![m.to_string()],
+            None => {
+                eprintln!("--model NAME or --all required (see `dppl list`)");
+                return 2;
+            }
+        }
+    };
+    let seed = args.get_parse_or("seed", 42u64).unwrap_or(42);
+    let full = args.flag("full");
+    let json = args.flag("json");
+    let mut any_errors = false;
+    let mut payloads: Vec<String> = Vec::with_capacity(models.len());
+    for name in &models {
+        if !crate::models::is_known(name) {
+            eprintln!("unknown model {name:?} (see `dppl list`)");
+            return 2;
+        }
+        // the linter reads structure, not data scale: the small build
+        // is the default, --full lints the Table-1 workload as-is
+        let bm = if full {
+            build(name, seed)
+        } else {
+            crate::models::build_small(name, seed)
+        };
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let tvi = init_typed(bm.model.as_ref(), &mut rng);
+        match crate::analysis::lint_model(bm.model.as_ref(), &tvi) {
+            Some(report) => {
+                if !json {
+                    println!("== {name} ==");
+                    print!("{}", report.render());
+                }
+                any_errors |= report.has_errors();
+                payloads.push(format!("\"{name}\": {}", report.to_json()));
+            }
+            None => {
+                eprintln!("{name}: structure recording failed — nothing to lint");
+                any_errors = true;
+            }
+        }
+    }
+    let payload = format!("{{{}}}\n", payloads.join(", "));
+    if json {
+        print!("{payload}");
+    }
+    if let Some(out) = args.get("out") {
+        let out = out.to_string();
+        if let Err(e) = std::fs::write(&out, &payload) {
+            eprintln!("failed to write {out}: {e}");
+            return 1;
+        }
+        if !json {
+            println!("wrote {out}");
+        }
+    }
+    if any_errors {
+        1
+    } else {
+        0
     }
 }
 
@@ -816,9 +912,72 @@ fn cmd_bench(args: &Args) -> i32 {
                 }
             }
         }
+        "conjugate" => {
+            let mut cfg = ConjugateBenchConfig::default();
+            if let Some(models) = args.get("models") {
+                cfg.models = models.split(',').map(|s| s.trim().to_string()).collect();
+            }
+            cfg.seed = args.get_parse_or("seed", cfg.seed).unwrap_or(cfg.seed);
+            cfg.warmup = args.get_parse_or("warmup", cfg.warmup).unwrap_or(cfg.warmup);
+            cfg.iters = args.get_parse_or("iters", cfg.iters).unwrap_or(cfg.iters);
+            cfg.small = !args.flag("full");
+            let min_speedup = match args.get_parse::<f64>("assert-speedup") {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            };
+            let rows = run_conjugate_bench(&cfg);
+            println!("{}", render_conjugate_table(&rows));
+            // CI tripwire: Rao-Blackwellization must pay off — every
+            // model must certify and the collapsed arm's ESS/sec must
+            // beat MH-within-Gibbs by ≥ R×
+            if let Some(min) = min_speedup {
+                let bad = check_conjugate_speedups(&rows, min);
+                for msg in &bad {
+                    eprintln!("assert-speedup: {msg}");
+                }
+                if !bad.is_empty() {
+                    return 1;
+                }
+                println!("assert-speedup: collapsed Gibbs meets the gate (>= {min:.2}x ESS/sec)");
+            }
+            if args.flag("history") {
+                let mut entries = Vec::with_capacity(rows.len() * 2);
+                for r in &rows {
+                    entries.push(HistoryEntry {
+                        model: r.model.clone(),
+                        label: "mh".into(),
+                        secs: r.secs_mh,
+                    });
+                    entries.push(HistoryEntry {
+                        model: r.model.clone(),
+                        label: "collapsed".into(),
+                        secs: r.secs_collapsed,
+                    });
+                }
+                let rc = bench_history("conjugate", cfg.seed, entries);
+                if rc != 0 {
+                    return rc;
+                }
+            }
+            let out_path = args.get_or("out", "BENCH_CONJUGATE.json").to_string();
+            let json = conjugate_rows_to_json(&rows, &cfg);
+            match std::fs::write(&out_path, &json) {
+                Ok(()) => {
+                    println!("wrote {out_path}");
+                    0
+                }
+                Err(e) => {
+                    eprintln!("failed to write {out_path}: {e}");
+                    1
+                }
+            }
+        }
         other => {
             eprintln!(
-                "unknown bench target {other:?} (try: table1, smc, grad, vi, batch, static, serve)"
+                "unknown bench target {other:?} (try: table1, smc, grad, vi, batch, static, serve, conjugate)"
             );
             2
         }
@@ -953,9 +1112,11 @@ mod tests {
     #[test]
     fn usage_mentions_all_commands() {
         let u = usage();
-        for c in ["list", "sample", "bench", "query", "info", "serve"] {
+        for c in ["list", "sample", "bench", "query", "info", "serve", "lint"] {
             assert!(u.contains(c), "{c}");
         }
+        // the bench usage names every target, including the new one
+        assert!(u.contains("bench conjugate"));
     }
 
     #[test]

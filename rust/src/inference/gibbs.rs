@@ -130,6 +130,14 @@ pub enum GibbsGrad {
 pub struct Gibbs {
     pub blocks: Vec<GibbsBlock>,
     pub grad: GibbsGrad,
+    /// Rao-Blackwellization switch: when `true` (the [`Gibbs::new`]
+    /// default), the static analyzer runs once up front and every
+    /// [`BlockSampler::RwMh`] block whose slots all carry a
+    /// [conjugacy certificate](crate::analysis::ConjugacyCert) is upgraded
+    /// to exact closed-form full-conditional draws — no proposals, no
+    /// rejections. Blocks that do not fully certify keep their configured
+    /// sampler, so mixing conjugate and generic blocks is free.
+    pub collapse: bool,
 }
 
 /// Gibbs output: constrained rows (continuous + discrete, in
@@ -146,6 +154,7 @@ impl Gibbs {
         Self {
             blocks,
             grad: GibbsGrad::Forward,
+            collapse: true,
         }
     }
 
@@ -224,6 +233,37 @@ impl Gibbs {
             }
         }
 
+        // Rao-Blackwellization: run the static analyzer once and mark
+        // every RwMh block whose slots all carry a conjugacy certificate.
+        // For those blocks the MH proposal loop below is replaced by exact
+        // closed-form full-conditional draws (certificate indices, in slot
+        // order — a valid systematic Gibbs scan within the block).
+        let analysis = if self.collapse
+            && cont_blocks
+                .iter()
+                .any(|(bi, ..)| matches!(self.blocks[*bi].sampler, BlockSampler::RwMh { .. }))
+        {
+            crate::analysis::analyze(model, &tvi)
+        } else {
+            None
+        };
+        let conj_blocks: Vec<Option<Vec<usize>>> = cont_blocks
+            .iter()
+            .map(|(bi, _, mask)| {
+                let a = analysis.as_ref()?;
+                if !matches!(self.blocks[*bi].sampler, BlockSampler::RwMh { .. }) {
+                    return None;
+                }
+                let mut certs = Vec::new();
+                for (si, &in_block) in mask.iter().enumerate() {
+                    if in_block {
+                        certs.push(a.certs.iter().position(|c| c.slot == si)?);
+                    }
+                }
+                Some(certs)
+            })
+            .collect();
+
         // Particle-Gibbs blocks replay the model through a boxed trace
         // template that mirrors the typed layout (one record per slot);
         // the observe-statement count is a model constant — probe once.
@@ -250,7 +290,19 @@ impl Gibbs {
 
         for it in 0..warmup + iters {
             // continuous blocks
-            for (bi, coords, mask) in &cont_blocks {
+            for ((bi, coords, mask), conj) in cont_blocks.iter().zip(&conj_blocks) {
+                if let Some(cert_ids) = conj {
+                    // conjugate block: exact draws from the closed-form
+                    // full conditionals — always "accepted"
+                    let a = analysis.as_ref().expect("certificates imply analysis");
+                    for &ci in cert_ids {
+                        a.draw_conjugate(&a.certs[ci], &tvi, &mut theta, rng);
+                    }
+                    lp = joint_lp(&tvi, &theta);
+                    proposals += 1.0;
+                    accepts += 1.0;
+                    continue;
+                }
                 match self.blocks[*bi].sampler {
                     BlockSampler::RwMh { scale } => {
                         let mut prop = theta.clone();
@@ -632,6 +684,9 @@ mod tests {
                 GibbsBlock::hmc(&["m"], 0.05, 8),
             ],
             grad: GibbsGrad::Fused,
+            // this test pins the fused-gradient path; keep the var block
+            // on plain MH rather than letting the analyzer collapse it
+            collapse: false,
         };
         let out = gibbs.sample(&m, &tvi, 1000, 4000, &mut rng);
         let means: Vec<f64> = out.rows.iter().map(|r| r[1]).collect();

@@ -67,6 +67,15 @@ pub struct Smc {
     /// structure change — re-runs through the per-particle path with the
     /// same seeds, so results never depend on this flag.
     pub use_batched: bool,
+    /// Rao-Blackwellized evidence: when the static analyzer certifies the
+    /// model as single-site Normal–Normal conjugate
+    /// ([`crate::analysis::ModelAnalysis::collapsed_logweights`]), replace
+    /// the particle log-evidence estimate with the *exact* collapsed
+    /// marginal (zero-variance — every observation weight is the
+    /// locally-optimal `log p(y_t | y_{1:t-1})` in closed form). Off by
+    /// default: the particle estimate is the quantity the benchmarks and
+    /// streaming-update paths are calibrated against.
+    pub use_collapsed: bool,
 }
 
 impl Default for Smc {
@@ -78,6 +87,7 @@ impl Default for Smc {
             threads: 1,
             use_typed: true,
             use_batched: true,
+            use_collapsed: false,
         }
     }
 }
@@ -217,7 +227,19 @@ impl Smc {
         } else {
             SmcCloud::Boxed(boxed)
         };
-        self.filter_from(model, state, seed, t0)
+        let mut result = self.filter_from(model, state, seed, t0);
+        if self.use_collapsed {
+            if let SmcCloud::Typed { cloud, .. } = &result.cloud {
+                let template = &cloud.particles[0].state;
+                if let Some(lz) = crate::analysis::analyze(model, template)
+                    .and_then(|a| a.collapsed_logweights(template))
+                    .map(|ws| ws.iter().sum::<f64>())
+                {
+                    result.log_evidence = lz;
+                }
+            }
+        }
+        result
     }
 
     /// Continue a finished (or partially consumed) filter over a model

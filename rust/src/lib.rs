@@ -21,6 +21,7 @@
 //! the sampling path.
 
 pub mod ad;
+pub mod analysis;
 pub mod bench;
 pub mod chain;
 pub mod context;

@@ -88,7 +88,7 @@ pub fn servable(ctx: Context) -> bool {
 /// *families* are stored as `f64` templates (parameter values inside are
 /// recording-time leftovers, dead at replay); live parameters enter
 /// through the [`Src`] slots, resolved against the register file.
-enum Item {
+pub(crate) enum Item {
     AssumeScalar {
         slot: usize,
         out: u32,
@@ -174,17 +174,17 @@ enum EOp {
 
 /// An item plus the index into the executable opcode stream up to which
 /// glue must run before it.
-struct RecItem {
-    glue_end: usize,
-    item: Item,
+pub(crate) struct RecItem {
+    pub(crate) glue_end: usize,
+    pub(crate) item: Item,
 }
 
 /// Raw output of one recording pass, before fusion and plate grouping.
-struct Recording {
-    ops: Vec<ROp>,
-    n_regs: u32,
-    items: Vec<RecItem>,
-    n_obs: usize,
+pub(crate) struct Recording {
+    pub(crate) ops: Vec<ROp>,
+    pub(crate) n_regs: u32,
+    pub(crate) items: Vec<RecItem>,
+    pub(crate) n_obs: usize,
 }
 
 /// A compiled, immutable density program. Built by [`try_compile`]; serves
@@ -520,6 +520,51 @@ fn record_run(model: &dyn Model, tvi: &TypedVarInfo, theta: &[f64]) -> Option<Re
     })
 }
 
+/// Lenient recording entry point for the static analyzer (`crate::analysis`).
+///
+/// Lints want to inspect *any* complete walk — including degenerate ones
+/// (e.g. a defective model whose recorded density is non-finite at the
+/// init point is exactly what `dppl lint` exists to flag). Only a rejected
+/// walk (truncated recording) is refused.
+pub(crate) fn record_for_analysis(model: &dyn Model, tvi: &TypedVarInfo) -> Option<Recording> {
+    debug_assert_eq!(tvi.unconstrained.len(), tvi.dim());
+    record::begin();
+    let mut rec = StructureRecorder {
+        tvi,
+        theta: &tvi.unconstrained,
+        cursor: 0,
+        acc: Accumulator::new(Context::Default),
+        items: Vec::new(),
+    };
+    model.eval_record(&mut rec);
+    let (ops, n_regs) = record::end();
+    if rec.acc.rejected() {
+        return None;
+    }
+    Some(Recording {
+        ops,
+        n_regs,
+        items: rec.items,
+        n_obs: rec.acc.obs_seen(),
+    })
+}
+
+/// Strict double-record entry point for conjugacy certification: records at
+/// θ and a perturbed θ ± 0.125 and returns the base recording only when
+/// both are structurally identical — the same stability gate
+/// [`try_compile`] uses, minus lowering/validation. A conjugacy certificate
+/// must never be issued against a walk that changes shape with θ.
+pub(crate) fn record_verified(model: &dyn Model, tvi: &TypedVarInfo) -> Option<Recording> {
+    let rec0 = record_run(model, tvi, &tvi.unconstrained)?;
+    let perturbed = |d: f64| -> Vec<f64> { tvi.unconstrained.iter().map(|x| x + d).collect() };
+    let rec1 = record_run(model, tvi, &perturbed(0.125))
+        .or_else(|| record_run(model, tvi, &perturbed(-0.125)))?;
+    if !recordings_match(&rec0, &rec1) {
+        return None;
+    }
+    Some(rec0)
+}
+
 // ------------------------------------------------- structural comparison
 
 fn f64_bits_eq(a: f64, b: f64) -> bool {
@@ -689,7 +734,7 @@ fn recordings_match(a: &Recording, b: &Recording) -> bool {
 
 // ----------------------------------------------------------- compilation
 
-fn visit_op_srcs(op: &Op, f: &mut dyn FnMut(&Src)) {
+pub(crate) fn visit_op_srcs(op: &Op, f: &mut dyn FnMut(&Src)) {
     match op {
         Op::Add(a, b) | Op::Sub(a, b) | Op::Mul(a, b) | Op::Div(a, b) | Op::LogAddExp(a, b) => {
             f(a);
@@ -718,7 +763,7 @@ fn visit_op_srcs(op: &Op, f: &mut dyn FnMut(&Src)) {
     }
 }
 
-fn visit_item_srcs(item: &Item, f: &mut dyn FnMut(&Src)) {
+pub(crate) fn visit_item_srcs(item: &Item, f: &mut dyn FnMut(&Src)) {
     match item {
         Item::AssumeScalar { ps, np, .. }
         | Item::AssumeVec { ps, np, .. }

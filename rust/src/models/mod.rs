@@ -10,6 +10,7 @@
 //! Workloads are the paper's Table-1 sizes, generated synthetically with a
 //! fixed seed (see DESIGN.md §7 for the MNIST substitution).
 
+pub mod fixtures;
 pub mod gauss;
 pub mod hier_poisson;
 pub mod hmm;
@@ -51,9 +52,14 @@ pub const ALL_MODELS: [&str; 8] = [
 /// minibatched-VI workload.
 pub const EXTRA_MODELS: [&str; 1] = ["logreg_tall"];
 
-/// Whether `name` is a buildable workload model (Table 1 or extra).
+/// Analyzer fixtures ([`fixtures`]): buildable by name for `dppl lint` /
+/// `dppl bench conjugate`, but excluded from the benchmark grids.
+pub const FIXTURE_MODELS: [&str; 2] = ["lint_fixture", "conjugate_hier"];
+
+/// Whether `name` is a buildable workload model (Table 1, extra, or
+/// analyzer fixture).
 pub fn is_known(name: &str) -> bool {
-    ALL_MODELS.contains(&name) || EXTRA_MODELS.contains(&name)
+    ALL_MODELS.contains(&name) || EXTRA_MODELS.contains(&name) || FIXTURE_MODELS.contains(&name)
 }
 
 /// Build a benchmark model with its synthetic Table-1 workload.
@@ -68,8 +74,10 @@ pub fn build(name: &str, seed: u64) -> BenchModel {
         "sto_volatility" => sto_vol::sto_volatility(seed),
         "hmm_semisup" => hmm::hmm_semisup(seed),
         "lda" => lda::lda(seed),
+        "lint_fixture" => fixtures::lint_fixture(),
+        "conjugate_hier" => fixtures::conjugate_hier(seed),
         other => panic!(
-            "unknown benchmark model {other:?} (known: {ALL_MODELS:?} + {EXTRA_MODELS:?})"
+            "unknown benchmark model {other:?} (known: {ALL_MODELS:?} + {EXTRA_MODELS:?} + {FIXTURE_MODELS:?})"
         ),
     }
 }
@@ -87,6 +95,8 @@ pub fn build_small(name: &str, seed: u64) -> BenchModel {
         "sto_volatility" => sto_vol::sto_volatility_t(seed, 50),
         "hmm_semisup" => hmm::hmm_semisup_t(seed, 30, 10),
         "lda" => lda::lda_n(seed, 300),
+        "lint_fixture" => fixtures::lint_fixture(),
+        "conjugate_hier" => fixtures::conjugate_hier_n(seed, 100),
         other => panic!("unknown benchmark model {other:?}"),
     }
 }

@@ -78,10 +78,18 @@ pub enum Counter {
     ServeEssRefits,
     /// Refits warm-started from a cached posterior (draws or VI params).
     ServeWarmStarts,
+    /// Exact closed-form conditional draws made from conjugacy
+    /// certificates (Rao-Blackwellized Gibbs blocks).
+    ConjugateDraws,
+    /// Lint findings emitted by the static model analyzer.
+    LintWarnings,
+    /// Serving-cache fits avoided by the single-flight guard (waiters
+    /// that shared a concurrent leader's fit instead of racing their own).
+    ServeSingleFlightWaits,
 }
 
 /// Number of counters in the catalog.
-pub const N_COUNTERS: usize = 25;
+pub const N_COUNTERS: usize = 28;
 
 /// Every counter, in [`Counter`] discriminant order.
 pub const ALL_COUNTERS: [Counter; N_COUNTERS] = [
@@ -110,6 +118,9 @@ pub const ALL_COUNTERS: [Counter; N_COUNTERS] = [
     Counter::ServeStreamUpdates,
     Counter::ServeEssRefits,
     Counter::ServeWarmStarts,
+    Counter::ConjugateDraws,
+    Counter::LintWarnings,
+    Counter::ServeSingleFlightWaits,
 ];
 
 impl Counter {
@@ -141,6 +152,9 @@ impl Counter {
             Counter::ServeStreamUpdates => "serve_stream_updates",
             Counter::ServeEssRefits => "serve_ess_refits",
             Counter::ServeWarmStarts => "serve_warm_starts",
+            Counter::ConjugateDraws => "conjugate_draws",
+            Counter::LintWarnings => "lint_warnings",
+            Counter::ServeSingleFlightWaits => "serve_single_flight_waits",
         }
     }
 }

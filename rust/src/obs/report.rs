@@ -54,6 +54,13 @@ pub enum Warning {
     HighRhat { param: String, rhat: f64 },
     /// The ADVI η ladder found no finite candidate.
     EtaSearchFailed { chain: usize },
+    /// A static-analysis lint finding (`dppl lint` pedantic pass) attached
+    /// to the run; `code` is the lint's stable key (e.g. `centered-funnel`).
+    Lint {
+        code: String,
+        site: String,
+        message: String,
+    },
 }
 
 impl Warning {
@@ -66,6 +73,7 @@ impl Warning {
             Warning::LowEss { .. } => "low_ess",
             Warning::HighRhat { .. } => "high_rhat",
             Warning::EtaSearchFailed { .. } => "eta_search_failed",
+            Warning::Lint { .. } => "lint",
         }
     }
 
@@ -97,6 +105,11 @@ impl Warning {
                 "chain {chain}: ADVI η ladder search failed — fit used the \
                  smallest candidate step size and may not have converged"
             ),
+            Warning::Lint {
+                code,
+                site,
+                message,
+            } => format!("[{code}] {site}: {message}"),
         }
     }
 }

@@ -8,9 +8,9 @@
 //! invalidate the stale ones; capacity pressure evicts the least recently
 //! used artifact.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::chain::Chain;
 use crate::inference::smc::SmcResult;
@@ -83,6 +83,10 @@ pub struct ArtifactCache {
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    /// Keys whose fit is currently running somewhere (single-flight).
+    in_flight: Mutex<HashSet<ArtifactKey>>,
+    in_flight_cv: Condvar,
+    single_flight_waits: AtomicU64,
 }
 
 impl ArtifactCache {
@@ -96,7 +100,42 @@ impl ArtifactCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            in_flight: Mutex::new(HashSet::new()),
+            in_flight_cv: Condvar::new(),
+            single_flight_waits: AtomicU64::new(0),
         }
+    }
+
+    /// Single-flight claim on fitting `key`. Returns `true` when this
+    /// caller is the leader — it must call [`end_fit`](Self::end_fit)
+    /// when done (success or failure). Returns `false` after blocking
+    /// until the current leader releases; the caller should then re-check
+    /// [`get`](Self::get) before deciding to fit itself.
+    pub fn begin_fit(&self, key: &ArtifactKey) -> bool {
+        let mut fl = self.in_flight.lock().expect("in-flight set poisoned");
+        if fl.insert(key.clone()) {
+            return true;
+        }
+        self.single_flight_waits.fetch_add(1, Ordering::Relaxed);
+        metrics::inc(Counter::ServeSingleFlightWaits);
+        while fl.contains(key) {
+            fl = self.in_flight_cv.wait(fl).expect("in-flight set poisoned");
+        }
+        false
+    }
+
+    /// Release a [`begin_fit`](Self::begin_fit) claim and wake every
+    /// thread waiting on it.
+    pub fn end_fit(&self, key: &ArtifactKey) {
+        let mut fl = self.in_flight.lock().expect("in-flight set poisoned");
+        fl.remove(key);
+        self.in_flight_cv.notify_all();
+    }
+
+    /// How many fit requests blocked behind an in-flight fit of the same
+    /// key instead of fitting redundantly.
+    pub fn single_flight_waits(&self) -> u64 {
+        self.single_flight_waits.load(Ordering::Relaxed)
     }
 
     /// Look up an artifact, counting the hit/miss and refreshing LRU age.
@@ -264,6 +303,47 @@ mod tests {
         assert_eq!(cache.len(), 1);
         assert_eq!(cache.invalidate_model("a"), 1);
         assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn single_flight_blocks_waiters_until_the_leader_releases() {
+        use std::sync::atomic::AtomicBool;
+        let cache = Arc::new(ArtifactCache::new(4));
+        let key = dummy("a", 1).key;
+        assert!(cache.begin_fit(&key), "first claim elects the leader");
+        // a second claim on another key is independent
+        let other = dummy("b", 1).key;
+        assert!(cache.begin_fit(&other));
+        cache.end_fit(&other);
+
+        let released = Arc::new(AtomicBool::new(false));
+        let entering = Arc::new(AtomicBool::new(false));
+        let (c2, k2, r2, e2) = (
+            Arc::clone(&cache),
+            key.clone(),
+            Arc::clone(&released),
+            Arc::clone(&entering),
+        );
+        let waiter = std::thread::spawn(move || {
+            e2.store(true, Ordering::SeqCst);
+            let leader = c2.begin_fit(&k2);
+            // by the time the wait returns, the leader has released
+            (leader, r2.load(Ordering::SeqCst), c2.get(&k2).is_some())
+        });
+        while !entering.load(Ordering::SeqCst) {
+            std::thread::yield_now();
+        }
+        // give the waiter time to block on the in-flight claim
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        cache.insert(dummy("a", 1));
+        released.store(true, Ordering::SeqCst);
+        cache.end_fit(&key);
+
+        let (leader, saw_release, found) = waiter.join().unwrap();
+        assert!(!leader, "the waiter must not become a second leader");
+        assert!(saw_release, "the waiter woke before the leader released");
+        assert!(found, "the leader's artifact is visible after the wait");
+        assert_eq!(cache.single_flight_waits(), 1);
     }
 
     #[test]

@@ -254,6 +254,12 @@ pub struct ServeConfig {
     pub rejuvenation_moves: usize,
     /// Warm-start NUTS/ADVI refits from the cached posterior.
     pub warm_start: bool,
+    /// Per-connection read timeout in milliseconds (0 = none): a stalled
+    /// client gets a structured JSON error and its worker back.
+    pub request_timeout_ms: u64,
+    /// Maximum request-line length in bytes: longer lines are rejected
+    /// with a structured JSON error instead of buffering unboundedly.
+    pub max_line_bytes: usize,
 }
 
 impl Default for ServeConfig {
@@ -264,6 +270,8 @@ impl Default for ServeConfig {
             refit_ess_frac: 0.1,
             rejuvenation_moves: 1,
             warm_start: true,
+            request_timeout_ms: 30_000,
+            max_line_bytes: 1 << 20,
         }
     }
 }
@@ -271,6 +279,18 @@ impl Default for ServeConfig {
 struct StreamState {
     y: Vec<f64>,
     version: u64,
+}
+
+/// RAII release of a single-flight fit claim ([`ArtifactCache::begin_fit`]).
+struct FitClaim<'a> {
+    cache: &'a ArtifactCache,
+    key: &'a ArtifactKey,
+}
+
+impl Drop for FitClaim<'_> {
+    fn drop(&mut self) {
+        self.cache.end_fit(self.key);
+    }
 }
 
 /// Aggregate serving statistics (the `stats` protocol op and the bench
@@ -286,6 +306,9 @@ pub struct ServeStats {
     pub stream_updates: u64,
     pub ess_refits: u64,
     pub warm_starts: u64,
+    /// Fit requests that blocked on another thread's in-flight fit of the
+    /// same key instead of fitting redundantly.
+    pub single_flight_waits: u64,
 }
 
 /// One streaming-update report as the handle returns it (protocol and
@@ -366,10 +389,28 @@ impl ServeHandle {
         if let Some(art) = self.cache.get(&key) {
             return Ok((art, true));
         }
-        // concurrent misses on the same key may fit twice; both fits are
-        // deterministic in the spec seed, so last-insert-wins is benign
-        let art = self.fit_artifact(key, &y, spec)?;
-        Ok((self.cache.insert(art), false))
+        // single-flight: concurrent misses on one key elect a leader to
+        // run the fit while everyone else blocks on the claim and then
+        // serves the leader's artifact from cache — one fit per key, not
+        // one per caller
+        loop {
+            if self.cache.begin_fit(&key) {
+                // claim released on every exit path, panics included —
+                // a stuck claim would block all future fits of this key
+                let _claim = FitClaim {
+                    cache: &self.cache,
+                    key: &key,
+                };
+                let art = self.fit_artifact(key.clone(), &y, spec)?;
+                return Ok((self.cache.insert(art), false));
+            }
+            // the leader finished: its insert (if it succeeded) is
+            // visible now; a failed or evicted fit falls through and
+            // re-elects
+            if let Some(art) = self.cache.get(&key) {
+                return Ok((art, true));
+            }
+        }
     }
 
     /// Answer one query against the stream's cached posterior (fitting
@@ -546,6 +587,7 @@ impl ServeHandle {
             stream_updates: self.stream_updates.load(Ordering::Relaxed),
             ess_refits: self.ess_refits.load(Ordering::Relaxed),
             warm_starts: self.warm_starts.load(Ordering::Relaxed),
+            single_flight_waits: self.cache.single_flight_waits(),
         }
     }
 

@@ -191,25 +191,110 @@ fn parse_query(req: &Json) -> Result<ServeQuery, String> {
     }
 }
 
+/// Outcome of one bounded line read.
+enum LineRead {
+    /// A complete line landed in the buffer (without its `\n`).
+    Line,
+    /// Clean end of stream with nothing buffered.
+    Eof,
+    /// The line exceeded the configured byte cap.
+    TooLong,
+    /// The socket read timed out before a newline arrived.
+    TimedOut,
+    /// Any other I/O failure.
+    Err,
+}
+
+/// Read one `\n`-terminated line into `buf`, refusing to accumulate more
+/// than `max` bytes — the unbounded-`read_line` DoS hole this replaces.
+/// A trailing line without a newline at EOF still counts as a line.
+fn read_bounded_line<R: BufRead>(r: &mut R, buf: &mut Vec<u8>, max: usize) -> LineRead {
+    loop {
+        let chunk = match r.fill_buf() {
+            Ok(c) => c,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                return LineRead::TimedOut
+            }
+            Err(_) => return LineRead::Err,
+        };
+        if chunk.is_empty() {
+            return if buf.is_empty() {
+                LineRead::Eof
+            } else {
+                LineRead::Line
+            };
+        }
+        match chunk.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                if buf.len() + pos > max {
+                    r.consume(pos + 1);
+                    return LineRead::TooLong;
+                }
+                buf.extend_from_slice(&chunk[..pos]);
+                r.consume(pos + 1);
+                return LineRead::Line;
+            }
+            None => {
+                let n = chunk.len();
+                if buf.len() + n > max {
+                    r.consume(n);
+                    return LineRead::TooLong;
+                }
+                buf.extend_from_slice(chunk);
+                r.consume(n);
+            }
+        }
+    }
+}
+
 /// One connection: read request lines until EOF or a shutdown op,
-/// answering each on its own line.
+/// answering each on its own line. Reads are bounded in both time
+/// (`ServeConfig::request_timeout_ms`) and size
+/// (`ServeConfig::max_line_bytes`); a violation gets a structured JSON
+/// error line and the connection is closed — a hostile or stalled client
+/// cannot pin a worker or its memory.
 fn handle_conn(stream: TcpStream, handle: &ServeHandle, stop: &AtomicBool, addr: SocketAddr) {
+    let timeout_ms = handle.cfg.request_timeout_ms;
+    if timeout_ms > 0 {
+        let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(timeout_ms)));
+    }
+    let max_line = handle.cfg.max_line_bytes.max(1);
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
-            Err(_) => break,
-        };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let (resp, shutdown) = match Json::parse(&line) {
-            Ok(req) => dispatch(handle, &req),
-            Err(e) => (err_line(&format!("bad request: {e}")), false),
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        buf.clear();
+        // (resp, shutdown-after-reply, close-after-reply)
+        let (resp, shutdown, close) = match read_bounded_line(&mut reader, &mut buf, max_line) {
+            LineRead::Eof | LineRead::Err => break,
+            LineRead::TimedOut => (
+                err_line(&format!("request timed out after {timeout_ms}ms")),
+                false,
+                true,
+            ),
+            LineRead::TooLong => (
+                err_line(&format!("request line exceeds {max_line} bytes")),
+                false,
+                true,
+            ),
+            LineRead::Line => {
+                let line = String::from_utf8_lossy(&buf);
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                let (resp, shutdown) = match Json::parse(line) {
+                    Ok(req) => dispatch(handle, &req),
+                    Err(e) => (err_line(&format!("bad request: {e}")), false),
+                };
+                (resp, shutdown, false)
+            }
         };
         if writer
             .write_all(resp.as_bytes())
@@ -223,6 +308,9 @@ fn handle_conn(stream: TcpStream, handle: &ServeHandle, stop: &AtomicBool, addr:
             stop.store(true, Ordering::SeqCst);
             // the accept loop is blocked in accept(); poke it loose
             let _ = TcpStream::connect(addr);
+            break;
+        }
+        if close {
             break;
         }
     }

@@ -26,6 +26,7 @@ impl Json {
         let mut p = Parser {
             bytes: s.as_bytes(),
             pos: 0,
+            depth: 0,
         };
         p.skip_ws();
         let v = p.value()?;
@@ -102,12 +103,32 @@ pub fn escape(s: &str) -> String {
     out
 }
 
+/// Deepest object/array nesting the parser follows. A recursive-descent
+/// parser turns attacker-controlled nesting into call-stack depth; this
+/// bound converts a `[[[[…` bomb into a parse error instead of a stack
+/// overflow. Far above any protocol request (which nests 2–3 levels).
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
+    /// Track one object/array descent against [`MAX_DEPTH`]. The matching
+    /// decrement happens on the container's successful exit; error paths
+    /// abort the whole parse, so their counts never matter.
+    fn enter(&mut self) -> Result<(), String> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(format!(
+                "nesting deeper than {MAX_DEPTH} levels at byte {}",
+                self.pos
+            ));
+        }
+        Ok(())
+    }
     fn skip_ws(&mut self) {
         while let Some(&b) = self.bytes.get(self.pos) {
             if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
@@ -159,10 +180,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, String> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut fields = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(fields));
         }
         loop {
@@ -178,6 +201,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b'}') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(fields));
                 }
                 _ => return Err(format!("expected ',' or '}}' at byte {}", self.pos)),
@@ -187,10 +211,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json, String> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(items));
         }
         loop {
@@ -201,6 +227,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b']') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(items));
                 }
                 _ => return Err(format!("expected ',' or ']' at byte {}", self.pos)),
@@ -329,6 +356,71 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("{} extra").is_err());
         assert!(Json::parse("nope").is_err());
+    }
+
+    #[test]
+    fn deep_nesting_is_rejected_not_overflowed() {
+        // A `[[[[…` bomb must come back as a parse error, not blow the
+        // call stack — 200 levels is well past MAX_DEPTH.
+        let bomb = format!("{}{}", "[".repeat(200), "]".repeat(200));
+        let err = Json::parse(&bomb).unwrap_err();
+        assert!(err.contains("nesting"), "unexpected error: {err}");
+
+        // Mixed object/array nesting hits the same bound.
+        let obj_bomb = format!("{}1{}", "{\"k\":[".repeat(100), "]}".repeat(100));
+        let err = Json::parse(&obj_bomb).unwrap_err();
+        assert!(err.contains("nesting"), "unexpected error: {err}");
+
+        // Anything at or under the bound still parses; the depth counter
+        // must also unwind, so many *sibling* containers stay fine.
+        let deep_ok = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&deep_ok).is_ok());
+        let siblings = format!("[{}]", vec!["[[[1]]]"; 64].join(","));
+        assert!(Json::parse(&siblings).is_ok());
+    }
+
+    #[test]
+    fn escape_roundtrips_control_and_unicode() {
+        let cases = [
+            "\u{0001}\u{0002}\u{001f} bells \u{0007}",
+            "tab\there\nnewline\rcarriage",
+            "mixed \"quotes\" and \\ backslashes \u{0008}\u{000c}",
+            "unicode: π ≈ 3.14159, 日本語, emoji \u{1F600}",
+            "",
+        ];
+        for raw in cases {
+            let doc = format!("{{\"k\": \"{}\"}}", escape(raw));
+            let v = Json::parse(&doc)
+                .unwrap_or_else(|e| panic!("failed on {raw:?}: {e}"));
+            assert_eq!(v.get("k").and_then(Json::as_str), Some(raw), "case {raw:?}");
+        }
+    }
+
+    #[test]
+    fn unicode_escapes_parse() {
+        let v = Json::parse(r#""Aé中""#).unwrap();
+        assert_eq!(v.as_str(), Some("Aé中"));
+    }
+
+    #[test]
+    fn malformed_inputs_are_rejected() {
+        let bad = [
+            r#""\u00"#,        // truncated \u escape at end of input
+            r#""\u00zz""#,     // non-hex digits in \u escape
+            r#""\ud800""#,     // lone surrogate (rejected, not combined)
+            r#""\x41""#,       // invalid escape letter
+            r#""never ends"#,  // unterminated string
+            "1e",              // dangling exponent
+            "--1",             // double sign
+            "tru",             // truncated literal
+            "[1 2]",           // missing comma
+            r#"{"a" 1}"#,      // missing colon
+            "",                // empty input
+            "[",               // unclosed array
+        ];
+        for doc in bad {
+            assert!(Json::parse(doc).is_err(), "accepted malformed {doc:?}");
+        }
     }
 
     #[test]

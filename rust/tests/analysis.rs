@@ -1,0 +1,550 @@
+//! Acceptance tests for the static-analysis subsystem: conjugacy
+//! certificates on all five supported families (and their refusal on
+//! non-affine glue), Rao-Blackwellized Gibbs against the closed-form
+//! Normal–InverseGamma posterior with bitwise determinism, collapsed SMC
+//! evidence against the sequential conjugate oracle, and the pedantic
+//! lint pass over both the seeded-defect fixture and the full model zoo.
+
+use dynamicppl::analysis::{analyze, lint_model, ConjugateFamily};
+use dynamicppl::bench::{run_conjugate_bench, ConjugateBenchConfig};
+use dynamicppl::inference::{Gibbs, GibbsBlock, Smc};
+use dynamicppl::models::{build_small, ALL_MODELS, EXTRA_MODELS};
+use dynamicppl::runtime::DataInput;
+use dynamicppl::prelude::*;
+
+// ------------------------------------------------------------- models
+//
+// One tiny model per conjugate family (positive cases), plus one per
+// unsupported-glue shape (negative cases). Data is baked in by the test.
+
+model! {
+    /// Identity Normal–Normal: `m ~ N(0,1); y_i ~ N(m, 1)`.
+    pub NormalNormal {
+        y: Vec<f64>,
+    }
+    fn body<T>(this, api) {
+        let m = tilde!(api, m ~ Normal(c(0.0), c(1.0)));
+        for &yi in &this.y {
+            obs!(api, yi => Normal(m, c(1.0)));
+        }
+    }
+}
+
+model! {
+    /// Normal–Normal through affine glue: `y_i ~ N(2m + 0.5, 1.5)`.
+    pub NnAffine {
+        y: Vec<f64>,
+    }
+    fn body<T>(this, api) {
+        let m = tilde!(api, m ~ Normal(c(0.0), c(1.0)));
+        for &yi in &this.y {
+            obs!(api, yi => Normal(m * 2.0 + 0.5, c(1.5)));
+        }
+    }
+}
+
+model! {
+    /// Normal–InverseGamma: `v ~ IG(2,3); y_i ~ N(0, sqrt(3v))`.
+    pub NigScale {
+        y: Vec<f64>,
+    }
+    fn body<T>(this, api) {
+        let v = tilde!(api, v ~ InverseGamma(c(2.0), c(3.0)));
+        check_reject!(api);
+        for &yi in &this.y {
+            obs!(api, yi => Normal(c(0.0), (v * 3.0).sqrt()));
+        }
+    }
+}
+
+model! {
+    /// Gamma–Poisson with a pure scale: `r ~ Gamma(2,1); k_i ~ Poisson(3r)`.
+    pub GammaPois {
+        k: Vec<i64>,
+    }
+    fn body<T>(this, api) {
+        let r = tilde!(api, r ~ Gamma(c(2.0), c(1.0)));
+        check_reject!(api);
+        for &ki in &this.k {
+            obs_int!(api, ki => Poisson(r * 3.0));
+        }
+    }
+}
+
+model! {
+    /// Beta–Bernoulli through identity glue: `p ~ Beta(1,1); z_i ~ Bern(p)`.
+    pub BetaBern {
+        z: Vec<i64>,
+    }
+    fn body<T>(this, api) {
+        let p = tilde!(api, p ~ Beta(c(1.0), c(1.0)));
+        check_reject!(api);
+        for &zi in &this.z {
+            obs_int!(api, zi => Bernoulli(p));
+        }
+    }
+}
+
+model! {
+    /// Dirichlet–Categorical: `w ~ Dir(1,1,1); z_i ~ Cat(w)` written as
+    /// explicit `ln w[z_i]` observation terms.
+    pub DirCat {
+        z: Vec<i64>,
+    }
+    fn body<T>(this, api) {
+        let w = tilde_vec!(api, w ~ Dirichlet(vec![1.0; 3]));
+        for &zi in &this.z {
+            api.add_obs_logp(w[zi as usize].ln());
+        }
+    }
+}
+
+model! {
+    /// Quadratic mean glue — NOT affine, must never certify.
+    pub NnSquared {
+        y: Vec<f64>,
+    }
+    fn body<T>(this, api) {
+        let m = tilde!(api, m ~ Normal(c(0.0), c(1.0)));
+        for &yi in &this.y {
+            obs!(api, yi => Normal(m * m, c(1.0)));
+        }
+    }
+}
+
+model! {
+    /// Exponential mean glue — NOT affine, must never certify.
+    pub NnExp {
+        y: Vec<f64>,
+    }
+    fn body<T>(this, api) {
+        let m = tilde!(api, m ~ Normal(c(0.0), c(1.0)));
+        for &yi in &this.y {
+            obs!(api, yi => Normal(m.exp(), c(1.0)));
+        }
+    }
+}
+
+model! {
+    /// IG variance fed *linearly* into the sd slot (not `sqrt(a·v)`) —
+    /// wrong shape for Normal–InverseGamma, must never certify.
+    pub IgLinearSd {
+        y: Vec<f64>,
+    }
+    fn body<T>(this, api) {
+        let v = tilde!(api, v ~ InverseGamma(c(2.0), c(3.0)));
+        check_reject!(api);
+        for &yi in &this.y {
+            obs!(api, yi => Normal(c(0.0), v));
+        }
+    }
+}
+
+model! {
+    /// Shifted Poisson rate `r + 1` — affine but not a pure scale, must
+    /// never certify as Gamma–Poisson.
+    pub PoisShifted {
+        k: Vec<i64>,
+    }
+    fn body<T>(this, api) {
+        let r = tilde!(api, r ~ Gamma(c(2.0), c(1.0)));
+        check_reject!(api);
+        for &ki in &this.k {
+            obs_int!(api, ki => Poisson(r + 1.0));
+        }
+    }
+}
+
+model! {
+    /// Scaled Bernoulli probability `p/2` — not identity glue, must never
+    /// certify as Beta–Bernoulli.
+    pub BernScaled {
+        z: Vec<i64>,
+    }
+    fn body<T>(this, api) {
+        let p = tilde!(api, p ~ Beta(c(1.0), c(1.0)));
+        check_reject!(api);
+        for &zi in &this.z {
+            obs_int!(api, zi => Bernoulli(p * 0.5));
+        }
+    }
+}
+
+model! {
+    /// Dirichlet component used outside `ln w[k]` — must never certify.
+    pub DirMul {
+        z: Vec<i64>,
+    }
+    fn body<T>(this, api) {
+        let w = tilde_vec!(api, w ~ Dirichlet(vec![1.0; 3]));
+        for &zi in &this.z {
+            api.add_obs_logp(w[zi as usize] * 0.5);
+        }
+    }
+}
+
+model! {
+    /// A discrete latent anywhere in the model suppresses ALL certificates
+    /// (a Gibbs flip of `g` could change the walk invisibly to the
+    /// continuous perturbation gate), even though `m` alone would certify.
+    pub DiscreteGated {
+        y: Vec<f64>,
+    }
+    fn body<T>(this, api) {
+        let m = tilde!(api, m ~ Normal(c(0.0), c(1.0)));
+        let _g = tilde_int!(api, g ~ Bernoulli(c(0.5)));
+        for &yi in &this.y {
+            obs!(api, yi => Normal(m, c(1.0)));
+        }
+    }
+}
+
+// ------------------------------------------------------------ helpers
+
+fn tvi_for(model: &dyn Model, seed: u64) -> TypedVarInfo {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    init_typed(model, &mut rng)
+}
+
+/// Sequential conjugate log-evidence of the identity Normal–Normal model
+/// (same oracle the SMC suite uses): `m ~ N(0,1); y_t ~ N(m,1)`.
+fn conjugate_log_evidence(y: &[f64]) -> f64 {
+    let (mut mu, mut tau2) = (0.0f64, 1.0f64);
+    let mut lz = 0.0;
+    for &yt in y {
+        let pv = 1.0 + tau2;
+        lz += Normal::new(mu, pv.sqrt()).logpdf(yt);
+        let k = tau2 / pv;
+        mu += k * (yt - mu);
+        tau2 *= 1.0 - k;
+    }
+    lz
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+fn variance(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+// ---------------------------------------------------- conjugacy: positive
+
+#[test]
+fn conjugacy_fires_on_all_five_families() {
+    let y = vec![0.3, -1.2, 0.8, 2.1, -0.4, 1.5, 0.0, 0.9];
+    let k: Vec<i64> = vec![2, 5, 1, 0, 3, 4, 2, 6];
+    let z01: Vec<i64> = vec![1, 0, 1, 1, 0, 1, 0, 1];
+    let zcat: Vec<i64> = vec![0, 2, 1, 1, 0, 2, 2, 1, 0];
+
+    let cases: Vec<(Box<dyn Model>, &str, ConjugateFamily, usize)> = vec![
+        (
+            Box::new(NormalNormal { y: y.clone() }),
+            "m",
+            ConjugateFamily::NormalNormal,
+            y.len(),
+        ),
+        (
+            Box::new(NnAffine { y: y.clone() }),
+            "m",
+            ConjugateFamily::NormalNormal,
+            y.len(),
+        ),
+        (
+            Box::new(NigScale { y: y.clone() }),
+            "v",
+            ConjugateFamily::NormalInverseGamma,
+            y.len(),
+        ),
+        (
+            Box::new(GammaPois { k: k.clone() }),
+            "r",
+            ConjugateFamily::GammaPoisson,
+            k.len(),
+        ),
+        (
+            Box::new(BetaBern { z: z01.clone() }),
+            "p",
+            ConjugateFamily::BetaBernoulli,
+            z01.len(),
+        ),
+        (
+            Box::new(DirCat { z: zcat.clone() }),
+            "w",
+            ConjugateFamily::DirichletCategorical,
+            zcat.len(),
+        ),
+    ];
+    for (model, name, family, n_children) in cases {
+        let tvi = tvi_for(model.as_ref(), 17);
+        let a = analyze(model.as_ref(), &tvi)
+            .unwrap_or_else(|| panic!("{name}: analysis refused a static model"));
+        assert_eq!(a.certs.len(), 1, "{name}: expected exactly one certificate");
+        let cert = &a.certs[0];
+        assert_eq!(cert.name, name, "certificate names the parent site");
+        assert_eq!(cert.family, family, "{name}: wrong family");
+        assert_eq!(
+            cert.n_children, n_children,
+            "{name}: every observation row must be a recognized child"
+        );
+    }
+}
+
+// ---------------------------------------------------- conjugacy: negative
+
+#[test]
+fn conjugacy_never_fires_on_unsupported_glue() {
+    let y = vec![0.3, -1.2, 0.8, 2.1];
+    let k: Vec<i64> = vec![2, 5, 1, 0];
+    let z01: Vec<i64> = vec![1, 0, 1, 1];
+    let zcat: Vec<i64> = vec![0, 2, 1, 1];
+
+    let cases: Vec<(Box<dyn Model>, &str)> = vec![
+        (Box::new(NnSquared { y: y.clone() }), "quadratic mean"),
+        (Box::new(NnExp { y: y.clone() }), "exp mean"),
+        (Box::new(IgLinearSd { y: y.clone() }), "linear sd"),
+        (Box::new(PoisShifted { k: k.clone() }), "shifted rate"),
+        (Box::new(BernScaled { z: z01.clone() }), "scaled probability"),
+        (Box::new(DirMul { z: zcat.clone() }), "non-log simplex use"),
+    ];
+    for (model, what) in cases {
+        let tvi = tvi_for(model.as_ref(), 23);
+        let a = analyze(model.as_ref(), &tvi)
+            .unwrap_or_else(|| panic!("{what}: analysis refused a static model"));
+        assert!(
+            a.certs.is_empty(),
+            "{what}: a certificate was issued against unsupported glue"
+        );
+    }
+}
+
+#[test]
+fn a_discrete_site_suppresses_all_certificates() {
+    let model = DiscreteGated {
+        y: vec![0.3, -1.2, 0.8, 2.1],
+    };
+    let tvi = tvi_for(&model, 29);
+    let a = analyze(&model, &tvi).expect("static model must analyze");
+    assert_eq!(a.graph.sites.len(), 2);
+    assert!(
+        a.certs.is_empty(),
+        "no certificates may survive a discrete latent"
+    );
+}
+
+// ------------------------------------------- collapsed Gibbs vs closed form
+
+#[test]
+fn collapsed_gibbs_matches_the_normal_inverse_gamma_posterior() {
+    // conjugate_hier (small): v ~ IG(2,3); m|v ~ N(0, 2v); y_i ~ N(m, v),
+    // i.e. a Normal–Inverse-Gamma prior with κ0 = 1/2, α0 = 2, β0 = 3.
+    let bm = build_small("conjugate_hier", 7);
+    let y = match &bm.data[0] {
+        DataInput::F64 { data, .. } => data.clone(),
+        _ => unreachable!(),
+    };
+    let n = y.len() as f64;
+    let ybar = mean(&y);
+    let ss: f64 = y.iter().map(|v| (v - ybar) * (v - ybar)).sum();
+    let (k0, a0, b0) = (0.5f64, 2.0f64, 3.0f64);
+    let kn = k0 + n;
+    let mun = n * ybar / kn;
+    let an = a0 + n / 2.0;
+    let bn = b0 + 0.5 * ss + 0.5 * n * k0 * ybar * ybar / kn;
+    let m_mean = mun;
+    let m_var = bn / (kn * (an - 1.0));
+    let v_mean = bn / (an - 1.0);
+    let v_var = bn * bn / ((an - 1.0) * (an - 1.0) * (an - 2.0));
+
+    let tvi = tvi_for(bm.model.as_ref(), 11);
+    let a = analyze(bm.model.as_ref(), &tvi).expect("conjugate_hier must analyze");
+    assert_eq!(a.certs.len(), 2, "both latents must certify");
+
+    // Both blocks are nominally RwMh; collapse (the Gibbs::new default)
+    // upgrades each to exact closed-form full-conditional draws.
+    let gibbs = Gibbs::new(vec![
+        GibbsBlock::rwmh(&["v"], 0.2),
+        GibbsBlock::rwmh(&["m"], 0.2),
+    ]);
+    assert!(gibbs.collapse);
+    let mut rng = Xoshiro256pp::seed_from_u64(12);
+    let draws = gibbs.sample(bm.model.as_ref(), &tvi, 500, 40_000, &mut rng);
+    assert_eq!(draws.rows.len(), 40_000);
+
+    // row order = slot order = [v, m]
+    let vs: Vec<f64> = draws.rows.iter().map(|r| r[0]).collect();
+    let ms: Vec<f64> = draws.rows.iter().map(|r| r[1]).collect();
+    let rel = |got: f64, want: f64| ((got - want) / want).abs();
+    assert!(
+        rel(mean(&ms), m_mean) < 0.02,
+        "E[m]: got {} want {m_mean}",
+        mean(&ms)
+    );
+    assert!(
+        rel(variance(&ms), m_var) < 0.02,
+        "Var[m]: got {} want {m_var}",
+        variance(&ms)
+    );
+    assert!(
+        rel(mean(&vs), v_mean) < 0.02,
+        "E[v]: got {} want {v_mean}",
+        mean(&vs)
+    );
+    assert!(
+        rel(variance(&vs), v_var) < 0.02,
+        "Var[v]: got {} want {v_var}",
+        variance(&vs)
+    );
+}
+
+#[test]
+fn collapsed_gibbs_is_bitwise_deterministic_for_a_fixed_seed() {
+    let bm = build_small("conjugate_hier", 3);
+    let tvi = tvi_for(bm.model.as_ref(), 31);
+    let gibbs = Gibbs::new(vec![
+        GibbsBlock::rwmh(&["v"], 0.2),
+        GibbsBlock::rwmh(&["m"], 0.2),
+    ]);
+    let run = || {
+        let mut rng = Xoshiro256pp::seed_from_u64(37);
+        gibbs.sample(bm.model.as_ref(), &tvi, 50, 400, &mut rng)
+    };
+    let (d1, d2) = (run(), run());
+    assert_eq!(d1.rows.len(), d2.rows.len());
+    for (r1, r2) in d1.rows.iter().zip(&d2.rows) {
+        for (x1, x2) in r1.iter().zip(r2) {
+            assert_eq!(x1.to_bits(), x2.to_bits(), "draws must be bitwise equal");
+        }
+    }
+    for (l1, l2) in d1.logps.iter().zip(&d2.logps) {
+        assert_eq!(l1.to_bits(), l2.to_bits(), "logps must be bitwise equal");
+    }
+}
+
+// --------------------------------------------- collapsed SMC log-evidence
+
+#[test]
+fn collapsed_smc_recovers_the_exact_log_evidence() {
+    let mut rng = Xoshiro256pp::seed_from_u64(5);
+    let y: Vec<f64> = (0..40).map(|_| 0.5 + rng.normal()).collect();
+    let want = conjugate_log_evidence(&y);
+    let model = NormalNormal { y };
+    let smc = Smc {
+        n_particles: 256,
+        use_collapsed: true,
+        ..Smc::default()
+    };
+    let res = smc.run(&model, 99);
+    assert!(
+        (res.log_evidence - want).abs() < 1e-6,
+        "collapsed log-evidence {} vs exact {want}",
+        res.log_evidence
+    );
+    // The default (particle) estimate is noisy where the collapsed one is
+    // exact — same run without the flag should still be in the vicinity.
+    let res_mc = Smc {
+        n_particles: 256,
+        use_collapsed: false,
+        ..Smc::default()
+    }
+    .run(&model, 99);
+    assert!((res_mc.log_evidence - want).abs() < 2.0);
+}
+
+// --------------------------------------------------------------- linting
+
+#[test]
+fn lint_flags_every_seeded_defect_on_the_fixture() {
+    let bm = build_small("lint_fixture", 42);
+    let tvi = tvi_for(bm.model.as_ref(), 41);
+    let report = lint_model(bm.model.as_ref(), &tvi).expect("fixture must lint");
+
+    assert!(report.has_errors(), "the domain mismatch is an error");
+    for code in [
+        "domain-mismatch",
+        "dead-parameter",
+        "centered-funnel",
+        "constant-data-plate",
+    ] {
+        assert!(report.has_code(code), "missing expected finding `{code}`");
+    }
+    let site_of = |code: &str| -> Vec<&str> {
+        report
+            .findings
+            .iter()
+            .filter(|f| f.code == code)
+            .map(|f| f.site.as_str())
+            .collect()
+    };
+    assert_eq!(site_of("dead-parameter"), ["unused"]);
+    assert_eq!(site_of("domain-mismatch"), ["tau"]);
+    assert_eq!(site_of("centered-funnel"), ["x"]);
+    assert_eq!(report.n_errors(), 1);
+
+    // machine-readable output survives our own parser
+    let parsed = dynamicppl::util::json::Json::parse(&report.to_json()).expect("valid JSON");
+    assert!(parsed.get("findings").is_some());
+}
+
+#[test]
+fn zoo_models_lint_clean_of_errors_and_false_positives() {
+    // Expected centered-funnel sites: the three genuinely centered
+    // hierarchies in the zoo. Everything else must produce no funnel, no
+    // dead parameters, and no errors at all. (constant-data-plate is not
+    // asserted on: small synthetic count data can legitimately produce an
+    // all-identical plate for some seeds.)
+    let funnel_expect = |name: &str| -> Vec<&str> {
+        match name {
+            "gauss_unknown" => vec!["m"],
+            "hier_poisson" => vec!["b"],
+            "sto_volatility" => vec!["h"],
+            _ => vec![],
+        }
+    };
+    for name in ALL_MODELS.iter().chain(EXTRA_MODELS.iter()) {
+        let bm = build_small(name, 42);
+        let tvi = tvi_for(bm.model.as_ref(), 43);
+        let report = lint_model(bm.model.as_ref(), &tvi)
+            .unwrap_or_else(|| panic!("{name}: lint refused (rejected walk)"));
+        assert_eq!(report.n_errors(), 0, "{name}: {}", report.render());
+        assert!(
+            !report.has_code("dead-parameter"),
+            "{name}: false-positive dead parameter\n{}",
+            report.render()
+        );
+        let funnels: Vec<&str> = report
+            .findings
+            .iter()
+            .filter(|f| f.code == "centered-funnel")
+            .map(|f| f.site.as_str())
+            .collect();
+        assert_eq!(
+            funnels,
+            funnel_expect(name),
+            "{name}: centered-funnel mismatch\n{}",
+            report.render()
+        );
+    }
+}
+
+// ------------------------------------------------------ bench smoke test
+
+#[test]
+fn conjugate_bench_runs_and_reports_certificates() {
+    let cfg = ConjugateBenchConfig {
+        models: vec!["conjugate_hier".to_string()],
+        seed: 3,
+        small: true,
+        warmup: 100,
+        iters: 400,
+    };
+    let rows = run_conjugate_bench(&cfg);
+    assert_eq!(rows.len(), 1);
+    let r = &rows[0];
+    assert_eq!(r.model, "conjugate_hier");
+    assert_eq!(r.n_certs, 2);
+    assert!(r.ess_mh.is_finite() && r.ess_collapsed.is_finite());
+    assert!(r.secs_mh > 0.0 && r.secs_collapsed > 0.0);
+}

@@ -412,6 +412,138 @@ fn tcp_server_round_trips_the_protocol() {
     assert!(handle.stats().stream_updates + handle.stats().ess_refits >= 1);
 }
 
+#[test]
+fn concurrent_misses_fit_once_and_share_the_artifact() {
+    // four threads race a cold fit of one key: single-flight elects one
+    // leader, everyone else blocks on the claim (or hits the cache) and
+    // serves the leader's Arc — one fit, one artifact, zero redundancy
+    let handle = Arc::new(ServeHandle::new(ServeConfig::default()));
+    handle
+        .init_stream("normal_normal", normal_stream(16, 71))
+        .unwrap();
+    let spec = FitSpec::smc(2048, 73);
+    let n_threads = 4;
+    let barrier = Barrier::new(n_threads);
+
+    let results: Vec<_> = std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for _ in 0..n_threads {
+            let (handle, spec, barrier) = (Arc::clone(&handle), spec.clone(), &barrier);
+            joins.push(s.spawn(move || {
+                barrier.wait(); // line up the cold misses
+                handle.fit("normal_normal", &spec).unwrap()
+            }));
+        }
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+
+    let (first, _) = &results[0];
+    for (art, _) in &results[1..] {
+        assert!(
+            Arc::ptr_eq(art, first),
+            "every thread must serve the same fitted artifact"
+        );
+    }
+    let stats = handle.stats();
+    assert_eq!(stats.artifacts, 1, "one key, one artifact");
+    assert!(stats.cache_misses >= 1);
+    // every non-leader either blocked on the in-flight fit or arrived
+    // late enough to hit the cache — nobody fitted a second time
+    assert!(
+        stats.single_flight_waits + stats.cache_hits >= (n_threads as u64) - 1,
+        "waits {} + hits {} should cover the {} non-leaders",
+        stats.single_flight_waits,
+        stats.cache_hits,
+        n_threads - 1
+    );
+}
+
+#[test]
+fn oversized_request_lines_get_a_json_error_and_a_closed_connection() {
+    let handle = Arc::new(ServeHandle::new(ServeConfig {
+        max_line_bytes: 256,
+        ..ServeConfig::default()
+    }));
+    let server = Server::bind("127.0.0.1:0", Arc::clone(&handle), 1).unwrap();
+    let addr = server.local_addr().unwrap();
+    let daemon = std::thread::spawn(move || server.run());
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let long = format!("{{\"op\": \"stats\", \"junk\": \"{}\"}}\n", "a".repeat(4096));
+    writer.write_all(long.as_bytes()).unwrap();
+    writer.flush().unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let resp = Json::parse(resp.trim()).unwrap();
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+    assert!(
+        resp.get("error")
+            .and_then(Json::as_str)
+            .is_some_and(|e| e.contains("exceeds")),
+        "error should name the byte cap: {resp:?}"
+    );
+    // the connection is closed after the violation, not resynchronized
+    let mut rest = String::new();
+    assert_eq!(reader.read_line(&mut rest).unwrap(), 0, "expected EOF");
+
+    // an in-budget request on a fresh connection still works, then stop
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writer.write_all(b"{\"op\": \"stats\"}\n").unwrap();
+    writer.flush().unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    assert_eq!(
+        Json::parse(resp.trim()).unwrap().get("ok").and_then(Json::as_bool),
+        Some(true)
+    );
+    writer.write_all(b"{\"op\": \"shutdown\"}\n").unwrap();
+    writer.flush().unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    daemon.join().unwrap().unwrap();
+}
+
+#[test]
+fn stalled_connections_time_out_with_a_json_error() {
+    let handle = Arc::new(ServeHandle::new(ServeConfig {
+        request_timeout_ms: 150,
+        ..ServeConfig::default()
+    }));
+    let server = Server::bind("127.0.0.1:0", Arc::clone(&handle), 1).unwrap();
+    let addr = server.local_addr().unwrap();
+    let daemon = std::thread::spawn(move || server.run());
+
+    // connect and send nothing: the worker must come back on its own
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let resp = Json::parse(resp.trim()).unwrap();
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+    assert!(
+        resp.get("error")
+            .and_then(Json::as_str)
+            .is_some_and(|e| e.contains("timed out")),
+        "error should name the timeout: {resp:?}"
+    );
+    let mut rest = String::new();
+    assert_eq!(reader.read_line(&mut rest).unwrap(), 0, "expected EOF");
+    drop(stream);
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writer.write_all(b"{\"op\": \"shutdown\"}\n").unwrap();
+    writer.flush().unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    daemon.join().unwrap().unwrap();
+}
+
 // ------------------------------------------- shared-cell compile safety
 
 #[test]
